@@ -1,0 +1,225 @@
+"""AOT compiler: lower every model block to HLO text + emit the manifest.
+
+This is the *entire* Python footprint at deployment time: it runs once
+(``make artifacts``), and the Rust coordinator then loads the HLO text
+through PJRT (`HloModuleProto::from_text_file`) with Python never on the
+training path.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Per model the output tree is::
+
+    <out>/<model>/manifest.json
+    <out>/<model>/block{i}_fwd.hlo.txt     (p..., x) -> (y,)
+    <out>/<model>/block{i}_bwd.hlo.txt     (p..., x, gy) -> (gp..., [gx])
+    <out>/<model>/head_step.hlo.txt        (p..., x, labels) -> (gp..., gx, loss, ncorrect)
+    <out>/<model>/head_eval.hlo.txt        (p..., x, labels) -> (loss, ncorrect)
+    <out>/<model>/init/b{i}_p{k}.bin       f32 little-endian initial weights
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import MODELS, ModelDef, param_count
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), _DTYPES[dtype])
+
+
+def _param_specs(params):
+    return [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+
+
+def _lower_block_fwd(blk, params):
+    n = len(params)
+
+    def f(*args):
+        return blk.fwd(list(args[:n]), args[n])
+
+    specs = _param_specs(params) + [_spec(blk.in_shape, blk.in_dtype)]
+    return to_hlo_text(jax.jit(f, keep_unused=True).lower(*specs))
+
+
+def _lower_block_bwd(blk, params):
+    n = len(params)
+
+    def f(*args):
+        p, x, gy = list(args[:n]), args[n], args[n + 1]
+        _, vjp = jax.vjp(lambda pp, xx: blk.fwd(pp, xx), p, x)
+        gp, gx = vjp(gy)
+        if blk.has_gx:
+            return tuple(gp) + (gx,)
+        return tuple(gp)
+
+    specs = _param_specs(params) + [
+        _spec(blk.in_shape, blk.in_dtype),
+        jax.ShapeDtypeStruct(tuple(blk.out_shape), jnp.float32),
+    ]
+    return to_hlo_text(jax.jit(f, keep_unused=True).lower(*specs))
+
+
+def _lower_head_step(head, params):
+    n = len(params)
+
+    def f(*args):
+        p, x, labels = list(args[:n]), args[n], args[n + 1]
+        (loss, nc), grads = jax.value_and_grad(
+            lambda pp, xx: head.loss(pp, xx, labels), argnums=(0, 1), has_aux=True
+        )(p, x)
+        gp, gx = grads
+        return tuple(gp) + (gx, loss, nc)
+
+    specs = _param_specs(params) + [
+        _spec(head.in_shape, "f32"),
+        _spec(head.label_shape, head.label_dtype),
+    ]
+    return to_hlo_text(jax.jit(f, keep_unused=True).lower(*specs))
+
+
+def _lower_head_eval(head, params):
+    n = len(params)
+
+    def f(*args):
+        p, x, labels = list(args[:n]), args[n], args[n + 1]
+        loss, nc = head.loss(p, x, labels)
+        return loss, nc
+
+    specs = _param_specs(params) + [
+        _spec(head.in_shape, "f32"),
+        _spec(head.label_shape, head.label_dtype),
+    ]
+    return to_hlo_text(jax.jit(f, keep_unused=True).lower(*specs))
+
+
+def _write(path, text):
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def _param_entry(i, k, p, init_dir_rel):
+    return {
+        "shape": list(p.shape),
+        "size": int(p.size),
+        "init": f"{init_dir_rel}/b{i}_p{k}.bin",
+    }
+
+
+def compile_model(model: ModelDef, out_root: str, seed: int = 0,
+                  verbose: bool = True) -> dict:
+    """Lower all artifacts for ``model`` under ``out_root/<model.name>``."""
+    mdir = os.path.join(out_root, model.name)
+    idir = os.path.join(mdir, "init")
+    os.makedirs(idir, exist_ok=True)
+
+    all_params = model.init_all(seed)
+    blocks_json = []
+    nb = len(model.blocks)
+
+    for i, (blk, params) in enumerate(zip(model.blocks, all_params[:nb])):
+        if verbose:
+            print(f"[aot] {model.name}: lowering block {i} ({blk.name})", flush=True)
+        _write(os.path.join(mdir, f"block{i}_fwd.hlo.txt"),
+               _lower_block_fwd(blk, params))
+        _write(os.path.join(mdir, f"block{i}_bwd.hlo.txt"),
+               _lower_block_bwd(blk, params))
+        for k, p in enumerate(params):
+            with open(os.path.join(idir, f"b{i}_p{k}.bin"), "wb") as f:
+                f.write(jax.device_get(p).astype("<f4").tobytes())
+        out_elems = 1
+        for d in blk.out_shape:
+            out_elems *= d
+        blocks_json.append({
+            "index": i,
+            "name": blk.name,
+            "kind": "block",
+            "fwd": f"block{i}_fwd.hlo.txt",
+            "bwd": f"block{i}_bwd.hlo.txt",
+            "params": [_param_entry(i, k, p, "init") for k, p in enumerate(params)],
+            "in_shape": list(blk.in_shape),
+            "in_dtype": blk.in_dtype,
+            "out_shape": list(blk.out_shape),
+            "flops_fwd": int(blk.flops_fwd),
+            # backward is ~2x forward (two GEMMs per forward GEMM)
+            "flops_bwd": int(2 * blk.flops_fwd),
+            "out_bytes": out_elems * 4,
+            "param_bytes": int(sum(p.size for p in params)) * 4,
+            "has_gx": bool(blk.has_gx),
+        })
+
+    head, hparams = model.head, all_params[nb]
+    i = nb
+    if verbose:
+        print(f"[aot] {model.name}: lowering head ({head.name})", flush=True)
+    _write(os.path.join(mdir, "head_step.hlo.txt"), _lower_head_step(head, hparams))
+    _write(os.path.join(mdir, "head_eval.hlo.txt"), _lower_head_eval(head, hparams))
+    for k, p in enumerate(hparams):
+        with open(os.path.join(idir, f"b{i}_p{k}.bin"), "wb") as f:
+            f.write(jax.device_get(p).astype("<f4").tobytes())
+    blocks_json.append({
+        "index": i,
+        "name": head.name,
+        "kind": "head",
+        "step": "head_step.hlo.txt",
+        "eval": "head_eval.hlo.txt",
+        "params": [_param_entry(i, k, p, "init") for k, p in enumerate(hparams)],
+        "in_shape": list(head.in_shape),
+        "in_dtype": "f32",
+        "out_shape": [],
+        "flops_fwd": int(head.flops_fwd),
+        "flops_bwd": int(2 * head.flops_fwd),
+        "out_bytes": 8,  # loss + ncorrect scalars
+        "param_bytes": int(sum(p.size for p in hparams)) * 4,
+        "has_gx": True,
+    })
+
+    manifest = {
+        "model": model.name,
+        "batch_size": model.batch_size,
+        "input": {"shape": list(model.input_shape), "dtype": model.input_dtype},
+        "labels": {"shape": list(model.label_shape), "dtype": model.label_dtype},
+        "acc_denom": model.head.acc_denom,
+        "param_count": param_count(model),
+        "meta": model.meta,
+        "blocks": blocks_json,
+    }
+    with open(os.path.join(mdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"[aot] {model.name}: {len(blocks_json)} blocks, "
+              f"{manifest['param_count']:,} params -> {mdir}", flush=True)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--models", nargs="+", default=["edgenet"],
+                    choices=sorted(MODELS), help="model configs to compile")
+    ap.add_argument("--out", default="../artifacts", help="output root")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    for name in args.models:
+        compile_model(MODELS[name](), args.out, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels (and their pure-jnp oracle in :mod:`ref`)."""
+
+from .matmul import (  # noqa: F401
+    linear,
+    linear_gelu,
+    linear_relu6,
+    linear_residual,
+    matmul,
+    matmul_nn,
+    matmul_nt,
+    matmul_tn,
+)

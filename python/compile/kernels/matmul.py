@@ -1,0 +1,321 @@
+"""Layer-1 Pallas kernels: tiled matmuls with fused epilogues.
+
+The compute hot-spot of FTPipeHD's workload (MobileNetV2-style inverted
+residual blocks, adapted to MXU-friendly matmuls — see DESIGN.md
+`Hardware adaptation`) is expressed as three raw tiled-matmul kernels:
+
+  * ``matmul_nn`` —  A @ B        (forward GEMM)
+  * ``matmul_nt`` —  A @ B.T      (dX = dPre @ W.T, no materialized transpose)
+  * ``matmul_tn`` —  A.T @ B      (dW = X.T @ dPre, no materialized transpose)
+
+plus fused ``linear_*`` epilogues (bias add, residual add, ReLU6 / GELU)
+applied in VMEM on the final K step, so the activation never round-trips
+through HBM. Accumulation is always f32 regardless of the input dtype.
+
+Each public op carries a ``jax.custom_vjp`` whose backward pass is built
+from the same Pallas kernels, so both the forward *and* backward HLO that
+`aot.py` ships to the Rust runtime run through Layer 1.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin used
+by the Rust runtime cannot execute Mosaic custom-calls, and interpret
+mode traces the kernel into plain HLO (grid -> fori_loop) with identical
+numerics. Block shapes are still chosen as if for a TPU (128-lane
+alignment when the problem allows it); see DESIGN.md §7 for the VMEM /
+MXU estimates.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile targets. 128 matches the MXU systolic-array edge; the
+# helpers below shrink tiles to the largest divisor when a dimension is
+# smaller or not a multiple (interpret mode has no hardware constraint,
+# but keeping the divisibility invariant keeps the BlockSpecs exact).
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _divisor_tile(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``target`` (>= 1)."""
+    t = min(dim, target)
+    while dim % t:
+        t -= 1
+    return t
+
+
+def _tiles(m, n, k, bm, bn, bk):
+    bm = _divisor_tile(m, bm)
+    bn = _divisor_tile(n, bn)
+    bk = _divisor_tile(k, bk)
+    return bm, bn, bk, m // bm, n // bn, k // bk
+
+
+def _apply_act(pre, act):
+    if act is None:
+        return pre
+    if act == "relu6":
+        return jnp.clip(pre, 0.0, 6.0)
+    if act == "gelu":
+        # tanh-approximate GELU: the exact erf form lowers to an `erf`
+        # opcode the pinned XLA 0.5.1 HLO parser does not know; the tanh
+        # approximation (GPT-2 convention) uses only portable opcodes.
+        c = jnp.sqrt(2.0 / jnp.pi).astype(pre.dtype)
+        inner = c * (pre + 0.044715 * pre * pre * pre)
+        return 0.5 * pre * (1.0 + jnp.tanh(inner))
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def _act_grad(pre, act):
+    """d act(pre) / d pre, elementwise, in f32."""
+    if act is None:
+        return jnp.ones_like(pre)
+    if act == "relu6":
+        return ((pre > 0.0) & (pre < 6.0)).astype(pre.dtype)
+    if act == "gelu":
+        # derivative of the tanh-approximate GELU
+        c = jnp.sqrt(2.0 / jnp.pi).astype(pre.dtype)
+        inner = c * (pre + 0.044715 * pre * pre * pre)
+        t = jnp.tanh(inner)
+        dinner = c * (1.0 + 3.0 * 0.044715 * pre * pre)
+        return 0.5 * (1.0 + t) + 0.5 * pre * (1.0 - t * t) * dinner
+    raise ValueError(f"unknown activation {act!r}")
+
+
+# ---------------------------------------------------------------------------
+# Raw tiled matmul kernels (no autodiff) — the MXU schedule.
+# ---------------------------------------------------------------------------
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, *, nk, mode):
+    """Grid = (nm, nn, nk); o block is revisited across the K dimension."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    if mode == "nn":
+        prod = jnp.dot(a, b, preferred_element_type=o_ref.dtype)
+    elif mode == "nt":
+        prod = jnp.dot(a, b.T, preferred_element_type=o_ref.dtype)
+    elif mode == "tn":
+        prod = jnp.dot(a.T, b, preferred_element_type=o_ref.dtype)
+    else:  # pragma: no cover - internal
+        raise ValueError(mode)
+    o_ref[...] += prod
+
+
+def matmul_nn(a, b, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """``a @ b`` with a (M,K), b (K,N); f32 accumulate, result f32."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk, nm, nn, nk = _tiles(m, n, k, bm, bn, bk)
+    return pl.pallas_call(
+        partial(_mm_kernel, nk=nk, mode="nn"),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def matmul_nt(a, b, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """``a @ b.T`` with a (M,K), b (N,K) — no materialized transpose."""
+    m, k = a.shape
+    n, k2 = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk, nm, nn, nk = _tiles(m, n, k, bm, bn, bk)
+    return pl.pallas_call(
+        partial(_mm_kernel, nk=nk, mode="nt"),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def matmul_tn(a, b, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """``a.T @ b`` with a (S,M), b (S,N) — no materialized transpose."""
+    s, m = a.shape
+    s2, n = b.shape
+    assert s == s2, (a.shape, b.shape)
+    bm, bn, bk, nm, nn, nk = _tiles(m, n, s, bm, bn, bk)
+    return pl.pallas_call(
+        partial(_mm_kernel, nk=nk, mode="tn"),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, i)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Fused linear kernel: pre = x @ w (+ b) (+ r); y = act(pre).
+# Bias/residual/activation are applied in VMEM on the last K step.
+# ---------------------------------------------------------------------------
+
+
+def _linear_kernel(*refs, nk, act, has_bias, has_res):
+    it = iter(refs)
+    x_ref = next(it)
+    w_ref = next(it)
+    b_ref = next(it) if has_bias else None
+    r_ref = next(it) if has_res else None
+    pre_ref = next(it)
+    y_ref = next(it)
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        pre_ref[...] = jnp.zeros_like(pre_ref)
+
+    pre_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=pre_ref.dtype)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        p = pre_ref[...]
+        if has_bias:
+            p = p + b_ref[...][None, :].astype(p.dtype)
+        if has_res:
+            p = p + r_ref[...].astype(p.dtype)
+        pre_ref[...] = p
+        y_ref[...] = _apply_act(p, act).astype(y_ref.dtype)
+
+
+def _linear_raw(x, w, b=None, r=None, *, act=None, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """Returns (pre, y); pre is the f32 pre-activation (saved for the VJP)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bn, bk, nm, nn, nk = _tiles(m, n, k, bm, bn, bk)
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    args = [x, w]
+    if b is not None:
+        in_specs.append(pl.BlockSpec((bn,), lambda i, j, kk: (j,)))
+        args.append(b)
+    if r is not None:
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+        args.append(r)
+    out_specs = [
+        pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((m, n), jnp.float32),
+        jax.ShapeDtypeStruct((m, n), x.dtype),
+    ]
+    pre, y = pl.pallas_call(
+        partial(_linear_kernel, nk=nk, act=act, has_bias=b is not None, has_res=r is not None),
+        grid=(nm, nn, nk),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=True,
+    )(*args)
+    return pre, y
+
+
+# ---------------------------------------------------------------------------
+# Public differentiable ops. Backward passes are built from the raw
+# kernels (nt/tn) so the whole fwd+bwd HLO flows through Layer 1.
+# ---------------------------------------------------------------------------
+
+
+def _linear_bwd_core(x, w, pre, gy, act, has_res):
+    gy32 = gy.astype(jnp.float32)
+    dpre = gy32 * _act_grad(pre, act)
+    dx = matmul_nt(dpre, w.astype(jnp.float32)).astype(x.dtype)
+    dw = matmul_tn(x.astype(jnp.float32), dpre).astype(w.dtype)
+    db = jnp.sum(dpre, axis=0)
+    dr = gy32.astype(x.dtype) if has_res else None
+    return dx, dw, db, dr
+
+
+@jax.custom_vjp
+def matmul(x, w):
+    """Differentiable tiled matmul: x (M,K) @ w (K,N) -> f32 (M,N)."""
+    return matmul_nn(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul_nn(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    g32 = g.astype(jnp.float32)
+    dx = matmul_nt(g32, w.astype(jnp.float32)).astype(x.dtype)
+    dw = matmul_tn(x.astype(jnp.float32), g32).astype(w.dtype)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def _make_linear(act, has_res, name):
+    if has_res:
+
+        @jax.custom_vjp
+        def op(x, w, b, r):
+            _, y = _linear_raw(x, w, b, r, act=act)
+            return y
+
+        def fwd(x, w, b, r):
+            pre, y = _linear_raw(x, w, b, r, act=act)
+            return y, (x, w, pre)
+
+        def bwd(res, gy):
+            x, w, pre = res
+            dx, dw, db, dr = _linear_bwd_core(x, w, pre, gy, act, True)
+            return dx, dw, db.astype(jnp.float32), dr
+
+    else:
+
+        @jax.custom_vjp
+        def op(x, w, b):
+            _, y = _linear_raw(x, w, b, act=act)
+            return y
+
+        def fwd(x, w, b):
+            pre, y = _linear_raw(x, w, b, act=act)
+            return y, (x, w, pre)
+
+        def bwd(res, gy):
+            x, w, pre = res
+            dx, dw, db, _ = _linear_bwd_core(x, w, pre, gy, act, False)
+            return dx, dw, db.astype(jnp.float32)
+
+    op.defvjp(fwd, bwd)
+    op.__name__ = name
+    op.__qualname__ = name
+    return op
+
+
+#: y = x @ w + b
+linear = _make_linear(None, False, "linear")
+#: y = relu6(x @ w + b)              (inverted-residual expansion)
+linear_relu6 = _make_linear("relu6", False, "linear_relu6")
+#: y = gelu(x @ w + b)               (transformer MLP)
+linear_gelu = _make_linear("gelu", False, "linear_gelu")
+#: y = x @ w + b + r                 (inverted-residual projection)
+linear_residual = _make_linear(None, True, "linear_residual")

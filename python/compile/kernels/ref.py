@@ -1,0 +1,66 @@
+"""Pure-jnp correctness oracles for the Layer-1 Pallas kernels.
+
+Every public op in :mod:`compile.kernels.matmul` has an oracle here with
+the same signature and dtype contract (f32 accumulation, output dtype
+matching the kernel). ``python/tests/test_kernel.py`` sweeps shapes and
+dtypes with hypothesis and asserts allclose between the two.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_nn(a, b):
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def matmul_nt(a, b):
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32).T,
+                   preferred_element_type=jnp.float32)
+
+
+def matmul_tn(a, b):
+    return jnp.dot(a.astype(jnp.float32).T, b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def _act(pre, act):
+    if act is None:
+        return pre
+    if act == "relu6":
+        return jnp.clip(pre, 0.0, 6.0)
+    if act == "gelu":
+        c = jnp.sqrt(2.0 / jnp.pi).astype(pre.dtype)
+        inner = c * (pre + 0.044715 * pre * pre * pre)
+        return 0.5 * pre * (1.0 + jnp.tanh(inner))
+    raise ValueError(act)
+
+
+def _linear(x, w, b=None, r=None, act=None):
+    pre = matmul_nn(x, w)
+    if b is not None:
+        pre = pre + b.astype(jnp.float32)[None, :]
+    if r is not None:
+        pre = pre + r.astype(jnp.float32)
+    return _act(pre, act).astype(x.dtype)
+
+
+def matmul(x, w):
+    return matmul_nn(x, w)
+
+
+def linear(x, w, b):
+    return _linear(x, w, b)
+
+
+def linear_relu6(x, w, b):
+    return _linear(x, w, b, act="relu6")
+
+
+def linear_gelu(x, w, b):
+    return _linear(x, w, b, act="gelu")
+
+
+def linear_residual(x, w, b, r):
+    return _linear(x, w, b, r=r)

@@ -1,0 +1,382 @@
+"""Layer-2: the DNN model families, written in JAX, calling Layer-1 kernels.
+
+A model is a chain of partitionable **blocks** (the "layers" the paper's
+dynamic-programming partitioner operates over) plus a **head** that fuses
+forward + loss + backward for the last pipeline stage (under 1F1B the last
+stage always runs backward immediately with the same weights, so a fused
+artifact is both correct and faster — PipeDream invariant).
+
+Two families (see DESIGN.md §2 and §4):
+
+* ``edgenet`` — the MobileNetV2 adaptation: a stem projection, N
+  inverted-residual MLP blocks (expand ``t``×, ReLU6, project, residual),
+  and a classifier head. This is the paper's §IV workload re-expressed as
+  MXU-friendly matmuls.
+* ``pipeformer`` — a decoder-only transformer (pre-LN, causal MHA, GELU
+  MLP) for the end-to-end training demo.
+
+Everything here runs at *build* time only: ``aot.py`` lowers each block's
+forward/backward to HLO text, which the Rust runtime loads via PJRT.
+"""
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import linear, linear_gelu, linear_relu6, linear_residual
+
+
+# ---------------------------------------------------------------------------
+# Definitions
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class BlockDef:
+    """One partitionable unit of the model chain."""
+
+    name: str
+    init: Callable  # key -> [params...]
+    fwd: Callable  # (params, x) -> y
+    in_shape: tuple
+    out_shape: tuple
+    in_dtype: str = "f32"  # activation dtype entering this block
+    flops_fwd: int = 0
+    has_gx: bool = True  # False for the first block (int input / no upstream)
+
+
+@dataclass
+class HeadDef:
+    """The final block: forward + loss (+ fused backward at AOT time)."""
+
+    name: str
+    init: Callable
+    loss: Callable  # (params, x, labels) -> (loss_scalar, ncorrect_scalar)
+    in_shape: tuple
+    label_shape: tuple
+    label_dtype: str
+    flops_fwd: int
+    acc_denom: int  # predictions per batch (batch or batch*seq)
+
+
+@dataclass
+class ModelDef:
+    name: str
+    batch_size: int
+    blocks: List[BlockDef]
+    head: HeadDef
+    input_shape: tuple
+    input_dtype: str
+    label_shape: tuple
+    label_dtype: str
+    meta: dict = field(default_factory=dict)
+
+    def init_all(self, seed: int = 0):
+        """[[params per block], ..., head params] with a fixed seed."""
+        keys = jax.random.split(jax.random.PRNGKey(seed), len(self.blocks) + 1)
+        out = [b.init(k) for b, k in zip(self.blocks, keys[:-1])]
+        out.append(self.head.init(keys[-1]))
+        return out
+
+    def forward_all(self, all_params, x):
+        """Reference whole-model forward (used by tests)."""
+        for blk, p in zip(self.blocks, all_params[: len(self.blocks)]):
+            x = blk.fwd(p, x)
+        return x
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+
+def _he(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def cross_entropy(logits, labels):
+    """Mean CE over leading axes; logits (..., C), labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    loss = jnp.mean(logz - ll)
+    ncorrect = jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return loss, ncorrect
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+# ---------------------------------------------------------------------------
+# edgenet — MobileNetV2 adapted to matmul blocks (DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+
+def _stem_block(batch, in_dim, d):
+    """Projection stem. LayerNorm replaces MobileNetV2's BatchNorm (BN is
+    impractical when the pipeline sees one micro-batch at a time; LN is the
+    standard substitution — see DESIGN.md §Hardware-Adaptation)."""
+
+    def init(key):
+        kw, = jax.random.split(key, 1)
+        return [
+            _he(kw, (in_dim, d), in_dim),
+            jnp.zeros((d,), jnp.float32),
+            jnp.ones((d,), jnp.float32),   # ln gamma
+            jnp.zeros((d,), jnp.float32),  # ln beta
+        ]
+
+    def fwd(params, x):
+        w, b, g, bb = params
+        return layer_norm(linear_relu6(x, w, b), g, bb)
+
+    return BlockDef(
+        name="stem",
+        init=init,
+        fwd=fwd,
+        in_shape=(batch, in_dim),
+        out_shape=(batch, d),
+        flops_fwd=2 * batch * in_dim * d,
+        has_gx=False,
+    )
+
+
+def _ir_block(batch, d, expand, idx):
+    """Inverted residual: expand (ReLU6) -> project (+residual) -> LN.
+    The LN substitutes MobileNetV2's per-conv BatchNorm (DESIGN.md §2)."""
+    h = d * expand
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return [
+            _he(k1, (d, h), d),
+            jnp.zeros((h,), jnp.float32),
+            _he(k2, (h, d), h) * 0.5,
+            jnp.zeros((d,), jnp.float32),
+            jnp.ones((d,), jnp.float32),   # ln gamma
+            jnp.zeros((d,), jnp.float32),  # ln beta
+        ]
+
+    def fwd(params, x):
+        w1, b1, w2, b2, g, bb = params
+        hidden = linear_relu6(x, w1, b1)
+        return layer_norm(linear_residual(hidden, w2, b2, x), g, bb)
+
+    return BlockDef(
+        name=f"ir{idx}",
+        init=init,
+        fwd=fwd,
+        in_shape=(batch, d),
+        out_shape=(batch, d),
+        flops_fwd=2 * batch * d * h * 2,
+    )
+
+
+def _cls_head(batch, d, n_classes):
+    def init(key):
+        return [_he(key, (d, n_classes), d), jnp.zeros((n_classes,), jnp.float32)]
+
+    def loss(params, x, labels):
+        w, b = params
+        logits = linear(x, w, b)
+        return cross_entropy(logits, labels)
+
+    return HeadDef(
+        name="cls_head",
+        init=init,
+        loss=loss,
+        in_shape=(batch, d),
+        label_shape=(batch,),
+        label_dtype="i32",
+        flops_fwd=2 * batch * d * n_classes,
+        acc_denom=batch,
+    )
+
+
+def edgenet(batch=32, in_dim=3072, d=128, n_blocks=10, expand=4, n_classes=10,
+            name="edgenet"):
+    blocks = [_stem_block(batch, in_dim, d)]
+    blocks += [_ir_block(batch, d, expand, i) for i in range(n_blocks)]
+    return ModelDef(
+        name=name,
+        batch_size=batch,
+        blocks=blocks,
+        head=_cls_head(batch, d, n_classes),
+        input_shape=(batch, in_dim),
+        input_dtype="f32",
+        label_shape=(batch,),
+        label_dtype="i32",
+        meta={"family": "edgenet", "d": d, "expand": expand,
+              "n_classes": n_classes, "in_dim": in_dim},
+    )
+
+
+# ---------------------------------------------------------------------------
+# pipeformer — decoder-only transformer for the e2e demo
+# ---------------------------------------------------------------------------
+
+
+def _embed_block(batch, seq, vocab, d):
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return [
+            jax.random.normal(k1, (vocab, d), jnp.float32) * 0.02,
+            jax.random.normal(k2, (seq, d), jnp.float32) * 0.02,
+        ]
+
+    def fwd(params, tokens):
+        tok_emb, pos_emb = params
+        return tok_emb[tokens] + pos_emb[None, :, :]
+
+    return BlockDef(
+        name="embed",
+        init=init,
+        fwd=fwd,
+        in_shape=(batch, seq),
+        in_dtype="i32",
+        out_shape=(batch, seq, d),
+        flops_fwd=batch * seq * d,  # gather + add, negligible
+        has_gx=False,
+    )
+
+
+def _tf_block(batch, seq, d, heads, idx):
+    hd = d // heads
+    assert hd * heads == d
+    mlp_h = 4 * d
+
+    def init(key):
+        ks = jax.random.split(key, 4)
+        return [
+            jnp.ones((d,), jnp.float32),  # ln1 gamma
+            jnp.zeros((d,), jnp.float32),  # ln1 beta
+            _he(ks[0], (d, 3 * d), d) * 0.5,  # qkv
+            jnp.zeros((3 * d,), jnp.float32),
+            _he(ks[1], (d, d), d) * 0.5,  # out proj
+            jnp.zeros((d,), jnp.float32),
+            jnp.ones((d,), jnp.float32),  # ln2 gamma
+            jnp.zeros((d,), jnp.float32),  # ln2 beta
+            _he(ks[2], (d, mlp_h), d),  # mlp in
+            jnp.zeros((mlp_h,), jnp.float32),
+            _he(ks[3], (mlp_h, d), mlp_h),  # mlp out
+            jnp.zeros((d,), jnp.float32),
+        ]
+
+    def fwd(params, x):
+        (g1, b1, wqkv, bqkv, wo, bo, g2, b2, w1, bb1, w2, bb2) = params
+        B, S, D = x.shape
+        # --- causal MHA (pre-LN) ---
+        h = layer_norm(x, g1, b1)
+        qkv = linear(h.reshape(B * S, D), wqkv, bqkv).reshape(B, S, 3, heads, hd)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        # (B, heads, S, hd)
+        q = q.transpose(0, 2, 1, 3)
+        k = k.transpose(0, 2, 1, 3)
+        v = v.transpose(0, 2, 1, 3)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+        mask = jnp.tril(jnp.ones((S, S), jnp.bool_))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        attn = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", attn, v)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(B * S, D)
+        x = x + linear(ctx, wo, bo).reshape(B, S, D).astype(x.dtype)
+        # --- MLP (pre-LN) ---
+        h = layer_norm(x, g2, b2).reshape(B * S, D)
+        h = linear_gelu(h, w1, bb1)
+        x = x + linear(h, w2, bb2).reshape(B, S, D).astype(x.dtype)
+        return x
+
+    fl = 2 * batch * seq * d * 3 * d  # qkv
+    fl += 2 * batch * heads * seq * seq * hd * 2  # scores + ctx
+    fl += 2 * batch * seq * d * d  # out proj
+    fl += 2 * batch * seq * d * mlp_h * 2  # mlp
+    return BlockDef(
+        name=f"tf{idx}",
+        init=init,
+        fwd=fwd,
+        in_shape=(batch, seq, d),
+        out_shape=(batch, seq, d),
+        flops_fwd=fl,
+    )
+
+
+def _lm_head(batch, seq, d, vocab):
+    def init(key):
+        return [
+            jnp.ones((d,), jnp.float32),
+            jnp.zeros((d,), jnp.float32),
+            _he(key, (d, vocab), d) * 0.5,
+            jnp.zeros((vocab,), jnp.float32),
+        ]
+
+    def loss(params, x, labels):
+        g, b, w, bb = params
+        B, S, D = x.shape
+        h = layer_norm(x, g, b).reshape(B * S, D)
+        logits = linear(h, w, bb).reshape(B, S, vocab)
+        return cross_entropy(logits, labels)
+
+    return HeadDef(
+        name="lm_head",
+        init=init,
+        loss=loss,
+        in_shape=(batch, seq, d),
+        label_shape=(batch, seq),
+        label_dtype="i32",
+        flops_fwd=2 * batch * seq * d * vocab,
+        acc_denom=batch * seq,
+    )
+
+
+def pipeformer(batch=8, seq=64, vocab=512, d=128, n_layers=4, heads=4,
+               name="pipeformer"):
+    blocks = [_embed_block(batch, seq, vocab, d)]
+    blocks += [_tf_block(batch, seq, d, heads, i) for i in range(n_layers)]
+    return ModelDef(
+        name=name,
+        batch_size=batch,
+        blocks=blocks,
+        head=_lm_head(batch, seq, d, vocab),
+        input_shape=(batch, seq),
+        input_dtype="i32",
+        label_shape=(batch, seq),
+        label_dtype="i32",
+        meta={"family": "pipeformer", "d": d, "n_layers": n_layers,
+              "heads": heads, "vocab": vocab, "seq": seq},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Registry — the configs aot.py knows how to build.
+# ---------------------------------------------------------------------------
+
+MODELS = {
+    # Paper §IV-C/D workload (MobileNetV2-on-CIFAR10 analogue), batch 32.
+    "edgenet": lambda: edgenet(batch=32, name="edgenet"),
+    # Paper §IV-F continuous-learning config on Raspberry Pis, batch 8.
+    "edgenet-pi": lambda: edgenet(batch=8, name="edgenet-pi"),
+    # Fast config for tests.
+    "edgenet-tiny": lambda: edgenet(batch=8, in_dim=192, d=32, n_blocks=4,
+                                    name="edgenet-tiny"),
+    # Transformer demo configs (DESIGN.md §4).
+    "pipeformer-small": lambda: pipeformer(batch=8, seq=64, vocab=512, d=128,
+                                           n_layers=4, name="pipeformer-small"),
+    "pipeformer-e2e": lambda: pipeformer(batch=8, seq=128, vocab=4096, d=512,
+                                         n_layers=8, heads=8,
+                                         name="pipeformer-e2e"),
+    "pipeformer-100m": lambda: pipeformer(batch=4, seq=128, vocab=8192, d=768,
+                                          n_layers=12, heads=12,
+                                          name="pipeformer-100m"),
+}
+
+
+def param_count(model: ModelDef) -> int:
+    tot = 0
+    for ps in model.init_all(0):
+        tot += sum(int(p.size) for p in ps)
+    return tot

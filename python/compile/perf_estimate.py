@@ -1,0 +1,89 @@
+"""L1 performance model: VMEM footprint + MXU utilization estimates.
+
+Interpret-mode Pallas gives CPU-numpy timings that say nothing about TPU
+performance, so (per DESIGN.md §7) the optimization target for Layer 1 is
+*structural*: tiles sized for VMEM, lane/sublane alignment for the MXU
+systolic array, and enough arithmetic intensity to beat the HBM roofline.
+
+This script prints, for every matmul call site of a model family, the
+chosen tile sizes and:
+
+  * VMEM bytes = (bm*bk + bk*bn) * 4   (operand tiles)
+               + 2 * bm*bn * 4         (pre + y accumulator tiles)
+    — must stay well under ~16 MiB/core.
+  * MXU utilization estimate = how full the 128x128 systolic array is for
+    the tile shape: min(bm,128)/128 * min(bn,128)/128 (the K dimension
+    streams, so it does not gate utilization).
+  * Arithmetic intensity (flops/byte) of one grid step — above ~100
+    flops/byte the kernel is MXU-bound on all TPU generations.
+
+Usage: python -m compile.perf_estimate [--models edgenet pipeformer-e2e]
+"""
+
+import argparse
+
+from .kernels.matmul import DEFAULT_BK, DEFAULT_BM, DEFAULT_BN, _tiles
+from .model import MODELS
+
+
+def matmul_sites(model):
+    """Yield (name, M, K, N) for every forward matmul call site."""
+    meta = model.meta
+    b = model.batch_size
+    if meta.get("family") == "edgenet":
+        d, ex, ind = meta["d"], meta["expand"], meta["in_dim"]
+        yield ("stem", b, ind, d)
+        yield ("ir.expand", b, d, d * ex)
+        yield ("ir.project", b, d * ex, d)
+        yield ("head", b, d, meta["n_classes"])
+    else:
+        d, s, v = meta["d"], meta["seq"], meta["vocab"]
+        t = b * s
+        yield ("qkv", t, d, 3 * d)
+        yield ("attn_out", t, d, d)
+        yield ("mlp.in", t, d, 4 * d)
+        yield ("mlp.out", t, 4 * d, d)
+        yield ("lm_head", t, d, v)
+
+
+def analyze(name, m, k, n):
+    bm, bn, bk, nm, nn, nk = _tiles(m, n, k, DEFAULT_BM, DEFAULT_BN, DEFAULT_BK)
+    vmem = (bm * bk + bk * bn + 2 * bm * bn) * 4
+    mxu = min(bm, 128) / 128 * min(bn, 128) / 128
+    flops = 2 * bm * bn * bk
+    bytes_moved = (bm * bk + bk * bn) * 4  # per grid step (acc stays in VMEM)
+    ai = flops / bytes_moved
+    return {
+        "site": name,
+        "mkn": f"{m}x{k}x{n}",
+        "tile": f"{bm}x{bk}x{bn}",
+        "grid": f"{nm}x{nn}x{nk}",
+        "vmem_kib": vmem / 1024,
+        "mxu_util": mxu,
+        "flops_per_byte": ai,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", nargs="+",
+                    default=["edgenet", "pipeformer-small", "pipeformer-e2e"])
+    args = ap.parse_args()
+    for mname in args.models:
+        model = MODELS[mname]()
+        print(f"\n== {mname} (batch {model.batch_size}) ==")
+        print(f"{'site':<10} {'M*K*N':<16} {'tile':<14} {'grid':<10} "
+              f"{'VMEM KiB':>9} {'MXU util':>9} {'fl/B':>7}")
+        for site in matmul_sites(model):
+            a = analyze(*site)
+            flag = ""
+            if a["vmem_kib"] > 8 * 1024:
+                flag += " !VMEM"
+            if a["mxu_util"] < 0.25:
+                flag += " !MXU(batch-bound)"
+            print(f"{a['site']:<10} {a['mkn']:<16} {a['tile']:<14} {a['grid']:<10} "
+                  f"{a['vmem_kib']:>9.1f} {a['mxu_util']:>9.2f} {a['flops_per_byte']:>7.1f}{flag}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""AOT pipeline: manifest consistency + artifact well-formedness."""
+
+import json
+import os
+
+import pytest
+
+from compile.aot import compile_model
+from compile.model import pipeformer, edgenet
+
+
+@pytest.fixture(scope="module")
+def compiled(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    model = edgenet(batch=4, in_dim=48, d=16, n_blocks=2, n_classes=4,
+                    name="edgenet-aot-test")
+    manifest = compile_model(model, out, verbose=False)
+    return out, model, manifest
+
+
+def test_manifest_written(compiled):
+    out, model, manifest = compiled
+    path = os.path.join(out, model.name, "manifest.json")
+    with open(path) as f:
+        on_disk = json.load(f)
+    assert on_disk == manifest
+    assert on_disk["model"] == model.name
+    assert len(on_disk["blocks"]) == len(model.blocks) + 1
+
+
+def test_all_artifacts_exist_and_parse_as_hlo(compiled):
+    out, model, manifest = compiled
+    mdir = os.path.join(out, model.name)
+    for b in manifest["blocks"]:
+        files = [b[k] for k in ("fwd", "bwd", "step", "eval") if k in b]
+        assert files, b
+        for f in files:
+            p = os.path.join(mdir, f)
+            assert os.path.exists(p), p
+            text = open(p).read()
+            assert text.startswith("HloModule"), p
+            assert "ENTRY" in text
+
+
+def test_init_files_match_declared_sizes(compiled):
+    out, model, manifest = compiled
+    mdir = os.path.join(out, model.name)
+    for b in manifest["blocks"]:
+        for p in b["params"]:
+            path = os.path.join(mdir, p["init"])
+            assert os.path.getsize(path) == p["size"] * 4
+
+
+def test_flops_and_bytes_positive(compiled):
+    _, _, manifest = compiled
+    for b in manifest["blocks"]:
+        assert b["flops_fwd"] > 0
+        assert b["flops_bwd"] >= b["flops_fwd"]
+        assert b["out_bytes"] > 0
+        assert b["param_bytes"] > 0
+
+
+def test_first_block_has_no_gx(compiled):
+    _, _, manifest = compiled
+    assert manifest["blocks"][0]["has_gx"] is False
+    for b in manifest["blocks"][1:]:
+        assert b["has_gx"] is True
+
+
+def test_shapes_chain(compiled):
+    _, _, manifest = compiled
+    blocks = manifest["blocks"]
+    for a, b in zip(blocks[:-1], blocks[1:]):
+        if a["kind"] == "block" and b["kind"] == "block":
+            assert a["out_shape"] == b["in_shape"]
+
+
+def test_pipeformer_embed_block_is_int_input(tmp_path):
+    model = pipeformer(batch=2, seq=4, vocab=16, d=8, n_layers=1, heads=2,
+                       name="pf-aot-test")
+    manifest = compile_model(model, str(tmp_path), verbose=False)
+    assert manifest["blocks"][0]["in_dtype"] == "i32"
+    assert manifest["labels"]["dtype"] == "i32"
+    assert manifest["acc_denom"] == 2 * 4

@@ -1,0 +1,69 @@
+"""Cross-language interchange: Rust checkpoints are plain npy + JSON that
+numpy/python load directly (and the reverse direction parses too).
+
+The Rust side's writer is exercised in its own unit tests; here we verify
+the format contract from the Python side with files produced by both
+languages' writers.
+"""
+
+import json
+import os
+import subprocess
+
+import numpy as np
+import pytest
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+FTPIPEHD = os.path.join(REPO, "target", "release", "ftpipehd")
+
+
+def test_numpy_reads_rust_style_npy(tmp_path):
+    """Re-create the Rust writer's byte layout by hand and np.load it."""
+    header = "{'descr': '<f4', 'fortran_order': False, 'shape': (3, 4), }"
+    unpadded = 10 + len(header) + 1
+    pad = (64 - unpadded % 64) % 64
+    header = header + " " * pad + "\n"
+    data = np.arange(12, dtype="<f4")
+    p = tmp_path / "rust_style.npy"
+    with open(p, "wb") as f:
+        f.write(b"\x93NUMPY")
+        f.write(bytes([1, 0]))
+        f.write(len(header).to_bytes(2, "little"))
+        f.write(header.encode())
+        f.write(data.tobytes())
+    arr = np.load(p)
+    assert arr.shape == (3, 4)
+    np.testing.assert_array_equal(arr.ravel(), data)
+
+
+def test_manifest_json_round_trips_with_python():
+    """The Rust JSON writer mirrors python json.dumps; the manifest on disk
+    parses identically from both sides (python side checked here)."""
+    mpath = os.path.join(REPO, "artifacts", "edgenet-tiny", "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("run `make artifacts` first")
+    with open(mpath) as f:
+        m = json.load(f)
+    assert m["model"] == "edgenet-tiny"
+    assert m["blocks"][0]["index"] == 0
+    total = sum(sum(p["size"] for p in b["params"]) for b in m["blocks"])
+    assert total == m["param_count"]
+
+
+def test_init_weights_files_match_python_reference():
+    """init/*.bin are the exact bytes of the seeded jax init — re-derive
+    them and compare (guards against seed or layout drift)."""
+    mdir = os.path.join(REPO, "artifacts", "edgenet-tiny")
+    if not os.path.exists(os.path.join(mdir, "manifest.json")):
+        pytest.skip("run `make artifacts` first")
+    from compile.model import MODELS
+
+    model = MODELS["edgenet-tiny"]()
+    params = model.init_all(0)
+    # spot-check block 1 tensor 0
+    import jax
+
+    want = jax.device_get(params[1][0]).astype("<f4").tobytes()
+    with open(os.path.join(mdir, "init", "b1_p0.bin"), "rb") as f:
+        got = f.read()
+    assert got == want

@@ -1,0 +1,79 @@
+//! Ablations over FTPipeHD's design choices (DESIGN.md §5 "ablation
+//! benches"): pipeline depth (in-flight limit), replication periods
+//! (fault-tolerance cost in bytes + per-batch spikes), and capacity-drift
+//! adaptation (time-varying devices, the paper's motivation for *dynamic*
+//! re-partition).
+
+mod common;
+
+use ftpipehd::config::Engine;
+use ftpipehd::coordinator::run_sim;
+use ftpipehd::util::benchkit::Table;
+
+fn main() {
+    let model = common::model_dir("artifacts/edgenet");
+    if !common::require_artifacts(&model) {
+        return;
+    }
+    let batches = common::scaled(40);
+
+    // ---- ablation 1: in-flight limit (async pipelining vs sync) ----
+    println!("# Ablation 1: pipeline depth (in-flight limit); 3 equal devices\n");
+    let mut t = Table::new(&["in-flight", "wall s", "steady ms/batch"]);
+    for limit in [1usize, 2, 3, 6] {
+        let mut cfg = common::base_cfg(&model, &[1.0, 1.0, 1.0], batches);
+        cfg.inflight_limit = Some(limit);
+        cfg.repartition_first = None;
+        cfg.repartition_every = None;
+        let r = run_sim(&cfg).expect("run");
+        t.row(&[
+            format!("{limit}{}", if limit == 1 { " (sync/model-parallel)" } else { "" }),
+            format!("{:.1}", r.total_s),
+            format!("{:.1}", r.mean_batch_ms(batches as u64 / 2, batches as u64).unwrap_or(f64::NAN)),
+        ]);
+    }
+    t.print();
+
+    // ---- ablation 2: replication period vs network cost ----
+    println!("\n# Ablation 2: replication period -> network bytes (fault-tolerance cost)\n");
+    let mut t = Table::new(&["chain/global period", "net MB", "overhead vs none"]);
+    let mut base_mb = 0.0;
+    for (chain, global) in [(None, None), (Some(20u64), Some(40u64)), (Some(5), Some(10))] {
+        let mut cfg = common::base_cfg(&model, &[1.0, 1.0, 1.0], batches);
+        cfg.chain_every = chain;
+        cfg.global_every = global;
+        cfg.repartition_first = None;
+        cfg.repartition_every = None;
+        let r = run_sim(&cfg).expect("run");
+        let mb = r.net_bytes as f64 / 1e6;
+        if chain.is_none() {
+            base_mb = mb;
+        }
+        t.row(&[
+            format!("{chain:?}/{global:?}"),
+            format!("{mb:.2}"),
+            format!("{:+.1}%", (mb - base_mb) / base_mb * 100.0),
+        ]);
+    }
+    t.print();
+
+    // ---- ablation 3: time-varying capacity (drift) ----
+    println!("\n# Ablation 3: capacity drift — dynamic re-partition vs static under time-varying load\n");
+    let mut t = Table::new(&["engine", "drift", "steady ms/batch", "re-partitions"]);
+    for (engine, name) in [(Engine::FtPipeHd, "ftpipehd"), (Engine::PipeDream, "pipedream")] {
+        let mut cfg = common::base_cfg(&model, &[1.0, 1.0, 4.0], common::scaled(80));
+        cfg.engine = engine;
+        cfg.devices[2].drift_amp = 0.6;
+        cfg.devices[2].drift_period_s = 20.0;
+        cfg.repartition_first = Some(10);
+        cfg.repartition_every = Some(25);
+        let r = run_sim(&cfg).expect("run");
+        t.row(&[
+            name.to_string(),
+            "±60% / 20s".into(),
+            format!("{:.1}", r.mean_batch_ms(20, common::scaled(80) as u64).unwrap_or(f64::NAN)),
+            format!("{}", r.partitions.len()),
+        ]);
+    }
+    t.print();
+}

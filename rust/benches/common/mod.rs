@@ -1,0 +1,38 @@
+//! Shared helpers for the per-figure benches.
+
+use ftpipehd::config::{DeviceConfig, RunConfig};
+
+/// Scale factor for bench sizes (FTPIPEHD_BENCH_SCALE=2 doubles batches).
+pub fn scale() -> f64 {
+    std::env::var("FTPIPEHD_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+}
+
+pub fn scaled(n: usize) -> usize {
+    ((n as f64 * scale()).round() as usize).max(1)
+}
+
+pub fn model_dir(default: &str) -> String {
+    std::env::var("FTPIPEHD_BENCH_MODEL").unwrap_or_else(|_| default.to_string())
+}
+
+pub fn base_cfg(model: &str, devices: &[f64], batches: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model_dir = model.to_string();
+    cfg.devices = devices.iter().map(|&c| DeviceConfig::with_capacity(c)).collect();
+    cfg.bandwidth_bps = vec![12.5e6];
+    cfg.epochs = 1;
+    cfg.batches_per_epoch = batches;
+    cfg.eval_batches = 5;
+    cfg
+}
+
+pub fn require_artifacts(dir: &str) -> bool {
+    let ok = std::path::Path::new(dir).join("manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: {dir}/manifest.json missing — run `make artifacts`");
+    }
+    ok
+}

@@ -1,0 +1,65 @@
+//! Paper Fig. 6: per-batch training time around a worker failure —
+//! FTPipeHD (weight redistribution + re-partition) vs ResPipe (the next
+//! worker absorbs the failed stage).
+//!
+//! Paper result: both train a batch in ~2.1s before the fault; replication
+//! causes a visible spike (batch 200; FTPipeHD's larger — it also runs
+//! global replication); after recovery FTPipeHD returns to the pre-fault
+//! per-batch time while ResPipe stays much slower (the takeover worker now
+//! runs two stages' worth of blocks). The kill point here is scaled from
+//! the paper's batch 205 to the bench's batch count.
+
+mod common;
+
+use ftpipehd::config::{Engine, FaultPlan};
+use ftpipehd::coordinator::run_sim;
+use ftpipehd::util::benchkit::print_series;
+
+fn main() {
+    let model = common::model_dir("artifacts/edgenet");
+    if !common::require_artifacts(&model) {
+        return;
+    }
+    let batches = common::scaled(60);
+    let kill_at = (batches * 2 / 3) as u64; // paper: 205 of its window
+    let chain = (batches / 6).max(2) as u64; // paper: every 50
+    let global = chain * 2; // paper: every 100
+
+    println!("# Fig 6: per-batch time; kill worker 2 at batch {kill_at}; chain every {chain}, global every {global}\n");
+
+    let mut all: Vec<Vec<f64>> = vec![];
+    for engine in [Engine::FtPipeHd, Engine::ResPipe] {
+        let mut cfg = common::base_cfg(&model, &[1.0, 1.0, 1.0, 1.0], batches);
+        cfg.engine = engine;
+        cfg.chain_every = Some(chain);
+        cfg.global_every = Some(global);
+        cfg.fault_timeout_ms = 3000;
+        cfg.repartition_first = None;
+        cfg.repartition_every = None;
+        cfg.fault = Some(FaultPlan { kill_device: 2, at_batch: kill_at, restarts: false });
+        let record = run_sim(&cfg).expect("run");
+
+        let mut ys = vec![f64::NAN; batches];
+        for b in &record.batches {
+            ys[b.batch as usize] = b.wall_ms;
+        }
+        let before = record.mean_batch_ms(kill_at.saturating_sub(10), kill_at - 1).unwrap_or(f64::NAN);
+        let after = record.mean_batch_ms(kill_at + 3, batches as u64).unwrap_or(f64::NAN);
+        println!(
+            "{:?}: before fault {before:.1} ms/batch, after recovery {after:.1} ms/batch ({}), redistribution {:?}s",
+            engine,
+            if after < 1.5 * before { "returned to pre-fault speed" } else { "STILL DEGRADED" },
+            record.recovery_overhead_s,
+        );
+        all.push(ys);
+    }
+
+    let xs: Vec<f64> = (0..batches).map(|b| b as f64).collect();
+    print_series(
+        "Fig 6: per-batch training time (ms)",
+        "batch",
+        &["ftpipehd_ms", "respipe_ms"],
+        &xs,
+        &all,
+    );
+}

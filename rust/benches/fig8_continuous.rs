@@ -1,0 +1,95 @@
+//! Paper Fig. 8 + §IV-F: continuous learning on Raspberry-Pi-class
+//! devices. Pre-train on the old data domain, continue on mixed old+new
+//! data across 3 devices; also reproduce the single-Pi OOM.
+//!
+//! Paper result: a single Pi dies at batch 499 (OOM); on 3 Pis the
+//! accuracy drops to 43.81% when the new data arrives and then climbs
+//! back to roughly the pre-trained level over the following epochs.
+
+mod common;
+
+use ftpipehd::config::{DeviceConfig, Engine, RunConfig};
+use ftpipehd::coordinator::{run_sim, run_sim_full, RunOpts};
+use ftpipehd::data::{MixedVision, SynthVision};
+use ftpipehd::manifest::Manifest;
+use ftpipehd::util::benchkit::print_series;
+
+fn main() {
+    let model = common::model_dir("artifacts/edgenet-pi");
+    if !common::require_artifacts(&model) {
+        return;
+    }
+    let manifest = Manifest::load(&model).expect("manifest");
+    let dim: usize = manifest.input_shape.iter().skip(1).product();
+    let classes = manifest.n_classes.unwrap_or(10);
+
+    // --- single-Pi OOM (paper: process killed at batch 499) ---
+    let needed = manifest.param_bytes_range(0, manifest.n_blocks() - 1) * 3;
+    let mut cfg = RunConfig::default();
+    cfg.model_dir = model.clone();
+    cfg.engine = Engine::SingleDevice;
+    cfg.devices = vec![DeviceConfig::default()];
+    cfg.devices[0].mem_cap_bytes = Some(needed / 2);
+    cfg.epochs = 1;
+    cfg.batches_per_epoch = 5;
+    cfg.eval_batches = 0;
+    let r = run_sim(&cfg).expect("run");
+    println!("# single memory-capped device: {}", r.events.first().map(|e| e.kind.as_str()).unwrap_or("?"));
+    println!("#   -> cannot train on one device (paper: OOM at batch 499)\n");
+
+    // --- pretrain on old domain, then continue on mixed ---
+    let pre_batches = common::scaled(60);
+    let epochs = common::scaled(5);
+    let per_epoch = common::scaled(30);
+
+    let old = SynthVision::new(dim, classes, 0.6, 7, 0);
+    let new = SynthVision::new(dim, classes, 0.6, 7, 1);
+
+    let mut cfg = common::base_cfg(&model, &[1.0, 1.0, 1.0], pre_batches);
+    cfg.eval_batches = 8;
+    let pre = run_sim_full(
+        &cfg,
+        RunOpts {
+            data: Some(Box::new(old.clone())),
+            collect_final_weights: true,
+            ..Default::default()
+        },
+    )
+    .expect("pretrain");
+    let pre_acc = pre.record.epochs.last().map(|e| e.val_acc).unwrap_or(f32::NAN);
+    println!("# pre-trained val acc (old domain): {pre_acc:.3}");
+
+    let mixed = MixedVision { old, new, new_frac: 0.5, seed: 99 };
+    let mut cfg2 = common::base_cfg(&model, &[1.0, 1.0, 1.0], per_epoch);
+    cfg2.epochs = epochs;
+    cfg2.eval_batches = 8;
+    let cont = run_sim_full(
+        &cfg2,
+        RunOpts {
+            data: Some(Box::new(mixed)),
+            initial_weights: Some(pre.final_weights),
+            ..Default::default()
+        },
+    )
+    .expect("continue");
+
+    let early: f32 =
+        cont.record.batches.iter().take(5).map(|b| b.train_acc).sum::<f32>() / 5.0;
+    println!("# accuracy right after new data arrives: {early:.3} (paper: 43.81%)");
+
+    let xs: Vec<f64> = (0..cont.record.epochs.len()).map(|e| e as f64).collect();
+    let val: Vec<f64> = cont.record.epochs.iter().map(|e| e.val_acc as f64).collect();
+    let train: Vec<f64> = cont.record.epochs.iter().map(|e| e.train_acc as f64).collect();
+    print_series(
+        "Fig 8: continuous-learning accuracy per epoch (validation on the NEW domain)",
+        "epoch",
+        &["val_acc_new_domain", "train_acc_mixed"],
+        &xs,
+        &[val.clone(), train],
+    );
+    println!(
+        "\nfinal val acc on new domain {:.3} vs pre-trained level {:.3} (paper: climbs back to pre-trained level)",
+        val.last().unwrap_or(&f64::NAN),
+        pre_acc
+    );
+}

@@ -1,0 +1,67 @@
+//! Microbench: the eq-(5) dynamic-programming partitioner and the
+//! Algorithm-1 redistribution planner — the two pure-logic hot paths of
+//! the control plane (they run on every dynamic re-partition and every
+//! fault recovery, so they must be negligible next to a batch).
+
+mod common;
+
+use ftpipehd::fault::plan_redistribution;
+use ftpipehd::partition::{bruteforce_partition, optimal_partition, uniform_partition, CostModel};
+use ftpipehd::util::benchkit::{bench, Table};
+use ftpipehd::util::rng::Rng;
+
+fn cost_model(n_blocks: usize, n_dev: usize, rng: &mut Rng) -> CostModel {
+    CostModel {
+        t0_ms: (0..n_blocks).map(|_| rng.uniform(1.0, 30.0)).collect(),
+        out_bytes: (0..n_blocks).map(|_| rng.uniform(1e4, 1e6) as u64).collect(),
+        capacities: (0..n_dev)
+            .map(|i| if i == 0 { 1.0 } else { rng.uniform(0.5, 10.0) })
+            .collect(),
+        bandwidth_bps: (0..n_dev - 1).map(|_| rng.uniform(1e6, 1e8)).collect(),
+    }
+}
+
+fn main() {
+    let mut table = Table::new(&["case", "mean", "p95"]);
+    let mut rng = Rng::new(7);
+
+    for (blocks, devs) in [(12usize, 3usize), (24, 4), (48, 8), (96, 8)] {
+        let cm = cost_model(blocks, devs, &mut rng);
+        let s = bench(10, 200, || {
+            let _ = optimal_partition(&cm);
+        });
+        table.row(&[
+            format!("dp {blocks} blocks x {devs} devices"),
+            format!("{:.1} us", s.mean * 1e6),
+            format!("{:.1} us", s.p95 * 1e6),
+        ]);
+    }
+
+    // brute force as the reference point (why the DP matters)
+    let cm = cost_model(16, 4, &mut rng);
+    let s = bench(3, 20, || {
+        let _ = bruteforce_partition(&cm);
+    });
+    table.row(&[
+        "bruteforce 16 blocks x 4 devices".into(),
+        format!("{:.1} us", s.mean * 1e6),
+        format!("{:.1} us", s.p95 * 1e6),
+    ]);
+
+    for (blocks, devs) in [(12usize, 4usize), (96, 8)] {
+        let p_cur = uniform_partition(blocks, devs);
+        let p_new = uniform_partition(blocks, devs - 1);
+        let held: Vec<usize> = (p_cur[2].0..=p_cur[2].1).collect();
+        let s = bench(10, 500, || {
+            let _ = plan_redistribution(&p_new, &p_cur, &[1], &held, 1, Some(2));
+        });
+        table.row(&[
+            format!("algorithm-1 plan {blocks} blocks x {devs} stages"),
+            format!("{:.2} us", s.mean * 1e6),
+            format!("{:.2} us", s.p95 * 1e6),
+        ]);
+    }
+
+    println!("# micro: control-plane logic\n");
+    table.print();
+}

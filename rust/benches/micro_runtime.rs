@@ -1,0 +1,82 @@
+//! Microbench: the data-plane hot path — block execution through PJRT
+//! (with the literal conversions the pipeline pays per hop) and the
+//! message codec. These bound the per-batch overhead the coordinator adds
+//! on top of raw XLA compute; see EXPERIMENTS.md §Perf.
+
+mod common;
+
+use ftpipehd::manifest::{Dtype, Manifest};
+use ftpipehd::net::codec;
+use ftpipehd::net::message::{Message, Payload};
+use ftpipehd::runtime::{load_all_blocks, Engine, HostTensor};
+use ftpipehd::util::benchkit::{bench, Table};
+
+fn main() {
+    let model = common::model_dir("artifacts/edgenet");
+    if !common::require_artifacts(&model) {
+        return;
+    }
+    let manifest = Manifest::load(&model).expect("manifest");
+    let engine = Engine::cpu().expect("engine");
+    let blocks = load_all_blocks(&engine, &manifest).expect("blocks");
+    let mut table = Table::new(&["case", "mean", "p95"]);
+
+    // --- block execution: first IR block fwd + bwd ---
+    let b = &blocks[1];
+    let params = manifest.load_init_params(1).expect("params");
+    let in_elems: usize = b.info.in_shape.iter().product();
+    let x = match b.info.in_dtype {
+        Dtype::F32 => HostTensor::F32(vec![0.1; in_elems]),
+        Dtype::I32 => HostTensor::I32(vec![1; in_elems]),
+    };
+    let y = b.forward(&params, &x).expect("fwd");
+    let gy = vec![1e-3f32; y.len()];
+    let s = bench(5, 50, || {
+        let _ = b.forward(&params, &x).unwrap();
+    });
+    table.row(&["block fwd (ir, via PJRT)".into(), format!("{:.2} ms", s.mean * 1e3), format!("{:.2} ms", s.p95 * 1e3)]);
+    let s = bench(5, 50, || {
+        let _ = b.backward(&params, &x, &gy).unwrap();
+    });
+    table.row(&["block bwd (ir, via PJRT)".into(), format!("{:.2} ms", s.mean * 1e3), format!("{:.2} ms", s.p95 * 1e3)]);
+
+    // --- stem (the heaviest block) ---
+    let b0 = &blocks[0];
+    let p0 = manifest.load_init_params(0).expect("params");
+    let in0: usize = b0.info.in_shape.iter().product();
+    let x0 = HostTensor::F32(vec![0.1; in0]);
+    let s = bench(3, 30, || {
+        let _ = b0.forward(&p0, &x0).unwrap();
+    });
+    table.row(&["block fwd (stem 3072->128)".into(), format!("{:.2} ms", s.mean * 1e3), format!("{:.2} ms", s.p95 * 1e3)]);
+
+    // --- codec throughput on a Forward-sized message ---
+    let act: usize = manifest.blocks[0].out_shape.iter().product();
+    let msg = Message::Forward {
+        batch: 1,
+        version0: 1,
+        is_eval: false,
+        data: Payload::F32(vec![0.5; act]),
+    };
+    let frame = codec::encode(0, &msg);
+    let bytes = frame.len() as f64;
+    let s = bench(10, 2000, || {
+        let _ = codec::encode(0, &msg);
+    });
+    table.row(&[
+        format!("codec encode ({} KiB act)", (bytes / 1024.0) as u64),
+        format!("{:.1} us ({:.2} GB/s)", s.mean * 1e6, bytes / s.mean / 1e9),
+        format!("{:.1} us", s.p95 * 1e6),
+    ]);
+    let s = bench(10, 2000, || {
+        let _ = codec::decode(&frame).unwrap();
+    });
+    table.row(&[
+        "codec decode".into(),
+        format!("{:.1} us ({:.2} GB/s)", s.mean * 1e6, bytes / s.mean / 1e9),
+        format!("{:.1} us", s.p95 * 1e6),
+    ]);
+
+    println!("# micro: data-plane hot path\n");
+    table.print();
+}

@@ -1,0 +1,71 @@
+//! Paper Table III: recovery overhead and one-epoch training time after
+//! recovery — FTPipeHD vs ResPipe.
+//!
+//! Paper result: ResPipe recovers almost instantly (0.13s — no weights
+//! move) but afterwards one epoch takes 59.18 min vs FTPipeHD's 8.57 min
+//! (6.9x), because FTPipeHD pays 2.24s to redistribute weights and
+//! re-balance. Expected shape: ResPipe's recovery overhead < FTPipeHD's;
+//! FTPipeHD's post-recovery epoch time substantially lower.
+
+mod common;
+
+use ftpipehd::config::{Engine, FaultPlan};
+use ftpipehd::coordinator::run_sim;
+use ftpipehd::util::benchkit::Table;
+
+fn main() {
+    let model = common::model_dir("artifacts/edgenet");
+    if !common::require_artifacts(&model) {
+        return;
+    }
+    // heterogeneous pipeline so re-balancing matters after the failure
+    let batches = common::scaled(60);
+    let kill_at = (batches / 2) as u64;
+    let chain = (batches / 6).max(2) as u64;
+
+    println!("# Table III: fault recovery performance (kill worker 2 at batch {kill_at})\n");
+    let mut table = Table::new(&[
+        "",
+        "FTPipeHD",
+        "ResPipe",
+    ]);
+
+    let mut overheads = vec![];
+    let mut epoch_times = vec![];
+    for engine in [Engine::FtPipeHd, Engine::ResPipe] {
+        let mut cfg = common::base_cfg(&model, &[1.0, 1.0, 1.0, 2.0], batches);
+        cfg.engine = engine;
+        cfg.chain_every = Some(chain);
+        cfg.global_every = Some(chain * 2);
+        cfg.fault_timeout_ms = 3000;
+        cfg.fault = Some(FaultPlan { kill_device: 2, at_batch: kill_at, restarts: false });
+        let record = run_sim(&cfg).expect("run");
+        overheads.push(record.recovery_overhead_s.unwrap_or(f64::NAN));
+        // "one-epoch training time after recovery": post-recovery ms/batch
+        // extrapolated to a full epoch of `batches`
+        let after_ms = record
+            .mean_batch_ms(kill_at + 3, batches as u64)
+            .unwrap_or(f64::NAN);
+        epoch_times.push(after_ms * batches as f64 / 1e3);
+    }
+
+    table.row(&[
+        "recover overhead (s)".into(),
+        format!("{:.3}", overheads[0]),
+        format!("{:.3}", overheads[1]),
+    ]);
+    table.row(&[
+        "one-epoch time after recovery (s)".into(),
+        format!("{:.1}", epoch_times[0]),
+        format!("{:.1}", epoch_times[1]),
+    ]);
+    table.print();
+    println!(
+        "\nepoch-time ratio ResPipe/FTPipeHD: {:.2}x (paper: 6.9x on its 3-device testbed)",
+        epoch_times[1] / epoch_times[0]
+    );
+    println!(
+        "overhead ratio FTPipeHD/ResPipe: {:.2}x (paper: 2.24s vs 0.13s = 17x)",
+        overheads[0] / overheads[1]
+    );
+}

@@ -1,0 +1,248 @@
+//! Central-node checkpointing (paper §III-E): "the failure of the central
+//! node can be dealt with by simply saving the training states and model
+//! weights to the disk periodically, and recovering from them every time
+//! it fails."
+//!
+//! A checkpoint is a directory:
+//!
+//! ```text
+//! <dir>/state.json          committed batch, epoch, lr, partition, worker list
+//! <dir>/block{i}_p{k}.npy   every parameter tensor (self-describing npy)
+//! ```
+//!
+//! The npy format makes checkpoints directly loadable from Python
+//! (`np.load`) — verified by `python/tests/test_interchange.py`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::BlockParams;
+use crate::util::json::{self, Value};
+use crate::util::npy;
+
+/// Training state captured alongside the weights (paper Table I subset).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointState {
+    pub committed_batch: i64,
+    pub epoch: u64,
+    pub lr: f32,
+    pub ranges: Vec<(usize, usize)>,
+    pub worker_list: Vec<usize>,
+    /// shapes per (block, tensor) for reconstruction
+    pub shapes: BTreeMap<usize, Vec<Vec<usize>>>,
+}
+
+/// A complete checkpoint: state + all parameters.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub state: CheckpointState,
+    pub weights: BTreeMap<usize, BlockParams>,
+}
+
+impl Checkpoint {
+    /// Persist atomically: write to `<dir>.tmp`, then rename.
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<()> {
+        let dir = dir.as_ref();
+        let tmp = PathBuf::from(format!("{}.tmp", dir.display()));
+        if tmp.exists() {
+            std::fs::remove_dir_all(&tmp)?;
+        }
+        std::fs::create_dir_all(&tmp)?;
+
+        for (&b, bp) in &self.weights {
+            let shapes = self
+                .state
+                .shapes
+                .get(&b)
+                .ok_or_else(|| anyhow!("no shapes for block {b}"))?;
+            for (k, (tensor, shape)) in bp.0.iter().zip(shapes).enumerate() {
+                npy::write_f32(tmp.join(format!("block{b}_p{k}.npy")), shape, tensor)?;
+            }
+        }
+        std::fs::write(tmp.join("state.json"), self.state_json().to_pretty())?;
+
+        if dir.exists() {
+            std::fs::remove_dir_all(dir)?;
+        }
+        std::fs::rename(&tmp, dir).context("committing checkpoint rename")?;
+        Ok(())
+    }
+
+    fn state_json(&self) -> Value {
+        Value::obj(vec![
+            ("committed_batch", Value::Num(self.state.committed_batch as f64)),
+            ("epoch", Value::Num(self.state.epoch as f64)),
+            ("lr", Value::Num(self.state.lr as f64)),
+            (
+                "ranges",
+                Value::Arr(
+                    self.state
+                        .ranges
+                        .iter()
+                        .map(|&(a, b)| Value::arr_usize(&[a, b]))
+                        .collect(),
+                ),
+            ),
+            ("worker_list", Value::arr_usize(&self.state.worker_list)),
+            (
+                "shapes",
+                Value::Obj(
+                    self.state
+                        .shapes
+                        .iter()
+                        .map(|(b, tensors)| {
+                            (
+                                b.to_string(),
+                                Value::Arr(
+                                    tensors.iter().map(|s| Value::arr_usize(s)).collect(),
+                                ),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Load a checkpoint directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Checkpoint> {
+        let dir = dir.as_ref();
+        let raw = std::fs::read_to_string(dir.join("state.json"))
+            .with_context(|| format!("reading {}/state.json", dir.display()))?;
+        let v = json::parse(&raw).map_err(|e| anyhow!("{e}"))?;
+        let usize_pair = |x: &Value| -> Result<(usize, usize)> {
+            let a = x.as_arr().ok_or_else(|| anyhow!("range not array"))?;
+            Ok((
+                a[0].as_usize().ok_or_else(|| anyhow!("bad range"))?,
+                a[1].as_usize().ok_or_else(|| anyhow!("bad range"))?,
+            ))
+        };
+        let mut shapes: BTreeMap<usize, Vec<Vec<usize>>> = BTreeMap::new();
+        for (k, tensors) in v.req("shapes").map_err(|e| anyhow!("{e}"))?.as_obj().unwrap_or(&[]) {
+            let b: usize = k.parse().context("block key")?;
+            let mut ts = Vec::new();
+            for s in tensors.as_arr().unwrap_or(&[]) {
+                ts.push(
+                    s.as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                );
+            }
+            shapes.insert(b, ts);
+        }
+        let state = CheckpointState {
+            committed_batch: v.get("committed_batch").and_then(|x| x.as_i64()).unwrap_or(-1),
+            epoch: v.get("epoch").and_then(|x| x.as_i64()).unwrap_or(0) as u64,
+            lr: v.get("lr").and_then(|x| x.as_f64()).unwrap_or(0.01) as f32,
+            ranges: v
+                .req("ranges")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(usize_pair)
+                .collect::<Result<_>>()?,
+            worker_list: v
+                .req("worker_list")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect(),
+            shapes: shapes.clone(),
+        };
+
+        let mut weights = BTreeMap::new();
+        for (&b, tensors) in &shapes {
+            let mut bp = Vec::with_capacity(tensors.len());
+            for k in 0..tensors.len() {
+                let (shape, data) = npy::read_f32(dir.join(format!("block{b}_p{k}.npy")))?;
+                if shape != tensors[k] {
+                    return Err(anyhow!(
+                        "block {b} tensor {k}: shape {:?} != state.json {:?}",
+                        shape,
+                        tensors[k]
+                    ));
+                }
+                bp.push(data);
+            }
+            weights.insert(b, BlockParams(bp));
+        }
+        Ok(Checkpoint { state, weights })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        let mut shapes = BTreeMap::new();
+        shapes.insert(0usize, vec![vec![2, 3], vec![3]]);
+        shapes.insert(2usize, vec![vec![4]]);
+        let mut weights = BTreeMap::new();
+        weights.insert(0, BlockParams(vec![vec![1.0; 6], vec![0.5; 3]]));
+        weights.insert(2, BlockParams(vec![vec![-2.0; 4]]));
+        Checkpoint {
+            state: CheckpointState {
+                committed_batch: 99,
+                epoch: 3,
+                lr: 0.01,
+                ranges: vec![(0, 1), (2, 5)],
+                worker_list: vec![0, 2],
+                shapes,
+            },
+            weights,
+        }
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("ftpipehd-ckpt-tests").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = tmpdir("roundtrip");
+        let ck = sample();
+        ck.save(&dir).unwrap();
+        let back = Checkpoint::load(&dir).unwrap();
+        assert_eq!(back.state, ck.state);
+        assert_eq!(back.weights.len(), 2);
+        assert_eq!(back.weights[&0], ck.weights[&0]);
+        assert_eq!(back.weights[&2], ck.weights[&2]);
+    }
+
+    #[test]
+    fn save_is_atomic_overwrite() {
+        let dir = tmpdir("atomic");
+        let mut ck = sample();
+        ck.save(&dir).unwrap();
+        ck.state.committed_batch = 150;
+        ck.save(&dir).unwrap(); // overwrite
+        let back = Checkpoint::load(&dir).unwrap();
+        assert_eq!(back.state.committed_batch, 150);
+        assert!(!PathBuf::from(format!("{}.tmp", dir.display())).exists());
+    }
+
+    #[test]
+    fn load_missing_fails_cleanly() {
+        assert!(Checkpoint::load(tmpdir("missing")).is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_detected() {
+        let dir = tmpdir("mismatch");
+        let ck = sample();
+        ck.save(&dir).unwrap();
+        // corrupt one tensor file with the wrong shape
+        crate::util::npy::write_f32(dir.join("block2_p0.npy"), &[5], &[0.0; 5]).unwrap();
+        assert!(Checkpoint::load(&dir).is_err());
+    }
+}

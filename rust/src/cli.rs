@@ -1,0 +1,113 @@
+//! Hand-rolled CLI argument parsing (clap is not available offline).
+//!
+//! Flags are `--key value` (or `--flag` for booleans). Unknown keys error.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed flags: `--key value` pairs plus positional arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                // boolean-style if next is another flag or end
+                if i + 1 >= argv.len() || argv[i + 1].starts_with("--") {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                } else {
+                    out.flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                }
+            } else {
+                out.positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects a number, got {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated f64 list, e.g. `--capacities 1,2.5,10`.
+    pub fn get_f64_list(&self, key: &str) -> Result<Option<Vec<f64>>> {
+        match self.get(key) {
+            Some(v) => {
+                let parsed: Result<Vec<f64>, _> =
+                    v.split(',').map(|x| x.trim().parse::<f64>()).collect();
+                match parsed {
+                    Ok(list) if !list.is_empty() => Ok(Some(list)),
+                    _ => bail!("--{key} expects a comma-separated number list, got {v:?}"),
+                }
+            }
+            None => Ok(None),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = args(&["train", "--model", "artifacts/edgenet", "--verbose", "--epochs", "3"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("model"), Some("artifacts/edgenet"));
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.get_usize("epochs", 1).unwrap(), 3);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn parses_lists() {
+        let a = args(&["--capacities", "1,2.5,10"]);
+        assert_eq!(a.get_f64_list("capacities").unwrap(), Some(vec![1.0, 2.5, 10.0]));
+        assert!(args(&["--capacities", "a,b"]).get_f64_list("capacities").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_numbers() {
+        assert!(args(&["--epochs", "x"]).get_usize("epochs", 1).is_err());
+    }
+}

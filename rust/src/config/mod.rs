@@ -1,0 +1,362 @@
+//! Run configuration: devices, links, training hyper-parameters, schedules.
+//!
+//! Configs are plain structs with builder-style setters (used by the
+//! examples/benches) and can be loaded from JSON (used by the CLI).
+//! Defaults follow the paper's §IV setup: SGD momentum 0.9, weight decay
+//! 4e-5, chain replication every 50 batches, global every 100, dynamic
+//! re-partition after 10 batches of epoch 0 and then every 100.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Value;
+
+/// One participating device. `capacity` follows the paper's eq (1): the
+/// ratio of this device's per-layer execution time to the central node's
+/// (1.0 = as fast as central; 10.0 = ten times slower).
+#[derive(Debug, Clone)]
+pub struct DeviceConfig {
+    /// Base capacity multiplier (>= 1.0 is slower than central).
+    pub capacity: f64,
+    /// Relative amplitude of slow sinusoidal capacity drift (0.0 = static).
+    pub drift_amp: f64,
+    /// Drift period in seconds.
+    pub drift_period_s: f64,
+    /// Multiplicative log-normal noise sigma per execution (0.0 = none).
+    pub noise: f64,
+    /// Memory cap in bytes (None = unlimited). Exceeding it at stage
+    /// construction emulates the paper's Raspberry-Pi OOM (§IV-F).
+    pub mem_cap_bytes: Option<u64>,
+}
+
+impl Default for DeviceConfig {
+    fn default() -> Self {
+        DeviceConfig {
+            capacity: 1.0,
+            drift_amp: 0.0,
+            drift_period_s: 60.0,
+            noise: 0.0,
+            mem_cap_bytes: None,
+        }
+    }
+}
+
+impl DeviceConfig {
+    pub fn with_capacity(c: f64) -> Self {
+        DeviceConfig { capacity: c, ..Default::default() }
+    }
+}
+
+/// Which training engine drives the run (FTPipeHD or a baseline).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// Full FTPipeHD: dynamic partition + aggregation + fault tolerance.
+    FtPipeHd,
+    /// PipeDream-style: capacity-blind uniform-cost partition, static.
+    PipeDream,
+    /// ResPipe-style fault tolerance: chain replication, neighbor takeover.
+    ResPipe,
+    /// Whole model on device 0.
+    SingleDevice,
+    /// GPipe-style synchronous pipeline (ablation).
+    SyncPipeline,
+}
+
+/// A planned fault injection (for experiments; None = no fault).
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Device index to kill (1-based worker index in the worker list).
+    pub kill_device: usize,
+    /// Fire when this batch id starts its backward pass at the central node.
+    pub at_batch: u64,
+    /// If true the device "restarts" and probes healthy-but-stateless
+    /// (paper case 2); if false it stays dead (case 3 path).
+    pub restarts: bool,
+}
+
+/// Complete configuration of a training run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Directory with `manifest.json` (one compiled model).
+    pub model_dir: String,
+    /// Device 0 is the central node; the rest are workers.
+    pub devices: Vec<DeviceConfig>,
+    /// Link bandwidth in bytes/sec between consecutive devices i -> i+1
+    /// (and the same value i+1 -> i). Length = devices.len()-1, or one
+    /// value broadcast to all links. The paper measures these with ping3.
+    pub bandwidth_bps: Vec<f64>,
+    /// One-way link latency in seconds (per message).
+    pub link_latency_s: f64,
+
+    // --- training hyper-parameters (paper §IV-B) ---
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub epochs: usize,
+    pub batches_per_epoch: usize,
+    /// Validation batches evaluated at each epoch end (0 = skip eval).
+    pub eval_batches: usize,
+
+    // --- pipeline ---
+    /// Max in-flight batches (the paper's semaphore); None = n_stages.
+    pub inflight_limit: Option<usize>,
+    /// Weight aggregation interval factor k: stage i aggregates every
+    /// k*(n-i) backward steps. None disables aggregation.
+    pub agg_interval_k: Option<usize>,
+
+    // --- dynamic re-partition (paper §III-D) ---
+    /// Re-partition after this many batches of epoch 0 (paper: 10).
+    pub repartition_first: Option<u64>,
+    /// Then every this many batches (paper: 100).
+    pub repartition_every: Option<u64>,
+
+    // --- replication + fault tolerance (paper §III-E/F) ---
+    /// Chain replication period in batches (paper: 50). None disables.
+    pub chain_every: Option<u64>,
+    /// Global replication period in batches (paper: 100). None disables.
+    pub global_every: Option<u64>,
+    /// Central-node gradient timeout that triggers the fault handler.
+    pub fault_timeout_ms: u64,
+    pub fault: Option<FaultPlan>,
+
+    /// Learning-rate schedule: at the START of `epoch`, set lr to the
+    /// value (paper §IV-C changes lr at epoch 130).
+    pub lr_drops: Vec<(usize, f32)>,
+    /// Central-node checkpointing (paper §III-E: periodic save-to-disk
+    /// tolerates central failure): (directory, every N batches).
+    pub checkpoint: Option<(String, u64)>,
+
+    pub engine: Engine,
+    pub seed: u64,
+    /// Print per-batch progress.
+    pub verbose: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model_dir: "artifacts/edgenet".into(),
+            devices: vec![DeviceConfig::default(); 3],
+            bandwidth_bps: vec![12.5e6], // ~100 Mbps WiFi
+            link_latency_s: 0.002,
+            lr: 0.01,
+            momentum: 0.9,
+            weight_decay: 4e-5,
+            epochs: 1,
+            batches_per_epoch: 100,
+            eval_batches: 10,
+            inflight_limit: None,
+            agg_interval_k: Some(4),
+            repartition_first: Some(10),
+            repartition_every: Some(100),
+            chain_every: Some(50),
+            global_every: Some(100),
+            fault_timeout_ms: 30_000,
+            fault: None,
+            lr_drops: vec![],
+            checkpoint: None,
+            engine: Engine::FtPipeHd,
+            seed: 0,
+            verbose: false,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Bandwidth of directed link i -> i+1.
+    pub fn bandwidth(&self, link: usize) -> f64 {
+        if self.bandwidth_bps.len() == 1 {
+            self.bandwidth_bps[0]
+        } else {
+            self.bandwidth_bps[link]
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.devices.is_empty() {
+            return Err(anyhow!("need at least one device"));
+        }
+        if self.bandwidth_bps.len() != 1
+            && self.bandwidth_bps.len() + 1 != self.devices.len()
+        {
+            return Err(anyhow!(
+                "bandwidth_bps must have 1 or n_devices-1 entries (got {})",
+                self.bandwidth_bps.len()
+            ));
+        }
+        if self.devices[0].capacity != 1.0 {
+            return Err(anyhow!("device 0 (central) capacity must be 1.0 (paper eq 1)"));
+        }
+        if let Some(f) = &self.fault {
+            if f.kill_device == 0 || f.kill_device >= self.devices.len() {
+                return Err(anyhow!("fault.kill_device must be a worker index"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse from a JSON object (all fields optional; see Default).
+    pub fn from_json(v: &Value) -> Result<RunConfig> {
+        let mut c = RunConfig::default();
+        let getf = |v: &Value, k: &str| v.get(k).and_then(|x| x.as_f64());
+        let getu = |v: &Value, k: &str| v.get(k).and_then(|x| x.as_usize());
+        if let Some(s) = v.get("model_dir").and_then(|x| x.as_str()) {
+            c.model_dir = s.to_string();
+        }
+        if let Some(devs) = v.get("devices").and_then(|x| x.as_arr()) {
+            c.devices = devs
+                .iter()
+                .map(|d| {
+                    let mut dc = DeviceConfig::default();
+                    if let Some(x) = getf(d, "capacity") {
+                        dc.capacity = x;
+                    }
+                    if let Some(x) = getf(d, "drift_amp") {
+                        dc.drift_amp = x;
+                    }
+                    if let Some(x) = getf(d, "drift_period_s") {
+                        dc.drift_period_s = x;
+                    }
+                    if let Some(x) = getf(d, "noise") {
+                        dc.noise = x;
+                    }
+                    if let Some(x) = getf(d, "mem_cap_bytes") {
+                        dc.mem_cap_bytes = Some(x as u64);
+                    }
+                    dc
+                })
+                .collect();
+        }
+        if let Some(b) = v.get("bandwidth_bps").and_then(|x| x.as_arr()) {
+            c.bandwidth_bps = b.iter().filter_map(|x| x.as_f64()).collect();
+        }
+        if let Some(x) = getf(v, "link_latency_s") {
+            c.link_latency_s = x;
+        }
+        if let Some(x) = getf(v, "lr") {
+            c.lr = x as f32;
+        }
+        if let Some(x) = getf(v, "momentum") {
+            c.momentum = x as f32;
+        }
+        if let Some(x) = getf(v, "weight_decay") {
+            c.weight_decay = x as f32;
+        }
+        if let Some(x) = getu(v, "epochs") {
+            c.epochs = x;
+        }
+        if let Some(x) = getu(v, "batches_per_epoch") {
+            c.batches_per_epoch = x;
+        }
+        if let Some(x) = getu(v, "eval_batches") {
+            c.eval_batches = x;
+        }
+        if let Some(x) = getu(v, "inflight_limit") {
+            c.inflight_limit = Some(x);
+        }
+        if v.get("agg_interval_k") == Some(&Value::Null) {
+            c.agg_interval_k = None;
+        } else if let Some(x) = getu(v, "agg_interval_k") {
+            c.agg_interval_k = Some(x);
+        }
+        if let Some(x) = getu(v, "repartition_first") {
+            c.repartition_first = Some(x as u64);
+        }
+        if let Some(x) = getu(v, "repartition_every") {
+            c.repartition_every = Some(x as u64);
+        }
+        if let Some(x) = getu(v, "chain_every") {
+            c.chain_every = Some(x as u64);
+        }
+        if let Some(x) = getu(v, "global_every") {
+            c.global_every = Some(x as u64);
+        }
+        if let Some(x) = getu(v, "fault_timeout_ms") {
+            c.fault_timeout_ms = x as u64;
+        }
+        if let Some(f) = v.get("fault") {
+            if *f != Value::Null {
+                c.fault = Some(FaultPlan {
+                    kill_device: getu(f, "kill_device")
+                        .ok_or_else(|| anyhow!("fault.kill_device required"))?,
+                    at_batch: getu(f, "at_batch")
+                        .ok_or_else(|| anyhow!("fault.at_batch required"))? as u64,
+                    restarts: f.get("restarts").and_then(|x| x.as_bool()).unwrap_or(false),
+                });
+            }
+        }
+        if let Some(s) = v.get("engine").and_then(|x| x.as_str()) {
+            c.engine = match s {
+                "ftpipehd" => Engine::FtPipeHd,
+                "pipedream" => Engine::PipeDream,
+                "respipe" => Engine::ResPipe,
+                "single" => Engine::SingleDevice,
+                "sync" => Engine::SyncPipeline,
+                other => return Err(anyhow!("unknown engine {other:?}")),
+            };
+        }
+        if let Some(x) = getu(v, "seed") {
+            c.seed = x as u64;
+        }
+        if let Some(x) = v.get("verbose").and_then(|x| x.as_bool()) {
+            c.verbose = x;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn load(path: &str) -> Result<RunConfig> {
+        let raw = std::fs::read_to_string(path)?;
+        let v = crate::util::json::parse(&raw).map_err(|e| anyhow!("{e}"))?;
+        Self::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn default_is_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_full_json() {
+        let v = json::parse(
+            r#"{
+              "model_dir": "artifacts/edgenet",
+              "devices": [{"capacity":1.0},{"capacity":2.5},{"capacity":10.0,"noise":0.05}],
+              "bandwidth_bps": [12500000, 2000000],
+              "lr": 0.1, "epochs": 3, "batches_per_epoch": 50,
+              "engine": "pipedream",
+              "fault": {"kill_device": 1, "at_batch": 205}
+            }"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&v).unwrap();
+        assert_eq!(c.devices.len(), 3);
+        assert_eq!(c.devices[2].capacity, 10.0);
+        assert_eq!(c.engine, Engine::PipeDream);
+        assert_eq!(c.fault.as_ref().unwrap().at_batch, 205);
+        assert_eq!(c.bandwidth(1), 2_000_000.0);
+    }
+
+    #[test]
+    fn rejects_bad_central_capacity() {
+        let mut c = RunConfig::default();
+        c.devices[0].capacity = 2.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_bad_fault_index() {
+        let mut c = RunConfig::default();
+        c.fault = Some(FaultPlan { kill_device: 0, at_batch: 1, restarts: false });
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,279 @@
+//! Synthetic datasets (the offline substitution for MNIST/CIFAR10 and a
+//! text corpus — DESIGN.md §3).
+//!
+//! * [`SynthVision`] — class-conditional mixture: each class has a fixed
+//!   random template pattern; a sample is `template[y] + sigma * noise`.
+//!   Learnable by `edgenet` (accuracy climbs the same way the paper's
+//!   MNIST/CIFAR10 curves do) and fully deterministic per (seed, index),
+//!   so epochs, train/val splits, and "old vs new data" mixes reproduce.
+//! * [`SynthLm`] — Zipf-Markov token stream for `pipeformer`: a random
+//!   sparse transition matrix with Zipfian stationary mass; next-token
+//!   prediction has learnable structure (low achievable cross-entropy).
+
+use crate::util::rng::Rng;
+
+/// One training batch as fed to the pipeline's first stage.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// f32 inputs (vision) — empty when the model takes tokens.
+    pub x_f32: Vec<f32>,
+    /// i32 inputs (tokens) — empty for vision.
+    pub x_i32: Vec<i32>,
+    pub labels: Vec<i32>,
+}
+
+/// Deterministic class-mixture vision dataset.
+#[derive(Debug, Clone)]
+pub struct SynthVision {
+    pub dim: usize,
+    pub n_classes: usize,
+    pub noise: f32,
+    templates: Vec<Vec<f32>>,
+    seed: u64,
+}
+
+impl SynthVision {
+    /// `domain` selects an independent template set — used by the
+    /// continuous-learning experiment ("new environment" = new domain).
+    pub fn new(dim: usize, n_classes: usize, noise: f32, seed: u64, domain: u64) -> SynthVision {
+        let mut rng = Rng::new(seed ^ (domain.wrapping_mul(0x9E37_79B9)));
+        let templates = (0..n_classes)
+            .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+            .collect();
+        SynthVision { dim, n_classes, noise, templates, seed }
+    }
+
+    /// Sample `index` is fully determined by (seed, split, index).
+    pub fn sample(&self, split: u64, index: u64) -> (Vec<f32>, i32) {
+        let mut rng = Rng::new(
+            self.seed
+                .wrapping_mul(0x2545F491_4F6CDD1D)
+                .wrapping_add(split.wrapping_mul(0x9E3779B9_7F4A7C15))
+                .wrapping_add(index),
+        );
+        let y = rng.below(self.n_classes as u64) as i32;
+        let t = &self.templates[y as usize];
+        let x = t
+            .iter()
+            .map(|&ti| ti + self.noise * rng.normal() as f32)
+            .collect();
+        (x, y)
+    }
+
+    /// Batch `b` of `batch_size` samples from `split` (0=train, 1=val).
+    pub fn batch(&self, split: u64, b: u64, batch_size: usize) -> Batch {
+        let mut x = Vec::with_capacity(batch_size * self.dim);
+        let mut labels = Vec::with_capacity(batch_size);
+        for i in 0..batch_size as u64 {
+            let (xi, y) = self.sample(split, b * batch_size as u64 + i);
+            x.extend_from_slice(&xi);
+            labels.push(y);
+        }
+        Batch { x_f32: x, x_i32: vec![], labels }
+    }
+}
+
+/// Zipf-Markov language-model stream.
+#[derive(Debug, Clone)]
+pub struct SynthLm {
+    pub vocab: usize,
+    pub seq: usize,
+    /// per-token successor candidates (sparse transitions)
+    successors: Vec<Vec<u32>>,
+    seed: u64,
+}
+
+impl SynthLm {
+    pub fn new(vocab: usize, seq: usize, seed: u64) -> SynthLm {
+        let mut rng = Rng::new(seed ^ 0x5E2D_58D8_B3BC_E8EE);
+        let branch = 4; // each token has 4 likely successors
+        let successors = (0..vocab)
+            .map(|_| (0..branch).map(|_| rng.below(vocab as u64) as u32).collect())
+            .collect();
+        SynthLm { vocab, seq, successors, seed }
+    }
+
+    /// Generate sequence `index`: tokens[0..seq] plus the shifted labels.
+    pub fn sequence(&self, split: u64, index: u64) -> (Vec<i32>, Vec<i32>) {
+        let mut rng = Rng::new(
+            self.seed
+                .wrapping_mul(0xD6E8_FEB8_6659_FD93)
+                .wrapping_add(split.wrapping_mul(0xCA5A_8263_95121157))
+                .wrapping_add(index),
+        );
+        let mut toks = Vec::with_capacity(self.seq + 1);
+        let mut cur = rng.below(self.vocab as u64) as u32;
+        toks.push(cur as i32);
+        for _ in 0..self.seq {
+            // 85%: one of the likely successors (Zipf-ish weights);
+            // 15%: uniform random token.
+            cur = if rng.next_f64() < 0.85 {
+                let s = &self.successors[cur as usize];
+                let w: Vec<f64> = (0..s.len()).map(|i| 1.0 / (i + 1) as f64).collect();
+                s[rng.weighted(&w)]
+            } else {
+                rng.below(self.vocab as u64) as u32
+            };
+            toks.push(cur as i32);
+        }
+        let inputs = toks[..self.seq].to_vec();
+        let labels = toks[1..=self.seq].to_vec();
+        (inputs, labels)
+    }
+
+    pub fn batch(&self, split: u64, b: u64, batch_size: usize) -> Batch {
+        let mut x = Vec::with_capacity(batch_size * self.seq);
+        let mut labels = Vec::with_capacity(batch_size * self.seq);
+        for i in 0..batch_size as u64 {
+            let (xi, yi) = self.sequence(split, b * batch_size as u64 + i);
+            x.extend_from_slice(&xi);
+            labels.extend_from_slice(&yi);
+        }
+        Batch { x_f32: vec![], x_i32: x, labels }
+    }
+}
+
+/// A data source the training driver can pull batches from.
+pub trait DataSource: Send {
+    fn train_batch(&self, b: u64, batch_size: usize) -> Batch;
+    fn val_batch(&self, b: u64, batch_size: usize) -> Batch;
+}
+
+impl DataSource for SynthVision {
+    fn train_batch(&self, b: u64, batch_size: usize) -> Batch {
+        self.batch(0, b, batch_size)
+    }
+    fn val_batch(&self, b: u64, batch_size: usize) -> Batch {
+        self.batch(1, b, batch_size)
+    }
+}
+
+impl DataSource for SynthLm {
+    fn train_batch(&self, b: u64, batch_size: usize) -> Batch {
+        self.batch(0, b, batch_size)
+    }
+    fn val_batch(&self, b: u64, batch_size: usize) -> Batch {
+        self.batch(1, b, batch_size)
+    }
+}
+
+/// Mix of two vision domains (continuous learning §IV-F: old + new data).
+pub struct MixedVision {
+    pub old: SynthVision,
+    pub new: SynthVision,
+    /// fraction of samples drawn from the new domain
+    pub new_frac: f64,
+    pub seed: u64,
+}
+
+impl DataSource for MixedVision {
+    fn train_batch(&self, b: u64, batch_size: usize) -> Batch {
+        let mut rng = Rng::new(self.seed.wrapping_add(b.wrapping_mul(0x9E37)));
+        let mut x = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..batch_size as u64 {
+            let idx = b * batch_size as u64 + i;
+            let (xi, y) = if rng.next_f64() < self.new_frac {
+                self.new.sample(0, idx)
+            } else {
+                self.old.sample(0, idx)
+            };
+            x.extend_from_slice(&xi);
+            labels.push(y);
+        }
+        Batch { x_f32: x, x_i32: vec![], labels }
+    }
+
+    fn val_batch(&self, b: u64, batch_size: usize) -> Batch {
+        // validate on the NEW domain: that's what §IV-F measures
+        self.new.batch(1, b, batch_size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vision_deterministic() {
+        let d1 = SynthVision::new(16, 4, 0.3, 7, 0);
+        let d2 = SynthVision::new(16, 4, 0.3, 7, 0);
+        let b1 = d1.batch(0, 3, 8);
+        let b2 = d2.batch(0, 3, 8);
+        assert_eq!(b1.x_f32, b2.x_f32);
+        assert_eq!(b1.labels, b2.labels);
+    }
+
+    #[test]
+    fn vision_splits_differ() {
+        let d = SynthVision::new(16, 4, 0.3, 7, 0);
+        assert_ne!(d.batch(0, 0, 8).x_f32, d.batch(1, 0, 8).x_f32);
+    }
+
+    #[test]
+    fn vision_domains_differ() {
+        let a = SynthVision::new(16, 4, 0.0, 7, 0);
+        let b = SynthVision::new(16, 4, 0.0, 7, 1);
+        // zero noise -> samples are pure templates; domains must differ
+        assert_ne!(a.batch(0, 0, 4).x_f32, b.batch(0, 0, 4).x_f32);
+    }
+
+    #[test]
+    fn vision_labels_in_range() {
+        let d = SynthVision::new(8, 10, 0.1, 1, 0);
+        let b = d.batch(0, 0, 100);
+        assert!(b.labels.iter().all(|&y| (0..10).contains(&y)));
+        // all classes appear in a large batch
+        let mut seen = [false; 10];
+        for &y in &b.labels {
+            seen[y as usize] = true;
+        }
+        assert!(seen.iter().filter(|&&s| s).count() >= 8);
+    }
+
+    #[test]
+    fn lm_shapes_and_shift() {
+        let d = SynthLm::new(32, 8, 3);
+        let (x, y) = d.sequence(0, 0);
+        assert_eq!(x.len(), 8);
+        assert_eq!(y.len(), 8);
+        // labels are inputs shifted by one
+        assert_eq!(&x[1..], &y[..7]);
+    }
+
+    #[test]
+    fn lm_batch_layout() {
+        let d = SynthLm::new(32, 8, 3);
+        let b = d.batch(0, 1, 4);
+        assert_eq!(b.x_i32.len(), 32);
+        assert_eq!(b.labels.len(), 32);
+        assert!(b.x_i32.iter().all(|&t| (0..32).contains(&t)));
+    }
+
+    #[test]
+    fn lm_has_markov_structure() {
+        // successors of a token should be hit far more often than chance
+        let d = SynthLm::new(64, 128, 5);
+        let mut hits = 0;
+        let mut total = 0;
+        for i in 0..20 {
+            let (x, y) = d.sequence(0, i);
+            for (a, b) in x.iter().zip(&y[0..]) {
+                total += 1;
+                if d.successors[*a as usize].contains(&(*b as u32)) {
+                    hits += 1;
+                }
+            }
+        }
+        let frac = hits as f64 / total as f64;
+        assert!(frac > 0.5, "markov fraction {frac}");
+    }
+
+    #[test]
+    fn mixed_val_is_new_domain() {
+        let old = SynthVision::new(8, 3, 0.0, 1, 0);
+        let new = SynthVision::new(8, 3, 0.0, 1, 1);
+        let mix = MixedVision { old, new: new.clone(), new_frac: 0.5, seed: 2 };
+        assert_eq!(mix.val_batch(0, 4).x_f32, new.batch(1, 0, 4).x_f32);
+    }
+}

@@ -1,0 +1,132 @@
+//! Simulated heterogeneous device (DESIGN.md §3 substitution table).
+//!
+//! Every block execution *actually runs* on XLA-CPU; the capacity model
+//! then stretches its wall time by the device's capacity factor (paper
+//! eq (1): `C_i` = ratio of this device's execution time to the central
+//! node's). Time variation = slow sinusoidal drift + per-execution
+//! log-normal noise, which is what exercises the paper's periodic dynamic
+//! re-partition. A memory cap reproduces the §IV-F Raspberry-Pi OOM.
+
+use std::time::{Duration, Instant};
+
+use crate::config::DeviceConfig;
+use crate::util::rng::Rng;
+
+/// Capacity model of one device.
+pub struct SimDevice {
+    pub cfg: DeviceConfig,
+    rng: Rng,
+    start: Instant,
+}
+
+impl SimDevice {
+    pub fn new(cfg: DeviceConfig, seed: u64) -> SimDevice {
+        SimDevice { cfg, rng: Rng::new(seed ^ 0xDE71CE), start: Instant::now() }
+    }
+
+    /// Current capacity factor (>= 1.0 is slower than the central node).
+    pub fn capacity_now(&mut self) -> f64 {
+        let t = self.start.elapsed().as_secs_f64();
+        let drift = if self.cfg.drift_amp > 0.0 {
+            1.0 + self.cfg.drift_amp
+                * (2.0 * std::f64::consts::PI * t / self.cfg.drift_period_s).sin()
+        } else {
+            1.0
+        };
+        let noise = if self.cfg.noise > 0.0 {
+            (self.cfg.noise * self.rng.normal()).exp()
+        } else {
+            1.0
+        };
+        (self.cfg.capacity * drift * noise).max(0.05)
+    }
+
+    /// Run `f`, then sleep the extra time a device `capacity`× slower than
+    /// this host would have needed. Returns (result, simulated duration).
+    pub fn execute<T>(&mut self, f: impl FnOnce() -> T) -> (T, Duration) {
+        let cap = self.capacity_now();
+        let t0 = Instant::now();
+        let out = f();
+        let real = t0.elapsed();
+        let simulated = real.mul_f64(cap);
+        if simulated > real {
+            std::thread::sleep(simulated - real);
+        }
+        (out, simulated.max(real))
+    }
+
+    /// Memory-cap check: would `bytes` of state fit on this device?
+    pub fn fits_memory(&self, bytes: u64) -> bool {
+        match self.cfg.mem_cap_bytes {
+            Some(cap) => bytes <= cap,
+            None => true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_capacity_adds_no_delay() {
+        let mut d = SimDevice::new(DeviceConfig::with_capacity(1.0), 1);
+        let t0 = Instant::now();
+        let ((), dur) = d.execute(|| std::thread::sleep(Duration::from_millis(10)));
+        assert!(t0.elapsed() < Duration::from_millis(30));
+        assert!(dur >= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn slow_device_stretches_time() {
+        let mut d = SimDevice::new(DeviceConfig::with_capacity(4.0), 2);
+        let t0 = Instant::now();
+        let ((), dur) = d.execute(|| std::thread::sleep(Duration::from_millis(10)));
+        let real = t0.elapsed();
+        assert!(real >= Duration::from_millis(35), "real={real:?}");
+        assert!(dur >= Duration::from_millis(39), "dur={dur:?}");
+    }
+
+    #[test]
+    fn noise_varies_capacity() {
+        let mut cfg = DeviceConfig::with_capacity(2.0);
+        cfg.noise = 0.2;
+        let mut d = SimDevice::new(cfg, 3);
+        let caps: Vec<f64> = (0..20).map(|_| d.capacity_now()).collect();
+        let all_same = caps.windows(2).all(|w| (w[0] - w[1]).abs() < 1e-12);
+        assert!(!all_same);
+        // centered near 2.0
+        let mean = caps.iter().sum::<f64>() / caps.len() as f64;
+        assert!(mean > 1.2 && mean < 3.2, "mean={mean}");
+    }
+
+    #[test]
+    fn drift_is_periodic_and_bounded() {
+        let mut cfg = DeviceConfig::with_capacity(1.0);
+        cfg.drift_amp = 0.5;
+        cfg.drift_period_s = 0.05;
+        let mut d = SimDevice::new(cfg, 4);
+        let mut lo = f64::MAX;
+        let mut hi = f64::MIN;
+        for _ in 0..50 {
+            let c = d.capacity_now();
+            lo = lo.min(c);
+            hi = hi.max(c);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(hi > 1.2, "hi={hi}");
+        assert!(lo < 0.8, "lo={lo}");
+        assert!(lo >= 0.05);
+    }
+
+    #[test]
+    fn memory_cap() {
+        let mut cfg = DeviceConfig::default();
+        cfg.mem_cap_bytes = Some(1000);
+        let d = SimDevice::new(cfg, 5);
+        assert!(d.fits_memory(1000));
+        assert!(!d.fits_memory(1001));
+        let d2 = SimDevice::new(DeviceConfig::default(), 6);
+        assert!(d2.fits_memory(u64::MAX));
+    }
+}

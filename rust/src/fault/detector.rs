@@ -1,0 +1,77 @@
+//! Gradient-timeout fault detector (paper §III-F).
+//!
+//! "After sending the intermediate result to the next worker in forwarding
+//! a batch, a timer is set by only the central node. If the central node
+//! does not receive the backward gradients of that batch when the timer
+//! stops, the fault tolerance handler is triggered."
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Timer table: batch id -> deadline.
+#[derive(Debug, Default)]
+pub struct FaultDetector {
+    deadlines: BTreeMap<u64, Instant>,
+    timeout: Duration,
+}
+
+impl FaultDetector {
+    pub fn new(timeout: Duration) -> FaultDetector {
+        FaultDetector { deadlines: BTreeMap::new(), timeout }
+    }
+
+    /// Arm the timer for a batch whose activations were just sent out.
+    pub fn arm(&mut self, batch: u64) {
+        self.deadlines.insert(batch, Instant::now() + self.timeout);
+    }
+
+    /// Gradient for `batch` arrived — disarm.
+    pub fn disarm(&mut self, batch: u64) {
+        self.deadlines.remove(&batch);
+    }
+
+    /// The earliest overdue batch, if any.
+    pub fn overdue(&self) -> Option<u64> {
+        let now = Instant::now();
+        self.deadlines
+            .iter()
+            .find(|(_, &dl)| now >= dl)
+            .map(|(&b, _)| b)
+    }
+
+    /// Clear everything (fault handling resets all in-flight state).
+    pub fn clear(&mut self) {
+        self.deadlines.clear();
+    }
+
+    pub fn armed(&self) -> usize {
+        self.deadlines.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arms_and_disarms() {
+        let mut d = FaultDetector::new(Duration::from_secs(60));
+        d.arm(3);
+        d.arm(4);
+        assert_eq!(d.armed(), 2);
+        assert_eq!(d.overdue(), None);
+        d.disarm(3);
+        assert_eq!(d.armed(), 1);
+    }
+
+    #[test]
+    fn detects_overdue_earliest_first() {
+        let mut d = FaultDetector::new(Duration::from_millis(5));
+        d.arm(7);
+        d.arm(5);
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(d.overdue(), Some(5));
+        d.clear();
+        assert_eq!(d.overdue(), None);
+    }
+}

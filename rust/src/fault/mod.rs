@@ -1,0 +1,14 @@
+//! Fault tolerance (paper §III-F): failure detection via gradient
+//! timeouts at the central node, worker probing, worker-list renumbering,
+//! and the Algorithm-1 weight-redistribution planner.
+//!
+//! The protocol driver lives in [`crate::coordinator`]; this module holds
+//! the pure logic plus the [`detector::FaultDetector`] timer table.
+
+pub mod detector;
+pub mod redistribute;
+
+pub use detector::FaultDetector;
+pub use redistribute::{
+    plan_redistribution, renumber, renumber_worker_list, source_of_block, RedistPlan, Source,
+};

@@ -1,0 +1,258 @@
+//! Weight redistribution — the paper's **Algorithm 1** (§III-D/§III-F).
+//!
+//! Given the new partition, what each device currently holds, and which
+//! old stages failed, compute where every needed block must be fetched
+//! from: locally, from the (renumbered) peer that owns it, from this
+//! device's own chain-replica store, or from the central node's global
+//! backup.
+//!
+//! This is a pure function — the protocol (FetchWeights / Weights /
+//! FetchDone / Commit) lives in the pipeline; the property tests in
+//! `rust/tests/redistribution.rs` drive this logic through thousands of
+//! random partitions and failure sets.
+
+use std::collections::BTreeMap;
+
+use crate::partition::Partition;
+
+/// Where a needed block can be fetched from (stage indices in the NEW list).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Source {
+    /// A stage in the new worker list (0 = central node).
+    Stage(usize),
+    /// This device already stores it as a chain replica of a failed peer.
+    LocalBackup,
+    /// Only the central node's global backup can serve it.
+    CentralBackup,
+}
+
+/// The fetch plan for one device.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RedistPlan {
+    /// Blocks of the new range already held locally (paper: `L_local`).
+    pub local: Vec<usize>,
+    /// target -> blocks to fetch from it (paper: `M_need`).
+    pub need: BTreeMap<Source, Vec<usize>>,
+}
+
+impl RedistPlan {
+    /// Blocks that require a network fetch.
+    pub fn network_fetches(&self) -> usize {
+        self.need
+            .iter()
+            .filter(|(s, _)| !matches!(s, Source::LocalBackup))
+            .map(|(_, v)| v.len())
+            .sum()
+    }
+}
+
+/// New index of an old stage after dropping `failed` stages
+/// (paper: decrement indices greater than the failed index).
+pub fn renumber(old_stage: usize, failed: &[usize]) -> Option<usize> {
+    if failed.contains(&old_stage) {
+        return None;
+    }
+    Some(old_stage - failed.iter().filter(|&&f| f < old_stage).count())
+}
+
+/// Update the worker list after failures: drop failed stages, preserving
+/// order (the paper's single- and multi-failure renumbering rules both
+/// reduce to this).
+pub fn renumber_worker_list(worker_list: &[usize], failed: &[usize]) -> Vec<usize> {
+    worker_list
+        .iter()
+        .enumerate()
+        .filter(|(s, _)| !failed.contains(s))
+        .map(|(_, &d)| d)
+        .collect()
+}
+
+fn owner_of(l: usize, p_cur: &Partition) -> usize {
+    p_cur
+        .iter()
+        .position(|&(lo, hi)| (lo..=hi).contains(&l))
+        .expect("block not covered by old partition")
+}
+
+/// Which source holds block `l` after `failed` old stages died
+/// (paper Algorithm 1 lines 9-15, generalized to multiple failures).
+///
+/// * Owner alive -> its renumbered stage.
+/// * Owner failed, its old next stage alive -> that stage (chain replica).
+/// * Owner failed and was the LAST old stage -> central (stage 0), which
+///   receives the last worker's chain backup (paper §III-E).
+/// * Otherwise (owner and replica holder both dead) -> global backup.
+pub fn source_of_block(l: usize, p_cur: &Partition, failed: &[usize]) -> Source {
+    let owner = owner_of(l, p_cur);
+    if let Some(new_idx) = renumber(owner, failed) {
+        return Source::Stage(new_idx);
+    }
+    let n_old = p_cur.len();
+    if owner + 1 < n_old {
+        if let Some(new_idx) = renumber(owner + 1, failed) {
+            return Source::Stage(new_idx);
+        }
+        return Source::CentralBackup;
+    }
+    Source::Stage(0)
+}
+
+/// Algorithm 1, from the point of view of one device.
+///
+/// * `held` — blocks actually in this device's parameter store right now
+///   (its old range normally; empty for a freshly-restarted device).
+/// * `i_new` — this device's stage in the new list.
+/// * `i_cur_old` — this device's stage in the old list (None if it was
+///   not part of the old pipeline).
+pub fn plan_redistribution(
+    p_new: &Partition,
+    p_cur: &Partition,
+    failed: &[usize],
+    held: &[usize],
+    i_new: usize,
+    i_cur_old: Option<usize>,
+) -> RedistPlan {
+    let (start_new, end_new) = p_new[i_new];
+    let n_old = p_cur.len();
+    let mut plan = RedistPlan::default();
+    for l in start_new..=end_new {
+        if held.contains(&l) {
+            plan.local.push(l);
+            continue;
+        }
+        let mut src = source_of_block(l, p_cur, failed);
+        if src == Source::Stage(i_new) {
+            // The computed source is myself. Two cases:
+            let owner_old = owner_of(l, p_cur);
+            if Some(owner_old) == i_cur_old {
+                // (a) I owned it but lost my state (restart): fetch from MY
+                //     chain-replica holder — old next stage, or central if
+                //     I was the last stage.
+                src = if owner_old + 1 < n_old {
+                    match renumber(owner_old + 1, failed) {
+                        Some(s) if s != i_new => Source::Stage(s),
+                        _ => Source::CentralBackup,
+                    }
+                } else {
+                    Source::Stage(0)
+                };
+            } else {
+                // (b) the owner failed and I am its chain-replica holder:
+                //     the weights are already in my backup store.
+                src = Source::LocalBackup;
+            }
+        }
+        plan.need.entry(src).or_default().push(l);
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renumber_shifts_above_failed() {
+        // 4 stages, stage 1 fails
+        assert_eq!(renumber(0, &[1]), Some(0));
+        assert_eq!(renumber(1, &[1]), None);
+        assert_eq!(renumber(2, &[1]), Some(1));
+        assert_eq!(renumber(3, &[1]), Some(2));
+        // two failures
+        assert_eq!(renumber(3, &[0, 2]), Some(1));
+    }
+
+    #[test]
+    fn renumber_worker_list_drops_failed_stages() {
+        assert_eq!(renumber_worker_list(&[10, 11, 12, 13], &[1]), vec![10, 12, 13]);
+        assert_eq!(renumber_worker_list(&[10, 11, 12, 13], &[1, 3]), vec![10, 12]);
+        assert_eq!(renumber_worker_list(&[10, 11], &[]), vec![10, 11]);
+    }
+
+    #[test]
+    fn alive_owner_with_index_correction() {
+        // paper's first rule: I_target > I_fail => I_target - 1
+        let p_cur = vec![(0, 3), (4, 7), (8, 11)];
+        assert_eq!(source_of_block(9, &p_cur, &[1]), Source::Stage(1)); // old 2 -> new 1
+        assert_eq!(source_of_block(0, &p_cur, &[1]), Source::Stage(0)); // below failed: unchanged
+    }
+
+    #[test]
+    fn failed_owner_chain_replica_on_next() {
+        // paper's rule: I_target == I_fail (not last) => index unchanged,
+        // because old stage I_fail+1 (the replica holder) renumbers to I_fail.
+        let p_cur = vec![(0, 3), (4, 7), (8, 11)];
+        assert_eq!(source_of_block(5, &p_cur, &[1]), Source::Stage(1));
+    }
+
+    #[test]
+    fn failed_last_stage_backup_at_central() {
+        // paper's special case: last stage fails => fetch from stage 0
+        let p_cur = vec![(0, 3), (4, 7), (8, 11)];
+        assert_eq!(source_of_block(9, &p_cur, &[2]), Source::Stage(0));
+    }
+
+    #[test]
+    fn two_adjacent_failures_fall_back_to_global_backup() {
+        let p_cur = vec![(0, 2), (3, 5), (6, 8), (9, 11)];
+        // stage 1 and its replica holder stage 2 both die
+        assert_eq!(source_of_block(4, &p_cur, &[1, 2]), Source::CentralBackup);
+        // stage 2's own blocks: replica on stage 3 (alive) -> new index 1
+        assert_eq!(source_of_block(7, &p_cur, &[1, 2]), Source::Stage(1));
+    }
+
+    #[test]
+    fn replica_holder_serves_failed_peer_blocks_from_local_backup() {
+        // 4 stages, stage 1 dies; I am old stage 2 (new stage 1) and I hold
+        // stage 1's chain replica: its blocks must come from my LOCAL store.
+        let p_cur = vec![(0, 2), (3, 5), (6, 8), (9, 11)];
+        let p_new = vec![(0, 3), (4, 7), (8, 11)];
+        let plan =
+            plan_redistribution(&p_new, &p_cur, &[1], &[6, 7, 8], 1, Some(2));
+        assert_eq!(plan.local, vec![6, 7]);
+        assert_eq!(plan.need.get(&Source::LocalBackup), Some(&vec![4, 5]));
+        assert_eq!(plan.network_fetches(), 0);
+    }
+
+    #[test]
+    fn restarted_device_fetches_own_range_from_replica_holder() {
+        // paper case 2: device restarts with empty state, partition unchanged
+        let p = vec![(0, 3), (4, 7), (8, 11)];
+        let plan = plan_redistribution(&p, &p, &[], &[], 1, Some(1));
+        assert!(plan.local.is_empty());
+        // its own blocks must come from its chain-replica holder: stage 2
+        assert_eq!(plan.need.get(&Source::Stage(2)), Some(&vec![4, 5, 6, 7]));
+    }
+
+    #[test]
+    fn restarted_last_stage_fetches_from_central() {
+        let p = vec![(0, 3), (4, 7), (8, 11)];
+        let plan = plan_redistribution(&p, &p, &[], &[], 2, Some(2));
+        assert_eq!(plan.need.get(&Source::Stage(0)), Some(&vec![8, 9, 10, 11]));
+    }
+
+    #[test]
+    fn dynamic_repartition_no_failure() {
+        // pure dynamic re-partition: fetch from current owners, no correction
+        let p_cur = vec![(0, 5), (6, 8), (9, 11)];
+        let p_new = vec![(0, 3), (4, 9), (10, 11)];
+        let plan =
+            plan_redistribution(&p_new, &p_cur, &[], &[6, 7, 8], 1, Some(1));
+        assert_eq!(plan.local, vec![6, 7, 8]);
+        assert_eq!(plan.need.get(&Source::Stage(0)), Some(&vec![4, 5]));
+        assert_eq!(plan.need.get(&Source::Stage(2)), Some(&vec![9]));
+    }
+
+    #[test]
+    fn central_gains_blocks_after_last_stage_failure() {
+        // last stage dies; central (new stage 0) absorbs some of its blocks,
+        // which it serves from the chain backup it received (Stage(0) = self
+        // -> but owner_old(2) != i_cur_old(0) -> LocalBackup).
+        let p_cur = vec![(0, 3), (4, 7), (8, 11)];
+        let p_new = vec![(0, 5), (6, 11)];
+        let plan =
+            plan_redistribution(&p_new, &p_cur, &[2], &[0, 1, 2, 3], 0, Some(0));
+        assert_eq!(plan.local, vec![0, 1, 2, 3]);
+        assert_eq!(plan.need.get(&Source::Stage(1)), Some(&vec![4, 5]));
+    }
+}

@@ -1,0 +1,40 @@
+//! FTPipeHD: fault-tolerant pipeline-parallel distributed training for
+//! heterogeneous edge devices — Rust coordinator (Layer 3).
+//!
+//! See DESIGN.md for the architecture. Module map:
+//!
+//! - [`util`] — offline substrates: JSON, RNG, logging, property tests, bench kit
+//! - [`config`] — run configuration
+//! - [`manifest`] — model manifest loader (`artifacts/<model>/manifest.json`)
+//! - [`runtime`] — PJRT engine: load HLO text, compile, execute
+//! - [`model`] — parameter store, SGD+momentum, weight versioning/aggregation
+//! - [`data`] — synthetic datasets (vision mixture, Zipf-Markov LM)
+//! - [`net`] — messages, codec, `Transport` (SimNet + TCP)
+//! - [`device`] — simulated heterogeneous devices (capacity, memory, faults)
+//! - [`profile`] — block profiler + capacity estimation (paper eqs 1–3)
+//! - [`partition`] — heterogeneity-aware DP partitioner (paper eqs 4–7)
+//! - [`pipeline`] — async 1F1B engine (stashing, vertical sync, aggregation)
+//! - [`replication`] — chain + global weight replication
+//! - [`fault`] — failure detection, Algorithm 1 redistribution, recovery
+//! - [`coordinator`] — central/worker orchestration
+//! - [`baselines`] — PipeDream, ResPipe, single-device, sync-pipeline
+//! - [`metrics`] — run records and writers
+
+pub mod util;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod device;
+pub mod model;
+pub mod net;
+pub mod partition;
+pub mod profile;
+
+pub mod checkpoint;
+pub mod coordinator;
+pub mod fault;
+pub mod manifest;
+pub mod metrics;
+pub mod pipeline;
+pub mod replication;
+pub mod runtime;

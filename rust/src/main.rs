@@ -1,0 +1,291 @@
+//! FTPipeHD command-line entrypoint.
+//!
+//! ```text
+//! ftpipehd train --model artifacts/edgenet --devices 3 --capacities 1,2.5,10 \
+//!                --epochs 1 --batches 50 [--engine ftpipehd|pipedream|respipe|single|sync]
+//! ftpipehd profile --model artifacts/edgenet           per-block T^0_j table
+//! ftpipehd partition --model ... --capacities 1,1,10   show DP cuts vs uniform
+//! ftpipehd check-artifacts <dir>                       AOT bridge smoke test
+//! ftpipehd central|worker --addrs a:p,b:p --rank N     multi-process TCP mode
+//! ```
+
+use anyhow::{bail, Context, Result};
+use ftpipehd::cli::Args;
+use ftpipehd::config::{DeviceConfig, Engine, RunConfig};
+use ftpipehd::coordinator;
+use ftpipehd::manifest::{Dtype, Manifest};
+use ftpipehd::partition::{homogeneous_partition, optimal_partition, CostModel};
+use ftpipehd::profile::profile_model;
+use ftpipehd::runtime::{self, Engine as XlaEngine, HostTensor};
+
+fn main() -> Result<()> {
+    ftpipehd::util::logging::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args),
+        Some("profile") => cmd_profile(&args),
+        Some("partition") => cmd_partition(&args),
+        Some("check-artifacts") => cmd_check(&args),
+        Some("worker") => cmd_tcp(&args, false),
+        Some("central") => cmd_tcp(&args, true),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_help();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "ftpipehd — fault-tolerant pipeline-parallel training for heterogeneous edge devices\n\
+         \n\
+         USAGE:\n\
+         \x20 ftpipehd train --model <dir> [--devices N] [--capacities 1,2.5,10]\n\
+         \x20          [--bandwidth-mbps 12.5] [--epochs E] [--batches B] [--eval-batches K]\n\
+         \x20          [--engine ftpipehd|pipedream|respipe|single|sync] [--lr 0.05]\n\
+         \x20          [--kill-device I --kill-at-batch B [--restarts]] [--seed S] [--verbose]\n\
+         \x20          [--out record.json]\n\
+         \x20 ftpipehd profile --model <dir> [--reps 10]\n\
+         \x20 ftpipehd partition --model <dir> --capacities 1,1,10 [--bandwidth-mbps 12.5]\n\
+         \x20 ftpipehd check-artifacts <dir>\n\
+         \x20 ftpipehd central --model <dir> --addrs 127.0.0.1:7000,127.0.0.1:7001 [...]\n\
+         \x20 ftpipehd worker  --addrs ... --rank N --model <dir>\n\
+         \n\
+         env: FTPIPEHD_LOG=error|warn|info|debug|trace"
+    );
+}
+
+/// Build a RunConfig from CLI flags.
+fn config_from_args(args: &Args) -> Result<RunConfig> {
+    let mut cfg = RunConfig::default();
+    if let Some(m) = args.get("model") {
+        cfg.model_dir = m.to_string();
+    }
+    let caps = args
+        .get_f64_list("capacities")?
+        .unwrap_or_else(|| vec![1.0; args.get_usize("devices", 3).unwrap_or(3)]);
+    cfg.devices = caps.iter().map(|&c| DeviceConfig::with_capacity(c)).collect();
+    if let Some(noise) = args.get("noise") {
+        let v: f64 = noise.parse().context("--noise")?;
+        for d in cfg.devices.iter_mut().skip(1) {
+            d.noise = v;
+        }
+    }
+    if let Some(bw) = args.get_f64_list("bandwidth-mbps")? {
+        cfg.bandwidth_bps = bw.iter().map(|x| x * 1e6).collect();
+    }
+    cfg.lr = args.get_f64("lr", cfg.lr as f64)? as f32;
+    cfg.epochs = args.get_usize("epochs", 1)?;
+    cfg.batches_per_epoch = args.get_usize("batches", 50)?;
+    cfg.eval_batches = args.get_usize("eval-batches", 5)?;
+    cfg.seed = args.get_u64("seed", 0)?;
+    cfg.verbose = args.get_bool("verbose");
+    cfg.fault_timeout_ms = args.get_u64("fault-timeout-ms", 15_000)?;
+    cfg.engine = match args.get("engine").unwrap_or("ftpipehd") {
+        "ftpipehd" => Engine::FtPipeHd,
+        "pipedream" => Engine::PipeDream,
+        "respipe" => Engine::ResPipe,
+        "single" => Engine::SingleDevice,
+        "sync" => Engine::SyncPipeline,
+        other => bail!("unknown engine {other:?}"),
+    };
+    if cfg.engine == Engine::SingleDevice {
+        cfg.devices.truncate(1);
+    }
+    if let Some(kill) = args.get("kill-device") {
+        cfg.fault = Some(ftpipehd::config::FaultPlan {
+            kill_device: kill.parse().context("--kill-device")?,
+            at_batch: args.get_u64("kill-at-batch", 20)?,
+            restarts: args.get_bool("restarts"),
+        });
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let record = coordinator::run_sim(&cfg)?;
+    println!("=== run summary ===");
+    println!("batches completed : {}", record.batches.len());
+    if let Some(l) = record.final_loss() {
+        println!("final loss        : {l:.4}");
+    }
+    for e in &record.epochs {
+        println!(
+            "epoch {}: train_acc={:.3} val_loss={:.4} val_acc={:.3}",
+            e.epoch, e.train_acc, e.val_loss, e.val_acc
+        );
+    }
+    println!("total time        : {:.2}s", record.total_s);
+    println!("network bytes     : {}", record.net_bytes);
+    if let Some(r) = record.recovery_overhead_s {
+        println!("recovery overhead : {r:.3}s");
+    }
+    for ev in &record.events {
+        println!("  [{:>8.2}s] {}", ev.at_s, ev.kind);
+    }
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, record.to_json().to_pretty())?;
+        println!("record written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let dir = args.get("model").unwrap_or("artifacts/edgenet");
+    let reps = args.get_usize("reps", 10)?;
+    let manifest = Manifest::load(dir)?;
+    let engine = XlaEngine::cpu()?;
+    let blocks = runtime::load_all_blocks(&engine, &manifest)?;
+    let prof = profile_model(&manifest, &blocks, reps)?;
+    println!("block | name        | T0 fwd+bwd (ms) | out KiB | params KiB");
+    for (i, b) in manifest.blocks.iter().enumerate() {
+        println!(
+            "{:>5} | {:<11} | {:>15.2} | {:>7.1} | {:>9.1}",
+            i,
+            b.name,
+            prof.t0_ms[i],
+            b.out_bytes as f64 / 1024.0,
+            b.param_bytes as f64 / 1024.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    let dir = args.get("model").unwrap_or("artifacts/edgenet");
+    let caps = args
+        .get_f64_list("capacities")?
+        .unwrap_or_else(|| vec![1.0, 1.0, 1.0]);
+    let bw = args.get_f64("bandwidth-mbps", 12.5)? * 1e6;
+    let manifest = Manifest::load(dir)?;
+    let engine = XlaEngine::cpu()?;
+    let blocks = runtime::load_all_blocks(&engine, &manifest)?;
+    let prof = profile_model(&manifest, &blocks, 5)?;
+    let cm = CostModel {
+        t0_ms: prof.t0_ms,
+        out_bytes: prof.out_bytes,
+        bandwidth_bps: vec![bw; caps.len() - 1],
+        capacities: caps,
+    };
+    let (opt, opt_cost) = optimal_partition(&cm);
+    let (blind, blind_cost) = homogeneous_partition(&cm);
+    println!("capacity-aware partition : {opt:?}  bottleneck={opt_cost:.2}ms");
+    println!("capacity-blind partition : {blind:?}  bottleneck={blind_cost:.2}ms");
+    println!("speedup from dynamic partitioning: {:.2}x", blind_cost / opt_cost);
+    Ok(())
+}
+
+/// Load every artifact of a compiled model, run one forward/backward chain
+/// with the shipped initial weights, and print the resulting loss. This is
+/// the fastest way to validate the python -> rust AOT bridge end to end.
+fn cmd_check(args: &Args) -> Result<()> {
+    let dir = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .or_else(|| args.get("model"))
+        .unwrap_or("artifacts/edgenet-tiny");
+    let m = Manifest::load(dir)?;
+    println!(
+        "model={} blocks={} params={} batch={}",
+        m.model,
+        m.n_blocks(),
+        m.param_count,
+        m.batch_size
+    );
+    let engine = XlaEngine::cpu()?;
+    let blocks = runtime::load_all_blocks(&engine, &m)?;
+    println!("compiled {} blocks", blocks.len());
+
+    let params: Vec<Vec<Vec<f32>>> = (0..m.n_blocks())
+        .map(|i| m.load_init_params(i))
+        .collect::<Result<_>>()?;
+    let in_elems: usize = m.input_shape.iter().product();
+    let input = match m.input_dtype {
+        Dtype::F32 => {
+            HostTensor::F32((0..in_elems).map(|i| ((i % 17) as f32) * 0.1 - 0.8).collect())
+        }
+        Dtype::I32 => HostTensor::I32((0..in_elems).map(|i| (i % 7) as i32).collect()),
+    };
+    let lab_elems: usize = m.label_shape.iter().product();
+    let labels = HostTensor::I32((0..lab_elems).map(|i| (i % 3) as i32).collect());
+
+    let mut acts: Vec<HostTensor> = vec![input];
+    for (i, b) in blocks.iter().enumerate().take(m.n_blocks() - 1) {
+        let y = b.forward(&params[i], acts.last().unwrap())?;
+        acts.push(HostTensor::F32(y));
+    }
+    let head = blocks.last().unwrap();
+    let x = acts.last().unwrap().as_f32()?.to_vec();
+    let out = head.head_step(&params[m.n_blocks() - 1], &x, &labels, &m.label_shape)?;
+    println!("head step: loss={:.4} ncorrect={}", out.loss, out.ncorrect);
+    let mut gy = out.grad_input;
+    for i in (0..m.n_blocks() - 1).rev() {
+        let (grads, gx) = blocks[i].backward(&params[i], &acts[i], &gy)?;
+        let gnorm: f32 = grads.iter().flatten().map(|g| g * g).sum::<f32>().sqrt();
+        println!("block {i} bwd: grad-norm={gnorm:.4}");
+        match gx {
+            Some(g) => gy = g,
+            None => break,
+        }
+    }
+    println!("check-artifacts OK");
+    Ok(())
+}
+
+/// Multi-process TCP deployment (real distributed mode).
+fn cmd_tcp(args: &Args, is_central: bool) -> Result<()> {
+    use ftpipehd::net::tcp::TcpEndpoint;
+
+    let addrs: Vec<String> = args
+        .get("addrs")
+        .context("--addrs a:port,b:port,... required")?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let rank = if is_central { 0 } else { args.get_usize("rank", 1)? };
+    let model_dir = args.get("model").unwrap_or("artifacts/edgenet-tiny");
+    let manifest = std::sync::Arc::new(Manifest::load(model_dir)?);
+    let ep = TcpEndpoint::bind(rank, addrs.clone())?;
+
+    if is_central {
+        bail!(
+            "TCP central mode: drive with the library API (see \
+             rust/tests/tcp_pipeline.rs for the two-process harness); the \
+             sim coordinator covers the full protocol in-process"
+        );
+    }
+    println!("worker rank {rank} listening on {}", addrs[rank]);
+    let engine = XlaEngine::cpu()?;
+    let blocks = runtime::load_all_blocks(&engine, &manifest)?;
+    let sim = ftpipehd::device::SimDevice::new(DeviceConfig::default(), rank as u64);
+    let w = ftpipehd::pipeline::StageWorker::new(rank, manifest, blocks, sim, None);
+    ftpipehd::pipeline::run_worker(w, Box::new(TcpWrap(ep)), None)?;
+    Ok(())
+}
+
+/// Adapter: TcpEndpoint is used behind the same trait object as SimEndpoint.
+struct TcpWrap(ftpipehd::net::tcp::TcpEndpoint);
+
+impl ftpipehd::net::Transport for TcpWrap {
+    fn my_id(&self) -> usize {
+        self.0.my_id()
+    }
+    fn send(&self, to: usize, msg: ftpipehd::net::Message) -> Result<()> {
+        self.0.send(to, msg)
+    }
+    fn recv_timeout(&self, timeout: std::time::Duration) -> Option<(usize, ftpipehd::net::Message)> {
+        self.0.recv_timeout(timeout)
+    }
+    fn n_devices(&self) -> usize {
+        self.0.n_devices()
+    }
+}

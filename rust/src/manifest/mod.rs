@@ -1,0 +1,232 @@
+//! Loader for `artifacts/<model>/manifest.json` produced by `python/compile/aot.py`.
+//!
+//! The manifest is the single source of truth the Rust side has about the
+//! model: block inventory, parameter shapes + initial-weight files, per
+//! block FLOPs (used by the partitioner as the cost model seed) and
+//! activation sizes `D_j` (used for the communication term, paper eq (6)).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// Element type of an activation buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// One parameter tensor of a block.
+#[derive(Debug, Clone)]
+pub struct ParamInfo {
+    pub shape: Vec<usize>,
+    pub size: usize,
+    /// Path to the f32-LE initial weights, resolved against the model dir.
+    pub init_path: PathBuf,
+}
+
+/// Whether a block is a plain chain block or the fused head.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockKind {
+    Block,
+    Head,
+}
+
+/// One partitionable unit (paper: "layer").
+#[derive(Debug, Clone)]
+pub struct BlockInfo {
+    pub index: usize,
+    pub name: String,
+    pub kind: BlockKind,
+    /// fwd/bwd for `Block`, step/eval for `Head` — resolved paths.
+    pub fwd: Option<PathBuf>,
+    pub bwd: Option<PathBuf>,
+    pub step: Option<PathBuf>,
+    pub eval: Option<PathBuf>,
+    pub params: Vec<ParamInfo>,
+    pub in_shape: Vec<usize>,
+    pub in_dtype: Dtype,
+    pub out_shape: Vec<usize>,
+    pub flops_fwd: u64,
+    pub flops_bwd: u64,
+    /// Output activation bytes — the `D_j` of paper eq (6).
+    pub out_bytes: u64,
+    pub param_bytes: u64,
+    /// Whether the bwd artifact emits an input gradient (false for block 0).
+    pub has_gx: bool,
+}
+
+/// Parsed manifest for one compiled model.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: String,
+    pub dir: PathBuf,
+    pub batch_size: usize,
+    pub input_shape: Vec<usize>,
+    pub input_dtype: Dtype,
+    pub label_shape: Vec<usize>,
+    pub label_dtype: Dtype,
+    /// Number of predictions per batch (batch, or batch*seq for LM).
+    pub acc_denom: usize,
+    pub param_count: u64,
+    pub blocks: Vec<BlockInfo>,
+    /// From manifest `meta`: number of classes (vision models).
+    pub n_classes: Option<usize>,
+    /// From manifest `meta`: vocabulary size (LM models).
+    pub vocab: Option<usize>,
+    /// From manifest `meta`: sequence length (LM models).
+    pub seq: Option<usize>,
+}
+
+fn shape_of(v: &Value) -> Result<Vec<usize>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("shape is not an array"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow!("shape item not usize")))
+        .collect()
+}
+
+fn u64_of(v: &Value, key: &str) -> Result<u64> {
+    Ok(v.req(key)?
+        .as_f64()
+        .ok_or_else(|| anyhow!("{key} not a number"))? as u64)
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let raw = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let v = json::parse(&raw).map_err(|e| anyhow!("{e}"))?;
+
+        let input = v.req("input")?;
+        let labels = v.req("labels")?;
+        let mut blocks = Vec::new();
+        for b in v.req("blocks")?.as_arr().ok_or_else(|| anyhow!("blocks not array"))? {
+            let kind = match b.req("kind")?.as_str() {
+                Some("block") => BlockKind::Block,
+                Some("head") => BlockKind::Head,
+                other => bail!("bad block kind {other:?}"),
+            };
+            let path_of = |key: &str| -> Option<PathBuf> {
+                b.get(key).and_then(|x| x.as_str()).map(|s| dir.join(s))
+            };
+            let mut params = Vec::new();
+            for p in b.req("params")?.as_arr().ok_or_else(|| anyhow!("params not array"))? {
+                params.push(ParamInfo {
+                    shape: shape_of(p.req("shape")?)?,
+                    size: p.req("size")?.as_usize().ok_or_else(|| anyhow!("size"))?,
+                    init_path: dir.join(
+                        p.req("init")?.as_str().ok_or_else(|| anyhow!("init"))?,
+                    ),
+                });
+            }
+            blocks.push(BlockInfo {
+                index: b.req("index")?.as_usize().ok_or_else(|| anyhow!("index"))?,
+                name: b.req("name")?.as_str().unwrap_or("").to_string(),
+                kind,
+                fwd: path_of("fwd"),
+                bwd: path_of("bwd"),
+                step: path_of("step"),
+                eval: path_of("eval"),
+                params,
+                in_shape: shape_of(b.req("in_shape")?)?,
+                in_dtype: Dtype::from_str(b.req("in_dtype")?.as_str().unwrap_or("f32"))?,
+                out_shape: shape_of(b.req("out_shape")?)?,
+                flops_fwd: u64_of(b, "flops_fwd")?,
+                flops_bwd: u64_of(b, "flops_bwd")?,
+                out_bytes: u64_of(b, "out_bytes")?,
+                param_bytes: u64_of(b, "param_bytes")?,
+                has_gx: b.req("has_gx")?.as_bool().unwrap_or(true),
+            });
+        }
+        if blocks.is_empty() {
+            bail!("manifest has no blocks");
+        }
+        // Invariants the rest of the system relies on.
+        for (i, b) in blocks.iter().enumerate() {
+            if b.index != i {
+                bail!("block index mismatch: {} at position {i}", b.index);
+            }
+            let is_last = i + 1 == blocks.len();
+            if is_last != (b.kind == BlockKind::Head) {
+                bail!("head must be exactly the last block");
+            }
+        }
+
+        let meta = v.get("meta");
+        let meta_usize =
+            |k: &str| meta.and_then(|m| m.get(k)).and_then(|x| x.as_usize());
+
+        Ok(Manifest {
+            n_classes: meta_usize("n_classes"),
+            vocab: meta_usize("vocab"),
+            seq: meta_usize("seq"),
+            model: v.req("model")?.as_str().unwrap_or("").to_string(),
+            dir,
+            batch_size: v.req("batch_size")?.as_usize().ok_or_else(|| anyhow!("batch_size"))?,
+            input_shape: shape_of(input.req("shape")?)?,
+            input_dtype: Dtype::from_str(input.req("dtype")?.as_str().unwrap_or("f32"))?,
+            label_shape: shape_of(labels.req("shape")?)?,
+            label_dtype: Dtype::from_str(labels.req("dtype")?.as_str().unwrap_or("i32"))?,
+            acc_denom: v.req("acc_denom")?.as_usize().ok_or_else(|| anyhow!("acc_denom"))?,
+            param_count: u64_of(&v, "param_count")?,
+            blocks,
+        })
+    }
+
+    /// Number of partitionable blocks (including the head).
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn head(&self) -> &BlockInfo {
+        self.blocks.last().unwrap()
+    }
+
+    /// Load the initial f32 weights of block `i` from the init/*.bin files.
+    pub fn load_init_params(&self, i: usize) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::new();
+        for p in &self.blocks[i].params {
+            let bytes = std::fs::read(&p.init_path)
+                .with_context(|| format!("reading {}", p.init_path.display()))?;
+            if bytes.len() != p.size * 4 {
+                bail!(
+                    "init file {} has {} bytes, expected {}",
+                    p.init_path.display(),
+                    bytes.len(),
+                    p.size * 4
+                );
+            }
+            let mut v = vec![0f32; p.size];
+            for (j, c) in bytes.chunks_exact(4).enumerate() {
+                v[j] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    /// Total parameter bytes in blocks [lo, hi] inclusive — used by the
+    /// memory-cap emulation and replication cost accounting.
+    pub fn param_bytes_range(&self, lo: usize, hi: usize) -> u64 {
+        self.blocks[lo..=hi].iter().map(|b| b.param_bytes).sum()
+    }
+}

@@ -1,0 +1,203 @@
+//! Run records: per-batch / per-epoch metrics, event log, JSON/CSV export.
+
+use std::time::Instant;
+
+use crate::util::json::Value;
+
+#[derive(Debug, Clone)]
+pub struct BatchRecord {
+    pub batch: u64,
+    pub loss: f32,
+    pub train_acc: f32,
+    /// completion-to-completion interval ("time of training one batch",
+    /// what the paper's Fig. 6 plots).
+    pub wall_ms: f64,
+    /// seconds since run start at completion.
+    pub at_s: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct EpochRecord {
+    pub epoch: u64,
+    pub train_acc: f32,
+    pub val_loss: f32,
+    pub val_acc: f32,
+    pub at_s: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub at_s: f64,
+    pub kind: String,
+}
+
+/// Everything a training run produces (benches consume this directly).
+#[derive(Debug, Default)]
+pub struct RunRecord {
+    pub batches: Vec<BatchRecord>,
+    pub epochs: Vec<EpochRecord>,
+    pub events: Vec<Event>,
+    pub partitions: Vec<(u64, Vec<(usize, usize)>)>, // (batch, ranges)
+    pub total_s: f64,
+    pub net_bytes: u64,
+    /// recovery overhead in seconds, when a fault was handled (Table III)
+    pub recovery_overhead_s: Option<f64>,
+}
+
+impl RunRecord {
+    pub fn final_loss(&self) -> Option<f32> {
+        self.batches.last().map(|b| b.loss)
+    }
+
+    pub fn mean_batch_ms(&self, from: u64, to: u64) -> Option<f64> {
+        let xs: Vec<f64> = self
+            .batches
+            .iter()
+            .filter(|b| b.batch >= from && b.batch <= to)
+            .map(|b| b.wall_ms)
+            .collect();
+        (!xs.is_empty()).then(|| xs.iter().sum::<f64>() / xs.len() as f64)
+    }
+
+    pub fn event(&mut self, clock: &RunClock, kind: impl Into<String>) {
+        self.events.push(Event { at_s: clock.now_s(), kind: kind.into() });
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("total_s", Value::Num(self.total_s)),
+            ("net_bytes", Value::Num(self.net_bytes as f64)),
+            (
+                "recovery_overhead_s",
+                self.recovery_overhead_s.map(Value::Num).unwrap_or(Value::Null),
+            ),
+            (
+                "batches",
+                Value::Arr(
+                    self.batches
+                        .iter()
+                        .map(|b| {
+                            Value::obj(vec![
+                                ("batch", Value::Num(b.batch as f64)),
+                                ("loss", Value::Num(b.loss as f64)),
+                                ("train_acc", Value::Num(b.train_acc as f64)),
+                                ("wall_ms", Value::Num(b.wall_ms)),
+                                ("at_s", Value::Num(b.at_s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "epochs",
+                Value::Arr(
+                    self.epochs
+                        .iter()
+                        .map(|e| {
+                            Value::obj(vec![
+                                ("epoch", Value::Num(e.epoch as f64)),
+                                ("train_acc", Value::Num(e.train_acc as f64)),
+                                ("val_loss", Value::Num(e.val_loss as f64)),
+                                ("val_acc", Value::Num(e.val_acc as f64)),
+                                ("at_s", Value::Num(e.at_s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "events",
+                Value::Arr(
+                    self.events
+                        .iter()
+                        .map(|e| {
+                            Value::obj(vec![
+                                ("at_s", Value::Num(e.at_s)),
+                                ("kind", Value::Str(e.kind.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn batches_csv(&self) -> String {
+        let mut s = String::from("batch,loss,train_acc,wall_ms,at_s\n");
+        for b in &self.batches {
+            s.push_str(&format!(
+                "{},{},{},{:.3},{:.3}\n",
+                b.batch, b.loss, b.train_acc, b.wall_ms, b.at_s
+            ));
+        }
+        s
+    }
+}
+
+/// Run-relative wall clock.
+#[derive(Debug, Clone)]
+pub struct RunClock(Instant);
+
+impl RunClock {
+    pub fn start() -> RunClock {
+        RunClock(Instant::now())
+    }
+
+    pub fn now_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for RunClock {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_batch_window() {
+        let mut r = RunRecord::default();
+        for b in 0..10u64 {
+            r.batches.push(BatchRecord {
+                batch: b,
+                loss: 1.0,
+                train_acc: 0.5,
+                wall_ms: b as f64,
+                at_s: b as f64,
+            });
+        }
+        assert_eq!(r.mean_batch_ms(2, 4), Some(3.0));
+        assert_eq!(r.mean_batch_ms(100, 200), None);
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let mut r = RunRecord::default();
+        r.total_s = 1.5;
+        r.batches.push(BatchRecord { batch: 0, loss: 2.0, train_acc: 0.1, wall_ms: 3.0, at_s: 0.1 });
+        r.events.push(Event { at_s: 0.5, kind: "fault".into() });
+        let text = r.to_json().to_pretty();
+        let v = crate::util::json::parse(&text).unwrap();
+        assert_eq!(v.get("total_s").unwrap().as_f64(), Some(1.5));
+        assert_eq!(
+            v.get("events").unwrap().as_arr().unwrap()[0]
+                .get("kind")
+                .unwrap()
+                .as_str(),
+            Some("fault")
+        );
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut r = RunRecord::default();
+        r.batches.push(BatchRecord { batch: 1, loss: 0.5, train_acc: 0.9, wall_ms: 2.5, at_s: 1.0 });
+        let csv = r.batches_csv();
+        assert!(csv.starts_with("batch,loss"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+}

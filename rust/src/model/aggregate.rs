@@ -1,0 +1,77 @@
+//! Weight aggregation (paper §III-C, Fig. 2).
+//!
+//! At stage `i` of an `n`-stage asynchronous pipeline, `n - i` weight
+//! versions are live concurrently (each in-flight batch trains "its own"
+//! weights through stashing). The paper's observation: these can be viewed
+//! as `n - i` independent trainings forked from a common ancestor, so
+//! periodically averaging them recovers the accuracy lost to staleness.
+//! The aggregation interval must be a multiple of `n - i`.
+
+use super::params::StageParams;
+
+/// Average `versions` (equal weights). All snapshots must cover the same
+/// block set with identical tensor shapes. Returns None if empty.
+pub fn aggregate_versions(versions: &[&StageParams]) -> Option<StageParams> {
+    let first = *versions.first()?;
+    let mut acc = first.clone();
+    let k = versions.len() as f32;
+    for other in &versions[1..] {
+        for (idx, bp) in &mut acc.blocks {
+            let o = other
+                .blocks
+                .get(idx)
+                .expect("aggregation: snapshots must cover the same blocks");
+            bp.axpy(1.0, o);
+        }
+    }
+    for bp in acc.blocks.values_mut() {
+        bp.scale(1.0 / k);
+    }
+    Some(acc)
+}
+
+/// Number of concurrent weight versions at stage `i` of `n` (paper: n-i).
+pub fn concurrent_versions(stage: usize, n_stages: usize) -> usize {
+    (n_stages - stage).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::BlockParams;
+
+    fn params(vals: &[f32]) -> StageParams {
+        let mut sp = StageParams::default();
+        sp.blocks.insert(0, BlockParams(vec![vals.to_vec()]));
+        sp
+    }
+
+    #[test]
+    fn average_of_three() {
+        let a = params(&[1.0, 10.0]);
+        let b = params(&[2.0, 20.0]);
+        let c = params(&[3.0, 30.0]);
+        let avg = aggregate_versions(&[&a, &b, &c]).unwrap();
+        assert_eq!(avg.blocks[&0].0[0], vec![2.0, 20.0]);
+    }
+
+    #[test]
+    fn single_version_is_identity() {
+        let a = params(&[4.0]);
+        let avg = aggregate_versions(&[&a]).unwrap();
+        assert_eq!(avg, a);
+    }
+
+    #[test]
+    fn empty_is_none() {
+        assert!(aggregate_versions(&[]).is_none());
+    }
+
+    #[test]
+    fn concurrent_version_counts() {
+        // 3-stage pipeline (paper Fig. 2): stage 0 sees 3 versions, stage 2 sees 1.
+        assert_eq!(concurrent_versions(0, 3), 3);
+        assert_eq!(concurrent_versions(1, 3), 2);
+        assert_eq!(concurrent_versions(2, 3), 1);
+    }
+}

@@ -1,0 +1,13 @@
+//! Model state owned by the Rust side: parameter buffers, the SGD
+//! optimizer (paper §IV-B: momentum 0.9, weight decay 4e-5), the
+//! weight-stashing store for 1F1B, and weight aggregation (paper §III-C).
+
+pub mod aggregate;
+pub mod params;
+pub mod sgd;
+pub mod stash;
+
+pub use aggregate::aggregate_versions;
+pub use params::{BlockParams, StageParams};
+pub use sgd::{Sgd, SgdConfig};
+pub use stash::VersionStash;

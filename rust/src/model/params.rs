@@ -1,0 +1,137 @@
+//! Parameter buffers. Parameters live as plain `Vec<f32>` per tensor —
+//! the exact representation that is fed to XLA, stashed per weight
+//! version, replicated over the network, and redistributed on failure.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::manifest::Manifest;
+
+/// All tensors of one block, in manifest order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockParams(pub Vec<Vec<f32>>);
+
+impl BlockParams {
+    pub fn num_elements(&self) -> usize {
+        self.0.iter().map(|t| t.len()).sum()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.num_elements() * 4
+    }
+
+    /// Elementwise in-place axpy over all tensors: self += alpha * other.
+    pub fn axpy(&mut self, alpha: f32, other: &BlockParams) {
+        for (a, b) in self.0.iter_mut().zip(&other.0) {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += alpha * y;
+            }
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for t in &mut self.0 {
+            for x in t.iter_mut() {
+                *x *= alpha;
+            }
+        }
+    }
+
+    pub fn zeros_like(&self) -> BlockParams {
+        BlockParams(self.0.iter().map(|t| vec![0.0; t.len()]).collect())
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.0
+            .iter()
+            .flat_map(|t| t.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+/// The parameters a device currently owns: a map block-index -> tensors.
+/// Kept as a BTreeMap so iteration order is deterministic and stage
+/// reassignment (dynamic re-partition / recovery) is a cheap map edit.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StageParams {
+    pub blocks: BTreeMap<usize, BlockParams>,
+}
+
+impl StageParams {
+    /// Load the initial weights for blocks [lo, hi] from the manifest.
+    pub fn load_range(manifest: &Manifest, lo: usize, hi: usize) -> Result<StageParams> {
+        if hi >= manifest.n_blocks() || lo > hi {
+            bail!("bad block range [{lo}, {hi}]");
+        }
+        let mut blocks = BTreeMap::new();
+        for i in lo..=hi {
+            blocks.insert(i, BlockParams(manifest.load_init_params(i)?));
+        }
+        Ok(StageParams { blocks })
+    }
+
+    pub fn get(&self, block: usize) -> Option<&BlockParams> {
+        self.blocks.get(&block)
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.blocks.values().map(|b| b.byte_len()).sum()
+    }
+
+    pub fn block_indices(&self) -> Vec<usize> {
+        self.blocks.keys().copied().collect()
+    }
+
+    /// Keep only blocks in [lo, hi]; returns the evicted blocks.
+    pub fn retain_range(&mut self, lo: usize, hi: usize) -> BTreeMap<usize, BlockParams> {
+        let mut evicted = BTreeMap::new();
+        let keys: Vec<usize> = self.blocks.keys().copied().collect();
+        for k in keys {
+            if k < lo || k > hi {
+                if let Some(v) = self.blocks.remove(&k) {
+                    evicted.insert(k, v);
+                }
+            }
+        }
+        evicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bp(vals: &[&[f32]]) -> BlockParams {
+        BlockParams(vals.iter().map(|v| v.to_vec()).collect())
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = bp(&[&[1.0, 2.0], &[3.0]]);
+        let b = bp(&[&[10.0, 20.0], &[30.0]]);
+        a.axpy(0.5, &b);
+        assert_eq!(a, bp(&[&[6.0, 12.0], &[18.0]]));
+        a.scale(2.0);
+        assert_eq!(a, bp(&[&[12.0, 24.0], &[36.0]]));
+    }
+
+    #[test]
+    fn l2_norm() {
+        let a = bp(&[&[3.0], &[4.0]]);
+        assert!((a.l2_norm() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn retain_range_evicts() {
+        let mut sp = StageParams::default();
+        for i in 0..5 {
+            sp.blocks.insert(i, bp(&[&[i as f32]]));
+        }
+        let evicted = sp.retain_range(1, 3);
+        assert_eq!(sp.block_indices(), vec![1, 2, 3]);
+        assert_eq!(evicted.keys().copied().collect::<Vec<_>>(), vec![0, 4]);
+    }
+}

@@ -1,0 +1,129 @@
+//! SGD with momentum + weight decay — the paper's optimizer (§IV-B).
+//!
+//! Runs in Rust over the flat `Vec<f32>` buffers (keeping all weight
+//! movement — stashing, aggregation, replication — on plain host memory).
+//! Update rule (PyTorch convention, which the paper's implementation used):
+//!
+//! ```text
+//! g  <- grad + weight_decay * w
+//! v  <- momentum * v + g
+//! w  <- w - lr * v
+//! ```
+
+use std::collections::BTreeMap;
+
+use super::params::{BlockParams, StageParams};
+
+#[derive(Debug, Clone, Copy)]
+pub struct SgdConfig {
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for SgdConfig {
+    fn default() -> Self {
+        SgdConfig { lr: 0.01, momentum: 0.9, weight_decay: 4e-5 }
+    }
+}
+
+/// Per-stage optimizer state (velocity buffers per owned block).
+#[derive(Debug, Clone, Default)]
+pub struct Sgd {
+    pub cfg: SgdConfig,
+    velocity: BTreeMap<usize, BlockParams>,
+}
+
+impl Sgd {
+    pub fn new(cfg: SgdConfig) -> Sgd {
+        Sgd { cfg, velocity: BTreeMap::new() }
+    }
+
+    /// Apply one update to block `idx` of `params` given `grads`.
+    pub fn step_block(&mut self, idx: usize, params: &mut BlockParams, grads: &[Vec<f32>]) {
+        debug_assert_eq!(params.0.len(), grads.len());
+        let v = self
+            .velocity
+            .entry(idx)
+            .or_insert_with(|| params.zeros_like());
+        let (lr, mu, wd) = (self.cfg.lr, self.cfg.momentum, self.cfg.weight_decay);
+        for ((w, g), vel) in params.0.iter_mut().zip(grads).zip(v.0.iter_mut()) {
+            for ((wi, gi), vi) in w.iter_mut().zip(g).zip(vel.iter_mut()) {
+                let grad = gi + wd * *wi;
+                *vi = mu * *vi + grad;
+                *wi -= lr * *vi;
+            }
+        }
+    }
+
+    /// Apply updates to every owned block present in `grads`.
+    pub fn step(&mut self, params: &mut StageParams, grads: &BTreeMap<usize, Vec<Vec<f32>>>) {
+        for (idx, g) in grads {
+            if let Some(p) = params.blocks.get_mut(idx) {
+                self.step_block(*idx, p, g);
+            }
+        }
+    }
+
+    /// Drop velocity for blocks no longer owned (after re-partition) and
+    /// keep it for retained ones — momentum survives repartition only for
+    /// blocks that stayed local, matching a weights-only transfer.
+    pub fn retain_blocks(&mut self, keep: &[usize]) {
+        let keep: std::collections::BTreeSet<usize> = keep.iter().copied().collect();
+        self.velocity.retain(|k, _| keep.contains(k));
+    }
+
+    pub fn set_lr(&mut self, lr: f32) {
+        self.cfg.lr = lr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quad_loss_grad(w: &[f32]) -> Vec<f32> {
+        // loss = 0.5 * ||w||^2  ->  grad = w
+        w.to_vec()
+    }
+
+    #[test]
+    fn plain_sgd_descends_quadratic() {
+        let mut sgd = Sgd::new(SgdConfig { lr: 0.1, momentum: 0.0, weight_decay: 0.0 });
+        let mut p = BlockParams(vec![vec![1.0, -2.0, 3.0]]);
+        for _ in 0..100 {
+            let g = vec![quad_loss_grad(&p.0[0])];
+            sgd.step_block(0, &mut p, &g);
+        }
+        assert!(p.l2_norm() < 1e-3, "norm={}", p.l2_norm());
+    }
+
+    #[test]
+    fn momentum_matches_manual_two_steps() {
+        let mut sgd = Sgd::new(SgdConfig { lr: 0.1, momentum: 0.9, weight_decay: 0.0 });
+        let mut p = BlockParams(vec![vec![1.0]]);
+        sgd.step_block(0, &mut p, &[vec![1.0]]); // v=1, w=1-0.1=0.9
+        assert!((p.0[0][0] - 0.9).abs() < 1e-6);
+        sgd.step_block(0, &mut p, &[vec![1.0]]); // v=1.9, w=0.9-0.19=0.71
+        assert!((p.0[0][0] - 0.71).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weight_decay_pulls_to_zero() {
+        let mut sgd = Sgd::new(SgdConfig { lr: 0.1, momentum: 0.0, weight_decay: 0.5 });
+        let mut p = BlockParams(vec![vec![2.0]]);
+        sgd.step_block(0, &mut p, &[vec![0.0]]); // g = 0 + 0.5*2 = 1; w = 2 - 0.1
+        assert!((p.0[0][0] - 1.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn retain_blocks_drops_velocity() {
+        let mut sgd = Sgd::new(SgdConfig::default());
+        let mut p = BlockParams(vec![vec![1.0]]);
+        sgd.step_block(3, &mut p, &[vec![1.0]]);
+        sgd.step_block(4, &mut p, &[vec![1.0]]);
+        sgd.retain_blocks(&[4]);
+        assert!(sgd.velocity.contains_key(&4));
+        assert!(!sgd.velocity.contains_key(&3));
+    }
+}

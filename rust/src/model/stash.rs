@@ -1,0 +1,164 @@
+//! Weight stashing (PipeDream, adopted by the paper §III-C).
+//!
+//! Under asynchronous 1F1B a stage forwards batch `b` with some weight
+//! version `v`, but by the time `b`'s gradient returns the weights have
+//! advanced. Weight stashing keeps the version used at forward time so the
+//! backward pass of the same batch runs against identical weights.
+//!
+//! The stash also doubles as the version ring used by **weight
+//! aggregation**: the last `n - i` versions at stage `i` are the "n-i
+//! independent concurrent trainings" the paper averages (Fig. 2).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::params::StageParams;
+
+/// Versioned snapshots of a stage's parameters.
+#[derive(Debug, Clone, Default)]
+pub struct VersionStash {
+    /// batch id -> weight version used at its forward pass.
+    by_batch: BTreeMap<u64, u64>,
+    /// version -> snapshot (kept while any in-flight batch references it,
+    /// plus a ring of recent versions for aggregation).
+    snapshots: BTreeMap<u64, StageParams>,
+    /// recency ring of versions (newest last).
+    ring: VecDeque<u64>,
+    /// how many recent versions to keep for aggregation.
+    keep_recent: usize,
+}
+
+impl VersionStash {
+    pub fn new(keep_recent: usize) -> VersionStash {
+        VersionStash { keep_recent: keep_recent.max(1), ..Default::default() }
+    }
+
+    /// Record that `batch` was forwarded with `version`, snapshotting the
+    /// current params if this version has no snapshot yet.
+    pub fn on_forward(&mut self, batch: u64, version: u64, current: &StageParams) {
+        self.by_batch.insert(batch, version);
+        self.snapshots.entry(version).or_insert_with(|| current.clone());
+        if self.ring.back() != Some(&version) {
+            self.ring.push_back(version);
+        }
+        self.gc();
+    }
+
+    /// The weights to use for `batch`'s backward pass (stashed version).
+    pub fn params_for_backward(&self, batch: u64) -> Option<&StageParams> {
+        let v = self.by_batch.get(&batch)?;
+        self.snapshots.get(v)
+    }
+
+    pub fn version_of(&self, batch: u64) -> Option<u64> {
+        self.by_batch.get(&batch).copied()
+    }
+
+    /// Mark `batch` done (its backward completed); drops the reference.
+    pub fn on_backward_done(&mut self, batch: u64) {
+        self.by_batch.remove(&batch);
+        self.gc();
+    }
+
+    /// The most recent `k` distinct snapshot versions (oldest first).
+    pub fn recent_versions(&self, k: usize) -> Vec<u64> {
+        let n = self.ring.len();
+        self.ring.iter().skip(n.saturating_sub(k)).copied().collect()
+    }
+
+    pub fn snapshot(&self, version: u64) -> Option<&StageParams> {
+        self.snapshots.get(&version)
+    }
+
+    /// In-flight batches (forwarded, not yet backwarded).
+    pub fn in_flight(&self) -> usize {
+        self.by_batch.len()
+    }
+
+    /// Clear all in-flight references (used when the fault handler discards
+    /// batches after `committed_id`, paper §III-F "reset the training state").
+    pub fn discard_after(&mut self, committed: i64) {
+        self.by_batch.retain(|&b, _| (b as i64) <= committed);
+        self.gc();
+    }
+
+    pub fn clear(&mut self) {
+        self.by_batch.clear();
+        self.snapshots.clear();
+        self.ring.clear();
+    }
+
+    fn gc(&mut self) {
+        // Keep: versions referenced by in-flight batches + `keep_recent` ring.
+        let live: std::collections::BTreeSet<u64> = self
+            .by_batch
+            .values()
+            .copied()
+            .chain(self.recent_versions(self.keep_recent))
+            .collect();
+        self.snapshots.retain(|v, _| live.contains(v));
+        while self.ring.len() > self.keep_recent.max(8) {
+            self.ring.pop_front();
+        }
+    }
+
+    pub fn snapshot_count(&self) -> usize {
+        self.snapshots.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::BlockParams;
+
+    fn params(v: f32) -> StageParams {
+        let mut sp = StageParams::default();
+        sp.blocks.insert(0, BlockParams(vec![vec![v]]));
+        sp
+    }
+
+    #[test]
+    fn backward_sees_forward_version() {
+        let mut st = VersionStash::new(2);
+        st.on_forward(0, 0, &params(1.0));
+        // weights advance to version 1 before batch 0's backward
+        st.on_forward(1, 1, &params(2.0));
+        let p = st.params_for_backward(0).unwrap();
+        assert_eq!(p.blocks[&0].0[0][0], 1.0);
+        let p = st.params_for_backward(1).unwrap();
+        assert_eq!(p.blocks[&0].0[0][0], 2.0);
+    }
+
+    #[test]
+    fn gc_drops_unreferenced_old_versions() {
+        let mut st = VersionStash::new(2);
+        for v in 0..10u64 {
+            st.on_forward(v, v, &params(v as f32));
+            st.on_backward_done(v);
+        }
+        // only the keep_recent ring survives
+        assert!(st.snapshot_count() <= 2, "kept {}", st.snapshot_count());
+        assert_eq!(st.recent_versions(2), vec![8, 9]);
+    }
+
+    #[test]
+    fn in_flight_counts() {
+        let mut st = VersionStash::new(2);
+        st.on_forward(0, 0, &params(0.0));
+        st.on_forward(1, 0, &params(0.0));
+        assert_eq!(st.in_flight(), 2);
+        st.on_backward_done(0);
+        assert_eq!(st.in_flight(), 1);
+    }
+
+    #[test]
+    fn discard_after_clears_tail() {
+        let mut st = VersionStash::new(4);
+        for b in 0..5u64 {
+            st.on_forward(b, b, &params(b as f32));
+        }
+        st.discard_after(1);
+        assert_eq!(st.in_flight(), 2); // batches 0 and 1
+        assert!(st.params_for_backward(3).is_none());
+    }
+}

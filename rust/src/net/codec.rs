@@ -1,0 +1,585 @@
+//! Length-prefixed binary codec for [`Message`] (serde/bincode are not
+//! available offline). Little-endian, tag byte per variant, `u32` lengths.
+//! Frame layout used by the TCP transport:
+//!
+//! ```text
+//! [u32 frame_len][u8 version][u8 tag][payload...]
+//! ```
+//!
+//! Round-trip safety is property-tested below.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::message::{DeviceId, ExecReport, Message, Payload, ReplicaKind, TrainInit, WireBlock};
+
+pub const CODEC_VERSION: u8 = 1;
+
+// ---------- primitive writers ----------
+
+struct W(Vec<u8>);
+
+impl W {
+    fn u8(&mut self, x: u8) {
+        self.0.push(x);
+    }
+    fn u32(&mut self, x: u32) {
+        self.0.extend_from_slice(&x.to_le_bytes());
+    }
+    fn u64(&mut self, x: u64) {
+        self.0.extend_from_slice(&x.to_le_bytes());
+    }
+    fn i64(&mut self, x: i64) {
+        self.0.extend_from_slice(&x.to_le_bytes());
+    }
+    fn f32(&mut self, x: f32) {
+        self.0.extend_from_slice(&x.to_le_bytes());
+    }
+    fn f64(&mut self, x: f64) {
+        self.0.extend_from_slice(&x.to_le_bytes());
+    }
+    fn usize(&mut self, x: usize) {
+        self.u64(x as u64);
+    }
+    fn bool(&mut self, x: bool) {
+        self.u8(u8::from(x));
+    }
+    fn f32s(&mut self, xs: &[f32]) {
+        self.u32(xs.len() as u32);
+        for &x in xs {
+            self.f32(x);
+        }
+    }
+    fn i32s(&mut self, xs: &[i32]) {
+        self.u32(xs.len() as u32);
+        for &x in xs {
+            self.0.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn bytes(&mut self, xs: &[u8]) {
+        self.u32(xs.len() as u32);
+        self.0.extend_from_slice(xs);
+    }
+    fn blocks(&mut self, blocks: &[WireBlock]) {
+        self.u32(blocks.len() as u32);
+        for (idx, tensors) in blocks {
+            self.usize(*idx);
+            self.u32(tensors.len() as u32);
+            for t in tensors {
+                self.f32s(t);
+            }
+        }
+    }
+}
+
+// ---------- primitive readers ----------
+
+struct R<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> R<'a> {
+    fn need(&self, n: usize) -> Result<()> {
+        if self.i + n > self.b.len() {
+            bail!("codec underrun at {} (+{n} > {})", self.i, self.b.len());
+        }
+        Ok(())
+    }
+    fn u8(&mut self) -> Result<u8> {
+        self.need(1)?;
+        self.i += 1;
+        Ok(self.b[self.i - 1])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        self.need(4)?;
+        let x = u32::from_le_bytes(self.b[self.i..self.i + 4].try_into().unwrap());
+        self.i += 4;
+        Ok(x)
+    }
+    fn u64(&mut self) -> Result<u64> {
+        self.need(8)?;
+        let x = u64::from_le_bytes(self.b[self.i..self.i + 8].try_into().unwrap());
+        self.i += 8;
+        Ok(x)
+    }
+    fn i64(&mut self) -> Result<i64> {
+        Ok(self.u64()? as i64)
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    fn usize(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+    fn bool(&mut self) -> Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        self.need(n * 4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f32()?);
+        }
+        Ok(v)
+    }
+    fn i32s(&mut self) -> Result<Vec<i32>> {
+        let n = self.u32()? as usize;
+        self.need(n * 4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u32()? as i32);
+        }
+        Ok(v)
+    }
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        self.need(n)?;
+        let v = self.b[self.i..self.i + n].to_vec();
+        self.i += n;
+        Ok(v)
+    }
+    fn blocks(&mut self) -> Result<Vec<WireBlock>> {
+        let n = self.u32()? as usize;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let idx = self.usize()?;
+            let nt = self.u32()? as usize;
+            let mut tensors = Vec::with_capacity(nt);
+            for _ in 0..nt {
+                tensors.push(self.f32s()?);
+            }
+            out.push((idx, tensors));
+        }
+        Ok(out)
+    }
+}
+
+// ---------- message encode/decode ----------
+
+/// Encode `(from, msg)` into a self-contained frame (without the outer
+/// u32 length prefix — the TCP transport adds that).
+pub fn encode(from: DeviceId, msg: &Message) -> Vec<u8> {
+    let mut w = W(Vec::with_capacity(64 + msg.byte_len()));
+    w.u8(CODEC_VERSION);
+    w.usize(from);
+    match msg {
+        Message::Forward { batch, version0, is_eval, data } => {
+            w.u8(0);
+            w.u64(*batch);
+            w.u64(*version0);
+            w.bool(*is_eval);
+            match data {
+                Payload::F32(v) => {
+                    w.u8(0);
+                    w.f32s(v);
+                }
+                Payload::I32(v) => {
+                    w.u8(1);
+                    w.i32s(v);
+                }
+            }
+        }
+        Message::Labels { batch, is_eval, data } => {
+            w.u8(1);
+            w.u64(*batch);
+            w.bool(*is_eval);
+            w.i32s(data);
+        }
+        Message::Backward { batch, grad, loss, ncorrect, reports } => {
+            w.u8(2);
+            w.u64(*batch);
+            w.f32s(grad);
+            w.f32(*loss);
+            w.f32(*ncorrect);
+            w.u32(reports.len() as u32);
+            for r in reports {
+                w.usize(r.device);
+                w.f64(r.avg_ms);
+                w.u32(r.batches);
+            }
+        }
+        Message::EvalResult { batch, loss, ncorrect } => {
+            w.u8(3);
+            w.u64(*batch);
+            w.f32(*loss);
+            w.f32(*ncorrect);
+        }
+        Message::Probe => w.u8(4),
+        Message::ProbeAck { id, fresh } => {
+            w.u8(5);
+            w.usize(*id);
+            w.bool(*fresh);
+        }
+        Message::InitState(t) => {
+            w.u8(6);
+            w.i64(t.committed_forward);
+            w.i64(t.committed_backward);
+            w.f32(t.lr);
+            w.f32(t.momentum);
+            w.f32(t.weight_decay);
+            w.u64(t.epochs);
+            w.u64(t.batches_per_epoch);
+            w.u32(t.ranges.len() as u32);
+            for (a, b) in &t.ranges {
+                w.usize(*a);
+                w.usize(*b);
+            }
+            w.u32(t.worker_list.len() as u32);
+            for d in &t.worker_list {
+                w.usize(*d);
+            }
+            w.u32(t.agg_k);
+            w.u64(t.chain_every);
+            w.u64(t.global_every);
+            w.u8(t.status);
+        }
+        Message::Repartition { ranges, worker_list, failed } => {
+            w.u8(7);
+            w.u32(ranges.len() as u32);
+            for (a, b) in ranges {
+                w.usize(*a);
+                w.usize(*b);
+            }
+            w.u32(worker_list.len() as u32);
+            for d in worker_list {
+                w.usize(*d);
+            }
+            w.u32(failed.len() as u32);
+            for f in failed {
+                w.usize(*f);
+            }
+        }
+        Message::FetchWeights { blocks } => {
+            w.u8(8);
+            w.u32(blocks.len() as u32);
+            for b in blocks {
+                w.usize(*b);
+            }
+        }
+        Message::Weights { blocks } => {
+            w.u8(9);
+            w.blocks(blocks);
+        }
+        Message::ReplicaPush { kind, owner_stage, owner_device, version, blocks } => {
+            w.u8(10);
+            w.u8(match kind {
+                ReplicaKind::Chain => 0,
+                ReplicaKind::Global => 1,
+            });
+            w.usize(*owner_stage);
+            w.usize(*owner_device);
+            w.u64(*version);
+            w.blocks(blocks);
+        }
+        Message::FetchDone { id } => {
+            w.u8(11);
+            w.usize(*id);
+        }
+        Message::Commit => w.u8(12),
+        Message::Reset { committed } => {
+            w.u8(13);
+            w.i64(*committed);
+        }
+        Message::BwTest { payload_bytes, data } => {
+            w.u8(14);
+            w.u32(*payload_bytes);
+            w.bytes(data);
+        }
+        Message::BwAck { payload_bytes } => {
+            w.u8(15);
+            w.u32(*payload_bytes);
+        }
+        Message::BwReport { stage, bps } => {
+            w.u8(17);
+            w.usize(*stage);
+            w.f64(*bps);
+        }
+        Message::SetLr { lr } => {
+            w.u8(18);
+            w.f32(*lr);
+        }
+        Message::Shutdown => w.u8(16),
+    }
+    w.0
+}
+
+/// Decode a frame produced by [`encode`]. Returns `(from, message)`.
+pub fn decode(frame: &[u8]) -> Result<(DeviceId, Message)> {
+    let mut r = R { b: frame, i: 0 };
+    let ver = r.u8()?;
+    if ver != CODEC_VERSION {
+        bail!("codec version {ver} != {CODEC_VERSION}");
+    }
+    let from = r.usize()?;
+    let tag = r.u8()?;
+    let msg = match tag {
+        0 => {
+            let batch = r.u64()?;
+            let version0 = r.u64()?;
+            let is_eval = r.bool()?;
+            let data = match r.u8()? {
+                0 => Payload::F32(r.f32s()?),
+                1 => Payload::I32(r.i32s()?),
+                t => bail!("bad payload tag {t}"),
+            };
+            Message::Forward { batch, version0, is_eval, data }
+        }
+        1 => Message::Labels { batch: r.u64()?, is_eval: r.bool()?, data: r.i32s()? },
+        2 => {
+            let batch = r.u64()?;
+            let grad = r.f32s()?;
+            let loss = r.f32()?;
+            let ncorrect = r.f32()?;
+            let n = r.u32()? as usize;
+            let mut reports = Vec::with_capacity(n);
+            for _ in 0..n {
+                reports.push(ExecReport { device: r.usize()?, avg_ms: r.f64()?, batches: r.u32()? });
+            }
+            Message::Backward { batch, grad, loss, ncorrect, reports }
+        }
+        3 => Message::EvalResult { batch: r.u64()?, loss: r.f32()?, ncorrect: r.f32()? },
+        4 => Message::Probe,
+        5 => Message::ProbeAck { id: r.usize()?, fresh: r.bool()? },
+        6 => {
+            let committed_forward = r.i64()?;
+            let committed_backward = r.i64()?;
+            let lr = r.f32()?;
+            let momentum = r.f32()?;
+            let weight_decay = r.f32()?;
+            let epochs = r.u64()?;
+            let batches_per_epoch = r.u64()?;
+            let nr = r.u32()? as usize;
+            let mut ranges = Vec::with_capacity(nr);
+            for _ in 0..nr {
+                ranges.push((r.usize()?, r.usize()?));
+            }
+            let nw = r.u32()? as usize;
+            let mut worker_list = Vec::with_capacity(nw);
+            for _ in 0..nw {
+                worker_list.push(r.usize()?);
+            }
+            Message::InitState(TrainInit {
+                committed_forward,
+                committed_backward,
+                lr,
+                momentum,
+                weight_decay,
+                epochs,
+                batches_per_epoch,
+                ranges,
+                worker_list,
+                agg_k: r.u32()?,
+                chain_every: r.u64()?,
+                global_every: r.u64()?,
+                status: r.u8()?,
+            })
+        }
+        7 => {
+            let nr = r.u32()? as usize;
+            let mut ranges = Vec::with_capacity(nr);
+            for _ in 0..nr {
+                ranges.push((r.usize()?, r.usize()?));
+            }
+            let nw = r.u32()? as usize;
+            let mut worker_list = Vec::with_capacity(nw);
+            for _ in 0..nw {
+                worker_list.push(r.usize()?);
+            }
+            let nf = r.u32()? as usize;
+            let mut failed = Vec::with_capacity(nf);
+            for _ in 0..nf {
+                failed.push(r.usize()?);
+            }
+            Message::Repartition { ranges, worker_list, failed }
+        }
+        8 => {
+            let n = r.u32()? as usize;
+            let mut blocks = Vec::with_capacity(n);
+            for _ in 0..n {
+                blocks.push(r.usize()?);
+            }
+            Message::FetchWeights { blocks }
+        }
+        9 => Message::Weights { blocks: r.blocks()? },
+        10 => Message::ReplicaPush {
+            kind: match r.u8()? {
+                0 => ReplicaKind::Chain,
+                1 => ReplicaKind::Global,
+                t => bail!("bad replica kind {t}"),
+            },
+            owner_stage: r.usize()?,
+            owner_device: r.usize()?,
+            version: r.u64()?,
+            blocks: r.blocks()?,
+        },
+        11 => Message::FetchDone { id: r.usize()? },
+        12 => Message::Commit,
+        13 => Message::Reset { committed: r.i64()? },
+        14 => Message::BwTest { payload_bytes: r.u32()?, data: r.bytes()? },
+        15 => Message::BwAck { payload_bytes: r.u32()? },
+        16 => Message::Shutdown,
+        17 => Message::BwReport { stage: r.usize()?, bps: r.f64()? },
+        18 => Message::SetLr { lr: r.f32()? },
+        t => return Err(anyhow!("unknown message tag {t}")),
+    };
+    if r.i != frame.len() {
+        bail!("codec: {} trailing bytes", frame.len() - r.i);
+    }
+    Ok((from, msg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, G};
+
+    fn roundtrip(from: DeviceId, msg: &Message) {
+        let frame = encode(from, msg);
+        let (f2, m2) = decode(&frame).expect("decode");
+        assert_eq!(f2, from);
+        assert_eq!(&m2, msg);
+    }
+
+    #[test]
+    fn roundtrip_all_simple_variants() {
+        roundtrip(0, &Message::Probe);
+        roundtrip(1, &Message::ProbeAck { id: 1, fresh: true });
+        roundtrip(2, &Message::Commit);
+        roundtrip(3, &Message::Shutdown);
+        roundtrip(0, &Message::Reset { committed: -1 });
+        roundtrip(0, &Message::FetchDone { id: 2 });
+        roundtrip(0, &Message::EvalResult { batch: 9, loss: 1.5, ncorrect: 3.0 });
+        roundtrip(0, &Message::BwAck { payload_bytes: 1024 });
+        roundtrip(2, &Message::BwReport { stage: 1, bps: 12.5e6 });
+        roundtrip(0, &Message::SetLr { lr: 0.00625 });
+    }
+
+    #[test]
+    fn roundtrip_forward_both_payloads() {
+        roundtrip(
+            0,
+            &Message::Forward {
+                batch: 42,
+                version0: 7,
+                is_eval: false,
+                data: Payload::F32(vec![1.0, -2.5, 3.25]),
+            },
+        );
+        roundtrip(
+            1,
+            &Message::Forward {
+                batch: 43,
+                version0: 0,
+                is_eval: true,
+                data: Payload::I32(vec![-1, 0, 5_000_000]),
+            },
+        );
+    }
+
+    #[test]
+    fn roundtrip_init_state() {
+        roundtrip(
+            0,
+            &Message::InitState(TrainInit {
+                committed_forward: -1,
+                committed_backward: -1,
+                lr: 0.05,
+                momentum: 0.9,
+                weight_decay: 4e-5,
+                epochs: 3,
+                batches_per_epoch: 100,
+                ranges: vec![(0, 3), (4, 7), (8, 11)],
+                worker_list: vec![0, 1, 2],
+                agg_k: 4,
+                chain_every: 50,
+                global_every: 100,
+                status: 0,
+            }),
+        );
+    }
+
+    #[test]
+    fn decode_rejects_bad_version_and_truncation() {
+        let mut frame = encode(0, &Message::Probe);
+        frame[0] = 99;
+        assert!(decode(&frame).is_err());
+        let frame = encode(0, &Message::Labels { batch: 1, is_eval: false, data: vec![1, 2, 3] });
+        assert!(decode(&frame[..frame.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_random_messages() {
+        check("codec-roundtrip", 200, |g: &mut G<'_>| {
+            let from = g.usize_in(0, 7);
+            let msg = random_message(g);
+            let frame = encode(from, &msg);
+            match decode(&frame) {
+                Ok((f2, m2)) if f2 == from && m2 == msg => Ok(()),
+                Ok(_) => Err("mismatch after roundtrip".into()),
+                Err(e) => Err(format!("decode failed: {e}")),
+            }
+        });
+    }
+
+    fn random_message(g: &mut G<'_>) -> Message {
+        let blocks = |g: &mut G<'_>| -> Vec<WireBlock> {
+            (0..g.usize_in(0, 3))
+                .map(|i| (i, (0..g.usize_in(1, 3)).map(|_| g.vec_f32(g.size.min(16))).collect()))
+                .collect()
+        };
+        match g.usize_in(0, 9) {
+            0 => Message::Forward {
+                batch: g.usize_in(0, 1000) as u64,
+                version0: g.usize_in(0, 50) as u64,
+                is_eval: g.bool(),
+                data: if g.bool() {
+                    Payload::F32(g.vec_f32(g.size))
+                } else {
+                    Payload::I32((0..g.size).map(|i| i as i32 - 3).collect())
+                },
+            },
+            1 => Message::Labels {
+                batch: g.usize_in(0, 99) as u64,
+                is_eval: g.bool(),
+                data: (0..g.usize_in(0, 20)).map(|i| i as i32).collect(),
+            },
+            2 => Message::Backward {
+                batch: g.usize_in(0, 99) as u64,
+                grad: g.vec_f32(g.size),
+                loss: g.f64_in(0.0, 10.0) as f32,
+                ncorrect: g.usize_in(0, 32) as f32,
+                reports: (0..g.usize_in(0, 4))
+                    .map(|d| ExecReport { device: d, avg_ms: g.f64_in(0.1, 50.0), batches: 10 })
+                    .collect(),
+            },
+            3 => Message::Repartition {
+                ranges: (0..g.usize_in(1, 4)).map(|i| (i * 2, i * 2 + 1)).collect(),
+                worker_list: (0..g.usize_in(1, 4)).collect(),
+                failed: (0..g.usize_in(0, 2)).collect(),
+            },
+            4 => Message::FetchWeights { blocks: (0..g.usize_in(0, 8)).collect() },
+            5 => Message::Weights { blocks: blocks(g) },
+            6 => Message::ReplicaPush {
+                kind: if g.bool() { ReplicaKind::Chain } else { ReplicaKind::Global },
+                owner_stage: g.usize_in(0, 4),
+                owner_device: g.usize_in(0, 4),
+                version: g.usize_in(0, 100) as u64,
+                blocks: blocks(g),
+            },
+            7 => Message::Reset { committed: g.usize_in(0, 100) as i64 - 1 },
+            8 => Message::BwTest {
+                payload_bytes: g.usize_in(0, 100) as u32,
+                data: (0..g.usize_in(0, 64)).map(|i| i as u8).collect(),
+            },
+            _ => Message::EvalResult {
+                batch: g.usize_in(0, 99) as u64,
+                loss: g.f64_in(0.0, 5.0) as f32,
+                ncorrect: 1.0,
+            },
+        }
+    }
+}

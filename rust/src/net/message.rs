@@ -1,0 +1,218 @@
+//! The message set exchanged between devices.
+//!
+//! Data plane: `Forward` activations, `Labels` (central -> last stage),
+//! `Backward` gradients (carrying loss + per-device execution reports back
+//! to the central node, as the paper piggybacks profiling data on
+//! gradients, §III-D). Control plane: everything the init, dynamic
+//! re-partition, replication, and fault-tolerance protocols need (§III-B/E/F).
+
+/// Physical device id (stable across re-partitions; stage indices map to
+/// device ids through the worker list).
+pub type DeviceId = usize;
+
+/// Activation payload entering a stage (f32 acts or i32 tokens).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Payload {
+    pub fn byte_len(&self) -> usize {
+        match self {
+            Payload::F32(v) => v.len() * 4,
+            Payload::I32(v) => v.len() * 4,
+        }
+    }
+}
+
+/// Which replication schedule produced a backup (paper §III-E).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaKind {
+    /// every worker -> its next worker (last -> central)
+    Chain,
+    /// every worker -> central
+    Global,
+}
+
+/// Execution-time report piggybacked on backward messages: average
+/// fwd+bwd wall time per batch on that device since the last report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecReport {
+    pub device: DeviceId,
+    pub avg_ms: f64,
+    pub batches: u32,
+}
+
+/// State variables sent at training initialization (paper Table I).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainInit {
+    pub committed_forward: i64,
+    pub committed_backward: i64,
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub epochs: u64,
+    pub batches_per_epoch: u64,
+    /// stage cut points: block range (start, end) inclusive per stage.
+    pub ranges: Vec<(usize, usize)>,
+    pub worker_list: Vec<DeviceId>,
+    /// aggregation interval factor k (0 = disabled)
+    pub agg_k: u32,
+    pub chain_every: u64,
+    pub global_every: u64,
+    /// 0 = normal, 1 = fault recovery in progress (paper `status`)
+    pub status: u8,
+}
+
+/// A block's tensors on the wire.
+pub type WireBlock = (usize, Vec<Vec<f32>>);
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    // ---------------- data plane ----------------
+    Forward {
+        batch: u64,
+        /// weight version at stage 0 when injected (vertical-sync tag).
+        version0: u64,
+        is_eval: bool,
+        data: Payload,
+    },
+    Labels {
+        batch: u64,
+        is_eval: bool,
+        data: Vec<i32>,
+    },
+    Backward {
+        batch: u64,
+        grad: Vec<f32>,
+        /// loss/ncorrect measured at the last stage, carried to central.
+        loss: f32,
+        ncorrect: f32,
+        /// exec reports appended by each stage as the gradient flows back.
+        reports: Vec<ExecReport>,
+    },
+    EvalResult {
+        batch: u64,
+        loss: f32,
+        ncorrect: f32,
+    },
+
+    // ---------------- control plane ----------------
+    Probe,
+    ProbeAck {
+        id: DeviceId,
+        /// true when the device restarted and lost its state (paper case 2)
+        fresh: bool,
+    },
+    InitState(TrainInit),
+    /// New partition after dynamic re-partition or fault recovery.
+    Repartition {
+        ranges: Vec<(usize, usize)>,
+        worker_list: Vec<DeviceId>,
+        /// stage indices (in the OLD list) that failed; empty for dynamic.
+        failed: Vec<usize>,
+    },
+    /// Request blocks from a peer (redistribution / restore).
+    FetchWeights {
+        blocks: Vec<usize>,
+    },
+    /// Reply to FetchWeights — blocks the peer could serve.
+    Weights {
+        blocks: Vec<WireBlock>,
+    },
+    /// Periodic weight backup (paper §III-E).
+    ReplicaPush {
+        kind: ReplicaKind,
+        owner_stage: usize,
+        owner_device: DeviceId,
+        version: u64,
+        blocks: Vec<WireBlock>,
+    },
+    /// Worker -> central: finished fetching all needed weights.
+    FetchDone {
+        id: DeviceId,
+    },
+    /// Central -> workers: everyone fetched; swap to the new sub-model.
+    Commit,
+    /// Reset committed ids; discard in-flight batches beyond `committed`.
+    Reset {
+        committed: i64,
+    },
+    /// Bandwidth measurement: central asks `Probe`-style echo with payload.
+    BwTest {
+        payload_bytes: u32,
+        data: Vec<u8>,
+    },
+    BwAck {
+        payload_bytes: u32,
+    },
+    /// Central -> workers: learning-rate change (paper §IV-C drops the
+    /// lr at epoch 130; the schedule lives in RunConfig::lr_drops).
+    SetLr {
+        lr: f32,
+    },
+    /// Worker -> central: measured bandwidth of its link to the next
+    /// worker (paper §III-B: "the i-th worker measures the bandwidth
+    /// between itself and its next worker, B_{i,i+1}").
+    BwReport {
+        stage: usize,
+        bps: f64,
+    },
+    Shutdown,
+}
+
+impl Message {
+    /// Human-readable tag (logging/tracing).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Message::Forward { .. } => "Forward",
+            Message::Labels { .. } => "Labels",
+            Message::Backward { .. } => "Backward",
+            Message::EvalResult { .. } => "EvalResult",
+            Message::Probe => "Probe",
+            Message::ProbeAck { .. } => "ProbeAck",
+            Message::InitState(_) => "InitState",
+            Message::Repartition { .. } => "Repartition",
+            Message::FetchWeights { .. } => "FetchWeights",
+            Message::Weights { .. } => "Weights",
+            Message::ReplicaPush { .. } => "ReplicaPush",
+            Message::FetchDone { .. } => "FetchDone",
+            Message::Commit => "Commit",
+            Message::Reset { .. } => "Reset",
+            Message::BwTest { .. } => "BwTest",
+            Message::BwAck { .. } => "BwAck",
+            Message::BwReport { .. } => "BwReport",
+            Message::SetLr { .. } => "SetLr",
+            Message::Shutdown => "Shutdown",
+        }
+    }
+
+    /// Approximate wire size (drives the bandwidth model; the codec's
+    /// exact framing differs by a few header bytes).
+    pub fn byte_len(&self) -> usize {
+        let blocks_len =
+            |blocks: &[WireBlock]| blocks.iter().map(|(_, ts)| 8 + ts.iter().map(|t| 4 + t.len() * 4).sum::<usize>()).sum::<usize>();
+        16 + match self {
+            Message::Forward { data, .. } => data.byte_len(),
+            Message::Labels { data, .. } => data.len() * 4,
+            Message::Backward { grad, reports, .. } => grad.len() * 4 + reports.len() * 20,
+            Message::EvalResult { .. } => 16,
+            Message::Probe | Message::ProbeAck { .. } => 8,
+            Message::InitState(ti) => 64 + ti.ranges.len() * 16 + ti.worker_list.len() * 8,
+            Message::Repartition { ranges, worker_list, failed } => {
+                ranges.len() * 16 + worker_list.len() * 8 + failed.len() * 8
+            }
+            Message::FetchWeights { blocks } => blocks.len() * 8,
+            Message::Weights { blocks } => blocks_len(blocks),
+            Message::ReplicaPush { blocks, .. } => 24 + blocks_len(blocks),
+            Message::FetchDone { .. } => 8,
+            Message::Commit | Message::Shutdown => 0,
+            Message::Reset { .. } => 8,
+            Message::BwTest { data, .. } => 4 + data.len(),
+            Message::BwAck { .. } => 4,
+            Message::BwReport { .. } => 16,
+            Message::SetLr { .. } => 4,
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! Networking: message types, binary codec, and the [`Transport`]
+//! abstraction with two implementations — [`sim::SimNet`] (bandwidth/
+//! latency-modeled in-process links with fault injection; the default
+//! testbed, DESIGN.md §3) and [`tcp`] (real sockets for multi-process
+//! deployment, the analogue of the paper's Flask HTTP transport).
+
+pub mod codec;
+pub mod message;
+pub mod sim;
+pub mod tcp;
+
+pub use message::{DeviceId, Message, Payload, ReplicaKind};
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+/// A device's endpoint into the network.
+pub trait Transport: Send {
+    fn my_id(&self) -> DeviceId;
+    /// Fire-and-forget send (delivery is asynchronous; lost if target dead).
+    fn send(&self, to: DeviceId, msg: Message) -> Result<()>;
+    /// Receive the next message, waiting up to `timeout`.
+    fn recv_timeout(&self, timeout: Duration) -> Option<(DeviceId, Message)>;
+    /// Number of devices in the network.
+    fn n_devices(&self) -> usize;
+}

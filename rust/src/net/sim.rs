@@ -1,0 +1,321 @@
+//! In-process simulated network: per-link bandwidth + latency modeling,
+//! fault injection, and byte accounting.
+//!
+//! Substitution rationale (DESIGN.md §3): the paper's devices talk over
+//! WiFi links of a few MB/s. Every message here traverses a per-link
+//! "wire" thread that sleeps `latency + bytes/bandwidth` before delivery,
+//! so transfer costs appear in wall-clock exactly where the paper's do —
+//! serialized per link, overlapped with compute on other devices. Killing
+//! a device silently drops its traffic, which is precisely what a crashed
+//! Flask worker looks like to the others (timeouts, not errors).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::message::{DeviceId, Message};
+use super::Transport;
+
+struct WireItem {
+    to: DeviceId,
+    from: DeviceId,
+    msg: Message,
+    transfer: Duration,
+}
+
+struct Inner {
+    n: usize,
+    latency: Duration,
+    /// bandwidth (bytes/s) of adjacent link i<->i+1; single entry = global.
+    bw: Vec<f64>,
+    dead: Vec<AtomicBool>,
+    inbox_tx: Vec<Sender<(DeviceId, Message)>>,
+    links: Mutex<HashMap<(DeviceId, DeviceId), Sender<WireItem>>>,
+    pub total_bytes: AtomicU64,
+    pub bytes_out: Vec<AtomicU64>,
+    /// messages delivered (for tests)
+    pub delivered: AtomicU64,
+}
+
+impl Inner {
+    /// Effective bandwidth between two (possibly non-adjacent) devices:
+    /// the min over the chain of links between them (conservative).
+    fn bandwidth(&self, a: DeviceId, b: DeviceId) -> f64 {
+        if self.bw.len() == 1 {
+            return self.bw[0];
+        }
+        let (lo, hi) = (a.min(b), a.max(b));
+        if lo == hi {
+            return f64::INFINITY;
+        }
+        self.bw[lo..hi].iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Shared handle: fault injection + accounting (held by the test driver).
+#[derive(Clone)]
+pub struct SimNet {
+    inner: Arc<Inner>,
+}
+
+/// A device's endpoint (owns the unique inbox receiver).
+pub struct SimEndpoint {
+    id: DeviceId,
+    inner: Arc<Inner>,
+    inbox_rx: Receiver<(DeviceId, Message)>,
+}
+
+impl SimNet {
+    /// Build an `n`-device network. `bw` has 1 (global) or n-1 (per-link)
+    /// entries in bytes/sec.
+    pub fn new(n: usize, bw: Vec<f64>, latency: Duration) -> (SimNet, Vec<SimEndpoint>) {
+        assert!(n >= 1);
+        assert!(bw.len() == 1 || bw.len() == n - 1, "bw entries");
+        let mut inbox_tx = Vec::with_capacity(n);
+        let mut inbox_rx = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            inbox_tx.push(tx);
+            inbox_rx.push(rx);
+        }
+        let inner = Arc::new(Inner {
+            n,
+            latency,
+            bw,
+            dead: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            inbox_tx,
+            links: Mutex::new(HashMap::new()),
+            total_bytes: AtomicU64::new(0),
+            bytes_out: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            delivered: AtomicU64::new(0),
+        });
+        let endpoints = inbox_rx
+            .into_iter()
+            .enumerate()
+            .map(|(id, rx)| SimEndpoint { id, inner: inner.clone(), inbox_rx: rx })
+            .collect();
+        (SimNet { inner }, endpoints)
+    }
+
+    /// Kill a device: its traffic (both directions) is dropped from now on.
+    pub fn kill(&self, d: DeviceId) {
+        self.inner.dead[d].store(true, Ordering::SeqCst);
+    }
+
+    /// Revive a device (paper case 2: "restarts as soon as it failed").
+    pub fn revive(&self, d: DeviceId) {
+        self.inner.dead[d].store(false, Ordering::SeqCst);
+    }
+
+    pub fn is_dead(&self, d: DeviceId) -> bool {
+        self.inner.dead[d].load(Ordering::SeqCst)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.inner.total_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn bytes_out(&self, d: DeviceId) -> u64 {
+        self.inner.bytes_out[d].load(Ordering::Relaxed)
+    }
+
+    pub fn delivered(&self) -> u64 {
+        self.inner.delivered.load(Ordering::Relaxed)
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.inner.n
+    }
+}
+
+fn send_impl(inner: &Arc<Inner>, from: DeviceId, to: DeviceId, msg: Message) -> Result<()> {
+    if inner.dead[from].load(Ordering::SeqCst) || inner.dead[to].load(Ordering::SeqCst) {
+        return Ok(()); // dropped silently — the receiver just never hears it
+    }
+    let bytes = msg.byte_len();
+    inner.total_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    inner.bytes_out[from].fetch_add(bytes as u64, Ordering::Relaxed);
+    let bwv = inner.bandwidth(from, to);
+    let transfer = if bwv.is_finite() {
+        Duration::from_secs_f64(bytes as f64 / bwv)
+    } else {
+        Duration::ZERO
+    };
+    // One wire thread per directed pair, created lazily; it serializes
+    // transfers on that link and delivers after the modeled delay.
+    let tx = {
+        let mut links = inner.links.lock().unwrap();
+        links
+            .entry((from, to))
+            .or_insert_with(|| {
+                let (tx, rx) = channel::<WireItem>();
+                let inner2 = inner.clone();
+                std::thread::Builder::new()
+                    .name(format!("wire-{from}-{to}"))
+                    .spawn(move || {
+                        while let Ok(item) = rx.recv() {
+                            std::thread::sleep(inner2.latency + item.transfer);
+                            if !inner2.dead[item.to].load(Ordering::SeqCst)
+                                && !inner2.dead[item.from].load(Ordering::SeqCst)
+                            {
+                                if inner2.inbox_tx[item.to]
+                                    .send((item.from, item.msg))
+                                    .is_ok()
+                                {
+                                    inner2.delivered.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        }
+                    })
+                    .expect("spawn wire thread");
+                tx
+            })
+            .clone()
+    };
+    let _ = tx.send(WireItem { to, from, msg, transfer });
+    Ok(())
+}
+
+impl Transport for SimEndpoint {
+    fn my_id(&self) -> DeviceId {
+        self.id
+    }
+
+    fn send(&self, to: DeviceId, msg: Message) -> Result<()> {
+        send_impl(&self.inner, self.id, to, msg)
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Option<(DeviceId, Message)> {
+        if self.inner.dead[self.id].load(Ordering::SeqCst) {
+            // a dead device hears nothing
+            std::thread::sleep(timeout.min(Duration::from_millis(20)));
+            return None;
+        }
+        self.inbox_rx.recv_timeout(timeout).ok()
+    }
+
+    fn n_devices(&self) -> usize {
+        self.inner.n
+    }
+}
+
+impl SimEndpoint {
+    /// Drain anything already queued without waiting.
+    pub fn try_drain(&self) -> Vec<(DeviceId, Message)> {
+        let mut out = Vec::new();
+        while let Ok(m) = self.inbox_rx.try_recv() {
+            out.push(m);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn probe() -> Message {
+        Message::Probe
+    }
+
+    #[test]
+    fn basic_delivery() {
+        let (_net, mut eps) = SimNet::new(2, vec![1e9], Duration::ZERO);
+        let b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        a.send(1, probe()).unwrap();
+        let (from, msg) = b.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(from, 0);
+        assert_eq!(msg, Message::Probe);
+    }
+
+    #[test]
+    fn bandwidth_delays_large_messages() {
+        // 400 KB at 4 MB/s => ~100 ms
+        let (_net, eps) = SimNet::new(2, vec![4e6], Duration::ZERO);
+        let data = vec![0f32; 100_000];
+        let t0 = Instant::now();
+        eps[0]
+            .send(1, Message::Weights { blocks: vec![(0, vec![data])] })
+            .unwrap();
+        let got = eps[1].recv_timeout(Duration::from_secs(2));
+        let dt = t0.elapsed();
+        assert!(got.is_some());
+        assert!(dt >= Duration::from_millis(80), "dt={dt:?}");
+        assert!(dt < Duration::from_millis(500), "dt={dt:?}");
+    }
+
+    #[test]
+    fn latency_applies_to_small_messages() {
+        let (_net, eps) = SimNet::new(2, vec![1e9], Duration::from_millis(30));
+        let t0 = Instant::now();
+        eps[0].send(1, probe()).unwrap();
+        assert!(eps[1].recv_timeout(Duration::from_secs(1)).is_some());
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn killed_device_drops_traffic_both_ways() {
+        let (net, eps) = SimNet::new(3, vec![1e9], Duration::ZERO);
+        net.kill(1);
+        eps[0].send(1, probe()).unwrap(); // to dead: dropped
+        eps[1].send(2, probe()).unwrap(); // from dead: dropped
+        assert!(eps[1].recv_timeout(Duration::from_millis(50)).is_none());
+        assert!(eps[2].recv_timeout(Duration::from_millis(50)).is_none());
+        // but 0 -> 2 still works
+        eps[0].send(2, probe()).unwrap();
+        assert!(eps[2].recv_timeout(Duration::from_secs(1)).is_some());
+    }
+
+    #[test]
+    fn revive_restores_delivery() {
+        let (net, eps) = SimNet::new(2, vec![1e9], Duration::ZERO);
+        net.kill(1);
+        eps[0].send(1, probe()).unwrap();
+        assert!(eps[1].recv_timeout(Duration::from_millis(50)).is_none());
+        net.revive(1);
+        eps[0].send(1, probe()).unwrap();
+        assert!(eps[1].recv_timeout(Duration::from_secs(1)).is_some());
+    }
+
+    #[test]
+    fn non_adjacent_bandwidth_is_min_of_chain() {
+        let (net, _eps) = SimNet::new(3, vec![8e6, 2e6], Duration::ZERO);
+        assert_eq!(net.inner.bandwidth(0, 2), 2e6);
+        assert_eq!(net.inner.bandwidth(0, 1), 8e6);
+        assert_eq!(net.inner.bandwidth(2, 1), 2e6);
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let (net, eps) = SimNet::new(2, vec![1e9], Duration::ZERO);
+        let msg = Message::Labels { batch: 0, is_eval: false, data: vec![0; 100] };
+        let expect = msg.byte_len() as u64;
+        eps[0].send(1, msg).unwrap();
+        let _ = eps[1].recv_timeout(Duration::from_secs(1));
+        assert_eq!(net.total_bytes(), expect);
+        assert_eq!(net.bytes_out(0), expect);
+        assert_eq!(net.bytes_out(1), 0);
+    }
+
+    #[test]
+    fn per_link_fifo_order() {
+        let (_net, eps) = SimNet::new(2, vec![1e9], Duration::ZERO);
+        for b in 0..20u64 {
+            eps[0]
+                .send(1, Message::Labels { batch: b, is_eval: false, data: vec![] })
+                .unwrap();
+        }
+        for b in 0..20u64 {
+            match eps[1].recv_timeout(Duration::from_secs(1)) {
+                Some((_, Message::Labels { batch, .. })) => assert_eq!(batch, b),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,300 @@
+//! Dynamic model partitioning — the paper's eqs (4)–(7).
+//!
+//! The partitioner is PipeDream's dynamic program extended with per-device
+//! *computing capacities* `C_k` (eq 1): the execution time of block `j` on
+//! device `k` is estimated as `T^0_j * C_k` (eq 3), where `T^0_j` is the
+//! centrally-profiled time. Stages are assigned to devices in worker-list
+//! order; the pipeline's cost is its slowest component — a stage's compute
+//! or twice a boundary's communication time `T_c = D_l / B` (eq 6, doubled
+//! for the forward activation + backward gradient crossing the same link).
+//!
+//! [`optimal_partition`] solves eq (5) exactly in O(L² · N); the
+//! brute-force oracle and a property test in `rust/tests/` confirm
+//! optimality on small instances.
+
+/// Inclusive block ranges per stage, in worker-list order.
+pub type Partition = Vec<(usize, usize)>;
+
+/// Everything the DP needs (paper eqs 1–7).
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Profiled fwd+bwd time per block on the central node, in ms (T^0_j).
+    pub t0_ms: Vec<f64>,
+    /// Output activation bytes per block (D_j).
+    pub out_bytes: Vec<u64>,
+    /// Capacity per device in worker-list order (C_k; C_0 = 1.0).
+    pub capacities: Vec<f64>,
+    /// Measured bandwidth (bytes/s) between consecutive devices (B_{k,k+1}).
+    pub bandwidth_bps: Vec<f64>,
+}
+
+impl CostModel {
+    pub fn n_blocks(&self) -> usize {
+        self.t0_ms.len()
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.capacities.len()
+    }
+
+    /// T^k(lo, hi): time of training blocks [lo, hi] on device k (eq 7 + eq 3).
+    pub fn stage_time(&self, k: usize, lo: usize, hi: usize) -> f64 {
+        self.t0_ms[lo..=hi].iter().sum::<f64>() * self.capacities[k]
+    }
+
+    /// T_c over link k -> k+1 for the output of block `l` (eq 6), in ms.
+    pub fn comm_time(&self, link: usize, l: usize) -> f64 {
+        self.out_bytes[l] as f64 / self.bandwidth_bps[link] * 1e3
+    }
+
+    /// The pipeline bottleneck cost of a full partition (the DP objective).
+    pub fn cost(&self, partition: &Partition) -> f64 {
+        let mut worst: f64 = 0.0;
+        for (k, &(lo, hi)) in partition.iter().enumerate() {
+            worst = worst.max(self.stage_time(k, lo, hi));
+            if k + 1 < partition.len() {
+                worst = worst.max(2.0 * self.comm_time(k, hi));
+            }
+        }
+        worst
+    }
+}
+
+/// Solve eq (4)/(5): minimal bottleneck partition of all blocks over all
+/// devices (each stage non-empty). Returns (partition, cost).
+pub fn optimal_partition(cm: &CostModel) -> (Partition, f64) {
+    let lcount = cm.n_blocks();
+    let n = cm.n_devices();
+    assert!(lcount >= n, "need at least one block per device ({lcount} < {n})");
+    assert_eq!(cm.out_bytes.len(), lcount);
+    assert_eq!(cm.bandwidth_bps.len(), n.saturating_sub(1));
+
+    // a[j][s] = best bottleneck for blocks 0..=j on stages 0..=s
+    // (paper's A(j, n) with n = s+1 devices).
+    const INF: f64 = f64::INFINITY;
+    let mut a = vec![vec![INF; n]; lcount];
+    let mut choice = vec![vec![usize::MAX; n]; lcount];
+
+    // base case (eq 4): one device = device 0
+    for j in 0..lcount {
+        a[j][0] = cm.stage_time(0, 0, j);
+    }
+
+    for s in 1..n {
+        // stage s runs on device s; link (s-1) -> s carries the boundary
+        for j in s..lcount {
+            // split point l: sub-pipeline covers 0..=l, stage s covers l+1..=j
+            for l in (s - 1)..j {
+                let cand = a[l][s - 1]
+                    .max(2.0 * cm.comm_time(s - 1, l))
+                    .max(cm.stage_time(s, l + 1, j));
+                if cand < a[j][s] {
+                    a[j][s] = cand;
+                    choice[j][s] = l;
+                }
+            }
+        }
+    }
+
+    // reconstruct
+    let mut parts = vec![(0usize, 0usize); n];
+    let mut j = lcount - 1;
+    for s in (1..n).rev() {
+        let l = choice[j][s];
+        parts[s] = (l + 1, j);
+        j = l;
+    }
+    parts[0] = (0, j);
+    (parts, a[lcount - 1][n - 1])
+}
+
+/// PipeDream-style initial partition: same DP but capacity-blind (all
+/// devices assumed equal — paper §III-B "average partitioning", and the
+/// §IV-D baseline's static partition).
+pub fn homogeneous_partition(cm: &CostModel) -> (Partition, f64) {
+    let blind = CostModel {
+        t0_ms: cm.t0_ms.clone(),
+        out_bytes: cm.out_bytes.clone(),
+        capacities: vec![1.0; cm.n_devices()],
+        bandwidth_bps: cm.bandwidth_bps.clone(),
+    };
+    let (p, _) = optimal_partition(&blind);
+    // report the TRUE cost of the blind partition under the real capacities
+    let cost = cm.cost(&p);
+    (p, cost)
+}
+
+/// Equal-block-count split (test helper / worst-practice baseline).
+pub fn uniform_partition(n_blocks: usize, n_stages: usize) -> Partition {
+    assert!(n_blocks >= n_stages && n_stages > 0);
+    let base = n_blocks / n_stages;
+    let extra = n_blocks % n_stages;
+    let mut parts = Vec::with_capacity(n_stages);
+    let mut lo = 0;
+    for s in 0..n_stages {
+        let len = base + usize::from(s < extra);
+        parts.push((lo, lo + len - 1));
+        lo += len;
+    }
+    parts
+}
+
+/// Exhaustive search over all cut placements (test oracle; exponential).
+pub fn bruteforce_partition(cm: &CostModel) -> (Partition, f64) {
+    let lcount = cm.n_blocks();
+    let n = cm.n_devices();
+    assert!(lcount >= n);
+    let mut best: Option<(Partition, f64)> = None;
+    // choose n-1 cut positions out of lcount-1 (cut after block c)
+    let mut cuts = vec![0usize; n - 1];
+    fn rec(
+        cm: &CostModel,
+        cuts: &mut Vec<usize>,
+        idx: usize,
+        min_next: usize,
+        best: &mut Option<(Partition, f64)>,
+    ) {
+        let lcount = cm.n_blocks();
+        let n = cm.n_devices();
+        if idx == cuts.len() {
+            let mut parts = Vec::with_capacity(n);
+            let mut lo = 0;
+            for &c in cuts.iter() {
+                parts.push((lo, c));
+                lo = c + 1;
+            }
+            parts.push((lo, lcount - 1));
+            let cost = cm.cost(&parts);
+            if best.as_ref().map(|(_, b)| cost < *b).unwrap_or(true) {
+                *best = Some((parts, cost));
+            }
+            return;
+        }
+        // cut after block c; leave room for the remaining stages
+        let remaining = cuts.len() - idx - 1;
+        for c in min_next..(lcount - 1 - remaining) {
+            cuts[idx] = c;
+            rec(cm, cuts, idx + 1, c + 1, best);
+        }
+    }
+    if n == 1 {
+        let p = vec![(0, lcount - 1)];
+        let cost = cm.cost(&p);
+        return (p, cost);
+    }
+    rec(cm, &mut cuts, 0, 0, &mut best);
+    best.unwrap()
+}
+
+/// Validate a partition covers blocks `0..n_blocks` contiguously.
+pub fn validate_partition(p: &Partition, n_blocks: usize) -> Result<(), String> {
+    if p.is_empty() {
+        return Err("empty partition".into());
+    }
+    if p[0].0 != 0 {
+        return Err(format!("first stage starts at {}", p[0].0));
+    }
+    for w in p.windows(2) {
+        if w[0].1 + 1 != w[1].0 {
+            return Err(format!("gap between {:?} and {:?}", w[0], w[1]));
+        }
+    }
+    for &(lo, hi) in p {
+        if lo > hi {
+            return Err(format!("empty stage ({lo}, {hi})"));
+        }
+    }
+    if p.last().unwrap().1 != n_blocks - 1 {
+        return Err(format!("last stage ends at {}", p.last().unwrap().1));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cm(t0: Vec<f64>, caps: Vec<f64>, bw_mbps: f64) -> CostModel {
+        let n = t0.len();
+        CostModel {
+            out_bytes: vec![100_000; n],
+            t0_ms: t0,
+            bandwidth_bps: vec![bw_mbps * 1e6; caps.len() - 1],
+            capacities: caps,
+        }
+    }
+
+    #[test]
+    fn homogeneous_splits_evenly() {
+        let m = cm(vec![10.0; 9], vec![1.0, 1.0, 1.0], 1000.0);
+        let (p, cost) = optimal_partition(&m);
+        assert_eq!(p, vec![(0, 2), (3, 5), (6, 8)]);
+        assert!((cost - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slow_device_gets_fewer_blocks() {
+        // device 2 is 10x slower: it should receive far fewer blocks
+        let m = cm(vec![10.0; 10], vec![1.0, 1.0, 10.0], 1000.0);
+        let (p, _) = optimal_partition(&m);
+        validate_partition(&p, 10).unwrap();
+        let slow_blocks = p[2].1 - p[2].0 + 1;
+        assert_eq!(slow_blocks, 1, "partition {p:?}");
+        // and the capacity-blind partition is much worse
+        let (_, blind_cost) = homogeneous_partition(&m);
+        let (_, opt_cost) = optimal_partition(&m);
+        assert!(blind_cost > 2.0 * opt_cost, "blind {blind_cost} opt {opt_cost}");
+    }
+
+    #[test]
+    fn comm_bound_forces_cut_at_small_activation() {
+        // block 1 has a tiny output; with a slow link the DP should cut there
+        let mut m = cm(vec![10.0, 10.0, 10.0, 10.0], vec![1.0, 1.0], 1000.0);
+        m.out_bytes = vec![4_000_000, 100, 4_000_000, 4_000_000];
+        m.bandwidth_bps = vec![1e6]; // 1 MB/s: 4MB transfer = 4000ms each way
+        let (p, _) = optimal_partition(&m);
+        assert_eq!(p[0].1, 1, "should cut after block 1: {p:?}");
+    }
+
+    #[test]
+    fn dp_matches_bruteforce_on_examples() {
+        for (t0, caps) in [
+            (vec![5.0, 20.0, 3.0, 8.0, 14.0, 2.0], vec![1.0, 2.0]),
+            (vec![5.0, 20.0, 3.0, 8.0, 14.0, 2.0, 9.0], vec![1.0, 0.5, 3.0]),
+            (vec![1.0, 1.0, 50.0, 1.0, 1.0], vec![1.0, 1.0, 1.0]),
+        ] {
+            let m = cm(t0, caps, 10.0);
+            let (pd, cd) = optimal_partition(&m);
+            let (pb, cb) = bruteforce_partition(&m);
+            assert!((cd - cb).abs() < 1e-9, "dp={cd} bf={cb} ({pd:?} vs {pb:?})");
+        }
+    }
+
+    #[test]
+    fn uniform_partition_shapes() {
+        assert_eq!(uniform_partition(10, 3), vec![(0, 3), (4, 6), (7, 9)]);
+        assert_eq!(uniform_partition(3, 3), vec![(0, 0), (1, 1), (2, 2)]);
+        assert_eq!(uniform_partition(5, 1), vec![(0, 4)]);
+    }
+
+    #[test]
+    fn validate_catches_bad_partitions() {
+        assert!(validate_partition(&vec![(0, 2), (3, 4)], 5).is_ok());
+        assert!(validate_partition(&vec![(1, 2), (3, 4)], 5).is_err());
+        assert!(validate_partition(&vec![(0, 2), (4, 4)], 5).is_err());
+        assert!(validate_partition(&vec![(0, 2), (3, 3)], 5).is_err());
+    }
+
+    #[test]
+    fn single_device_takes_everything() {
+        let m = CostModel {
+            t0_ms: vec![1.0, 2.0, 3.0],
+            out_bytes: vec![10, 10, 10],
+            capacities: vec![1.0],
+            bandwidth_bps: vec![],
+        };
+        let (p, cost) = optimal_partition(&m);
+        assert_eq!(p, vec![(0, 2)]);
+        assert!((cost - 6.0).abs() < 1e-12);
+    }
+}

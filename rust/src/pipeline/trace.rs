@@ -1,0 +1,33 @@
+//! Schedule trace recording — used by `rust/tests/pipeline_schedule.rs`
+//! to assert the 1F1B / weight-stashing / aggregation behaviour that the
+//! paper's Fig. 2 illustrates.
+
+use std::sync::{Arc, Mutex};
+
+use crate::net::message::DeviceId;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    Forward,
+    Backward,
+    Aggregate,
+}
+
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub device: DeviceId,
+    pub stage: usize,
+    pub kind: TraceKind,
+    /// batch id (for Aggregate: the bwd_count that triggered it)
+    pub batch: u64,
+    /// weight version AFTER the event
+    pub version: u64,
+}
+
+/// Shared sink; None disables tracing.
+pub type TraceSink = Option<Arc<Mutex<Vec<TraceEvent>>>>;
+
+pub fn new_sink() -> (TraceSink, Arc<Mutex<Vec<TraceEvent>>>) {
+    let v = Arc::new(Mutex::new(Vec::new()));
+    (Some(v.clone()), v)
+}

@@ -1,0 +1,224 @@
+//! Model profiling + capacity estimation (paper §III-B "model profiling"
+//! and §III-D eqs (1)–(3)).
+//!
+//! At the offline stage the central node runs every block's forward and
+//! backward ten times with example inputs and records the average — these
+//! are the `T^0_j` the partitioner scales by each worker's capacity. At
+//! the online stage workers report their measured per-batch execution
+//! time piggybacked on gradients; [`CapacityEstimator`] turns those into
+//! `C_i` (eq 1).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::manifest::{Dtype, Manifest};
+use crate::net::message::{DeviceId, ExecReport};
+use crate::runtime::{BlockRuntime, HostTensor};
+
+/// Average fwd+bwd wall-time per block, in ms (`T^0_j`).
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub t0_ms: Vec<f64>,
+    pub out_bytes: Vec<u64>,
+}
+
+fn dummy_input(shape_elems: usize, dtype: Dtype) -> HostTensor {
+    match dtype {
+        Dtype::F32 => HostTensor::F32(
+            (0..shape_elems).map(|i| ((i % 13) as f32) * 0.05 - 0.3).collect(),
+        ),
+        Dtype::I32 => HostTensor::I32((0..shape_elems).map(|i| (i % 5) as i32).collect()),
+    }
+}
+
+/// Profile every block `reps` times on the calling thread's runtime
+/// (paper uses 10 reps to wash out measurement noise).
+pub fn profile_model(
+    manifest: &Manifest,
+    blocks: &[BlockRuntime],
+    reps: usize,
+) -> Result<ModelProfile> {
+    let mut t0_ms = Vec::with_capacity(blocks.len());
+    for (i, b) in blocks.iter().enumerate() {
+        let params = manifest.load_init_params(i)?;
+        let in_elems: usize = b.info.in_shape.iter().product();
+        let x = dummy_input(in_elems, b.info.in_dtype);
+        let lab_elems: usize = manifest.label_shape.iter().product();
+        let labels = HostTensor::I32(vec![0i32; lab_elems]);
+
+        let mut total = 0.0f64;
+        if b.is_head() {
+            let xs = x.as_f32()?.to_vec();
+            // one unmeasured warmup (first execution pays one-time costs)
+            b.head_step(&params, &xs, &labels, &manifest.label_shape)?;
+            for _ in 0..reps {
+                let t0 = Instant::now();
+                b.head_step(&params, &xs, &labels, &manifest.label_shape)?;
+                total += t0.elapsed().as_secs_f64() * 1e3;
+            }
+        } else {
+            let y = b.forward(&params, &x)?; // warmup fwd
+            let gy0 = vec![1e-3f32; y.len()];
+            b.backward(&params, &x, &gy0)?; // warmup bwd
+            for _ in 0..reps {
+                let t0 = Instant::now();
+                let y = b.forward(&params, &x)?;
+                let gy = vec![1e-3f32; y.len()];
+                b.backward(&params, &x, &gy)?;
+                total += t0.elapsed().as_secs_f64() * 1e3;
+            }
+        }
+        t0_ms.push(total / reps as f64);
+    }
+    Ok(ModelProfile {
+        t0_ms,
+        out_bytes: manifest.blocks.iter().map(|b| b.out_bytes).collect(),
+    })
+}
+
+/// Tracks the latest execution report per device and estimates capacities.
+#[derive(Debug, Clone, Default)]
+pub struct CapacityEstimator {
+    latest: HashMap<DeviceId, ExecReport>,
+}
+
+impl CapacityEstimator {
+    pub fn ingest(&mut self, report: &ExecReport) {
+        self.latest.insert(report.device, report.clone());
+    }
+
+    pub fn has_report(&self, device: DeviceId) -> bool {
+        self.latest.contains_key(&device)
+    }
+
+    /// Eq (1): `C_i = avg_exec_i / sum_{j in stage_i} T^0_j`, where
+    /// `range` is the device's current block range. Devices without a
+    /// report default to 1.0 (the paper's initial assumption).
+    pub fn capacity(
+        &self,
+        device: DeviceId,
+        range: (usize, usize),
+        t0_ms: &[f64],
+    ) -> f64 {
+        match self.latest.get(&device) {
+            Some(r) => {
+                let base: f64 = t0_ms[range.0..=range.1].iter().sum();
+                if base <= 0.0 {
+                    1.0
+                } else {
+                    (r.avg_ms / base).max(0.05)
+                }
+            }
+            None => 1.0,
+        }
+    }
+
+    /// Capacities for a worker list given each device's current range.
+    /// Device `worker_list[0]` (central) is pinned to 1.0 per the paper.
+    ///
+    /// `central_ratio` is the central node's own online-time / profiled-
+    /// time ratio. In the in-process simulation all XLA clients share the
+    /// host's cores, so every device's online time is inflated by the
+    /// same contention factor relative to the unloaded offline profile;
+    /// dividing by the central node's ratio cancels it (the paper's
+    /// devices are separate machines, where this factor is 1).
+    pub fn capacities(
+        &self,
+        worker_list: &[DeviceId],
+        ranges: &[(usize, usize)],
+        t0_ms: &[f64],
+        central_ratio: f64,
+    ) -> Vec<f64> {
+        let norm = central_ratio.max(0.05);
+        worker_list
+            .iter()
+            .enumerate()
+            .map(|(stage, &d)| {
+                if stage == 0 {
+                    1.0
+                } else {
+                    (self.capacity(d, ranges[stage], t0_ms) / norm).max(0.05)
+                }
+            })
+            .collect()
+    }
+
+    pub fn clear_device(&mut self, device: DeviceId) {
+        self.latest.remove(&device);
+    }
+}
+
+/// Accumulates a device's own per-batch execution time between reports.
+#[derive(Debug, Clone, Default)]
+pub struct ExecWindow {
+    sum_ms: f64,
+    count: u32,
+}
+
+impl ExecWindow {
+    pub fn record(&mut self, ms: f64) {
+        self.sum_ms += ms;
+        self.count += 1;
+    }
+
+    /// Produce a report and reset the window (None if nothing recorded).
+    pub fn take_report(&mut self, device: DeviceId) -> Option<ExecReport> {
+        if self.count == 0 {
+            return None;
+        }
+        let r = ExecReport { device, avg_ms: self.sum_ms / self.count as f64, batches: self.count };
+        self.sum_ms = 0.0;
+        self.count = 0;
+        Some(r)
+    }
+
+    /// Peek without resetting.
+    pub fn current_avg(&self) -> Option<f64> {
+        (self.count > 0).then(|| self.sum_ms / self.count as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_from_report() {
+        let mut est = CapacityEstimator::default();
+        est.ingest(&ExecReport { device: 2, avg_ms: 50.0, batches: 10 });
+        let t0 = vec![5.0, 5.0, 10.0, 5.0];
+        // device 2 owns blocks [1,2] -> base 15ms; measured 50 -> C=3.33
+        let c = est.capacity(2, (1, 2), &t0);
+        assert!((c - 50.0 / 15.0).abs() < 1e-9);
+        // unknown device defaults to 1.0
+        assert_eq!(est.capacity(9, (0, 1), &t0), 1.0);
+    }
+
+    #[test]
+    fn central_pinned_to_one() {
+        let mut est = CapacityEstimator::default();
+        est.ingest(&ExecReport { device: 0, avg_ms: 1000.0, batches: 1 });
+        est.ingest(&ExecReport { device: 1, avg_ms: 20.0, batches: 1 });
+        let caps = est.capacities(&[0, 1], &[(0, 0), (1, 1)], &[10.0, 10.0], 1.0);
+        assert_eq!(caps[0], 1.0);
+        assert!((caps[1] - 2.0).abs() < 1e-9);
+        // contention normalization: central running 2x slower than its
+        // profile means workers' ratios halve
+        let caps = est.capacities(&[0, 1], &[(0, 0), (1, 1)], &[10.0, 10.0], 2.0);
+        assert!((caps[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn exec_window_averages_and_resets() {
+        let mut w = ExecWindow::default();
+        assert!(w.take_report(1).is_none());
+        w.record(10.0);
+        w.record(20.0);
+        let r = w.take_report(1).unwrap();
+        assert_eq!(r.avg_ms, 15.0);
+        assert_eq!(r.batches, 2);
+        assert!(w.take_report(1).is_none());
+    }
+}

@@ -1,0 +1,179 @@
+//! Weight replication schedules + the backup store (paper §III-E).
+//!
+//! Chain replication: every worker pushes its weights to the next worker
+//! (the last worker pushes to the central node) every `chain_every`
+//! batches. Global replication: every worker pushes to the central node
+//! every `global_every` batches (less frequent; tolerates any number of
+//! simultaneous failures at higher central-link cost).
+
+use std::collections::HashMap;
+
+use crate::model::params::{BlockParams, StageParams};
+use crate::net::message::{DeviceId, ReplicaKind, WireBlock};
+
+/// Should a replication fire after completing `batch` (0-based)?
+pub fn due(batch: u64, every: Option<u64>) -> bool {
+    match every {
+        Some(k) if k > 0 => (batch + 1) % k == 0,
+        _ => false,
+    }
+}
+
+/// Chain-replica target of `stage` in an `n`-stage pipeline: the next
+/// stage, wrapping the last stage to the central node (stage 0).
+pub fn chain_target(stage: usize, n_stages: usize) -> usize {
+    if stage + 1 < n_stages {
+        stage + 1
+    } else {
+        0
+    }
+}
+
+/// Serialize a stage's parameters for a replica push.
+pub fn to_wire(params: &StageParams) -> Vec<WireBlock> {
+    params
+        .blocks
+        .iter()
+        .map(|(idx, bp)| (*idx, bp.0.clone()))
+        .collect()
+}
+
+/// Rebuild block params from wire form.
+pub fn from_wire(blocks: &[WireBlock]) -> Vec<(usize, BlockParams)> {
+    blocks
+        .iter()
+        .map(|(idx, tensors)| (*idx, BlockParams(tensors.clone())))
+        .collect()
+}
+
+/// One stored backup.
+#[derive(Debug, Clone)]
+pub struct Backup {
+    pub kind: ReplicaKind,
+    pub owner_stage: usize,
+    pub version: u64,
+    pub blocks: Vec<(usize, BlockParams)>,
+}
+
+/// Backups held by one device, keyed by the owner's device id.
+#[derive(Debug, Clone, Default)]
+pub struct BackupStore {
+    by_owner: HashMap<DeviceId, Backup>,
+}
+
+impl BackupStore {
+    /// Store/overwrite a backup (newest version wins).
+    pub fn store(
+        &mut self,
+        owner_device: DeviceId,
+        kind: ReplicaKind,
+        owner_stage: usize,
+        version: u64,
+        blocks: Vec<(usize, BlockParams)>,
+    ) {
+        let newer = self
+            .by_owner
+            .get(&owner_device)
+            .map(|b| version >= b.version)
+            .unwrap_or(true);
+        if newer {
+            self.by_owner
+                .insert(owner_device, Backup { kind, owner_stage, version, blocks });
+        }
+    }
+
+    /// Look up a specific block across all held backups (newest first).
+    pub fn find_block(&self, block: usize) -> Option<&BlockParams> {
+        let mut best: Option<(&Backup, &BlockParams)> = None;
+        for b in self.by_owner.values() {
+            if let Some((_, bp)) = b.blocks.iter().find(|(i, _)| *i == block) {
+                let replace = best.map(|(bb, _)| b.version > bb.version).unwrap_or(true);
+                if replace {
+                    best = Some((b, bp));
+                }
+            }
+        }
+        best.map(|(_, bp)| bp)
+    }
+
+    pub fn of_owner(&self, owner_device: DeviceId) -> Option<&Backup> {
+        self.by_owner.get(&owner_device)
+    }
+
+    pub fn remove_owner(&mut self, owner_device: DeviceId) {
+        self.by_owner.remove(&owner_device);
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_owner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_owner.is_empty()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.by_owner
+            .values()
+            .map(|b| b.blocks.iter().map(|(_, bp)| bp.byte_len()).sum::<usize>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bp(v: f32) -> BlockParams {
+        BlockParams(vec![vec![v; 3]])
+    }
+
+    #[test]
+    fn due_schedule() {
+        assert!(!due(0, Some(50)));
+        assert!(due(49, Some(50)));
+        assert!(due(99, Some(50)));
+        assert!(!due(50, Some(50)));
+        assert!(!due(49, None));
+        assert!(!due(49, Some(0)));
+    }
+
+    #[test]
+    fn chain_targets() {
+        assert_eq!(chain_target(0, 3), 1);
+        assert_eq!(chain_target(1, 3), 2);
+        assert_eq!(chain_target(2, 3), 0); // last -> central
+    }
+
+    #[test]
+    fn store_keeps_newest_version() {
+        let mut s = BackupStore::default();
+        s.store(1, ReplicaKind::Chain, 1, 5, vec![(3, bp(5.0))]);
+        s.store(1, ReplicaKind::Chain, 1, 3, vec![(3, bp(3.0))]); // older: ignored
+        assert_eq!(s.of_owner(1).unwrap().version, 5);
+        assert_eq!(s.find_block(3).unwrap().0[0][0], 5.0);
+        s.store(1, ReplicaKind::Global, 1, 9, vec![(3, bp(9.0))]);
+        assert_eq!(s.find_block(3).unwrap().0[0][0], 9.0);
+    }
+
+    #[test]
+    fn find_block_across_owners_prefers_newest() {
+        let mut s = BackupStore::default();
+        s.store(1, ReplicaKind::Chain, 1, 2, vec![(7, bp(2.0))]);
+        s.store(2, ReplicaKind::Global, 2, 8, vec![(7, bp(8.0))]);
+        assert_eq!(s.find_block(7).unwrap().0[0][0], 8.0);
+        assert!(s.find_block(99).is_none());
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let mut sp = StageParams::default();
+        sp.blocks.insert(2, bp(1.0));
+        sp.blocks.insert(5, bp(2.0));
+        let wire = to_wire(&sp);
+        let back = from_wire(&wire);
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].0, 2);
+        assert_eq!(back[1].1, bp(2.0));
+    }
+}

@@ -1,0 +1,302 @@
+//! PJRT runtime: load AOT-compiled HLO text and execute it from Rust.
+//!
+//! This is the only module that touches the `xla` crate. Everything above
+//! it exchanges plain `Vec<f32>` / `Vec<i32>` host buffers (exactly what
+//! travels over the — simulated or real — network between devices).
+//!
+//! Threading: `PjRtClient` is `Rc`-based (not `Send`), so each simulated
+//! device thread owns its own [`Engine`] and compiles its own block
+//! executables. See DESIGN.md §4 "Runtime threading".
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::manifest::{BlockInfo, BlockKind, Dtype, Manifest};
+
+/// A host-side tensor (activation or label) as moved between devices.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.len() * 4
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(v) => Ok(v),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+}
+
+fn dims_i64(shape: &[usize]) -> Vec<i64> {
+    shape.iter().map(|&d| d as i64).collect()
+}
+
+fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    Ok(lit.reshape(&dims_i64(shape))?)
+}
+
+fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    Ok(lit.reshape(&dims_i64(shape))?)
+}
+
+fn literal_of(t: &HostTensor, shape: &[usize]) -> Result<xla::Literal> {
+    match t {
+        HostTensor::F32(v) => literal_f32(v, shape),
+        HostTensor::I32(v) => literal_i32(v, shape),
+    }
+}
+
+/// A compiled HLO module plus its output arity.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Cumulative wall time spent in `run` (profiling hook).
+    pub exec_nanos: std::cell::Cell<u64>,
+    pub exec_count: std::cell::Cell<u64>,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let t0 = Instant::now();
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple()?;
+        self.exec_nanos
+            .set(self.exec_nanos.get() + t0.elapsed().as_nanos() as u64);
+        self.exec_count.set(self.exec_count.get() + 1);
+        Ok(out)
+    }
+}
+
+/// Per-thread PJRT engine: one CPU client + executable loader.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine { client: xla::PjRtClient::cpu()? })
+    }
+
+    /// Load + compile an HLO text file (the AOT interchange format).
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            exec_nanos: std::cell::Cell::new(0),
+            exec_count: std::cell::Cell::new(0),
+        })
+    }
+}
+
+/// Outputs of a fused head step (forward + loss + backward).
+#[derive(Debug, Clone)]
+pub struct HeadStepOut {
+    pub grad_params: Vec<Vec<f32>>,
+    pub grad_input: Vec<f32>,
+    pub loss: f32,
+    pub ncorrect: f32,
+}
+
+/// The compiled artifacts of one block, bound to one engine/thread.
+pub struct BlockRuntime {
+    pub info: BlockInfo,
+    fwd: Option<Executable>,
+    bwd: Option<Executable>,
+    step: Option<Executable>,
+    eval: Option<Executable>,
+}
+
+impl BlockRuntime {
+    /// Compile all artifacts of block `info` on `engine`.
+    pub fn load(engine: &Engine, info: &BlockInfo) -> Result<BlockRuntime> {
+        let load = |p: &Option<std::path::PathBuf>| -> Result<Option<Executable>> {
+            Ok(match p {
+                Some(p) => Some(engine.load(p)?),
+                None => None,
+            })
+        };
+        Ok(BlockRuntime {
+            info: info.clone(),
+            fwd: load(&info.fwd)?,
+            bwd: load(&info.bwd)?,
+            step: load(&info.step)?,
+            eval: load(&info.eval)?,
+        })
+    }
+
+    fn param_literals(&self, params: &[Vec<f32>]) -> Result<Vec<xla::Literal>> {
+        if params.len() != self.info.params.len() {
+            bail!(
+                "block {}: got {} param tensors, expected {}",
+                self.info.index,
+                params.len(),
+                self.info.params.len()
+            );
+        }
+        params
+            .iter()
+            .zip(&self.info.params)
+            .map(|(p, pi)| {
+                if p.len() != pi.size {
+                    bail!(
+                        "block {}: param size {} != manifest {}",
+                        self.info.index,
+                        p.len(),
+                        pi.size
+                    );
+                }
+                literal_f32(p, &pi.shape)
+            })
+            .collect()
+    }
+
+    /// Forward: (params, x) -> y.
+    pub fn forward(&self, params: &[Vec<f32>], x: &HostTensor) -> Result<Vec<f32>> {
+        let exe = self.fwd.as_ref().context("block has no fwd artifact")?;
+        let mut inputs = self.param_literals(params)?;
+        inputs.push(literal_of(x, &self.info.in_shape)?);
+        let out = exe.run(&inputs)?;
+        if out.len() != 1 {
+            bail!("fwd returned {} outputs, expected 1", out.len());
+        }
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// Backward: (params, x, gy) -> (grad_params, grad_x if has_gx).
+    pub fn backward(
+        &self,
+        params: &[Vec<f32>],
+        x: &HostTensor,
+        gy: &[f32],
+    ) -> Result<(Vec<Vec<f32>>, Option<Vec<f32>>)> {
+        let exe = self.bwd.as_ref().context("block has no bwd artifact")?;
+        let mut inputs = self.param_literals(params)?;
+        inputs.push(literal_of(x, &self.info.in_shape)?);
+        inputs.push(literal_f32(gy, &self.info.out_shape)?);
+        let out = exe.run(&inputs)?;
+        let np = self.info.params.len();
+        let want = np + usize::from(self.info.has_gx);
+        if out.len() != want {
+            bail!("bwd returned {} outputs, expected {}", out.len(), want);
+        }
+        let mut grads = Vec::with_capacity(np);
+        for lit in &out[..np] {
+            grads.push(lit.to_vec::<f32>()?);
+        }
+        let gx = if self.info.has_gx {
+            Some(out[np].to_vec::<f32>()?)
+        } else {
+            None
+        };
+        Ok((grads, gx))
+    }
+
+    /// Fused head step: (params, x, labels) -> grads + gx + loss + ncorrect.
+    pub fn head_step(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        labels: &HostTensor,
+        label_shape: &[usize],
+    ) -> Result<HeadStepOut> {
+        let exe = self.step.as_ref().context("block has no step artifact")?;
+        let mut inputs = self.param_literals(params)?;
+        inputs.push(literal_f32(x, &self.info.in_shape)?);
+        inputs.push(literal_of(labels, label_shape)?);
+        let out = exe.run(&inputs)?;
+        let np = self.info.params.len();
+        if out.len() != np + 3 {
+            bail!("head step returned {} outputs, expected {}", out.len(), np + 3);
+        }
+        let mut grad_params = Vec::with_capacity(np);
+        for lit in &out[..np] {
+            grad_params.push(lit.to_vec::<f32>()?);
+        }
+        Ok(HeadStepOut {
+            grad_params,
+            grad_input: out[np].to_vec::<f32>()?,
+            loss: out[np + 1].get_first_element::<f32>()?,
+            ncorrect: out[np + 2].get_first_element::<f32>()?,
+        })
+    }
+
+    /// Head eval: (params, x, labels) -> (loss, ncorrect).
+    pub fn head_eval(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        labels: &HostTensor,
+        label_shape: &[usize],
+    ) -> Result<(f32, f32)> {
+        let exe = self.eval.as_ref().context("block has no eval artifact")?;
+        let mut inputs = self.param_literals(params)?;
+        inputs.push(literal_f32(x, &self.info.in_shape)?);
+        inputs.push(literal_of(labels, label_shape)?);
+        let out = exe.run(&inputs)?;
+        if out.len() != 2 {
+            bail!("head eval returned {} outputs, expected 2", out.len());
+        }
+        Ok((
+            out[0].get_first_element::<f32>()?,
+            out[1].get_first_element::<f32>()?,
+        ))
+    }
+
+    pub fn is_head(&self) -> bool {
+        self.info.kind == BlockKind::Head
+    }
+}
+
+/// Compile every block of `manifest` on a fresh engine (one per thread).
+pub fn load_all_blocks(engine: &Engine, manifest: &Manifest) -> Result<Vec<BlockRuntime>> {
+    manifest
+        .blocks
+        .iter()
+        .map(|b| BlockRuntime::load(engine, b))
+        .collect()
+}
+
+/// Build the HostTensor for an input/label buffer given the manifest dtype.
+pub fn host_tensor(dtype: Dtype, f32s: Option<Vec<f32>>, i32s: Option<Vec<i32>>) -> HostTensor {
+    match dtype {
+        Dtype::F32 => HostTensor::F32(f32s.expect("f32 payload")),
+        Dtype::I32 => HostTensor::I32(i32s.expect("i32 payload")),
+    }
+}

@@ -1,0 +1,143 @@
+//! Bench harness (criterion is not vendored): warmup + repeated timing
+//! with mean / p50 / p95 / stddev, plus table/series printers used by the
+//! per-figure benches to emit the same rows the paper reports.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics of a timed run.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub max: f64,
+    pub stddev: f64,
+}
+
+impl Stats {
+    pub fn from_secs(mut xs: Vec<f64>) -> Stats {
+        assert!(!xs.is_empty());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let q = |p: f64| xs[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+        Stats {
+            n,
+            mean,
+            p50: q(0.5),
+            p95: q(0.95),
+            min: xs[0],
+            max: xs[n - 1],
+            stddev: var.sqrt(),
+        }
+    }
+
+    pub fn fmt_ms(&self) -> String {
+        format!(
+            "mean={:.3}ms p50={:.3}ms p95={:.3}ms sd={:.3}ms (n={})",
+            self.mean * 1e3,
+            self.p50 * 1e3,
+            self.p95 * 1e3,
+            self.stddev * 1e3,
+            self.n
+        )
+    }
+}
+
+/// Time `f` `iters` times after `warmup` unmeasured runs.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Stats::from_secs(samples)
+}
+
+/// Time a single execution.
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Fixed-width table printer for paper-style result tables.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<width$} |", c, width = w[i]));
+            }
+            println!("{s}");
+        };
+        line(&self.headers);
+        println!(
+            "|{}|",
+            w.iter().map(|x| "-".repeat(x + 2)).collect::<Vec<_>>().join("|")
+        );
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+/// Print an (x, series...) block for figure-style data (easy to plot).
+pub fn print_series(title: &str, xlabel: &str, names: &[&str], xs: &[f64], ys: &[Vec<f64>]) {
+    println!("# {title}");
+    println!("# {xlabel}\t{}", names.join("\t"));
+    for (i, x) in xs.iter().enumerate() {
+        let row: Vec<String> = ys.iter().map(|s| format!("{:.6}", s[i])).collect();
+        println!("{x:.4}\t{}", row.join("\t"));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from_secs(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut count = 0;
+        let s = bench(2, 10, || count += 1);
+        assert_eq!(count, 12);
+        assert_eq!(s.n, 10);
+    }
+}

@@ -1,0 +1,8 @@
+//! Offline substrates (no external crates available — see DESIGN.md §1).
+
+pub mod benchkit;
+pub mod json;
+pub mod logging;
+pub mod npy;
+pub mod prop;
+pub mod rng;

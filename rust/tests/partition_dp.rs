@@ -1,0 +1,92 @@
+//! Property tests: the eq-(5) dynamic program is optimal (vs brute force)
+//! and produces valid partitions across random cost models.
+
+use ftpipehd::partition::{
+    bruteforce_partition, homogeneous_partition, optimal_partition, validate_partition, CostModel,
+};
+use ftpipehd::util::prop::{check, G};
+
+fn random_cost_model(g: &mut G<'_>) -> CostModel {
+    let n_blocks = g.usize_in(3, 12);
+    let n_dev = g.usize_in(1, n_blocks.min(4));
+    CostModel {
+        t0_ms: (0..n_blocks).map(|_| g.f64_in(0.5, 50.0)).collect(),
+        out_bytes: (0..n_blocks)
+            .map(|_| g.f64_in(1e3, 5e6) as u64)
+            .collect(),
+        capacities: (0..n_dev).map(|i| if i == 0 { 1.0 } else { g.f64_in(0.25, 12.0) }).collect(),
+        bandwidth_bps: (0..n_dev.saturating_sub(1)).map(|_| g.f64_in(1e5, 1e9)).collect(),
+    }
+}
+
+#[test]
+fn prop_dp_output_is_valid_partition() {
+    check("dp-valid", 400, |g| {
+        let cm = random_cost_model(g);
+        let (p, cost) = optimal_partition(&cm);
+        validate_partition(&p, cm.n_blocks()).map_err(|e| e.to_string())?;
+        if p.len() != cm.n_devices() {
+            return Err(format!("{} stages != {} devices", p.len(), cm.n_devices()));
+        }
+        if !cost.is_finite() || cost <= 0.0 {
+            return Err(format!("bad cost {cost}"));
+        }
+        // reported cost must equal the objective evaluated on the partition
+        let eval = cm.cost(&p);
+        if (eval - cost).abs() > 1e-6 * cost.max(1.0) {
+            return Err(format!("cost mismatch: dp={cost} eval={eval}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dp_matches_bruteforce_optimum() {
+    check("dp-optimal", 250, |g| {
+        let cm = random_cost_model(g);
+        let (_, dp_cost) = optimal_partition(&cm);
+        let (_, bf_cost) = bruteforce_partition(&cm);
+        if (dp_cost - bf_cost).abs() > 1e-6 * bf_cost.max(1.0) {
+            return Err(format!("dp {dp_cost} != brute force {bf_cost} for {cm:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_capacity_aware_never_worse_than_blind() {
+    check("aware-beats-blind", 250, |g| {
+        let cm = random_cost_model(g);
+        let (_, aware) = optimal_partition(&cm);
+        let (_, blind) = homogeneous_partition(&cm);
+        // blind cost is evaluated under the true capacities; the aware DP
+        // optimizes that objective exactly, so it can never lose
+        if aware > blind + 1e-9 {
+            return Err(format!("aware {aware} worse than blind {blind}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn heterogeneity_speedup_grows_with_skew() {
+    // the paper's §IV-D setting: uniform blocks, one device k-times slower.
+    let mk = |skew: f64| CostModel {
+        t0_ms: vec![10.0; 12],
+        out_bytes: vec![100_000; 12],
+        capacities: vec![1.0, 1.0, skew],
+        bandwidth_bps: vec![12.5e6, 12.5e6],
+    };
+    let ratio = |skew: f64| {
+        let cm = mk(skew);
+        let (_, aware) = optimal_partition(&cm);
+        let (_, blind) = homogeneous_partition(&cm);
+        blind / aware
+    };
+    let r2 = ratio(2.0);
+    let r10 = ratio(10.0);
+    assert!(r10 > r2, "speedup should grow with skew: r2={r2:.2} r10={r10:.2}");
+    // at 10x skew the blind partition leaves the slow device with 1/3 of
+    // the blocks -> ~>2.5x bottleneck gap
+    assert!(r10 > 2.0, "r10={r10:.2}");
+}

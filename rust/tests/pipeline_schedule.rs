@@ -1,0 +1,141 @@
+//! Integration: the 1F1B / weight-stashing / aggregation schedule the
+//! paper's Fig. 2 illustrates, asserted on a real 3-stage training run
+//! over the compiled edgenet-tiny artifacts.
+//!
+//! Requires `make artifacts` (skips gracefully if missing).
+
+use std::collections::HashMap;
+
+use ftpipehd::config::{DeviceConfig, RunConfig};
+use ftpipehd::coordinator::{run_sim_full, RunOpts};
+use ftpipehd::pipeline::trace::{new_sink, TraceKind};
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/edgenet-tiny/manifest.json").exists()
+}
+
+fn base_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model_dir = "artifacts/edgenet-tiny".into();
+    cfg.devices = vec![DeviceConfig::default(); 3];
+    cfg.epochs = 1;
+    cfg.batches_per_epoch = 24;
+    cfg.eval_batches = 0;
+    cfg.repartition_first = None; // keep stages fixed so the trace is clean
+    cfg.repartition_every = None;
+    cfg.chain_every = None;
+    cfg.global_every = None;
+    cfg.agg_interval_k = Some(2);
+    cfg.bandwidth_bps = vec![1e9];
+    cfg.link_latency_s = 0.0;
+    cfg
+}
+
+#[test]
+fn schedule_obeys_1f1b_stashing_and_aggregation() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let (sink, events) = new_sink();
+    let cfg = base_cfg();
+    let out = run_sim_full(
+        &cfg,
+        RunOpts { trace: sink, ..Default::default() },
+    )
+    .expect("run");
+    assert_eq!(out.record.batches.len(), 24);
+
+    let ev = events.lock().unwrap().clone();
+    assert!(!ev.is_empty());
+
+    // --- every batch is forwarded and backwarded exactly once per stage ---
+    let mut fwd_count: HashMap<(usize, u64), usize> = HashMap::new();
+    let mut bwd_count: HashMap<(usize, u64), usize> = HashMap::new();
+    for e in &ev {
+        match e.kind {
+            TraceKind::Forward => *fwd_count.entry((e.stage, e.batch)).or_default() += 1,
+            TraceKind::Backward => *bwd_count.entry((e.stage, e.batch)).or_default() += 1,
+            TraceKind::Aggregate => {}
+        }
+    }
+    for stage in 0..3usize {
+        for b in 0..24u64 {
+            assert_eq!(fwd_count.get(&(stage, b)), Some(&1), "fwd s{stage} b{b}");
+            assert_eq!(bwd_count.get(&(stage, b)), Some(&1), "bwd s{stage} b{b}");
+        }
+    }
+
+    // --- per-stage event order: F(b) precedes B(b); batches complete in order ---
+    for stage in 0..3usize {
+        let stage_ev: Vec<_> = ev.iter().filter(|e| e.stage == stage).collect();
+        let mut fwd_seen: Vec<u64> = vec![];
+        let mut bwd_seen: Vec<u64> = vec![];
+        for e in &stage_ev {
+            match e.kind {
+                TraceKind::Forward => fwd_seen.push(e.batch),
+                TraceKind::Backward => {
+                    assert!(
+                        fwd_seen.contains(&e.batch),
+                        "stage {stage}: backward of {} before forward",
+                        e.batch
+                    );
+                    bwd_seen.push(e.batch);
+                }
+                TraceKind::Aggregate => {}
+            }
+        }
+        // forwards and backwards are FIFO within a stage (pipeline order)
+        let mut sorted_f = fwd_seen.clone();
+        sorted_f.sort_unstable();
+        assert_eq!(fwd_seen, sorted_f, "stage {stage} forward order");
+        let mut sorted_b = bwd_seen.clone();
+        sorted_b.sort_unstable();
+        assert_eq!(bwd_seen, sorted_b, "stage {stage} backward order");
+    }
+
+    // --- asynchrony: stage 0 forwards several batches before its first
+    //     backward (warmup = pipeline depth; PipeDream 1F1B signature) ---
+    let s0: Vec<_> = ev.iter().filter(|e| e.stage == 0).collect();
+    let first_bwd_pos = s0.iter().position(|e| e.kind == TraceKind::Backward).unwrap();
+    assert!(
+        first_bwd_pos >= 2,
+        "stage 0 should forward >=2 batches before its first backward (got {first_bwd_pos})"
+    );
+
+    // --- weight versions advance once per backward at each stage ---
+    for stage in 0..3usize {
+        let bwd_versions: Vec<u64> = ev
+            .iter()
+            .filter(|e| e.stage == stage && e.kind == TraceKind::Backward)
+            .map(|e| e.version)
+            .collect();
+        for w in bwd_versions.windows(2) {
+            assert!(w[1] > w[0], "stage {stage}: version must strictly increase");
+        }
+    }
+
+    // --- aggregation fires on stages with >= 2 live versions, not the last ---
+    let agg_stages: std::collections::BTreeSet<usize> = ev
+        .iter()
+        .filter(|e| e.kind == TraceKind::Aggregate)
+        .map(|e| e.stage)
+        .collect();
+    assert!(agg_stages.contains(&0), "stage 0 must aggregate (agg_k=2)");
+    assert!(agg_stages.contains(&1), "stage 1 must aggregate");
+    assert!(!agg_stages.contains(&2), "last stage has one live version");
+}
+
+#[test]
+fn aggregation_disabled_produces_no_aggregate_events() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let (sink, events) = new_sink();
+    let mut cfg = base_cfg();
+    cfg.agg_interval_k = None;
+    run_sim_full(&cfg, RunOpts { trace: sink, ..Default::default() }).expect("run");
+    let ev = events.lock().unwrap();
+    assert!(ev.iter().all(|e| e.kind != TraceKind::Aggregate));
+}

@@ -1,0 +1,208 @@
+//! Property tests for the Algorithm-1 weight-redistribution planner and
+//! the worker-list renumbering rules (paper §III-D/F).
+
+use std::collections::BTreeSet;
+
+use ftpipehd::fault::{
+    plan_redistribution, renumber, renumber_worker_list, source_of_block, Source,
+};
+use ftpipehd::partition::{uniform_partition, validate_partition, Partition};
+use ftpipehd::util::prop::{check, G};
+
+fn random_partition(g: &mut G<'_>, n_blocks: usize, n_stages: usize) -> Partition {
+    let cuts = g.cuts(n_blocks, n_stages - 1);
+    let mut parts = Vec::with_capacity(n_stages);
+    let mut lo = 0;
+    for c in cuts {
+        parts.push((lo, c - 1));
+        lo = c;
+    }
+    parts.push((lo, n_blocks - 1));
+    parts
+}
+
+#[test]
+fn prop_random_partitions_are_valid() {
+    check("random-partition-valid", 300, |g| {
+        let n_blocks = g.usize_in(3, 24);
+        let n_stages = g.usize_in(1, n_blocks.min(6));
+        let p = random_partition(g, n_blocks, n_stages);
+        validate_partition(&p, n_blocks).map_err(|e| e.to_string())
+    });
+}
+
+/// Every block of the new partition is either held locally or has a
+/// source; sources never point at dead stages; the plan covers exactly
+/// the device's new range.
+#[test]
+fn prop_plan_covers_new_range_exactly() {
+    check("plan-covers-range", 500, |g| {
+        let n_blocks = g.usize_in(4, 20);
+        let n_old = g.usize_in(2, n_blocks.min(5));
+        let p_cur = random_partition(g, n_blocks, n_old);
+        // pick failures (keep central alive; at least one survivor worker)
+        let n_fail = g.usize_in(0, n_old - 2);
+        let mut failed: Vec<usize> = Vec::new();
+        while failed.len() < n_fail {
+            let f = g.usize_in(1, n_old - 1);
+            if !failed.contains(&f) {
+                failed.push(f);
+            }
+        }
+        failed.sort_unstable();
+        let n_new = n_old - failed.len();
+        let p_new = random_partition(g, n_blocks, n_new);
+
+        // check the plan of every alive device
+        for old_stage in 0..n_old {
+            if failed.contains(&old_stage) {
+                continue;
+            }
+            let i_new = renumber(old_stage, &failed).unwrap();
+            let (lo, hi) = p_cur[old_stage];
+            let held: Vec<usize> = (lo..=hi).collect();
+            let plan = plan_redistribution(&p_new, &p_cur, &failed, &held, i_new, Some(old_stage));
+
+            let (nlo, nhi) = p_new[i_new];
+            let covered: BTreeSet<usize> = plan
+                .local
+                .iter()
+                .copied()
+                .chain(plan.need.values().flatten().copied())
+                .collect();
+            let expected: BTreeSet<usize> = (nlo..=nhi).collect();
+            if covered != expected {
+                return Err(format!(
+                    "coverage mismatch: {covered:?} != {expected:?} (plan {plan:?})"
+                ));
+            }
+            // locals must be held
+            for l in &plan.local {
+                if !held.contains(l) {
+                    return Err(format!("local block {l} not actually held"));
+                }
+            }
+            // stage sources must be alive new-list stages, never myself
+            for (src, blocks) in &plan.need {
+                if let Source::Stage(s) = src {
+                    if *s >= n_new {
+                        return Err(format!("source stage {s} out of range"));
+                    }
+                    if *s == i_new {
+                        return Err(format!(
+                            "plan asks to network-fetch {blocks:?} from itself"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Single-failure plans must follow the paper's Algorithm-1 index rules.
+#[test]
+fn prop_single_failure_index_correction_matches_paper() {
+    check("alg1-index-rules", 300, |g| {
+        let n_blocks = g.usize_in(6, 18);
+        let n_old = g.usize_in(3, n_blocks.min(6));
+        let p_cur = random_partition(g, n_blocks, n_old);
+        let i_fail = g.usize_in(1, n_old - 1);
+        for l in 0..n_blocks {
+            let owner = p_cur.iter().position(|&(lo, hi)| (lo..=hi).contains(&l)).unwrap();
+            let src = source_of_block(l, &p_cur, &[i_fail]);
+            let expect = if owner > i_fail {
+                Source::Stage(owner - 1) // paper: I_target > I_fail
+            } else if owner == i_fail {
+                if i_fail == n_old - 1 {
+                    Source::Stage(0) // paper: last stage -> central
+                } else {
+                    Source::Stage(i_fail) // paper: index unchanged (replica holder)
+                }
+            } else {
+                Source::Stage(owner)
+            };
+            if src != expect {
+                return Err(format!(
+                    "block {l} owner {owner} fail {i_fail}: got {src:?}, want {expect:?}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_renumbered_list_preserves_alive_order() {
+    check("renumber-order", 300, |g| {
+        let n = g.usize_in(2, 8);
+        let list: Vec<usize> = (100..100 + n).collect();
+        let n_fail = g.usize_in(0, n - 1);
+        let mut failed = Vec::new();
+        while failed.len() < n_fail {
+            let f = g.usize_in(0, n - 1);
+            if !failed.contains(&f) {
+                failed.push(f);
+            }
+        }
+        failed.sort_unstable();
+        let new = renumber_worker_list(&list, &failed);
+        if new.len() != n - failed.len() {
+            return Err(format!("length {} wrong", new.len()));
+        }
+        // order preserved and devices are exactly the alive ones
+        let alive: Vec<usize> = (0..n).filter(|s| !failed.contains(s)).map(|s| list[s]).collect();
+        if new != alive {
+            return Err(format!("{new:?} != {alive:?}"));
+        }
+        // renumber() agrees with the list positions
+        for (old_stage, &dev) in list.iter().enumerate() {
+            match renumber(old_stage, &failed) {
+                Some(ni) => {
+                    if new[ni] != dev {
+                        return Err(format!("renumber({old_stage}) -> {ni} mismatches"));
+                    }
+                }
+                None => {
+                    if !failed.contains(&old_stage) {
+                        return Err("renumber returned None for alive stage".into());
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A restarted device (empty state) never plans a fetch from itself and
+/// always covers its whole range from peers/backups.
+#[test]
+fn prop_restarted_device_plan_is_serviceable() {
+    check("restart-plan", 300, |g| {
+        let n_blocks = g.usize_in(4, 16);
+        let n = g.usize_in(2, n_blocks.min(5));
+        let p = uniform_partition(n_blocks, n);
+        let stage = g.usize_in(1, n - 1);
+        let plan = plan_redistribution(&p, &p, &[], &[], stage, Some(stage));
+        if !plan.local.is_empty() {
+            return Err("restarted device cannot hold anything".into());
+        }
+        let total: usize = plan.need.values().map(|v| v.len()).sum();
+        let (lo, hi) = p[stage];
+        if total != hi - lo + 1 {
+            return Err(format!("plan covers {total}, want {}", hi - lo + 1));
+        }
+        for src in plan.need.keys() {
+            match src {
+                Source::Stage(s) if *s == stage => {
+                    return Err("fetch from itself".into());
+                }
+                Source::LocalBackup => {
+                    return Err("restarted device has no local backups".into());
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,337 @@
+//! Unit-level tests of [`StageWorker`]'s control plane driven through a
+//! mock transport — no XLA execution, no threads. These pin the protocol
+//! behaviours that the slower end-to-end tests exercise only implicitly:
+//! probe freshness, replica storage, fetch serving, redistribution
+//! staging, commit/reset semantics, and direct weight pushes.
+
+use std::cell::RefCell;
+use std::sync::Arc;
+use std::time::Duration;
+
+use ftpipehd::config::DeviceConfig;
+use ftpipehd::device::SimDevice;
+use ftpipehd::manifest::Manifest;
+use ftpipehd::net::message::{Message, ReplicaKind, TrainInit};
+use ftpipehd::net::Transport;
+use ftpipehd::pipeline::{Flow, StageWorker};
+use ftpipehd::runtime::load_all_blocks;
+
+/// Captures every send; never receives.
+struct MockNet {
+    sent: RefCell<Vec<(usize, Message)>>,
+}
+
+impl MockNet {
+    fn new() -> Self {
+        MockNet { sent: RefCell::new(vec![]) }
+    }
+
+    fn take(&self) -> Vec<(usize, Message)> {
+        self.sent.borrow_mut().drain(..).collect()
+    }
+}
+
+impl Transport for MockNet {
+    fn my_id(&self) -> usize {
+        unreachable!()
+    }
+    fn send(&self, to: usize, msg: Message) -> anyhow::Result<()> {
+        self.sent.borrow_mut().push((to, msg));
+        Ok(())
+    }
+    fn recv_timeout(&self, _: Duration) -> Option<(usize, Message)> {
+        None
+    }
+    fn n_devices(&self) -> usize {
+        4
+    }
+}
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/edgenet-tiny/manifest.json").exists()
+}
+
+fn make_worker(device: usize) -> StageWorker {
+    let manifest = Arc::new(Manifest::load("artifacts/edgenet-tiny").unwrap());
+    let engine = ftpipehd::runtime::Engine::cpu().unwrap();
+    let blocks = load_all_blocks(&engine, &manifest).unwrap();
+    StageWorker::new(device, manifest, blocks, SimDevice::new(DeviceConfig::default(), 0), None)
+}
+
+fn init(ranges: Vec<(usize, usize)>, list: Vec<usize>) -> TrainInit {
+    TrainInit {
+        committed_forward: -1,
+        committed_backward: -1,
+        lr: 0.01,
+        momentum: 0.9,
+        weight_decay: 4e-5,
+        epochs: 1,
+        batches_per_epoch: 10,
+        ranges,
+        worker_list: list,
+        agg_k: 0,
+        chain_every: 0,
+        global_every: 0,
+        status: 0,
+    }
+}
+
+#[test]
+fn probe_reports_fresh_until_initialized() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let net = MockNet::new();
+    let mut w = make_worker(1);
+    w.handle_message(&net, 0, Message::Probe).unwrap();
+    match &net.take()[..] {
+        [(0, Message::ProbeAck { id: 1, fresh: true })] => {}
+        other => panic!("unexpected {other:?}"),
+    }
+    w.handle_message(&net, 0, Message::InitState(init(vec![(0, 2), (3, 5)], vec![0, 1])))
+        .unwrap();
+    let _ = net.take(); // drop the bandwidth probe
+    w.handle_message(&net, 0, Message::Probe).unwrap();
+    match &net.take()[..] {
+        [(0, Message::ProbeAck { id: 1, fresh: false })] => {}
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+#[test]
+fn init_loads_range_weights_and_bandwidth_probe_fires() {
+    if !artifacts_available() {
+        return;
+    }
+    let net = MockNet::new();
+    let mut w = make_worker(1);
+    w.handle_message(
+        &net,
+        0,
+        Message::InitState(init(vec![(0, 1), (2, 3), (4, 5)], vec![0, 1, 2])),
+    )
+    .unwrap();
+    assert_eq!(w.params.block_indices(), vec![2, 3]);
+    // stage 1's next is stage 2 (device 2): a BwTest must have been sent
+    let sent = net.take();
+    assert!(
+        sent.iter().any(|(to, m)| *to == 2 && matches!(m, Message::BwTest { .. })),
+        "bandwidth probe missing: {sent:?}"
+    );
+}
+
+#[test]
+fn replica_push_stored_and_served() {
+    if !artifacts_available() {
+        return;
+    }
+    let net = MockNet::new();
+    let mut w = make_worker(2);
+    w.handle_message(&net, 0, Message::InitState(init(vec![(0, 1), (2, 3), (4, 5)], vec![0, 1, 2])))
+        .unwrap();
+    net.take();
+    // device 1 chain-pushes its blocks 2..3? no — 2 owns 4..5; device 1
+    // owns 2..3 and pushes them here
+    w.handle_message(
+        &net,
+        1,
+        Message::ReplicaPush {
+            kind: ReplicaKind::Chain,
+            owner_stage: 1,
+            owner_device: 1,
+            version: 7,
+            blocks: vec![(2, vec![vec![9.0; 4]]), (3, vec![vec![8.0; 4]])],
+        },
+    )
+    .unwrap();
+    assert_eq!(w.backups.len(), 1);
+    // a fetch for an owned block + a backed-up block + a missing block
+    w.handle_message(&net, 3, Message::FetchWeights { blocks: vec![4, 2, 0] }).unwrap();
+    let sent = net.take();
+    match &sent[..] {
+        [(3, Message::Weights { blocks })] => {
+            let idxs: Vec<usize> = blocks.iter().map(|(i, _)| *i).collect();
+            assert!(idxs.contains(&4), "own param");
+            assert!(idxs.contains(&2), "chain replica");
+            assert!(!idxs.contains(&0), "block 0 unknown here");
+            // replica content served verbatim
+            let b2 = blocks.iter().find(|(i, _)| *i == 2).unwrap();
+            assert_eq!(b2.1[0][0], 9.0);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+#[test]
+fn repartition_stages_fetches_then_commit_swaps() {
+    if !artifacts_available() {
+        return;
+    }
+    let net = MockNet::new();
+    let mut w = make_worker(1);
+    w.handle_message(&net, 0, Message::InitState(init(vec![(0, 1), (2, 3), (4, 5)], vec![0, 1, 2])))
+        .unwrap();
+    net.take();
+    // dynamic repartition grows my range to 1..=4: need 1 (from central) and 4 (from stage 2)
+    w.handle_message(
+        &net,
+        0,
+        Message::Repartition {
+            ranges: vec![(0, 0), (1, 4), (5, 5)],
+            worker_list: vec![0, 1, 2],
+            failed: vec![],
+        },
+    )
+    .unwrap();
+    assert!(!w.fetch_done());
+    let sent = net.take();
+    let mut to_central = None;
+    let mut to_two = None;
+    for (to, m) in &sent {
+        if let Message::FetchWeights { blocks } = m {
+            if *to == 0 {
+                to_central = Some(blocks.clone());
+            }
+            if *to == 2 {
+                to_two = Some(blocks.clone());
+            }
+        }
+    }
+    assert_eq!(to_central, Some(vec![1]));
+    assert_eq!(to_two, Some(vec![4]));
+
+    // replies arrive
+    w.handle_message(&net, 0, Message::Weights { blocks: vec![(1, vec![vec![5.0; 3]])] })
+        .unwrap();
+    assert!(!w.fetch_done());
+    w.handle_message(&net, 2, Message::Weights { blocks: vec![(4, vec![vec![6.0; 3]])] })
+        .unwrap();
+    assert!(w.fetch_done());
+    // FetchDone went to central
+    let sent = net.take();
+    assert!(sent.iter().any(|(to, m)| *to == 0 && matches!(m, Message::FetchDone { id: 1 })));
+
+    // premature state: must hold OLD params until Commit
+    assert_eq!(w.params.block_indices(), vec![2, 3]);
+    w.handle_message(&net, 0, Message::Commit).unwrap();
+    assert_eq!(w.params.block_indices(), vec![1, 2, 3, 4]);
+    assert_eq!(w.params.get(1).unwrap().0[0][0], 5.0);
+    assert_eq!(w.params.get(4).unwrap().0[0][0], 6.0);
+    assert_eq!(w.status, 0);
+}
+
+#[test]
+fn peer_missing_block_escalates_to_central() {
+    if !artifacts_available() {
+        return;
+    }
+    let net = MockNet::new();
+    let mut w = make_worker(1);
+    w.handle_message(&net, 0, Message::InitState(init(vec![(0, 1), (2, 3), (4, 5)], vec![0, 1, 2])))
+        .unwrap();
+    net.take();
+    w.handle_message(
+        &net,
+        0,
+        Message::Repartition {
+            ranges: vec![(0, 0), (1, 4), (5, 5)],
+            worker_list: vec![0, 1, 2],
+            failed: vec![],
+        },
+    )
+    .unwrap();
+    net.take();
+    // stage 2 replies WITHOUT block 4 -> worker must escalate to central
+    w.handle_message(&net, 2, Message::Weights { blocks: vec![] }).unwrap();
+    let sent = net.take();
+    assert!(
+        sent.iter()
+            .any(|(to, m)| *to == 0 && matches!(m, Message::FetchWeights { blocks } if blocks == &vec![4])),
+        "escalation missing: {sent:?}"
+    );
+}
+
+#[test]
+fn reset_discards_in_flight_beyond_committed() {
+    if !artifacts_available() {
+        return;
+    }
+    let net = MockNet::new();
+    let mut w = make_worker(1);
+    w.handle_message(&net, 0, Message::InitState(init(vec![(0, 2), (3, 5)], vec![0, 1])))
+        .unwrap();
+    net.take();
+    // queue forwards 5..8 without running them
+    for b in 5..9u64 {
+        w.handle_message(
+            &net,
+            0,
+            Message::Forward {
+                batch: b,
+                version0: 0,
+                is_eval: false,
+                data: ftpipehd::net::message::Payload::F32(vec![0.0; 8 * 32]),
+            },
+        )
+        .unwrap();
+    }
+    assert_eq!(w.queued().0, 4);
+    w.handle_message(&net, 0, Message::Reset { committed: 6 }).unwrap();
+    assert_eq!(w.queued().0, 2, "batches 7,8 discarded, 5,6 kept");
+    assert_eq!(w.committed_fwd, 6);
+    assert_eq!(w.committed_bwd, 6);
+}
+
+#[test]
+fn direct_weight_push_overwrites_owned_blocks_only() {
+    if !artifacts_available() {
+        return;
+    }
+    let net = MockNet::new();
+    let mut w = make_worker(1);
+    w.handle_message(&net, 0, Message::InitState(init(vec![(0, 2), (3, 5)], vec![0, 1])))
+        .unwrap();
+    net.take();
+    let sizes: Vec<usize> = w.params.get(3).unwrap().0.iter().map(|t| t.len()).collect();
+    let push: Vec<Vec<f32>> = sizes.iter().map(|&n| vec![3.25; n]).collect();
+    w.handle_message(
+        &net,
+        0,
+        Message::Weights { blocks: vec![(3, push), (0, vec![vec![1.0]])] },
+    )
+    .unwrap();
+    assert_eq!(w.params.get(3).unwrap().0[0][0], 3.25, "owned block overwritten");
+    assert!(w.params.get(0).is_none(), "unowned block ignored");
+}
+
+#[test]
+fn wipe_state_simulates_restart() {
+    if !artifacts_available() {
+        return;
+    }
+    let net = MockNet::new();
+    let mut w = make_worker(1);
+    w.handle_message(&net, 0, Message::InitState(init(vec![(0, 2), (3, 5)], vec![0, 1])))
+        .unwrap();
+    net.take();
+    assert!(w.initialized);
+    w.wipe_state();
+    assert!(!w.initialized);
+    assert!(w.params.block_indices().is_empty());
+    w.handle_message(&net, 0, Message::Probe).unwrap();
+    match &net.take()[..] {
+        [(0, Message::ProbeAck { fresh: true, .. })] => {}
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+#[test]
+fn shutdown_returns_flow_shutdown() {
+    if !artifacts_available() {
+        return;
+    }
+    let net = MockNet::new();
+    let mut w = make_worker(1);
+    assert_eq!(w.handle_message(&net, 0, Message::Shutdown).unwrap(), Flow::Shutdown);
+}

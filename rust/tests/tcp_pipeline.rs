@@ -1,0 +1,125 @@
+//! Integration: the stage engine running over REAL TCP sockets — the
+//! multi-process deployment path (paper's Flask analogue). A 2-stage
+//! pipeline: this thread acts as the central node/stage 0 over a
+//! `TcpEndpoint`, a spawned thread runs stage 1 through `run_worker`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ftpipehd::config::DeviceConfig;
+use ftpipehd::device::SimDevice;
+use ftpipehd::manifest::Manifest;
+use ftpipehd::net::message::{Message, Payload, TrainInit};
+use ftpipehd::net::tcp::TcpEndpoint;
+use ftpipehd::net::Transport;
+use ftpipehd::pipeline::{run_worker, StageWorker};
+use ftpipehd::runtime::{load_all_blocks, Engine, HostTensor};
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/edgenet-tiny/manifest.json").exists()
+}
+
+struct Wrap(TcpEndpoint);
+
+impl Transport for Wrap {
+    fn my_id(&self) -> usize {
+        self.0.my_id()
+    }
+    fn send(&self, to: usize, msg: Message) -> anyhow::Result<()> {
+        self.0.send(to, msg)
+    }
+    fn recv_timeout(&self, timeout: Duration) -> Option<(usize, Message)> {
+        self.0.recv_timeout(timeout)
+    }
+    fn n_devices(&self) -> usize {
+        self.0.n_devices()
+    }
+}
+
+#[test]
+fn two_process_style_pipeline_over_tcp() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let manifest = Arc::new(Manifest::load("artifacts/edgenet-tiny").unwrap());
+    let addrs = vec!["127.0.0.1:46200".to_string(), "127.0.0.1:46201".to_string()];
+
+    // stage 1 worker on its own thread with its own engine + TCP endpoint
+    let m2 = manifest.clone();
+    let addrs2 = addrs.clone();
+    let h = std::thread::spawn(move || {
+        let ep = TcpEndpoint::bind(1, addrs2).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let blocks = load_all_blocks(&engine, &m2).unwrap();
+        let sim = SimDevice::new(DeviceConfig::default(), 1);
+        let w = StageWorker::new(1, m2, blocks, sim, None);
+        run_worker(w, Box::new(Wrap(ep)), None).unwrap();
+    });
+
+    // central / stage 0
+    let ep = Wrap(TcpEndpoint::bind(0, addrs).unwrap());
+    let engine = Engine::cpu().unwrap();
+    let blocks = load_all_blocks(&engine, &manifest).unwrap();
+    let sim = SimDevice::new(DeviceConfig::default(), 0);
+    let mut central = StageWorker::new(0, manifest.clone(), blocks, sim, None);
+
+    std::thread::sleep(Duration::from_millis(300)); // both listeners up
+
+    let nb = manifest.n_blocks();
+    let ranges = vec![(0, nb / 2 - 1), (nb / 2, nb - 1)];
+    let ti = TrainInit {
+        committed_forward: -1,
+        committed_backward: -1,
+        lr: 0.01,
+        momentum: 0.9,
+        weight_decay: 4e-5,
+        epochs: 1,
+        batches_per_epoch: 8,
+        ranges,
+        worker_list: vec![0, 1],
+        agg_k: 0,
+        chain_every: 0,
+        global_every: 0,
+        status: 0,
+    };
+    ep.send(1, Message::InitState(ti.clone())).unwrap();
+    central.apply_init(&ti).unwrap();
+    std::thread::sleep(Duration::from_millis(300));
+
+    // train 8 batches through the 2-stage TCP pipeline
+    let in_elems: usize = manifest.input_shape.iter().product();
+    let lab_elems: usize = manifest.label_shape.iter().product();
+    let mut completed = 0u64;
+    let mut losses: Vec<f32> = vec![];
+    let mut injected = 0u64;
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while completed < 8 && Instant::now() < deadline {
+        while injected < 8 && injected - completed < 2 {
+            let x: Vec<f32> =
+                (0..in_elems).map(|i| ((i as u64 + injected * 13) % 17) as f32 * 0.1 - 0.8).collect();
+            let labels: Vec<i32> = (0..lab_elems).map(|i| ((i as u64 + injected) % 4) as i32).collect();
+            ep.send(1, Message::Labels { batch: injected, is_eval: false, data: labels })
+                .unwrap();
+            central
+                .forward_train(&ep, injected, central.version, HostTensor::F32(x))
+                .unwrap();
+            injected += 1;
+        }
+        if let Some((_, msg)) = ep.recv_timeout(Duration::from_millis(20)) {
+            if let Message::Backward { batch, grad, loss, ncorrect, reports } = msg {
+                let done = central
+                    .backward(&ep, batch, grad, loss, ncorrect, reports)
+                    .unwrap();
+                let cb = done.expect("stage 0 completes batches");
+                losses.push(cb.loss);
+                completed += 1;
+            }
+        }
+    }
+    assert_eq!(completed, 8, "TCP pipeline must complete all batches");
+    assert!(losses.iter().all(|l| l.is_finite()));
+
+    ep.send(1, Message::Shutdown).unwrap();
+    h.join().unwrap();
+}
