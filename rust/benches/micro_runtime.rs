@@ -26,7 +26,7 @@ fn main() {
     let params = manifest.load_init_params(1).expect("params");
     let in_elems: usize = b.info.in_shape.iter().product();
     let x = match b.info.in_dtype {
-        Dtype::F32 => HostTensor::F32(vec![0.1; in_elems]),
+        Dtype::F32 => HostTensor::F32(vec![0.1; in_elems].into()),
         Dtype::I32 => HostTensor::I32(vec![1; in_elems]),
     };
     let y = b.forward(&params, &x).expect("fwd");
@@ -44,7 +44,7 @@ fn main() {
     let b0 = &blocks[0];
     let p0 = manifest.load_init_params(0).expect("params");
     let in0: usize = b0.info.in_shape.iter().product();
-    let x0 = HostTensor::F32(vec![0.1; in0]);
+    let x0 = HostTensor::F32(vec![0.1; in0].into());
     let s = bench(3, 30, || {
         let _ = b0.forward(&p0, &x0).unwrap();
     });
@@ -52,11 +52,12 @@ fn main() {
 
     // --- codec throughput on a Forward-sized message ---
     let act: usize = manifest.blocks[0].out_shape.iter().product();
+    let act_buf = ftpipehd::net::TensorBuf::from(vec![0.5f32; act]);
     let msg = Message::Forward {
         batch: 1,
         version0: 1,
         is_eval: false,
-        data: Payload::F32(vec![0.5; act]),
+        data: Payload::F32(act_buf.clone()),
     };
     let frame = codec::encode(0, &msg);
     let bytes = frame.len() as f64;
@@ -64,7 +65,18 @@ fn main() {
         let _ = codec::encode(0, &msg);
     });
     table.row(&[
-        format!("codec encode ({} KiB act)", (bytes / 1024.0) as u64),
+        format!("codec encode ({} KiB act, fresh buf)", (bytes / 1024.0) as u64),
+        format!("{:.1} us ({:.2} GB/s)", s.mean * 1e6, bytes / s.mean / 1e9),
+        format!("{:.1} us", s.p95 * 1e6),
+    ]);
+    // the TCP send path: serialize into one long-lived frame buffer
+    let mut wbuf: Vec<u8> = Vec::new();
+    codec::encode_into(&mut wbuf, 0, &msg);
+    let s = bench(10, 2000, || {
+        codec::encode_into(&mut wbuf, 0, &msg);
+    });
+    table.row(&[
+        "codec encode_into (reused buf)".into(),
         format!("{:.1} us ({:.2} GB/s)", s.mean * 1e6, bytes / s.mean / 1e9),
         format!("{:.1} us", s.p95 * 1e6),
     ]);
@@ -75,6 +87,29 @@ fn main() {
         "codec decode".into(),
         format!("{:.1} us ({:.2} GB/s)", s.mean * 1e6, bytes / s.mean / 1e9),
         format!("{:.1} us", s.p95 * 1e6),
+    ]);
+
+    // --- payload handling: the old deep copy vs the TensorBuf share ---
+    // (this delta is what every queue/stash/replica hop on the sim
+    // transport now saves; see rust/tests/zero_copy.rs for the proofs)
+    let raw: Vec<f32> = act_buf.to_vec();
+    let s = bench(10, 2000, || {
+        let copied = raw.clone();
+        std::hint::black_box(&copied);
+    });
+    table.row(&[
+        format!("activation deep copy ({} KiB)", (act * 4) as u64 / 1024),
+        format!("{:.2} us", s.mean * 1e6),
+        format!("{:.2} us", s.p95 * 1e6),
+    ]);
+    let s = bench(10, 2000, || {
+        let shared = act_buf.clone();
+        std::hint::black_box(&shared);
+    });
+    table.row(&[
+        "activation TensorBuf clone (shared)".into(),
+        format!("{:.3} us", s.mean * 1e6),
+        format!("{:.3} us", s.p95 * 1e6),
     ]);
 
     println!("# micro: data-plane hot path\n");

@@ -169,7 +169,7 @@ impl Checkpoint {
                         tensors[k]
                     ));
                 }
-                bp.push(data);
+                bp.push(data.into());
             }
             weights.insert(b, BlockParams(bp));
         }
@@ -186,8 +186,8 @@ mod tests {
         shapes.insert(0usize, vec![vec![2, 3], vec![3]]);
         shapes.insert(2usize, vec![vec![4]]);
         let mut weights = BTreeMap::new();
-        weights.insert(0, BlockParams(vec![vec![1.0; 6], vec![0.5; 3]]));
-        weights.insert(2, BlockParams(vec![vec![-2.0; 4]]));
+        weights.insert(0, BlockParams::from_vecs(vec![vec![1.0; 6], vec![0.5; 3]]));
+        weights.insert(2, BlockParams::from_vecs(vec![vec![-2.0; 4]]));
         Checkpoint {
             state: CheckpointState {
                 committed_batch: 99,

@@ -1,0 +1,540 @@
+//! The central node's steady-state phase: batch injection, the event
+//! dispatch loop, completion accounting, evaluation, and checkpointing.
+//!
+//! [`Central`] wraps the stage-0 [`StageWorker`] plus everything only the
+//! coordinator holds (dataset, profile, capacity estimator, fault
+//! detector, metrics). Incoming traffic is classified into the same
+//! [`Event`] vocabulary the workers use; the steady-state loop
+//! ([`Central::run_training`]) is the standard pump: inject up to the
+//! in-flight limit, drain events, run stage-0 compute, check the fault
+//! detector and the re-partition/checkpoint schedules.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::config::{Engine, RunConfig};
+use crate::data::DataSource;
+use crate::fault::FaultDetector;
+use crate::manifest::{Dtype, Manifest};
+use crate::metrics::{BatchRecord, EpochRecord, RunClock, RunRecord};
+use crate::model::BlockParams;
+use crate::net::message::{DeviceId, Message, TrainInit};
+use crate::net::sim::{SimEndpoint, SimNet};
+use crate::net::Transport;
+use crate::partition::Partition;
+use crate::pipeline::{CompletedBatch, ControlEvent, DataEvent, Event, StageWorker};
+use crate::profile::{CapacityEstimator, ModelProfile};
+use crate::runtime::HostTensor;
+use crate::{log_info, log_warn};
+
+use std::sync::Arc;
+
+pub(crate) struct Central {
+    pub(crate) cfg: RunConfig,
+    pub(crate) manifest: Arc<Manifest>,
+    pub(crate) worker: StageWorker,
+    pub(crate) endpoint: SimEndpoint,
+    pub(crate) net: SimNet,
+    pub(crate) profile: ModelProfile,
+    pub(crate) estimator: CapacityEstimator,
+    pub(crate) detector: FaultDetector,
+    pub(crate) measured_bw: Vec<f64>, // per link, from BwReports
+    pub(crate) record: RunRecord,
+    pub(crate) clock: RunClock,
+    // training pointers
+    pub(crate) next_inject: u64,
+    pub(crate) inflight: usize,
+    pub(crate) completed: i64,
+    pub(crate) total_batches: u64,
+    pub(crate) last_completion_s: f64,
+    // per-epoch accumulators
+    pub(crate) epoch_correct: f64,
+    pub(crate) epoch_batches: u64,
+    // fault plan
+    pub(crate) fault_armed: bool,
+    pub(crate) last_checkpoint: u64,
+    pub(crate) data: Box<dyn DataSource>,
+}
+
+impl Central {
+    pub(crate) fn n_stages(&self) -> usize {
+        self.worker.n_stages()
+    }
+
+    fn last_device(&self) -> DeviceId {
+        *self.worker.worker_list.last().unwrap()
+    }
+
+    fn limit(&self) -> usize {
+        match self.cfg.engine {
+            Engine::SyncPipeline => 1,
+            _ => self.cfg.inflight_limit.unwrap_or(self.n_stages()),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // injection
+    // ------------------------------------------------------------------
+
+    fn inject_one(&mut self) -> Result<()> {
+        let batch = self.next_inject;
+        let data = self.data.train_batch(batch, self.manifest.batch_size);
+        // labels go straight to the last stage (central holds the data)
+        if self.n_stages() > 1 {
+            self.endpoint.send(
+                self.last_device(),
+                Message::Labels { batch, is_eval: false, data: data.labels.clone() },
+            )?;
+        } else {
+            self.worker.handle_message(&self.endpoint, 0, Message::Labels {
+                batch,
+                is_eval: false,
+                data: data.labels.clone(),
+            })?;
+        }
+        // the input tensor is moved (not copied) into the pipeline
+        let x = match self.manifest.input_dtype {
+            Dtype::F32 => HostTensor::F32(data.x_f32.into()),
+            Dtype::I32 => HostTensor::I32(data.x_i32),
+        };
+        let done = self
+            .worker
+            .forward_train(&self.endpoint, batch, self.worker.version, x)?;
+        self.detector.arm(batch);
+        self.inflight += 1;
+        self.next_inject += 1;
+        if let Some(cb) = done {
+            // single-stage pipeline completes synchronously
+            self.on_complete(cb)?;
+        }
+        // fault injection: kill the worker while this batch is in flight
+        if let Some(f) = self.cfg.fault.clone() {
+            if !self.fault_armed && batch + 1 >= f.at_batch {
+                self.fault_armed = true;
+                let dev = f.kill_device;
+                log_info!("FAULT INJECTION: killing device {dev} at batch {batch}");
+                self.record.event(&self.clock, format!("kill device {dev}"));
+                self.net.kill(dev);
+                if f.restarts {
+                    // the device restarts (empty state) almost immediately
+                    let net = self.net.clone();
+                    std::thread::spawn(move || {
+                        std::thread::sleep(Duration::from_millis(300));
+                        net.revive(dev);
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // completion
+    // ------------------------------------------------------------------
+
+    pub(crate) fn on_complete(&mut self, cb: CompletedBatch) -> Result<()> {
+        self.detector.disarm(cb.batch);
+        self.inflight = self.inflight.saturating_sub(1);
+        self.completed = self.completed.max(cb.batch as i64);
+        for r in &cb.reports {
+            self.estimator.ingest(r);
+        }
+        let now = self.clock.now_s();
+        let wall_ms = (now - self.last_completion_s) * 1e3;
+        self.last_completion_s = now;
+        let acc = cb.ncorrect / self.manifest.acc_denom as f32;
+        self.epoch_correct += cb.ncorrect as f64;
+        self.epoch_batches += 1;
+        if self.cfg.verbose {
+            log_info!(
+                "batch {} loss={:.4} acc={:.3} wall={:.1}ms inflight={}",
+                cb.batch,
+                cb.loss,
+                acc,
+                wall_ms,
+                self.inflight
+            );
+        }
+        self.record.batches.push(BatchRecord {
+            batch: cb.batch,
+            loss: cb.loss,
+            train_acc: acc,
+            wall_ms,
+            at_s: now,
+        });
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // event dispatch
+    // ------------------------------------------------------------------
+
+    /// Handle one incoming message at the central node: classify into the
+    /// shared [`Event`] vocabulary and dispatch.
+    pub(crate) fn on_message(&mut self, from: DeviceId, msg: Message) -> Result<()> {
+        self.on_event(Event::from_message(from, msg))
+    }
+
+    /// Central-specific event handling; everything else shares the
+    /// stage-0 worker's handlers.
+    pub(crate) fn on_event(&mut self, ev: Event) -> Result<()> {
+        match ev {
+            Event::Data(DataEvent::Backward { batch, grad, loss, ncorrect, reports }) => {
+                if self.worker.status == 0 {
+                    let done = self
+                        .worker
+                        .backward(&self.endpoint, batch, grad, loss, ncorrect, reports)?;
+                    if let Some(cb) = done {
+                        self.on_complete(cb)?;
+                    }
+                }
+            }
+            // eval results are consumed by `pump_for` during evaluation;
+            // one arriving outside an eval window is stale — drop it
+            Event::Data(DataEvent::EvalResult { .. }) => {}
+            Event::Control(ControlEvent::BwReport { stage, bps }) => {
+                if stage < self.measured_bw.len() {
+                    self.measured_bw[stage] = bps;
+                }
+            }
+            Event::Control(ControlEvent::Weights { from, blocks }) => {
+                self.worker.handle_weights(&self.endpoint, from, blocks)?;
+            }
+            other => {
+                // control traffic shared with workers (replica pushes into
+                // the global store, fetch serving, probes, bw tests, ...)
+                self.worker.on_event(&self.endpoint, other)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Drain the inbox for up to `dur`, dispatching everything. Returns
+    /// the eval results observed.
+    pub(crate) fn pump_for(&mut self, dur: Duration) -> Result<Vec<(u64, f32, f32)>> {
+        let deadline = Instant::now() + dur;
+        let mut evals = Vec::new();
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match self.endpoint.recv_timeout(left.min(Duration::from_millis(5))) {
+                Some((from, msg)) => match Event::from_message(from, msg) {
+                    Event::Data(DataEvent::EvalResult { batch, loss, ncorrect }) => {
+                        evals.push((batch, loss, ncorrect));
+                    }
+                    ev => self.on_event(ev)?,
+                },
+                None => {}
+            }
+            if Instant::now() >= deadline {
+                return Ok(evals);
+            }
+        }
+    }
+
+    /// Wait until all in-flight batches complete (or a fault fires).
+    pub(crate) fn drain(&mut self) -> Result<()> {
+        let deadline = Instant::now() + Duration::from_millis(self.cfg.fault_timeout_ms * 2);
+        while self.inflight > 0 {
+            if let Some((from, msg)) = self.endpoint.recv_timeout(Duration::from_millis(5)) {
+                self.on_message(from, msg)?;
+            }
+            if let Some(b) = self.detector.overdue() {
+                self.handle_fault(b)?;
+            }
+            if Instant::now() > deadline {
+                bail!("drain timed out with {} in flight", self.inflight);
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // evaluation (forward-only through the pipeline)
+    // ------------------------------------------------------------------
+
+    fn evaluate(&mut self) -> Result<(f32, f32)> {
+        let nb = self.cfg.eval_batches as u64;
+        if nb == 0 {
+            return Ok((f32::NAN, f32::NAN));
+        }
+        self.drain()?;
+        let mut results: Vec<(f32, f32)> = Vec::new();
+        for b in 0..nb {
+            let data = self.data.val_batch(b, self.manifest.batch_size);
+            if self.n_stages() > 1 {
+                self.endpoint.send(
+                    self.last_device(),
+                    Message::Labels { batch: b, is_eval: true, data: data.labels.clone() },
+                )?;
+            } else {
+                self.worker.handle_message(&self.endpoint, 0, Message::Labels {
+                    batch: b,
+                    is_eval: true,
+                    data: data.labels.clone(),
+                })?;
+            }
+            let x = match self.manifest.input_dtype {
+                Dtype::F32 => HostTensor::F32(data.x_f32.into()),
+                Dtype::I32 => HostTensor::I32(data.x_i32),
+            };
+            if let Some((loss, nc)) = self.worker.forward_eval(&self.endpoint, b, x)? {
+                results.push((loss, nc));
+            }
+        }
+        // collect results coming back from the last stage
+        let deadline = Instant::now() + Duration::from_secs(120);
+        while results.len() < nb as usize {
+            let evals = self.pump_for(Duration::from_millis(20))?;
+            for (_, l, c) in evals {
+                results.push((l, c));
+            }
+            if Instant::now() > deadline {
+                log_warn!("eval timed out: {}/{} results", results.len(), nb);
+                break;
+            }
+        }
+        if results.is_empty() {
+            return Ok((f32::NAN, f32::NAN));
+        }
+        let n = results.len() as f32;
+        let loss = results.iter().map(|(l, _)| l).sum::<f32>() / n;
+        let acc = results.iter().map(|(_, c)| c).sum::<f32>()
+            / (n * self.manifest.acc_denom as f32);
+        Ok((loss, acc))
+    }
+
+    // ------------------------------------------------------------------
+    // checkpointing (paper §III-E)
+    // ------------------------------------------------------------------
+
+    /// Save everything the central node can see (its own stage + the
+    /// newest global/chain replicas) to disk. Completeness of the worker
+    /// stages depends on the replication period — exactly the paper's
+    /// §III-E tradeoff.
+    fn save_checkpoint(&mut self, dir: &str, epoch: u64) -> Result<()> {
+        use crate::checkpoint::{Checkpoint, CheckpointState};
+        let mut weights: BTreeMap<usize, BlockParams> = BTreeMap::new();
+        for (&b, bp) in &self.worker.params.blocks {
+            weights.insert(b, bp.clone());
+        }
+        for b in 0..self.manifest.n_blocks() {
+            if weights.contains_key(&b) {
+                continue;
+            }
+            if let Some(bp) = self.worker.backups.find_block(b) {
+                weights.insert(b, bp.clone());
+            }
+        }
+        let mut shapes: BTreeMap<usize, Vec<Vec<usize>>> = BTreeMap::new();
+        for (&b, _) in &weights {
+            shapes.insert(
+                b,
+                self.manifest.blocks[b].params.iter().map(|p| p.shape.clone()).collect(),
+            );
+        }
+        let ck = Checkpoint {
+            state: CheckpointState {
+                committed_batch: self.completed,
+                epoch,
+                lr: self.worker.sgd.cfg.lr,
+                ranges: self.worker.ranges.clone(),
+                worker_list: self.worker.worker_list.clone(),
+                shapes,
+            },
+            weights,
+        };
+        ck.save(dir)?;
+        self.record.event(
+            &self.clock,
+            format!("checkpoint at batch {} ({} blocks)", self.completed, ck.weights.len()),
+        );
+        Ok(())
+    }
+
+    pub(crate) fn train_init(
+        &self,
+        ranges: Partition,
+        worker_list: Vec<DeviceId>,
+        status: u8,
+    ) -> TrainInit {
+        let agg = match self.cfg.engine {
+            Engine::FtPipeHd => self.cfg.agg_interval_k.unwrap_or(0) as u32,
+            _ => 0,
+        };
+        let (chain, global) = match self.cfg.engine {
+            Engine::FtPipeHd => (
+                self.cfg.chain_every.unwrap_or(0),
+                self.cfg.global_every.unwrap_or(0),
+            ),
+            Engine::ResPipe => (self.cfg.chain_every.unwrap_or(0), 0),
+            _ => (0, 0),
+        };
+        TrainInit {
+            committed_forward: -1,
+            committed_backward: -1,
+            lr: self.cfg.lr,
+            momentum: self.cfg.momentum,
+            weight_decay: self.cfg.weight_decay,
+            epochs: self.cfg.epochs as u64,
+            batches_per_epoch: self.cfg.batches_per_epoch as u64,
+            ranges,
+            worker_list,
+            agg_k: agg,
+            chain_every: chain,
+            global_every: global,
+            status,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // the steady-state training phase
+    // ------------------------------------------------------------------
+
+    /// Drive training to completion: the online stage of the paper's
+    /// protocol, with fault detection and the dynamic re-partition and
+    /// checkpoint schedules folded into the loop.
+    pub(crate) fn run_training(&mut self) -> Result<()> {
+        self.record.event(&self.clock, "training start".to_string());
+
+        let repart_first = match self.cfg.engine {
+            Engine::FtPipeHd => self.cfg.repartition_first,
+            _ => None,
+        };
+        let repart_every = match self.cfg.engine {
+            Engine::FtPipeHd => self.cfg.repartition_every,
+            _ => None,
+        };
+        let mut next_repart: Option<u64> = repart_first;
+        let mut epoch = 0u64;
+        let batches_per_epoch = self.cfg.batches_per_epoch as u64;
+        let checkpoint_cfg = self.cfg.checkpoint.clone();
+
+        while self.completed + 1 < self.total_batches as i64 {
+            // inject up to the in-flight limit
+            while self.next_inject < self.total_batches
+                && self.inflight < self.limit()
+                && self.worker.status == 0
+            {
+                // stop at epoch boundary until eval runs
+                if self.next_inject / batches_per_epoch > epoch {
+                    break;
+                }
+                self.inject_one()?;
+            }
+
+            // receive
+            if let Some((from, msg)) = self.endpoint.recv_timeout(Duration::from_millis(2)) {
+                self.on_message(from, msg)?;
+                while let Some((from, msg)) = self.endpoint.recv_timeout(Duration::ZERO) {
+                    self.on_message(from, msg)?;
+                }
+            }
+            // let the stage-0 worker compute queued backwards (it computes
+            // inline in dispatch; pump for queued forwards in 1-stage mode)
+            self.worker.pump(&self.endpoint)?;
+
+            // fault detection
+            if let Some(b) = self.detector.overdue() {
+                self.handle_fault(b)?;
+            }
+
+            // dynamic re-partition schedule
+            if let Some(at) = next_repart {
+                if self.completed >= at as i64 {
+                    self.dynamic_repartition()?;
+                    next_repart = repart_every.map(|e| at + e);
+                }
+            }
+
+            // epoch boundary: drain + evaluate
+            let done_in_epoch = (self.completed + 1) as u64;
+            if done_in_epoch >= (epoch + 1) * batches_per_epoch {
+                let train_acc = (self.epoch_correct
+                    / (self.epoch_batches.max(1) as f64 * self.manifest.acc_denom as f64))
+                    as f32;
+                let (val_loss, val_acc) = self.evaluate()?;
+                let at_s = self.clock.now_s();
+                log_info!(
+                    "epoch {epoch}: train_acc={train_acc:.3} val_loss={val_loss:.4} val_acc={val_acc:.3} ({at_s:.1}s)"
+                );
+                self.record.epochs.push(EpochRecord {
+                    epoch,
+                    train_acc,
+                    val_loss,
+                    val_acc,
+                    at_s,
+                });
+                self.epoch_correct = 0.0;
+                self.epoch_batches = 0;
+                epoch += 1;
+                // learning-rate schedule (paper §IV-C)
+                let drops = self.cfg.lr_drops.clone();
+                for &(at_epoch, lr) in &drops {
+                    if at_epoch as u64 == epoch {
+                        log_info!("epoch {epoch}: setting lr to {lr}");
+                        self.worker.sgd.set_lr(lr);
+                        for &d in self.worker.worker_list.clone().iter().filter(|&&d| d != 0) {
+                            self.endpoint.send(d, Message::SetLr { lr })?;
+                        }
+                    }
+                }
+            }
+
+            // central-node checkpoint (paper §III-E: periodic save-to-disk)
+            if let Some((dir, every)) = &checkpoint_cfg {
+                let done = (self.completed + 1) as u64;
+                if *every > 0 && done > 0 && done % every == 0 && self.last_checkpoint != done {
+                    self.last_checkpoint = done;
+                    self.save_checkpoint(dir, epoch)?;
+                }
+            }
+        }
+
+        self.record.event(&self.clock, "training done".to_string());
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // final-weights collection
+    // ------------------------------------------------------------------
+
+    /// Fetch every stage's trained weights back to the central node.
+    pub(crate) fn collect_final_weights(&mut self) -> Result<BTreeMap<usize, BlockParams>> {
+        let mut final_weights: BTreeMap<usize, BlockParams> = BTreeMap::new();
+        for (b, bp) in &self.worker.params.blocks {
+            final_weights.insert(*b, bp.clone());
+        }
+        let peers: Vec<(usize, DeviceId)> = self
+            .worker
+            .worker_list
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d != 0)
+            .map(|(s, &d)| (s, d))
+            .collect();
+        for &(stage, dev) in &peers {
+            let (lo, hi) = self.worker.ranges[stage];
+            self.endpoint
+                .send(dev, Message::FetchWeights { blocks: (lo..=hi).collect() })?;
+        }
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let mut expect: usize = peers
+            .iter()
+            .map(|&(s, _)| self.worker.ranges[s].1 - self.worker.ranges[s].0 + 1)
+            .sum();
+        while expect > 0 && Instant::now() < deadline {
+            if let Some((_, Message::Weights { blocks })) =
+                self.endpoint.recv_timeout(Duration::from_millis(10))
+            {
+                for (idx, tensors) in blocks {
+                    if final_weights.insert(idx, BlockParams(tensors)).is_none() {
+                        expect -= 1;
+                    }
+                }
+            }
+        }
+        Ok(final_weights)
+    }
+}

@@ -1,36 +1,41 @@
-//! The central-node coordinator: offline-stage initialization (§III-B),
-//! the online training driver, dynamic re-partition scheduling (§III-D),
-//! and the fault-tolerance handler's three cases (§III-F).
+//! The central-node coordinator, decomposed into phases that share one
+//! event vocabulary ([`crate::pipeline::Event`]):
 //!
-//! [`run_sim`] stands up the whole system in-process: one thread per
+//! - `offline` — §III-B bootstrap: spawn simulated devices, profile the
+//!   model, initial capacity-blind partition, readiness barrier,
+//!   training-init broadcast, warm-start weight push
+//! - `central` — the steady-state training driver: injection up to the
+//!   in-flight limit, event dispatch, stage-0 compute, evaluation,
+//!   checkpointing
+//! - `recovery` — §III-D dynamic re-partition and the §III-F fault
+//!   handler's three cases, both funneling into the shared
+//!   `Repartition -> fetch -> FetchDone -> Commit` protocol
+//!
+//! [`run_sim_full`] chains the phases in-process: one thread per
 //! simulated device (each with its own PJRT engine), the bandwidth-
-//! modeled [`SimNet`], and the central node driving training from the
-//! calling thread. Baseline engines (PipeDream / ResPipe / single-device
-//! / sync) reuse the same driver with features toggled — see
-//! [`crate::config::Engine`].
+//! modeled [`crate::net::sim::SimNet`], and the central node driving
+//! training from the calling thread. Baseline engines (PipeDream /
+//! ResPipe / single-device / sync) reuse the same driver with features
+//! toggled — see [`crate::config::Engine`].
 
-use std::collections::{BTreeMap, BTreeSet};
-use std::sync::Arc;
-use std::time::{Duration, Instant};
+mod central;
+mod offline;
+mod recovery;
 
-use anyhow::{bail, Result};
+use std::collections::BTreeMap;
 
-use crate::config::{Engine, RunConfig};
-use crate::data::{Batch, DataSource, SynthLm, SynthVision};
-use crate::device::SimDevice;
-use crate::fault::{renumber_worker_list, FaultDetector};
-use crate::manifest::{Dtype, Manifest};
-use crate::metrics::{BatchRecord, EpochRecord, RunClock, RunRecord};
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::data::DataSource;
+use crate::metrics::RunRecord;
 use crate::model::BlockParams;
-use crate::net::message::{DeviceId, Message, Payload, TrainInit};
-use crate::net::sim::{SimEndpoint, SimNet};
+use crate::net::message::Message;
 use crate::net::Transport;
-use crate::partition::{homogeneous_partition, optimal_partition, CostModel, Partition};
 use crate::pipeline::trace::TraceSink;
-use crate::pipeline::{run_worker, CompletedBatch, StageWorker};
-use crate::profile::{profile_model, CapacityEstimator, ModelProfile};
-use crate::runtime::{load_all_blocks, Engine as XlaEngine, HostTensor};
-use crate::{log_debug, log_info, log_warn};
+use crate::{log_debug, log_warn};
+
+pub use offline::default_datasource;
 
 /// Options beyond [`RunConfig`] (custom data, tracing, warm-start weights).
 #[derive(Default)]
@@ -57,956 +62,28 @@ pub fn run_sim(cfg: &RunConfig) -> Result<RunRecord> {
     Ok(run_sim_full(cfg, RunOpts::default())?.record)
 }
 
-/// Build the default synthetic data source for a compiled model.
-pub fn default_datasource(manifest: &Manifest, seed: u64) -> Box<dyn DataSource> {
-    match manifest.input_dtype {
-        Dtype::F32 => {
-            let dim: usize = manifest.input_shape.iter().skip(1).product();
-            let classes = manifest.n_classes.unwrap_or(10);
-            Box::new(SynthVision::new(dim, classes, 0.6, seed, 0))
+/// Run a full training job in single-process simulation: offline
+/// bootstrap, steady-state training (with recovery on faults), then
+/// final-weights collection and shutdown.
+pub fn run_sim_full(cfg: &RunConfig, opts: RunOpts) -> Result<RunOutput> {
+    let boot = match offline::bootstrap(cfg, opts)? {
+        offline::BootResult::Ready(boot) => boot,
+        offline::BootResult::Oom(record) => {
+            return Ok(RunOutput { record, final_weights: BTreeMap::new() })
         }
-        Dtype::I32 => {
-            let vocab = manifest.vocab.unwrap_or(512);
-            let seq = manifest.seq.unwrap_or(64);
-            Box::new(SynthLm::new(vocab, seq, seed))
-        }
-    }
-}
-
-struct Central {
-    cfg: RunConfig,
-    manifest: Arc<Manifest>,
-    worker: StageWorker,
-    endpoint: SimEndpoint,
-    net: SimNet,
-    profile: ModelProfile,
-    estimator: CapacityEstimator,
-    detector: FaultDetector,
-    measured_bw: Vec<f64>, // per link, from BwReports
-    record: RunRecord,
-    clock: RunClock,
-    // training pointers
-    next_inject: u64,
-    inflight: usize,
-    completed: i64,
-    total_batches: u64,
-    last_completion_s: f64,
-    // per-epoch accumulators
-    epoch_correct: f64,
-    epoch_batches: u64,
-    // fault plan
-    fault_armed: bool,
-    last_checkpoint: u64,
-    data: Box<dyn DataSource>,
-}
-
-impl Central {
-    fn device_of_stage(&self, stage: usize) -> DeviceId {
-        self.worker.worker_list[stage]
-    }
-
-    fn n_stages(&self) -> usize {
-        self.worker.n_stages()
-    }
-
-    fn last_device(&self) -> DeviceId {
-        *self.worker.worker_list.last().unwrap()
-    }
-
-    fn limit(&self) -> usize {
-        match self.cfg.engine {
-            Engine::SyncPipeline => 1,
-            _ => self.cfg.inflight_limit.unwrap_or(self.n_stages()),
-        }
-    }
-
-    // ------------------------------------------------------------------
-    // injection
-    // ------------------------------------------------------------------
-
-    fn batch_payload(&self, b: &Batch) -> Payload {
-        match self.manifest.input_dtype {
-            Dtype::F32 => Payload::F32(b.x_f32.clone()),
-            Dtype::I32 => Payload::I32(b.x_i32.clone()),
-        }
-    }
-
-    fn inject_one(&mut self) -> Result<()> {
-        let batch = self.next_inject;
-        let data = self.data.train_batch(batch, self.manifest.batch_size);
-        // labels go straight to the last stage (central holds the data)
-        if self.n_stages() > 1 {
-            self.endpoint.send(
-                self.last_device(),
-                Message::Labels { batch, is_eval: false, data: data.labels.clone() },
-            )?;
-        } else {
-            self.worker
-                .handle_message(&self.endpoint, 0, Message::Labels {
-                    batch,
-                    is_eval: false,
-                    data: data.labels.clone(),
-                })?;
-        }
-        let x = match self.batch_payload(&data) {
-            Payload::F32(v) => HostTensor::F32(v),
-            Payload::I32(v) => HostTensor::I32(v),
-        };
-        let done = self
-            .worker
-            .forward_train(&self.endpoint, batch, self.worker.version, x)?;
-        self.detector.arm(batch);
-        self.inflight += 1;
-        self.next_inject += 1;
-        if let Some(cb) = done {
-            // single-stage pipeline completes synchronously
-            self.on_complete(cb)?;
-        }
-        // fault injection: kill the worker while this batch is in flight
-        if let Some(f) = self.cfg.fault.clone() {
-            if !self.fault_armed && batch + 1 >= f.at_batch {
-                self.fault_armed = true;
-                let dev = f.kill_device;
-                log_info!("FAULT INJECTION: killing device {dev} at batch {batch}");
-                self.record.event(&self.clock, format!("kill device {dev}"));
-                self.net.kill(dev);
-                if f.restarts {
-                    // the device restarts (empty state) almost immediately
-                    let net = self.net.clone();
-                    std::thread::spawn(move || {
-                        std::thread::sleep(Duration::from_millis(300));
-                        net.revive(dev);
-                    });
-                }
-            }
-        }
-        Ok(())
-    }
-
-    // ------------------------------------------------------------------
-    // completion
-    // ------------------------------------------------------------------
-
-    fn on_complete(&mut self, cb: CompletedBatch) -> Result<()> {
-        self.detector.disarm(cb.batch);
-        self.inflight = self.inflight.saturating_sub(1);
-        self.completed = self.completed.max(cb.batch as i64);
-        for r in &cb.reports {
-            self.estimator.ingest(r);
-        }
-        let now = self.clock.now_s();
-        let wall_ms = (now - self.last_completion_s) * 1e3;
-        self.last_completion_s = now;
-        let acc = cb.ncorrect / self.manifest.acc_denom as f32;
-        self.epoch_correct += cb.ncorrect as f64;
-        self.epoch_batches += 1;
-        if self.cfg.verbose {
-            log_info!(
-                "batch {} loss={:.4} acc={:.3} wall={:.1}ms inflight={}",
-                cb.batch,
-                cb.loss,
-                acc,
-                wall_ms,
-                self.inflight
-            );
-        }
-        self.record.batches.push(BatchRecord {
-            batch: cb.batch,
-            loss: cb.loss,
-            train_acc: acc,
-            wall_ms,
-            at_s: now,
-        });
-        Ok(())
-    }
-
-    // ------------------------------------------------------------------
-    // message loop
-    // ------------------------------------------------------------------
-
-    /// Handle one incoming message at the central node.
-    fn dispatch(&mut self, from: DeviceId, msg: Message) -> Result<()> {
-        match msg {
-            Message::Backward { batch, grad, loss, ncorrect, reports } => {
-                if self.worker.status == 0 {
-                    let done =
-                        self.worker
-                            .backward(&self.endpoint, batch, grad, loss, ncorrect, reports)?;
-                    if let Some(cb) = done {
-                        self.on_complete(cb)?;
-                    }
-                }
-            }
-            Message::BwReport { stage, bps } => {
-                if stage < self.measured_bw.len() {
-                    self.measured_bw[stage] = bps;
-                }
-            }
-            Message::Weights { blocks } => {
-                self.worker.handle_weights(&self.endpoint, from, blocks)?;
-            }
-            other => {
-                // control traffic shared with workers (replica pushes into
-                // the global store, fetch serving, probes, bw tests, ...)
-                self.worker.handle_message(&self.endpoint, from, other)?;
-            }
-        }
-        Ok(())
-    }
-
-    /// Drain the inbox for up to `dur`, dispatching everything.
-    fn pump_for(&mut self, dur: Duration) -> Result<Vec<(u64, f32, f32)>> {
-        // returns eval results observed
-        let deadline = Instant::now() + dur;
-        let mut evals = Vec::new();
-        loop {
-            let left = deadline.saturating_duration_since(Instant::now());
-            match self.endpoint.recv_timeout(left.min(Duration::from_millis(5))) {
-                Some((from, Message::EvalResult { batch, loss, ncorrect })) => {
-                    let _ = from;
-                    evals.push((batch, loss, ncorrect));
-                }
-                Some((from, msg)) => self.dispatch(from, msg)?,
-                None => {}
-            }
-            if Instant::now() >= deadline {
-                return Ok(evals);
-            }
-        }
-    }
-
-    /// Wait until all in-flight batches complete (or a fault fires).
-    fn drain(&mut self) -> Result<()> {
-        let deadline = Instant::now() + Duration::from_millis(self.cfg.fault_timeout_ms * 2);
-        while self.inflight > 0 {
-            if let Some((from, msg)) = self.endpoint.recv_timeout(Duration::from_millis(5)) {
-                self.dispatch(from, msg)?;
-            }
-            if let Some(b) = self.detector.overdue() {
-                self.handle_fault(b)?;
-            }
-            if Instant::now() > deadline {
-                bail!("drain timed out with {} in flight", self.inflight);
-            }
-        }
-        Ok(())
-    }
-
-    // ------------------------------------------------------------------
-    // evaluation (forward-only through the pipeline)
-    // ------------------------------------------------------------------
-
-    fn evaluate(&mut self) -> Result<(f32, f32)> {
-        let nb = self.cfg.eval_batches as u64;
-        if nb == 0 {
-            return Ok((f32::NAN, f32::NAN));
-        }
-        self.drain()?;
-        let mut results: Vec<(f32, f32)> = Vec::new();
-        for b in 0..nb {
-            let data = self.data.val_batch(b, self.manifest.batch_size);
-            if self.n_stages() > 1 {
-                self.endpoint.send(
-                    self.last_device(),
-                    Message::Labels { batch: b, is_eval: true, data: data.labels.clone() },
-                )?;
-            } else {
-                self.worker.handle_message(&self.endpoint, 0, Message::Labels {
-                    batch: b,
-                    is_eval: true,
-                    data: data.labels.clone(),
-                })?;
-            }
-            let x = match self.manifest.input_dtype {
-                Dtype::F32 => HostTensor::F32(data.x_f32),
-                Dtype::I32 => HostTensor::I32(data.x_i32),
-            };
-            if let Some((loss, nc)) = self.worker.forward_eval(&self.endpoint, b, x)? {
-                results.push((loss, nc));
-            }
-        }
-        // collect results coming back from the last stage
-        let deadline = Instant::now() + Duration::from_secs(120);
-        while results.len() < nb as usize {
-            let evals = self.pump_for(Duration::from_millis(20))?;
-            for (_, l, c) in evals {
-                results.push((l, c));
-            }
-            if Instant::now() > deadline {
-                log_warn!("eval timed out: {}/{} results", results.len(), nb);
-                break;
-            }
-        }
-        if results.is_empty() {
-            return Ok((f32::NAN, f32::NAN));
-        }
-        let n = results.len() as f32;
-        let loss = results.iter().map(|(l, _)| l).sum::<f32>() / n;
-        let acc = results.iter().map(|(_, c)| c).sum::<f32>()
-            / (n * self.manifest.acc_denom as f32);
-        Ok((loss, acc))
-    }
-
-    // ------------------------------------------------------------------
-    // dynamic re-partition (paper §III-D)
-    // ------------------------------------------------------------------
-
-    fn current_cost_model(&self, worker_list: &[DeviceId], old_ranges: &[(usize, usize)]) -> CostModel {
-        // central's own online/offline ratio cancels host-contention in sim
-        let central_ratio = match (self.worker.avg_exec_ms(), self.worker.my_range()) {
-            (Some(avg), Some((lo, hi))) => {
-                let base: f64 = self.profile.t0_ms[lo..=hi].iter().sum();
-                if base > 0.0 { avg / base } else { 1.0 }
-            }
-            _ => 1.0,
-        };
-        let caps = self
-            .estimator
-            .capacities(worker_list, old_ranges, &self.profile.t0_ms, central_ratio);
-        let n = worker_list.len();
-        let mut bw = Vec::with_capacity(n.saturating_sub(1));
-        for link in 0..n.saturating_sub(1) {
-            let measured = self.measured_bw.get(link).copied().unwrap_or(0.0);
-            bw.push(if measured > 0.0 { measured } else { self.cfg.bandwidth(link.min(self.cfg.bandwidth_bps.len().saturating_sub(1))) });
-        }
-        CostModel {
-            t0_ms: self.profile.t0_ms.clone(),
-            out_bytes: self.profile.out_bytes.clone(),
-            capacities: caps,
-            bandwidth_bps: bw,
-        }
-    }
-
-    /// Drain, recompute the optimal cuts from live capacity estimates, and
-    /// run the redistribution protocol if the partition changed.
-    fn dynamic_repartition(&mut self) -> Result<()> {
-        self.drain()?;
-        let worker_list = self.worker.worker_list.clone();
-        let old_ranges = self.worker.ranges.clone();
-        let cm = self.current_cost_model(&worker_list, &old_ranges);
-        let (new_ranges, cost) = optimal_partition(&cm);
-        self.record
-            .event(&self.clock, format!("repartition check: caps={:?}", cm.capacities));
-        if new_ranges == old_ranges {
-            return Ok(());
-        }
-        log_info!(
-            "dynamic re-partition at batch {}: {:?} -> {:?} (predicted bottleneck {:.1}ms)",
-            self.completed,
-            old_ranges,
-            new_ranges,
-            cost
-        );
-        self.record.event(&self.clock, format!("repartition {new_ranges:?}"));
-        self.run_redistribution(new_ranges.clone(), worker_list, vec![])?;
-        self.record.partitions.push((self.completed.max(0) as u64, new_ranges));
-        Ok(())
-    }
-
-    /// The shared Repartition -> fetch -> FetchDone -> Commit protocol.
-    fn run_redistribution(
-        &mut self,
-        ranges: Partition,
-        worker_list: Vec<DeviceId>,
-        failed: Vec<usize>,
-    ) -> Result<()> {
-        let workers: Vec<DeviceId> =
-            worker_list.iter().copied().filter(|&d| d != self.worker.device_id).collect();
-        for &d in &workers {
-            self.endpoint.send(
-                d,
-                Message::Repartition {
-                    ranges: ranges.clone(),
-                    worker_list: worker_list.clone(),
-                    failed: failed.clone(),
-                },
-            )?;
-        }
-        self.worker.begin_repartition(
-            &self.endpoint,
-            ranges.clone(),
-            worker_list.clone(),
-            failed,
-        )?;
-
-        // await FetchDone from every worker + our own completion
-        let mut done: BTreeSet<DeviceId> = BTreeSet::new();
-        let deadline = Instant::now() + Duration::from_secs(60);
-        while done.len() < workers.len() || !self.worker.fetch_done() {
-            match self.endpoint.recv_timeout(Duration::from_millis(5)) {
-                Some((_, Message::FetchDone { id })) => {
-                    done.insert(id);
-                }
-                Some((from, Message::Weights { blocks })) => {
-                    self.worker.handle_weights(&self.endpoint, from, blocks)?;
-                }
-                Some((from, Message::FetchWeights { blocks })) => {
-                    self.worker.serve_fetch(&self.endpoint, from, &blocks)?;
-                }
-                Some((from, msg)) => self.dispatch(from, msg)?,
-                None => {}
-            }
-            if Instant::now() > deadline {
-                bail!(
-                    "redistribution timed out ({} of {} workers done)",
-                    done.len(),
-                    workers.len()
-                );
-            }
-        }
-
-        // commit everywhere (paper's commit message)
-        for &d in &workers {
-            self.endpoint.send(d, Message::Commit)?;
-        }
-        self.worker.apply_commit()?;
-        Ok(())
-    }
-
-    // ------------------------------------------------------------------
-    // fault tolerance (paper §III-F)
-    // ------------------------------------------------------------------
-
-    fn handle_fault(&mut self, overdue_batch: u64) -> Result<()> {
-        let t_start = Instant::now();
-        log_warn!(
-            "FAULT: no gradient for batch {overdue_batch} within timeout; probing workers"
-        );
-        self.record.event(&self.clock, format!("fault detected at batch {overdue_batch}"));
-        self.worker.status = 1;
-
-        // probe all current workers
-        let worker_list = self.worker.worker_list.clone();
-        let peers: Vec<DeviceId> = worker_list
-            .iter()
-            .copied()
-            .filter(|&d| d != self.worker.device_id)
-            .collect();
-        for &d in &peers {
-            self.endpoint.send(d, Message::Probe)?;
-        }
-        let mut acks: BTreeMap<DeviceId, bool> = BTreeMap::new(); // id -> fresh
-        let probe_deadline = Instant::now() + Duration::from_millis(1500);
-        while acks.len() < peers.len() && Instant::now() < probe_deadline {
-            match self.endpoint.recv_timeout(Duration::from_millis(10)) {
-                Some((_, Message::ProbeAck { id, fresh })) => {
-                    acks.insert(id, fresh);
-                }
-                Some((_, Message::Backward { .. })) | Some((_, Message::Forward { .. })) => {
-                    // stale data traffic during recovery: discard
-                }
-                Some((from, msg)) => self.dispatch(from, msg)?,
-                None => {}
-            }
-        }
-        let dead: Vec<DeviceId> =
-            peers.iter().copied().filter(|d| !acks.contains_key(d)).collect();
-        let fresh: Vec<DeviceId> =
-            acks.iter().filter(|(_, &f)| f).map(|(&d, _)| d).collect();
-        let detect_s = t_start.elapsed().as_secs_f64();
-        // Table III's "recover overhead" is the work AFTER the failed
-        // worker is identified (renumber + re-partition + weight
-        // redistribution + reset); detection/probing cost is identical
-        // across systems and reported separately as an event.
-        let t_redist = Instant::now();
-
-        let committed = self.completed;
-        if dead.is_empty() && fresh.is_empty() {
-            // CASE 1: everyone fine — restart from the failed batch
-            log_info!("fault case 1: all workers healthy; restarting from batch {}", committed + 1);
-            self.record.event(&self.clock, "fault case 1: restart".to_string());
-        } else if dead.is_empty() {
-            // CASE 2: a worker restarted and lost its state — re-send the
-            // state variables, let it re-fetch weights from its chain
-            // replica holder, same partition.
-            log_info!("fault case 2: restarted worker(s) {fresh:?}; restoring from replicas");
-            self.record.event(&self.clock, format!("fault case 2: restore {fresh:?}"));
-            let ti = self.train_init(self.worker.ranges.clone(), worker_list.clone(), 1);
-            for &d in &fresh {
-                self.endpoint.send(d, Message::InitState(ti.clone()))?;
-            }
-            // tiny pause so InitState lands before Repartition
-            std::thread::sleep(Duration::from_millis(50));
-            self.run_redistribution(self.worker.ranges.clone(), worker_list, vec![])?;
-        } else {
-            // CASE 3: dead worker(s) — renumber, re-partition, redistribute
-            let failed_stages: Vec<usize> = worker_list
-                .iter()
-                .enumerate()
-                .filter(|(_, d)| dead.contains(d))
-                .map(|(s, _)| s)
-                .collect();
-            log_info!("fault case 3: dead stages {failed_stages:?}; re-partitioning");
-            self.record
-                .event(&self.clock, format!("fault case 3: dead stages {failed_stages:?}"));
-            let new_list = renumber_worker_list(&worker_list, &failed_stages);
-            let old_ranges = self.worker.ranges.clone();
-            let new_ranges = if self.cfg.engine == Engine::ResPipe {
-                // ResPipe-style recovery: the failed stage's successor
-                // absorbs its whole range — no re-partitioning.
-                respipe_merge(&old_ranges, &failed_stages)
-            } else {
-                // FTPipeHD: dynamic scheduler over the alive devices
-                let alive_old_ranges: Vec<(usize, usize)> = old_ranges
-                    .iter()
-                    .enumerate()
-                    .filter(|(s, _)| !failed_stages.contains(s))
-                    .map(|(_, &r)| r)
-                    .collect();
-                let cm = self.current_cost_model(&new_list, &alive_old_ranges);
-                optimal_partition(&cm).0
-            };
-            for &d in &dead {
-                self.estimator.clear_device(d);
-            }
-            self.run_redistribution(new_ranges.clone(), new_list, failed_stages)?;
-            self.record.partitions.push((committed.max(0) as u64, new_ranges));
-        }
-
-        // reset the training state everywhere (paper: discard batches
-        // beyond the last committed one, status back to 0)
-        let peers_now: Vec<DeviceId> = self
-            .worker
-            .worker_list
-            .clone()
-            .into_iter()
-            .filter(|&d| d != self.worker.device_id)
-            .collect();
-        for &d in &peers_now {
-            self.endpoint.send(d, Message::Reset { committed })?;
-        }
-        self.worker.apply_reset(committed);
-        self.detector.clear();
-        self.inflight = 0;
-        self.next_inject = (committed + 1) as u64;
-
-        let overhead = t_redist.elapsed().as_secs_f64();
-        self.record.recovery_overhead_s = Some(overhead);
-        self.record.event(
-            &self.clock,
-            format!("recovery complete: detect+probe {detect_s:.3}s, redistribute {overhead:.3}s"),
-        );
-        log_info!(
-            "recovery complete (detect+probe {detect_s:.3}s, redistribute {overhead:.3}s); resuming from batch {}",
-            self.next_inject
-        );
-        Ok(())
-    }
-
-    /// Save everything the central node can see (its own stage + the
-    /// newest global/chain replicas) to disk. Completeness of the worker
-    /// stages depends on the replication period — exactly the paper's
-    /// §III-E tradeoff.
-    fn save_checkpoint(&mut self, dir: &str, epoch: u64) -> Result<()> {
-        use crate::checkpoint::{Checkpoint, CheckpointState};
-        let mut weights: BTreeMap<usize, crate::model::BlockParams> = BTreeMap::new();
-        for (&b, bp) in &self.worker.params.blocks {
-            weights.insert(b, bp.clone());
-        }
-        for b in 0..self.manifest.n_blocks() {
-            if weights.contains_key(&b) {
-                continue;
-            }
-            if let Some(bp) = self.worker.backups.find_block(b) {
-                weights.insert(b, bp.clone());
-            }
-        }
-        let mut shapes: BTreeMap<usize, Vec<Vec<usize>>> = BTreeMap::new();
-        for (&b, _) in &weights {
-            shapes.insert(
-                b,
-                self.manifest.blocks[b].params.iter().map(|p| p.shape.clone()).collect(),
-            );
-        }
-        let ck = Checkpoint {
-            state: CheckpointState {
-                committed_batch: self.completed,
-                epoch,
-                lr: self.worker.sgd.cfg.lr,
-                ranges: self.worker.ranges.clone(),
-                worker_list: self.worker.worker_list.clone(),
-                shapes,
-            },
-            weights,
-        };
-        ck.save(dir)?;
-        self.record.event(
-            &self.clock,
-            format!("checkpoint at batch {} ({} blocks)", self.completed, ck.weights.len()),
-        );
-        Ok(())
-    }
-
-    fn train_init(
-        &self,
-        ranges: Partition,
-        worker_list: Vec<DeviceId>,
-        status: u8,
-    ) -> TrainInit {
-        let agg = match self.cfg.engine {
-            Engine::FtPipeHd => self.cfg.agg_interval_k.unwrap_or(0) as u32,
-            _ => 0,
-        };
-        let (chain, global) = match self.cfg.engine {
-            Engine::FtPipeHd => (
-                self.cfg.chain_every.unwrap_or(0),
-                self.cfg.global_every.unwrap_or(0),
-            ),
-            Engine::ResPipe => (self.cfg.chain_every.unwrap_or(0), 0),
-            _ => (0, 0),
-        };
-        TrainInit {
-            committed_forward: -1,
-            committed_backward: -1,
-            lr: self.cfg.lr,
-            momentum: self.cfg.momentum,
-            weight_decay: self.cfg.weight_decay,
-            epochs: self.cfg.epochs as u64,
-            batches_per_epoch: self.cfg.batches_per_epoch as u64,
-            ranges,
-            worker_list,
-            agg_k: agg,
-            chain_every: chain,
-            global_every: global,
-            status,
-        }
-    }
-}
-
-/// ResPipe recovery: the next alive worker absorbs each failed stage's
-/// range (no re-partition). Returns the merged ranges for the alive stages.
-fn respipe_merge(old_ranges: &[(usize, usize)], failed: &[usize]) -> Partition {
-    let mut merged: Vec<(usize, usize)> = Vec::new();
-    let n = old_ranges.len();
-    let mut s = 0;
-    while s < n {
-        if failed.contains(&s) {
-            s += 1;
-            continue;
-        }
-        merged.push(old_ranges[s]);
-        s += 1;
-    }
-    // extend each survivor backward to cover preceding failed ranges
-    // (the failed stage's NEXT worker takes over its blocks)
-    let mut out: Vec<(usize, usize)> = Vec::new();
-    let mut expect = 0usize;
-    for &(lo, hi) in &merged {
-        let lo2 = expect.min(lo);
-        out.push((lo2, hi));
-        expect = hi + 1;
-    }
-    // a failed LAST stage falls to the central node (stage 0): extend the
-    // final survivor forward
-    if let Some(last) = out.last_mut() {
-        let total_hi = old_ranges.last().unwrap().1;
-        if last.1 < total_hi {
-            last.1 = total_hi;
-        }
-    }
-    out
-}
-
-/// Run a full training job in single-process simulation.
-pub fn run_sim_full(cfg: &RunConfig, mut opts: RunOpts) -> Result<RunOutput> {
-    cfg.validate()?;
-    crate::util::logging::init_from_env();
-    let manifest = Arc::new(Manifest::load(&cfg.model_dir)?);
-    let n = cfg.n_devices();
-    if manifest.n_blocks() < n {
-        bail!("{} blocks < {} devices", manifest.n_blocks(), n);
-    }
-
-    let (net, mut endpoints) = SimNet::new(
-        n,
-        cfg.bandwidth_bps.clone(),
-        Duration::from_secs_f64(cfg.link_latency_s),
-    );
-    endpoints.reverse(); // pop from the front: device 0 first
-    let central_ep = endpoints.pop().expect("central endpoint");
-
-    // ---- spawn workers ----
-    let mut handles = Vec::new();
-    for d in 1..n {
-        let ep = endpoints.pop().expect("worker endpoint");
-        let manifest = manifest.clone();
-        let dev_cfg = cfg.devices[d].clone();
-        let seed = cfg.seed ^ (d as u64).wrapping_mul(0x9E3779B9);
-        let trace = opts.trace.clone();
-        let net2 = net.clone();
-        handles.push(
-            std::thread::Builder::new()
-                .name(format!("device-{d}"))
-                .spawn(move || -> Result<()> {
-                    let engine = XlaEngine::cpu()?;
-                    let blocks = load_all_blocks(&engine, &manifest)?;
-                    let sim = SimDevice::new(dev_cfg, seed);
-                    let w = StageWorker::new(d, manifest, blocks, sim, trace);
-                    run_worker(w, Box::new(ep), Some(net2))
-                })?,
-        );
-    }
-
-    // ---- central node (device 0) ----
-    let engine = XlaEngine::cpu()?;
-    let blocks = load_all_blocks(&engine, &manifest)?;
-    let sim = SimDevice::new(cfg.devices[0].clone(), cfg.seed ^ 0xC0FFEE);
-    let worker = StageWorker::new(0, manifest.clone(), blocks, sim, opts.trace.clone());
-
-    // ---- offline stage: profiling + initial partition (paper §III-B) ----
-    let reps = if opts.profile_reps == 0 { 5 } else { opts.profile_reps };
-    let profile = profile_model(&manifest, &worker.blocks_rt, reps)?;
-    log_info!(
-        "profiled {} blocks: t0={:?}ms",
-        profile.t0_ms.len(),
-        profile.t0_ms.iter().map(|t| (t * 10.0).round() / 10.0).collect::<Vec<_>>()
-    );
-
-    let worker_list: Vec<DeviceId> = (0..n).collect();
-    let init_cm = CostModel {
-        t0_ms: profile.t0_ms.clone(),
-        out_bytes: profile.out_bytes.clone(),
-        capacities: vec![1.0; n],
-        bandwidth_bps: (0..n.saturating_sub(1)).map(|l| cfg.bandwidth(l.min(cfg.bandwidth_bps.len().saturating_sub(1)))).collect(),
     };
-    let (init_ranges, _) = homogeneous_partition(&init_cm);
-    log_info!("initial (capacity-blind) partition: {init_ranges:?}");
+    let offline::Boot { mut central, handles, net, collect_final_weights } = *boot;
 
-    // memory-cap check (single-device OOM emulation, §IV-F)
-    {
-        let my_range = init_ranges[0];
-        let my_bytes = manifest.param_bytes_range(my_range.0, my_range.1) * 3; // params+velocity+stash
-        let dev = SimDevice::new(cfg.devices[0].clone(), 0);
-        if n == 1 && !dev.fits_memory(my_bytes) {
-            let mut record = RunRecord::default();
-            record.events.push(crate::metrics::Event {
-                at_s: 0.0,
-                kind: format!(
-                    "OOM: model state {} bytes exceeds device cap {:?}",
-                    my_bytes, cfg.devices[0].mem_cap_bytes
-                ),
-            });
-            return Ok(RunOutput { record, final_weights: BTreeMap::new() });
-        }
-    }
+    central.run_training()?;
 
-    let mut central = Central {
-        total_batches: (cfg.epochs * cfg.batches_per_epoch) as u64,
-        cfg: cfg.clone(),
-        manifest: manifest.clone(),
-        worker,
-        endpoint: central_ep,
-        net: net.clone(),
-        profile,
-        estimator: CapacityEstimator::default(),
-        detector: FaultDetector::new(Duration::from_millis(cfg.fault_timeout_ms)),
-        measured_bw: vec![0.0; n.saturating_sub(1)],
-        record: RunRecord::default(),
-        clock: RunClock::start(),
-        next_inject: 0,
-        inflight: 0,
-        completed: -1,
-        last_completion_s: 0.0,
-        epoch_correct: 0.0,
-        epoch_batches: 0,
-        fault_armed: false,
-        last_checkpoint: 0,
-        data: opts
-            .data
-            .take()
-            .unwrap_or_else(|| default_datasource(&manifest, cfg.seed)),
+    let final_weights = if collect_final_weights {
+        central.collect_final_weights()?
+    } else {
+        BTreeMap::new()
     };
-
-    // ---- readiness barrier: workers compile their executables at thread
-    // start; probing until every worker answers prevents the fault
-    // detector from firing on compile time (big models need minutes).
-    {
-        let mut ready: BTreeSet<DeviceId> = BTreeSet::new();
-        let deadline = Instant::now() + Duration::from_secs(900);
-        while ready.len() + 1 < n {
-            for d in 1..n {
-                if !ready.contains(&d) {
-                    central.endpoint.send(d, Message::Probe)?;
-                }
-            }
-            let wait_until = Instant::now() + Duration::from_millis(500);
-            while Instant::now() < wait_until {
-                if let Some((_, Message::ProbeAck { id, .. })) =
-                    central.endpoint.recv_timeout(Duration::from_millis(100))
-                {
-                    ready.insert(id);
-                }
-            }
-            if Instant::now() > deadline {
-                bail!("workers not ready after 900s ({}/{} acked)", ready.len(), n - 1);
-            }
-        }
-        log_info!("all {} workers ready", n - 1);
-    }
-
-    // ---- training initialization (paper Table I) ----
-    let ti = central.train_init(init_ranges.clone(), worker_list.clone(), 0);
-    for d in 1..n {
-        central.endpoint.send(d, Message::InitState(ti.clone()))?;
-    }
-    central.worker.apply_init(&ti)?;
-    central.worker.measure_bandwidth(&central.endpoint)?;
-
-    // warm start (continuous training): push pre-trained weights out
-    if let Some(init_w) = opts.initial_weights.take() {
-        for (stage, &(lo, hi)) in init_ranges.iter().enumerate() {
-            let blocks: Vec<(usize, Vec<Vec<f32>>)> = (lo..=hi)
-                .filter_map(|b| init_w.get(&b).map(|bp| (b, bp.0.clone())))
-                .collect();
-            if blocks.is_empty() {
-                continue;
-            }
-            let dev = worker_list[stage];
-            if dev == 0 {
-                central.worker.handle_weights(&central.endpoint, 0, blocks)?;
-            } else {
-                central.endpoint.send(dev, Message::Weights { blocks })?;
-            }
-        }
-    }
-    // give workers a moment to initialize + run bandwidth probes
-    central.pump_for(Duration::from_millis(150))?;
-
-    central.record.event(&central.clock, "training start".to_string());
-
-    // ---- online stage: the training loop ----
-    let repart_first = match cfg.engine {
-        Engine::FtPipeHd => cfg.repartition_first,
-        _ => None,
-    };
-    let repart_every = match cfg.engine {
-        Engine::FtPipeHd => cfg.repartition_every,
-        _ => None,
-    };
-    let mut next_repart: Option<u64> = repart_first;
-    let mut epoch = 0u64;
-
-    while central.completed + 1 < central.total_batches as i64 {
-        // inject up to the in-flight limit
-        while central.next_inject < central.total_batches
-            && central.inflight < central.limit()
-            && central.worker.status == 0
-        {
-            // stop at epoch boundary until eval runs
-            if central.next_inject / cfg.batches_per_epoch as u64 > epoch {
-                break;
-            }
-            central.inject_one()?;
-        }
-
-        // receive
-        if let Some((from, msg)) = central.endpoint.recv_timeout(Duration::from_millis(2)) {
-            central.dispatch(from, msg)?;
-            while let Some((from, msg)) = central.endpoint.recv_timeout(Duration::ZERO) {
-                central.dispatch(from, msg)?;
-            }
-        }
-        // let the stage-0 worker compute queued backwards (it computes
-        // inline in dispatch; pump for any queued forwards in 1-stage mode)
-        central.worker.pump(&central.endpoint)?;
-
-        // fault detection
-        if let Some(b) = central.detector.overdue() {
-            central.handle_fault(b)?;
-        }
-
-        // dynamic re-partition schedule
-        if let Some(at) = next_repart {
-            if central.completed >= at as i64 {
-                central.dynamic_repartition()?;
-                next_repart = repart_every.map(|e| at + e);
-            }
-        }
-
-        // epoch boundary: drain + evaluate
-        let done_in_epoch = (central.completed + 1) as u64;
-        if done_in_epoch >= (epoch + 1) * cfg.batches_per_epoch as u64 {
-            let train_acc = (central.epoch_correct
-                / (central.epoch_batches.max(1) as f64 * manifest.acc_denom as f64))
-                as f32;
-            let (val_loss, val_acc) = central.evaluate()?;
-            let at_s = central.clock.now_s();
-            log_info!(
-                "epoch {epoch}: train_acc={train_acc:.3} val_loss={val_loss:.4} val_acc={val_acc:.3} ({at_s:.1}s)"
-            );
-            central.record.epochs.push(EpochRecord {
-                epoch,
-                train_acc,
-                val_loss,
-                val_acc,
-                at_s,
-            });
-            central.epoch_correct = 0.0;
-            central.epoch_batches = 0;
-            epoch += 1;
-            // learning-rate schedule (paper §IV-C)
-            for &(at_epoch, lr) in &cfg.lr_drops {
-                if at_epoch as u64 == epoch {
-                    log_info!("epoch {epoch}: setting lr to {lr}");
-                    central.worker.sgd.set_lr(lr);
-                    for &d in central.worker.worker_list.clone().iter().filter(|&&d| d != 0) {
-                        central.endpoint.send(d, Message::SetLr { lr })?;
-                    }
-                }
-            }
-        }
-
-        // central-node checkpoint (paper §III-E: periodic save-to-disk)
-        if let Some((dir, every)) = &cfg.checkpoint {
-            let done = (central.completed + 1) as u64;
-            if *every > 0 && done > 0 && done % every == 0 && central.last_checkpoint != done {
-                central.last_checkpoint = done;
-                central.save_checkpoint(dir, epoch)?;
-            }
-        }
-    }
-
-    central.record.event(&central.clock, "training done".to_string());
-
-    // ---- final weights collection ----
-    let mut final_weights: BTreeMap<usize, BlockParams> = BTreeMap::new();
-    if opts.collect_final_weights {
-        for (b, bp) in &central.worker.params.blocks {
-            final_weights.insert(*b, bp.clone());
-        }
-        let peers: Vec<(usize, DeviceId)> = central
-            .worker
-            .worker_list
-            .iter()
-            .enumerate()
-            .filter(|(_, &d)| d != 0)
-            .map(|(s, &d)| (s, d))
-            .collect();
-        for &(stage, dev) in &peers {
-            let (lo, hi) = central.worker.ranges[stage];
-            central
-                .endpoint
-                .send(dev, Message::FetchWeights { blocks: (lo..=hi).collect() })?;
-        }
-        let deadline = Instant::now() + Duration::from_secs(30);
-        let mut expect: usize = peers
-            .iter()
-            .map(|&(s, _)| central.worker.ranges[s].1 - central.worker.ranges[s].0 + 1)
-            .sum();
-        while expect > 0 && Instant::now() < deadline {
-            if let Some((_, Message::Weights { blocks })) =
-                central.endpoint.recv_timeout(Duration::from_millis(10))
-            {
-                for (idx, tensors) in blocks {
-                    if final_weights.insert(idx, BlockParams(tensors)).is_none() {
-                        expect -= 1;
-                    }
-                }
-            }
-        }
-    }
 
     // ---- shutdown ----
+    let n = cfg.n_devices();
     for d in 1..n {
         net.revive(d); // make sure even killed devices can hear the shutdown
         central.endpoint.send(d, Message::Shutdown)?;
@@ -1021,31 +98,10 @@ pub fn run_sim_full(cfg: &RunConfig, mut opts: RunOpts) -> Result<RunOutput> {
 
     central.record.total_s = central.clock.now_s();
     central.record.net_bytes = net.total_bytes();
-    log_debug!("run done in {:.1}s, {} bytes over the network", central.record.total_s, central.record.net_bytes);
+    log_debug!(
+        "run done in {:.1}s, {} bytes over the network",
+        central.record.total_s,
+        central.record.net_bytes
+    );
     Ok(RunOutput { record: central.record, final_weights })
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn respipe_merge_middle_failure() {
-        let old = vec![(0, 3), (4, 7), (8, 11)];
-        // stage 1 dies: its successor (old stage 2) absorbs blocks 4..=7
-        assert_eq!(respipe_merge(&old, &[1]), vec![(0, 3), (4, 11)]);
-    }
-
-    #[test]
-    fn respipe_merge_last_failure() {
-        let old = vec![(0, 3), (4, 7), (8, 11)];
-        // last stage dies: trailing blocks fall to the last survivor
-        assert_eq!(respipe_merge(&old, &[2]), vec![(0, 3), (4, 11)]);
-    }
-
-    #[test]
-    fn respipe_merge_two_failures() {
-        let old = vec![(0, 2), (3, 5), (6, 8), (9, 11)];
-        assert_eq!(respipe_merge(&old, &[1, 2]), vec![(0, 2), (3, 11)]);
-    }
 }

@@ -1,0 +1,238 @@
+//! The offline phase (paper §III-B): stand up the simulated cluster,
+//! profile the model, compute the initial (capacity-blind) partition,
+//! run the worker-readiness barrier, broadcast the training-init state,
+//! and push warm-start weights for continuous training.
+//!
+//! Produces a ready [`Central`] plus the spawned worker handles; the
+//! steady-state phase ([`Central::run_training`]) takes over from there.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::config::RunConfig;
+use crate::data::{DataSource, SynthLm, SynthVision};
+use crate::device::SimDevice;
+use crate::fault::FaultDetector;
+use crate::manifest::{Dtype, Manifest};
+use crate::metrics::{RunClock, RunRecord};
+use crate::net::message::{DeviceId, Message};
+use crate::net::sim::SimNet;
+use crate::net::Transport;
+use crate::partition::{homogeneous_partition, CostModel};
+use crate::pipeline::{run_worker, StageWorker};
+use crate::profile::{profile_model, CapacityEstimator};
+use crate::runtime::{load_all_blocks, Engine as XlaEngine};
+use crate::log_info;
+
+use super::central::Central;
+use super::RunOpts;
+
+/// Build the default synthetic data source for a compiled model.
+pub fn default_datasource(manifest: &Manifest, seed: u64) -> Box<dyn DataSource> {
+    match manifest.input_dtype {
+        Dtype::F32 => {
+            let dim: usize = manifest.input_shape.iter().skip(1).product();
+            let classes = manifest.n_classes.unwrap_or(10);
+            Box::new(SynthVision::new(dim, classes, 0.6, seed, 0))
+        }
+        Dtype::I32 => {
+            let vocab = manifest.vocab.unwrap_or(512);
+            let seq = manifest.seq.unwrap_or(64);
+            Box::new(SynthLm::new(vocab, seq, seed))
+        }
+    }
+}
+
+/// A bootstrapped cluster, ready for the steady-state phase.
+pub(crate) struct Boot {
+    pub central: Central,
+    pub handles: Vec<std::thread::JoinHandle<Result<()>>>,
+    pub net: SimNet,
+    pub collect_final_weights: bool,
+}
+
+/// Bootstrap outcome: a ready cluster, or an immediate OOM record (the
+/// single-device memory-cap emulation, paper §IV-F).
+pub(crate) enum BootResult {
+    Ready(Box<Boot>),
+    Oom(RunRecord),
+}
+
+/// Run the whole offline phase for `cfg`.
+pub(crate) fn bootstrap(cfg: &RunConfig, mut opts: RunOpts) -> Result<BootResult> {
+    cfg.validate()?;
+    crate::util::logging::init_from_env();
+    let manifest = Arc::new(Manifest::load(&cfg.model_dir)?);
+    let n = cfg.n_devices();
+    if manifest.n_blocks() < n {
+        bail!("{} blocks < {} devices", manifest.n_blocks(), n);
+    }
+
+    let (net, mut endpoints) = SimNet::new(
+        n,
+        cfg.bandwidth_bps.clone(),
+        Duration::from_secs_f64(cfg.link_latency_s),
+    );
+    endpoints.reverse(); // pop from the front: device 0 first
+    let central_ep = endpoints.pop().expect("central endpoint");
+
+    // ---- spawn workers ----
+    let mut handles = Vec::new();
+    for d in 1..n {
+        let ep = endpoints.pop().expect("worker endpoint");
+        let manifest = manifest.clone();
+        let dev_cfg = cfg.devices[d].clone();
+        let seed = cfg.seed ^ (d as u64).wrapping_mul(0x9E3779B9);
+        let trace = opts.trace.clone();
+        let net2 = net.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("device-{d}"))
+                .spawn(move || -> Result<()> {
+                    let engine = XlaEngine::cpu()?;
+                    let blocks = load_all_blocks(&engine, &manifest)?;
+                    let sim = SimDevice::new(dev_cfg, seed);
+                    let w = StageWorker::new(d, manifest, blocks, sim, trace);
+                    run_worker(w, Box::new(ep), Some(net2))
+                })?,
+        );
+    }
+
+    // ---- central node (device 0) ----
+    let engine = XlaEngine::cpu()?;
+    let blocks = load_all_blocks(&engine, &manifest)?;
+    let sim = SimDevice::new(cfg.devices[0].clone(), cfg.seed ^ 0xC0FFEE);
+    let worker = StageWorker::new(0, manifest.clone(), blocks, sim, opts.trace.clone());
+
+    // ---- offline stage: profiling + initial partition (paper §III-B) ----
+    let reps = if opts.profile_reps == 0 { 5 } else { opts.profile_reps };
+    let profile = profile_model(&manifest, &worker.blocks_rt, reps)?;
+    log_info!(
+        "profiled {} blocks: t0={:?}ms",
+        profile.t0_ms.len(),
+        profile.t0_ms.iter().map(|t| (t * 10.0).round() / 10.0).collect::<Vec<_>>()
+    );
+
+    let worker_list: Vec<DeviceId> = (0..n).collect();
+    let init_cm = CostModel {
+        t0_ms: profile.t0_ms.clone(),
+        out_bytes: profile.out_bytes.clone(),
+        capacities: vec![1.0; n],
+        bandwidth_bps: (0..n.saturating_sub(1))
+            .map(|l| cfg.bandwidth(l.min(cfg.bandwidth_bps.len().saturating_sub(1))))
+            .collect(),
+    };
+    let (init_ranges, _) = homogeneous_partition(&init_cm);
+    log_info!("initial (capacity-blind) partition: {init_ranges:?}");
+
+    // memory-cap check (single-device OOM emulation, §IV-F)
+    {
+        let my_range = init_ranges[0];
+        let my_bytes = manifest.param_bytes_range(my_range.0, my_range.1) * 3; // params+velocity+stash
+        let dev = SimDevice::new(cfg.devices[0].clone(), 0);
+        if n == 1 && !dev.fits_memory(my_bytes) {
+            let mut record = RunRecord::default();
+            record.events.push(crate::metrics::Event {
+                at_s: 0.0,
+                kind: format!(
+                    "OOM: model state {} bytes exceeds device cap {:?}",
+                    my_bytes, cfg.devices[0].mem_cap_bytes
+                ),
+            });
+            return Ok(BootResult::Oom(record));
+        }
+    }
+
+    let mut central = Central {
+        total_batches: (cfg.epochs * cfg.batches_per_epoch) as u64,
+        cfg: cfg.clone(),
+        manifest: manifest.clone(),
+        worker,
+        endpoint: central_ep,
+        net: net.clone(),
+        profile,
+        estimator: CapacityEstimator::default(),
+        detector: FaultDetector::new(Duration::from_millis(cfg.fault_timeout_ms)),
+        measured_bw: vec![0.0; n.saturating_sub(1)],
+        record: RunRecord::default(),
+        clock: RunClock::start(),
+        next_inject: 0,
+        inflight: 0,
+        completed: -1,
+        last_completion_s: 0.0,
+        epoch_correct: 0.0,
+        epoch_batches: 0,
+        fault_armed: false,
+        last_checkpoint: 0,
+        data: opts
+            .data
+            .take()
+            .unwrap_or_else(|| default_datasource(&manifest, cfg.seed)),
+    };
+
+    // ---- readiness barrier: workers compile their executables at thread
+    // start; probing until every worker answers prevents the fault
+    // detector from firing on compile time (big models need minutes).
+    {
+        let mut ready: BTreeSet<DeviceId> = BTreeSet::new();
+        let deadline = Instant::now() + Duration::from_secs(900);
+        while ready.len() + 1 < n {
+            for d in 1..n {
+                if !ready.contains(&d) {
+                    central.endpoint.send(d, Message::Probe)?;
+                }
+            }
+            let wait_until = Instant::now() + Duration::from_millis(500);
+            while Instant::now() < wait_until {
+                if let Some((_, Message::ProbeAck { id, .. })) =
+                    central.endpoint.recv_timeout(Duration::from_millis(100))
+                {
+                    ready.insert(id);
+                }
+            }
+            if Instant::now() > deadline {
+                bail!("workers not ready after 900s ({}/{} acked)", ready.len(), n - 1);
+            }
+        }
+        log_info!("all {} workers ready", n - 1);
+    }
+
+    // ---- training initialization (paper Table I) ----
+    let ti = central.train_init(init_ranges.clone(), worker_list.clone(), 0);
+    for d in 1..n {
+        central.endpoint.send(d, Message::InitState(ti.clone()))?;
+    }
+    central.worker.apply_init(&ti)?;
+    central.worker.measure_bandwidth(&central.endpoint)?;
+
+    // warm start (continuous training): push pre-trained weights out —
+    // shared buffers, so this stages no copies at the central node
+    if let Some(init_w) = opts.initial_weights.take() {
+        for (stage, &(lo, hi)) in init_ranges.iter().enumerate() {
+            let blocks: Vec<(usize, Vec<crate::net::TensorBuf>)> = (lo..=hi)
+                .filter_map(|b| init_w.get(&b).map(|bp| (b, bp.0.clone())))
+                .collect();
+            if blocks.is_empty() {
+                continue;
+            }
+            let dev = worker_list[stage];
+            if dev == 0 {
+                central.worker.handle_weights(&central.endpoint, 0, blocks)?;
+            } else {
+                central.endpoint.send(dev, Message::Weights { blocks })?;
+            }
+        }
+    }
+    // give workers a moment to initialize + run bandwidth probes
+    central.pump_for(Duration::from_millis(150))?;
+
+    Ok(BootResult::Ready(Box::new(Boot {
+        central,
+        handles,
+        net,
+        collect_final_weights: opts.collect_final_weights,
+    })))
+}

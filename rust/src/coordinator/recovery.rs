@@ -1,0 +1,349 @@
+//! The repartition/recovery phase: dynamic re-partition scheduling
+//! (paper §III-D) and the fault-tolerance handler's three cases (§III-F).
+//!
+//! Both paths funnel into the shared `Repartition -> fetch -> FetchDone
+//! -> Commit` protocol ([`Central::run_redistribution`]), driven by the
+//! same [`Event`] vocabulary as steady-state traffic. Weight movement is
+//! `TensorBuf`-backed end to end: serving a fetch, staging a reply, and
+//! committing the new sub-model all share buffers.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::config::Engine;
+use crate::fault::renumber_worker_list;
+use crate::net::message::{DeviceId, Message};
+use crate::net::Transport;
+use crate::partition::{optimal_partition, CostModel, Partition};
+use crate::pipeline::{ControlEvent, DataEvent, Event};
+use crate::{log_info, log_warn};
+
+use super::central::Central;
+
+impl Central {
+    // ------------------------------------------------------------------
+    // capacity-aware cost model (paper eqs 1-3)
+    // ------------------------------------------------------------------
+
+    pub(crate) fn current_cost_model(
+        &self,
+        worker_list: &[DeviceId],
+        old_ranges: &[(usize, usize)],
+    ) -> CostModel {
+        // central's own online/offline ratio cancels host-contention in sim
+        let central_ratio = match (self.worker.avg_exec_ms(), self.worker.my_range()) {
+            (Some(avg), Some((lo, hi))) => {
+                let base: f64 = self.profile.t0_ms[lo..=hi].iter().sum();
+                if base > 0.0 {
+                    avg / base
+                } else {
+                    1.0
+                }
+            }
+            _ => 1.0,
+        };
+        let caps = self
+            .estimator
+            .capacities(worker_list, old_ranges, &self.profile.t0_ms, central_ratio);
+        let n = worker_list.len();
+        let mut bw = Vec::with_capacity(n.saturating_sub(1));
+        for link in 0..n.saturating_sub(1) {
+            let measured = self.measured_bw.get(link).copied().unwrap_or(0.0);
+            bw.push(if measured > 0.0 {
+                measured
+            } else {
+                self.cfg
+                    .bandwidth(link.min(self.cfg.bandwidth_bps.len().saturating_sub(1)))
+            });
+        }
+        CostModel {
+            t0_ms: self.profile.t0_ms.clone(),
+            out_bytes: self.profile.out_bytes.clone(),
+            capacities: caps,
+            bandwidth_bps: bw,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // dynamic re-partition (paper §III-D)
+    // ------------------------------------------------------------------
+
+    /// Drain, recompute the optimal cuts from live capacity estimates, and
+    /// run the redistribution protocol if the partition changed.
+    pub(crate) fn dynamic_repartition(&mut self) -> Result<()> {
+        self.drain()?;
+        let worker_list = self.worker.worker_list.clone();
+        let old_ranges = self.worker.ranges.clone();
+        let cm = self.current_cost_model(&worker_list, &old_ranges);
+        let (new_ranges, cost) = optimal_partition(&cm);
+        self.record
+            .event(&self.clock, format!("repartition check: caps={:?}", cm.capacities));
+        if new_ranges == old_ranges {
+            return Ok(());
+        }
+        log_info!(
+            "dynamic re-partition at batch {}: {:?} -> {:?} (predicted bottleneck {:.1}ms)",
+            self.completed,
+            old_ranges,
+            new_ranges,
+            cost
+        );
+        self.record.event(&self.clock, format!("repartition {new_ranges:?}"));
+        self.run_redistribution(new_ranges.clone(), worker_list, vec![])?;
+        self.record.partitions.push((self.completed.max(0) as u64, new_ranges));
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // the shared redistribution protocol
+    // ------------------------------------------------------------------
+
+    /// The shared Repartition -> fetch -> FetchDone -> Commit protocol.
+    pub(crate) fn run_redistribution(
+        &mut self,
+        ranges: Partition,
+        worker_list: Vec<DeviceId>,
+        failed: Vec<usize>,
+    ) -> Result<()> {
+        let workers: Vec<DeviceId> =
+            worker_list.iter().copied().filter(|&d| d != self.worker.device_id).collect();
+        for &d in &workers {
+            self.endpoint.send(
+                d,
+                Message::Repartition {
+                    ranges: ranges.clone(),
+                    worker_list: worker_list.clone(),
+                    failed: failed.clone(),
+                },
+            )?;
+        }
+        self.worker.begin_repartition(
+            &self.endpoint,
+            ranges.clone(),
+            worker_list.clone(),
+            failed,
+        )?;
+
+        // await FetchDone from every worker + our own completion
+        let mut done: BTreeSet<DeviceId> = BTreeSet::new();
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while done.len() < workers.len() || !self.worker.fetch_done() {
+            match self.endpoint.recv_timeout(Duration::from_millis(5)) {
+                Some((from, msg)) => match Event::from_message(from, msg) {
+                    Event::Control(ControlEvent::FetchDone { id }) => {
+                        done.insert(id);
+                    }
+                    ev => self.on_event(ev)?,
+                },
+                None => {}
+            }
+            if Instant::now() > deadline {
+                bail!(
+                    "redistribution timed out ({} of {} workers done)",
+                    done.len(),
+                    workers.len()
+                );
+            }
+        }
+
+        // commit everywhere (paper's commit message)
+        for &d in &workers {
+            self.endpoint.send(d, Message::Commit)?;
+        }
+        self.worker.apply_commit()?;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // fault tolerance (paper §III-F)
+    // ------------------------------------------------------------------
+
+    pub(crate) fn handle_fault(&mut self, overdue_batch: u64) -> Result<()> {
+        let t_start = Instant::now();
+        log_warn!(
+            "FAULT: no gradient for batch {overdue_batch} within timeout; probing workers"
+        );
+        self.record.event(&self.clock, format!("fault detected at batch {overdue_batch}"));
+        self.worker.status = 1;
+
+        // probe all current workers
+        let worker_list = self.worker.worker_list.clone();
+        let peers: Vec<DeviceId> = worker_list
+            .iter()
+            .copied()
+            .filter(|&d| d != self.worker.device_id)
+            .collect();
+        for &d in &peers {
+            self.endpoint.send(d, Message::Probe)?;
+        }
+        let mut acks: BTreeMap<DeviceId, bool> = BTreeMap::new(); // id -> fresh
+        let probe_deadline = Instant::now() + Duration::from_millis(1500);
+        while acks.len() < peers.len() && Instant::now() < probe_deadline {
+            match self.endpoint.recv_timeout(Duration::from_millis(10)) {
+                Some((from, msg)) => match Event::from_message(from, msg) {
+                    Event::Control(ControlEvent::ProbeAck { id, fresh }) => {
+                        acks.insert(id, fresh);
+                    }
+                    // stale data traffic during recovery: discard
+                    Event::Data(DataEvent::Backward { .. })
+                    | Event::Data(DataEvent::Forward { .. }) => {}
+                    ev => self.on_event(ev)?,
+                },
+                None => {}
+            }
+        }
+        let dead: Vec<DeviceId> =
+            peers.iter().copied().filter(|d| !acks.contains_key(d)).collect();
+        let fresh: Vec<DeviceId> =
+            acks.iter().filter(|(_, &f)| f).map(|(&d, _)| d).collect();
+        let detect_s = t_start.elapsed().as_secs_f64();
+        // Table III's "recover overhead" is the work AFTER the failed
+        // worker is identified (renumber + re-partition + weight
+        // redistribution + reset); detection/probing cost is identical
+        // across systems and reported separately as an event.
+        let t_redist = Instant::now();
+
+        let committed = self.completed;
+        if dead.is_empty() && fresh.is_empty() {
+            // CASE 1: everyone fine — restart from the failed batch
+            log_info!("fault case 1: all workers healthy; restarting from batch {}", committed + 1);
+            self.record.event(&self.clock, "fault case 1: restart".to_string());
+        } else if dead.is_empty() {
+            // CASE 2: a worker restarted and lost its state — re-send the
+            // state variables, let it re-fetch weights from its chain
+            // replica holder, same partition.
+            log_info!("fault case 2: restarted worker(s) {fresh:?}; restoring from replicas");
+            self.record.event(&self.clock, format!("fault case 2: restore {fresh:?}"));
+            let ti = self.train_init(self.worker.ranges.clone(), worker_list.clone(), 1);
+            for &d in &fresh {
+                self.endpoint.send(d, Message::InitState(ti.clone()))?;
+            }
+            // tiny pause so InitState lands before Repartition
+            std::thread::sleep(Duration::from_millis(50));
+            self.run_redistribution(self.worker.ranges.clone(), worker_list, vec![])?;
+        } else {
+            // CASE 3: dead worker(s) — renumber, re-partition, redistribute
+            let failed_stages: Vec<usize> = worker_list
+                .iter()
+                .enumerate()
+                .filter(|(_, d)| dead.contains(d))
+                .map(|(s, _)| s)
+                .collect();
+            log_info!("fault case 3: dead stages {failed_stages:?}; re-partitioning");
+            self.record
+                .event(&self.clock, format!("fault case 3: dead stages {failed_stages:?}"));
+            let new_list = renumber_worker_list(&worker_list, &failed_stages);
+            let old_ranges = self.worker.ranges.clone();
+            let new_ranges = if self.cfg.engine == Engine::ResPipe {
+                // ResPipe-style recovery: the failed stage's successor
+                // absorbs its whole range — no re-partitioning.
+                respipe_merge(&old_ranges, &failed_stages)
+            } else {
+                // FTPipeHD: dynamic scheduler over the alive devices
+                let alive_old_ranges: Vec<(usize, usize)> = old_ranges
+                    .iter()
+                    .enumerate()
+                    .filter(|(s, _)| !failed_stages.contains(s))
+                    .map(|(_, &r)| r)
+                    .collect();
+                let cm = self.current_cost_model(&new_list, &alive_old_ranges);
+                optimal_partition(&cm).0
+            };
+            for &d in &dead {
+                self.estimator.clear_device(d);
+            }
+            self.run_redistribution(new_ranges.clone(), new_list, failed_stages)?;
+            self.record.partitions.push((committed.max(0) as u64, new_ranges));
+        }
+
+        // reset the training state everywhere (paper: discard batches
+        // beyond the last committed one, status back to 0)
+        let peers_now: Vec<DeviceId> = self
+            .worker
+            .worker_list
+            .clone()
+            .into_iter()
+            .filter(|&d| d != self.worker.device_id)
+            .collect();
+        for &d in &peers_now {
+            self.endpoint.send(d, Message::Reset { committed })?;
+        }
+        self.worker.apply_reset(committed);
+        self.detector.clear();
+        self.inflight = 0;
+        self.next_inject = (committed + 1) as u64;
+
+        let overhead = t_redist.elapsed().as_secs_f64();
+        self.record.recovery_overhead_s = Some(overhead);
+        self.record.event(
+            &self.clock,
+            format!("recovery complete: detect+probe {detect_s:.3}s, redistribute {overhead:.3}s"),
+        );
+        log_info!(
+            "recovery complete (detect+probe {detect_s:.3}s, redistribute {overhead:.3}s); resuming from batch {}",
+            self.next_inject
+        );
+        Ok(())
+    }
+}
+
+/// ResPipe recovery: the next alive worker absorbs each failed stage's
+/// range (no re-partition). Returns the merged ranges for the alive stages.
+pub(crate) fn respipe_merge(old_ranges: &[(usize, usize)], failed: &[usize]) -> Partition {
+    let mut merged: Vec<(usize, usize)> = Vec::new();
+    let n = old_ranges.len();
+    let mut s = 0;
+    while s < n {
+        if failed.contains(&s) {
+            s += 1;
+            continue;
+        }
+        merged.push(old_ranges[s]);
+        s += 1;
+    }
+    // extend each survivor backward to cover preceding failed ranges
+    // (the failed stage's NEXT worker takes over its blocks)
+    let mut out: Vec<(usize, usize)> = Vec::new();
+    let mut expect = 0usize;
+    for &(lo, hi) in &merged {
+        let lo2 = expect.min(lo);
+        out.push((lo2, hi));
+        expect = hi + 1;
+    }
+    // a failed LAST stage falls to the central node (stage 0): extend the
+    // final survivor forward
+    if let Some(last) = out.last_mut() {
+        let total_hi = old_ranges.last().unwrap().1;
+        if last.1 < total_hi {
+            last.1 = total_hi;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn respipe_merge_middle_failure() {
+        let old = vec![(0, 3), (4, 7), (8, 11)];
+        // stage 1 dies: its successor (old stage 2) absorbs blocks 4..=7
+        assert_eq!(respipe_merge(&old, &[1]), vec![(0, 3), (4, 11)]);
+    }
+
+    #[test]
+    fn respipe_merge_last_failure() {
+        let old = vec![(0, 3), (4, 7), (8, 11)];
+        // last stage dies: trailing blocks fall to the last survivor
+        assert_eq!(respipe_merge(&old, &[2]), vec![(0, 3), (4, 11)]);
+    }
+
+    #[test]
+    fn respipe_merge_two_failures() {
+        let old = vec![(0, 2), (3, 5), (6, 8), (9, 11)];
+        assert_eq!(respipe_merge(&old, &[1, 2]), vec![(0, 2), (3, 11)]);
+    }
+}

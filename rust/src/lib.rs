@@ -1,23 +1,27 @@
 //! FTPipeHD: fault-tolerant pipeline-parallel distributed training for
 //! heterogeneous edge devices — Rust coordinator (Layer 3).
 //!
-//! See DESIGN.md for the architecture. Module map:
+//! See DESIGN.md (repo root) for the event-driven architecture and the
+//! zero-copy tensor plumbing. Module map:
 //!
 //! - [`util`] — offline substrates: JSON, RNG, logging, property tests, bench kit
-//! - [`config`] — run configuration
+//! - [`config`] — run configuration (baseline engines are a config toggle,
+//!   [`config::Engine`] — there is no separate baselines module)
 //! - [`manifest`] — model manifest loader (`artifacts/<model>/manifest.json`)
 //! - [`runtime`] — PJRT engine: load HLO text, compile, execute
-//! - [`model`] — parameter store, SGD+momentum, weight versioning/aggregation
+//! - [`model`] — parameter store (`TensorBuf`-backed, copy-on-write),
+//!   SGD+momentum, weight versioning/aggregation
 //! - [`data`] — synthetic datasets (vision mixture, Zipf-Markov LM)
-//! - [`net`] — messages, codec, `Transport` (SimNet + TCP)
+//! - [`net`] — shared `TensorBuf`, messages, codec, `Transport` (SimNet + TCP)
 //! - [`device`] — simulated heterogeneous devices (capacity, memory, faults)
 //! - [`profile`] — block profiler + capacity estimation (paper eqs 1–3)
 //! - [`partition`] — heterogeneity-aware DP partitioner (paper eqs 4–7)
-//! - [`pipeline`] — async 1F1B engine (stashing, vertical sync, aggregation)
-//! - [`replication`] — chain + global weight replication
+//! - [`pipeline`] — event-driven async 1F1B engine: typed events,
+//!   1F1B schedule, per-stage compute (stashing, vertical sync, aggregation)
+//! - [`replication`] — chain + global weight replication (zero-copy pushes)
 //! - [`fault`] — failure detection, Algorithm 1 redistribution, recovery
-//! - [`coordinator`] — central/worker orchestration
-//! - [`baselines`] — PipeDream, ResPipe, single-device, sync-pipeline
+//! - [`coordinator`] — central-node phases: offline bootstrap,
+//!   steady-state training, repartition/recovery
 //! - [`metrics`] — run records and writers
 
 pub mod util;

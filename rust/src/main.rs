@@ -221,7 +221,7 @@ fn cmd_check(args: &Args) -> Result<()> {
     let mut acts: Vec<HostTensor> = vec![input];
     for (i, b) in blocks.iter().enumerate().take(m.n_blocks() - 1) {
         let y = b.forward(&params[i], acts.last().unwrap())?;
-        acts.push(HostTensor::F32(y));
+        acts.push(HostTensor::F32(y.into()));
     }
     let head = blocks.last().unwrap();
     let x = acts.last().unwrap().as_f32()?.to_vec();

@@ -42,7 +42,7 @@ mod tests {
 
     fn params(vals: &[f32]) -> StageParams {
         let mut sp = StageParams::default();
-        sp.blocks.insert(0, BlockParams(vec![vals.to_vec()]));
+        sp.blocks.insert(0, BlockParams::from_vecs(vec![vals.to_vec()]));
         sp
     }
 
@@ -53,6 +53,18 @@ mod tests {
         let c = params(&[3.0, 30.0]);
         let avg = aggregate_versions(&[&a, &b, &c]).unwrap();
         assert_eq!(avg.blocks[&0].0[0], vec![2.0, 20.0]);
+    }
+
+    #[test]
+    fn aggregation_does_not_corrupt_source_snapshots() {
+        // acc starts as a shared clone of the first snapshot; axpy/scale
+        // must copy-on-write instead of mutating the snapshot in place
+        let a = params(&[1.0]);
+        let b = params(&[3.0]);
+        let avg = aggregate_versions(&[&a, &b]).unwrap();
+        assert_eq!(avg.blocks[&0].0[0][0], 2.0);
+        assert_eq!(a.blocks[&0].0[0][0], 1.0, "snapshot a mutated");
+        assert_eq!(b.blocks[&0].0[0][0], 3.0, "snapshot b mutated");
     }
 
     #[test]

@@ -1,18 +1,28 @@
-//! Parameter buffers. Parameters live as plain `Vec<f32>` per tensor —
-//! the exact representation that is fed to XLA, stashed per weight
+//! Parameter buffers. Parameters live as shared [`TensorBuf`]s per tensor
+//! — the exact representation that is fed to XLA, stashed per weight
 //! version, replicated over the network, and redistributed on failure.
+//! Because the buffers are reference-counted, stashing a weight version,
+//! building a replica push, and serving a weight fetch are all refcount
+//! bumps; the optimizer mutates through copy-on-write so outstanding
+//! snapshots keep their bytes.
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
 use crate::manifest::Manifest;
+use crate::net::TensorBuf;
 
 /// All tensors of one block, in manifest order.
-#[derive(Debug, Clone, PartialEq)]
-pub struct BlockParams(pub Vec<Vec<f32>>);
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct BlockParams(pub Vec<TensorBuf>);
 
 impl BlockParams {
+    /// Build from owned host vectors (initial weights, checkpoints, ...).
+    pub fn from_vecs(tensors: Vec<Vec<f32>>) -> BlockParams {
+        BlockParams(tensors.into_iter().map(TensorBuf::new).collect())
+    }
+
     pub fn num_elements(&self) -> usize {
         self.0.iter().map(|t| t.len()).sum()
     }
@@ -22,9 +32,10 @@ impl BlockParams {
     }
 
     /// Elementwise in-place axpy over all tensors: self += alpha * other.
+    /// Copy-on-write: forks any tensor still shared with a snapshot.
     pub fn axpy(&mut self, alpha: f32, other: &BlockParams) {
         for (a, b) in self.0.iter_mut().zip(&other.0) {
-            for (x, y) in a.iter_mut().zip(b) {
+            for (x, y) in a.make_mut().iter_mut().zip(b.iter()) {
                 *x += alpha * y;
             }
         }
@@ -32,14 +43,14 @@ impl BlockParams {
 
     pub fn scale(&mut self, alpha: f32) {
         for t in &mut self.0 {
-            for x in t.iter_mut() {
+            for x in t.make_mut().iter_mut() {
                 *x *= alpha;
             }
         }
     }
 
     pub fn zeros_like(&self) -> BlockParams {
-        BlockParams(self.0.iter().map(|t| vec![0.0; t.len()]).collect())
+        BlockParams(self.0.iter().map(|t| TensorBuf::zeros(t.len())).collect())
     }
 
     pub fn l2_norm(&self) -> f64 {
@@ -52,9 +63,17 @@ impl BlockParams {
     }
 }
 
+impl From<Vec<Vec<f32>>> for BlockParams {
+    fn from(tensors: Vec<Vec<f32>>) -> BlockParams {
+        BlockParams::from_vecs(tensors)
+    }
+}
+
 /// The parameters a device currently owns: a map block-index -> tensors.
 /// Kept as a BTreeMap so iteration order is deterministic and stage
 /// reassignment (dynamic re-partition / recovery) is a cheap map edit.
+/// Cloning a `StageParams` (weight stashing does this once per version)
+/// clones the map structure but shares every tensor buffer.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct StageParams {
     pub blocks: BTreeMap<usize, BlockParams>,
@@ -68,7 +87,7 @@ impl StageParams {
         }
         let mut blocks = BTreeMap::new();
         for i in lo..=hi {
-            blocks.insert(i, BlockParams(manifest.load_init_params(i)?));
+            blocks.insert(i, BlockParams::from_vecs(manifest.load_init_params(i)?));
         }
         Ok(StageParams { blocks })
     }
@@ -105,7 +124,7 @@ mod tests {
     use super::*;
 
     fn bp(vals: &[&[f32]]) -> BlockParams {
-        BlockParams(vals.iter().map(|v| v.to_vec()).collect())
+        BlockParams::from_vecs(vals.iter().map(|v| v.to_vec()).collect())
     }
 
     #[test]
@@ -133,5 +152,19 @@ mod tests {
         let evicted = sp.retain_range(1, 3);
         assert_eq!(sp.block_indices(), vec![1, 2, 3]);
         assert_eq!(evicted.keys().copied().collect::<Vec<_>>(), vec![0, 4]);
+    }
+
+    #[test]
+    fn stage_clone_shares_buffers_and_mutation_forks() {
+        let mut sp = StageParams::default();
+        sp.blocks.insert(0, bp(&[&[1.0, 2.0]]));
+        let snap = sp.clone();
+        assert!(
+            sp.blocks[&0].0[0].ptr_eq(&snap.blocks[&0].0[0]),
+            "clone must share tensor allocations"
+        );
+        sp.blocks.get_mut(&0).unwrap().scale(2.0);
+        assert_eq!(snap.blocks[&0].0[0][0], 1.0, "snapshot unchanged after COW");
+        assert_eq!(sp.blocks[&0].0[0][0], 2.0);
     }
 }

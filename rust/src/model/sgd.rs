@@ -40,6 +40,11 @@ impl Sgd {
     }
 
     /// Apply one update to block `idx` of `params` given `grads`.
+    ///
+    /// Weight buffers are copy-on-write: the update runs in place when no
+    /// stash snapshot / replica shares the tensor, and forks it exactly
+    /// once when one does (the snapshot keeps the pre-update bytes).
+    /// Velocity buffers are never shared, so they always mutate in place.
     pub fn step_block(&mut self, idx: usize, params: &mut BlockParams, grads: &[Vec<f32>]) {
         debug_assert_eq!(params.0.len(), grads.len());
         let v = self
@@ -48,7 +53,7 @@ impl Sgd {
             .or_insert_with(|| params.zeros_like());
         let (lr, mu, wd) = (self.cfg.lr, self.cfg.momentum, self.cfg.weight_decay);
         for ((w, g), vel) in params.0.iter_mut().zip(grads).zip(v.0.iter_mut()) {
-            for ((wi, gi), vi) in w.iter_mut().zip(g).zip(vel.iter_mut()) {
+            for ((wi, gi), vi) in w.make_mut().iter_mut().zip(g).zip(vel.make_mut().iter_mut()) {
                 let grad = gi + wd * *wi;
                 *vi = mu * *vi + grad;
                 *wi -= lr * *vi;
@@ -90,7 +95,7 @@ mod tests {
     #[test]
     fn plain_sgd_descends_quadratic() {
         let mut sgd = Sgd::new(SgdConfig { lr: 0.1, momentum: 0.0, weight_decay: 0.0 });
-        let mut p = BlockParams(vec![vec![1.0, -2.0, 3.0]]);
+        let mut p = BlockParams::from_vecs(vec![vec![1.0, -2.0, 3.0]]);
         for _ in 0..100 {
             let g = vec![quad_loss_grad(&p.0[0])];
             sgd.step_block(0, &mut p, &g);
@@ -101,7 +106,7 @@ mod tests {
     #[test]
     fn momentum_matches_manual_two_steps() {
         let mut sgd = Sgd::new(SgdConfig { lr: 0.1, momentum: 0.9, weight_decay: 0.0 });
-        let mut p = BlockParams(vec![vec![1.0]]);
+        let mut p = BlockParams::from_vecs(vec![vec![1.0]]);
         sgd.step_block(0, &mut p, &[vec![1.0]]); // v=1, w=1-0.1=0.9
         assert!((p.0[0][0] - 0.9).abs() < 1e-6);
         sgd.step_block(0, &mut p, &[vec![1.0]]); // v=1.9, w=0.9-0.19=0.71
@@ -111,7 +116,7 @@ mod tests {
     #[test]
     fn weight_decay_pulls_to_zero() {
         let mut sgd = Sgd::new(SgdConfig { lr: 0.1, momentum: 0.0, weight_decay: 0.5 });
-        let mut p = BlockParams(vec![vec![2.0]]);
+        let mut p = BlockParams::from_vecs(vec![vec![2.0]]);
         sgd.step_block(0, &mut p, &[vec![0.0]]); // g = 0 + 0.5*2 = 1; w = 2 - 0.1
         assert!((p.0[0][0] - 1.9).abs() < 1e-6);
     }
@@ -119,7 +124,7 @@ mod tests {
     #[test]
     fn retain_blocks_drops_velocity() {
         let mut sgd = Sgd::new(SgdConfig::default());
-        let mut p = BlockParams(vec![vec![1.0]]);
+        let mut p = BlockParams::from_vecs(vec![vec![1.0]]);
         sgd.step_block(3, &mut p, &[vec![1.0]]);
         sgd.step_block(4, &mut p, &[vec![1.0]]);
         sgd.retain_blocks(&[4]);

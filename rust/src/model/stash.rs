@@ -8,6 +8,10 @@
 //! The stash also doubles as the version ring used by **weight
 //! aggregation**: the last `n - i` versions at stage `i` are the "n-i
 //! independent concurrent trainings" the paper averages (Fig. 2).
+//!
+//! Snapshots are cheap: `StageParams::clone` shares every tensor buffer
+//! (`TensorBuf` is `Arc`-backed), and the optimizer's next update forks
+//! only the tensors a live snapshot still references (copy-on-write).
 
 use std::collections::{BTreeMap, VecDeque};
 
@@ -113,7 +117,7 @@ mod tests {
 
     fn params(v: f32) -> StageParams {
         let mut sp = StageParams::default();
-        sp.blocks.insert(0, BlockParams(vec![vec![v]]));
+        sp.blocks.insert(0, BlockParams::from_vecs(vec![vec![v]]));
         sp
     }
 

@@ -1,0 +1,180 @@
+//! Shared tensor buffers — the zero-copy currency of the whole engine.
+//!
+//! A [`TensorBuf`] is an immutable-by-default, reference-counted f32
+//! buffer. Activations, gradients, and replicated weights travel as
+//! `TensorBuf`s end to end: a `clone()` bumps a refcount instead of
+//! copying megabytes, so queuing a message, stashing an activation for
+//! backward, snapshotting a weight version, and pushing a replica all
+//! share one allocation. Mutation goes through [`TensorBuf::make_mut`]
+//! (copy-on-write): the optimizer updates weights in place while any
+//! outstanding snapshot/replica keeps the old bytes alive unchanged.
+//!
+//! The in-process [`super::sim::SimNet`] moves messages by value, so a
+//! send carries the buffer through to the receiver without any f32 copy
+//! at all (asserted by `rust/tests/zero_copy.rs`); the TCP transport pays
+//! exactly one serialization write per hop, into a reused frame buffer.
+
+use std::fmt;
+use std::ops::Deref;
+use std::sync::Arc;
+
+/// Cheaply-cloneable, `Arc`-backed f32 buffer.
+#[derive(Clone, Default)]
+pub struct TensorBuf(Arc<Vec<f32>>);
+
+impl TensorBuf {
+    pub fn new(data: Vec<f32>) -> TensorBuf {
+        TensorBuf(Arc::new(data))
+    }
+
+    pub fn zeros(n: usize) -> TensorBuf {
+        TensorBuf(Arc::new(vec![0.0; n]))
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.0.len() * 4
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.0
+    }
+
+    /// Copy out into an owned vector (explicit — the only copying exit).
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.0.as_ref().clone()
+    }
+
+    /// Copy-on-write mutable access: in-place when this is the only
+    /// holder, one copy when a snapshot/replica still shares the buffer.
+    pub fn make_mut(&mut self) -> &mut Vec<f32> {
+        Arc::make_mut(&mut self.0)
+    }
+
+    /// Do `self` and `other` share the same allocation? (Used by the
+    /// zero-copy tests to prove no f32s were duplicated.)
+    pub fn ptr_eq(&self, other: &TensorBuf) -> bool {
+        Arc::ptr_eq(&self.0, &other.0)
+    }
+
+    /// Number of live references to the underlying allocation.
+    pub fn ref_count(&self) -> usize {
+        Arc::strong_count(&self.0)
+    }
+}
+
+impl Deref for TensorBuf {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        &self.0
+    }
+}
+
+impl AsRef<[f32]> for TensorBuf {
+    fn as_ref(&self) -> &[f32] {
+        &self.0
+    }
+}
+
+impl From<Vec<f32>> for TensorBuf {
+    fn from(v: Vec<f32>) -> TensorBuf {
+        TensorBuf::new(v)
+    }
+}
+
+impl From<&[f32]> for TensorBuf {
+    fn from(v: &[f32]) -> TensorBuf {
+        TensorBuf::new(v.to_vec())
+    }
+}
+
+impl FromIterator<f32> for TensorBuf {
+    fn from_iter<I: IntoIterator<Item = f32>>(iter: I) -> TensorBuf {
+        TensorBuf::new(iter.into_iter().collect())
+    }
+}
+
+/// Content equality (with a same-allocation fast path).
+impl PartialEq for TensorBuf {
+    fn eq(&self, other: &TensorBuf) -> bool {
+        self.ptr_eq(other) || self.0 == other.0
+    }
+}
+
+impl PartialEq<Vec<f32>> for TensorBuf {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<[f32]> for TensorBuf {
+    fn eq(&self, other: &[f32]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl fmt::Debug for TensorBuf {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.len() <= 8 {
+            write!(f, "TensorBuf({:?})", self.as_slice())
+        } else {
+            write!(
+                f,
+                "TensorBuf(len={}, head={:?}, rc={})",
+                self.len(),
+                &self.as_slice()[..4],
+                self.ref_count()
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clone_shares_allocation() {
+        let a = TensorBuf::from(vec![1.0, 2.0, 3.0]);
+        let b = a.clone();
+        assert!(a.ptr_eq(&b));
+        assert_eq!(a.ref_count(), 2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn make_mut_is_in_place_when_unique() {
+        let mut a = TensorBuf::from(vec![1.0; 4]);
+        let before = a.as_slice().as_ptr();
+        a.make_mut()[0] = 9.0;
+        assert_eq!(a.as_slice().as_ptr(), before, "unique buffer must mutate in place");
+        assert_eq!(a[0], 9.0);
+    }
+
+    #[test]
+    fn make_mut_copies_when_shared_and_preserves_snapshot() {
+        let mut a = TensorBuf::from(vec![1.0; 4]);
+        let snap = a.clone();
+        a.make_mut()[0] = 9.0;
+        assert!(!a.ptr_eq(&snap), "copy-on-write must fork");
+        assert_eq!(snap[0], 1.0, "snapshot unchanged");
+        assert_eq!(a[0], 9.0);
+    }
+
+    #[test]
+    fn deref_and_eq_by_content() {
+        let a = TensorBuf::from(vec![1.0, 2.0]);
+        let b = TensorBuf::from(vec![1.0, 2.0]);
+        assert_eq!(a, b);
+        assert_eq!(&a[..], &[1.0, 2.0]);
+        assert_eq!(a.byte_len(), 8);
+    }
+}

@@ -6,19 +6,27 @@
 //! [u32 frame_len][u8 version][u8 tag][payload...]
 //! ```
 //!
-//! Round-trip safety is property-tested below.
+//! Encoding targets a caller-provided, reusable frame buffer
+//! ([`encode_into`]) so a long-lived connection serializes every message
+//! into the same allocation; [`encode`] is the convenience wrapper that
+//! allocates a fresh one. Decoding materializes f32 tensors directly into
+//! [`TensorBuf`]s — that single write is the only f32 copy a message pays
+//! on the TCP path (the sim transport skips the codec entirely).
+//!
+//! Round-trip safety is property-tested below over every variant.
 
 use anyhow::{anyhow, bail, Result};
 
+use super::buf::TensorBuf;
 use super::message::{DeviceId, ExecReport, Message, Payload, ReplicaKind, TrainInit, WireBlock};
 
 pub const CODEC_VERSION: u8 = 1;
 
 // ---------- primitive writers ----------
 
-struct W(Vec<u8>);
+struct W<'a>(&'a mut Vec<u8>);
 
-impl W {
+impl W<'_> {
     fn u8(&mut self, x: u8) {
         self.0.push(x);
     }
@@ -45,12 +53,14 @@ impl W {
     }
     fn f32s(&mut self, xs: &[f32]) {
         self.u32(xs.len() as u32);
+        self.0.reserve(xs.len() * 4);
         for &x in xs {
-            self.f32(x);
+            self.0.extend_from_slice(&x.to_le_bytes());
         }
     }
     fn i32s(&mut self, xs: &[i32]) {
         self.u32(xs.len() as u32);
+        self.0.reserve(xs.len() * 4);
         for &x in xs {
             self.0.extend_from_slice(&x.to_le_bytes());
         }
@@ -120,19 +130,25 @@ impl<'a> R<'a> {
     fn f32s(&mut self) -> Result<Vec<f32>> {
         let n = self.u32()? as usize;
         self.need(n * 4)?;
-        let mut v = Vec::with_capacity(n);
-        for _ in 0..n {
-            v.push(self.f32()?);
-        }
+        let v = self.b[self.i..self.i + n * 4]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        self.i += n * 4;
         Ok(v)
+    }
+    /// The single materializing f32 write of the decode path.
+    fn tensor(&mut self) -> Result<TensorBuf> {
+        Ok(TensorBuf::new(self.f32s()?))
     }
     fn i32s(&mut self) -> Result<Vec<i32>> {
         let n = self.u32()? as usize;
         self.need(n * 4)?;
-        let mut v = Vec::with_capacity(n);
-        for _ in 0..n {
-            v.push(self.u32()? as i32);
-        }
+        let v = self.b[self.i..self.i + n * 4]
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        self.i += n * 4;
         Ok(v)
     }
     fn bytes(&mut self) -> Result<Vec<u8>> {
@@ -150,7 +166,7 @@ impl<'a> R<'a> {
             let nt = self.u32()? as usize;
             let mut tensors = Vec::with_capacity(nt);
             for _ in 0..nt {
-                tensors.push(self.f32s()?);
+                tensors.push(self.tensor()?);
             }
             out.push((idx, tensors));
         }
@@ -160,10 +176,14 @@ impl<'a> R<'a> {
 
 // ---------- message encode/decode ----------
 
-/// Encode `(from, msg)` into a self-contained frame (without the outer
-/// u32 length prefix — the TCP transport adds that).
-pub fn encode(from: DeviceId, msg: &Message) -> Vec<u8> {
-    let mut w = W(Vec::with_capacity(64 + msg.byte_len()));
+/// Encode `(from, msg)` into `buf` (cleared first), without the outer u32
+/// length prefix — the TCP transport adds that. `buf` is reusable across
+/// calls: a steady-state connection serializes every frame into the same
+/// allocation.
+pub fn encode_into(buf: &mut Vec<u8>, from: DeviceId, msg: &Message) {
+    buf.clear();
+    buf.reserve(64 + msg.byte_len());
+    let mut w = W(buf);
     w.u8(CODEC_VERSION);
     w.usize(from);
     match msg {
@@ -304,10 +324,17 @@ pub fn encode(from: DeviceId, msg: &Message) -> Vec<u8> {
         }
         Message::Shutdown => w.u8(16),
     }
-    w.0
 }
 
-/// Decode a frame produced by [`encode`]. Returns `(from, message)`.
+/// Encode into a fresh frame (see [`encode_into`] for the reusable form).
+pub fn encode(from: DeviceId, msg: &Message) -> Vec<u8> {
+    let mut buf = Vec::new();
+    encode_into(&mut buf, from, msg);
+    buf
+}
+
+/// Decode a frame produced by [`encode`]/[`encode_into`]. Returns
+/// `(from, message)`.
 pub fn decode(frame: &[u8]) -> Result<(DeviceId, Message)> {
     let mut r = R { b: frame, i: 0 };
     let ver = r.u8()?;
@@ -322,7 +349,7 @@ pub fn decode(frame: &[u8]) -> Result<(DeviceId, Message)> {
             let version0 = r.u64()?;
             let is_eval = r.bool()?;
             let data = match r.u8()? {
-                0 => Payload::F32(r.f32s()?),
+                0 => Payload::F32(r.tensor()?),
                 1 => Payload::I32(r.i32s()?),
                 t => bail!("bad payload tag {t}"),
             };
@@ -331,7 +358,7 @@ pub fn decode(frame: &[u8]) -> Result<(DeviceId, Message)> {
         1 => Message::Labels { batch: r.u64()?, is_eval: r.bool()?, data: r.i32s()? },
         2 => {
             let batch = r.u64()?;
-            let grad = r.f32s()?;
+            let grad = r.tensor()?;
             let loss = r.f32()?;
             let ncorrect = r.f32()?;
             let n = r.u32()? as usize;
@@ -466,7 +493,7 @@ mod tests {
                 batch: 42,
                 version0: 7,
                 is_eval: false,
-                data: Payload::F32(vec![1.0, -2.5, 3.25]),
+                data: Payload::F32(vec![1.0, -2.5, 3.25].into()),
             },
         );
         roundtrip(
@@ -512,32 +539,71 @@ mod tests {
     }
 
     #[test]
-    fn prop_roundtrip_random_messages() {
-        check("codec-roundtrip", 200, |g: &mut G<'_>| {
+    fn encode_into_reuses_the_buffer() {
+        let big = Message::Forward {
+            batch: 1,
+            version0: 1,
+            is_eval: false,
+            data: Payload::F32(vec![0.5; 1024].into()),
+        };
+        let mut buf = Vec::new();
+        encode_into(&mut buf, 0, &big);
+        let cap = buf.capacity();
+        let ptr = buf.as_ptr();
+        // a second, smaller message must reuse the same allocation
+        encode_into(&mut buf, 0, &Message::Probe);
+        assert_eq!(buf.capacity(), cap);
+        assert_eq!(buf.as_ptr(), ptr);
+        assert_eq!(decode(&buf).unwrap().1, Message::Probe);
+        // and re-encoding the big one still round-trips
+        encode_into(&mut buf, 3, &big);
+        assert_eq!(decode(&buf).unwrap(), (3, big));
+    }
+
+    #[test]
+    fn prop_roundtrip_random_messages_all_variants() {
+        check("codec-roundtrip", 400, |g: &mut G<'_>| {
             let from = g.usize_in(0, 7);
             let msg = random_message(g);
             let frame = encode(from, &msg);
             match decode(&frame) {
                 Ok((f2, m2)) if f2 == from && m2 == msg => Ok(()),
-                Ok(_) => Err("mismatch after roundtrip".into()),
-                Err(e) => Err(format!("decode failed: {e}")),
+                Ok(_) => Err(format!("mismatch after roundtrip of {}", msg.tag())),
+                Err(e) => Err(format!("decode of {} failed: {e}", msg.tag())),
             }
         });
     }
 
+    /// Uniformly draws from EVERY `Message` variant (19 as of codec v1).
     fn random_message(g: &mut G<'_>) -> Message {
         let blocks = |g: &mut G<'_>| -> Vec<WireBlock> {
             (0..g.usize_in(0, 3))
-                .map(|i| (i, (0..g.usize_in(1, 3)).map(|_| g.vec_f32(g.size.min(16))).collect()))
+                .map(|i| {
+                    (
+                        i,
+                        (0..g.usize_in(1, 3))
+                            .map(|_| g.vec_f32(g.size.min(16)).into())
+                            .collect(),
+                    )
+                })
                 .collect()
         };
-        match g.usize_in(0, 9) {
+        let reports = |g: &mut G<'_>| -> Vec<ExecReport> {
+            (0..g.usize_in(0, 4))
+                .map(|d| ExecReport {
+                    device: d,
+                    avg_ms: g.f64_in(0.1, 50.0),
+                    batches: g.usize_in(1, 64) as u32,
+                })
+                .collect()
+        };
+        match g.usize_in(0, 18) {
             0 => Message::Forward {
                 batch: g.usize_in(0, 1000) as u64,
                 version0: g.usize_in(0, 50) as u64,
                 is_eval: g.bool(),
                 data: if g.bool() {
-                    Payload::F32(g.vec_f32(g.size))
+                    Payload::F32(g.vec_f32(g.size).into())
                 } else {
                     Payload::I32((0..g.size).map(|i| i as i32 - 3).collect())
                 },
@@ -549,37 +615,58 @@ mod tests {
             },
             2 => Message::Backward {
                 batch: g.usize_in(0, 99) as u64,
-                grad: g.vec_f32(g.size),
+                grad: g.vec_f32(g.size).into(),
                 loss: g.f64_in(0.0, 10.0) as f32,
                 ncorrect: g.usize_in(0, 32) as f32,
-                reports: (0..g.usize_in(0, 4))
-                    .map(|d| ExecReport { device: d, avg_ms: g.f64_in(0.1, 50.0), batches: 10 })
-                    .collect(),
+                reports: reports(g),
             },
-            3 => Message::Repartition {
+            3 => Message::EvalResult {
+                batch: g.usize_in(0, 99) as u64,
+                loss: g.f64_in(0.0, 5.0) as f32,
+                ncorrect: g.usize_in(0, 32) as f32,
+            },
+            4 => Message::Probe,
+            5 => Message::ProbeAck { id: g.usize_in(0, 9), fresh: g.bool() },
+            6 => Message::InitState(TrainInit {
+                committed_forward: g.usize_in(0, 100) as i64 - 1,
+                committed_backward: g.usize_in(0, 100) as i64 - 1,
+                lr: g.f64_in(1e-4, 0.5) as f32,
+                momentum: g.f64_in(0.0, 0.99) as f32,
+                weight_decay: g.f64_in(0.0, 1e-3) as f32,
+                epochs: g.usize_in(1, 10) as u64,
+                batches_per_epoch: g.usize_in(1, 500) as u64,
+                ranges: (0..g.usize_in(1, 4)).map(|i| (i * 2, i * 2 + 1)).collect(),
+                worker_list: (0..g.usize_in(1, 4)).collect(),
+                agg_k: g.usize_in(0, 8) as u32,
+                chain_every: g.usize_in(0, 100) as u64,
+                global_every: g.usize_in(0, 200) as u64,
+                status: u8::from(g.bool()),
+            }),
+            7 => Message::Repartition {
                 ranges: (0..g.usize_in(1, 4)).map(|i| (i * 2, i * 2 + 1)).collect(),
                 worker_list: (0..g.usize_in(1, 4)).collect(),
                 failed: (0..g.usize_in(0, 2)).collect(),
             },
-            4 => Message::FetchWeights { blocks: (0..g.usize_in(0, 8)).collect() },
-            5 => Message::Weights { blocks: blocks(g) },
-            6 => Message::ReplicaPush {
+            8 => Message::FetchWeights { blocks: (0..g.usize_in(0, 8)).collect() },
+            9 => Message::Weights { blocks: blocks(g) },
+            10 => Message::ReplicaPush {
                 kind: if g.bool() { ReplicaKind::Chain } else { ReplicaKind::Global },
                 owner_stage: g.usize_in(0, 4),
                 owner_device: g.usize_in(0, 4),
                 version: g.usize_in(0, 100) as u64,
                 blocks: blocks(g),
             },
-            7 => Message::Reset { committed: g.usize_in(0, 100) as i64 - 1 },
-            8 => Message::BwTest {
+            11 => Message::FetchDone { id: g.usize_in(0, 9) },
+            12 => Message::Commit,
+            13 => Message::Reset { committed: g.usize_in(0, 100) as i64 - 1 },
+            14 => Message::BwTest {
                 payload_bytes: g.usize_in(0, 100) as u32,
                 data: (0..g.usize_in(0, 64)).map(|i| i as u8).collect(),
             },
-            _ => Message::EvalResult {
-                batch: g.usize_in(0, 99) as u64,
-                loss: g.f64_in(0.0, 5.0) as f32,
-                ncorrect: 1.0,
-            },
+            15 => Message::BwAck { payload_bytes: g.usize_in(0, 1 << 20) as u32 },
+            16 => Message::BwReport { stage: g.usize_in(0, 5), bps: g.f64_in(1e3, 1e9) },
+            17 => Message::SetLr { lr: g.f64_in(1e-5, 0.5) as f32 },
+            _ => Message::Shutdown,
         }
     }
 }

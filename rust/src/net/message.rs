@@ -6,14 +6,18 @@
 //! gradients, §III-D). Control plane: everything the init, dynamic
 //! re-partition, replication, and fault-tolerance protocols need (§III-B/E/F).
 
+use super::buf::TensorBuf;
+
 /// Physical device id (stable across re-partitions; stage indices map to
 /// device ids through the worker list).
 pub type DeviceId = usize;
 
-/// Activation payload entering a stage (f32 acts or i32 tokens).
+/// Activation payload entering a stage (shared f32 acts or i32 tokens).
+/// The f32 arm is [`TensorBuf`]-backed: cloning the payload (or the whole
+/// message) shares the buffer instead of copying it.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Payload {
-    F32(Vec<f32>),
+    F32(TensorBuf),
     I32(Vec<i32>),
 }
 
@@ -65,8 +69,10 @@ pub struct TrainInit {
     pub status: u8,
 }
 
-/// A block's tensors on the wire.
-pub type WireBlock = (usize, Vec<Vec<f32>>);
+/// A block's tensors on the wire — shared buffers, so building a
+/// `Weights`/`ReplicaPush` message from a parameter store is refcount
+/// bumps, never a deep copy of the stage's weights.
+pub type WireBlock = (usize, Vec<TensorBuf>);
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
@@ -85,7 +91,7 @@ pub enum Message {
     },
     Backward {
         batch: u64,
-        grad: Vec<f32>,
+        grad: TensorBuf,
         /// loss/ncorrect measured at the last stage, carried to central.
         loss: f32,
         ncorrect: f32,

@@ -1,14 +1,18 @@
-//! Networking: message types, binary codec, and the [`Transport`]
-//! abstraction with two implementations — [`sim::SimNet`] (bandwidth/
-//! latency-modeled in-process links with fault injection; the default
-//! testbed, DESIGN.md §3) and [`tcp`] (real sockets for multi-process
-//! deployment, the analogue of the paper's Flask HTTP transport).
+//! Networking: shared tensor buffers, message types, binary codec, and
+//! the [`Transport`] abstraction with two implementations — [`sim::SimNet`]
+//! (bandwidth/latency-modeled in-process links with fault injection; the
+//! default testbed, DESIGN.md §3) and [`tcp`] (real sockets for
+//! multi-process deployment, the analogue of the paper's Flask HTTP
+//! transport). Hot-path payloads are [`TensorBuf`]-backed: cloning and
+//! queueing a message never copies tensor data (see `net/buf.rs`).
 
+pub mod buf;
 pub mod codec;
 pub mod message;
 pub mod sim;
 pub mod tcp;
 
+pub use buf::TensorBuf;
 pub use message::{DeviceId, Message, Payload, ReplicaKind};
 
 use std::time::Duration;

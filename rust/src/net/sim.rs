@@ -8,6 +8,11 @@
 //! serialized per link, overlapped with compute on other devices. Killing
 //! a device silently drops its traffic, which is precisely what a crashed
 //! Flask worker looks like to the others (timeouts, not errors).
+//!
+//! Zero-copy: messages move by value through the wire threads — no codec
+//! pass, no frame buffer. With `TensorBuf`-backed payloads the receiver
+//! gets the sender's exact allocation (asserted below and in
+//! `rust/tests/zero_copy.rs`); only the *modeled* byte count is charged.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -241,7 +246,7 @@ mod tests {
         let data = vec![0f32; 100_000];
         let t0 = Instant::now();
         eps[0]
-            .send(1, Message::Weights { blocks: vec![(0, vec![data])] })
+            .send(1, Message::Weights { blocks: vec![(0, vec![data.into()])] })
             .unwrap();
         let got = eps[1].recv_timeout(Duration::from_secs(2));
         let dt = t0.elapsed();
@@ -301,6 +306,30 @@ mod tests {
         assert_eq!(net.total_bytes(), expect);
         assert_eq!(net.bytes_out(0), expect);
         assert_eq!(net.bytes_out(1), 0);
+    }
+
+    #[test]
+    fn delivery_is_zero_copy_for_tensor_payloads() {
+        use crate::net::TensorBuf;
+        let (_net, eps) = SimNet::new(2, vec![1e9], Duration::ZERO);
+        let t = TensorBuf::from(vec![0.25f32; 4096]);
+        eps[0]
+            .send(
+                1,
+                Message::Forward {
+                    batch: 0,
+                    version0: 0,
+                    is_eval: false,
+                    data: crate::net::Payload::F32(t.clone()),
+                },
+            )
+            .unwrap();
+        match eps[1].recv_timeout(Duration::from_secs(1)) {
+            Some((0, Message::Forward { data: crate::net::Payload::F32(got), .. })) => {
+                assert!(got.ptr_eq(&t), "sim delivery must share the sender's allocation");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
     }
 
     #[test]

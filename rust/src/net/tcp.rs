@@ -2,18 +2,28 @@
 //! paper's Flask/HTTP stack, with the binary codec instead of JSON).
 //!
 //! Frames are `[u32 little-endian length][codec frame]`. Each device runs
-//! one listener; outgoing connections are opened lazily and cached. A
-//! reader thread per accepted connection pushes decoded messages into the
-//! endpoint's inbox, so `recv_timeout` has identical semantics to the sim
-//! transport and the whole pipeline runs unchanged over real sockets
-//! (exercised by `rust/tests/tcp_transport.rs`).
+//! one listener; outgoing connections are opened lazily, cached, and
+//! re-established with a bounded exponential backoff — a worker that
+//! binds slightly later than its peers (normal at cluster start) no
+//! longer kills the run. A reader thread per accepted connection pushes
+//! decoded messages into the endpoint's inbox, so `recv_timeout` has
+//! identical semantics to the sim transport and the whole pipeline runs
+//! unchanged over real sockets.
+//!
+//! Buffer discipline: each sender thread serializes outgoing messages
+//! into one thread-local reusable frame buffer (outside the connection
+//! lock, so concurrent senders encode in parallel) and each reader
+//! thread reads frames into one reusable buffer — steady-state traffic
+//! performs no per-message allocations beyond the decoded tensors
+//! themselves.
 
-use std::collections::HashMap;
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet};
 use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -21,23 +31,83 @@ use super::codec;
 use super::message::{DeviceId, Message};
 use super::Transport;
 
+/// First-contact reconnect schedule: up to [`CONNECT_ATTEMPTS`] tries
+/// with doubling sleeps starting at [`CONNECT_BACKOFF_MS`] (sleeps
+/// 10+20+40+80 ms — ~150 ms of backoff, bridging workers that bind a
+/// beat late at cluster start). Once a peer has been reached, later
+/// reconnects use a single attempt (fast fail, like a dead sim device).
+const CONNECT_ATTEMPTS: u32 = 5;
+const CONNECT_BACKOFF_MS: u64 = 10;
+
+/// Per-attempt bound on TCP connect (a SYN-blackholed host must not
+/// stall the sender for the OS default of minutes).
+const CONNECT_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// After a connect failure the peer is considered down for this long:
+/// sends fail fast (silent drop) instead of re-dialing per message
+/// while the fault handler converges. `Probe` messages bypass this —
+/// they are exactly the "is it back up?" signal.
+const DOWN_TTL: Duration = Duration::from_secs(1);
+
+/// Hard cap on a frame's size; larger reads indicate a corrupt stream.
+const MAX_FRAME: usize = 1 << 30;
+
+/// Reusable frame buffers shrink back to this capacity after an
+/// oversized frame, so one multi-MB weight push doesn't pin that much
+/// memory per thread forever (these are memory-capped edge devices).
+const MAX_RETAINED_BUF: usize = 1 << 20;
+
 /// TCP endpoint: `addrs[i]` is the listen address of device `i`.
 pub struct TcpEndpoint {
     id: DeviceId,
     addrs: Vec<String>,
-    conns: Mutex<HashMap<DeviceId, TcpStream>>,
+    io: Mutex<IoState>,
     inbox_rx: Receiver<(DeviceId, Message)>,
     _inbox_tx: Sender<(DeviceId, Message)>, // keeps channel alive
 }
 
-fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
+/// Outgoing side: cached connections + peer liveness bookkeeping.
+struct IoState {
+    conns: HashMap<DeviceId, TcpStream>,
+    /// peers reached at least once (first contact gets the full backoff)
+    ever_connected: HashSet<DeviceId>,
+    /// peer -> don't redial before this instant
+    down_until: HashMap<DeviceId, Instant>,
+}
+
+fn peer_of(stream: &TcpStream) -> String {
+    stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "<unknown>".into())
+}
+
+/// Read one frame into `buf` (reused across frames). Returns Ok(false) on
+/// a clean peer close before a frame starts.
+fn read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<bool> {
     let mut len4 = [0u8; 4];
-    stream.read_exact(&mut len4)?;
+    match stream.read_exact(&mut len4) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(false),
+        Err(e) => return Err(e.into()),
+    }
     let len = u32::from_le_bytes(len4) as usize;
-    anyhow::ensure!(len < 1 << 30, "frame too large: {len}");
-    let mut buf = vec![0u8; len];
-    stream.read_exact(&mut buf)?;
-    Ok(buf)
+    anyhow::ensure!(
+        len < MAX_FRAME,
+        "frame too large from peer {}: {len} bytes (cap {MAX_FRAME}) — corrupt stream?",
+        peer_of(stream)
+    );
+    buf.clear();
+    if buf.capacity() > MAX_RETAINED_BUF && len < MAX_RETAINED_BUF {
+        buf.shrink_to(MAX_RETAINED_BUF);
+    }
+    // append via Take: reuses capacity without zero-filling first
+    let n = (&mut *stream)
+        .take(len as u64)
+        .read_to_end(buf)
+        .with_context(|| format!("reading a {len}-byte frame"))?;
+    anyhow::ensure!(n == len, "peer {} closed mid-frame ({n}/{len} bytes)", peer_of(stream));
+    Ok(true)
 }
 
 fn write_frame(stream: &mut TcpStream, frame: &[u8]) -> Result<()> {
@@ -64,17 +134,27 @@ impl TcpEndpoint {
                     std::thread::Builder::new()
                         .name("tcp-read".into())
                         .spawn(move || {
+                            let mut buf: Vec<u8> = Vec::new();
                             loop {
-                                match read_frame(&mut stream) {
-                                    Ok(frame) => match codec::decode(&frame) {
+                                match read_frame(&mut stream, &mut buf) {
+                                    Ok(true) => match codec::decode(&buf) {
                                         Ok((from, msg)) => {
                                             if tx.send((from, msg)).is_err() {
-                                                break;
+                                                break; // endpoint dropped
                                             }
                                         }
-                                        Err(_) => break,
+                                        Err(e) => {
+                                            crate::log_warn!(
+                                                "tcp reader: undecodable frame ({e}); closing connection"
+                                            );
+                                            break;
+                                        }
                                     },
-                                    Err(_) => break, // peer closed
+                                    Ok(false) => break, // peer closed cleanly
+                                    Err(e) => {
+                                        crate::log_warn!("tcp reader: {e:#}; closing connection");
+                                        break;
+                                    }
                                 }
                             }
                         })
@@ -84,17 +164,102 @@ impl TcpEndpoint {
         Ok(TcpEndpoint {
             id,
             addrs,
-            conns: Mutex::new(HashMap::new()),
+            io: Mutex::new(IoState {
+                conns: HashMap::new(),
+                ever_connected: HashSet::new(),
+                down_until: HashMap::new(),
+            }),
             inbox_rx: rx,
             _inbox_tx: tx,
         })
     }
 
-    fn connect(&self, to: DeviceId) -> Result<TcpStream> {
-        let stream = TcpStream::connect(&self.addrs[to])
-            .with_context(|| format!("connecting to {}", self.addrs[to]))?;
+    /// One bounded connect attempt.
+    fn connect_once(&self, to: DeviceId) -> Result<TcpStream> {
+        let addr = self.addrs[to]
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {}", self.addrs[to]))?
+            .next()
+            .with_context(|| format!("no address for {}", self.addrs[to]))?;
+        let stream = TcpStream::connect_timeout(&addr, CONNECT_TIMEOUT)?;
         stream.set_nodelay(true).ok();
         Ok(stream)
+    }
+
+    /// Connect with bounded exponential backoff. A peer that binds a beat
+    /// late (worker startup order is unordered) is retried; a peer that
+    /// stays unreachable returns Err after the schedule is exhausted.
+    fn connect_with_backoff(&self, to: DeviceId, attempts: u32) -> Result<TcpStream> {
+        let mut delay = Duration::from_millis(CONNECT_BACKOFF_MS);
+        let mut last_err = None;
+        for attempt in 0..attempts {
+            match self.connect_once(to) {
+                Ok(stream) => return Ok(stream),
+                Err(e) => {
+                    last_err = Some(e);
+                    if attempt + 1 < attempts {
+                        std::thread::sleep(delay);
+                        delay *= 2;
+                    }
+                }
+            }
+        }
+        Err(last_err.unwrap()).with_context(|| {
+            format!("connecting to device {to} at {} ({attempts} attempts)", self.addrs[to])
+        })
+    }
+
+    /// Ship one encoded frame: lazily (re)connect, write, one rewrite
+    /// attempt on a stale cached connection (the peer may have restarted
+    /// between sends). Unreachable peers are dropped silently — same
+    /// semantics as the sim transport / a dead Flask worker; the failure
+    /// surfaces as a timeout at the coordinator.
+    fn send_frame(&self, to: DeviceId, frame: &[u8], msg: &Message) -> Result<()> {
+        let mut io = self.io.lock().unwrap();
+        let io = &mut *io;
+        // fail fast to a known-down peer — except probes, which are the
+        // fault handler's one-shot "is it back up?" signal and must
+        // always attempt a real dial
+        if !matches!(msg, Message::Probe) {
+            if let Some(until) = io.down_until.get(&to) {
+                if Instant::now() < *until {
+                    return Ok(());
+                }
+                io.down_until.remove(&to);
+            }
+        }
+        for attempt in 0..2 {
+            if !io.conns.contains_key(&to) {
+                let attempts =
+                    if io.ever_connected.contains(&to) { 1 } else { CONNECT_ATTEMPTS };
+                match self.connect_with_backoff(to, attempts) {
+                    Ok(s) => {
+                        io.ever_connected.insert(to);
+                        io.down_until.remove(&to);
+                        io.conns.insert(to, s);
+                    }
+                    Err(e) => {
+                        io.down_until.insert(to, Instant::now() + DOWN_TTL);
+                        crate::log_warn!("tcp send: dropping {} to device {to}: {e:#}", msg.tag());
+                        return Ok(());
+                    }
+                }
+            }
+            let stream = io.conns.get_mut(&to).unwrap();
+            match write_frame(stream, frame) {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    io.conns.remove(&to); // stale; retry once with a new conn
+                    if attempt == 1 {
+                        crate::log_warn!(
+                            "tcp send: dropping {} to device {to} after rewrite failed: {e:#}",
+                            msg.tag()
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -104,37 +269,21 @@ impl Transport for TcpEndpoint {
     }
 
     fn send(&self, to: DeviceId, msg: Message) -> Result<()> {
-        let frame = codec::encode(self.id, &msg);
-        let mut conns = self.conns.lock().unwrap();
-        // lazily (re)connect; one retry on a stale cached connection
-        for attempt in 0..2 {
-            if !conns.contains_key(&to) {
-                match self.connect(to) {
-                    Ok(s) => {
-                        conns.insert(to, s);
-                    }
-                    Err(e) => {
-                        if attempt == 1 {
-                            // unreachable peer: drop silently (same
-                            // semantics as the sim transport / a dead
-                            // Flask worker — the failure surfaces as a
-                            // timeout at the coordinator).
-                            let _ = e;
-                            return Ok(());
-                        }
-                        continue;
-                    }
-                }
-            }
-            let stream = conns.get_mut(&to).unwrap();
-            match write_frame(stream, &frame) {
-                Ok(()) => return Ok(()),
-                Err(_) => {
-                    conns.remove(&to); // stale; retry once with a new conn
-                }
-            }
+        thread_local! {
+            /// Per-sender-thread reusable frame buffer; encoding happens
+            /// OUTSIDE the connection lock so concurrent senders (worker
+            /// loop + replication pushes) serialize frames in parallel.
+            static WBUF: RefCell<Vec<u8>> = RefCell::new(Vec::new());
         }
-        Ok(())
+        WBUF.with(|wbuf| {
+            let mut wbuf = wbuf.borrow_mut();
+            codec::encode_into(&mut wbuf, self.id, &msg);
+            let result = self.send_frame(to, &wbuf, &msg);
+            if wbuf.capacity() > MAX_RETAINED_BUF && wbuf.len() < MAX_RETAINED_BUF {
+                wbuf.shrink_to(MAX_RETAINED_BUF);
+            }
+            result
+        })
     }
 
     fn recv_timeout(&self, timeout: Duration) -> Option<(DeviceId, Message)> {
@@ -180,7 +329,7 @@ mod tests {
     #[test]
     fn tcp_large_payload() {
         let eps = loopback_cluster(2, 46110).unwrap();
-        let data = vec![1.5f32; 200_000];
+        let data: crate::net::TensorBuf = vec![1.5f32; 200_000].into();
         eps[1]
             .send(0, Message::Weights { blocks: vec![(3, vec![data.clone()])] })
             .unwrap();
@@ -195,9 +344,30 @@ mod tests {
 
     #[test]
     fn send_to_unreachable_peer_is_silent() {
-        // device 1 never binds; send must not error (timeout semantics)
+        // device 1 never binds; send must not error (timeout semantics),
+        // even after the full reconnect/backoff schedule runs out
         let addrs = vec!["127.0.0.1:46120".into(), "127.0.0.1:46121".into()];
         let ep = TcpEndpoint::bind(0, addrs).unwrap();
         ep.send(1, Message::Probe).unwrap();
+    }
+
+    #[test]
+    fn late_binding_peer_is_reached_by_backoff() {
+        // device 1 binds ~40ms after device 0 starts sending: the
+        // reconnect loop must bridge the gap instead of dropping
+        let addrs = vec!["127.0.0.1:46130".to_string(), "127.0.0.1:46131".to_string()];
+        let a0 = addrs.clone();
+        let ep0 = TcpEndpoint::bind(0, a0).unwrap();
+        let addrs1 = addrs.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(40));
+            TcpEndpoint::bind(1, addrs1).unwrap()
+        });
+        ep0.send(1, Message::FetchDone { id: 0 }).unwrap();
+        let ep1 = h.join().unwrap();
+        match ep1.recv_timeout(Duration::from_secs(2)) {
+            Some((0, Message::FetchDone { id: 0 })) => {}
+            other => panic!("late-bound peer missed the message: {other:?}"),
+        }
     }
 }

@@ -1,0 +1,201 @@
+//! Typed events — the engine's internal vocabulary.
+//!
+//! Every incoming [`Message`] is classified exactly once (at the network
+//! boundary) into an [`Event`]: data plane, control plane, or shutdown.
+//! The stage event loop ([`super::stage::StageWorker::on_event`]) and the
+//! coordinator's phases dispatch on these enums instead of re-matching
+//! raw messages ad hoc, so the data-plane fast path and the control-plane
+//! protocol handlers are separated by type, not by convention.
+
+use crate::net::message::{DeviceId, ExecReport, Message, Payload, ReplicaKind, TrainInit, WireBlock};
+use crate::net::TensorBuf;
+
+/// What an event handler tells its caller to do next.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Flow {
+    Continue,
+    Shutdown,
+}
+
+/// A classified incoming message.
+#[derive(Debug)]
+pub enum Event {
+    Data(DataEvent),
+    Control(ControlEvent),
+    Shutdown,
+}
+
+/// Hot-path traffic: activations, labels, gradients, eval results. The
+/// tensor payloads stay `TensorBuf`-backed — classification moves them,
+/// never copies them.
+#[derive(Debug)]
+pub enum DataEvent {
+    Forward {
+        batch: u64,
+        version0: u64,
+        is_eval: bool,
+        data: Payload,
+    },
+    Labels {
+        batch: u64,
+        is_eval: bool,
+        data: Vec<i32>,
+    },
+    Backward {
+        batch: u64,
+        grad: TensorBuf,
+        loss: f32,
+        ncorrect: f32,
+        reports: Vec<ExecReport>,
+    },
+    EvalResult {
+        batch: u64,
+        loss: f32,
+        ncorrect: f32,
+    },
+}
+
+/// Protocol traffic: init, probing, re-partition/redistribution,
+/// replication, bandwidth measurement, resets.
+#[derive(Debug)]
+pub enum ControlEvent {
+    Probe {
+        from: DeviceId,
+    },
+    ProbeAck {
+        id: DeviceId,
+        fresh: bool,
+    },
+    Init(TrainInit),
+    Repartition {
+        ranges: Vec<(usize, usize)>,
+        worker_list: Vec<DeviceId>,
+        failed: Vec<usize>,
+    },
+    FetchWeights {
+        from: DeviceId,
+        blocks: Vec<usize>,
+    },
+    Weights {
+        from: DeviceId,
+        blocks: Vec<WireBlock>,
+    },
+    ReplicaPush {
+        kind: ReplicaKind,
+        owner_stage: usize,
+        owner_device: DeviceId,
+        version: u64,
+        blocks: Vec<WireBlock>,
+    },
+    FetchDone {
+        id: DeviceId,
+    },
+    Commit,
+    Reset {
+        committed: i64,
+    },
+    /// The echo payload itself is dropped at classification — only the
+    /// advertised size matters for the ack.
+    BwTest {
+        from: DeviceId,
+        payload_bytes: u32,
+    },
+    BwAck {
+        payload_bytes: u32,
+    },
+    BwReport {
+        stage: usize,
+        bps: f64,
+    },
+    SetLr {
+        lr: f32,
+    },
+}
+
+impl Event {
+    /// Classify one wire message. Total: every `Message` variant maps to
+    /// exactly one event (the codec round-trip tests plus this keep the
+    /// two vocabularies in sync).
+    pub fn from_message(from: DeviceId, msg: Message) -> Event {
+        match msg {
+            Message::Forward { batch, version0, is_eval, data } => {
+                Event::Data(DataEvent::Forward { batch, version0, is_eval, data })
+            }
+            Message::Labels { batch, is_eval, data } => {
+                Event::Data(DataEvent::Labels { batch, is_eval, data })
+            }
+            Message::Backward { batch, grad, loss, ncorrect, reports } => {
+                Event::Data(DataEvent::Backward { batch, grad, loss, ncorrect, reports })
+            }
+            Message::EvalResult { batch, loss, ncorrect } => {
+                Event::Data(DataEvent::EvalResult { batch, loss, ncorrect })
+            }
+            Message::Probe => Event::Control(ControlEvent::Probe { from }),
+            Message::ProbeAck { id, fresh } => Event::Control(ControlEvent::ProbeAck { id, fresh }),
+            Message::InitState(ti) => Event::Control(ControlEvent::Init(ti)),
+            Message::Repartition { ranges, worker_list, failed } => {
+                Event::Control(ControlEvent::Repartition { ranges, worker_list, failed })
+            }
+            Message::FetchWeights { blocks } => {
+                Event::Control(ControlEvent::FetchWeights { from, blocks })
+            }
+            Message::Weights { blocks } => Event::Control(ControlEvent::Weights { from, blocks }),
+            Message::ReplicaPush { kind, owner_stage, owner_device, version, blocks } => {
+                Event::Control(ControlEvent::ReplicaPush {
+                    kind,
+                    owner_stage,
+                    owner_device,
+                    version,
+                    blocks,
+                })
+            }
+            Message::FetchDone { id } => Event::Control(ControlEvent::FetchDone { id }),
+            Message::Commit => Event::Control(ControlEvent::Commit),
+            Message::Reset { committed } => Event::Control(ControlEvent::Reset { committed }),
+            Message::BwTest { payload_bytes, .. } => {
+                Event::Control(ControlEvent::BwTest { from, payload_bytes })
+            }
+            Message::BwAck { payload_bytes } => {
+                Event::Control(ControlEvent::BwAck { payload_bytes })
+            }
+            Message::BwReport { stage, bps } => {
+                Event::Control(ControlEvent::BwReport { stage, bps })
+            }
+            Message::SetLr { lr } => Event::Control(ControlEvent::SetLr { lr }),
+            Message::Shutdown => Event::Shutdown,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification_is_total_and_zero_copy() {
+        let t = TensorBuf::from(vec![1.0; 64]);
+        match Event::from_message(
+            3,
+            Message::Forward {
+                batch: 9,
+                version0: 2,
+                is_eval: false,
+                data: Payload::F32(t.clone()),
+            },
+        ) {
+            Event::Data(DataEvent::Forward { batch: 9, data: Payload::F32(got), .. }) => {
+                assert!(got.ptr_eq(&t), "classification must move, not copy");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(matches!(Event::from_message(0, Message::Shutdown), Event::Shutdown));
+        assert!(matches!(
+            Event::from_message(1, Message::Probe),
+            Event::Control(ControlEvent::Probe { from: 1 })
+        ));
+        assert!(matches!(
+            Event::from_message(2, Message::BwTest { payload_bytes: 64, data: vec![0; 64] }),
+            Event::Control(ControlEvent::BwTest { from: 2, payload_bytes: 64 })
+        ));
+    }
+}

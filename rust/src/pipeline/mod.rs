@@ -1,1138 +1,31 @@
-//! The asynchronous 1F1B pipeline stage engine (paper §III-C).
+//! The asynchronous 1F1B pipeline engine (paper §III-C), event-driven.
 //!
-//! Each device runs a [`StageWorker`]: it owns the compiled block
-//! executables (all blocks — re-partitioning only moves *weights*, never
-//! code), the parameters of its current block range, the weight stash,
-//! the optimizer, the replica store, and the device capacity simulator.
+//! Module map:
 //!
-//! Scheduling is 1F1B by construction: the worker always prefers a
-//! pending backward over a pending forward (PipeDream's rule), and the
-//! central node's in-flight semaphore caps the number of concurrent
-//! batches at the stage count. Weight stashing + the version ring give
-//! weight aggregation its inputs (paper Fig. 2); vertical sync is tracked
-//! through the `version0` tag each batch carries.
+//! - [`events`] — the typed [`Event`] vocabulary every incoming message
+//!   is classified into (data plane / control plane / shutdown)
+//! - [`schedule`] — 1F1B queueing + per-batch stashes (labels,
+//!   activations, forward timings) and the backward-first policy
+//! - [`stage`] — [`StageWorker`]: per-stage compute, weight stashing,
+//!   aggregation, replication triggers, and the worker event loop
+//! - `repart` — client-side state of an in-progress redistribution
+//!   (between `Repartition` and `Commit`)
+//! - [`trace`] — schedule trace recording for the Fig.-2 assertions
 //!
-//! The same struct serves the central node (stage 0): the coordinator
-//! drives it directly instead of through [`run_worker`].
+//! Data flow: a transport delivers a [`crate::net::Message`]; the worker
+//! loop classifies it ([`Event::from_message`]) and hands it to
+//! [`StageWorker::on_event`], which either enqueues data-plane work into
+//! the [`schedule::Schedule`] or runs a control-plane handler.
+//! [`StageWorker::pump`] then executes at most one compute step chosen by
+//! the 1F1B policy. All tensor payloads are `TensorBuf`-backed, so
+//! queueing, stashing, and replicating share buffers instead of copying.
 
+pub mod events;
+mod repart;
+pub mod schedule;
+pub mod stage;
 pub mod trace;
 
-use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
-use std::sync::Arc;
-use std::time::Duration;
-
-use anyhow::{bail, Context, Result};
-
-use crate::device::SimDevice;
-use crate::fault::{plan_redistribution, RedistPlan, Source};
-use crate::manifest::Manifest;
-use crate::model::{aggregate_versions, BlockParams, Sgd, SgdConfig, StageParams, VersionStash};
-use crate::net::message::{DeviceId, ExecReport, Message, Payload, ReplicaKind, TrainInit, WireBlock};
-use crate::net::Transport;
-use crate::replication::{self, BackupStore};
-use crate::runtime::{BlockRuntime, HostTensor};
-use trace::{TraceEvent, TraceKind, TraceSink};
-
-/// Completion info surfaced at stage 0 when a batch's gradient lands.
-#[derive(Debug, Clone)]
-pub struct CompletedBatch {
-    pub batch: u64,
-    pub loss: f32,
-    pub ncorrect: f32,
-    pub reports: Vec<ExecReport>,
-}
-
-/// What `handle_message` tells the caller to do next.
-#[derive(Debug, PartialEq, Eq)]
-pub enum Flow {
-    Continue,
-    Shutdown,
-}
-
-#[derive(Debug)]
-struct PendingForward {
-    batch: u64,
-    version0: u64,
-    is_eval: bool,
-    data: HostTensor,
-}
-
-#[derive(Debug)]
-struct PendingBackward {
-    batch: u64,
-    grad: Vec<f32>,
-    loss: f32,
-    ncorrect: f32,
-    reports: Vec<ExecReport>,
-}
-
-/// In-progress re-partition (between Repartition and Commit).
-struct Repart {
-    ranges: Vec<(usize, usize)>,
-    worker_list: Vec<DeviceId>,
-    /// blocks still missing (awaiting Weights replies)
-    needed: BTreeSet<usize>,
-    /// blocks fetched/staged so far
-    staged: BTreeMap<usize, BlockParams>,
-    /// outstanding request -> blocks asked of that device
-    outstanding: BTreeMap<DeviceId, Vec<usize>>,
-    /// already escalated to central
-    escalated: BTreeSet<usize>,
-}
-
-pub struct StageWorker {
-    pub device_id: DeviceId,
-    pub manifest: Arc<Manifest>,
-    pub blocks_rt: Vec<BlockRuntime>,
-    pub sim: SimDevice,
-    pub trace: TraceSink,
-
-    // --- pipeline topology ---
-    pub worker_list: Vec<DeviceId>,
-    pub ranges: Vec<(usize, usize)>,
-
-    // --- stage state ---
-    pub params: StageParams,
-    pub sgd: Sgd,
-    pub stash: VersionStash,
-    pub version: u64,
-    pub initialized: bool,
-    pub status: u8,
-
-    /// batch -> per-block inputs (for backward)
-    acts: HashMap<u64, Vec<HostTensor>>,
-    labels: HashMap<u64, Vec<i32>>,
-    eval_labels: HashMap<u64, Vec<i32>>,
-    pending_fwd: VecDeque<PendingForward>,
-    pending_bwd: VecDeque<PendingBackward>,
-
-    pub committed_fwd: i64,
-    pub committed_bwd: i64,
-
-    // --- schedules ---
-    pub agg_k: u32,
-    pub chain_every: u64,
-    pub global_every: u64,
-    bwd_count: u64,
-
-    // --- profiling report window (rolling) ---
-    exec_window: VecDeque<f64>,
-    /// forward-time of in-flight batches, merged into one fwd+bwd sample
-    /// at backward time (the paper reports per-batch execution time).
-    fwd_ms: HashMap<u64, f64>,
-
-    // --- replication store ---
-    pub backups: BackupStore,
-
-    repart: Option<Repart>,
-    /// outstanding bandwidth probe to the next worker (paper §III-B)
-    bw_probe: Option<std::time::Instant>,
-}
-
-impl StageWorker {
-    pub fn new(
-        device_id: DeviceId,
-        manifest: Arc<Manifest>,
-        blocks_rt: Vec<BlockRuntime>,
-        sim: SimDevice,
-        trace: TraceSink,
-    ) -> StageWorker {
-        StageWorker {
-            device_id,
-            manifest,
-            blocks_rt,
-            sim,
-            trace,
-            worker_list: vec![],
-            ranges: vec![],
-            params: StageParams::default(),
-            sgd: Sgd::new(SgdConfig::default()),
-            stash: VersionStash::new(4),
-            version: 0,
-            initialized: false,
-            status: 0,
-            acts: HashMap::new(),
-            labels: HashMap::new(),
-            eval_labels: HashMap::new(),
-            pending_fwd: VecDeque::new(),
-            pending_bwd: VecDeque::new(),
-            committed_fwd: -1,
-            committed_bwd: -1,
-            agg_k: 0,
-            chain_every: 0,
-            global_every: 0,
-            bwd_count: 0,
-            exec_window: VecDeque::new(),
-            fwd_ms: HashMap::new(),
-            backups: BackupStore::default(),
-            repart: None,
-            bw_probe: None,
-        }
-    }
-
-    // ------------------------------------------------------------------
-    // topology helpers
-    // ------------------------------------------------------------------
-
-    pub fn n_stages(&self) -> usize {
-        self.worker_list.len()
-    }
-
-    pub fn my_stage(&self) -> Option<usize> {
-        self.worker_list.iter().position(|&d| d == self.device_id)
-    }
-
-    pub fn my_range(&self) -> Option<(usize, usize)> {
-        self.my_stage().map(|s| self.ranges[s])
-    }
-
-    pub fn is_last_stage(&self) -> bool {
-        self.my_stage().map(|s| s + 1 == self.n_stages()).unwrap_or(false)
-    }
-
-    fn next_device(&self) -> Option<DeviceId> {
-        let s = self.my_stage()?;
-        self.worker_list.get(s + 1).copied()
-    }
-
-    fn prev_device(&self) -> Option<DeviceId> {
-        let s = self.my_stage()?;
-        s.checked_sub(1).map(|p| self.worker_list[p])
-    }
-
-    fn central_device(&self) -> DeviceId {
-        self.worker_list[0]
-    }
-
-    fn emit(&self, kind: TraceKind, batch: u64) {
-        if let Some(t) = &self.trace {
-            t.lock().unwrap().push(TraceEvent {
-                device: self.device_id,
-                stage: self.my_stage().unwrap_or(usize::MAX),
-                kind,
-                batch,
-                version: self.version,
-            });
-        }
-    }
-
-    // ------------------------------------------------------------------
-    // initialization
-    // ------------------------------------------------------------------
-
-    /// Apply the training-init state (paper Table I). Loads this stage's
-    /// initial weights from the manifest unless we are in fault-recovery
-    /// (status = 1), where weights arrive via redistribution instead.
-    pub fn apply_init(&mut self, t: &TrainInit) -> Result<()> {
-        self.worker_list = t.worker_list.clone();
-        self.ranges = t.ranges.clone();
-        self.sgd = Sgd::new(SgdConfig {
-            lr: t.lr,
-            momentum: t.momentum,
-            weight_decay: t.weight_decay,
-        });
-        self.stash = VersionStash::new(self.n_stages().max(2));
-        self.version = 0;
-        self.committed_fwd = t.committed_forward;
-        self.committed_bwd = t.committed_backward;
-        self.agg_k = t.agg_k;
-        self.chain_every = t.chain_every;
-        self.global_every = t.global_every;
-        self.status = t.status;
-        if t.status == 0 {
-            if let Some((lo, hi)) = self.my_range() {
-                self.params = StageParams::load_range(&self.manifest, lo, hi)?;
-            }
-        }
-        self.initialized = true;
-        Ok(())
-    }
-
-    // ------------------------------------------------------------------
-    // compute: forward
-    // ------------------------------------------------------------------
-
-    fn payload_to_tensor(p: Payload) -> HostTensor {
-        match p {
-            Payload::F32(v) => HostTensor::F32(v),
-            Payload::I32(v) => HostTensor::I32(v),
-        }
-    }
-
-    fn tensor_to_payload(t: HostTensor) -> Payload {
-        match t {
-            HostTensor::F32(v) => Payload::F32(v),
-            HostTensor::I32(v) => Payload::I32(v),
-        }
-    }
-
-    fn block_params(&self, source: &StageParams, idx: usize) -> Result<Vec<Vec<f32>>> {
-        Ok(source
-            .get(idx)
-            .with_context(|| format!("device {} missing params for block {idx}", self.device_id))?
-            .0
-            .clone())
-    }
-
-    /// Training forward for one batch through this stage's blocks.
-    /// Returns `Some(CompletedBatch)` only in the degenerate 1-stage case.
-    pub fn forward_train(
-        &mut self,
-        t: &dyn Transport,
-        batch: u64,
-        version0: u64,
-        x: HostTensor,
-    ) -> Result<Option<CompletedBatch>> {
-        let (lo, hi) = self.my_range().context("not in worker list")?;
-        let last = self.is_last_stage();
-
-        if !last {
-            // stash the weights used for this forward (PipeDream weight stashing)
-            self.stash.on_forward(batch, self.version, &self.params);
-            // perf: borrow the snapshot just stashed instead of cloning the
-            // whole StageParams again (EXPERIMENTS.md §Perf L3-1)
-            let params = self
-                .stash
-                .snapshot(self.version)
-                .unwrap_or(&self.params);
-            let mut inputs: Vec<HostTensor> = Vec::with_capacity(hi - lo + 1);
-            let mut cur = x;
-            let blocks_rt = &self.blocks_rt;
-            let (out, ms) = {
-                let mut run = || -> Result<HostTensor> {
-                    for idx in lo..=hi {
-                        inputs.push(cur.clone());
-                        let p = params.get(idx).context("missing block params")?;
-                        let y = blocks_rt[idx].forward(&p.0, &cur)?;
-                        cur = HostTensor::F32(y);
-                    }
-                    Ok(cur.clone())
-                };
-                let (res, dur) = self.sim.execute(&mut run);
-                (res?, dur.as_secs_f64() * 1e3)
-            };
-            self.acts.insert(batch, inputs);
-            self.committed_fwd = self.committed_fwd.max(batch as i64);
-            self.fwd_ms.insert(batch, ms); // merged into one sample at backward
-            self.emit(TraceKind::Forward, batch);
-            let next = self.next_device().context("no next stage")?;
-            t.send(
-                next,
-                Message::Forward {
-                    batch,
-                    version0,
-                    is_eval: false,
-                    data: Self::tensor_to_payload(out),
-                },
-            )?;
-            return Ok(None);
-        }
-
-        // ---- last stage: fused forward + loss + backward (1F1B) ----
-        let labels = self
-            .labels
-            .remove(&batch)
-            .context("labels not available for last-stage forward")?;
-        let label_t = HostTensor::I32(labels);
-        let head_idx = self.manifest.n_blocks() - 1;
-        debug_assert_eq!(hi, head_idx);
-
-        // perf: borrow instead of cloning the stage's parameters — the
-        // closure only reads them, and `sim` is a disjoint field.
-        let params = &self.params;
-        let label_shape = self.manifest.label_shape.clone();
-        struct LastOut {
-            grads: BTreeMap<usize, Vec<Vec<f32>>>,
-            gx_out: Option<Vec<f32>>,
-            loss: f32,
-            ncorrect: f32,
-        }
-        let blocks_rt = &self.blocks_rt;
-        let (out, ms) = {
-            let mut run = || -> Result<LastOut> {
-                // forward through my non-head blocks, saving inputs
-                let mut inputs: Vec<HostTensor> = Vec::with_capacity(hi - lo + 1);
-                let mut cur = x.clone();
-                for idx in lo..hi {
-                    inputs.push(cur.clone());
-                    let p = params.get(idx).context("missing block params")?;
-                    let y = blocks_rt[idx].forward(&p.0, &cur)?;
-                    cur = HostTensor::F32(y);
-                }
-                // fused head step
-                let hp = params.get(head_idx).context("missing head params")?;
-                let hx = cur.as_f32()?.to_vec();
-                let hs = blocks_rt[head_idx].head_step(&hp.0, &hx, &label_t, &label_shape)?;
-                let mut grads: BTreeMap<usize, Vec<Vec<f32>>> = BTreeMap::new();
-                grads.insert(head_idx, hs.grad_params);
-                // backward through my remaining blocks with the SAME weights
-                let mut gy = hs.grad_input;
-                let mut gx_out = Some(gy.clone());
-                for idx in (lo..hi).rev() {
-                    let p = params.get(idx).unwrap();
-                    let xin = &inputs[idx - lo];
-                    let (g, gx) = blocks_rt[idx].backward(&p.0, xin, &gy)?;
-                    grads.insert(idx, g);
-                    match gx {
-                        Some(g2) => {
-                            gy = g2;
-                            gx_out = Some(gy.clone());
-                        }
-                        None => gx_out = None,
-                    }
-                }
-                if lo == 0 {
-                    gx_out = None; // block 0 produces no input grad
-                }
-                Ok(LastOut { grads, gx_out, loss: hs.loss, ncorrect: hs.ncorrect })
-            };
-            let (res, dur) = self.sim.execute(&mut run);
-            (res?, dur.as_secs_f64() * 1e3)
-        };
-
-        // apply updates
-        self.sgd.step(&mut self.params, &out.grads);
-        self.version += 1;
-        self.bwd_count += 1;
-        self.committed_fwd = self.committed_fwd.max(batch as i64);
-        self.committed_bwd = self.committed_bwd.max(batch as i64);
-        self.record_exec(ms);
-        self.emit(TraceKind::Forward, batch);
-        self.emit(TraceKind::Backward, batch);
-
-        let report = self.current_report();
-        self.maybe_replicate(t, batch)?;
-
-        if let Some(prev) = self.prev_device() {
-            t.send(
-                prev,
-                Message::Backward {
-                    batch,
-                    grad: out.gx_out.unwrap_or_default(),
-                    loss: out.loss,
-                    ncorrect: out.ncorrect,
-                    reports: vec![report],
-                },
-            )?;
-            Ok(None)
-        } else {
-            // single-stage pipeline: completion happens here
-            Ok(Some(CompletedBatch {
-                batch,
-                loss: out.loss,
-                ncorrect: out.ncorrect,
-                reports: vec![report],
-            }))
-        }
-    }
-
-    /// Evaluation forward (no stashing / no state): last stage computes
-    /// loss + accuracy and reports to the central node.
-    pub fn forward_eval(&mut self, t: &dyn Transport, batch: u64, x: HostTensor) -> Result<Option<(f32, f32)>> {
-        let (lo, hi) = self.my_range().context("not in worker list")?;
-        let last = self.is_last_stage();
-        let head_idx = self.manifest.n_blocks() - 1;
-        let end = if last { hi - 1 } else { hi };
-
-        let mut cur = x;
-        for idx in lo..=end {
-            if last && idx == head_idx {
-                break;
-            }
-            let p = self.block_params(&self.params, idx)?;
-            let y = self.blocks_rt[idx].forward(&p, &cur)?;
-            cur = HostTensor::F32(y);
-        }
-        if !last {
-            let next = self.next_device().context("no next stage")?;
-            t.send(
-                next,
-                Message::Forward { batch, version0: 0, is_eval: true, data: Self::tensor_to_payload(cur) },
-            )?;
-            return Ok(None);
-        }
-        let labels = self
-            .eval_labels
-            .remove(&batch)
-            .context("labels not available for eval")?;
-        let hp = self.block_params(&self.params, head_idx)?;
-        let (loss, nc) = self.blocks_rt[head_idx].head_eval(
-            &hp,
-            cur.as_f32()?,
-            &HostTensor::I32(labels),
-            &self.manifest.label_shape.clone(),
-        )?;
-        if self.my_stage() == Some(0) {
-            Ok(Some((loss, nc)))
-        } else {
-            t.send(self.central_device(), Message::EvalResult { batch, loss, ncorrect: nc })?;
-            Ok(None)
-        }
-    }
-
-    // ------------------------------------------------------------------
-    // compute: backward (non-last stages)
-    // ------------------------------------------------------------------
-
-    /// Backward for one batch. At stage 0 returns the completed batch.
-    pub fn backward(
-        &mut self,
-        t: &dyn Transport,
-        batch: u64,
-        gy_in: Vec<f32>,
-        loss: f32,
-        ncorrect: f32,
-        mut reports: Vec<ExecReport>,
-    ) -> Result<Option<CompletedBatch>> {
-        let (lo, hi) = self.my_range().context("not in worker list")?;
-        let stage = self.my_stage().unwrap();
-
-        // weight stashing: backward runs against the forward-time weights
-        // (perf: borrowed, not cloned — EXPERIMENTS.md §Perf L3-1)
-        let stashed = self
-            .stash
-            .params_for_backward(batch)
-            .unwrap_or(&self.params);
-        let inputs = self
-            .acts
-            .remove(&batch)
-            .with_context(|| format!("no saved activations for batch {batch}"))?;
-
-        let blocks_rt = &self.blocks_rt;
-        struct BwdOut {
-            grads: BTreeMap<usize, Vec<Vec<f32>>>,
-            gx_out: Option<Vec<f32>>,
-        }
-        let (out, ms) = {
-            let mut run = || -> Result<BwdOut> {
-                let mut grads = BTreeMap::new();
-                let mut gy = gy_in.clone();
-                let mut gx_out = Some(gy.clone());
-                for idx in (lo..=hi).rev() {
-                    let p = stashed.get(idx).context("stash missing block")?;
-                    let xin = &inputs[idx - lo];
-                    let (g, gx) = blocks_rt[idx].backward(&p.0, xin, &gy)?;
-                    grads.insert(idx, g);
-                    match gx {
-                        Some(g2) => {
-                            gy = g2;
-                            gx_out = Some(gy.clone());
-                        }
-                        None => gx_out = None,
-                    }
-                }
-                Ok(BwdOut { grads, gx_out })
-            };
-            let (res, dur) = self.sim.execute(&mut run);
-            (res?, dur.as_secs_f64() * 1e3)
-        };
-
-        // gradients apply to the CURRENT weights (PipeDream async rule)
-        self.sgd.step(&mut self.params, &out.grads);
-        self.version += 1;
-        self.bwd_count += 1;
-        self.stash.on_backward_done(batch);
-        self.committed_bwd = self.committed_bwd.max(batch as i64);
-        let fwd_part = self.fwd_ms.remove(&batch).unwrap_or(0.0);
-        self.record_exec(fwd_part + ms);
-        self.emit(TraceKind::Backward, batch);
-
-        self.maybe_aggregate();
-        self.maybe_replicate(t, batch)?;
-
-        if stage == 0 {
-            return Ok(Some(CompletedBatch { batch, loss, ncorrect, reports }));
-        }
-        reports.push(self.current_report());
-        let prev = self.prev_device().unwrap();
-        t.send(
-            prev,
-            Message::Backward {
-                batch,
-                grad: out.gx_out.unwrap_or_default(),
-                loss,
-                ncorrect,
-                reports,
-            },
-        )?;
-        Ok(None)
-    }
-
-    /// Weight aggregation (paper §III-C): stage `i` of `n` averages its
-    /// `n - i` concurrently-live weight versions every `agg_k * (n - i)`
-    /// backward steps.
-    fn maybe_aggregate(&mut self) {
-        if self.agg_k == 0 {
-            return;
-        }
-        let stage = match self.my_stage() {
-            Some(s) => s,
-            None => return,
-        };
-        let m = self.n_stages().saturating_sub(stage);
-        if m < 2 {
-            return; // last stage has a single live version
-        }
-        let interval = self.agg_k as u64 * m as u64;
-        if self.bwd_count == 0 || self.bwd_count % interval != 0 {
-            return;
-        }
-        let versions = self.stash.recent_versions(m);
-        let mut snaps: Vec<&StageParams> = versions
-            .iter()
-            .filter_map(|v| self.stash.snapshot(*v))
-            .collect();
-        let current = self.params.clone();
-        snaps.push(&current);
-        if snaps.len() < 2 {
-            return;
-        }
-        if let Some(avg) = aggregate_versions(&snaps) {
-            self.params = avg;
-            self.version += 1;
-            self.emit(TraceKind::Aggregate, self.bwd_count);
-        }
-    }
-
-    /// Chain/global replication triggers after `batch`'s backward.
-    fn maybe_replicate(&mut self, t: &dyn Transport, batch: u64) -> Result<()> {
-        let stage = match self.my_stage() {
-            Some(s) => s,
-            None => return Ok(()),
-        };
-        if stage == 0 {
-            return Ok(()); // the central node persists locally (paper §III-E)
-        }
-        let wire: Option<Vec<WireBlock>> = if replication::due(batch, self.nonzero(self.chain_every))
-            || replication::due(batch, self.nonzero(self.global_every))
-        {
-            Some(replication::to_wire(&self.params))
-        } else {
-            None
-        };
-        if let Some(wire) = wire {
-            if replication::due(batch, self.nonzero(self.chain_every)) {
-                let target_stage = replication::chain_target(stage, self.n_stages());
-                let target = self.worker_list[target_stage];
-                t.send(
-                    target,
-                    Message::ReplicaPush {
-                        kind: ReplicaKind::Chain,
-                        owner_stage: stage,
-                        owner_device: self.device_id,
-                        version: self.version,
-                        blocks: wire.clone(),
-                    },
-                )?;
-            }
-            if replication::due(batch, self.nonzero(self.global_every)) {
-                t.send(
-                    self.central_device(),
-                    Message::ReplicaPush {
-                        kind: ReplicaKind::Global,
-                        owner_stage: stage,
-                        owner_device: self.device_id,
-                        version: self.version,
-                        blocks: wire,
-                    },
-                )?;
-            }
-        }
-        Ok(())
-    }
-
-    fn nonzero(&self, v: u64) -> Option<u64> {
-        (v > 0).then_some(v)
-    }
-
-    // ------------------------------------------------------------------
-    // execution-time reporting (paper §III-D "execution profiling")
-    // ------------------------------------------------------------------
-
-    fn record_exec(&mut self, ms: f64) {
-        self.exec_window.push_back(ms);
-        while self.exec_window.len() > 8 {
-            self.exec_window.pop_front();
-        }
-    }
-
-    /// Rolling average of this stage's per-batch execution time (ms).
-    pub fn avg_exec_ms(&self) -> Option<f64> {
-        (!self.exec_window.is_empty())
-            .then(|| self.exec_window.iter().sum::<f64>() / self.exec_window.len() as f64)
-    }
-
-    fn current_report(&self) -> ExecReport {
-        let n = self.exec_window.len().max(1);
-        let avg = self.exec_window.iter().sum::<f64>() / n as f64;
-        ExecReport { device: self.device_id, avg_ms: avg, batches: n as u32 }
-    }
-
-    // ------------------------------------------------------------------
-    // scheduling
-    // ------------------------------------------------------------------
-
-    /// Run at most one compute step (backward preferred — 1F1B).
-    pub fn pump(&mut self, t: &dyn Transport) -> Result<bool> {
-        if !self.initialized || self.status == 1 || self.my_stage().is_none() {
-            return Ok(false);
-        }
-        if let Some(b) = self.pending_bwd.pop_front() {
-            self.backward(t, b.batch, b.grad, b.loss, b.ncorrect, b.reports)?;
-            return Ok(true);
-        }
-        // last stage can only run a forward whose labels have arrived
-        if let Some(pos) = self.position_of_runnable_forward() {
-            let f = self.pending_fwd.remove(pos).unwrap();
-            if f.is_eval {
-                self.forward_eval(t, f.batch, f.data)?;
-            } else {
-                self.forward_train(t, f.batch, f.version0, f.data)?;
-            }
-            return Ok(true);
-        }
-        Ok(false)
-    }
-
-    fn position_of_runnable_forward(&self) -> Option<usize> {
-        if !self.is_last_stage() {
-            return (!self.pending_fwd.is_empty()).then_some(0);
-        }
-        self.pending_fwd.iter().position(|f| {
-            if f.is_eval {
-                self.eval_labels.contains_key(&f.batch)
-            } else {
-                self.labels.contains_key(&f.batch)
-            }
-        })
-    }
-
-    pub fn queued(&self) -> (usize, usize) {
-        (self.pending_fwd.len(), self.pending_bwd.len())
-    }
-
-    // ------------------------------------------------------------------
-    // control-plane handling
-    // ------------------------------------------------------------------
-
-    /// Handle one message (used by worker loops; the central driver
-    /// handles data-plane messages itself and delegates control here).
-    pub fn handle_message(
-        &mut self,
-        t: &dyn Transport,
-        from: DeviceId,
-        msg: Message,
-    ) -> Result<Flow> {
-        match msg {
-            Message::Forward { batch, version0, is_eval, data } => {
-                if self.status == 0 || is_eval {
-                    self.pending_fwd.push_back(PendingForward {
-                        batch,
-                        version0,
-                        is_eval,
-                        data: Self::payload_to_tensor(data),
-                    });
-                }
-            }
-            Message::Labels { batch, is_eval, data } => {
-                if is_eval {
-                    self.eval_labels.insert(batch, data);
-                } else {
-                    self.labels.insert(batch, data);
-                }
-            }
-            Message::Backward { batch, grad, loss, ncorrect, reports } => {
-                if self.status == 0 {
-                    self.pending_bwd.push_back(PendingBackward { batch, grad, loss, ncorrect, reports });
-                }
-            }
-            Message::Probe => {
-                t.send(from, Message::ProbeAck { id: self.device_id, fresh: !self.initialized })?;
-            }
-            Message::InitState(ti) => {
-                self.apply_init(&ti)?;
-                self.measure_bandwidth(t)?;
-            }
-            Message::Repartition { ranges, worker_list, failed } => {
-                self.begin_repartition(t, ranges, worker_list, failed)?;
-            }
-            Message::FetchWeights { blocks } => {
-                self.serve_fetch(t, from, &blocks)?;
-            }
-            Message::Weights { blocks } => {
-                self.handle_weights(t, from, blocks)?;
-            }
-            Message::ReplicaPush { kind, owner_stage, owner_device, version, blocks } => {
-                self.backups.store(
-                    owner_device,
-                    kind,
-                    owner_stage,
-                    version,
-                    replication::from_wire(&blocks),
-                );
-            }
-            Message::Commit => {
-                self.apply_commit()?;
-            }
-            Message::Reset { committed } => {
-                self.apply_reset(committed);
-            }
-            Message::BwTest { payload_bytes, .. } => {
-                t.send(from, Message::BwAck { payload_bytes })?;
-            }
-            Message::BwAck { payload_bytes } => {
-                if let (Some(t0), Some(stage)) = (self.bw_probe.take(), self.my_stage()) {
-                    let dt = t0.elapsed().as_secs_f64().max(1e-6);
-                    let bps = payload_bytes as f64 / dt;
-                    t.send(self.central_device(), Message::BwReport { stage, bps })?;
-                }
-            }
-            Message::SetLr { lr } => {
-                self.sgd.set_lr(lr);
-            }
-            Message::Shutdown => return Ok(Flow::Shutdown),
-            // coordinator-only messages a worker may legitimately see late:
-            Message::ProbeAck { .. }
-            | Message::EvalResult { .. }
-            | Message::FetchDone { .. }
-            | Message::BwReport { .. } => {}
-        }
-        Ok(Flow::Continue)
-    }
-
-    /// Reset the training state (paper §III-F last phase): discard every
-    /// batch beyond `committed` and return to normal status.
-    pub fn apply_reset(&mut self, committed: i64) {
-        self.committed_fwd = committed;
-        self.committed_bwd = committed;
-        self.pending_fwd.retain(|f| f.is_eval || (f.batch as i64) <= committed);
-        self.pending_bwd.retain(|b| (b.batch as i64) <= committed);
-        self.acts.retain(|&b, _| (b as i64) <= committed);
-        self.fwd_ms.retain(|&b, _| (b as i64) <= committed);
-        self.labels.retain(|&b, _| (b as i64) > committed); // labels for future batches stay
-        self.stash.discard_after(committed);
-        self.status = 0;
-    }
-
-    // ------------------------------------------------------------------
-    // re-partition / redistribution protocol (paper §III-D + Algorithm 1)
-    // ------------------------------------------------------------------
-
-    /// Start a re-partition: plan with Algorithm 1, stage local/backup
-    /// blocks immediately, issue FetchWeights for the rest.
-    pub fn begin_repartition(
-        &mut self,
-        t: &dyn Transport,
-        ranges: Vec<(usize, usize)>,
-        worker_list: Vec<DeviceId>,
-        failed: Vec<usize>,
-    ) -> Result<()> {
-        self.status = 1;
-        let i_new = match worker_list.iter().position(|&d| d == self.device_id) {
-            Some(i) => i,
-            None => {
-                // not part of the new pipeline (shouldn't happen for alive
-                // devices) — just accept and idle
-                self.repart = None;
-                return Ok(());
-            }
-        };
-        let i_cur_old = self.my_stage();
-        let held = self.params.block_indices();
-        let p_cur = if self.ranges.is_empty() { ranges.clone() } else { self.ranges.clone() };
-        let plan: RedistPlan =
-            plan_redistribution(&ranges, &p_cur, &failed, &held, i_new, i_cur_old);
-
-        let mut rp = Repart {
-            ranges,
-            worker_list,
-            needed: BTreeSet::new(),
-            staged: BTreeMap::new(),
-            outstanding: BTreeMap::new(),
-            escalated: BTreeSet::new(),
-        };
-
-        for (src, blocks) in &plan.need {
-            match src {
-                Source::LocalBackup => {
-                    for &b in blocks {
-                        match self.backups.find_block(b) {
-                            Some(bp) => {
-                                rp.staged.insert(b, bp.clone());
-                            }
-                            None => {
-                                // replica never arrived: escalate to central
-                                rp.needed.insert(b);
-                                rp.escalated.insert(b);
-                            }
-                        }
-                    }
-                }
-                Source::CentralBackup => {
-                    for &b in blocks {
-                        rp.needed.insert(b);
-                        rp.escalated.insert(b);
-                    }
-                }
-                Source::Stage(s) => {
-                    let dev = rp.worker_list[*s];
-                    for &b in blocks {
-                        rp.needed.insert(b);
-                    }
-                    rp.outstanding.entry(dev).or_default().extend(blocks.iter().copied());
-                }
-            }
-        }
-
-        // fire the fetches
-        let central = rp.worker_list[0];
-        for (dev, blocks) in rp.outstanding.clone() {
-            t.send(dev, Message::FetchWeights { blocks })?;
-        }
-        let escalated: Vec<usize> = rp.escalated.iter().copied().collect();
-        if !escalated.is_empty() && self.device_id != central {
-            rp.outstanding.entry(central).or_default().extend(escalated.iter().copied());
-            t.send(central, Message::FetchWeights { blocks: escalated })?;
-        } else if !escalated.is_empty() {
-            // I AM the central node: serve from my own global backups; a
-            // block no backup ever covered falls back to its initial
-            // weights (a fresh sub-model is better than a dead pipeline —
-            // the paper assumes replication already ran at least once).
-            for b in escalated {
-                let bp = match self.backups.find_block(b) {
-                    Some(bp) => bp.clone(),
-                    None => {
-                        crate::log_warn!(
-                            "block {b}: no replica anywhere; restoring initial weights"
-                        );
-                        BlockParams(self.manifest.load_init_params(b)?)
-                    }
-                };
-                rp.staged.insert(b, bp);
-                rp.needed.remove(&b);
-            }
-        }
-
-        let done = rp.needed.is_empty();
-        self.repart = Some(rp);
-        if done {
-            self.fetch_complete(t)?;
-        }
-        Ok(())
-    }
-
-    /// Serve a FetchWeights request from current params, then backups.
-    pub fn serve_fetch(&self, t: &dyn Transport, from: DeviceId, blocks: &[usize]) -> Result<()> {
-        let mut found: Vec<WireBlock> = Vec::new();
-        for &b in blocks {
-            if let Some(bp) = self.params.get(b) {
-                found.push((b, bp.0.clone()));
-            } else if let Some(bp) = self.backups.find_block(b) {
-                found.push((b, bp.0.clone()));
-            }
-        }
-        t.send(from, Message::Weights { blocks: found })?;
-        Ok(())
-    }
-
-    /// Measure bandwidth to the next worker by timing a 64 KiB echo
-    /// (paper §III-B; the analogue of its ping3 measurement).
-    pub fn measure_bandwidth(&mut self, t: &dyn Transport) -> Result<()> {
-        if let Some(next) = self.next_device() {
-            let payload = vec![0u8; 65536];
-            self.bw_probe = Some(std::time::Instant::now());
-            t.send(next, Message::BwTest { payload_bytes: 65536, data: payload })?;
-        }
-        Ok(())
-    }
-
-    /// Integrate a Weights reply; escalate still-missing blocks to central.
-    ///
-    /// Outside a re-partition, a Weights push overwrites the local params
-    /// directly — this is how pre-trained weights reach workers in the
-    /// paper's continuous-training mode (Table I).
-    pub fn handle_weights(
-        &mut self,
-        t: &dyn Transport,
-        from: DeviceId,
-        blocks: Vec<WireBlock>,
-    ) -> Result<()> {
-        if self.repart.is_none() {
-            for (idx, tensors) in blocks {
-                if self.params.get(idx).is_some() {
-                    self.params.blocks.insert(idx, BlockParams(tensors));
-                }
-            }
-            return Ok(());
-        }
-        let Some(rp) = &mut self.repart else { return Ok(()) };
-        for (idx, tensors) in blocks {
-            if rp.needed.remove(&idx) {
-                rp.staged.insert(idx, BlockParams(tensors));
-            }
-        }
-        // blocks we asked `from` for but didn't get:
-        //  * from a peer -> escalate to the central node's global backup
-        //  * from central itself -> nothing anywhere: fall back to the
-        //    initial weights so recovery always terminates
-        if let Some(asked) = rp.outstanding.remove(&from) {
-            let central = rp.worker_list[0];
-            if from == central {
-                let missing: Vec<usize> =
-                    asked.into_iter().filter(|b| rp.needed.contains(b)).collect();
-                for b in missing {
-                    crate::log_warn!(
-                        "block {b}: central has no replica; restoring initial weights"
-                    );
-                    rp.staged.insert(b, BlockParams(self.manifest.load_init_params(b)?));
-                    rp.needed.remove(&b);
-                }
-            } else {
-                let missing: Vec<usize> = asked
-                    .into_iter()
-                    .filter(|b| rp.needed.contains(b) && !rp.escalated.contains(b))
-                    .collect();
-                if !missing.is_empty() {
-                    for &b in &missing {
-                        rp.escalated.insert(b);
-                    }
-                    rp.outstanding
-                        .entry(central)
-                        .or_default()
-                        .extend(missing.iter().copied());
-                    t.send(central, Message::FetchWeights { blocks: missing })?;
-                }
-            }
-        }
-        if self.repart.as_ref().map(|r| r.needed.is_empty()).unwrap_or(false) {
-            self.fetch_complete(t)?;
-        }
-        Ok(())
-    }
-
-    fn fetch_complete(&mut self, t: &dyn Transport) -> Result<()> {
-        let central = self.repart.as_ref().unwrap().worker_list[0];
-        if self.device_id == central {
-            // the coordinator tracks its own completion directly
-            return Ok(());
-        }
-        t.send(central, Message::FetchDone { id: self.device_id })?;
-        Ok(())
-    }
-
-    /// Has this device staged everything it needs (pre-Commit)?
-    pub fn fetch_done(&self) -> bool {
-        self.repart.as_ref().map(|r| r.needed.is_empty()).unwrap_or(true)
-    }
-
-    /// Commit: swap to the new sub-model (paper's commit message — only
-    /// now may the old sub-model be dropped).
-    pub fn apply_commit(&mut self) -> Result<()> {
-        let Some(rp) = self.repart.take() else {
-            self.status = 0;
-            return Ok(());
-        };
-        if !rp.needed.is_empty() {
-            bail!(
-                "device {}: commit before fetch completion ({} missing)",
-                self.device_id,
-                rp.needed.len()
-            );
-        }
-        let i_new = rp.worker_list.iter().position(|&d| d == self.device_id);
-        self.worker_list = rp.worker_list;
-        self.ranges = rp.ranges;
-        if let Some(i) = i_new {
-            let (lo, hi) = self.ranges[i];
-            self.params.retain_range(lo, hi);
-            for (idx, bp) in rp.staged {
-                if idx >= lo && idx <= hi {
-                    self.params.blocks.insert(idx, bp);
-                }
-            }
-            self.sgd.retain_blocks(&self.params.block_indices());
-        } else {
-            self.params = StageParams::default();
-        }
-        self.stash = VersionStash::new(self.n_stages().max(2));
-        self.acts.clear();
-        self.fwd_ms.clear();
-        self.pending_fwd.retain(|f| f.is_eval);
-        self.pending_bwd.clear();
-        self.status = 0;
-        self.initialized = true;
-        Ok(())
-    }
-
-    /// Simulate a crash-restart: all in-memory state is lost (the process
-    /// came back up but knows nothing — paper §III-F case 2).
-    pub fn wipe_state(&mut self) {
-        self.params = StageParams::default();
-        self.sgd = Sgd::new(self.sgd.cfg);
-        self.stash = VersionStash::new(2);
-        self.version = 0;
-        self.initialized = false;
-        self.status = 0;
-        self.acts.clear();
-        self.labels.clear();
-        self.eval_labels.clear();
-        self.pending_fwd.clear();
-        self.pending_bwd.clear();
-        self.committed_fwd = -1;
-        self.committed_bwd = -1;
-        self.bwd_count = 0;
-        self.exec_window.clear();
-        self.fwd_ms.clear();
-        self.backups = BackupStore::default();
-        self.repart = None;
-        self.bw_probe = None;
-    }
-
-    /// State bytes currently held (memory accounting for the device cap).
-    pub fn memory_bytes(&self) -> u64 {
-        (self.params.byte_len()
-            + self.backups.byte_len()
-            + self.acts.values().flat_map(|v| v.iter()).map(|t| t.byte_len()).sum::<usize>())
-            as u64
-    }
-}
-
-/// The worker-device main loop (stages >= 1). The central node drives its
-/// own loop in [`crate::coordinator`].
-///
-/// `kill_watch` (sim mode): when the fault injector marks this device
-/// dead, the loop wipes all in-memory state — when (if) the device is
-/// revived it behaves exactly like a freshly-restarted process (paper
-/// case 2: probes back `fresh`, weights restored from its chain replica).
-pub fn run_worker(
-    mut w: StageWorker,
-    endpoint: Box<dyn Transport>,
-    kill_watch: Option<crate::net::sim::SimNet>,
-) -> Result<()> {
-    let mut was_dead = false;
-    loop {
-        if let Some(net) = &kill_watch {
-            if net.is_dead(w.device_id) {
-                if !was_dead {
-                    w.wipe_state();
-                    was_dead = true;
-                }
-                std::thread::sleep(Duration::from_millis(10));
-                continue;
-            }
-            was_dead = false;
-        }
-        // wait briefly for a message, then drain whatever else queued up
-        if let Some((from, msg)) = endpoint.recv_timeout(Duration::from_millis(2)) {
-            if w.handle_message(&*endpoint, from, msg)? == Flow::Shutdown {
-                return Ok(());
-            }
-            while let Some((from, msg)) = endpoint.recv_timeout(Duration::ZERO) {
-                if w.handle_message(&*endpoint, from, msg)? == Flow::Shutdown {
-                    return Ok(());
-                }
-            }
-        }
-        w.pump(&*endpoint)?;
-    }
-}
+pub use events::{ControlEvent, DataEvent, Event, Flow};
+pub use schedule::{PendingBackward, PendingForward, Schedule, Step};
+pub use stage::{run_worker, CompletedBatch, StageWorker};

@@ -1,0 +1,179 @@
+//! Client-side state of an in-progress re-partition (between the
+//! `Repartition` and `Commit` control events) — the receiving half of the
+//! paper's Algorithm-1 redistribution protocol (§III-D/F).
+//!
+//! [`super::stage::StageWorker`] builds a [`Repart`] from the fetch plan,
+//! sends the `FetchWeights` requests, and feeds `Weights` replies back in;
+//! `Repart` tracks which blocks are still missing, which requests are
+//! outstanding at which peer, and which blocks were already escalated to
+//! the central node's global backup. Staged blocks hold shared
+//! [`BlockParams`] buffers — staging a fetched or locally-backed-up block
+//! never copies tensor data.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::model::BlockParams;
+use crate::net::message::{DeviceId, WireBlock};
+
+/// An open request window at one device: how many `FetchWeights`
+/// messages are still unanswered, and the union of blocks they asked.
+#[derive(Debug, Default, Clone)]
+pub(crate) struct Outstanding {
+    pub replies_pending: usize,
+    pub asked: Vec<usize>,
+}
+
+/// In-progress re-partition state.
+pub(crate) struct Repart {
+    /// The partition being installed.
+    pub ranges: Vec<(usize, usize)>,
+    pub worker_list: Vec<DeviceId>,
+    /// Blocks still missing (awaiting `Weights` replies).
+    pub needed: BTreeSet<usize>,
+    /// Blocks fetched/staged so far (installed atomically at commit).
+    pub staged: BTreeMap<usize, BlockParams>,
+    /// Open request windows per device.
+    pub outstanding: BTreeMap<DeviceId, Outstanding>,
+    /// Blocks already escalated to the central node's global backup.
+    pub escalated: BTreeSet<usize>,
+}
+
+impl Repart {
+    pub fn new(ranges: Vec<(usize, usize)>, worker_list: Vec<DeviceId>) -> Repart {
+        Repart {
+            ranges,
+            worker_list,
+            needed: BTreeSet::new(),
+            staged: BTreeMap::new(),
+            outstanding: BTreeMap::new(),
+            escalated: BTreeSet::new(),
+        }
+    }
+
+    pub fn central(&self) -> DeviceId {
+        self.worker_list[0]
+    }
+
+    /// Stage a block that is already satisfied (local backup, self-serve).
+    pub fn stage(&mut self, block: usize, params: BlockParams) {
+        self.staged.insert(block, params);
+        self.needed.remove(&block);
+    }
+
+    /// Record that `block` must be fetched (optionally via escalation).
+    pub fn mark_needed(&mut self, block: usize, escalated: bool) {
+        self.needed.insert(block);
+        if escalated {
+            self.escalated.insert(block);
+        }
+    }
+
+    /// Record one outstanding `FetchWeights` request of `blocks` at `dev`.
+    /// Call exactly once per message sent — replies are counted against it.
+    pub fn mark_requested(&mut self, dev: DeviceId, blocks: impl IntoIterator<Item = usize>) {
+        let o = self.outstanding.entry(dev).or_default();
+        o.replies_pending += 1;
+        o.asked.extend(blocks);
+    }
+
+    /// Integrate a `Weights` reply from `from`: stage everything that was
+    /// still needed, then close one request window. Blocks `from` was
+    /// asked for but did not serve are only reported once its LAST open
+    /// request has answered — an earlier reply must not condemn blocks a
+    /// still-in-flight reply may yet deliver.
+    pub fn record_reply(&mut self, from: DeviceId, blocks: Vec<WireBlock>) -> Vec<usize> {
+        for (idx, tensors) in blocks {
+            if self.needed.remove(&idx) {
+                self.staged.insert(idx, BlockParams(tensors));
+            }
+        }
+        let Some(o) = self.outstanding.get_mut(&from) else {
+            return Vec::new();
+        };
+        o.replies_pending = o.replies_pending.saturating_sub(1);
+        if o.replies_pending > 0 {
+            return Vec::new();
+        }
+        let asked = self.outstanding.remove(&from).unwrap().asked;
+        asked.into_iter().filter(|b| self.needed.contains(b)).collect()
+    }
+
+    /// All blocks staged — ready for `FetchDone` / commit.
+    pub fn is_complete(&self) -> bool {
+        self.needed.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bp(v: f32) -> BlockParams {
+        BlockParams::from_vecs(vec![vec![v; 2]])
+    }
+
+    fn wire(idx: usize, v: f32) -> WireBlock {
+        (idx, bp(v).0)
+    }
+
+    #[test]
+    fn reply_stages_and_reports_missing() {
+        let mut rp = Repart::new(vec![(0, 1), (2, 5)], vec![0, 7]);
+        rp.mark_needed(2, false);
+        rp.mark_needed(3, false);
+        rp.mark_requested(9, [2, 3]);
+        assert!(!rp.is_complete());
+        let missing = rp.record_reply(9, vec![wire(2, 1.0)]);
+        assert_eq!(missing, vec![3], "unserved block must surface for escalation");
+        assert!(rp.staged.contains_key(&2));
+        assert!(!rp.is_complete());
+        rp.mark_requested(0, missing.iter().copied());
+        let missing = rp.record_reply(0, vec![wire(3, 2.0)]);
+        assert!(missing.is_empty());
+        assert!(rp.is_complete());
+    }
+
+    #[test]
+    fn two_requests_to_one_device_wait_for_both_replies() {
+        // stage-source fetch [2] and an escalation [3] both go to central:
+        // the first reply must NOT condemn block 3 as unserved while the
+        // second reply is still in flight (that would silently restore
+        // initial weights over a live replica).
+        let mut rp = Repart::new(vec![(0, 5)], vec![0]);
+        rp.mark_needed(2, false);
+        rp.mark_needed(3, true);
+        rp.mark_requested(0, [2]);
+        rp.mark_requested(0, [3]);
+        let missing = rp.record_reply(0, vec![wire(2, 1.0)]);
+        assert!(missing.is_empty(), "block 3 still has a reply in flight");
+        assert!(!rp.is_complete());
+        let missing = rp.record_reply(0, vec![wire(3, 2.0)]);
+        assert!(missing.is_empty());
+        assert!(rp.is_complete());
+        // and if the last reply does NOT serve it, it surfaces then
+        let mut rp = Repart::new(vec![(0, 5)], vec![0]);
+        rp.mark_needed(4, false);
+        rp.mark_requested(0, [4]);
+        rp.mark_requested(0, std::iter::empty::<usize>());
+        assert!(rp.record_reply(0, vec![]).is_empty());
+        assert_eq!(rp.record_reply(0, vec![]), vec![4], "unserved after final reply");
+    }
+
+    #[test]
+    fn unsolicited_blocks_are_ignored() {
+        let mut rp = Repart::new(vec![(0, 3)], vec![0]);
+        rp.mark_needed(1, false);
+        rp.record_reply(5, vec![wire(9, 3.0)]);
+        assert!(!rp.staged.contains_key(&9));
+        assert!(!rp.is_complete());
+    }
+
+    #[test]
+    fn local_stage_satisfies_without_request() {
+        let mut rp = Repart::new(vec![(0, 0)], vec![0]);
+        rp.mark_needed(0, true);
+        rp.stage(0, bp(4.0));
+        assert!(rp.is_complete());
+        assert!(rp.escalated.contains(&0));
+    }
+}

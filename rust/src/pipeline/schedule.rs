@@ -1,0 +1,271 @@
+//! 1F1B queueing and per-batch stash policy (paper §III-C).
+//!
+//! The [`Schedule`] owns everything keyed by batch id on a stage: the
+//! pending forward/backward queues, the (train and eval) label stores the
+//! last stage matches forwards against, the activation stash the backward
+//! pass replays, and the forward-time samples merged into fwd+bwd
+//! execution reports. Policy lives in [`Schedule::next_step`]: a pending
+//! backward always preempts a pending forward (PipeDream's 1F1B rule),
+//! and the last stage only starts a forward whose labels have arrived.
+//!
+//! Queued tensors are `TensorBuf`-backed, so holding a batch in a queue
+//! or in the activation stash shares buffers instead of copying them.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::net::message::ExecReport;
+use crate::net::TensorBuf;
+use crate::runtime::HostTensor;
+
+/// A forward waiting to run on this stage.
+#[derive(Debug)]
+pub struct PendingForward {
+    pub batch: u64,
+    pub version0: u64,
+    pub is_eval: bool,
+    pub data: HostTensor,
+}
+
+/// A backward waiting to run on this stage.
+#[derive(Debug)]
+pub struct PendingBackward {
+    pub batch: u64,
+    pub grad: TensorBuf,
+    pub loss: f32,
+    pub ncorrect: f32,
+    pub reports: Vec<ExecReport>,
+}
+
+/// The next compute step the 1F1B policy selects.
+#[derive(Debug)]
+pub enum Step {
+    Backward(PendingBackward),
+    Forward(PendingForward),
+}
+
+/// Batch-keyed stage state + the 1F1B selection policy.
+#[derive(Debug, Default)]
+pub struct Schedule {
+    pending_fwd: VecDeque<PendingForward>,
+    pending_bwd: VecDeque<PendingBackward>,
+    labels: HashMap<u64, Vec<i32>>,
+    eval_labels: HashMap<u64, Vec<i32>>,
+    /// batch -> per-block inputs saved at forward time (for backward).
+    acts: HashMap<u64, Vec<HostTensor>>,
+    /// forward-time of in-flight batches, merged into one fwd+bwd sample
+    /// at backward time (the paper reports per-batch execution time).
+    fwd_ms: HashMap<u64, f64>,
+}
+
+impl Schedule {
+    pub fn new() -> Schedule {
+        Schedule::default()
+    }
+
+    // ---- intake ----
+
+    pub fn push_forward(&mut self, f: PendingForward) {
+        self.pending_fwd.push_back(f);
+    }
+
+    pub fn push_backward(&mut self, b: PendingBackward) {
+        self.pending_bwd.push_back(b);
+    }
+
+    pub fn put_labels(&mut self, batch: u64, is_eval: bool, data: Vec<i32>) {
+        if is_eval {
+            self.eval_labels.insert(batch, data);
+        } else {
+            self.labels.insert(batch, data);
+        }
+    }
+
+    // ---- policy ----
+
+    /// Select the next step: backward first (1F1B); otherwise the oldest
+    /// runnable forward. On the last stage a forward is runnable only
+    /// once its labels arrived (`last_stage` gates the label check).
+    pub fn next_step(&mut self, last_stage: bool) -> Option<Step> {
+        if let Some(b) = self.pending_bwd.pop_front() {
+            return Some(Step::Backward(b));
+        }
+        let pos = self.position_of_runnable_forward(last_stage)?;
+        Some(Step::Forward(self.pending_fwd.remove(pos).unwrap()))
+    }
+
+    fn position_of_runnable_forward(&self, last_stage: bool) -> Option<usize> {
+        if !last_stage {
+            return (!self.pending_fwd.is_empty()).then_some(0);
+        }
+        self.pending_fwd.iter().position(|f| {
+            if f.is_eval {
+                self.eval_labels.contains_key(&f.batch)
+            } else {
+                self.labels.contains_key(&f.batch)
+            }
+        })
+    }
+
+    /// (pending forwards, pending backwards) — for tests/introspection.
+    pub fn queued(&self) -> (usize, usize) {
+        (self.pending_fwd.len(), self.pending_bwd.len())
+    }
+
+    // ---- per-batch stashes ----
+
+    pub fn take_labels(&mut self, batch: u64, is_eval: bool) -> Option<Vec<i32>> {
+        if is_eval {
+            self.eval_labels.remove(&batch)
+        } else {
+            self.labels.remove(&batch)
+        }
+    }
+
+    pub fn stash_acts(&mut self, batch: u64, inputs: Vec<HostTensor>) {
+        self.acts.insert(batch, inputs);
+    }
+
+    pub fn take_acts(&mut self, batch: u64) -> Option<Vec<HostTensor>> {
+        self.acts.remove(&batch)
+    }
+
+    pub fn stash_fwd_ms(&mut self, batch: u64, ms: f64) {
+        self.fwd_ms.insert(batch, ms);
+    }
+
+    pub fn take_fwd_ms(&mut self, batch: u64) -> f64 {
+        self.fwd_ms.remove(&batch).unwrap_or(0.0)
+    }
+
+    /// Bytes held by the activation stash (device memory accounting).
+    pub fn acts_bytes(&self) -> usize {
+        self.acts.values().flat_map(|v| v.iter()).map(|t| t.byte_len()).sum()
+    }
+
+    // ---- lifecycle ----
+
+    /// Fault reset (paper §III-F): discard every batch beyond `committed`.
+    /// Labels for FUTURE batches stay — the central node already shipped
+    /// them and will not resend.
+    pub fn reset(&mut self, committed: i64) {
+        self.pending_fwd.retain(|f| f.is_eval || (f.batch as i64) <= committed);
+        self.pending_bwd.retain(|b| (b.batch as i64) <= committed);
+        self.acts.retain(|&b, _| (b as i64) <= committed);
+        self.fwd_ms.retain(|&b, _| (b as i64) <= committed);
+        self.labels.retain(|&b, _| (b as i64) > committed);
+    }
+
+    /// Commit of a new partition: training queues and stashes restart;
+    /// queued eval forwards survive (eval is version-independent).
+    pub fn on_commit(&mut self) {
+        self.pending_fwd.retain(|f| f.is_eval);
+        self.pending_bwd.clear();
+        self.acts.clear();
+        self.fwd_ms.clear();
+    }
+
+    /// Crash-restart: everything is gone.
+    pub fn clear(&mut self) {
+        self.pending_fwd.clear();
+        self.pending_bwd.clear();
+        self.labels.clear();
+        self.eval_labels.clear();
+        self.acts.clear();
+        self.fwd_ms.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fwd(batch: u64, is_eval: bool) -> PendingForward {
+        PendingForward {
+            batch,
+            version0: 0,
+            is_eval,
+            data: HostTensor::F32(vec![0.0; 4].into()),
+        }
+    }
+
+    fn bwd(batch: u64) -> PendingBackward {
+        PendingBackward {
+            batch,
+            grad: vec![0.0; 4].into(),
+            loss: 1.0,
+            ncorrect: 0.0,
+            reports: vec![],
+        }
+    }
+
+    #[test]
+    fn backward_preempts_forward() {
+        let mut s = Schedule::new();
+        s.push_forward(fwd(0, false));
+        s.push_backward(bwd(1));
+        match s.next_step(false) {
+            Some(Step::Backward(b)) => assert_eq!(b.batch, 1),
+            other => panic!("1F1B violated: {other:?}"),
+        }
+        match s.next_step(false) {
+            Some(Step::Forward(f)) => assert_eq!(f.batch, 0),
+            other => panic!("forward lost: {other:?}"),
+        }
+        assert!(s.next_step(false).is_none());
+    }
+
+    #[test]
+    fn last_stage_waits_for_labels() {
+        let mut s = Schedule::new();
+        s.push_forward(fwd(5, false));
+        assert!(s.next_step(true).is_none(), "no labels yet");
+        s.put_labels(5, false, vec![1, 2]);
+        assert!(matches!(s.next_step(true), Some(Step::Forward(f)) if f.batch == 5));
+        // eval forwards gate on eval labels, independently of train labels
+        s.push_forward(fwd(6, true));
+        s.put_labels(6, false, vec![0]);
+        assert!(s.next_step(true).is_none());
+        s.put_labels(6, true, vec![0]);
+        assert!(matches!(s.next_step(true), Some(Step::Forward(f)) if f.is_eval));
+    }
+
+    #[test]
+    fn non_last_stage_runs_forwards_fifo_without_labels() {
+        let mut s = Schedule::new();
+        s.push_forward(fwd(2, false));
+        s.push_forward(fwd(3, false));
+        assert!(matches!(s.next_step(false), Some(Step::Forward(f)) if f.batch == 2));
+        assert!(matches!(s.next_step(false), Some(Step::Forward(f)) if f.batch == 3));
+    }
+
+    #[test]
+    fn reset_discards_beyond_committed_but_keeps_future_labels() {
+        let mut s = Schedule::new();
+        for b in 5..9 {
+            s.push_forward(fwd(b, false));
+            s.stash_acts(b, vec![]);
+            s.stash_fwd_ms(b, 1.0);
+        }
+        s.put_labels(6, false, vec![1]);
+        s.put_labels(8, false, vec![1]);
+        s.reset(6);
+        assert_eq!(s.queued().0, 2, "batches 7,8 discarded; 5,6 kept");
+        assert!(s.take_acts(8).is_none());
+        assert!(s.take_acts(6).is_some());
+        assert!(s.take_labels(8, false).is_some(), "future labels must survive reset");
+        assert!(s.take_labels(6, false).is_none(), "committed labels dropped");
+    }
+
+    #[test]
+    fn commit_keeps_only_eval_forwards() {
+        let mut s = Schedule::new();
+        s.push_forward(fwd(0, false));
+        s.push_forward(fwd(1, true));
+        s.push_backward(bwd(0));
+        s.stash_acts(0, vec![]);
+        s.on_commit();
+        let (f, b) = s.queued();
+        assert_eq!((f, b), (1, 0));
+        assert!(s.take_acts(0).is_none());
+    }
+}

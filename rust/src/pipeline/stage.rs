@@ -1,0 +1,1058 @@
+//! Per-stage compute + the stage event loop (paper §III-C).
+//!
+//! Each device runs a [`StageWorker`]: it owns the compiled block
+//! executables (all blocks — re-partitioning only moves *weights*, never
+//! code), the parameters of its current block range, the weight stash,
+//! the optimizer, the replica store, and the device capacity simulator.
+//!
+//! The worker is event-driven: incoming messages are classified into
+//! [`Event`]s at the network boundary and handled by [`StageWorker::on_event`];
+//! [`StageWorker::pump`] asks the 1F1B [`Schedule`] for the next compute
+//! step. Weight stashing + the version ring give weight aggregation its
+//! inputs (paper Fig. 2); vertical sync is tracked through the `version0`
+//! tag each batch carries. All tensor movement — queued activations,
+//! stashed weights, replica pushes, redistribution staging — shares
+//! `TensorBuf` allocations; the optimizer mutates copy-on-write.
+//!
+//! The same struct serves the central node (stage 0): the coordinator
+//! drives it directly instead of through [`run_worker`].
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::device::SimDevice;
+use crate::fault::{plan_redistribution, RedistPlan, Source};
+use crate::manifest::Manifest;
+use crate::model::{aggregate_versions, BlockParams, Sgd, SgdConfig, StageParams, VersionStash};
+use crate::net::message::{DeviceId, ExecReport, Message, Payload, ReplicaKind, TrainInit, WireBlock};
+use crate::net::{TensorBuf, Transport};
+use crate::replication::{self, BackupStore};
+use crate::runtime::{BlockRuntime, HostTensor};
+
+use super::events::{ControlEvent, DataEvent, Event, Flow};
+use super::repart::Repart;
+use super::schedule::{PendingBackward, PendingForward, Schedule, Step};
+use super::trace::{TraceEvent, TraceKind, TraceSink};
+
+/// Completion info surfaced at stage 0 when a batch's gradient lands.
+#[derive(Debug, Clone)]
+pub struct CompletedBatch {
+    pub batch: u64,
+    pub loss: f32,
+    pub ncorrect: f32,
+    pub reports: Vec<ExecReport>,
+}
+
+pub struct StageWorker {
+    pub device_id: DeviceId,
+    pub manifest: Arc<Manifest>,
+    pub blocks_rt: Vec<BlockRuntime>,
+    pub sim: SimDevice,
+    pub trace: TraceSink,
+
+    // --- pipeline topology ---
+    pub worker_list: Vec<DeviceId>,
+    pub ranges: Vec<(usize, usize)>,
+
+    // --- stage state ---
+    pub params: StageParams,
+    pub sgd: Sgd,
+    pub stash: VersionStash,
+    pub version: u64,
+    pub initialized: bool,
+    pub status: u8,
+
+    /// 1F1B queues + batch-keyed stashes (labels, activations, timings).
+    sched: Schedule,
+
+    pub committed_fwd: i64,
+    pub committed_bwd: i64,
+
+    // --- schedules ---
+    pub agg_k: u32,
+    pub chain_every: u64,
+    pub global_every: u64,
+    bwd_count: u64,
+
+    // --- profiling report window (rolling, paper §III-D) ---
+    exec_window: std::collections::VecDeque<f64>,
+
+    // --- replication store ---
+    pub backups: BackupStore,
+
+    repart: Option<Repart>,
+    /// outstanding bandwidth probe to the next worker (paper §III-B)
+    bw_probe: Option<std::time::Instant>,
+}
+
+impl StageWorker {
+    pub fn new(
+        device_id: DeviceId,
+        manifest: Arc<Manifest>,
+        blocks_rt: Vec<BlockRuntime>,
+        sim: SimDevice,
+        trace: TraceSink,
+    ) -> StageWorker {
+        StageWorker {
+            device_id,
+            manifest,
+            blocks_rt,
+            sim,
+            trace,
+            worker_list: vec![],
+            ranges: vec![],
+            params: StageParams::default(),
+            sgd: Sgd::new(SgdConfig::default()),
+            stash: VersionStash::new(4),
+            version: 0,
+            initialized: false,
+            status: 0,
+            sched: Schedule::new(),
+            committed_fwd: -1,
+            committed_bwd: -1,
+            agg_k: 0,
+            chain_every: 0,
+            global_every: 0,
+            bwd_count: 0,
+            exec_window: std::collections::VecDeque::new(),
+            backups: BackupStore::default(),
+            repart: None,
+            bw_probe: None,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // topology helpers
+    // ------------------------------------------------------------------
+
+    pub fn n_stages(&self) -> usize {
+        self.worker_list.len()
+    }
+
+    pub fn my_stage(&self) -> Option<usize> {
+        self.worker_list.iter().position(|&d| d == self.device_id)
+    }
+
+    pub fn my_range(&self) -> Option<(usize, usize)> {
+        self.my_stage().map(|s| self.ranges[s])
+    }
+
+    pub fn is_last_stage(&self) -> bool {
+        self.my_stage().map(|s| s + 1 == self.n_stages()).unwrap_or(false)
+    }
+
+    fn next_device(&self) -> Option<DeviceId> {
+        let s = self.my_stage()?;
+        self.worker_list.get(s + 1).copied()
+    }
+
+    fn prev_device(&self) -> Option<DeviceId> {
+        let s = self.my_stage()?;
+        s.checked_sub(1).map(|p| self.worker_list[p])
+    }
+
+    fn central_device(&self) -> DeviceId {
+        self.worker_list[0]
+    }
+
+    fn emit(&self, kind: TraceKind, batch: u64) {
+        if let Some(t) = &self.trace {
+            t.lock().unwrap().push(TraceEvent {
+                device: self.device_id,
+                stage: self.my_stage().unwrap_or(usize::MAX),
+                kind,
+                batch,
+                version: self.version,
+            });
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // initialization
+    // ------------------------------------------------------------------
+
+    /// Apply the training-init state (paper Table I). Loads this stage's
+    /// initial weights from the manifest unless we are in fault-recovery
+    /// (status = 1), where weights arrive via redistribution instead.
+    pub fn apply_init(&mut self, t: &TrainInit) -> Result<()> {
+        self.worker_list = t.worker_list.clone();
+        self.ranges = t.ranges.clone();
+        self.sgd = Sgd::new(SgdConfig {
+            lr: t.lr,
+            momentum: t.momentum,
+            weight_decay: t.weight_decay,
+        });
+        self.stash = VersionStash::new(self.n_stages().max(2));
+        self.version = 0;
+        self.committed_fwd = t.committed_forward;
+        self.committed_bwd = t.committed_backward;
+        self.agg_k = t.agg_k;
+        self.chain_every = t.chain_every;
+        self.global_every = t.global_every;
+        self.status = t.status;
+        if t.status == 0 {
+            if let Some((lo, hi)) = self.my_range() {
+                self.params = StageParams::load_range(&self.manifest, lo, hi)?;
+            }
+        }
+        self.initialized = true;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // compute: forward
+    // ------------------------------------------------------------------
+
+    fn payload_to_tensor(p: Payload) -> HostTensor {
+        match p {
+            Payload::F32(v) => HostTensor::F32(v),
+            Payload::I32(v) => HostTensor::I32(v),
+        }
+    }
+
+    fn tensor_to_payload(t: HostTensor) -> Payload {
+        match t {
+            HostTensor::F32(v) => Payload::F32(v),
+            HostTensor::I32(v) => Payload::I32(v),
+        }
+    }
+
+    /// Training forward for one batch through this stage's blocks.
+    /// Returns `Some(CompletedBatch)` only in the degenerate 1-stage case.
+    pub fn forward_train(
+        &mut self,
+        t: &dyn Transport,
+        batch: u64,
+        version0: u64,
+        x: HostTensor,
+    ) -> Result<Option<CompletedBatch>> {
+        let (lo, hi) = self.my_range().context("not in worker list")?;
+        let last = self.is_last_stage();
+
+        if !last {
+            // stash the weights used for this forward (PipeDream weight
+            // stashing; the snapshot shares buffers with the live params)
+            self.stash.on_forward(batch, self.version, &self.params);
+            let params = self
+                .stash
+                .snapshot(self.version)
+                .unwrap_or(&self.params);
+            // activation stash: cloning a HostTensor shares its TensorBuf
+            let mut inputs: Vec<HostTensor> = Vec::with_capacity(hi - lo + 1);
+            let mut cur = x;
+            let blocks_rt = &self.blocks_rt;
+            let (out, ms) = {
+                let mut run = || -> Result<HostTensor> {
+                    for idx in lo..=hi {
+                        inputs.push(cur.clone());
+                        let p = params.get(idx).context("missing block params")?;
+                        let y = blocks_rt[idx].forward(&p.0, &cur)?;
+                        cur = HostTensor::F32(y.into());
+                    }
+                    Ok(cur.clone())
+                };
+                let (res, dur) = self.sim.execute(&mut run);
+                (res?, dur.as_secs_f64() * 1e3)
+            };
+            self.sched.stash_acts(batch, inputs);
+            self.committed_fwd = self.committed_fwd.max(batch as i64);
+            self.sched.stash_fwd_ms(batch, ms); // merged at backward time
+            self.emit(TraceKind::Forward, batch);
+            let next = self.next_device().context("no next stage")?;
+            t.send(
+                next,
+                Message::Forward {
+                    batch,
+                    version0,
+                    is_eval: false,
+                    data: Self::tensor_to_payload(out),
+                },
+            )?;
+            return Ok(None);
+        }
+
+        // ---- last stage: fused forward + loss + backward (1F1B) ----
+        let labels = self
+            .sched
+            .take_labels(batch, false)
+            .context("labels not available for last-stage forward")?;
+        let label_t = HostTensor::I32(labels);
+        let head_idx = self.manifest.n_blocks() - 1;
+        debug_assert_eq!(hi, head_idx);
+
+        let params = &self.params;
+        let label_shape = &self.manifest.label_shape;
+        struct LastOut {
+            grads: BTreeMap<usize, Vec<Vec<f32>>>,
+            gx_out: Option<Vec<f32>>,
+            loss: f32,
+            ncorrect: f32,
+        }
+        let blocks_rt = &self.blocks_rt;
+        let (out, ms) = {
+            let mut run = || -> Result<LastOut> {
+                // forward through my non-head blocks, saving inputs
+                let mut inputs: Vec<HostTensor> = Vec::with_capacity(hi - lo + 1);
+                let mut cur = x.clone();
+                for idx in lo..hi {
+                    inputs.push(cur.clone());
+                    let p = params.get(idx).context("missing block params")?;
+                    let y = blocks_rt[idx].forward(&p.0, &cur)?;
+                    cur = HostTensor::F32(y.into());
+                }
+                // fused head step
+                let hp = params.get(head_idx).context("missing head params")?;
+                let hs =
+                    blocks_rt[head_idx].head_step(&hp.0, cur.as_f32()?, &label_t, label_shape)?;
+                let mut grads: BTreeMap<usize, Vec<Vec<f32>>> = BTreeMap::new();
+                grads.insert(head_idx, hs.grad_params);
+                // backward through my remaining blocks with the SAME weights
+                let mut gy = hs.grad_input;
+                let mut have_gx = true;
+                for idx in (lo..hi).rev() {
+                    let p = params.get(idx).unwrap();
+                    let xin = &inputs[idx - lo];
+                    let (g, gx) = blocks_rt[idx].backward(&p.0, xin, &gy)?;
+                    grads.insert(idx, g);
+                    match gx {
+                        Some(g2) => {
+                            gy = g2;
+                            have_gx = true;
+                        }
+                        None => have_gx = false,
+                    }
+                }
+                let gx_out = (have_gx && lo != 0).then_some(gy); // block 0 has no input grad
+                Ok(LastOut { grads, gx_out, loss: hs.loss, ncorrect: hs.ncorrect })
+            };
+            let (res, dur) = self.sim.execute(&mut run);
+            (res?, dur.as_secs_f64() * 1e3)
+        };
+
+        // apply updates
+        self.sgd.step(&mut self.params, &out.grads);
+        self.version += 1;
+        self.bwd_count += 1;
+        self.committed_fwd = self.committed_fwd.max(batch as i64);
+        self.committed_bwd = self.committed_bwd.max(batch as i64);
+        self.record_exec(ms);
+        self.emit(TraceKind::Forward, batch);
+        self.emit(TraceKind::Backward, batch);
+
+        let report = self.current_report();
+        self.maybe_replicate(t, batch)?;
+
+        if let Some(prev) = self.prev_device() {
+            t.send(
+                prev,
+                Message::Backward {
+                    batch,
+                    grad: TensorBuf::new(out.gx_out.unwrap_or_default()),
+                    loss: out.loss,
+                    ncorrect: out.ncorrect,
+                    reports: vec![report],
+                },
+            )?;
+            Ok(None)
+        } else {
+            // single-stage pipeline: completion happens here
+            Ok(Some(CompletedBatch {
+                batch,
+                loss: out.loss,
+                ncorrect: out.ncorrect,
+                reports: vec![report],
+            }))
+        }
+    }
+
+    /// Evaluation forward (no stashing / no state): last stage computes
+    /// loss + accuracy and reports to the central node.
+    pub fn forward_eval(
+        &mut self,
+        t: &dyn Transport,
+        batch: u64,
+        x: HostTensor,
+    ) -> Result<Option<(f32, f32)>> {
+        let (lo, hi) = self.my_range().context("not in worker list")?;
+        let last = self.is_last_stage();
+        let head_idx = self.manifest.n_blocks() - 1;
+        let end = if last { hi - 1 } else { hi };
+
+        let mut cur = x;
+        for idx in lo..=end {
+            if last && idx == head_idx {
+                break;
+            }
+            let p = self.params.get(idx).context("missing block params")?;
+            let y = self.blocks_rt[idx].forward(&p.0, &cur)?;
+            cur = HostTensor::F32(y.into());
+        }
+        if !last {
+            let next = self.next_device().context("no next stage")?;
+            t.send(
+                next,
+                Message::Forward { batch, version0: 0, is_eval: true, data: Self::tensor_to_payload(cur) },
+            )?;
+            return Ok(None);
+        }
+        let labels = self
+            .sched
+            .take_labels(batch, true)
+            .context("labels not available for eval")?;
+        let hp = self.params.get(head_idx).context("missing head params")?;
+        let (loss, nc) = self.blocks_rt[head_idx].head_eval(
+            &hp.0,
+            cur.as_f32()?,
+            &HostTensor::I32(labels),
+            &self.manifest.label_shape,
+        )?;
+        if self.my_stage() == Some(0) {
+            Ok(Some((loss, nc)))
+        } else {
+            t.send(self.central_device(), Message::EvalResult { batch, loss, ncorrect: nc })?;
+            Ok(None)
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // compute: backward (non-last stages)
+    // ------------------------------------------------------------------
+
+    /// Backward for one batch. At stage 0 returns the completed batch.
+    pub fn backward(
+        &mut self,
+        t: &dyn Transport,
+        batch: u64,
+        gy_in: TensorBuf,
+        loss: f32,
+        ncorrect: f32,
+        mut reports: Vec<ExecReport>,
+    ) -> Result<Option<CompletedBatch>> {
+        let (lo, hi) = self.my_range().context("not in worker list")?;
+        let stage = self.my_stage().unwrap();
+
+        // weight stashing: backward runs against the forward-time weights
+        let stashed = self
+            .stash
+            .params_for_backward(batch)
+            .unwrap_or(&self.params);
+        let inputs = self
+            .sched
+            .take_acts(batch)
+            .with_context(|| format!("no saved activations for batch {batch}"))?;
+
+        let blocks_rt = &self.blocks_rt;
+        struct BwdOut {
+            grads: BTreeMap<usize, Vec<Vec<f32>>>,
+            gx_out: Option<Vec<f32>>,
+        }
+        let (out, ms) = {
+            let mut run = || -> Result<BwdOut> {
+                let mut grads = BTreeMap::new();
+                // `cur` owns the newest grad-input; the incoming gradient
+                // is read straight from the shared buffer (no copy)
+                let mut cur: Option<Vec<f32>> = None;
+                let mut have_gx = true;
+                for idx in (lo..=hi).rev() {
+                    let gy: &[f32] = cur.as_deref().unwrap_or(&gy_in);
+                    let p = stashed.get(idx).context("stash missing block")?;
+                    let xin = &inputs[idx - lo];
+                    let (g, gx) = blocks_rt[idx].backward(&p.0, xin, gy)?;
+                    grads.insert(idx, g);
+                    match gx {
+                        Some(g2) => {
+                            cur = Some(g2);
+                            have_gx = true;
+                        }
+                        None => have_gx = false,
+                    }
+                }
+                let gx_out = if have_gx { cur } else { None };
+                Ok(BwdOut { grads, gx_out })
+            };
+            let (res, dur) = self.sim.execute(&mut run);
+            (res?, dur.as_secs_f64() * 1e3)
+        };
+
+        // gradients apply to the CURRENT weights (PipeDream async rule)
+        self.sgd.step(&mut self.params, &out.grads);
+        self.version += 1;
+        self.bwd_count += 1;
+        self.stash.on_backward_done(batch);
+        self.committed_bwd = self.committed_bwd.max(batch as i64);
+        let fwd_part = self.sched.take_fwd_ms(batch);
+        self.record_exec(fwd_part + ms);
+        self.emit(TraceKind::Backward, batch);
+
+        self.maybe_aggregate();
+        self.maybe_replicate(t, batch)?;
+
+        if stage == 0 {
+            return Ok(Some(CompletedBatch { batch, loss, ncorrect, reports }));
+        }
+        reports.push(self.current_report());
+        let prev = self.prev_device().unwrap();
+        t.send(
+            prev,
+            Message::Backward {
+                batch,
+                grad: TensorBuf::new(out.gx_out.unwrap_or_default()),
+                loss,
+                ncorrect,
+                reports,
+            },
+        )?;
+        Ok(None)
+    }
+
+    /// Weight aggregation (paper §III-C): stage `i` of `n` averages its
+    /// `n - i` concurrently-live weight versions every `agg_k * (n - i)`
+    /// backward steps.
+    fn maybe_aggregate(&mut self) {
+        if self.agg_k == 0 {
+            return;
+        }
+        let stage = match self.my_stage() {
+            Some(s) => s,
+            None => return,
+        };
+        let m = self.n_stages().saturating_sub(stage);
+        if m < 2 {
+            return; // last stage has a single live version
+        }
+        let interval = self.agg_k as u64 * m as u64;
+        if self.bwd_count == 0 || self.bwd_count % interval != 0 {
+            return;
+        }
+        let versions = self.stash.recent_versions(m);
+        let mut snaps: Vec<&StageParams> = versions
+            .iter()
+            .filter_map(|v| self.stash.snapshot(*v))
+            .collect();
+        let current = self.params.clone(); // shares buffers
+        snaps.push(&current);
+        if snaps.len() < 2 {
+            return;
+        }
+        if let Some(avg) = aggregate_versions(&snaps) {
+            self.params = avg;
+            self.version += 1;
+            self.emit(TraceKind::Aggregate, self.bwd_count);
+        }
+    }
+
+    /// Chain/global replication triggers after `batch`'s backward. The
+    /// replica payload shares the stage's weight buffers (zero-copy).
+    fn maybe_replicate(&mut self, t: &dyn Transport, batch: u64) -> Result<()> {
+        let stage = match self.my_stage() {
+            Some(s) => s,
+            None => return Ok(()),
+        };
+        if stage == 0 {
+            return Ok(()); // the central node persists locally (paper §III-E)
+        }
+        let chain_due = replication::due(batch, self.nonzero(self.chain_every));
+        let global_due = replication::due(batch, self.nonzero(self.global_every));
+        if !chain_due && !global_due {
+            return Ok(());
+        }
+        let wire: Vec<WireBlock> = replication::to_wire(&self.params);
+        if chain_due {
+            let target_stage = replication::chain_target(stage, self.n_stages());
+            let target = self.worker_list[target_stage];
+            t.send(
+                target,
+                Message::ReplicaPush {
+                    kind: ReplicaKind::Chain,
+                    owner_stage: stage,
+                    owner_device: self.device_id,
+                    version: self.version,
+                    blocks: wire.clone(),
+                },
+            )?;
+        }
+        if global_due {
+            t.send(
+                self.central_device(),
+                Message::ReplicaPush {
+                    kind: ReplicaKind::Global,
+                    owner_stage: stage,
+                    owner_device: self.device_id,
+                    version: self.version,
+                    blocks: wire,
+                },
+            )?;
+        }
+        Ok(())
+    }
+
+    fn nonzero(&self, v: u64) -> Option<u64> {
+        (v > 0).then_some(v)
+    }
+
+    // ------------------------------------------------------------------
+    // execution-time reporting (paper §III-D "execution profiling")
+    // ------------------------------------------------------------------
+
+    fn record_exec(&mut self, ms: f64) {
+        self.exec_window.push_back(ms);
+        while self.exec_window.len() > 8 {
+            self.exec_window.pop_front();
+        }
+    }
+
+    /// Rolling average of this stage's per-batch execution time (ms).
+    pub fn avg_exec_ms(&self) -> Option<f64> {
+        (!self.exec_window.is_empty())
+            .then(|| self.exec_window.iter().sum::<f64>() / self.exec_window.len() as f64)
+    }
+
+    fn current_report(&self) -> ExecReport {
+        let n = self.exec_window.len().max(1);
+        let avg = self.exec_window.iter().sum::<f64>() / n as f64;
+        ExecReport { device: self.device_id, avg_ms: avg, batches: n as u32 }
+    }
+
+    // ------------------------------------------------------------------
+    // the event loop
+    // ------------------------------------------------------------------
+
+    /// Run at most one compute step (backward preferred — 1F1B).
+    pub fn pump(&mut self, t: &dyn Transport) -> Result<bool> {
+        if !self.initialized || self.status == 1 || self.my_stage().is_none() {
+            return Ok(false);
+        }
+        match self.sched.next_step(self.is_last_stage()) {
+            Some(Step::Backward(b)) => {
+                self.backward(t, b.batch, b.grad, b.loss, b.ncorrect, b.reports)?;
+                Ok(true)
+            }
+            Some(Step::Forward(f)) => {
+                if f.is_eval {
+                    self.forward_eval(t, f.batch, f.data)?;
+                } else {
+                    self.forward_train(t, f.batch, f.version0, f.data)?;
+                }
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
+    pub fn queued(&self) -> (usize, usize) {
+        self.sched.queued()
+    }
+
+    /// Handle one raw message: classify, then dispatch (kept as the
+    /// boundary API so transports and tests stay message-oriented).
+    pub fn handle_message(
+        &mut self,
+        t: &dyn Transport,
+        from: DeviceId,
+        msg: Message,
+    ) -> Result<Flow> {
+        self.on_event(t, Event::from_message(from, msg))
+    }
+
+    /// Dispatch one classified event.
+    pub fn on_event(&mut self, t: &dyn Transport, ev: Event) -> Result<Flow> {
+        match ev {
+            Event::Data(d) => self.on_data(d)?,
+            Event::Control(c) => self.on_control(t, c)?,
+            Event::Shutdown => return Ok(Flow::Shutdown),
+        }
+        Ok(Flow::Continue)
+    }
+
+    /// Data plane: enqueue only — compute happens in [`Self::pump`].
+    fn on_data(&mut self, ev: DataEvent) -> Result<()> {
+        match ev {
+            DataEvent::Forward { batch, version0, is_eval, data } => {
+                if self.status == 0 || is_eval {
+                    self.sched.push_forward(PendingForward {
+                        batch,
+                        version0,
+                        is_eval,
+                        data: Self::payload_to_tensor(data),
+                    });
+                }
+            }
+            DataEvent::Labels { batch, is_eval, data } => {
+                self.sched.put_labels(batch, is_eval, data);
+            }
+            DataEvent::Backward { batch, grad, loss, ncorrect, reports } => {
+                if self.status == 0 {
+                    self.sched.push_backward(PendingBackward {
+                        batch,
+                        grad,
+                        loss,
+                        ncorrect,
+                        reports,
+                    });
+                }
+            }
+            // coordinator-only; a worker may legitimately see it late
+            DataEvent::EvalResult { .. } => {}
+        }
+        Ok(())
+    }
+
+    /// Control plane: init, probing, redistribution, replication, resets.
+    fn on_control(&mut self, t: &dyn Transport, ev: ControlEvent) -> Result<()> {
+        match ev {
+            ControlEvent::Probe { from } => {
+                t.send(from, Message::ProbeAck { id: self.device_id, fresh: !self.initialized })?;
+            }
+            ControlEvent::Init(ti) => {
+                self.apply_init(&ti)?;
+                self.measure_bandwidth(t)?;
+            }
+            ControlEvent::Repartition { ranges, worker_list, failed } => {
+                self.begin_repartition(t, ranges, worker_list, failed)?;
+            }
+            ControlEvent::FetchWeights { from, blocks } => {
+                self.serve_fetch(t, from, &blocks)?;
+            }
+            ControlEvent::Weights { from, blocks } => {
+                self.handle_weights(t, from, blocks)?;
+            }
+            ControlEvent::ReplicaPush { kind, owner_stage, owner_device, version, blocks } => {
+                self.backups.store(
+                    owner_device,
+                    kind,
+                    owner_stage,
+                    version,
+                    replication::from_wire(&blocks),
+                );
+            }
+            ControlEvent::Commit => {
+                self.apply_commit()?;
+            }
+            ControlEvent::Reset { committed } => {
+                self.apply_reset(committed);
+            }
+            ControlEvent::BwTest { from, payload_bytes } => {
+                t.send(from, Message::BwAck { payload_bytes })?;
+            }
+            ControlEvent::BwAck { payload_bytes } => {
+                if let (Some(t0), Some(stage)) = (self.bw_probe.take(), self.my_stage()) {
+                    let dt = t0.elapsed().as_secs_f64().max(1e-6);
+                    let bps = payload_bytes as f64 / dt;
+                    t.send(self.central_device(), Message::BwReport { stage, bps })?;
+                }
+            }
+            ControlEvent::SetLr { lr } => {
+                self.sgd.set_lr(lr);
+            }
+            // coordinator-only events a worker may legitimately see late:
+            ControlEvent::ProbeAck { .. }
+            | ControlEvent::FetchDone { .. }
+            | ControlEvent::BwReport { .. } => {}
+        }
+        Ok(())
+    }
+
+    /// Reset the training state (paper §III-F last phase): discard every
+    /// batch beyond `committed` and return to normal status.
+    pub fn apply_reset(&mut self, committed: i64) {
+        self.committed_fwd = committed;
+        self.committed_bwd = committed;
+        self.sched.reset(committed);
+        self.stash.discard_after(committed);
+        self.status = 0;
+    }
+
+    // ------------------------------------------------------------------
+    // re-partition / redistribution protocol (paper §III-D + Algorithm 1)
+    // ------------------------------------------------------------------
+
+    /// Start a re-partition: plan with Algorithm 1, stage local/backup
+    /// blocks immediately, issue FetchWeights for the rest.
+    pub fn begin_repartition(
+        &mut self,
+        t: &dyn Transport,
+        ranges: Vec<(usize, usize)>,
+        worker_list: Vec<DeviceId>,
+        failed: Vec<usize>,
+    ) -> Result<()> {
+        self.status = 1;
+        let i_new = match worker_list.iter().position(|&d| d == self.device_id) {
+            Some(i) => i,
+            None => {
+                // not part of the new pipeline (shouldn't happen for alive
+                // devices) — just accept and idle
+                self.repart = None;
+                return Ok(());
+            }
+        };
+        let i_cur_old = self.my_stage();
+        let held = self.params.block_indices();
+        let p_cur = if self.ranges.is_empty() { ranges.clone() } else { self.ranges.clone() };
+        let plan: RedistPlan =
+            plan_redistribution(&ranges, &p_cur, &failed, &held, i_new, i_cur_old);
+
+        let mut rp = Repart::new(ranges, worker_list);
+        for (src, blocks) in &plan.need {
+            match src {
+                Source::LocalBackup => {
+                    for &b in blocks {
+                        match self.backups.find_block(b) {
+                            Some(bp) => rp.stage(b, bp.clone()),
+                            // replica never arrived: escalate to central
+                            None => rp.mark_needed(b, true),
+                        }
+                    }
+                }
+                Source::CentralBackup => {
+                    for &b in blocks {
+                        rp.mark_needed(b, true);
+                    }
+                }
+                Source::Stage(s) => {
+                    let dev = rp.worker_list[*s];
+                    for &b in blocks {
+                        rp.mark_needed(b, false);
+                    }
+                    rp.mark_requested(dev, blocks.iter().copied());
+                }
+            }
+        }
+
+        // fire the fetches (one message per device, matching the one
+        // request window mark_requested opened for it)
+        let central = rp.central();
+        for (dev, o) in rp.outstanding.clone() {
+            t.send(dev, Message::FetchWeights { blocks: o.asked })?;
+        }
+        let escalated: Vec<usize> = rp.escalated.iter().copied().collect();
+        if !escalated.is_empty() && self.device_id != central {
+            rp.mark_requested(central, escalated.iter().copied());
+            t.send(central, Message::FetchWeights { blocks: escalated })?;
+        } else if !escalated.is_empty() {
+            // I AM the central node: serve from my own global backups; a
+            // block no backup ever covered falls back to its initial
+            // weights (a fresh sub-model is better than a dead pipeline —
+            // the paper assumes replication already ran at least once).
+            for b in escalated {
+                let bp = match self.backups.find_block(b) {
+                    Some(bp) => bp.clone(),
+                    None => {
+                        crate::log_warn!(
+                            "block {b}: no replica anywhere; restoring initial weights"
+                        );
+                        BlockParams::from_vecs(self.manifest.load_init_params(b)?)
+                    }
+                };
+                rp.stage(b, bp);
+            }
+        }
+
+        let done = rp.is_complete();
+        self.repart = Some(rp);
+        if done {
+            self.fetch_complete(t)?;
+        }
+        Ok(())
+    }
+
+    /// Serve a FetchWeights request from current params, then backups —
+    /// both served as shared buffers (no weight copies).
+    pub fn serve_fetch(&self, t: &dyn Transport, from: DeviceId, blocks: &[usize]) -> Result<()> {
+        let mut found: Vec<WireBlock> = Vec::new();
+        for &b in blocks {
+            if let Some(bp) = self.params.get(b) {
+                found.push((b, bp.0.clone()));
+            } else if let Some(bp) = self.backups.find_block(b) {
+                found.push((b, bp.0.clone()));
+            }
+        }
+        t.send(from, Message::Weights { blocks: found })?;
+        Ok(())
+    }
+
+    /// Measure bandwidth to the next worker by timing a 64 KiB echo
+    /// (paper §III-B; the analogue of its ping3 measurement).
+    pub fn measure_bandwidth(&mut self, t: &dyn Transport) -> Result<()> {
+        if let Some(next) = self.next_device() {
+            let payload = vec![0u8; 65536];
+            self.bw_probe = Some(std::time::Instant::now());
+            t.send(next, Message::BwTest { payload_bytes: 65536, data: payload })?;
+        }
+        Ok(())
+    }
+
+    /// Integrate a Weights reply; escalate still-missing blocks to central.
+    ///
+    /// Outside a re-partition, a Weights push overwrites the local params
+    /// directly — this is how pre-trained weights reach workers in the
+    /// paper's continuous-training mode (Table I).
+    pub fn handle_weights(
+        &mut self,
+        t: &dyn Transport,
+        from: DeviceId,
+        blocks: Vec<WireBlock>,
+    ) -> Result<()> {
+        let Some(mut rp) = self.repart.take() else {
+            for (idx, tensors) in blocks {
+                if self.params.get(idx).is_some() {
+                    self.params.blocks.insert(idx, BlockParams(tensors));
+                }
+            }
+            return Ok(());
+        };
+        // blocks we asked `from` for but didn't get:
+        //  * from a peer -> escalate to the central node's global backup
+        //  * from central itself -> nothing anywhere: fall back to the
+        //    initial weights so recovery always terminates
+        let unserved = rp.record_reply(from, blocks);
+        let central = rp.central();
+        if !unserved.is_empty() {
+            if from == central {
+                for b in unserved {
+                    crate::log_warn!(
+                        "block {b}: central has no replica; restoring initial weights"
+                    );
+                    let bp = BlockParams::from_vecs(self.manifest.load_init_params(b)?);
+                    rp.stage(b, bp);
+                }
+            } else {
+                let missing: Vec<usize> =
+                    unserved.into_iter().filter(|b| !rp.escalated.contains(b)).collect();
+                if !missing.is_empty() {
+                    for &b in &missing {
+                        rp.escalated.insert(b);
+                    }
+                    rp.mark_requested(central, missing.iter().copied());
+                    t.send(central, Message::FetchWeights { blocks: missing })?;
+                }
+            }
+        }
+        let done = rp.is_complete();
+        self.repart = Some(rp);
+        if done {
+            self.fetch_complete(t)?;
+        }
+        Ok(())
+    }
+
+    fn fetch_complete(&mut self, t: &dyn Transport) -> Result<()> {
+        let central = self.repart.as_ref().unwrap().central();
+        if self.device_id == central {
+            // the coordinator tracks its own completion directly
+            return Ok(());
+        }
+        t.send(central, Message::FetchDone { id: self.device_id })?;
+        Ok(())
+    }
+
+    /// Has this device staged everything it needs (pre-Commit)?
+    pub fn fetch_done(&self) -> bool {
+        self.repart.as_ref().map(|r| r.is_complete()).unwrap_or(true)
+    }
+
+    /// Commit: swap to the new sub-model (paper's commit message — only
+    /// now may the old sub-model be dropped).
+    pub fn apply_commit(&mut self) -> Result<()> {
+        let Some(rp) = self.repart.take() else {
+            self.status = 0;
+            return Ok(());
+        };
+        if !rp.is_complete() {
+            bail!(
+                "device {}: commit before fetch completion ({} missing)",
+                self.device_id,
+                rp.needed.len()
+            );
+        }
+        let i_new = rp.worker_list.iter().position(|&d| d == self.device_id);
+        self.worker_list = rp.worker_list;
+        self.ranges = rp.ranges;
+        if let Some(i) = i_new {
+            let (lo, hi) = self.ranges[i];
+            self.params.retain_range(lo, hi);
+            for (idx, bp) in rp.staged {
+                if idx >= lo && idx <= hi {
+                    self.params.blocks.insert(idx, bp);
+                }
+            }
+            self.sgd.retain_blocks(&self.params.block_indices());
+        } else {
+            self.params = StageParams::default();
+        }
+        self.stash = VersionStash::new(self.n_stages().max(2));
+        self.sched.on_commit();
+        self.status = 0;
+        self.initialized = true;
+        Ok(())
+    }
+
+    /// Simulate a crash-restart: all in-memory state is lost (the process
+    /// came back up but knows nothing — paper §III-F case 2).
+    pub fn wipe_state(&mut self) {
+        self.params = StageParams::default();
+        self.sgd = Sgd::new(self.sgd.cfg);
+        self.stash = VersionStash::new(2);
+        self.version = 0;
+        self.initialized = false;
+        self.status = 0;
+        self.sched.clear();
+        self.committed_fwd = -1;
+        self.committed_bwd = -1;
+        self.bwd_count = 0;
+        self.exec_window.clear();
+        self.backups = BackupStore::default();
+        self.repart = None;
+        self.bw_probe = None;
+    }
+
+    /// State bytes currently held (memory accounting for the device cap).
+    pub fn memory_bytes(&self) -> u64 {
+        (self.params.byte_len() + self.backups.byte_len() + self.sched.acts_bytes()) as u64
+    }
+}
+
+/// The worker-device main loop (stages >= 1). The central node drives its
+/// own loop in [`crate::coordinator`].
+///
+/// The loop is the standard event-pump shape: classify + handle every
+/// queued message, then run at most one compute step, repeat.
+///
+/// `kill_watch` (sim mode): when the fault injector marks this device
+/// dead, the loop wipes all in-memory state — when (if) the device is
+/// revived it behaves exactly like a freshly-restarted process (paper
+/// case 2: probes back `fresh`, weights restored from its chain replica).
+pub fn run_worker(
+    mut w: StageWorker,
+    endpoint: Box<dyn Transport>,
+    kill_watch: Option<crate::net::sim::SimNet>,
+) -> Result<()> {
+    let mut was_dead = false;
+    loop {
+        if let Some(net) = &kill_watch {
+            if net.is_dead(w.device_id) {
+                if !was_dead {
+                    w.wipe_state();
+                    was_dead = true;
+                }
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+            was_dead = false;
+        }
+        // wait briefly for a message, then drain whatever else queued up
+        if let Some((from, msg)) = endpoint.recv_timeout(Duration::from_millis(2)) {
+            if w.handle_message(&*endpoint, from, msg)? == Flow::Shutdown {
+                return Ok(());
+            }
+            while let Some((from, msg)) = endpoint.recv_timeout(Duration::ZERO) {
+                if w.handle_message(&*endpoint, from, msg)? == Flow::Shutdown {
+                    return Ok(());
+                }
+            }
+        }
+        w.pump(&*endpoint)?;
+    }
+}

@@ -29,7 +29,10 @@ pub fn chain_target(stage: usize, n_stages: usize) -> usize {
     }
 }
 
-/// Serialize a stage's parameters for a replica push.
+/// Serialize a stage's parameters for a replica push. Zero-copy: the
+/// wire blocks share the stage's tensor buffers (refcount bumps), so a
+/// periodic replication no longer deep-copies the stage's weights — the
+/// owner's next optimizer step forks only what the replica still holds.
 pub fn to_wire(params: &StageParams) -> Vec<WireBlock> {
     params
         .blocks
@@ -38,7 +41,7 @@ pub fn to_wire(params: &StageParams) -> Vec<WireBlock> {
         .collect()
 }
 
-/// Rebuild block params from wire form.
+/// Rebuild block params from wire form (shared buffers, zero-copy).
 pub fn from_wire(blocks: &[WireBlock]) -> Vec<(usize, BlockParams)> {
     blocks
         .iter()
@@ -125,7 +128,7 @@ mod tests {
     use super::*;
 
     fn bp(v: f32) -> BlockParams {
-        BlockParams(vec![vec![v; 3]])
+        BlockParams::from_vecs(vec![vec![v; 3]])
     }
 
     #[test]
@@ -175,5 +178,18 @@ mod tests {
         assert_eq!(back.len(), 2);
         assert_eq!(back[0].0, 2);
         assert_eq!(back[1].1, bp(2.0));
+    }
+
+    #[test]
+    fn to_wire_shares_buffers_with_the_stage() {
+        let mut sp = StageParams::default();
+        sp.blocks.insert(2, bp(1.0));
+        let wire = to_wire(&sp);
+        assert!(
+            wire[0].1[0].ptr_eq(&sp.blocks[&2].0[0]),
+            "replica push must not deep-copy stage weights"
+        );
+        let back = from_wire(&wire);
+        assert!(back[0].1 .0[0].ptr_eq(&sp.blocks[&2].0[0]));
     }
 }

@@ -1,8 +1,11 @@
 //! PJRT runtime: load AOT-compiled HLO text and execute it from Rust.
 //!
 //! This is the only module that touches the `xla` crate. Everything above
-//! it exchanges plain `Vec<f32>` / `Vec<i32>` host buffers (exactly what
-//! travels over the — simulated or real — network between devices).
+//! it exchanges shared [`TensorBuf`] / `Vec<i32>` host buffers (exactly
+//! what travels over the — simulated or real — network between devices);
+//! parameter tensors enter generically as `AsRef<[f32]>`, so both owned
+//! init weights and shared `TensorBuf`-backed stage params feed XLA
+//! without conversion copies.
 //!
 //! Threading: `PjRtClient` is `Rc`-based (not `Send`), so each simulated
 //! device thread owns its own [`Engine`] and compiles its own block
@@ -14,11 +17,14 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::manifest::{BlockInfo, BlockKind, Dtype, Manifest};
+use crate::net::TensorBuf;
 
 /// A host-side tensor (activation or label) as moved between devices.
+/// The f32 arm is a shared buffer: cloning a `HostTensor` to stash an
+/// activation for the backward pass costs a refcount bump, not a copy.
 #[derive(Debug, Clone, PartialEq)]
 pub enum HostTensor {
-    F32(Vec<f32>),
+    F32(TensorBuf),
     I32(Vec<i32>),
 }
 
@@ -161,7 +167,7 @@ impl BlockRuntime {
         })
     }
 
-    fn param_literals(&self, params: &[Vec<f32>]) -> Result<Vec<xla::Literal>> {
+    fn param_literals<P: AsRef<[f32]>>(&self, params: &[P]) -> Result<Vec<xla::Literal>> {
         if params.len() != self.info.params.len() {
             bail!(
                 "block {}: got {} param tensors, expected {}",
@@ -174,6 +180,7 @@ impl BlockRuntime {
             .iter()
             .zip(&self.info.params)
             .map(|(p, pi)| {
+                let p = p.as_ref();
                 if p.len() != pi.size {
                     bail!(
                         "block {}: param size {} != manifest {}",
@@ -188,7 +195,7 @@ impl BlockRuntime {
     }
 
     /// Forward: (params, x) -> y.
-    pub fn forward(&self, params: &[Vec<f32>], x: &HostTensor) -> Result<Vec<f32>> {
+    pub fn forward<P: AsRef<[f32]>>(&self, params: &[P], x: &HostTensor) -> Result<Vec<f32>> {
         let exe = self.fwd.as_ref().context("block has no fwd artifact")?;
         let mut inputs = self.param_literals(params)?;
         inputs.push(literal_of(x, &self.info.in_shape)?);
@@ -200,9 +207,9 @@ impl BlockRuntime {
     }
 
     /// Backward: (params, x, gy) -> (grad_params, grad_x if has_gx).
-    pub fn backward(
+    pub fn backward<P: AsRef<[f32]>>(
         &self,
-        params: &[Vec<f32>],
+        params: &[P],
         x: &HostTensor,
         gy: &[f32],
     ) -> Result<(Vec<Vec<f32>>, Option<Vec<f32>>)> {
@@ -229,9 +236,9 @@ impl BlockRuntime {
     }
 
     /// Fused head step: (params, x, labels) -> grads + gx + loss + ncorrect.
-    pub fn head_step(
+    pub fn head_step<P: AsRef<[f32]>>(
         &self,
-        params: &[Vec<f32>],
+        params: &[P],
         x: &[f32],
         labels: &HostTensor,
         label_shape: &[usize],
@@ -258,9 +265,9 @@ impl BlockRuntime {
     }
 
     /// Head eval: (params, x, labels) -> (loss, ncorrect).
-    pub fn head_eval(
+    pub fn head_eval<P: AsRef<[f32]>>(
         &self,
-        params: &[Vec<f32>],
+        params: &[P],
         x: &[f32],
         labels: &HostTensor,
         label_shape: &[usize],
@@ -296,7 +303,7 @@ pub fn load_all_blocks(engine: &Engine, manifest: &Manifest) -> Result<Vec<Block
 /// Build the HostTensor for an input/label buffer given the manifest dtype.
 pub fn host_tensor(dtype: Dtype, f32s: Option<Vec<f32>>, i32s: Option<Vec<i32>>) -> HostTensor {
     match dtype {
-        Dtype::F32 => HostTensor::F32(f32s.expect("f32 payload")),
+        Dtype::F32 => HostTensor::F32(f32s.expect("f32 payload").into()),
         Dtype::I32 => HostTensor::I32(i32s.expect("i32 payload")),
     }
 }

@@ -12,7 +12,7 @@ use ftpipehd::config::DeviceConfig;
 use ftpipehd::device::SimDevice;
 use ftpipehd::manifest::Manifest;
 use ftpipehd::net::message::{Message, ReplicaKind, TrainInit};
-use ftpipehd::net::Transport;
+use ftpipehd::net::{TensorBuf, Transport};
 use ftpipehd::pipeline::{Flow, StageWorker};
 use ftpipehd::runtime::load_all_blocks;
 
@@ -141,7 +141,7 @@ fn replica_push_stored_and_served() {
             owner_stage: 1,
             owner_device: 1,
             version: 7,
-            blocks: vec![(2, vec![vec![9.0; 4]]), (3, vec![vec![8.0; 4]])],
+            blocks: vec![(2, vec![vec![9.0; 4].into()]), (3, vec![vec![8.0; 4].into()])],
         },
     )
     .unwrap();
@@ -202,10 +202,10 @@ fn repartition_stages_fetches_then_commit_swaps() {
     assert_eq!(to_two, Some(vec![4]));
 
     // replies arrive
-    w.handle_message(&net, 0, Message::Weights { blocks: vec![(1, vec![vec![5.0; 3]])] })
+    w.handle_message(&net, 0, Message::Weights { blocks: vec![(1, vec![vec![5.0; 3].into()])] })
         .unwrap();
     assert!(!w.fetch_done());
-    w.handle_message(&net, 2, Message::Weights { blocks: vec![(4, vec![vec![6.0; 3]])] })
+    w.handle_message(&net, 2, Message::Weights { blocks: vec![(4, vec![vec![6.0; 3].into()])] })
         .unwrap();
     assert!(w.fetch_done());
     // FetchDone went to central
@@ -271,7 +271,7 @@ fn reset_discards_in_flight_beyond_committed() {
                 batch: b,
                 version0: 0,
                 is_eval: false,
-                data: ftpipehd::net::message::Payload::F32(vec![0.0; 8 * 32]),
+                data: ftpipehd::net::message::Payload::F32(vec![0.0; 8 * 32].into()),
             },
         )
         .unwrap();
@@ -294,11 +294,11 @@ fn direct_weight_push_overwrites_owned_blocks_only() {
         .unwrap();
     net.take();
     let sizes: Vec<usize> = w.params.get(3).unwrap().0.iter().map(|t| t.len()).collect();
-    let push: Vec<Vec<f32>> = sizes.iter().map(|&n| vec![3.25; n]).collect();
+    let push: Vec<TensorBuf> = sizes.iter().map(|&n| vec![3.25; n].into()).collect();
     w.handle_message(
         &net,
         0,
-        Message::Weights { blocks: vec![(3, push), (0, vec![vec![1.0]])] },
+        Message::Weights { blocks: vec![(3, push), (0, vec![vec![1.0].into()])] },
     )
     .unwrap();
     assert_eq!(w.params.get(3).unwrap().0[0][0], 3.25, "owned block overwritten");

@@ -102,7 +102,7 @@ fn two_process_style_pipeline_over_tcp() {
             ep.send(1, Message::Labels { batch: injected, is_eval: false, data: labels })
                 .unwrap();
             central
-                .forward_train(&ep, injected, central.version, HostTensor::F32(x))
+                .forward_train(&ep, injected, central.version, HostTensor::F32(x.into()))
                 .unwrap();
             injected += 1;
         }

@@ -1,0 +1,140 @@
+//! Zero-copy guarantees of the tensor plumbing (the acceptance bar for
+//! the event-driven engine): hot-path tensor payloads — activations,
+//! gradients, replicated weights — must share allocations end to end.
+//! A send through the sim transport performs **zero** f32-buffer copies;
+//! the TCP path pays exactly the codec write. Mutation is copy-on-write,
+//! so sharing never corrupts a snapshot or a replica.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use ftpipehd::model::{BlockParams, Sgd, SgdConfig, StageParams, VersionStash};
+use ftpipehd::net::message::{Message, Payload, ReplicaKind};
+use ftpipehd::net::sim::SimNet;
+use ftpipehd::net::{codec, TensorBuf, Transport};
+use ftpipehd::replication::{from_wire, to_wire, BackupStore};
+
+fn stage_params(vals: &[f32]) -> StageParams {
+    let mut sp = StageParams::default();
+    sp.blocks.insert(0, BlockParams::from_vecs(vec![vals.to_vec()]));
+    sp
+}
+
+#[test]
+fn simnet_forward_delivery_shares_the_activation_buffer() {
+    let (_net, eps) = SimNet::new(2, vec![1e9], Duration::ZERO);
+    let act = TensorBuf::from(vec![0.5f32; 4096]);
+    eps[0]
+        .send(
+            1,
+            Message::Forward { batch: 3, version0: 1, is_eval: false, data: Payload::F32(act.clone()) },
+        )
+        .unwrap();
+    match eps[1].recv_timeout(Duration::from_secs(1)) {
+        Some((0, Message::Forward { data: Payload::F32(got), .. })) => {
+            assert!(got.ptr_eq(&act), "delivery must be zero-copy");
+            // sender handle + receiver handle = 2 references, no hidden copies
+            assert_eq!(act.ref_count(), 2);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+#[test]
+fn replica_push_through_simnet_shares_stage_weights_end_to_end() {
+    let (_net, eps) = SimNet::new(2, vec![1e9], Duration::ZERO);
+    let sp = stage_params(&[1.0; 1024]);
+    let before = sp.blocks[&0].0[0].clone();
+
+    // owner side: to_wire is refcount bumps
+    let wire = to_wire(&sp);
+    assert!(wire[0].1[0].ptr_eq(&before));
+
+    eps[0]
+        .send(
+            1,
+            Message::ReplicaPush {
+                kind: ReplicaKind::Chain,
+                owner_stage: 1,
+                owner_device: 0,
+                version: 5,
+                blocks: wire,
+            },
+        )
+        .unwrap();
+
+    // receiver side: storing the backup keeps sharing the same buffer
+    let mut store = BackupStore::default();
+    match eps[1].recv_timeout(Duration::from_secs(1)) {
+        Some((0, Message::ReplicaPush { kind, owner_stage, owner_device, version, blocks })) => {
+            assert!(blocks[0].1[0].ptr_eq(&before), "wire blocks must share the owner's buffer");
+            store.store(owner_device, kind, owner_stage, version, from_wire(&blocks));
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    assert!(store.find_block(0).unwrap().0[0].ptr_eq(&before));
+}
+
+#[test]
+fn optimizer_step_forks_shared_weights_instead_of_corrupting_replicas() {
+    let mut sp = stage_params(&[1.0; 8]);
+    // replicate: the backup shares the weight buffer
+    let wire = to_wire(&sp);
+    let replica = wire[0].1[0].clone();
+    assert!(replica.ptr_eq(&sp.blocks[&0].0[0]));
+
+    // the owner's next update must fork, not mutate the replica
+    let mut sgd = Sgd::new(SgdConfig { lr: 0.5, momentum: 0.0, weight_decay: 0.0 });
+    let mut grads: BTreeMap<usize, Vec<Vec<f32>>> = BTreeMap::new();
+    grads.insert(0, vec![vec![1.0; 8]]);
+    sgd.step(&mut sp, &grads);
+
+    assert_eq!(replica[0], 1.0, "replica bytes must be frozen at push time");
+    assert!((sp.blocks[&0].0[0][0] - 0.5).abs() < 1e-6, "owner updated");
+    assert!(!replica.ptr_eq(&sp.blocks[&0].0[0]), "buffers forked on write");
+
+    // a second step with no outstanding sharer mutates in place
+    let ptr_before = sp.blocks[&0].0[0].as_slice().as_ptr();
+    sgd.step(&mut sp, &grads);
+    assert_eq!(
+        sp.blocks[&0].0[0].as_slice().as_ptr(),
+        ptr_before,
+        "unshared weights must update in place (no per-step allocation)"
+    );
+}
+
+#[test]
+fn weight_stash_snapshots_share_until_written() {
+    let mut stash = VersionStash::new(4);
+    let mut sp = stage_params(&[2.0; 16]);
+    stash.on_forward(0, 0, &sp);
+    let snap = stash.snapshot(0).unwrap();
+    assert!(
+        snap.blocks[&0].0[0].ptr_eq(&sp.blocks[&0].0[0]),
+        "stash snapshot must share buffers at forward time"
+    );
+    // weights advance; the stashed version keeps the forward-time bytes
+    let mut sgd = Sgd::new(SgdConfig { lr: 1.0, momentum: 0.0, weight_decay: 0.0 });
+    let mut grads: BTreeMap<usize, Vec<Vec<f32>>> = BTreeMap::new();
+    grads.insert(0, vec![vec![1.0; 16]]);
+    sgd.step(&mut sp, &grads);
+    assert_eq!(stash.params_for_backward(0).unwrap().blocks[&0].0[0][0], 2.0);
+    assert_eq!(sp.blocks[&0].0[0][0], 1.0);
+}
+
+#[test]
+fn codec_decode_materializes_each_tensor_exactly_once() {
+    let act = TensorBuf::from(vec![0.25f32; 2048]);
+    let frame = codec::encode(
+        7,
+        &Message::Forward { batch: 1, version0: 1, is_eval: false, data: Payload::F32(act) },
+    );
+    let (_, msg) = codec::decode(&frame).unwrap();
+    match msg {
+        Message::Forward { data: Payload::F32(t), .. } => {
+            assert_eq!(t.len(), 2048);
+            assert_eq!(t.ref_count(), 1, "decode output must be a single fresh buffer");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+}

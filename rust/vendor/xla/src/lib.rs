@@ -1,0 +1,222 @@
+//! Vendored **stub** of the `xla` PJRT bindings.
+//!
+//! The real bindings link against a PJRT CPU plugin and cannot be built in
+//! the offline environment, so this crate mirrors the exact API surface
+//! `ftpipehd::runtime` uses and keeps the whole workspace compiling and
+//! testable. Host-side literal plumbing (creation, reshape, readback) is
+//! fully functional; only `PjRtLoadedExecutable::execute` is stubbed — it
+//! returns a descriptive error, which surfaces exactly like a missing
+//! `artifacts/` directory does (every test and bench that needs real
+//! compute already skips in that case).
+//!
+//! To run real models, point the `xla` path dependency in
+//! `rust/Cargo.toml` at the actual bindings; no source change is needed.
+
+use std::fmt;
+use std::path::PathBuf;
+
+/// Stub error type (mirrors `xla::Error` closely enough for `?`).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+// ---------------------------------------------------------------------
+// literals
+// ---------------------------------------------------------------------
+
+/// Element types a [`Literal`] can hold.
+#[derive(Debug, Clone, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Marker trait for element types supported by the stub.
+pub trait NativeType: Copy + Sized {
+    fn wrap(v: Vec<Self>) -> Data;
+    fn unwrap(d: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+    fn unwrap(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::F32(v) => Some(v.clone()),
+            Data::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+    fn unwrap(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::I32(v) => Some(v.clone()),
+            Data::F32(_) => None,
+        }
+    }
+}
+
+/// A host-side literal: flat data plus dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { data: T::wrap(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.data.len() {
+            return Err(Error::new(format!(
+                "reshape to {dims:?} wants {want} elements, literal has {}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Read the literal back as a flat host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| Error::new("literal element type mismatch"))
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::unwrap(&self.data)
+            .and_then(|v| v.first().copied())
+            .ok_or_else(|| Error::new("empty literal or element type mismatch"))
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples (execute
+    /// is stubbed), so this is only reachable with real bindings.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::new("stub literal is not a tuple (execution is stubbed)"))
+    }
+}
+
+// ---------------------------------------------------------------------
+// HLO + client + executable
+// ---------------------------------------------------------------------
+
+/// Parsed HLO module handle (the stub only records the source path).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    path: PathBuf,
+}
+
+impl HloModuleProto {
+    /// "Parse" an HLO text file. Validates readability so missing or
+    /// unreadable artifacts fail here, like the real parser would.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        std::fs::metadata(path)
+            .map_err(|e| Error::new(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { path: PathBuf::from(path) })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    path: PathBuf,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { path: proto.path.clone() }
+    }
+}
+
+/// Stub PJRT client.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable { path: comp.path.clone() })
+    }
+}
+
+/// Stub loaded executable: execution is not available offline.
+pub struct PjRtLoadedExecutable {
+    path: PathBuf,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(format!(
+            "cannot execute {}: the vendored xla stub has no PJRT backend \
+             (swap rust/vendor/xla for the real bindings — see DESIGN.md)",
+            self.path.display()
+        )))
+    }
+}
+
+/// Stub device buffer.
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(r.get_first_element::<f32>().unwrap(), 1.0);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn missing_hlo_file_errors() {
+        assert!(HloModuleProto::from_text_file("/nonexistent/x.hlo").is_err());
+    }
+}
