@@ -10,7 +10,7 @@
 //! detector and the re-partition/checkpoint schedules.
 
 use std::collections::BTreeMap;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
@@ -212,12 +212,13 @@ impl Central {
     }
 
     /// Drain the inbox for up to `dur`, dispatching everything. Returns
-    /// the eval results observed.
+    /// the eval results observed. Deadlines run on the [`RunClock`]'s
+    /// time source (the `Clock` seam), not raw wall time.
     pub(crate) fn pump_for(&mut self, dur: Duration) -> Result<Vec<(u64, f32, f32)>> {
-        let deadline = Instant::now() + dur;
+        let deadline = self.clock.raw_now() + dur;
         let mut evals = Vec::new();
         loop {
-            let left = deadline.saturating_duration_since(Instant::now());
+            let left = deadline.saturating_sub(self.clock.raw_now());
             match self.endpoint.recv_timeout(left.min(Duration::from_millis(5))) {
                 Some((from, msg)) => match Event::from_message(from, msg) {
                     Event::Data(DataEvent::EvalResult { batch, loss, ncorrect }) => {
@@ -227,7 +228,7 @@ impl Central {
                 },
                 None => {}
             }
-            if Instant::now() >= deadline {
+            if self.clock.raw_now() >= deadline {
                 return Ok(evals);
             }
         }
@@ -235,7 +236,8 @@ impl Central {
 
     /// Wait until all in-flight batches complete (or a fault fires).
     pub(crate) fn drain(&mut self) -> Result<()> {
-        let deadline = Instant::now() + Duration::from_millis(self.cfg.fault_timeout_ms * 2);
+        let deadline =
+            self.clock.raw_now() + Duration::from_millis(self.cfg.fault_timeout_ms * 2);
         while self.inflight > 0 {
             if let Some((from, msg)) = self.endpoint.recv_timeout(Duration::from_millis(5)) {
                 self.on_message(from, msg)?;
@@ -243,7 +245,7 @@ impl Central {
             if let Some(b) = self.detector.overdue() {
                 self.handle_fault(b)?;
             }
-            if Instant::now() > deadline {
+            if self.clock.raw_now() > deadline {
                 bail!("drain timed out with {} in flight", self.inflight);
             }
         }
@@ -284,13 +286,13 @@ impl Central {
             }
         }
         // collect results coming back from the last stage
-        let deadline = Instant::now() + Duration::from_secs(120);
+        let deadline = self.clock.raw_now() + Duration::from_secs(120);
         while results.len() < nb as usize {
             let evals = self.pump_for(Duration::from_millis(20))?;
             for (_, l, c) in evals {
                 results.push((l, c));
             }
-            if Instant::now() > deadline {
+            if self.clock.raw_now() > deadline {
                 log_warn!("eval timed out: {}/{} results", results.len(), nb);
                 break;
             }
@@ -519,12 +521,12 @@ impl Central {
             self.endpoint
                 .send(dev, Message::FetchWeights { blocks: (lo..=hi).collect() })?;
         }
-        let deadline = Instant::now() + Duration::from_secs(30);
+        let deadline = self.clock.raw_now() + Duration::from_secs(30);
         let mut expect: usize = peers
             .iter()
             .map(|&(s, _)| self.worker.ranges[s].1 - self.worker.ranges[s].0 + 1)
             .sum();
-        while expect > 0 && Instant::now() < deadline {
+        while expect > 0 && self.clock.raw_now() < deadline {
             if let Some((_, Message::Weights { blocks })) =
                 self.endpoint.recv_timeout(Duration::from_millis(10))
             {

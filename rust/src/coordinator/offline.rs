@@ -8,7 +8,7 @@
 
 use std::collections::BTreeSet;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
@@ -178,22 +178,22 @@ pub(crate) fn bootstrap(cfg: &RunConfig, mut opts: RunOpts) -> Result<BootResult
     // detector from firing on compile time (big models need minutes).
     {
         let mut ready: BTreeSet<DeviceId> = BTreeSet::new();
-        let deadline = Instant::now() + Duration::from_secs(900);
+        let deadline = central.clock.raw_now() + Duration::from_secs(900);
         while ready.len() + 1 < n {
             for d in 1..n {
                 if !ready.contains(&d) {
                     central.endpoint.send(d, Message::Probe)?;
                 }
             }
-            let wait_until = Instant::now() + Duration::from_millis(500);
-            while Instant::now() < wait_until {
+            let wait_until = central.clock.raw_now() + Duration::from_millis(500);
+            while central.clock.raw_now() < wait_until {
                 if let Some((_, Message::ProbeAck { id, .. })) =
                     central.endpoint.recv_timeout(Duration::from_millis(100))
                 {
                     ready.insert(id);
                 }
             }
-            if Instant::now() > deadline {
+            if central.clock.raw_now() > deadline {
                 bail!("workers not ready after 900s ({}/{} acked)", ready.len(), n - 1);
             }
         }

@@ -8,7 +8,7 @@
 //! committing the new sub-model all share buffers.
 
 use std::collections::{BTreeMap, BTreeSet};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
@@ -128,7 +128,7 @@ impl Central {
 
         // await FetchDone from every worker + our own completion
         let mut done: BTreeSet<DeviceId> = BTreeSet::new();
-        let deadline = Instant::now() + Duration::from_secs(60);
+        let deadline = self.clock.raw_now() + Duration::from_secs(60);
         while done.len() < workers.len() || !self.worker.fetch_done() {
             match self.endpoint.recv_timeout(Duration::from_millis(5)) {
                 Some((from, msg)) => match Event::from_message(from, msg) {
@@ -139,7 +139,7 @@ impl Central {
                 },
                 None => {}
             }
-            if Instant::now() > deadline {
+            if self.clock.raw_now() > deadline {
                 bail!(
                     "redistribution timed out ({} of {} workers done)",
                     done.len(),
@@ -161,7 +161,7 @@ impl Central {
     // ------------------------------------------------------------------
 
     pub(crate) fn handle_fault(&mut self, overdue_batch: u64) -> Result<()> {
-        let t_start = Instant::now();
+        let t_start = self.clock.raw_now();
         log_warn!(
             "FAULT: no gradient for batch {overdue_batch} within timeout; probing workers"
         );
@@ -179,8 +179,8 @@ impl Central {
             self.endpoint.send(d, Message::Probe)?;
         }
         let mut acks: BTreeMap<DeviceId, bool> = BTreeMap::new(); // id -> fresh
-        let probe_deadline = Instant::now() + Duration::from_millis(1500);
-        while acks.len() < peers.len() && Instant::now() < probe_deadline {
+        let probe_deadline = self.clock.raw_now() + Duration::from_millis(1500);
+        while acks.len() < peers.len() && self.clock.raw_now() < probe_deadline {
             match self.endpoint.recv_timeout(Duration::from_millis(10)) {
                 Some((from, msg)) => match Event::from_message(from, msg) {
                     Event::Control(ControlEvent::ProbeAck { id, fresh }) => {
@@ -198,12 +198,12 @@ impl Central {
             peers.iter().copied().filter(|d| !acks.contains_key(d)).collect();
         let fresh: Vec<DeviceId> =
             acks.iter().filter(|(_, &f)| f).map(|(&d, _)| d).collect();
-        let detect_s = t_start.elapsed().as_secs_f64();
+        let detect_s = self.clock.raw_now().saturating_sub(t_start).as_secs_f64();
         // Table III's "recover overhead" is the work AFTER the failed
         // worker is identified (renumber + re-partition + weight
         // redistribution + reset); detection/probing cost is identical
         // across systems and reported separately as an event.
-        let t_redist = Instant::now();
+        let t_redist = self.clock.raw_now();
 
         let committed = self.completed;
         if dead.is_empty() && fresh.is_empty() {
@@ -221,7 +221,7 @@ impl Central {
                 self.endpoint.send(d, Message::InitState(ti.clone()))?;
             }
             // tiny pause so InitState lands before Repartition
-            std::thread::sleep(Duration::from_millis(50));
+            self.clock.sleep(Duration::from_millis(50));
             self.run_redistribution(self.worker.ranges.clone(), worker_list, vec![])?;
         } else {
             // CASE 3: dead worker(s) — renumber, re-partition, redistribute
@@ -275,7 +275,7 @@ impl Central {
         self.inflight = 0;
         self.next_inject = (committed + 1) as u64;
 
-        let overhead = t_redist.elapsed().as_secs_f64();
+        let overhead = self.clock.raw_now().saturating_sub(t_redist).as_secs_f64();
         self.record.recovery_overhead_s = Some(overhead);
         self.record.event(
             &self.clock,

@@ -6,27 +6,54 @@
 //! node's). Time variation = slow sinusoidal drift + per-execution
 //! log-normal noise, which is what exercises the paper's periodic dynamic
 //! re-partition. A memory cap reproduces the §IV-F Raspberry-Pi OOM.
+//!
+//! Two time models:
+//!
+//! * **Wall** (default) — measure the closure's real duration, stretch by
+//!   the capacity factor, sleep the difference. Used by the live
+//!   simulation (`coordinator::run_sim_full`) and the TCP deployment.
+//! * **Modeled** — charge `flops × ns_per_flop × capacity` without
+//!   measuring or sleeping. All time is read from the [`Clock`] seam, so
+//!   execution reports (and therefore capacity estimates and partition
+//!   decisions) are bit-for-bit deterministic — this is what the
+//!   scenario runner (`sim::runner`) uses on its virtual timeline.
 
 use std::time::{Duration, Instant};
 
 use crate::config::DeviceConfig;
+use crate::sim::clock::{real_clock, SharedClock};
 use crate::util::rng::Rng;
 
 /// Capacity model of one device.
 pub struct SimDevice {
     pub cfg: DeviceConfig,
     rng: Rng,
-    start: Instant,
+    clock: SharedClock,
+    start: Duration,
+    /// `Some(ns_per_flop)` switches to the modeled time model.
+    modeled_ns_per_flop: Option<f64>,
 }
 
 impl SimDevice {
+    /// Wall-time device (production default).
     pub fn new(cfg: DeviceConfig, seed: u64) -> SimDevice {
-        SimDevice { cfg, rng: Rng::new(seed ^ 0xDE71CE), start: Instant::now() }
+        SimDevice::with_clock(cfg, seed, real_clock(), None)
+    }
+
+    /// Device on an explicit clock, optionally with modeled compute cost.
+    pub fn with_clock(
+        cfg: DeviceConfig,
+        seed: u64,
+        clock: SharedClock,
+        modeled_ns_per_flop: Option<f64>,
+    ) -> SimDevice {
+        let start = clock.now();
+        SimDevice { cfg, rng: Rng::new(seed ^ 0xDE71CE), clock, start, modeled_ns_per_flop }
     }
 
     /// Current capacity factor (>= 1.0 is slower than the central node).
     pub fn capacity_now(&mut self) -> f64 {
-        let t = self.start.elapsed().as_secs_f64();
+        let t = self.clock.now().saturating_sub(self.start).as_secs_f64();
         let drift = if self.cfg.drift_amp > 0.0 {
             1.0 + self.cfg.drift_amp
                 * (2.0 * std::f64::consts::PI * t / self.cfg.drift_period_s).sin()
@@ -55,6 +82,32 @@ impl SimDevice {
         (out, simulated.max(real))
     }
 
+    /// Run `f`, charging its cost from `flops` when this device uses the
+    /// modeled time model (no measurement, no sleep — the scenario runner
+    /// advances virtual time by the returned duration). Wall-time devices
+    /// ignore `flops` and behave exactly like [`Self::execute`].
+    pub fn execute_flops<T>(&mut self, flops: u64, f: impl FnOnce() -> T) -> (T, Duration) {
+        match self.modeled_ns_per_flop {
+            None => self.execute(f),
+            Some(ns_per_flop) => {
+                let cap = self.capacity_now();
+                let out = f();
+                let ns = (flops as f64 * ns_per_flop * cap).max(1.0);
+                (out, Duration::from_nanos(ns as u64))
+            }
+        }
+    }
+
+    /// The modeled duration of `flops` at the current capacity, without
+    /// running anything (the runner prices a step before executing it).
+    /// None when this device measures wall time instead.
+    pub fn modeled_cost(&mut self, flops: u64) -> Option<Duration> {
+        let ns_per_flop = self.modeled_ns_per_flop?;
+        let cap = self.capacity_now();
+        let ns = (flops as f64 * ns_per_flop * cap).max(1.0);
+        Some(Duration::from_nanos(ns as u64))
+    }
+
     /// Memory-cap check: would `bytes` of state fit on this device?
     pub fn fits_memory(&self, bytes: u64) -> bool {
         match self.cfg.mem_cap_bytes {
@@ -67,6 +120,7 @@ impl SimDevice {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::clock::VirtualClock;
 
     #[test]
     fn unit_capacity_adds_no_delay() {
@@ -117,6 +171,39 @@ mod tests {
         assert!(hi > 1.2, "hi={hi}");
         assert!(lo < 0.8, "lo={lo}");
         assert!(lo >= 0.05);
+    }
+
+    #[test]
+    fn modeled_cost_is_deterministic_and_sleepless() {
+        let clock = VirtualClock::shared();
+        let mut d = SimDevice::with_clock(
+            DeviceConfig::with_capacity(3.0),
+            7,
+            clock.clone(),
+            Some(2.0), // 2 ns per flop
+        );
+        let t0 = Instant::now();
+        let ((), dur) = d.execute_flops(1_000_000, || {});
+        assert!(t0.elapsed() < Duration::from_millis(50), "modeled mode must not sleep");
+        // 1e6 flops * 2 ns * capacity 3.0 = 6 ms, exactly, every time
+        assert_eq!(dur, Duration::from_nanos(6_000_000));
+        assert_eq!(d.modeled_cost(1_000_000), Some(Duration::from_nanos(6_000_000)));
+        let ((), dur2) = d.execute_flops(1_000_000, || {});
+        assert_eq!(dur, dur2);
+    }
+
+    #[test]
+    fn drift_follows_the_virtual_clock() {
+        let clock = VirtualClock::shared();
+        let mut cfg = DeviceConfig::with_capacity(1.0);
+        cfg.drift_amp = 0.5;
+        cfg.drift_period_s = 4.0;
+        let mut d = SimDevice::with_clock(cfg, 8, clock.clone(), Some(1.0));
+        let c0 = d.capacity_now();
+        clock.advance(Duration::from_secs(1)); // quarter period: sin = 1
+        let c1 = d.capacity_now();
+        assert!((c0 - 1.0).abs() < 1e-9, "c0={c0}");
+        assert!((c1 - 1.5).abs() < 1e-9, "c1={c1}");
     }
 
     #[test]

@@ -4,25 +4,39 @@
 //! a batch, a timer is set by only the central node. If the central node
 //! does not receive the backward gradients of that batch when the timer
 //! stops, the fault tolerance handler is triggered."
+//!
+//! All timing goes through the [`Clock`] seam, so the timer table is
+//! byte-for-byte deterministic under a [`crate::sim::VirtualClock`] — the
+//! scenario suite scripts "the timeout fires exactly here" instead of
+//! sleeping and hoping.
 
 use std::collections::BTreeMap;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-/// Timer table: batch id -> deadline.
-#[derive(Debug, Default)]
+use crate::sim::clock::{real_clock, SharedClock};
+
+/// Timer table: batch id -> deadline (in clock time).
+#[derive(Debug)]
 pub struct FaultDetector {
-    deadlines: BTreeMap<u64, Instant>,
+    deadlines: BTreeMap<u64, Duration>,
     timeout: Duration,
+    clock: SharedClock,
 }
 
 impl FaultDetector {
+    /// Wall-clock detector (production default).
     pub fn new(timeout: Duration) -> FaultDetector {
-        FaultDetector { deadlines: BTreeMap::new(), timeout }
+        FaultDetector::with_clock(timeout, real_clock())
+    }
+
+    /// Detector on an explicit clock (virtual in the scenario runner).
+    pub fn with_clock(timeout: Duration, clock: SharedClock) -> FaultDetector {
+        FaultDetector { deadlines: BTreeMap::new(), timeout, clock }
     }
 
     /// Arm the timer for a batch whose activations were just sent out.
     pub fn arm(&mut self, batch: u64) {
-        self.deadlines.insert(batch, Instant::now() + self.timeout);
+        self.deadlines.insert(batch, self.clock.now() + self.timeout);
     }
 
     /// Gradient for `batch` arrived — disarm.
@@ -30,9 +44,9 @@ impl FaultDetector {
         self.deadlines.remove(&batch);
     }
 
-    /// The earliest overdue batch, if any.
+    /// The lowest-numbered overdue batch, if any.
     pub fn overdue(&self) -> Option<u64> {
-        let now = Instant::now();
+        let now = self.clock.now();
         self.deadlines
             .iter()
             .find(|(_, &dl)| now >= dl)
@@ -47,11 +61,22 @@ impl FaultDetector {
     pub fn armed(&self) -> usize {
         self.deadlines.len()
     }
+
+    pub fn timeout(&self) -> Duration {
+        self.timeout
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::clock::VirtualClock;
+    use std::sync::Arc;
+
+    fn virt(timeout_ms: u64) -> (FaultDetector, Arc<VirtualClock>) {
+        let clock = VirtualClock::shared();
+        (FaultDetector::with_clock(Duration::from_millis(timeout_ms), clock.clone()), clock)
+    }
 
     #[test]
     fn arms_and_disarms() {
@@ -66,12 +91,85 @@ mod tests {
 
     #[test]
     fn detects_overdue_earliest_first() {
-        let mut d = FaultDetector::new(Duration::from_millis(5));
+        let (mut d, clock) = virt(5);
         d.arm(7);
         d.arm(5);
-        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(d.overdue(), None, "nothing overdue before the timeout");
+        clock.advance(Duration::from_millis(10));
         assert_eq!(d.overdue(), Some(5));
         d.clear();
         assert_eq!(d.overdue(), None);
+    }
+
+    #[test]
+    fn deadline_is_exact_on_the_virtual_timeline() {
+        let (mut d, clock) = virt(100);
+        clock.advance(Duration::from_millis(40));
+        d.arm(0);
+        clock.advance(Duration::from_millis(99));
+        assert_eq!(d.overdue(), None, "one tick before the deadline");
+        clock.advance(Duration::from_millis(1));
+        assert_eq!(d.overdue(), Some(0), "exactly at the deadline");
+    }
+
+    #[test]
+    fn multiple_simultaneously_overdue_batches_report_lowest_id() {
+        // Batches armed at different times can all be overdue at once
+        // (silence after a device death). The handler must see the
+        // lowest batch id regardless of arming order.
+        let (mut d, clock) = virt(50);
+        d.arm(9);
+        clock.advance(Duration::from_millis(10));
+        d.arm(4);
+        clock.advance(Duration::from_millis(10));
+        d.arm(6);
+        clock.advance(Duration::from_millis(200)); // all three overdue now
+        assert_eq!(d.overdue(), Some(4));
+        d.disarm(4);
+        assert_eq!(d.overdue(), Some(6));
+        d.disarm(6);
+        assert_eq!(d.overdue(), Some(9));
+    }
+
+    #[test]
+    fn recovery_clears_all_timers_and_rearms_fresh() {
+        // clear-on-recovery: after the fault handler resets, re-armed
+        // batches get fresh deadlines measured from the current time.
+        let (mut d, clock) = virt(50);
+        d.arm(1);
+        d.arm(2);
+        clock.advance(Duration::from_millis(60));
+        assert_eq!(d.overdue(), Some(1));
+        d.clear();
+        assert_eq!(d.armed(), 0);
+        d.arm(1); // replay after recovery
+        assert_eq!(d.overdue(), None, "re-armed batch starts a fresh window");
+        clock.advance(Duration::from_millis(49));
+        assert_eq!(d.overdue(), None);
+        clock.advance(Duration::from_millis(1));
+        assert_eq!(d.overdue(), Some(1));
+    }
+
+    #[test]
+    fn disarm_before_deadline_never_fires() {
+        let (mut d, clock) = virt(30);
+        d.arm(0);
+        clock.advance(Duration::from_millis(29));
+        d.disarm(0);
+        clock.advance(Duration::from_secs(3600));
+        assert_eq!(d.overdue(), None);
+        assert_eq!(d.armed(), 0);
+    }
+
+    #[test]
+    fn rearming_a_batch_extends_its_deadline() {
+        let (mut d, clock) = virt(50);
+        d.arm(3);
+        clock.advance(Duration::from_millis(40));
+        d.arm(3); // re-sent (e.g. replay after case-1 recovery)
+        clock.advance(Duration::from_millis(40));
+        assert_eq!(d.overdue(), None, "deadline measured from the re-arm");
+        clock.advance(Duration::from_millis(10));
+        assert_eq!(d.overdue(), Some(3));
     }
 }

@@ -22,6 +22,9 @@
 //! - [`fault`] — failure detection, Algorithm 1 redistribution, recovery
 //! - [`coordinator`] — central-node phases: offline bootstrap,
 //!   steady-state training, repartition/recovery
+//! - [`sim`] — deterministic scenario simulation: the virtual/real
+//!   [`sim::Clock`] seam, synthetic native models, and the
+//!   discrete-event scenario runner behind `rust/tests/scenarios/`
 //! - [`metrics`] — run records and writers
 
 pub mod util;
@@ -42,3 +45,4 @@ pub mod metrics;
 pub mod pipeline;
 pub mod replication;
 pub mod runtime;
+pub mod sim;

@@ -59,6 +59,10 @@ pub struct BlockInfo {
     pub bwd: Option<PathBuf>,
     pub step: Option<PathBuf>,
     pub eval: Option<PathBuf>,
+    /// Built-in pure-Rust op instead of HLO artifacts ("affine"/"head").
+    /// Used by the deterministic scenario fixtures (`sim::fixture`), which
+    /// must run without a PJRT backend.
+    pub native: Option<String>,
     pub params: Vec<ParamInfo>,
     pub in_shape: Vec<usize>,
     pub in_dtype: Dtype,
@@ -146,6 +150,7 @@ impl Manifest {
                 bwd: path_of("bwd"),
                 step: path_of("step"),
                 eval: path_of("eval"),
+                native: b.get("native").and_then(|x| x.as_str()).map(String::from),
                 params,
                 in_shape: shape_of(b.req("in_shape")?)?,
                 in_dtype: Dtype::from_str(b.req("in_dtype")?.as_str().unwrap_or("f32"))?,

@@ -1,7 +1,8 @@
 //! Run records: per-batch / per-epoch metrics, event log, JSON/CSV export.
 
-use std::time::Instant;
+use std::time::Duration;
 
+use crate::sim::clock::{real_clock, SharedClock};
 use crate::util::json::Value;
 
 #[derive(Debug, Clone)]
@@ -134,17 +135,44 @@ impl RunRecord {
     }
 }
 
-/// Run-relative wall clock.
+/// Run-relative clock: elapsed time since the run started, measured on
+/// the [`crate::sim::Clock`] seam (wall time by default; a virtual
+/// timeline under the scenario runner).
 #[derive(Debug, Clone)]
-pub struct RunClock(Instant);
+pub struct RunClock {
+    clock: SharedClock,
+    start: Duration,
+}
 
 impl RunClock {
     pub fn start() -> RunClock {
-        RunClock(Instant::now())
+        RunClock::on(real_clock())
     }
 
+    /// Start a run clock on an explicit time source.
+    pub fn on(clock: SharedClock) -> RunClock {
+        let start = clock.now();
+        RunClock { clock, start }
+    }
+
+    /// Seconds since the run started.
     pub fn now_s(&self) -> f64 {
-        self.0.elapsed().as_secs_f64()
+        self.now().as_secs_f64()
+    }
+
+    /// Elapsed time since the run started.
+    pub fn now(&self) -> Duration {
+        self.clock.now().saturating_sub(self.start)
+    }
+
+    /// Absolute time on the underlying clock (for deadline arithmetic).
+    pub fn raw_now(&self) -> Duration {
+        self.clock.now()
+    }
+
+    /// Sleep on the underlying clock (virtual-aware pauses).
+    pub fn sleep(&self, d: Duration) {
+        self.clock.sleep(d);
     }
 }
 

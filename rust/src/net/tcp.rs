@@ -23,31 +23,58 @@ use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use super::codec;
 use super::message::{DeviceId, Message};
 use super::Transport;
+use crate::sim::clock::{real_clock, SharedClock};
 
-/// First-contact reconnect schedule: up to [`CONNECT_ATTEMPTS`] tries
-/// with doubling sleeps starting at [`CONNECT_BACKOFF_MS`] (sleeps
-/// 10+20+40+80 ms — ~150 ms of backoff, bridging workers that bind a
-/// beat late at cluster start). Once a peer has been reached, later
-/// reconnects use a single attempt (fast fail, like a dead sim device).
-const CONNECT_ATTEMPTS: u32 = 5;
-const CONNECT_BACKOFF_MS: u64 = 10;
+/// Retry/backoff tuning of a [`TcpEndpoint`]. The defaults reproduce the
+/// historical hardcoded constants; tests on slow runners (and deployments
+/// with slower cluster start) widen them instead of racing fixed sleeps.
+/// All waiting runs on the [`crate::sim::Clock`] seam.
+#[derive(Debug, Clone)]
+pub struct TcpConfig {
+    /// First-contact reconnect schedule: up to `connect_attempts` tries
+    /// with doubling sleeps starting at `connect_backoff` (defaults:
+    /// 5 tries sleeping 10+20+40+80 ms ≈ 150 ms of backoff, bridging
+    /// workers that bind a beat late at cluster start). Once a peer has
+    /// been reached, later reconnects use a single attempt (fast fail,
+    /// like a dead sim device).
+    pub connect_attempts: u32,
+    pub connect_backoff: Duration,
+    /// Per-attempt bound on TCP connect (a SYN-blackholed host must not
+    /// stall the sender for the OS default of minutes).
+    pub connect_timeout: Duration,
+    /// After a connect failure the peer is considered down for this
+    /// long: sends fail fast (silent drop) instead of re-dialing per
+    /// message while the fault handler converges. `Probe` messages
+    /// bypass this — they are exactly the "is it back up?" signal.
+    pub down_ttl: Duration,
+}
 
-/// Per-attempt bound on TCP connect (a SYN-blackholed host must not
-/// stall the sender for the OS default of minutes).
-const CONNECT_TIMEOUT: Duration = Duration::from_millis(500);
+impl Default for TcpConfig {
+    fn default() -> TcpConfig {
+        TcpConfig {
+            connect_attempts: 5,
+            connect_backoff: Duration::from_millis(10),
+            connect_timeout: Duration::from_millis(500),
+            down_ttl: Duration::from_secs(1),
+        }
+    }
+}
 
-/// After a connect failure the peer is considered down for this long:
-/// sends fail fast (silent drop) instead of re-dialing per message
-/// while the fault handler converges. `Probe` messages bypass this —
-/// they are exactly the "is it back up?" signal.
-const DOWN_TTL: Duration = Duration::from_secs(1);
+impl TcpConfig {
+    /// A patient schedule for CI/loopback tests: the same doubling
+    /// backoff but with more attempts (~2.5 s total), so a worker thread
+    /// descheduled on an oversubscribed runner still gets bridged.
+    pub fn patient() -> TcpConfig {
+        TcpConfig { connect_attempts: 9, ..TcpConfig::default() }
+    }
+}
 
 /// Hard cap on a frame's size; larger reads indicate a corrupt stream.
 const MAX_FRAME: usize = 1 << 30;
@@ -61,6 +88,8 @@ const MAX_RETAINED_BUF: usize = 1 << 20;
 pub struct TcpEndpoint {
     id: DeviceId,
     addrs: Vec<String>,
+    cfg: TcpConfig,
+    clock: SharedClock,
     io: Mutex<IoState>,
     inbox_rx: Receiver<(DeviceId, Message)>,
     _inbox_tx: Sender<(DeviceId, Message)>, // keeps channel alive
@@ -71,8 +100,8 @@ struct IoState {
     conns: HashMap<DeviceId, TcpStream>,
     /// peers reached at least once (first contact gets the full backoff)
     ever_connected: HashSet<DeviceId>,
-    /// peer -> don't redial before this instant
-    down_until: HashMap<DeviceId, Instant>,
+    /// peer -> don't redial before this clock time
+    down_until: HashMap<DeviceId, Duration>,
 }
 
 fn peer_of(stream: &TcpStream) -> String {
@@ -121,6 +150,16 @@ impl TcpEndpoint {
     /// Bind `addrs[id]` and start the acceptor. All devices must use the
     /// same `addrs` vector (the worker list of the deployment).
     pub fn bind(id: DeviceId, addrs: Vec<String>) -> Result<TcpEndpoint> {
+        TcpEndpoint::bind_with(id, addrs, TcpConfig::default(), real_clock())
+    }
+
+    /// [`Self::bind`] with explicit retry tuning and time source.
+    pub fn bind_with(
+        id: DeviceId,
+        addrs: Vec<String>,
+        cfg: TcpConfig,
+        clock: SharedClock,
+    ) -> Result<TcpEndpoint> {
         let listener = TcpListener::bind(&addrs[id])
             .with_context(|| format!("binding {}", addrs[id]))?;
         let (tx, rx) = channel();
@@ -164,6 +203,8 @@ impl TcpEndpoint {
         Ok(TcpEndpoint {
             id,
             addrs,
+            cfg,
+            clock,
             io: Mutex::new(IoState {
                 conns: HashMap::new(),
                 ever_connected: HashSet::new(),
@@ -181,7 +222,7 @@ impl TcpEndpoint {
             .with_context(|| format!("resolving {}", self.addrs[to]))?
             .next()
             .with_context(|| format!("no address for {}", self.addrs[to]))?;
-        let stream = TcpStream::connect_timeout(&addr, CONNECT_TIMEOUT)?;
+        let stream = TcpStream::connect_timeout(&addr, self.cfg.connect_timeout)?;
         stream.set_nodelay(true).ok();
         Ok(stream)
     }
@@ -190,7 +231,7 @@ impl TcpEndpoint {
     /// late (worker startup order is unordered) is retried; a peer that
     /// stays unreachable returns Err after the schedule is exhausted.
     fn connect_with_backoff(&self, to: DeviceId, attempts: u32) -> Result<TcpStream> {
-        let mut delay = Duration::from_millis(CONNECT_BACKOFF_MS);
+        let mut delay = self.cfg.connect_backoff;
         let mut last_err = None;
         for attempt in 0..attempts {
             match self.connect_once(to) {
@@ -198,7 +239,7 @@ impl TcpEndpoint {
                 Err(e) => {
                     last_err = Some(e);
                     if attempt + 1 < attempts {
-                        std::thread::sleep(delay);
+                        self.clock.sleep(delay);
                         delay *= 2;
                     }
                 }
@@ -222,7 +263,7 @@ impl TcpEndpoint {
         // always attempt a real dial
         if !matches!(msg, Message::Probe) {
             if let Some(until) = io.down_until.get(&to) {
-                if Instant::now() < *until {
+                if self.clock.now() < *until {
                     return Ok(());
                 }
                 io.down_until.remove(&to);
@@ -230,8 +271,11 @@ impl TcpEndpoint {
         }
         for attempt in 0..2 {
             if !io.conns.contains_key(&to) {
-                let attempts =
-                    if io.ever_connected.contains(&to) { 1 } else { CONNECT_ATTEMPTS };
+                let attempts = if io.ever_connected.contains(&to) {
+                    1
+                } else {
+                    self.cfg.connect_attempts
+                };
                 match self.connect_with_backoff(to, attempts) {
                     Ok(s) => {
                         io.ever_connected.insert(to);
@@ -239,7 +283,7 @@ impl TcpEndpoint {
                         io.conns.insert(to, s);
                     }
                     Err(e) => {
-                        io.down_until.insert(to, Instant::now() + DOWN_TTL);
+                        io.down_until.insert(to, self.clock.now() + self.cfg.down_ttl);
                         crate::log_warn!("tcp send: dropping {} to device {to}: {e:#}", msg.tag());
                         return Ok(());
                     }
@@ -354,10 +398,14 @@ mod tests {
     #[test]
     fn late_binding_peer_is_reached_by_backoff() {
         // device 1 binds ~40ms after device 0 starts sending: the
-        // reconnect loop must bridge the gap instead of dropping
+        // reconnect loop must bridge the gap instead of dropping. The
+        // patient schedule keeps this stable on slow CI runners (the
+        // default ~150ms window used to race the spawned thread).
         let addrs = vec!["127.0.0.1:46130".to_string(), "127.0.0.1:46131".to_string()];
         let a0 = addrs.clone();
-        let ep0 = TcpEndpoint::bind(0, a0).unwrap();
+        let ep0 =
+            TcpEndpoint::bind_with(0, a0, TcpConfig::patient(), crate::sim::real_clock())
+                .unwrap();
         let addrs1 = addrs.clone();
         let h = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(40));
@@ -365,9 +413,41 @@ mod tests {
         });
         ep0.send(1, Message::FetchDone { id: 0 }).unwrap();
         let ep1 = h.join().unwrap();
-        match ep1.recv_timeout(Duration::from_secs(2)) {
+        match ep1.recv_timeout(Duration::from_secs(5)) {
             Some((0, Message::FetchDone { id: 0 })) => {}
             other => panic!("late-bound peer missed the message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn config_defaults_match_historical_constants() {
+        let c = TcpConfig::default();
+        assert_eq!(c.connect_attempts, 5);
+        assert_eq!(c.connect_backoff, Duration::from_millis(10));
+        assert_eq!(c.connect_timeout, Duration::from_millis(500));
+        assert_eq!(c.down_ttl, Duration::from_secs(1));
+        assert!(TcpConfig::patient().connect_attempts > c.connect_attempts);
+    }
+
+    #[test]
+    fn down_ttl_is_configurable_and_expires() {
+        // a tiny TTL re-dials almost immediately instead of holding the
+        // peer down for a second (the old hardcoded window)
+        let cfg = TcpConfig {
+            connect_attempts: 1,
+            down_ttl: Duration::from_millis(1),
+            ..TcpConfig::default()
+        };
+        let addrs = vec!["127.0.0.1:46140".to_string(), "127.0.0.1:46141".to_string()];
+        let ep0 = TcpEndpoint::bind_with(0, addrs.clone(), cfg, crate::sim::real_clock())
+            .unwrap();
+        ep0.send(1, Message::FetchDone { id: 0 }).unwrap(); // peer down: cached
+        std::thread::sleep(Duration::from_millis(5)); // TTL expired
+        let ep1 = TcpEndpoint::bind(1, addrs).unwrap();
+        ep0.send(1, Message::FetchDone { id: 7 }).unwrap(); // re-dials now
+        match ep1.recv_timeout(Duration::from_secs(2)) {
+            Some((0, Message::FetchDone { id: 7 })) => {}
+            other => panic!("expired down-cache still blocking sends: {other:?}"),
         }
     }
 }

@@ -27,5 +27,5 @@ pub mod stage;
 pub mod trace;
 
 pub use events::{ControlEvent, DataEvent, Event, Flow};
-pub use schedule::{PendingBackward, PendingForward, Schedule, Step};
+pub use schedule::{PendingBackward, PendingForward, Schedule, Step, StepKind};
 pub use stage::{run_worker, CompletedBatch, StageWorker};

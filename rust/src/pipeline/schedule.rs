@@ -43,6 +43,15 @@ pub enum Step {
     Forward(PendingForward),
 }
 
+/// The *kind* of the step [`Schedule::next_step`] would select — a
+/// non-consuming preview used by the scenario runner to price a step
+/// (flops → virtual time) before executing it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepKind {
+    Backward { batch: u64 },
+    Forward { batch: u64, is_eval: bool },
+}
+
 /// Batch-keyed stage state + the 1F1B selection policy.
 #[derive(Debug, Default)]
 pub struct Schedule {
@@ -91,6 +100,16 @@ impl Schedule {
         }
         let pos = self.position_of_runnable_forward(last_stage)?;
         Some(Step::Forward(self.pending_fwd.remove(pos).unwrap()))
+    }
+
+    /// Preview what [`Self::next_step`] would return, without consuming.
+    pub fn peek_kind(&self, last_stage: bool) -> Option<StepKind> {
+        if let Some(b) = self.pending_bwd.front() {
+            return Some(StepKind::Backward { batch: b.batch });
+        }
+        let pos = self.position_of_runnable_forward(last_stage)?;
+        let f = &self.pending_fwd[pos];
+        Some(StepKind::Forward { batch: f.batch, is_eval: f.is_eval })
     }
 
     fn position_of_runnable_forward(&self, last_stage: bool) -> Option<usize> {
@@ -254,6 +273,23 @@ mod tests {
         assert!(s.take_acts(6).is_some());
         assert!(s.take_labels(8, false).is_some(), "future labels must survive reset");
         assert!(s.take_labels(6, false).is_none(), "committed labels dropped");
+    }
+
+    #[test]
+    fn peek_kind_previews_without_consuming() {
+        let mut s = Schedule::new();
+        assert_eq!(s.peek_kind(false), None);
+        s.push_forward(fwd(3, false));
+        assert_eq!(s.peek_kind(false), Some(StepKind::Forward { batch: 3, is_eval: false }));
+        s.push_backward(bwd(2));
+        // 1F1B: the preview agrees with next_step's backward-first policy
+        assert_eq!(s.peek_kind(false), Some(StepKind::Backward { batch: 2 }));
+        assert!(matches!(s.next_step(false), Some(Step::Backward(b)) if b.batch == 2));
+        assert_eq!(s.peek_kind(false), Some(StepKind::Forward { batch: 3, is_eval: false }));
+        // last stage: no preview until labels arrive
+        assert_eq!(s.peek_kind(true), None);
+        s.put_labels(3, false, vec![1]);
+        assert_eq!(s.peek_kind(true), Some(StepKind::Forward { batch: 3, is_eval: false }));
     }
 
     #[test]

@@ -31,10 +31,11 @@ use crate::net::message::{DeviceId, ExecReport, Message, Payload, ReplicaKind, T
 use crate::net::{TensorBuf, Transport};
 use crate::replication::{self, BackupStore};
 use crate::runtime::{BlockRuntime, HostTensor};
+use crate::sim::clock::{real_clock, SharedClock};
 
 use super::events::{ControlEvent, DataEvent, Event, Flow};
 use super::repart::Repart;
-use super::schedule::{PendingBackward, PendingForward, Schedule, Step};
+use super::schedule::{PendingBackward, PendingForward, Schedule, Step, StepKind};
 use super::trace::{TraceEvent, TraceKind, TraceSink};
 
 /// Completion info surfaced at stage 0 when a batch's gradient lands.
@@ -52,6 +53,9 @@ pub struct StageWorker {
     pub blocks_rt: Vec<BlockRuntime>,
     pub sim: SimDevice,
     pub trace: TraceSink,
+    /// Time source for bandwidth probes (real by default; the scenario
+    /// runner swaps in its virtual clock).
+    pub clock: SharedClock,
 
     // --- pipeline topology ---
     pub worker_list: Vec<DeviceId>,
@@ -84,8 +88,9 @@ pub struct StageWorker {
     pub backups: BackupStore,
 
     repart: Option<Repart>,
-    /// outstanding bandwidth probe to the next worker (paper §III-B)
-    bw_probe: Option<std::time::Instant>,
+    /// outstanding bandwidth probe to the next worker (paper §III-B):
+    /// the clock time the probe was sent.
+    bw_probe: Option<Duration>,
 }
 
 impl StageWorker {
@@ -102,6 +107,7 @@ impl StageWorker {
             blocks_rt,
             sim,
             trace,
+            clock: real_clock(),
             worker_list: vec![],
             ranges: vec![],
             params: StageParams::default(),
@@ -243,6 +249,7 @@ impl StageWorker {
             // activation stash: cloning a HostTensor shares its TensorBuf
             let mut inputs: Vec<HostTensor> = Vec::with_capacity(hi - lo + 1);
             let mut cur = x;
+            let flops = self.range_flops(lo, hi, true, false);
             let blocks_rt = &self.blocks_rt;
             let (out, ms) = {
                 let mut run = || -> Result<HostTensor> {
@@ -254,7 +261,7 @@ impl StageWorker {
                     }
                     Ok(cur.clone())
                 };
-                let (res, dur) = self.sim.execute(&mut run);
+                let (res, dur) = self.sim.execute_flops(flops, &mut run);
                 (res?, dur.as_secs_f64() * 1e3)
             };
             self.sched.stash_acts(batch, inputs);
@@ -291,6 +298,7 @@ impl StageWorker {
             loss: f32,
             ncorrect: f32,
         }
+        let flops = self.range_flops(lo, hi, true, true);
         let blocks_rt = &self.blocks_rt;
         let (out, ms) = {
             let mut run = || -> Result<LastOut> {
@@ -328,7 +336,7 @@ impl StageWorker {
                 let gx_out = (have_gx && lo != 0).then_some(gy); // block 0 has no input grad
                 Ok(LastOut { grads, gx_out, loss: hs.loss, ncorrect: hs.ncorrect })
             };
-            let (res, dur) = self.sim.execute(&mut run);
+            let (res, dur) = self.sim.execute_flops(flops, &mut run);
             (res?, dur.as_secs_f64() * 1e3)
         };
 
@@ -444,6 +452,7 @@ impl StageWorker {
             .take_acts(batch)
             .with_context(|| format!("no saved activations for batch {batch}"))?;
 
+        let flops = self.range_flops(lo, hi, false, true);
         let blocks_rt = &self.blocks_rt;
         struct BwdOut {
             grads: BTreeMap<usize, Vec<Vec<f32>>>,
@@ -473,7 +482,7 @@ impl StageWorker {
                 let gx_out = if have_gx { cur } else { None };
                 Ok(BwdOut { grads, gx_out })
             };
-            let (res, dur) = self.sim.execute(&mut run);
+            let (res, dur) = self.sim.execute_flops(flops, &mut run);
             (res?, dur.as_secs_f64() * 1e3)
         };
 
@@ -616,29 +625,79 @@ impl StageWorker {
         ExecReport { device: self.device_id, avg_ms: avg, batches: n as u32 }
     }
 
+    /// Manifest flop count of blocks [lo, hi] for the selected passes —
+    /// the cost charged by a modeled [`SimDevice`].
+    fn range_flops(&self, lo: usize, hi: usize, fwd: bool, bwd: bool) -> u64 {
+        self.manifest.blocks[lo..=hi]
+            .iter()
+            .map(|b| {
+                (if fwd { b.flops_fwd } else { 0 }) + (if bwd { b.flops_bwd } else { 0 })
+            })
+            .sum()
+    }
+
+    /// Swap the time source (the scenario runner installs its virtual
+    /// clock right after construction).
+    pub fn set_clock(&mut self, clock: SharedClock) {
+        self.clock = clock;
+    }
+
     // ------------------------------------------------------------------
     // the event loop
     // ------------------------------------------------------------------
 
+    /// Preview the step [`Self::pump`] would run, honoring the same
+    /// gates (initialized, not in recovery, part of the pipeline).
+    pub fn next_step_kind(&self) -> Option<StepKind> {
+        if !self.initialized || self.status == 1 || self.my_stage().is_none() {
+            return None;
+        }
+        self.sched.peek_kind(self.is_last_stage())
+    }
+
+    /// The flop cost a step of `kind` will charge on this stage (the
+    /// last stage's training forward is the fused fwd+loss+bwd step).
+    pub fn step_flops(&self, kind: &StepKind) -> u64 {
+        let Some((lo, hi)) = self.my_range() else { return 0 };
+        match kind {
+            StepKind::Backward { .. } => self.range_flops(lo, hi, false, true),
+            StepKind::Forward { is_eval, .. } => {
+                let fused = self.is_last_stage() && !is_eval;
+                self.range_flops(lo, hi, true, fused)
+            }
+        }
+    }
+
     /// Run at most one compute step (backward preferred — 1F1B).
     pub fn pump(&mut self, t: &dyn Transport) -> Result<bool> {
+        Ok(self.pump_completed(t)?.0)
+    }
+
+    /// [`Self::pump`], surfacing the completed batch when this stage is
+    /// the pipeline head (stage 0) — the deterministic runner drives the
+    /// central node's stage through this instead of a bespoke path.
+    pub fn pump_completed(
+        &mut self,
+        t: &dyn Transport,
+    ) -> Result<(bool, Option<CompletedBatch>)> {
         if !self.initialized || self.status == 1 || self.my_stage().is_none() {
-            return Ok(false);
+            return Ok((false, None));
         }
         match self.sched.next_step(self.is_last_stage()) {
             Some(Step::Backward(b)) => {
-                self.backward(t, b.batch, b.grad, b.loss, b.ncorrect, b.reports)?;
-                Ok(true)
+                let cb = self.backward(t, b.batch, b.grad, b.loss, b.ncorrect, b.reports)?;
+                Ok((true, cb))
             }
             Some(Step::Forward(f)) => {
                 if f.is_eval {
                     self.forward_eval(t, f.batch, f.data)?;
+                    Ok((true, None))
                 } else {
-                    self.forward_train(t, f.batch, f.version0, f.data)?;
+                    let cb = self.forward_train(t, f.batch, f.version0, f.data)?;
+                    Ok((true, cb))
                 }
-                Ok(true)
             }
-            None => Ok(false),
+            None => Ok((false, None)),
         }
     }
 
@@ -739,7 +798,7 @@ impl StageWorker {
             }
             ControlEvent::BwAck { payload_bytes } => {
                 if let (Some(t0), Some(stage)) = (self.bw_probe.take(), self.my_stage()) {
-                    let dt = t0.elapsed().as_secs_f64().max(1e-6);
+                    let dt = self.clock.now().saturating_sub(t0).as_secs_f64().max(1e-6);
                     let bps = payload_bytes as f64 / dt;
                     t.send(self.central_device(), Message::BwReport { stage, bps })?;
                 }
@@ -878,7 +937,7 @@ impl StageWorker {
     pub fn measure_bandwidth(&mut self, t: &dyn Transport) -> Result<()> {
         if let Some(next) = self.next_device() {
             let payload = vec![0u8; 65536];
-            self.bw_probe = Some(std::time::Instant::now());
+            self.bw_probe = Some(self.clock.now());
             t.send(next, Message::BwTest { payload_bytes: 65536, data: payload })?;
         }
         Ok(())

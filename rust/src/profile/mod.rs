@@ -9,19 +9,36 @@
 //! `C_i` (eq 1).
 
 use std::collections::HashMap;
-use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::manifest::{Dtype, Manifest};
 use crate::net::message::{DeviceId, ExecReport};
 use crate::runtime::{BlockRuntime, HostTensor};
+use crate::sim::clock::{real_clock, Clock};
 
 /// Average fwd+bwd wall-time per block, in ms (`T^0_j`).
 #[derive(Debug, Clone)]
 pub struct ModelProfile {
     pub t0_ms: Vec<f64>,
     pub out_bytes: Vec<u64>,
+}
+
+impl ModelProfile {
+    /// Deterministic profile derived from the manifest's per-block flop
+    /// counts at `ns_per_flop` — what the scenario runner uses instead of
+    /// measured execution (the same cost model its modeled devices
+    /// charge, so online capacity estimates are exact by construction).
+    pub fn from_flops(manifest: &Manifest, ns_per_flop: f64) -> ModelProfile {
+        ModelProfile {
+            t0_ms: manifest
+                .blocks
+                .iter()
+                .map(|b| (b.flops_fwd + b.flops_bwd) as f64 * ns_per_flop / 1e6)
+                .collect(),
+            out_bytes: manifest.blocks.iter().map(|b| b.out_bytes).collect(),
+        }
+    }
 }
 
 fn dummy_input(shape_elems: usize, dtype: Dtype) -> HostTensor {
@@ -40,6 +57,17 @@ pub fn profile_model(
     blocks: &[BlockRuntime],
     reps: usize,
 ) -> Result<ModelProfile> {
+    profile_model_with_clock(manifest, blocks, reps, &*real_clock())
+}
+
+/// [`profile_model`] with an explicit time source — measurements read
+/// the [`Clock`] seam, so a virtual clock yields scripted timings.
+pub fn profile_model_with_clock(
+    manifest: &Manifest,
+    blocks: &[BlockRuntime],
+    reps: usize,
+    clock: &dyn Clock,
+) -> Result<ModelProfile> {
     let mut t0_ms = Vec::with_capacity(blocks.len());
     for (i, b) in blocks.iter().enumerate() {
         let params = manifest.load_init_params(i)?;
@@ -54,20 +82,20 @@ pub fn profile_model(
             // one unmeasured warmup (first execution pays one-time costs)
             b.head_step(&params, &xs, &labels, &manifest.label_shape)?;
             for _ in 0..reps {
-                let t0 = Instant::now();
+                let t0 = clock.now();
                 b.head_step(&params, &xs, &labels, &manifest.label_shape)?;
-                total += t0.elapsed().as_secs_f64() * 1e3;
+                total += clock.now().saturating_sub(t0).as_secs_f64() * 1e3;
             }
         } else {
             let y = b.forward(&params, &x)?; // warmup fwd
             let gy0 = vec![1e-3f32; y.len()];
             b.backward(&params, &x, &gy0)?; // warmup bwd
             for _ in 0..reps {
-                let t0 = Instant::now();
+                let t0 = clock.now();
                 let y = b.forward(&params, &x)?;
                 let gy = vec![1e-3f32; y.len()];
                 b.backward(&params, &x, &gy)?;
-                total += t0.elapsed().as_secs_f64() * 1e3;
+                total += clock.now().saturating_sub(t0).as_secs_f64() * 1e3;
             }
         }
         t0_ms.push(total / reps as f64);

@@ -6,7 +6,7 @@
 //! every `global_every` batches (less frequent; tolerates any number of
 //! simultaneous failures at higher central-link cost).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::model::params::{BlockParams, StageParams};
 use crate::net::message::{DeviceId, ReplicaKind, WireBlock};
@@ -58,10 +58,13 @@ pub struct Backup {
     pub blocks: Vec<(usize, BlockParams)>,
 }
 
-/// Backups held by one device, keyed by the owner's device id.
+/// Backups held by one device, keyed by the owner's device id. A
+/// `BTreeMap` so that [`BackupStore::find_block`]'s scan order — and
+/// therefore which replica wins a version tie — is deterministic (the
+/// scenario suite asserts bit-identical recoveries across runs).
 #[derive(Debug, Clone, Default)]
 pub struct BackupStore {
-    by_owner: HashMap<DeviceId, Backup>,
+    by_owner: BTreeMap<DeviceId, Backup>,
 }
 
 impl BackupStore {

@@ -19,6 +19,8 @@ use anyhow::{bail, Context, Result};
 use crate::manifest::{BlockInfo, BlockKind, Dtype, Manifest};
 use crate::net::TensorBuf;
 
+pub mod native;
+
 /// A host-side tensor (activation or label) as moved between devices.
 /// The f32 arm is a shared buffer: cloning a `HostTensor` to stash an
 /// activation for the backward pass costs a refcount bump, not a copy.
@@ -140,18 +142,24 @@ pub struct HeadStepOut {
     pub ncorrect: f32,
 }
 
-/// The compiled artifacts of one block, bound to one engine/thread.
+/// The compiled artifacts of one block, bound to one engine/thread —
+/// or a built-in native op (scenario fixtures, see [`native`]).
 pub struct BlockRuntime {
     pub info: BlockInfo,
     fwd: Option<Executable>,
     bwd: Option<Executable>,
     step: Option<Executable>,
     eval: Option<Executable>,
+    native: Option<native::NativeBlock>,
 }
 
 impl BlockRuntime {
-    /// Compile all artifacts of block `info` on `engine`.
+    /// Compile all artifacts of block `info` on `engine`. A block whose
+    /// manifest entry names a native op never touches the engine.
     pub fn load(engine: &Engine, info: &BlockInfo) -> Result<BlockRuntime> {
+        if info.native.is_some() {
+            return Self::load_native(info);
+        }
         let load = |p: &Option<std::path::PathBuf>| -> Result<Option<Executable>> {
             Ok(match p {
                 Some(p) => Some(engine.load(p)?),
@@ -164,6 +172,19 @@ impl BlockRuntime {
             bwd: load(&info.bwd)?,
             step: load(&info.step)?,
             eval: load(&info.eval)?,
+            native: None,
+        })
+    }
+
+    /// Build a native-op block (no PJRT engine required).
+    pub fn load_native(info: &BlockInfo) -> Result<BlockRuntime> {
+        Ok(BlockRuntime {
+            info: info.clone(),
+            fwd: None,
+            bwd: None,
+            step: None,
+            eval: None,
+            native: Some(native::NativeBlock::from_info(info)?),
         })
     }
 
@@ -196,6 +217,9 @@ impl BlockRuntime {
 
     /// Forward: (params, x) -> y.
     pub fn forward<P: AsRef<[f32]>>(&self, params: &[P], x: &HostTensor) -> Result<Vec<f32>> {
+        if let Some(nb) = &self.native {
+            return nb.forward(params, x);
+        }
         let exe = self.fwd.as_ref().context("block has no fwd artifact")?;
         let mut inputs = self.param_literals(params)?;
         inputs.push(literal_of(x, &self.info.in_shape)?);
@@ -213,6 +237,9 @@ impl BlockRuntime {
         x: &HostTensor,
         gy: &[f32],
     ) -> Result<(Vec<Vec<f32>>, Option<Vec<f32>>)> {
+        if let Some(nb) = &self.native {
+            return nb.backward(params, x, gy);
+        }
         let exe = self.bwd.as_ref().context("block has no bwd artifact")?;
         let mut inputs = self.param_literals(params)?;
         inputs.push(literal_of(x, &self.info.in_shape)?);
@@ -243,6 +270,9 @@ impl BlockRuntime {
         labels: &HostTensor,
         label_shape: &[usize],
     ) -> Result<HeadStepOut> {
+        if let Some(nb) = &self.native {
+            return nb.head_step(params, x, labels);
+        }
         let exe = self.step.as_ref().context("block has no step artifact")?;
         let mut inputs = self.param_literals(params)?;
         inputs.push(literal_f32(x, &self.info.in_shape)?);
@@ -272,6 +302,9 @@ impl BlockRuntime {
         labels: &HostTensor,
         label_shape: &[usize],
     ) -> Result<(f32, f32)> {
+        if let Some(nb) = &self.native {
+            return nb.head_eval(params, x, labels);
+        }
         let exe = self.eval.as_ref().context("block has no eval artifact")?;
         let mut inputs = self.param_literals(params)?;
         inputs.push(literal_f32(x, &self.info.in_shape)?);
@@ -298,6 +331,13 @@ pub fn load_all_blocks(engine: &Engine, manifest: &Manifest) -> Result<Vec<Block
         .iter()
         .map(|b| BlockRuntime::load(engine, b))
         .collect()
+}
+
+/// Build every block of a fully-native manifest — no engine, no PJRT.
+/// Errors if any block lacks a native op (mixed manifests must go
+/// through [`load_all_blocks`]).
+pub fn load_all_blocks_native(manifest: &Manifest) -> Result<Vec<BlockRuntime>> {
+    manifest.blocks.iter().map(BlockRuntime::load_native).collect()
 }
 
 /// Build the HostTensor for an input/label buffer given the manifest dtype.

@@ -1,0 +1,345 @@
+//! Built-in pure-Rust block ops for the deterministic scenario fixtures.
+//!
+//! The vendored `xla` crate is a stub (DESIGN.md §4), so the fault
+//! scenarios in `rust/tests/scenarios/` — which must run real
+//! forward/backward/SGD math to assert weight equality across recoveries
+//! — execute these native ops instead of HLO artifacts. A manifest block
+//! with `"native": "affine"` or `"native": "head"` is dispatched here by
+//! [`super::BlockRuntime`]; everything above the runtime (pipeline,
+//! replication, redistribution, coordinator) is byte-for-byte the same
+//! code that runs compiled models.
+//!
+//! Semantics (shapes from the block's manifest entry):
+//!
+//! * `affine` — `y = x ⊙ scale + bias` over `[batch, dim]`, params
+//!   `[scale(dim), bias(dim)]`. Gradients are exact; `grad_x` is emitted
+//!   only when the manifest says `has_gx`.
+//! * `head` — linear classifier + softmax cross-entropy over
+//!   `[batch, dim] → classes`, params `[w(dim·classes), b(classes)]`.
+//!
+//! All loops run in a fixed order over plain `f32` — on one machine two
+//! executions produce bit-identical results, which is the property the
+//! scenario determinism assertions rely on.
+
+use anyhow::{bail, Context, Result};
+
+use crate::manifest::BlockInfo;
+
+use super::{HeadStepOut, HostTensor};
+
+/// A natively-executable block.
+#[derive(Debug, Clone)]
+pub enum NativeBlock {
+    Affine { batch: usize, dim: usize, has_gx: bool },
+    Head { batch: usize, dim: usize, classes: usize },
+}
+
+fn shape2(info: &BlockInfo) -> Result<(usize, usize)> {
+    match info.in_shape[..] {
+        [b, d] => Ok((b, d)),
+        _ => bail!(
+            "native block {}: in_shape {:?} is not [batch, dim]",
+            info.index,
+            info.in_shape
+        ),
+    }
+}
+
+impl NativeBlock {
+    /// Build from a manifest entry whose `native` field is set.
+    pub fn from_info(info: &BlockInfo) -> Result<NativeBlock> {
+        let kind = info.native.as_deref().context("block has no native op")?;
+        let (batch, dim) = shape2(info)?;
+        match kind {
+            "affine" => {
+                Self::check_params(info, &[dim, dim])?;
+                Ok(NativeBlock::Affine { batch, dim, has_gx: info.has_gx })
+            }
+            "head" => {
+                let classes = match info.out_shape[..] {
+                    [b, c] if b == batch => c,
+                    _ => bail!(
+                        "native head {}: out_shape {:?} is not [batch, classes]",
+                        info.index,
+                        info.out_shape
+                    ),
+                };
+                Self::check_params(info, &[dim * classes, classes])?;
+                Ok(NativeBlock::Head { batch, dim, classes })
+            }
+            other => bail!("unknown native op {other:?} for block {}", info.index),
+        }
+    }
+
+    fn check_params(info: &BlockInfo, sizes: &[usize]) -> Result<()> {
+        if info.params.len() != sizes.len()
+            || info.params.iter().zip(sizes).any(|(p, &s)| p.size != s)
+        {
+            bail!(
+                "native block {}: param sizes {:?} do not match expected {:?}",
+                info.index,
+                info.params.iter().map(|p| p.size).collect::<Vec<_>>(),
+                sizes
+            );
+        }
+        Ok(())
+    }
+
+    fn params_of<'a, P: AsRef<[f32]>>(
+        &self,
+        params: &'a [P],
+        want: usize,
+    ) -> Result<Vec<&'a [f32]>> {
+        if params.len() != want {
+            bail!("native block: got {} param tensors, expected {want}", params.len());
+        }
+        Ok(params.iter().map(|p| p.as_ref()).collect())
+    }
+
+    /// Forward: (params, x) -> y.
+    pub fn forward<P: AsRef<[f32]>>(&self, params: &[P], x: &HostTensor) -> Result<Vec<f32>> {
+        let NativeBlock::Affine { batch, dim, .. } = self else {
+            bail!("native head has no standalone forward (use head_step/head_eval)");
+        };
+        let p = self.params_of(params, 2)?;
+        let (scale, bias) = (p[0], p[1]);
+        let x = x.as_f32()?;
+        let mut y = vec![0f32; batch * dim];
+        for b in 0..*batch {
+            for d in 0..*dim {
+                let i = b * dim + d;
+                y[i] = x[i] * scale[d] + bias[d];
+            }
+        }
+        Ok(y)
+    }
+
+    /// Backward: (params, x, gy) -> (grad_params, grad_x if has_gx).
+    pub fn backward<P: AsRef<[f32]>>(
+        &self,
+        params: &[P],
+        x: &HostTensor,
+        gy: &[f32],
+    ) -> Result<(Vec<Vec<f32>>, Option<Vec<f32>>)> {
+        let NativeBlock::Affine { batch, dim, has_gx } = self else {
+            bail!("native head has no standalone backward (use head_step)");
+        };
+        let p = self.params_of(params, 2)?;
+        let scale = p[0];
+        let x = x.as_f32()?;
+        let mut gs = vec![0f32; *dim];
+        let mut gb = vec![0f32; *dim];
+        for b in 0..*batch {
+            for d in 0..*dim {
+                let i = b * dim + d;
+                gs[d] += gy[i] * x[i];
+                gb[d] += gy[i];
+            }
+        }
+        let gx = has_gx.then(|| {
+            let mut gx = vec![0f32; batch * dim];
+            for b in 0..*batch {
+                for d in 0..*dim {
+                    let i = b * dim + d;
+                    gx[i] = gy[i] * scale[d];
+                }
+            }
+            gx
+        });
+        Ok((vec![gs, gb], gx))
+    }
+
+    /// Logits + per-sample softmax probabilities (shared by step/eval).
+    fn head_probs<P: AsRef<[f32]>>(
+        &self,
+        params: &[P],
+        x: &[f32],
+        labels: &HostTensor,
+    ) -> Result<(Vec<f32>, Vec<i32>, f32, f32)> {
+        let NativeBlock::Head { batch, dim, classes } = self else {
+            bail!("affine block has no head step");
+        };
+        let p = self.params_of(params, 2)?;
+        let (w, bias) = (p[0], p[1]);
+        let labels = labels.as_i32()?.to_vec();
+        if labels.len() != *batch {
+            bail!("native head: {} labels for batch {batch}", labels.len());
+        }
+        let mut probs = vec![0f32; batch * classes];
+        let mut loss = 0f64;
+        let mut ncorrect = 0f32;
+        for b in 0..*batch {
+            let logits = &mut probs[b * classes..(b + 1) * classes];
+            for (c, l) in logits.iter_mut().enumerate() {
+                let mut acc = bias[c];
+                for d in 0..*dim {
+                    acc += x[b * dim + d] * w[d * classes + c];
+                }
+                *l = acc;
+            }
+            let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut argmax = 0usize;
+            for (c, &l) in logits.iter().enumerate() {
+                if l > logits[argmax] {
+                    argmax = c;
+                }
+            }
+            let mut z = 0f32;
+            for l in logits.iter_mut() {
+                *l = (*l - max).exp();
+                z += *l;
+            }
+            for l in logits.iter_mut() {
+                *l /= z;
+            }
+            let y = labels[b] as usize;
+            if y >= *classes {
+                bail!("native head: label {y} out of range (classes {classes})");
+            }
+            loss -= (logits[y].max(1e-12) as f64).ln();
+            if argmax == y {
+                ncorrect += 1.0;
+            }
+        }
+        Ok((probs, labels, (loss / *batch as f64) as f32, ncorrect))
+    }
+
+    /// Fused head step: forward + loss + backward.
+    pub fn head_step<P: AsRef<[f32]>>(
+        &self,
+        params: &[P],
+        x: &[f32],
+        labels: &HostTensor,
+    ) -> Result<HeadStepOut> {
+        let (probs, labels, loss, ncorrect) = self.head_probs(params, x, labels)?;
+        let NativeBlock::Head { batch, dim, classes } = self else { unreachable!() };
+        let p = self.params_of(params, 2)?;
+        let w = p[0];
+        // dlogits = (softmax - onehot) / batch
+        let mut dlogits = probs;
+        for b in 0..*batch {
+            dlogits[b * classes + labels[b] as usize] -= 1.0;
+        }
+        let inv_b = 1.0 / *batch as f32;
+        for g in dlogits.iter_mut() {
+            *g *= inv_b;
+        }
+        let mut gw = vec![0f32; dim * classes];
+        let mut gb = vec![0f32; *classes];
+        let mut gx = vec![0f32; batch * dim];
+        for b in 0..*batch {
+            for c in 0..*classes {
+                let dl = dlogits[b * classes + c];
+                gb[c] += dl;
+                for d in 0..*dim {
+                    gw[d * classes + c] += x[b * dim + d] * dl;
+                    gx[b * dim + d] += dl * w[d * classes + c];
+                }
+            }
+        }
+        Ok(HeadStepOut { grad_params: vec![gw, gb], grad_input: gx, loss, ncorrect })
+    }
+
+    /// Head eval: (params, x, labels) -> (loss, ncorrect).
+    pub fn head_eval<P: AsRef<[f32]>>(
+        &self,
+        params: &[P],
+        x: &[f32],
+        labels: &HostTensor,
+    ) -> Result<(f32, f32)> {
+        let (_, _, loss, ncorrect) = self.head_probs(params, x, labels)?;
+        Ok((loss, ncorrect))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn affine(batch: usize, dim: usize, has_gx: bool) -> NativeBlock {
+        NativeBlock::Affine { batch, dim, has_gx }
+    }
+
+    fn head(batch: usize, dim: usize, classes: usize) -> NativeBlock {
+        NativeBlock::Head { batch, dim, classes }
+    }
+
+    #[test]
+    fn affine_forward_backward_exact() {
+        let nb = affine(2, 2, true);
+        let params = [vec![2.0f32, 3.0], vec![0.5, -0.5]];
+        let x = HostTensor::F32(vec![1.0f32, 2.0, 3.0, 4.0].into());
+        let y = nb.forward(&params, &x).unwrap();
+        assert_eq!(y, vec![2.5, 5.5, 6.5, 11.5]);
+        let gy = vec![1.0f32, 1.0, 1.0, 1.0];
+        let (grads, gx) = nb.backward(&params, &x, &gy).unwrap();
+        assert_eq!(grads[0], vec![4.0, 6.0]); // Σ x per column
+        assert_eq!(grads[1], vec![2.0, 2.0]); // Σ gy per column
+        assert_eq!(gx.unwrap(), vec![2.0, 3.0, 2.0, 3.0]); // gy * scale
+    }
+
+    #[test]
+    fn affine_without_gx_omits_input_grad() {
+        let nb = affine(1, 2, false);
+        let params = [vec![1.0f32, 1.0], vec![0.0, 0.0]];
+        let x = HostTensor::F32(vec![1.0f32, 2.0].into());
+        let (_, gx) = nb.backward(&params, &x, &[1.0, 1.0]).unwrap();
+        assert!(gx.is_none());
+    }
+
+    #[test]
+    fn head_loss_and_grad_sanity() {
+        let nb = head(2, 2, 2);
+        // identity-ish weights: class = argmax over x dims
+        let params = [vec![4.0f32, 0.0, 0.0, 4.0], vec![0.0, 0.0]];
+        let x = vec![1.0f32, 0.0, 0.0, 1.0]; // sample 0 -> class 0, sample 1 -> class 1
+        let labels = HostTensor::I32(vec![0, 1]);
+        let out = nb.head_step(&params, &x, &labels).unwrap();
+        assert_eq!(out.ncorrect, 2.0);
+        assert!(out.loss > 0.0 && out.loss < 0.1, "loss={}", out.loss);
+        let (eval_loss, eval_nc) = nb.head_eval(&params, &x, &labels).unwrap();
+        assert_eq!(eval_nc, 2.0);
+        assert!((eval_loss - out.loss).abs() < 1e-7);
+        // gradient of a correct confident prediction is small but nonzero
+        let gnorm: f32 = out.grad_params[0].iter().map(|g| g * g).sum::<f32>().sqrt();
+        assert!(gnorm > 0.0 && gnorm < 0.1, "gnorm={gnorm}");
+    }
+
+    #[test]
+    fn head_gradient_descends_loss() {
+        let nb = head(4, 3, 2);
+        let mut w = vec![0.01f32; 6];
+        let mut b = vec![0.0f32; 2];
+        let x: Vec<f32> = (0..12).map(|i| ((i % 5) as f32 - 2.0) * 0.3).collect();
+        let labels = HostTensor::I32(vec![0, 1, 1, 0]);
+        let params = [w.clone(), b.clone()];
+        let first = nb.head_step(&params, &x, &labels).unwrap();
+        for (wi, g) in w.iter_mut().zip(&first.grad_params[0]) {
+            *wi -= 0.5 * g;
+        }
+        for (bi, g) in b.iter_mut().zip(&first.grad_params[1]) {
+            *bi -= 0.5 * g;
+        }
+        let (after, _) = nb.head_eval(&[w, b], &x, &labels).unwrap();
+        assert!(after < first.loss, "loss did not decrease: {} -> {after}", first.loss);
+    }
+
+    #[test]
+    fn execution_is_bit_deterministic() {
+        let nb = head(3, 4, 3);
+        let params = [
+            (0..12).map(|i| (i as f32) * 0.1 - 0.5).collect::<Vec<f32>>(),
+            vec![0.1f32, -0.2, 0.3],
+        ];
+        let x: Vec<f32> = (0..12).map(|i| ((i * 7 % 11) as f32) * 0.13).collect();
+        let labels = HostTensor::I32(vec![2, 0, 1]);
+        let a = nb.head_step(&params, &x, &labels).unwrap();
+        let b = nb.head_step(&params, &x, &labels).unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        let bits = |v: &Vec<f32>| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.grad_input), bits(&b.grad_input));
+        for (ga, gb) in a.grad_params.iter().zip(&b.grad_params) {
+            assert_eq!(bits(ga), bits(gb));
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! The time seam: every timeout, backoff, deadline, and profiling
+//! measurement in the system goes through a [`Clock`] so that fault
+//! scenarios can run on a **virtual timeline** — scripted, reproducible,
+//! and instant — instead of wall time.
+//!
+//! Two implementations:
+//!
+//! * [`RealClock`] — monotonic wall time (a process-global epoch), real
+//!   sleeps. The default everywhere; production behavior is unchanged.
+//! * [`VirtualClock`] — an atomic nanosecond counter advanced explicitly
+//!   by the scenario runner ([`crate::sim::runner`]). `sleep` advances
+//!   the counter instead of blocking, so code written against the seam
+//!   (TCP backoff, the coordinator's pauses) runs instantly and
+//!   deterministically under simulation.
+//!
+//! Times are exchanged as [`Duration`]s since the clock's epoch rather
+//! than `std::time::Instant` — `Instant` cannot be fabricated, which is
+//! exactly what a virtual timeline needs to do.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
+
+/// A monotonic time source + sleep facility.
+pub trait Clock: Send + Sync + std::fmt::Debug {
+    /// Time elapsed since this clock's epoch.
+    fn now(&self) -> Duration;
+
+    /// Sleep for `d` (really, or by advancing virtual time).
+    fn sleep(&self, d: Duration);
+}
+
+/// Shared handle to a clock (cheaply cloneable, thread-safe).
+pub type SharedClock = Arc<dyn Clock>;
+
+/// The default clock: wall time against a process-global epoch.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RealClock;
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+impl Clock for RealClock {
+    fn now(&self) -> Duration {
+        epoch().elapsed()
+    }
+
+    fn sleep(&self, d: Duration) {
+        std::thread::sleep(d);
+    }
+}
+
+/// A shared [`RealClock`] handle.
+pub fn real_clock() -> SharedClock {
+    Arc::new(RealClock)
+}
+
+/// A scripted timeline: time only moves when the owner advances it.
+///
+/// `sleep` advances the clock by the requested duration — correct for
+/// the single-threaded discrete-event simulation that owns the clock
+/// (the sleeper IS the only actor, so its wait defines the new now).
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    ns: AtomicU64,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock::default()
+    }
+
+    /// Shared handle starting at t = 0.
+    pub fn shared() -> Arc<VirtualClock> {
+        Arc::new(VirtualClock::new())
+    }
+
+    /// Move time forward by `d`.
+    pub fn advance(&self, d: Duration) {
+        self.ns.fetch_add(d.as_nanos() as u64, Ordering::SeqCst);
+    }
+
+    /// Jump to an absolute time (must not move backwards).
+    pub fn set(&self, t: Duration) {
+        let target = t.as_nanos() as u64;
+        self.ns.fetch_max(target, Ordering::SeqCst);
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> Duration {
+        Duration::from_nanos(self.ns.load(Ordering::SeqCst))
+    }
+
+    fn sleep(&self, d: Duration) {
+        self.advance(d);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_clock_is_monotonic() {
+        let c = RealClock;
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn virtual_clock_only_moves_when_told() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now(), Duration::ZERO);
+        c.advance(Duration::from_millis(250));
+        assert_eq!(c.now(), Duration::from_millis(250));
+        // no wall time involved: a million virtual seconds are free
+        c.advance(Duration::from_secs(1_000_000));
+        assert_eq!(c.now(), Duration::from_secs(1_000_000) + Duration::from_millis(250));
+    }
+
+    #[test]
+    fn virtual_sleep_advances() {
+        let c = VirtualClock::new();
+        let t0 = Instant::now();
+        c.sleep(Duration::from_secs(3600));
+        assert!(t0.elapsed() < Duration::from_secs(1), "virtual sleep must not block");
+        assert_eq!(c.now(), Duration::from_secs(3600));
+    }
+
+    #[test]
+    fn set_never_rewinds() {
+        let c = VirtualClock::new();
+        c.set(Duration::from_millis(100));
+        c.set(Duration::from_millis(40));
+        assert_eq!(c.now(), Duration::from_millis(100));
+    }
+
+    #[test]
+    fn shared_handle_is_a_clock() {
+        let v = VirtualClock::shared();
+        let shared: SharedClock = v.clone();
+        v.advance(Duration::from_millis(7));
+        assert_eq!(shared.now(), Duration::from_millis(7));
+    }
+}

@@ -1,0 +1,173 @@
+//! Synthetic native-model fixtures for the scenario suite.
+//!
+//! Writes a complete model directory — `manifest.json` + seeded initial
+//! weights — whose blocks are the pure-Rust ops of
+//! [`crate::runtime::native`], so the full training stack runs with no
+//! PJRT backend and no `make artifacts`. Content is a pure function of
+//! the [`FixtureSpec`], so two materializations (or two runs against one
+//! directory) see identical bytes.
+//!
+//! Shape: `n_blocks - 1` affine blocks over `[batch, dim]` followed by a
+//! linear+softmax head over `classes`. Per-block flop counts are staggered
+//! so the partition DP has real structure to optimize over.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::manifest::Manifest;
+use crate::util::rng::Rng;
+
+/// Everything that determines a fixture's bytes.
+#[derive(Debug, Clone)]
+pub struct FixtureSpec {
+    /// Total blocks including the head (>= 2).
+    pub n_blocks: usize,
+    pub dim: usize,
+    pub classes: usize,
+    pub batch: usize,
+    pub seed: u64,
+}
+
+impl Default for FixtureSpec {
+    fn default() -> FixtureSpec {
+        FixtureSpec { n_blocks: 8, dim: 16, classes: 4, batch: 8, seed: 1 }
+    }
+}
+
+/// Flop cost of block `i` (staggered: 1x/2x/3x a base unit, head 2x).
+/// Referenced by both the manifest writer and tests that reason about
+/// expected partitions.
+pub fn block_flops(i: usize, n_blocks: usize) -> (u64, u64) {
+    const BASE: u64 = 500_000;
+    let fwd = if i + 1 == n_blocks { 2 * BASE } else { (1 + (i as u64 % 3)) * BASE };
+    (fwd, 2 * fwd)
+}
+
+fn write_f32_le(path: &Path, data: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for x in data {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    std::fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))
+}
+
+/// Write the fixture under `dir` and load it back as a [`Manifest`].
+/// Idempotent: re-materializing the same spec rewrites identical bytes.
+pub fn materialize(dir: &Path, spec: &FixtureSpec) -> Result<Manifest> {
+    assert!(spec.n_blocks >= 2, "need at least one affine block plus the head");
+    let init_dir = dir.join("init");
+    std::fs::create_dir_all(&init_dir)
+        .with_context(|| format!("creating {}", init_dir.display()))?;
+    let mut rng = Rng::new(spec.seed ^ 0xF1C7_0000);
+    let (b, d, c) = (spec.batch, spec.dim, spec.classes);
+
+    let mut blocks_json = Vec::new();
+    let mut param_count = 0u64;
+    for i in 0..spec.n_blocks {
+        let head = i + 1 == spec.n_blocks;
+        let mut block_rng = rng.fork(i as u64);
+        let (flops_fwd, flops_bwd) = block_flops(i, spec.n_blocks);
+        let (params, out_shape, native, kind) = if head {
+            let w: Vec<f32> =
+                (0..d * c).map(|_| (block_rng.normal() as f32) * 0.1).collect();
+            let bias = vec![0f32; c];
+            write_f32_le(&init_dir.join(format!("b{i}_w.bin")), &w)?;
+            write_f32_le(&init_dir.join(format!("b{i}_b.bin")), &bias)?;
+            let params = format!(
+                r#"[{{"shape": [{dc}], "size": {dc}, "init": "init/b{i}_w.bin"}},
+                    {{"shape": [{c}], "size": {c}, "init": "init/b{i}_b.bin"}}]"#,
+                dc = d * c,
+            );
+            (params, format!("[{b}, {c}]"), "head", "head")
+        } else {
+            let scale: Vec<f32> =
+                (0..d).map(|_| 1.0 + (block_rng.normal() as f32) * 0.05).collect();
+            let bias: Vec<f32> =
+                (0..d).map(|_| (block_rng.normal() as f32) * 0.02).collect();
+            write_f32_le(&init_dir.join(format!("b{i}_s.bin")), &scale)?;
+            write_f32_le(&init_dir.join(format!("b{i}_b.bin")), &bias)?;
+            let params = format!(
+                r#"[{{"shape": [{d}], "size": {d}, "init": "init/b{i}_s.bin"}},
+                    {{"shape": [{d}], "size": {d}, "init": "init/b{i}_b.bin"}}]"#,
+            );
+            (params, format!("[{b}, {d}]"), "affine", "block")
+        };
+        let param_elems = if head { d * c + c } else { 2 * d } as u64;
+        param_count += param_elems;
+        let out_bytes = if head { b * c * 4 } else { b * d * 4 };
+        blocks_json.push(format!(
+            r#"{{"index": {i}, "name": "{native}{i}", "kind": "{kind}", "native": "{native}",
+  "params": {params},
+  "in_shape": [{b}, {d}], "in_dtype": "f32", "out_shape": {out_shape},
+  "flops_fwd": {flops_fwd}, "flops_bwd": {flops_bwd},
+  "out_bytes": {out_bytes}, "param_bytes": {param_bytes},
+  "has_gx": {has_gx}}}"#,
+            param_bytes = param_elems * 4,
+            has_gx = i != 0,
+        ));
+    }
+
+    let manifest = format!(
+        r#"{{
+  "model": "sim-native-{seed}",
+  "batch_size": {b},
+  "input": {{"shape": [{b}, {d}], "dtype": "f32"}},
+  "labels": {{"shape": [{b}], "dtype": "i32"}},
+  "acc_denom": {b},
+  "param_count": {param_count},
+  "meta": {{"n_classes": {c}}},
+  "blocks": [
+{blocks}
+  ]
+}}"#,
+        seed = spec.seed,
+        blocks = blocks_json.join(",\n"),
+    );
+    std::fs::write(dir.join("manifest.json"), manifest)
+        .with_context(|| format!("writing {}/manifest.json", dir.display()))?;
+    Manifest::load(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::BlockKind;
+    use crate::runtime::load_all_blocks_native;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("ftpipehd-fixture-{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn materializes_and_loads_natively() {
+        let dir = tmp("load");
+        let spec = FixtureSpec::default();
+        let m = materialize(&dir, &spec).expect("materialize");
+        assert_eq!(m.n_blocks(), spec.n_blocks);
+        assert_eq!(m.head().kind, BlockKind::Head);
+        assert_eq!(m.n_classes, Some(spec.classes));
+        assert_eq!(m.batch_size, spec.batch);
+        let blocks = load_all_blocks_native(&m).expect("native blocks");
+        assert_eq!(blocks.len(), spec.n_blocks);
+        // init weights load with the declared shapes
+        for i in 0..m.n_blocks() {
+            let p = m.load_init_params(i).expect("init params");
+            assert_eq!(p.len(), 2);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rematerialization_is_byte_identical() {
+        let dir = tmp("bytes");
+        let spec = FixtureSpec { seed: 42, ..FixtureSpec::default() };
+        materialize(&dir, &spec).unwrap();
+        let first = std::fs::read(dir.join("manifest.json")).unwrap();
+        let w0 = std::fs::read(dir.join("init/b0_s.bin")).unwrap();
+        materialize(&dir, &spec).unwrap();
+        assert_eq!(first, std::fs::read(dir.join("manifest.json")).unwrap());
+        assert_eq!(w0, std::fs::read(dir.join("init/b0_s.bin")).unwrap());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,26 @@
+//! Deterministic scenario simulation (DESIGN.md §7).
+//!
+//! The paper's headline claims are about behavior under failure:
+//! multi-device failures mid-training, recovery via chain/central weight
+//! replication (§III-D/F), and dynamic re-partition under time-varying
+//! compute. This module makes those paths *testable in CI*: a virtual
+//! [`clock::Clock`], a synthetic natively-executable model
+//! ([`fixture`]), a declarative failure-scenario script ([`script`]),
+//! and a single-threaded discrete-event runner ([`runner`]) that drives
+//! the full `StageWorker` protocol stack — injection, 1F1B, replication,
+//! fault detection, probing, Algorithm-1 redistribution, commit/reset —
+//! over a bandwidth/latency-modeled virtual network.
+//!
+//! Two invocations of the same scenario produce **byte-identical event
+//! traces and bit-identical final weights**: everything runs on one
+//! thread, every queue is ordered, and all time comes from the virtual
+//! clock. The scenario suite lives in `rust/tests/scenarios/`.
+
+pub mod clock;
+pub mod fixture;
+pub mod runner;
+pub mod script;
+
+pub use clock::{real_clock, Clock, RealClock, SharedClock, VirtualClock};
+pub use runner::{run_scenario, RedistRecord, ScenarioOutcome};
+pub use script::{Action, Scenario, ScriptEvent, Trigger};

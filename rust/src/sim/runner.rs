@@ -1,0 +1,989 @@
+//! Deterministic discrete-event scenario runner.
+//!
+//! Drives the full `StageWorker` protocol stack — injection, async 1F1B,
+//! weight stashing/aggregation, chain+global replication, fault
+//! detection, probing, Algorithm-1 redistribution, commit/reset — for
+//! every device of a simulated cluster **on one thread over a virtual
+//! timeline**. The network is the same cost model as `net::sim::SimNet`
+//! (per-directed-link serialization, `latency + bytes/bandwidth`), but
+//! time is the scenario's [`VirtualClock`] instead of wall sleeps, and
+//! compute is priced from manifest flop counts instead of measured — so
+//! two invocations of one scenario produce byte-identical event traces
+//! and bit-identical final weights.
+//!
+//! The coordinator logic mirrors `coordinator::{central,recovery}` as an
+//! explicit state machine ([`Phase`]) instead of blocking loops, with one
+//! deliberate extension: a redistribution that stalls past
+//! `Scenario::redist_window` re-enters fault handling (re-probe, replan
+//! with the enlarged failure set) instead of aborting the run — that is
+//! what makes "a worker dies during an in-flight redistribution"
+//! a *recoverable* scripted scenario.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::DeviceConfig;
+use crate::data::SynthVision;
+use crate::device::SimDevice;
+use crate::fault::{renumber_worker_list, FaultDetector};
+use crate::manifest::Manifest;
+use crate::model::BlockParams;
+use crate::net::message::{DeviceId, Message, TrainInit};
+use crate::net::Transport;
+use crate::partition::{homogeneous_partition, optimal_partition, CostModel, Partition};
+use crate::pipeline::{CompletedBatch, ControlEvent, DataEvent, Event, StageWorker, StepKind};
+use crate::profile::{CapacityEstimator, ModelProfile};
+use crate::runtime::{load_all_blocks_native, HostTensor};
+use crate::sim::clock::{SharedClock, VirtualClock};
+use crate::sim::script::{Action, Scenario, Trigger};
+
+/// Safety valve against scripted livelocks: a scenario is a few hundred
+/// batches over a handful of devices (~tens of thousands of events).
+const MAX_EVENTS: u64 = 5_000_000;
+const MAX_RECOVERIES: usize = 50;
+
+// ---------------------------------------------------------------------
+// virtual network
+// ---------------------------------------------------------------------
+
+enum QueuedEv {
+    Deliver { from: DeviceId, to: DeviceId, msg: Message },
+    Wake { dev: DeviceId },
+    Script { idx: usize },
+    Revive { dev: DeviceId },
+}
+
+struct NetInner {
+    n: usize,
+    latency: Duration,
+    bw_bps: f64,
+    /// Per-device virtual time used to timestamp its sends (the runner
+    /// sets it to the device's compute-completion time before a step).
+    local_now: Vec<Duration>,
+    /// Directed link -> time it finishes its current transfer.
+    link_free: BTreeMap<(DeviceId, DeviceId), Duration>,
+    dead: Vec<bool>,
+    queue: BTreeMap<(Duration, u64), QueuedEv>,
+    seq: u64,
+    bytes_total: u64,
+    /// When Some(i), FetchWeights sends are recorded for redistribution i.
+    recording: Option<usize>,
+    fetch_log: Vec<(usize, DeviceId, DeviceId, Vec<usize>)>,
+}
+
+impl NetInner {
+    fn push(&mut self, at: Duration, ev: QueuedEv) {
+        let s = self.seq;
+        self.seq += 1;
+        self.queue.insert((at, s), ev);
+    }
+
+    fn send_from(&mut self, from: DeviceId, to: DeviceId, msg: Message) {
+        if self.dead[from] || self.dead[to] {
+            return; // dropped silently, like a crashed peer
+        }
+        let bytes = msg.byte_len() as u64;
+        self.bytes_total += bytes;
+        if let (Some(idx), Message::FetchWeights { blocks }) = (self.recording, &msg) {
+            self.fetch_log.push((idx, from, to, blocks.clone()));
+        }
+        let depart = self.local_now[from];
+        let free = self.link_free.get(&(from, to)).copied().unwrap_or(Duration::ZERO);
+        let transfer = Duration::from_secs_f64(bytes as f64 / self.bw_bps);
+        let arrive = depart.max(free) + self.latency + transfer;
+        self.link_free.insert((from, to), arrive);
+        self.push(arrive, QueuedEv::Deliver { from, to, msg });
+    }
+}
+
+/// One device's `Transport` into the virtual fabric. `recv_timeout`
+/// never blocks — the runner delivers messages by driving handlers
+/// directly, which is what makes the event order total and replayable.
+#[derive(Clone)]
+struct NetHandle {
+    id: DeviceId,
+    inner: Arc<Mutex<NetInner>>,
+}
+
+impl Transport for NetHandle {
+    fn my_id(&self) -> DeviceId {
+        self.id
+    }
+
+    fn send(&self, to: DeviceId, msg: Message) -> Result<()> {
+        self.inner.lock().unwrap().send_from(self.id, to, msg);
+        Ok(())
+    }
+
+    fn recv_timeout(&self, _timeout: Duration) -> Option<(DeviceId, Message)> {
+        None
+    }
+
+    fn n_devices(&self) -> usize {
+        self.inner.lock().unwrap().n
+    }
+}
+
+// ---------------------------------------------------------------------
+// outcome
+// ---------------------------------------------------------------------
+
+/// One redistribution as observed by the runner (fetch counts are
+/// asserted against [`crate::fault::plan_redistribution`] in the tests).
+#[derive(Debug, Clone)]
+pub struct RedistRecord {
+    pub reason: String,
+    /// Failed stage indices in the OLD worker list (empty for dynamic).
+    pub failed: Vec<usize>,
+    pub old_ranges: Partition,
+    pub new_ranges: Partition,
+    pub old_list: Vec<DeviceId>,
+    pub new_list: Vec<DeviceId>,
+    /// Every FetchWeights sent during this redistribution:
+    /// (requester, target, blocks).
+    pub fetches: Vec<(DeviceId, DeviceId, Vec<usize>)>,
+    pub committed_at_start: i64,
+}
+
+/// Everything a scenario run produces.
+pub struct ScenarioOutcome {
+    /// Deterministic event trace — byte-identical across runs of the
+    /// same scenario (losses are logged as f32 bit patterns).
+    pub trace: Vec<String>,
+    /// Final loss per batch id (a replayed batch overwrites its entry).
+    pub losses: BTreeMap<u64, f32>,
+    /// Final parameters of every block, gathered from the live devices.
+    pub final_weights: BTreeMap<usize, BlockParams>,
+    pub redists: Vec<RedistRecord>,
+    /// Fault-handler activations (probe rounds).
+    pub recoveries: usize,
+    pub virtual_ms: f64,
+    pub net_bytes: u64,
+}
+
+impl ScenarioOutcome {
+    /// Bit-exact weight comparison (NaN-safe: compares representations).
+    pub fn weights_bits(&self) -> Vec<(usize, Vec<Vec<u32>>)> {
+        self.final_weights
+            .iter()
+            .map(|(&b, bp)| {
+                (b, bp.0.iter().map(|t| t.iter().map(|x| x.to_bits()).collect()).collect())
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------
+// coordinator state machine
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Reason {
+    Fault,
+    Dynamic,
+}
+
+enum Phase {
+    Idle,
+    /// Probe round after a gradient timeout.
+    Probing { acks: BTreeMap<DeviceId, bool>, deadline: Duration },
+    /// Repartition broadcast out; waiting for FetchDone from `expect`.
+    Redistributing {
+        expect: BTreeSet<DeviceId>,
+        done: BTreeSet<DeviceId>,
+        deadline: Duration,
+        reason: Reason,
+    },
+    /// Quiescing in-flight batches before a dynamic re-partition.
+    Draining,
+}
+
+// ---------------------------------------------------------------------
+// the runner
+// ---------------------------------------------------------------------
+
+/// Run `scenario` against the (native) model at `model_dir`.
+pub fn run_scenario(scenario: &Scenario, model_dir: &Path) -> Result<ScenarioOutcome> {
+    scenario.validate()?;
+    let manifest = Arc::new(Manifest::load(model_dir)?);
+    let n = scenario.n_devices();
+    if manifest.n_blocks() < n {
+        bail!("{} blocks < {} devices", manifest.n_blocks(), n);
+    }
+    let clock = VirtualClock::shared();
+    let shared: SharedClock = clock.clone();
+    let net = Arc::new(Mutex::new(NetInner {
+        n,
+        latency: scenario.latency,
+        bw_bps: scenario.bandwidth_bps,
+        local_now: vec![Duration::ZERO; n],
+        link_free: BTreeMap::new(),
+        dead: vec![false; n],
+        queue: BTreeMap::new(),
+        seq: 0,
+        bytes_total: 0,
+        recording: None,
+        fetch_log: Vec::new(),
+    }));
+    let handles: Vec<NetHandle> =
+        (0..n).map(|id| NetHandle { id, inner: net.clone() }).collect();
+    let mut workers = Vec::with_capacity(n);
+    for d in 0..n {
+        let blocks = load_all_blocks_native(&manifest)?;
+        let cfg = DeviceConfig { capacity: scenario.capacities[d], ..DeviceConfig::default() };
+        let sim = SimDevice::with_clock(
+            cfg,
+            scenario.seed ^ (d as u64).wrapping_mul(0x9E3779B9),
+            shared.clone(),
+            Some(scenario.ns_per_flop),
+        );
+        let mut w = StageWorker::new(d, manifest.clone(), blocks, sim, None);
+        w.set_clock(shared.clone());
+        workers.push(w);
+    }
+    let dim: usize = manifest.input_shape.iter().skip(1).product();
+    let classes = manifest.n_classes.context("fixture manifest missing n_classes")?;
+    let runner = Runner {
+        sc: scenario,
+        manifest: manifest.clone(),
+        clock,
+        net,
+        handles,
+        busy_until: vec![Duration::ZERO; n],
+        inbox: (0..n).map(|_| VecDeque::new()).collect(),
+        dead: vec![false; n],
+        workers,
+        data: SynthVision::new(dim, classes, 0.5, scenario.seed, 0),
+        profile: ModelProfile::from_flops(&manifest, scenario.ns_per_flop),
+        estimator: CapacityEstimator::default(),
+        detector: FaultDetector::with_clock(scenario.fault_timeout, shared),
+        measured_bw: vec![0.0; n.saturating_sub(1)],
+        phase: Phase::Idle,
+        next_inject: 0,
+        inflight: 0,
+        completed: -1,
+        total: scenario.batches,
+        next_repart: scenario.repartition.map(|(first, _)| first),
+        losses: BTreeMap::new(),
+        trace: Vec::new(),
+        redists: Vec::new(),
+        recoveries: 0,
+        fired: vec![false; scenario.events.len()],
+        redist_count: 0,
+        events_processed: 0,
+    };
+    runner.run()
+}
+
+struct Runner<'a> {
+    sc: &'a Scenario,
+    manifest: Arc<Manifest>,
+    clock: Arc<VirtualClock>,
+    net: Arc<Mutex<NetInner>>,
+    handles: Vec<NetHandle>,
+    busy_until: Vec<Duration>,
+    inbox: Vec<VecDeque<(DeviceId, Message)>>,
+    dead: Vec<bool>,
+    workers: Vec<StageWorker>,
+    data: SynthVision,
+    profile: ModelProfile,
+    estimator: CapacityEstimator,
+    detector: FaultDetector,
+    measured_bw: Vec<f64>,
+    phase: Phase,
+    next_inject: u64,
+    inflight: usize,
+    completed: i64,
+    total: u64,
+    next_repart: Option<u64>,
+    losses: BTreeMap<u64, f32>,
+    trace: Vec<String>,
+    redists: Vec<RedistRecord>,
+    recoveries: usize,
+    fired: Vec<bool>,
+    redist_count: usize,
+    events_processed: u64,
+}
+
+impl Runner<'_> {
+    // -------------------------------------------------- infrastructure
+
+    fn trace_line(&mut self, at: Duration, msg: impl Into<String>) {
+        self.trace.push(format!("[{:>13}ns] {}", at.as_nanos(), msg.into()));
+    }
+
+    fn set_local(&self, d: DeviceId, t: Duration) {
+        self.net.lock().unwrap().local_now[d] = t;
+    }
+
+    fn wake(&self, d: DeviceId, at: Duration) {
+        self.net.lock().unwrap().push(at, QueuedEv::Wake { dev: d });
+    }
+
+    fn schedule(&self, at: Duration, ev: QueuedEv) {
+        self.net.lock().unwrap().push(at, ev);
+    }
+
+    fn pop_event(&self) -> Option<(Duration, QueuedEv)> {
+        self.net.lock().unwrap().queue.pop_first().map(|((at, _), ev)| (at, ev))
+    }
+
+    fn peers_of_central(&self) -> Vec<DeviceId> {
+        self.workers[0].worker_list.iter().copied().filter(|&d| d != 0).collect()
+    }
+
+    // -------------------------------------------------- top level
+
+    fn run(mut self) -> Result<ScenarioOutcome> {
+        self.bootstrap()?;
+        loop {
+            if self.completed + 1 >= self.total as i64
+                && self.inflight == 0
+                && matches!(self.phase, Phase::Idle)
+            {
+                break;
+            }
+            let Some((at, ev)) = self.pop_event() else {
+                bail!(
+                    "scenario {:?} deadlocked: event queue empty at batch {}/{} (phase lost)",
+                    self.sc.name,
+                    self.completed + 1,
+                    self.total
+                );
+            };
+            self.events_processed += 1;
+            if self.events_processed > MAX_EVENTS {
+                bail!("scenario {:?} exceeded {MAX_EVENTS} events", self.sc.name);
+            }
+            self.clock.set(at);
+            match ev {
+                QueuedEv::Deliver { from, to, msg } => {
+                    let dead = {
+                        let net = self.net.lock().unwrap();
+                        net.dead[from] || net.dead[to]
+                    };
+                    if !dead {
+                        self.inbox[to].push_back((from, msg));
+                        self.wake(to, at);
+                    }
+                }
+                QueuedEv::Wake { dev } => self.drive(dev, at)?,
+                QueuedEv::Script { idx } => self.fire_action(idx, at)?,
+                QueuedEv::Revive { dev } => {
+                    self.dead[dev] = false;
+                    self.net.lock().unwrap().dead[dev] = false;
+                    self.busy_until[dev] = at;
+                    self.trace_line(at, format!("script: revive device {dev}"));
+                }
+            }
+        }
+        self.finish()
+    }
+
+    fn finish(mut self) -> Result<ScenarioOutcome> {
+        let end = self.clock.now();
+        self.trace_line(end, "run complete");
+        // gather final weights straight from the surviving devices
+        let mut final_weights: BTreeMap<usize, BlockParams> = BTreeMap::new();
+        for &dev in &self.workers[0].worker_list.clone() {
+            for (&b, bp) in &self.workers[dev].params.blocks {
+                final_weights.insert(b, bp.clone());
+            }
+        }
+        if final_weights.len() != self.manifest.n_blocks() {
+            bail!(
+                "final pipeline covers {}/{} blocks",
+                final_weights.len(),
+                self.manifest.n_blocks()
+            );
+        }
+        // attach the recorded fetches to their redistributions
+        let (net_bytes, fetch_log) = {
+            let net = self.net.lock().unwrap();
+            (net.bytes_total, net.fetch_log.clone())
+        };
+        let mut redists = self.redists;
+        for (idx, from, to, blocks) in fetch_log {
+            if let Some(r) = redists.get_mut(idx) {
+                r.fetches.push((from, to, blocks));
+            }
+        }
+        Ok(ScenarioOutcome {
+            trace: self.trace,
+            losses: self.losses,
+            final_weights,
+            redists,
+            recoveries: self.recoveries,
+            virtual_ms: end.as_secs_f64() * 1e3,
+            net_bytes,
+        })
+    }
+
+    // -------------------------------------------------- bootstrap
+
+    fn train_init(&self, ranges: Partition, worker_list: Vec<DeviceId>, status: u8) -> TrainInit {
+        TrainInit {
+            committed_forward: -1,
+            committed_backward: -1,
+            lr: self.sc.lr,
+            momentum: self.sc.momentum,
+            weight_decay: self.sc.weight_decay,
+            epochs: 1,
+            batches_per_epoch: self.total,
+            ranges,
+            worker_list,
+            agg_k: self.sc.agg_k,
+            chain_every: self.sc.chain_every,
+            global_every: self.sc.global_every,
+            status,
+        }
+    }
+
+    fn bootstrap(&mut self) -> Result<()> {
+        let n = self.sc.n_devices();
+        let init_cm = CostModel {
+            t0_ms: self.profile.t0_ms.clone(),
+            out_bytes: self.profile.out_bytes.clone(),
+            capacities: vec![1.0; n],
+            bandwidth_bps: vec![self.sc.bandwidth_bps; n - 1],
+        };
+        let (init_ranges, _) = homogeneous_partition(&init_cm);
+        let worker_list: Vec<DeviceId> = (0..n).collect();
+        let ti = self.train_init(init_ranges.clone(), worker_list, 0);
+        let h = self.handles[0].clone();
+        self.set_local(0, Duration::ZERO);
+        for d in 1..n {
+            h.send(d, Message::InitState(ti.clone()))?;
+        }
+        self.workers[0].apply_init(&ti)?;
+        self.workers[0].measure_bandwidth(&h)?;
+        self.trace_line(Duration::ZERO, format!("init partition {init_ranges:?}"));
+        for (idx, ev) in self.sc.events.iter().enumerate() {
+            if let Trigger::At(t) = ev.at {
+                self.schedule(t, QueuedEv::Script { idx });
+            }
+        }
+        self.wake(0, Duration::from_nanos(1));
+        Ok(())
+    }
+
+    // -------------------------------------------------- device driving
+
+    fn drive(&mut self, d: DeviceId, t: Duration) -> Result<()> {
+        if self.dead[d] {
+            self.inbox[d].clear();
+            return Ok(());
+        }
+        if t < self.busy_until[d] {
+            let at = self.busy_until[d];
+            self.wake(d, at);
+            return Ok(());
+        }
+        self.set_local(d, t);
+        let h = self.handles[d].clone();
+        while let Some((from, msg)) = self.inbox[d].pop_front() {
+            if d == 0 {
+                self.central_message(from, msg)?;
+            } else {
+                self.workers[d].handle_message(&h, from, msg)?;
+            }
+        }
+        if d == 0 {
+            self.central_checks(t)?;
+            // 1F1B at the coordinator: a queued backward beats injection
+            let prefer_bwd = matches!(
+                self.workers[0].next_step_kind(),
+                Some(StepKind::Backward { .. })
+            );
+            if !prefer_bwd && self.can_inject() {
+                return self.inject(t);
+            }
+        }
+        if let Some(kind) = self.workers[d].next_step_kind() {
+            let flops = self.workers[d].step_flops(&kind);
+            let cost = self.workers[d]
+                .sim
+                .modeled_cost(flops)
+                .unwrap_or(Duration::from_micros(1));
+            let done = t + cost;
+            self.busy_until[d] = done;
+            self.set_local(d, done);
+            let (_ran, cb) = self.workers[d].pump_completed(&h)?;
+            if let Some(cb) = cb {
+                self.on_complete(cb, done)?;
+            }
+            self.wake(d, done);
+        }
+        Ok(())
+    }
+
+    fn can_inject(&self) -> bool {
+        matches!(self.phase, Phase::Idle)
+            && self.workers[0].initialized
+            && self.workers[0].status == 0
+            && self.inflight < self.sc.inflight
+            && self.next_inject < self.total
+    }
+
+    fn inject(&mut self, t: Duration) -> Result<()> {
+        let batch = self.next_inject;
+        let data = self.data.batch(0, batch, self.manifest.batch_size);
+        let h = self.handles[0].clone();
+        let last = *self.workers[0].worker_list.last().unwrap();
+        self.set_local(0, t);
+        let labels = Message::Labels { batch, is_eval: false, data: data.labels.clone() };
+        if last == 0 {
+            self.workers[0].handle_message(&h, 0, labels)?;
+        } else {
+            h.send(last, labels)?;
+        }
+        // price + charge the stage-0 forward
+        let kind = StepKind::Forward { batch, is_eval: false };
+        let flops = self.workers[0].step_flops(&kind);
+        let cost = self.workers[0]
+            .sim
+            .modeled_cost(flops)
+            .unwrap_or(Duration::from_micros(1));
+        let done = t + cost;
+        self.busy_until[0] = done;
+        self.set_local(0, done);
+        let version = self.workers[0].version;
+        let x = HostTensor::F32(data.x_f32.into());
+        self.detector.arm(batch);
+        let cb = self.workers[0].forward_train(&h, batch, version, x)?;
+        self.trace_line(t, format!("inject batch={batch}"));
+        self.inflight += 1;
+        self.next_inject += 1;
+        if let Some(cb) = cb {
+            self.on_complete(cb, done)?;
+        }
+        self.wake(0, done);
+        // guarantee the timeout is observed even under total silence
+        self.wake(0, t + self.detector.timeout() + Duration::from_millis(1));
+        Ok(())
+    }
+
+    fn on_complete(&mut self, cb: CompletedBatch, at: Duration) -> Result<()> {
+        self.detector.disarm(cb.batch);
+        self.inflight = self.inflight.saturating_sub(1);
+        self.completed = self.completed.max(cb.batch as i64);
+        for r in &cb.reports {
+            self.estimator.ingest(r);
+        }
+        self.trace_line(
+            at,
+            format!("complete batch={} loss_bits={:08x}", cb.batch, cb.loss.to_bits()),
+        );
+        self.losses.insert(cb.batch, cb.loss);
+        self.check_batch_triggers(at)?;
+        let repart_due = matches!(self.phase, Phase::Idle)
+            && self.next_repart.is_some_and(|next| self.completed >= next as i64);
+        if repart_due {
+            let next = self.next_repart.unwrap();
+            self.trace_line(at, format!("drain for scheduled repartition @{next}"));
+            self.phase = Phase::Draining;
+        }
+        Ok(())
+    }
+
+    // -------------------------------------------------- central node
+
+    fn central_message(&mut self, from: DeviceId, msg: Message) -> Result<()> {
+        let h = self.handles[0].clone();
+        match Event::from_message(from, msg) {
+            Event::Control(ControlEvent::ProbeAck { id, fresh }) => {
+                if let Phase::Probing { acks, .. } = &mut self.phase {
+                    acks.insert(id, fresh);
+                }
+            }
+            Event::Control(ControlEvent::FetchDone { id }) => {
+                if let Phase::Redistributing { done, .. } = &mut self.phase {
+                    done.insert(id);
+                }
+            }
+            Event::Control(ControlEvent::BwReport { stage, bps }) => {
+                if stage < self.measured_bw.len() {
+                    self.measured_bw[stage] = bps;
+                }
+            }
+            ev => {
+                // "the central node received the backward gradients of
+                // that batch": the timer clears on arrival — the compute
+                // step it still has to run must not race the timeout
+                if let Event::Data(DataEvent::Backward { batch, .. }) = &ev {
+                    if self.workers[0].status == 0 {
+                        self.detector.disarm(*batch);
+                    }
+                }
+                self.workers[0].on_event(&h, ev)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn central_checks(&mut self, t: Duration) -> Result<()> {
+        enum Todo {
+            Nothing,
+            StartRecovery(u64),
+            FinishProbe,
+            Commit,
+            RedistTimeout,
+            DynamicRepart,
+        }
+        let todo = match &self.phase {
+            Phase::Idle | Phase::Draining => match self.detector.overdue() {
+                Some(b) => Todo::StartRecovery(b),
+                None if matches!(self.phase, Phase::Draining) && self.inflight == 0 => {
+                    Todo::DynamicRepart
+                }
+                None => Todo::Nothing,
+            },
+            Phase::Probing { acks, deadline } => {
+                let all = acks.len() >= self.peers_of_central().len();
+                if all || t >= *deadline {
+                    Todo::FinishProbe
+                } else {
+                    Todo::Nothing
+                }
+            }
+            Phase::Redistributing { expect, done, deadline, .. } => {
+                if done.is_superset(expect) && self.workers[0].fetch_done() {
+                    Todo::Commit
+                } else if t >= *deadline {
+                    Todo::RedistTimeout
+                } else {
+                    Todo::Nothing
+                }
+            }
+        };
+        match todo {
+            Todo::Nothing => Ok(()),
+            Todo::StartRecovery(b) => self.start_recovery(b, t),
+            Todo::FinishProbe => {
+                let Phase::Probing { acks, .. } =
+                    std::mem::replace(&mut self.phase, Phase::Idle)
+                else {
+                    unreachable!()
+                };
+                self.finish_probe(acks, t)
+            }
+            Todo::Commit => self.commit_redistribution(t),
+            Todo::RedistTimeout => {
+                self.trace_line(t, "redistribution stalled; re-probing");
+                self.net.lock().unwrap().recording = None;
+                self.phase = Phase::Idle;
+                // the overdue batch (if any) restarts the fault handler;
+                // otherwise re-probe on the committed frontier
+                let b = self.detector.overdue().unwrap_or((self.completed + 1).max(0) as u64);
+                self.start_recovery(b, t)
+            }
+            Todo::DynamicRepart => self.run_dynamic_repartition(t),
+        }
+    }
+
+    fn start_recovery(&mut self, overdue: u64, t: Duration) -> Result<()> {
+        self.recoveries += 1;
+        if self.recoveries > MAX_RECOVERIES {
+            bail!("scenario {:?}: more than {MAX_RECOVERIES} recoveries", self.sc.name);
+        }
+        self.trace_line(t, format!("fault detected: batch {overdue} overdue; probing"));
+        self.workers[0].status = 1;
+        let h = self.handles[0].clone();
+        self.set_local(0, t);
+        for d in self.peers_of_central() {
+            h.send(d, Message::Probe)?;
+        }
+        let deadline = t + self.sc.probe_window;
+        self.phase = Phase::Probing { acks: BTreeMap::new(), deadline };
+        self.wake(0, deadline + Duration::from_nanos(1));
+        Ok(())
+    }
+
+    fn finish_probe(&mut self, acks: BTreeMap<DeviceId, bool>, t: Duration) -> Result<()> {
+        let worker_list = self.workers[0].worker_list.clone();
+        let peers = self.peers_of_central();
+        let dead: Vec<DeviceId> =
+            peers.iter().copied().filter(|d| !acks.contains_key(d)).collect();
+        let fresh: Vec<DeviceId> =
+            acks.iter().filter(|(_, &f)| f).map(|(&d, _)| d).collect();
+        let committed = self.completed;
+        let h = self.handles[0].clone();
+        self.set_local(0, t);
+        if dead.is_empty() && fresh.is_empty() {
+            // CASE 1: everyone healthy — restart from the failed batch
+            self.trace_line(t, format!("fault case 1: restart from batch {}", committed + 1));
+            self.reset_all(committed, t)?;
+            self.phase = Phase::Idle;
+        } else if dead.is_empty() {
+            // CASE 2: restarted worker(s) — restore from replicas
+            self.trace_line(t, format!("fault case 2: restore {fresh:?}"));
+            let ranges = self.workers[0].ranges.clone();
+            let ti = self.train_init(ranges.clone(), worker_list.clone(), 1);
+            for &d in &fresh {
+                h.send(d, Message::InitState(ti.clone()))?;
+            }
+            self.begin_redistribution(
+                ranges,
+                worker_list,
+                vec![],
+                Reason::Fault,
+                "fault case 2",
+                t,
+            )?;
+        } else {
+            // CASE 3: dead worker(s) — renumber, re-partition, redistribute
+            let failed: Vec<usize> = worker_list
+                .iter()
+                .enumerate()
+                .filter(|(_, d)| dead.contains(d))
+                .map(|(s, _)| s)
+                .collect();
+            self.trace_line(t, format!("fault case 3: dead stages {failed:?}"));
+            let new_list = renumber_worker_list(&worker_list, &failed);
+            let old_ranges = self.workers[0].ranges.clone();
+            let alive_old: Vec<(usize, usize)> = old_ranges
+                .iter()
+                .enumerate()
+                .filter(|(s, _)| !failed.contains(s))
+                .map(|(_, &r)| r)
+                .collect();
+            let cm = self.cost_model(&new_list, &alive_old);
+            let (new_ranges, _) = optimal_partition(&cm);
+            for &d in &dead {
+                self.estimator.clear_device(d);
+            }
+            self.begin_redistribution(
+                new_ranges,
+                new_list,
+                failed,
+                Reason::Fault,
+                "fault case 3",
+                t,
+            )?;
+        }
+        Ok(())
+    }
+
+    fn begin_redistribution(
+        &mut self,
+        ranges: Partition,
+        list: Vec<DeviceId>,
+        failed: Vec<usize>,
+        reason: Reason,
+        label: &str,
+        t: Duration,
+    ) -> Result<()> {
+        let idx = self.redists.len();
+        self.redists.push(RedistRecord {
+            reason: label.to_string(),
+            failed: failed.clone(),
+            old_ranges: self.workers[0].ranges.clone(),
+            new_ranges: ranges.clone(),
+            old_list: self.workers[0].worker_list.clone(),
+            new_list: list.clone(),
+            fetches: Vec::new(),
+            committed_at_start: self.completed,
+        });
+        self.trace_line(
+            t,
+            format!(
+                "redistribution #{} ({label}): {:?} -> {ranges:?}",
+                idx + 1,
+                self.redists[idx].old_ranges
+            ),
+        );
+        self.net.lock().unwrap().recording = Some(idx);
+        let h = self.handles[0].clone();
+        self.set_local(0, t);
+        let peers: Vec<DeviceId> = list.iter().copied().filter(|&d| d != 0).collect();
+        for &d in &peers {
+            h.send(
+                d,
+                Message::Repartition {
+                    ranges: ranges.clone(),
+                    worker_list: list.clone(),
+                    failed: failed.clone(),
+                },
+            )?;
+        }
+        self.workers[0].begin_repartition(&h, ranges, list, failed)?;
+        let deadline = t + self.sc.redist_window;
+        self.phase = Phase::Redistributing {
+            expect: peers.into_iter().collect(),
+            done: BTreeSet::new(),
+            deadline,
+            reason,
+        };
+        self.wake(0, deadline + Duration::from_nanos(1));
+        self.redist_count += 1;
+        self.check_redist_triggers(t)?;
+        Ok(())
+    }
+
+    fn commit_redistribution(&mut self, t: Duration) -> Result<()> {
+        let Phase::Redistributing { expect, reason, .. } =
+            std::mem::replace(&mut self.phase, Phase::Idle)
+        else {
+            unreachable!()
+        };
+        self.net.lock().unwrap().recording = None;
+        let h = self.handles[0].clone();
+        self.set_local(0, t);
+        for &d in &expect {
+            h.send(d, Message::Commit)?;
+        }
+        self.workers[0].apply_commit()?;
+        self.trace_line(
+            t,
+            format!(
+                "commit: list {:?} ranges {:?}",
+                self.workers[0].worker_list, self.workers[0].ranges
+            ),
+        );
+        match reason {
+            Reason::Fault => self.reset_all(self.completed, t)?,
+            Reason::Dynamic => self.advance_repart_schedule(),
+        }
+        self.wake(0, t + Duration::from_nanos(1));
+        Ok(())
+    }
+
+    fn reset_all(&mut self, committed: i64, t: Duration) -> Result<()> {
+        let h = self.handles[0].clone();
+        self.set_local(0, t);
+        for d in self.peers_of_central() {
+            h.send(d, Message::Reset { committed })?;
+        }
+        self.workers[0].apply_reset(committed);
+        self.detector.clear();
+        self.inflight = 0;
+        self.next_inject = (committed + 1) as u64;
+        self.trace_line(t, format!("reset: resume from batch {}", committed + 1));
+        self.wake(0, t + Duration::from_nanos(1));
+        Ok(())
+    }
+
+    fn advance_repart_schedule(&mut self) {
+        self.next_repart = match (self.next_repart, self.sc.repartition) {
+            (Some(at), Some((_, every))) if every > 0 => Some(at + every),
+            _ => None,
+        };
+    }
+
+    fn run_dynamic_repartition(&mut self, t: Duration) -> Result<()> {
+        let list = self.workers[0].worker_list.clone();
+        let old_ranges = self.workers[0].ranges.clone();
+        let cm = self.cost_model(&list, &old_ranges);
+        let (new_ranges, cost) = optimal_partition(&cm);
+        let old_cost = cm.cost(&old_ranges);
+        self.trace_line(
+            t,
+            format!("repartition check: caps {:?} -> {new_ranges:?} ({cost:.3}ms)", cm.capacities),
+        );
+        // hysteresis: moving weights has a real cost, so only rebalance
+        // for a material (>1%) bottleneck improvement — this also keeps
+        // float-epsilon capacity jitter from flipping DP tie-breaks
+        if new_ranges == old_ranges || cost > old_cost * 0.99 {
+            self.phase = Phase::Idle;
+            self.advance_repart_schedule();
+            self.wake(0, t + Duration::from_nanos(1));
+            return Ok(());
+        }
+        self.begin_redistribution(new_ranges, list, vec![], Reason::Dynamic, "dynamic", t)
+    }
+
+    fn cost_model(&self, list: &[DeviceId], old_ranges: &[(usize, usize)]) -> CostModel {
+        let central_ratio = match (self.workers[0].avg_exec_ms(), self.workers[0].my_range()) {
+            (Some(avg), Some((lo, hi))) => {
+                let base: f64 = self.profile.t0_ms[lo..=hi].iter().sum();
+                if base > 0.0 {
+                    avg / base
+                } else {
+                    1.0
+                }
+            }
+            _ => 1.0,
+        };
+        let bw: Vec<f64> = (0..list.len().saturating_sub(1))
+            .map(|l| {
+                let m = self.measured_bw.get(l).copied().unwrap_or(0.0);
+                if m > 0.0 {
+                    m
+                } else {
+                    self.sc.bandwidth_bps
+                }
+            })
+            .collect();
+        let caps =
+            self.estimator.capacities(list, old_ranges, &self.profile.t0_ms, central_ratio);
+        CostModel {
+            t0_ms: self.profile.t0_ms.clone(),
+            out_bytes: self.profile.out_bytes.clone(),
+            capacities: caps,
+            bandwidth_bps: bw,
+        }
+    }
+
+    // -------------------------------------------------- script events
+
+    fn check_batch_triggers(&mut self, t: Duration) -> Result<()> {
+        for idx in 0..self.sc.events.len() {
+            if self.fired[idx] {
+                continue;
+            }
+            if let Trigger::BatchDone(b) = self.sc.events[idx].at {
+                if self.completed >= b as i64 {
+                    self.fire_action(idx, t)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn check_redist_triggers(&mut self, t: Duration) -> Result<()> {
+        for idx in 0..self.sc.events.len() {
+            if self.fired[idx] {
+                continue;
+            }
+            if let Trigger::RedistributionStart(n) = self.sc.events[idx].at {
+                if self.redist_count >= n {
+                    self.fire_action(idx, t)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn fire_action(&mut self, idx: usize, t: Duration) -> Result<()> {
+        if self.fired[idx] {
+            return Ok(());
+        }
+        self.fired[idx] = true;
+        match self.sc.events[idx].action.clone() {
+            Action::Kill { device, revive_after } => {
+                self.trace_line(t, format!("script: kill device {device}"));
+                self.kill(device, t);
+                if let Some(delay) = revive_after {
+                    self.schedule(t + delay, QueuedEv::Revive { dev: device });
+                }
+            }
+            Action::SetCapacity { device, capacity } => {
+                self.trace_line(t, format!("script: device {device} capacity -> {capacity}"));
+                self.workers[device].sim.cfg.capacity = capacity;
+            }
+        }
+        Ok(())
+    }
+
+    fn kill(&mut self, device: DeviceId, t: Duration) {
+        self.dead[device] = true;
+        self.net.lock().unwrap().dead[device] = true;
+        self.workers[device].wipe_state();
+        self.inbox[device].clear();
+        self.busy_until[device] = t;
+    }
+}

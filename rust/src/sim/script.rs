@@ -1,0 +1,163 @@
+//! Declarative failure-scenario scripts.
+//!
+//! A [`Scenario`] is everything the deterministic runner needs: cluster
+//! shape, training hyper-parameters, the virtual network/compute model,
+//! and a list of [`ScriptEvent`]s — "kill worker 2 when batch 40
+//! completes", "slow worker 1 by 10x at t=2s", "kill another worker the
+//! moment redistribution #1 starts". Triggers are expressed against
+//! *protocol state* (batches completed, redistributions started) or
+//! virtual time, never wall time, so a script means the same thing on
+//! every machine.
+//!
+//! See DESIGN.md §7 for how to add a new scenario.
+
+use std::time::Duration;
+
+use crate::net::message::DeviceId;
+
+/// When a scripted action fires.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Trigger {
+    /// When batch `b` completes at the central node (before the next
+    /// injection — the pipeline quiesces at this batch when inflight=1).
+    BatchDone(u64),
+    /// At an absolute virtual time.
+    At(Duration),
+    /// The moment the `n`-th redistribution (1-based) begins — i.e. the
+    /// `Repartition` broadcast and `FetchWeights` requests are already
+    /// in flight. This is the "failure during an in-flight
+    /// redistribution" hook.
+    RedistributionStart(usize),
+}
+
+/// What happens when a trigger fires.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    /// Kill a worker (state wiped, traffic dropped both ways). With
+    /// `revive_after`, the device comes back that much later with empty
+    /// state — the paper's case-2 "restarts as soon as it failed".
+    Kill { device: DeviceId, revive_after: Option<Duration> },
+    /// Change a device's capacity factor (e.g. 10.0 = now 10x slower) —
+    /// drives the dynamic re-partition path.
+    SetCapacity { device: DeviceId, capacity: f64 },
+}
+
+#[derive(Debug, Clone)]
+pub struct ScriptEvent {
+    pub at: Trigger,
+    pub action: Action,
+}
+
+/// A complete scenario: deterministic given these fields + the fixture.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    /// Capacity factor per device; index 0 is the central node (1.0).
+    pub capacities: Vec<f64>,
+    /// Total training batches to complete.
+    pub batches: u64,
+    pub seed: u64,
+
+    // --- training hyper-parameters ---
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    /// Max in-flight batches (1 = fully serialized, quiesces between
+    /// batches — the setting under which recovery is *exact*).
+    pub inflight: usize,
+    /// Weight aggregation interval factor (0 disables).
+    pub agg_k: u32,
+    /// Chain/global replication periods in batches (0 disables).
+    pub chain_every: u64,
+    pub global_every: u64,
+
+    // --- schedules ---
+    /// Dynamic re-partition: (first at batch, then every) — None disables.
+    pub repartition: Option<(u64, u64)>,
+    /// Central-node gradient timeout (virtual).
+    pub fault_timeout: Duration,
+    /// How long the coordinator waits for probe acks (virtual).
+    pub probe_window: Duration,
+    /// How long a redistribution may stall before re-probing (virtual) —
+    /// this is what makes a mid-redistribution failure recoverable.
+    pub redist_window: Duration,
+
+    // --- virtual network + compute model ---
+    pub bandwidth_bps: f64,
+    pub latency: Duration,
+    /// Modeled compute cost; per-batch stage time = flops × this × C_i.
+    pub ns_per_flop: f64,
+
+    pub events: Vec<ScriptEvent>,
+}
+
+impl Scenario {
+    /// A conservative base: 3 devices, serialized pipeline, replicate
+    /// every batch, momentum off — the configuration under which
+    /// recovery is mathematically exact (see `rust/tests/scenarios/`).
+    pub fn exact_recovery(name: &str, n_devices: usize, batches: u64) -> Scenario {
+        Scenario {
+            name: name.to_string(),
+            capacities: vec![1.0; n_devices],
+            batches,
+            seed: 7,
+            lr: 0.05,
+            momentum: 0.0,
+            weight_decay: 0.0,
+            inflight: 1,
+            agg_k: 0,
+            chain_every: 1,
+            global_every: 1,
+            repartition: None,
+            fault_timeout: Duration::from_millis(200),
+            probe_window: Duration::from_millis(50),
+            redist_window: Duration::from_secs(2),
+            bandwidth_bps: 1e8,
+            latency: Duration::from_micros(100),
+            ns_per_flop: 1.0,
+            events: vec![],
+        }
+    }
+
+    /// A pipelined base (inflight = n_stages, momentum on, aggregation
+    /// on): realistic async-1F1B behavior; recovery is asserted for
+    /// continuity + determinism rather than exact weight equality.
+    pub fn pipelined(name: &str, n_devices: usize, batches: u64) -> Scenario {
+        Scenario {
+            momentum: 0.9,
+            weight_decay: 4e-5,
+            inflight: n_devices,
+            agg_k: 4,
+            chain_every: 5,
+            global_every: 10,
+            ..Scenario::exact_recovery(name, n_devices, batches)
+        }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.capacities.len()
+    }
+
+    pub fn with_events(mut self, events: Vec<ScriptEvent>) -> Scenario {
+        self.events = events;
+        self
+    }
+
+    /// Sanity checks the runner relies on.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n_devices() >= 2, "scenarios need at least 2 devices");
+        anyhow::ensure!(self.capacities[0] == 1.0, "central capacity must be 1.0");
+        anyhow::ensure!(self.batches > 0 && self.inflight > 0, "empty training run");
+        for e in &self.events {
+            let dev = match &e.action {
+                Action::Kill { device, .. } => *device,
+                Action::SetCapacity { device, .. } => *device,
+            };
+            anyhow::ensure!(
+                dev != 0 && dev < self.n_devices(),
+                "script actions must target a worker (got device {dev})"
+            );
+        }
+        Ok(())
+    }
+}

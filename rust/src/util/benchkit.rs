@@ -109,6 +109,53 @@ impl Table {
     }
 }
 
+/// Serialize a table as JSON (for the CI bench artifact).
+impl Table {
+    pub fn to_json(&self, bench: &str) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        Value::obj(vec![
+            ("bench", Value::Str(bench.to_string())),
+            ("skipped", Value::Bool(false)),
+            (
+                "headers",
+                Value::Arr(self.headers.iter().map(|h| Value::Str(h.clone())).collect()),
+            ),
+            (
+                "rows",
+                Value::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Value::Arr(r.iter().map(|c| Value::Str(c.clone())).collect())
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// When `FTPIPEHD_BENCH_JSON` names a file, write the bench results
+/// there (CI uploads it as the BENCH_* trajectory artifact). `table` =
+/// None records a skipped bench (e.g. artifacts absent) so the artifact
+/// always exists.
+pub fn emit_json(bench: &str, table: Option<&Table>) {
+    use crate::util::json::Value;
+    let Ok(path) = std::env::var("FTPIPEHD_BENCH_JSON") else {
+        return;
+    };
+    let v = match table {
+        Some(t) => t.to_json(bench),
+        None => Value::obj(vec![
+            ("bench", Value::Str(bench.to_string())),
+            ("skipped", Value::Bool(true)),
+        ]),
+    };
+    if let Err(e) = std::fs::write(&path, v.to_pretty()) {
+        eprintln!("bench json: cannot write {path}: {e}");
+    }
+}
+
 /// Print an (x, series...) block for figure-style data (easy to plot).
 pub fn print_series(title: &str, xlabel: &str, names: &[&str], xs: &[f64], ys: &[Vec<f64>]) {
     println!("# {title}");

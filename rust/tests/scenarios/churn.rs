@@ -1,0 +1,87 @@
+//! Family: worker churn — a device dies and comes back.
+//!
+//! A fast restart (back before the gradient timeout fires) is the
+//! paper's case 2: the probe finds the worker alive but stateless
+//! (`fresh`), the coordinator re-sends the training-init state and the
+//! worker re-fetches its own range from its chain-replica holder, same
+//! partition. A slow restart (back after recovery already re-partitioned
+//! around it) is a late rejoin: the run must simply keep working on the
+//! shrunken pipeline, deterministically.
+
+use std::time::Duration;
+
+use ftpipehd::sim::script::{Action, Scenario, ScriptEvent, Trigger};
+
+use crate::common;
+
+const TOTAL: u64 = 50;
+const KILL_AT: u64 = 14;
+
+#[test]
+fn churn_fast_restart_takes_case_2_and_is_bit_exact() {
+    // revived 20ms (virtual) after the kill — well inside the 200ms
+    // gradient timeout, so the probe finds it alive-but-fresh
+    let sc = Scenario::exact_recovery("churn-restart", 3, TOTAL).with_events(vec![
+        ScriptEvent {
+            at: Trigger::BatchDone(KILL_AT),
+            action: Action::Kill { device: 1, revive_after: Some(Duration::from_millis(20)) },
+        },
+    ]);
+    let out = common::run_twice_deterministic("churn-restart", &sc);
+    assert_eq!(out.recoveries, 1);
+    common::assert_trace_contains("churn-restart", &out, "fault case 2");
+    common::assert_loss_continuity("churn-restart", &out, TOTAL);
+    // the restarted worker restores the committed weights from its chain
+    // replica: the run is lossless vs a never-faulted baseline
+    let baseline = Scenario::exact_recovery("churn-restart-base", 3, TOTAL);
+    let baseline_out = common::run_once("churn-restart-base", &baseline);
+    common::assert_losses_bit_equal("churn-restart", &out, &baseline_out);
+    assert_eq!(out.weights_bits(), baseline_out.weights_bits());
+    // case 2 keeps the worker list: the final commit retains device 1
+    common::assert_trace_contains("churn-restart", &out, "commit: list [0, 1, 2]");
+}
+
+#[test]
+fn churn_slow_restart_is_a_late_rejoin_after_case_3() {
+    // revived after 2s (virtual) — the timeout (200ms) fires first and
+    // case 3 removes the worker; when it comes back nobody is waiting
+    // for it, and training continues on the survivors undisturbed
+    let sc = Scenario::exact_recovery("churn-late", 3, TOTAL).with_events(vec![
+        ScriptEvent {
+            at: Trigger::BatchDone(KILL_AT),
+            action: Action::Kill { device: 1, revive_after: Some(Duration::from_secs(2)) },
+        },
+    ]);
+    let out = common::run_twice_deterministic("churn-late", &sc);
+    assert_eq!(out.recoveries, 1);
+    common::assert_trace_contains("churn-late", &out, "fault case 3");
+    common::assert_trace_contains("churn-late", &out, "script: revive device 1");
+    common::assert_loss_continuity("churn-late", &out, TOTAL);
+    assert_eq!(out.redists.len(), 1);
+    assert_eq!(out.redists[0].new_list, vec![0, 2]);
+    // lossless, as in the single-fault family
+    let baseline = Scenario::exact_recovery("churn-late-base", 3, TOTAL);
+    let baseline_out = common::run_once("churn-late-base", &baseline);
+    assert_eq!(out.weights_bits(), baseline_out.weights_bits());
+}
+
+#[test]
+fn churn_repeated_faults_in_one_run_are_survivable() {
+    // two separate fault rounds: worker 1 restarts fast (case 2), then
+    // worker 2 dies for good (case 3) — 4 devices so a pipeline remains
+    let sc = Scenario::exact_recovery("churn-repeat", 4, TOTAL).with_events(vec![
+        ScriptEvent {
+            at: Trigger::BatchDone(9),
+            action: Action::Kill { device: 1, revive_after: Some(Duration::from_millis(20)) },
+        },
+        ScriptEvent {
+            at: Trigger::BatchDone(29),
+            action: Action::Kill { device: 2, revive_after: None },
+        },
+    ]);
+    let out = common::run_twice_deterministic("churn-repeat", &sc);
+    assert_eq!(out.recoveries, 2);
+    common::assert_trace_contains("churn-repeat", &out, "fault case 2");
+    common::assert_trace_contains("churn-repeat", &out, "fault case 3");
+    common::assert_loss_continuity("churn-repeat", &out, TOTAL);
+}

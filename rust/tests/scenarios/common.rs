@@ -1,0 +1,129 @@
+//! Shared plumbing for the scenario families: fixture lifecycle, the
+//! run-twice determinism oracle, loss-continuity checks, and the
+//! plan_redistribution fetch oracle.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::PathBuf;
+
+use ftpipehd::fault::{plan_redistribution, Source};
+use ftpipehd::sim::fixture::{materialize, FixtureSpec};
+use ftpipehd::sim::runner::{run_scenario, RedistRecord, ScenarioOutcome};
+use ftpipehd::sim::script::Scenario;
+
+fn fixture_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ftpipehd-scn-{tag}-{}", std::process::id()))
+}
+
+/// Run `sc` once against a fresh default fixture.
+pub fn run_once(tag: &str, sc: &Scenario) -> ScenarioOutcome {
+    let dir = fixture_dir(tag);
+    materialize(&dir, &FixtureSpec::default()).expect("fixture");
+    let out = run_scenario(sc, &dir).expect("scenario run");
+    let _ = std::fs::remove_dir_all(&dir);
+    out
+}
+
+/// Run `sc` twice against one fixture and assert byte-identical traces
+/// and bit-identical weights — the acceptance criterion of the harness.
+pub fn run_twice_deterministic(tag: &str, sc: &Scenario) -> ScenarioOutcome {
+    let dir = fixture_dir(tag);
+    materialize(&dir, &FixtureSpec::default()).expect("fixture");
+    let a = run_scenario(sc, &dir).expect("first run");
+    let b = run_scenario(sc, &dir).expect("second run");
+    let _ = std::fs::remove_dir_all(&dir);
+    assert_eq!(a.trace, b.trace, "{tag}: event traces differ between identical runs");
+    assert_eq!(
+        a.weights_bits(),
+        b.weights_bits(),
+        "{tag}: final weights differ between identical runs"
+    );
+    assert_eq!(a.net_bytes, b.net_bytes, "{tag}: byte accounting differs");
+    a
+}
+
+/// Every batch of the run completed with a finite loss (recovered-loss
+/// continuity: no gaps, no NaNs after any number of recoveries).
+pub fn assert_loss_continuity(tag: &str, out: &ScenarioOutcome, total: u64) {
+    for b in 0..total {
+        let loss = out
+            .losses
+            .get(&b)
+            .unwrap_or_else(|| panic!("{tag}: batch {b} never completed"));
+        assert!(loss.is_finite(), "{tag}: batch {b} loss {loss} not finite");
+    }
+}
+
+/// Bit-exact per-batch loss equality between two runs (the exact-recovery
+/// oracle: a replayed batch reproduces the no-fault run's loss).
+pub fn assert_losses_bit_equal(tag: &str, a: &ScenarioOutcome, b: &ScenarioOutcome) {
+    let bits = |o: &ScenarioOutcome| -> Vec<(u64, u32)> {
+        o.losses.iter().map(|(&k, v)| (k, v.to_bits())).collect()
+    };
+    assert_eq!(bits(a), bits(b), "{tag}: per-batch losses diverge");
+}
+
+/// Expected network fetches of a redistribution, recomputed independently
+/// with `plan_redistribution` (paper Algorithm 1): requester/target
+/// device pairs with the exact block sets. Valid when every alive device
+/// still holds its old range (case-3 and dynamic redistributions).
+pub fn expected_fetches(
+    r: &RedistRecord,
+) -> BTreeMap<(usize, usize), BTreeSet<usize>> {
+    let mut expect: BTreeMap<(usize, usize), BTreeSet<usize>> = BTreeMap::new();
+    for (i_new, &dev) in r.new_list.iter().enumerate() {
+        let i_old = r.old_list.iter().position(|&d| d == dev);
+        let held: Vec<usize> = match i_old {
+            Some(s) if !r.failed.contains(&s) => {
+                let (lo, hi) = r.old_ranges[s];
+                (lo..=hi).collect()
+            }
+            _ => vec![],
+        };
+        let plan =
+            plan_redistribution(&r.new_ranges, &r.old_ranges, &r.failed, &held, i_new, i_old);
+        for (src, blocks) in &plan.need {
+            let target = match src {
+                Source::Stage(s) => r.new_list[*s],
+                Source::CentralBackup => r.new_list[0],
+                Source::LocalBackup => continue,
+            };
+            if target == dev {
+                continue; // served locally (central self-serves escalations)
+            }
+            expect.entry((dev, target)).or_default().extend(blocks.iter().copied());
+        }
+    }
+    expect
+}
+
+/// Aggregate the runner's recorded FetchWeights into the same shape.
+pub fn actual_fetches(r: &RedistRecord) -> BTreeMap<(usize, usize), BTreeSet<usize>> {
+    let mut got: BTreeMap<(usize, usize), BTreeSet<usize>> = BTreeMap::new();
+    for (from, to, blocks) in &r.fetches {
+        got.entry((*from, *to)).or_default().extend(blocks.iter().copied());
+    }
+    got
+}
+
+/// Assert the observed fetch traffic of redistribution `r` is exactly
+/// what Algorithm 1 plans — no extra fetches, none missing.
+pub fn assert_fetches_match_plan(tag: &str, r: &RedistRecord) {
+    assert_eq!(
+        actual_fetches(r),
+        expected_fetches(r),
+        "{tag}: redistribution fetch traffic deviates from plan_redistribution \
+         (old {:?} -> new {:?}, failed {:?})",
+        r.old_ranges,
+        r.new_ranges,
+        r.failed
+    );
+}
+
+/// The trace contains a line with this substring.
+pub fn assert_trace_contains(tag: &str, out: &ScenarioOutcome, needle: &str) {
+    assert!(
+        out.trace.iter().any(|l| l.contains(needle)),
+        "{tag}: trace has no line containing {needle:?}; trace:\n{}",
+        out.trace.join("\n")
+    );
+}

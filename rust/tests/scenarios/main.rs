@@ -1,0 +1,25 @@
+//! Deterministic fault-injection scenario suite (DESIGN.md §7).
+//!
+//! Every test builds a synthetic native model (`sim::fixture`), scripts a
+//! failure timeline against the virtual clock (`sim::script`), and drives
+//! the full StageWorker protocol stack through the discrete-event runner
+//! (`sim::runner`). No artifacts, no PJRT, no wall-clock sleeps: each
+//! scenario runs in milliseconds and two invocations produce
+//! byte-identical traces and bit-identical final weights.
+//!
+//! Families (one module each; the CI `scenarios` matrix filters by the
+//! family prefix of the test names):
+//!
+//! * `single_fault`       — one worker dies (case 3), exact recovery
+//! * `multi_fault`        — two workers die simultaneously
+//! * `mid_redistribution` — a second failure lands during redistribution
+//! * `repartition`        — a worker slows down; dynamic re-partition
+//! * `churn`              — kill + fast restart (case 2), late rejoin
+
+mod common;
+
+mod churn;
+mod mid_redistribution;
+mod multi_fault;
+mod repartition;
+mod single_fault;

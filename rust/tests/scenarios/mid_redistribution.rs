@@ -1,0 +1,71 @@
+//! Family: a second failure lands while a redistribution is in flight.
+//!
+//! Worker 1 dies; the coordinator probes and starts redistribution #1;
+//! the moment the Repartition broadcast and FetchWeights requests are in
+//! flight, worker 2 dies too. FetchDones stop arriving, the
+//! redistribution stalls past `redist_window`, and the coordinator
+//! re-probes — finding both workers dead — and replans against the
+//! *original* (uncommitted) partition with the enlarged failure set.
+
+use ftpipehd::sim::script::{Action, Scenario, ScriptEvent, Trigger};
+
+use crate::common;
+
+const TOTAL: u64 = 50;
+const KILL_AT: u64 = 19;
+
+fn scenario() -> Scenario {
+    Scenario::exact_recovery("mid-redistribution", 4, TOTAL).with_events(vec![
+        ScriptEvent {
+            at: Trigger::BatchDone(KILL_AT),
+            action: Action::Kill { device: 1, revive_after: None },
+        },
+        ScriptEvent {
+            at: Trigger::RedistributionStart(1),
+            action: Action::Kill { device: 2, revive_after: None },
+        },
+    ])
+}
+
+#[test]
+fn mid_redistribution_failure_is_recovered_deterministically() {
+    let out = common::run_twice_deterministic("mid-redist", &scenario());
+    common::assert_loss_continuity("mid-redist", &out, TOTAL);
+    assert_eq!(out.recoveries, 2, "stall must trigger a second probe round");
+    assert_eq!(out.redists.len(), 2, "first redistribution abandoned, second commits");
+    common::assert_trace_contains("mid-redist", &out, "redistribution stalled; re-probing");
+    common::assert_trace_contains("mid-redist", &out, "dead stages [1, 2]");
+}
+
+#[test]
+fn mid_redistribution_replan_uses_the_uncommitted_partition() {
+    let out = common::run_once("mid-redist-replan", &scenario());
+    let first = &out.redists[0];
+    let second = &out.redists[1];
+    assert_eq!(first.failed, vec![1]);
+    // no commit happened in between: the second plan starts from the
+    // same old partition and worker list, with both stages failed
+    assert_eq!(second.old_ranges, first.old_ranges);
+    assert_eq!(second.old_list, first.old_list);
+    assert_eq!(second.failed, vec![1, 2]);
+    assert_eq!(second.new_list, vec![0, 3]);
+    // worker 1's chain replica died with worker 2: the survivors must
+    // reach into the central node's global backups for those blocks
+    let (lo1, hi1) = first.old_ranges[1];
+    let expect = common::expected_fetches(second);
+    let fetched_from_central = expect.iter().any(|((_, target), blocks)| {
+        *target == 0 && blocks.iter().any(|b| (lo1..=hi1).contains(b))
+    });
+    let central_kept_them = second.new_ranges[0].0 <= lo1 && second.new_ranges[0].1 >= hi1;
+    let central_served = fetched_from_central || central_kept_them;
+    assert!(central_served, "stage-1 blocks must be served from the global backup");
+    common::assert_fetches_match_plan("mid-redist", second);
+}
+
+#[test]
+fn mid_redistribution_completes_training_on_the_survivors() {
+    let out = common::run_once("mid-redist-complete", &scenario());
+    common::assert_loss_continuity("mid-redist-complete", &out, TOTAL);
+    // the final committed pipeline is central + the one survivor
+    common::assert_trace_contains("mid-redist-complete", &out, "commit: list [0, 3]");
+}

@@ -1,0 +1,82 @@
+//! Family: a worker slows down and the scheduled dynamic re-partition
+//! (paper §III-D) rebalances the pipeline — no failure involved.
+//!
+//! Compute is modeled (flops × ns_per_flop × capacity), so the slowed
+//! worker's piggybacked execution reports yield an *exact* capacity
+//! estimate and the DP's decision is deterministic.
+
+use ftpipehd::sim::script::{Action, Scenario, ScriptEvent, Trigger};
+
+use crate::common;
+
+const TOTAL: u64 = 90;
+
+fn scenario() -> Scenario {
+    let mut sc = Scenario::pipelined("repartition", 3, TOTAL);
+    // check at batch 10 (no-op: capacities equal), then at 50 and 90
+    sc.repartition = Some((10, 40));
+    sc.events = vec![ScriptEvent {
+        at: Trigger::BatchDone(20),
+        action: Action::SetCapacity { device: 2, capacity: 6.0 },
+    }];
+    sc
+}
+
+#[test]
+fn repartition_slowdown_shifts_blocks_off_the_slow_worker() {
+    let out = common::run_twice_deterministic("repartition", &scenario());
+    common::assert_loss_continuity("repartition", &out, TOTAL);
+    assert_eq!(out.recoveries, 0, "a slowdown is not a fault");
+    let dynamic: Vec<_> = out
+        .redists
+        .iter()
+        .filter(|r| r.reason == "dynamic" && r.committed_at_start >= 40)
+        .collect();
+    assert!(!dynamic.is_empty(), "the batch-50 check must trigger a re-partition");
+    let r = dynamic[0];
+    let blocks = |range: (usize, usize)| range.1 - range.0 + 1;
+    let old_slow = blocks(r.old_ranges[2]);
+    let new_slow = blocks(r.new_ranges[2]);
+    assert!(
+        new_slow < old_slow,
+        "slow worker must shed blocks: {old_slow} -> {new_slow} ({:?} -> {:?})",
+        r.old_ranges,
+        r.new_ranges
+    );
+    // the first check (batch 10, equal capacities) must NOT repartition
+    common::assert_trace_contains("repartition", &out, "repartition check");
+    assert!(
+        r.committed_at_start >= 49,
+        "rebalance must come from the batch-50 check, got batch {}",
+        r.committed_at_start
+    );
+}
+
+#[test]
+fn repartition_fetches_match_algorithm_1_plan() {
+    let out = common::run_once("repartition-plan", &scenario());
+    let dynamic: Vec<_> =
+        out.redists.iter().filter(|r| r.reason == "dynamic").collect();
+    assert!(!dynamic.is_empty());
+    for r in dynamic {
+        assert!(r.failed.is_empty(), "dynamic re-partition has no failed stages");
+        common::assert_fetches_match_plan("repartition", r);
+    }
+}
+
+#[test]
+fn repartition_capacity_estimates_are_exact_under_the_model() {
+    let out = common::run_once("repartition-caps", &scenario());
+    // the trace logs the capacities the DP saw; the slowed device's
+    // estimate must be 6.0 (modeled compute makes eq (1) exact)
+    let line = out
+        .trace
+        .iter()
+        .rev()
+        .find(|l| l.contains("repartition check"))
+        .expect("no repartition check in trace");
+    assert!(
+        line.contains("6.0") || line.contains("5.99") || line.contains("6.00"),
+        "expected an exact 6x capacity estimate in: {line}"
+    );
+}
