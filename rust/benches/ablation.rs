@@ -29,7 +29,10 @@ fn main() {
         t.row(&[
             format!("{limit}{}", if limit == 1 { " (sync/model-parallel)" } else { "" }),
             format!("{:.1}", r.total_s),
-            format!("{:.1}", r.mean_batch_ms(batches as u64 / 2, batches as u64).unwrap_or(f64::NAN)),
+            format!(
+                "{:.1}",
+                r.mean_batch_ms(batches as u64 / 2, batches as u64).unwrap_or(f64::NAN)
+            ),
         ]);
     }
     t.print();
@@ -58,7 +61,10 @@ fn main() {
     t.print();
 
     // ---- ablation 3: time-varying capacity (drift) ----
-    println!("\n# Ablation 3: capacity drift — dynamic re-partition vs static under time-varying load\n");
+    println!(
+        "\n# Ablation 3: capacity drift — dynamic re-partition vs static \
+         under time-varying load\n"
+    );
     let mut t = Table::new(&["engine", "drift", "steady ms/batch", "re-partitions"]);
     for (engine, name) in [(Engine::FtPipeHd, "ftpipehd"), (Engine::PipeDream, "pipedream")] {
         let mut cfg = common::base_cfg(&model, &[1.0, 1.0, 4.0], common::scaled(80));

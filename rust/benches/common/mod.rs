@@ -1,4 +1,9 @@
 //! Shared helpers for the per-figure benches.
+//!
+//! Each bench binary compiles this module independently and uses a
+//! different subset of the helpers, so per-binary dead-code analysis
+//! would flag whichever helpers that binary skips.
+#![allow(dead_code)]
 
 use ftpipehd::config::{DeviceConfig, RunConfig};
 

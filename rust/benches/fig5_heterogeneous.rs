@@ -75,7 +75,8 @@ fn main() {
         let pd = steady_ms["pipedream"];
         let ft = steady_ms["ftpipehd"];
         println!(
-            "skew {skew}: FTPipeHD {:.1} ms/batch vs PipeDream {:.1} ms/batch -> {:.2}x (paper at 10x skew: 6.8x)",
+            "skew {skew}: FTPipeHD {:.1} ms/batch vs PipeDream {:.1} ms/batch -> {:.2}x \
+             (paper at 10x skew: 6.8x)",
             ft,
             pd,
             pd / ft

@@ -25,7 +25,10 @@ fn main() {
     let chain = (batches / 6).max(2) as u64; // paper: every 50
     let global = chain * 2; // paper: every 100
 
-    println!("# Fig 6: per-batch time; kill worker 2 at batch {kill_at}; chain every {chain}, global every {global}\n");
+    println!(
+        "# Fig 6: per-batch time; kill worker 2 at batch {kill_at}; \
+         chain every {chain}, global every {global}\n"
+    );
 
     let mut all: Vec<Vec<f64>> = vec![];
     for engine in [Engine::FtPipeHd, Engine::ResPipe] {
@@ -43,10 +46,12 @@ fn main() {
         for b in &record.batches {
             ys[b.batch as usize] = b.wall_ms;
         }
-        let before = record.mean_batch_ms(kill_at.saturating_sub(10), kill_at - 1).unwrap_or(f64::NAN);
+        let before =
+            record.mean_batch_ms(kill_at.saturating_sub(10), kill_at - 1).unwrap_or(f64::NAN);
         let after = record.mean_batch_ms(kill_at + 3, batches as u64).unwrap_or(f64::NAN);
         println!(
-            "{:?}: before fault {before:.1} ms/batch, after recovery {after:.1} ms/batch ({}), redistribution {:?}s",
+            "{:?}: before fault {before:.1} ms/batch, after recovery {after:.1} ms/batch ({}), \
+             redistribution {:?}s",
             engine,
             if after < 1.5 * before { "returned to pre-fault speed" } else { "STILL DEGRADED" },
             record.recovery_overhead_s,

@@ -34,7 +34,10 @@ fn main() {
     cfg.batches_per_epoch = 5;
     cfg.eval_batches = 0;
     let r = run_sim(&cfg).expect("run");
-    println!("# single memory-capped device: {}", r.events.first().map(|e| e.kind.as_str()).unwrap_or("?"));
+    println!(
+        "# single memory-capped device: {}",
+        r.events.first().map(|e| e.kind.as_str()).unwrap_or("?")
+    );
     println!("#   -> cannot train on one device (paper: OOM at batch 499)\n");
 
     // --- pretrain on old domain, then continue on mixed ---
@@ -88,7 +91,8 @@ fn main() {
         &[val.clone(), train],
     );
     println!(
-        "\nfinal val acc on new domain {:.3} vs pre-trained level {:.3} (paper: climbs back to pre-trained level)",
+        "\nfinal val acc on new domain {:.3} vs pre-trained level {:.3} \
+         (paper: climbs back to pre-trained level)",
         val.last().unwrap_or(&f64::NAN),
         pre_acc
     );

@@ -1,28 +1,130 @@
-//! Microbench: the data-plane hot path — block execution through PJRT
-//! (with the literal conversions the pipeline pays per hop) and the
-//! message codec. These bound the per-batch overhead the coordinator adds
-//! on top of raw XLA compute; see EXPERIMENTS.md §Perf.
+//! Microbench: the data-plane hot path — the message codec (f32 vs the
+//! INT8-quantized wire format), the quantizer itself, and block execution
+//! through PJRT (with the literal conversions the pipeline pays per hop).
+//! These bound the per-batch overhead the coordinator adds on top of raw
+//! XLA compute; see EXPERIMENTS.md §Perf.
+//!
+//! The codec/quantization section is synthetic and always runs — it needs
+//! no model artifacts — so CI always gets a real table plus the named
+//! `metrics` the bench-regression gate (`benchcmp` vs BENCH_BASELINE.json)
+//! diffs. Gate metrics are byte ratios and same-process relative timings,
+//! both stable across runner hardware; absolute wall times are reported
+//! but not gated.
 
 mod common;
 
 use ftpipehd::manifest::{Dtype, Manifest};
 use ftpipehd::net::codec;
-use ftpipehd::net::message::{Message, Payload};
+use ftpipehd::net::message::{Message, Payload, WireTensor};
+use ftpipehd::net::{QTensor, TensorBuf};
 use ftpipehd::runtime::{load_all_blocks, Engine, HostTensor};
-use ftpipehd::util::benchkit::{bench, emit_json, Table};
+use ftpipehd::util::benchkit::{bench, emit_json_with_metrics, Table};
 
-fn main() {
-    let model = common::model_dir("artifacts/edgenet");
-    if !common::require_artifacts(&model) {
-        // still emit the JSON artifact (marked skipped) for the CI
-        // bench-smoke job's BENCH_* trajectory
-        emit_json("micro_runtime", None);
-        return;
-    }
-    let manifest = Manifest::load(&model).expect("manifest");
+/// Synthetic activation size: 16K f32 = 64 KiB, a realistic edge hop.
+const QN: usize = 16384;
+
+fn ms(x: f64) -> String {
+    format!("{:.2} ms", x * 1e3)
+}
+
+fn us(x: f64) -> String {
+    format!("{:.1} us", x * 1e6)
+}
+
+fn quant_codec_section(table: &mut Table, metrics: &mut Vec<(String, f64)>) {
+    let xs: Vec<f32> =
+        (0..QN).map(|i| ((i as u32).wrapping_mul(2654435761) as f32).sin() * 2.0).collect();
+    let act = TensorBuf::from(xs.clone());
+    let q = QTensor::quantize(&xs);
+
+    let fwd = |data: Payload| Message::Forward { batch: 1, version0: 1, is_eval: false, data };
+    let msg_f32 = fwd(Payload::F32(act.clone()));
+    let msg_q8 = fwd(Payload::Q8(q.clone()));
+    let frame_f32 = codec::encode(0, &msg_f32);
+    let frame_q8 = codec::encode(0, &msg_q8);
+
+    // --- quantizer ---
+    let s = bench(5, 500, || {
+        let _ = QTensor::quantize(std::hint::black_box(&xs));
+    });
+    table.row(&[format!("quantize f32->q8 ({QN} elems)"), us(s.p50), us(s.p95)]);
+    let s = bench(5, 500, || {
+        let _ = std::hint::black_box(&q).dequantize();
+    });
+    table.row(&["dequantize q8->f32".into(), us(s.p50), us(s.p95)]);
+
+    // --- codec: compressed vs f32 frames (reused encode buffer = the
+    // steady-state TCP send path) ---
+    let mut wbuf: Vec<u8> = Vec::new();
+    codec::encode_into(&mut wbuf, 0, &msg_f32);
+    let enc_f32 = bench(10, 1000, || {
+        codec::encode_into(&mut wbuf, 0, &msg_f32);
+    });
+    table.row(&[
+        format!("codec encode f32 ({} KiB frame)", frame_f32.len() / 1024),
+        format!("{} ({:.2} GB/s)", us(enc_f32.p50), frame_f32.len() as f64 / enc_f32.p50 / 1e9),
+        us(enc_f32.p95),
+    ]);
+    let mut qbuf: Vec<u8> = Vec::new();
+    codec::encode_into(&mut qbuf, 0, &msg_q8);
+    let enc_q8 = bench(10, 1000, || {
+        codec::encode_into(&mut qbuf, 0, &msg_q8);
+    });
+    table.row(&[
+        format!("codec encode q8 ({} KiB frame)", frame_q8.len() / 1024),
+        format!("{} ({:.2} GB/s)", us(enc_q8.p50), frame_q8.len() as f64 / enc_q8.p50 / 1e9),
+        us(enc_q8.p95),
+    ]);
+    let dec_f32 = bench(10, 1000, || {
+        let _ = codec::decode(std::hint::black_box(&frame_f32)).unwrap();
+    });
+    table.row(&["codec decode f32".into(), us(dec_f32.p50), us(dec_f32.p95)]);
+    let dec_q8 = bench(10, 1000, || {
+        let _ = codec::decode(std::hint::black_box(&frame_q8)).unwrap();
+    });
+    table.row(&["codec decode q8".into(), us(dec_q8.p50), us(dec_q8.p95)]);
+
+    // --- weight blocks: the ReplicaPush/Weights path ---
+    let wmsg_f32 = Message::Weights { blocks: vec![(3, vec![WireTensor::F32(act.clone())])] };
+    let wmsg_q8 = Message::Weights { blocks: vec![(3, vec![WireTensor::Q8(q.clone())])] };
+    let wframe_f32 = codec::encode(0, &wmsg_f32);
+    let wframe_q8 = codec::encode(0, &wmsg_q8);
+    table.row(&[
+        "weights frame f32 vs q8".into(),
+        format!("{} B vs {} B", wframe_f32.len(), wframe_q8.len()),
+        format!("{:.2}x", wframe_f32.len() as f64 / wframe_q8.len() as f64),
+    ]);
+
+    // --- payload handling: the old deep copy vs the TensorBuf share ---
+    let raw: Vec<f32> = act.to_vec();
+    let s = bench(10, 1000, || {
+        let copied = raw.clone();
+        std::hint::black_box(&copied);
+    });
+    table.row(&[format!("activation deep copy ({} KiB)", QN * 4 / 1024), us(s.p50), us(s.p95)]);
+    let s = bench(10, 1000, || {
+        let shared = act.clone();
+        std::hint::black_box(&shared);
+    });
+    table.row(&["activation TensorBuf clone (shared)".into(), us(s.p50), us(s.p95)]);
+
+    // --- gate metrics (byte ratios + same-process relative timings) ---
+    metrics.push((
+        "forward_f32_over_q8_bytes".to_string(),
+        frame_f32.len() as f64 / frame_q8.len() as f64,
+    ));
+    metrics.push((
+        "weights_f32_over_q8_bytes".to_string(),
+        wframe_f32.len() as f64 / wframe_q8.len() as f64,
+    ));
+    metrics.push(("q8_encode_over_f32_encode".to_string(), enc_q8.p50 / enc_f32.p50));
+    metrics.push(("q8_decode_over_f32_decode".to_string(), dec_q8.p50 / dec_f32.p50));
+}
+
+fn pjrt_section(model: &str, table: &mut Table) {
+    let manifest = Manifest::load(model).expect("manifest");
     let engine = Engine::cpu().expect("engine");
     let blocks = load_all_blocks(&engine, &manifest).expect("blocks");
-    let mut table = Table::new(&["case", "mean", "p95"]);
 
     // --- block execution: first IR block fwd + bwd ---
     let b = &blocks[1];
@@ -37,11 +139,11 @@ fn main() {
     let s = bench(5, 50, || {
         let _ = b.forward(&params, &x).unwrap();
     });
-    table.row(&["block fwd (ir, via PJRT)".into(), format!("{:.2} ms", s.mean * 1e3), format!("{:.2} ms", s.p95 * 1e3)]);
+    table.row(&["block fwd (ir, via PJRT)".into(), ms(s.mean), ms(s.p95)]);
     let s = bench(5, 50, || {
         let _ = b.backward(&params, &x, &gy).unwrap();
     });
-    table.row(&["block bwd (ir, via PJRT)".into(), format!("{:.2} ms", s.mean * 1e3), format!("{:.2} ms", s.p95 * 1e3)]);
+    table.row(&["block bwd (ir, via PJRT)".into(), ms(s.mean), ms(s.p95)]);
 
     // --- stem (the heaviest block) ---
     let b0 = &blocks[0];
@@ -51,71 +153,23 @@ fn main() {
     let s = bench(3, 30, || {
         let _ = b0.forward(&p0, &x0).unwrap();
     });
-    table.row(&["block fwd (stem 3072->128)".into(), format!("{:.2} ms", s.mean * 1e3), format!("{:.2} ms", s.p95 * 1e3)]);
+    table.row(&["block fwd (stem 3072->128)".into(), ms(s.mean), ms(s.p95)]);
+}
 
-    // --- codec throughput on a Forward-sized message ---
-    let act: usize = manifest.blocks[0].out_shape.iter().product();
-    let act_buf = ftpipehd::net::TensorBuf::from(vec![0.5f32; act]);
-    let msg = Message::Forward {
-        batch: 1,
-        version0: 1,
-        is_eval: false,
-        data: Payload::F32(act_buf.clone()),
-    };
-    let frame = codec::encode(0, &msg);
-    let bytes = frame.len() as f64;
-    let s = bench(10, 2000, || {
-        let _ = codec::encode(0, &msg);
-    });
-    table.row(&[
-        format!("codec encode ({} KiB act, fresh buf)", (bytes / 1024.0) as u64),
-        format!("{:.1} us ({:.2} GB/s)", s.mean * 1e6, bytes / s.mean / 1e9),
-        format!("{:.1} us", s.p95 * 1e6),
-    ]);
-    // the TCP send path: serialize into one long-lived frame buffer
-    let mut wbuf: Vec<u8> = Vec::new();
-    codec::encode_into(&mut wbuf, 0, &msg);
-    let s = bench(10, 2000, || {
-        codec::encode_into(&mut wbuf, 0, &msg);
-    });
-    table.row(&[
-        "codec encode_into (reused buf)".into(),
-        format!("{:.1} us ({:.2} GB/s)", s.mean * 1e6, bytes / s.mean / 1e9),
-        format!("{:.1} us", s.p95 * 1e6),
-    ]);
-    let s = bench(10, 2000, || {
-        let _ = codec::decode(&frame).unwrap();
-    });
-    table.row(&[
-        "codec decode".into(),
-        format!("{:.1} us ({:.2} GB/s)", s.mean * 1e6, bytes / s.mean / 1e9),
-        format!("{:.1} us", s.p95 * 1e6),
-    ]);
+fn main() {
+    let mut table = Table::new(&["case", "mean/p50", "p95"]);
+    let mut metrics: Vec<(String, f64)> = Vec::new();
 
-    // --- payload handling: the old deep copy vs the TensorBuf share ---
-    // (this delta is what every queue/stash/replica hop on the sim
-    // transport now saves; see rust/tests/zero_copy.rs for the proofs)
-    let raw: Vec<f32> = act_buf.to_vec();
-    let s = bench(10, 2000, || {
-        let copied = raw.clone();
-        std::hint::black_box(&copied);
-    });
-    table.row(&[
-        format!("activation deep copy ({} KiB)", (act * 4) as u64 / 1024),
-        format!("{:.2} us", s.mean * 1e6),
-        format!("{:.2} us", s.p95 * 1e6),
-    ]);
-    let s = bench(10, 2000, || {
-        let shared = act_buf.clone();
-        std::hint::black_box(&shared);
-    });
-    table.row(&[
-        "activation TensorBuf clone (shared)".into(),
-        format!("{:.3} us", s.mean * 1e6),
-        format!("{:.3} us", s.p95 * 1e6),
-    ]);
+    quant_codec_section(&mut table, &mut metrics);
+
+    let model = common::model_dir("artifacts/edgenet");
+    if common::require_artifacts(&model) {
+        pjrt_section(&model, &mut table);
+    } else {
+        println!("(model artifacts absent — PJRT rows skipped; codec/quant rows above)");
+    }
 
     println!("# micro: data-plane hot path\n");
     table.print();
-    emit_json("micro_runtime", Some(&table));
+    emit_json_with_metrics("micro_runtime", Some(&table), &metrics);
 }

@@ -1,0 +1,97 @@
+//! CI bench-regression gate: diff a bench JSON artifact (emitted by a
+//! bench via `FTPIPEHD_BENCH_JSON`, e.g. `micro_runtime`) against the
+//! committed `BENCH_BASELINE.json`, failing the job when any gated
+//! metric regresses past the baseline's tolerance (default 25%).
+//!
+//! Usage: `benchcmp <baseline.json> <current.json> [tolerance]`
+//!
+//! An explicit `[tolerance]` (e.g. `0.5` for 50%) overrides the
+//! baseline file's `tolerance` field; without it the baseline's value
+//! (default 25%) applies.
+//!
+//! Gated metrics are machine-portable by construction — byte ratios of
+//! the compressed vs f32 wire format and same-process relative timings —
+//! so the gate is meaningful on shared CI runners where absolute wall
+//! times are noise. The summary is printed to the job log and appended
+//! to `$GITHUB_STEP_SUMMARY` when present.
+
+use std::process::ExitCode;
+
+use ftpipehd::util::benchkit::compare_metrics;
+use ftpipehd::util::json;
+
+fn load(path: &str) -> Result<json::Value, String> {
+    let raw = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    json::parse(&raw).map_err(|e| format!("parsing {path}: {e}"))
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (baseline_path, current_path) = match &args[..] {
+        [b, c] | [b, c, _] => (b.clone(), c.clone()),
+        _ => {
+            eprintln!("usage: benchcmp <baseline.json> <current.json> [tolerance]");
+            return ExitCode::from(2);
+        }
+    };
+    // an explicit CLI tolerance must win over the baseline's field; a
+    // third argument that does not parse is an error, not 25%
+    let tolerance_override: Option<f64> = match args.get(2) {
+        None => None,
+        Some(t) => match t.parse::<f64>() {
+            Ok(x) if x.is_finite() && x >= 0.0 => Some(x),
+            _ => {
+                eprintln!("benchcmp: bad tolerance {t:?} (want e.g. 0.25)");
+                return ExitCode::from(2);
+            }
+        },
+    };
+
+    let (baseline, current) = match (load(&baseline_path), load(&current_path)) {
+        (Ok(b), Ok(c)) => (b, c),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("benchcmp: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let deltas = match compare_metrics(&baseline, &current, tolerance_override) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("benchcmp: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let effective_tolerance = tolerance_override
+        .or_else(|| baseline.get("tolerance").and_then(|v| v.as_f64()))
+        .unwrap_or(0.25);
+    let mut lines = vec![format!(
+        "## bench-regression gate ({} metrics, tolerance {:.0}%)",
+        deltas.len(),
+        effective_tolerance * 100.0
+    )];
+    for d in &deltas {
+        lines.push(d.summary());
+    }
+    let regressed: Vec<&str> =
+        deltas.iter().filter(|d| d.regressed).map(|d| d.name.as_str()).collect();
+    lines.push(if regressed.is_empty() {
+        "result: OK — no metric regressed past tolerance".to_string()
+    } else {
+        format!("result: FAIL — regressed metrics: {}", regressed.join(", "))
+    });
+    let summary = lines.join("\n");
+    println!("{summary}");
+    if let Ok(path) = std::env::var("GITHUB_STEP_SUMMARY") {
+        use std::io::Write;
+        if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
+            let _ = writeln!(f, "```\n{summary}\n```");
+        }
+    }
+    if regressed.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

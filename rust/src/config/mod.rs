@@ -10,6 +10,11 @@ use anyhow::{anyhow, Result};
 
 use crate::util::json::Value;
 
+/// Wire-compression policy (off / activations-only / full). Defined next
+/// to the quantizer in `net::quant`; re-exported here because it is a
+/// run-level policy knob selected per message class in [`RunConfig`].
+pub use crate::net::quant::Compression;
+
 /// One participating device. `capacity` follows the paper's eq (1): the
 /// ratio of this device's per-layer execution time to the central node's
 /// (1.0 = as fast as central; 10.0 = ten times slower).
@@ -86,6 +91,10 @@ pub struct RunConfig {
     pub bandwidth_bps: Vec<f64>,
     /// One-way link latency in seconds (per message).
     pub link_latency_s: f64,
+    /// INT8 wire compression: `Off` (f32 everywhere), `Activations`
+    /// (forward activations + backward gradients with error feedback),
+    /// or `Full` (also replica pushes and weight-fetch replies).
+    pub compression: Compression,
 
     // --- training hyper-parameters (paper §IV-B) ---
     pub lr: f32,
@@ -138,6 +147,7 @@ impl Default for RunConfig {
             devices: vec![DeviceConfig::default(); 3],
             bandwidth_bps: vec![12.5e6], // ~100 Mbps WiFi
             link_latency_s: 0.002,
+            compression: Compression::Off,
             lr: 0.01,
             momentum: 0.9,
             weight_decay: 4e-5,
@@ -235,6 +245,10 @@ impl RunConfig {
         }
         if let Some(x) = getf(v, "link_latency_s") {
             c.link_latency_s = x;
+        }
+        if let Some(s) = v.get("compression").and_then(|x| x.as_str()) {
+            c.compression = Compression::parse(s)
+                .ok_or_else(|| anyhow!("unknown compression {s:?} (off|activations|full)"))?;
         }
         if let Some(x) = getf(v, "lr") {
             c.lr = x as f32;
@@ -334,6 +348,7 @@ mod tests {
               "bandwidth_bps": [12500000, 2000000],
               "lr": 0.1, "epochs": 3, "batches_per_epoch": 50,
               "engine": "pipedream",
+              "compression": "full",
               "fault": {"kill_device": 1, "at_batch": 205}
             }"#,
         )
@@ -342,8 +357,18 @@ mod tests {
         assert_eq!(c.devices.len(), 3);
         assert_eq!(c.devices[2].capacity, 10.0);
         assert_eq!(c.engine, Engine::PipeDream);
+        assert_eq!(c.compression, Compression::Full);
         assert_eq!(c.fault.as_ref().unwrap().at_batch, 205);
         assert_eq!(c.bandwidth(1), 2_000_000.0);
+    }
+
+    #[test]
+    fn compression_defaults_off_and_rejects_unknown() {
+        assert_eq!(RunConfig::default().compression, Compression::Off);
+        let v = json::parse(r#"{"compression": "activations"}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&v).unwrap().compression, Compression::Activations);
+        let v = json::parse(r#"{"compression": "zstd"}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
     }
 
     #[test]

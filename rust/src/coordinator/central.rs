@@ -387,6 +387,7 @@ impl Central {
             chain_every: chain,
             global_every: global,
             status,
+            compression: self.cfg.compression,
         }
     }
 
@@ -459,7 +460,8 @@ impl Central {
                 let (val_loss, val_acc) = self.evaluate()?;
                 let at_s = self.clock.now_s();
                 log_info!(
-                    "epoch {epoch}: train_acc={train_acc:.3} val_loss={val_loss:.4} val_acc={val_acc:.3} ({at_s:.1}s)"
+                    "epoch {epoch}: train_acc={train_acc:.3} val_loss={val_loss:.4} \
+                     val_acc={val_acc:.3} ({at_s:.1}s)"
                 );
                 self.record.epochs.push(EpochRecord {
                     epoch,
@@ -531,7 +533,8 @@ impl Central {
                 self.endpoint.recv_timeout(Duration::from_millis(10))
             {
                 for (idx, tensors) in blocks {
-                    if final_weights.insert(idx, BlockParams(tensors)).is_none() {
+                    let bp = crate::replication::block_from_wire(tensors);
+                    if final_weights.insert(idx, bp).is_none() {
                         expect -= 1;
                     }
                 }

@@ -131,7 +131,8 @@ pub(crate) fn bootstrap(cfg: &RunConfig, mut opts: RunOpts) -> Result<BootResult
     // memory-cap check (single-device OOM emulation, §IV-F)
     {
         let my_range = init_ranges[0];
-        let my_bytes = manifest.param_bytes_range(my_range.0, my_range.1) * 3; // params+velocity+stash
+        // params + velocity + stash
+        let my_bytes = manifest.param_bytes_range(my_range.0, my_range.1) * 3;
         let dev = SimDevice::new(cfg.devices[0].clone(), 0);
         if n == 1 && !dev.fits_memory(my_bytes) {
             let mut record = RunRecord::default();
@@ -212,8 +213,10 @@ pub(crate) fn bootstrap(cfg: &RunConfig, mut opts: RunOpts) -> Result<BootResult
     // shared buffers, so this stages no copies at the central node
     if let Some(init_w) = opts.initial_weights.take() {
         for (stage, &(lo, hi)) in init_ranges.iter().enumerate() {
-            let blocks: Vec<(usize, Vec<crate::net::TensorBuf>)> = (lo..=hi)
-                .filter_map(|b| init_w.get(&b).map(|bp| (b, bp.0.clone())))
+            let blocks: Vec<crate::net::message::WireBlock> = (lo..=hi)
+                .filter_map(|b| {
+                    init_w.get(&b).map(|bp| (b, crate::replication::block_to_wire(bp)))
+                })
                 .collect();
             if blocks.is_empty() {
                 continue;

@@ -282,7 +282,8 @@ impl Central {
             format!("recovery complete: detect+probe {detect_s:.3}s, redistribute {overhead:.3}s"),
         );
         log_info!(
-            "recovery complete (detect+probe {detect_s:.3}s, redistribute {overhead:.3}s); resuming from batch {}",
+            "recovery complete (detect+probe {detect_s:.3}s, redistribute {overhead:.3}s); \
+             resuming from batch {}",
             self.next_inject
         );
         Ok(())

@@ -282,7 +282,10 @@ impl ftpipehd::net::Transport for TcpWrap {
     fn send(&self, to: usize, msg: ftpipehd::net::Message) -> Result<()> {
         self.0.send(to, msg)
     }
-    fn recv_timeout(&self, timeout: std::time::Duration) -> Option<(usize, ftpipehd::net::Message)> {
+    fn recv_timeout(
+        &self,
+        timeout: std::time::Duration,
+    ) -> Option<(usize, ftpipehd::net::Message)> {
         self.0.recv_timeout(timeout)
     }
     fn n_devices(&self) -> usize {

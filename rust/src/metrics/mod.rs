@@ -206,7 +206,8 @@ mod tests {
     fn json_roundtrips_through_parser() {
         let mut r = RunRecord::default();
         r.total_s = 1.5;
-        r.batches.push(BatchRecord { batch: 0, loss: 2.0, train_acc: 0.1, wall_ms: 3.0, at_s: 0.1 });
+        r.batches
+            .push(BatchRecord { batch: 0, loss: 2.0, train_acc: 0.1, wall_ms: 3.0, at_s: 0.1 });
         r.events.push(Event { at_s: 0.5, kind: "fault".into() });
         let text = r.to_json().to_pretty();
         let v = crate::util::json::parse(&text).unwrap();
@@ -223,7 +224,8 @@ mod tests {
     #[test]
     fn csv_has_header_and_rows() {
         let mut r = RunRecord::default();
-        r.batches.push(BatchRecord { batch: 1, loss: 0.5, train_acc: 0.9, wall_ms: 2.5, at_s: 1.0 });
+        r.batches
+            .push(BatchRecord { batch: 1, loss: 0.5, train_acc: 0.9, wall_ms: 2.5, at_s: 1.0 });
         let csv = r.batches_csv();
         assert!(csv.starts_with("batch,loss"));
         assert_eq!(csv.lines().count(), 2);

@@ -18,9 +18,15 @@
 use anyhow::{anyhow, bail, Result};
 
 use super::buf::TensorBuf;
-use super::message::{DeviceId, ExecReport, Message, Payload, ReplicaKind, TrainInit, WireBlock};
+use super::message::{
+    DeviceId, ExecReport, Message, Payload, ReplicaKind, TrainInit, WireBlock, WireTensor,
+};
+use super::quant::{Compression, QTensor};
 
-pub const CODEC_VERSION: u8 = 1;
+/// v2: tensors inside `Backward`/`Weights`/`ReplicaPush` carry a dtype
+/// tag (f32 | q8), `Forward` payloads gained a q8 arm, and `InitState`
+/// carries the cluster's [`Compression`] policy.
+pub const CODEC_VERSION: u8 = 2;
 
 // ---------- primitive writers ----------
 
@@ -69,13 +75,33 @@ impl W<'_> {
         self.u32(xs.len() as u32);
         self.0.extend_from_slice(xs);
     }
+    /// Quantized tensor: the u8 payload is written as-is — no f32
+    /// materialization anywhere on the encode path.
+    fn qtensor(&mut self, q: &QTensor) {
+        self.bytes(q.bytes());
+        self.f32(q.scale());
+        self.f32(q.zero());
+    }
+    /// Dtype-tagged tensor (0 = f32, 1 = q8).
+    fn wire_tensor(&mut self, t: &WireTensor) {
+        match t {
+            WireTensor::F32(v) => {
+                self.u8(0);
+                self.f32s(v);
+            }
+            WireTensor::Q8(q) => {
+                self.u8(1);
+                self.qtensor(q);
+            }
+        }
+    }
     fn blocks(&mut self, blocks: &[WireBlock]) {
         self.u32(blocks.len() as u32);
         for (idx, tensors) in blocks {
             self.usize(*idx);
             self.u32(tensors.len() as u32);
             for t in tensors {
-                self.f32s(t);
+                self.wire_tensor(t);
             }
         }
     }
@@ -158,6 +184,21 @@ impl<'a> R<'a> {
         self.i += n;
         Ok(v)
     }
+    /// The u8 payload lands directly in the `QTensor`'s shared buffer —
+    /// decode never expands a quantized tensor to f32.
+    fn qtensor(&mut self) -> Result<QTensor> {
+        let data = self.bytes()?;
+        let scale = self.f32()?;
+        let zero = self.f32()?;
+        Ok(QTensor::from_parts(data, scale, zero))
+    }
+    fn wire_tensor(&mut self) -> Result<WireTensor> {
+        match self.u8()? {
+            0 => Ok(WireTensor::F32(self.tensor()?)),
+            1 => Ok(WireTensor::Q8(self.qtensor()?)),
+            t => bail!("bad tensor dtype tag {t}"),
+        }
+    }
     fn blocks(&mut self) -> Result<Vec<WireBlock>> {
         let n = self.u32()? as usize;
         let mut out = Vec::with_capacity(n);
@@ -166,7 +207,7 @@ impl<'a> R<'a> {
             let nt = self.u32()? as usize;
             let mut tensors = Vec::with_capacity(nt);
             for _ in 0..nt {
-                tensors.push(self.tensor()?);
+                tensors.push(self.wire_tensor()?);
             }
             out.push((idx, tensors));
         }
@@ -201,6 +242,10 @@ pub fn encode_into(buf: &mut Vec<u8>, from: DeviceId, msg: &Message) {
                     w.u8(1);
                     w.i32s(v);
                 }
+                Payload::Q8(q) => {
+                    w.u8(2);
+                    w.qtensor(q);
+                }
             }
         }
         Message::Labels { batch, is_eval, data } => {
@@ -212,7 +257,7 @@ pub fn encode_into(buf: &mut Vec<u8>, from: DeviceId, msg: &Message) {
         Message::Backward { batch, grad, loss, ncorrect, reports } => {
             w.u8(2);
             w.u64(*batch);
-            w.f32s(grad);
+            w.wire_tensor(grad);
             w.f32(*loss);
             w.f32(*ncorrect);
             w.u32(reports.len() as u32);
@@ -256,6 +301,7 @@ pub fn encode_into(buf: &mut Vec<u8>, from: DeviceId, msg: &Message) {
             w.u64(t.chain_every);
             w.u64(t.global_every);
             w.u8(t.status);
+            w.u8(t.compression.to_u8());
         }
         Message::Repartition { ranges, worker_list, failed } => {
             w.u8(7);
@@ -351,6 +397,7 @@ pub fn decode(frame: &[u8]) -> Result<(DeviceId, Message)> {
             let data = match r.u8()? {
                 0 => Payload::F32(r.tensor()?),
                 1 => Payload::I32(r.i32s()?),
+                2 => Payload::Q8(r.qtensor()?),
                 t => bail!("bad payload tag {t}"),
             };
             Message::Forward { batch, version0, is_eval, data }
@@ -358,13 +405,17 @@ pub fn decode(frame: &[u8]) -> Result<(DeviceId, Message)> {
         1 => Message::Labels { batch: r.u64()?, is_eval: r.bool()?, data: r.i32s()? },
         2 => {
             let batch = r.u64()?;
-            let grad = r.tensor()?;
+            let grad = r.wire_tensor()?;
             let loss = r.f32()?;
             let ncorrect = r.f32()?;
             let n = r.u32()? as usize;
             let mut reports = Vec::with_capacity(n);
             for _ in 0..n {
-                reports.push(ExecReport { device: r.usize()?, avg_ms: r.f64()?, batches: r.u32()? });
+                reports.push(ExecReport {
+                    device: r.usize()?,
+                    avg_ms: r.f64()?,
+                    batches: r.u32()?,
+                });
             }
             Message::Backward { batch, grad, loss, ncorrect, reports }
         }
@@ -403,6 +454,11 @@ pub fn decode(frame: &[u8]) -> Result<(DeviceId, Message)> {
                 chain_every: r.u64()?,
                 global_every: r.u64()?,
                 status: r.u8()?,
+                compression: {
+                    let c = r.u8()?;
+                    Compression::from_u8(c)
+                        .ok_or_else(|| anyhow!("bad compression policy {c}"))?
+                },
             })
         }
         7 => {
@@ -525,6 +581,7 @@ mod tests {
                 chain_every: 50,
                 global_every: 100,
                 status: 0,
+                compression: Compression::Activations,
             }),
         );
     }
@@ -574,17 +631,104 @@ mod tests {
         });
     }
 
-    /// Uniformly draws from EVERY `Message` variant (19 as of codec v1).
+    /// Satellite: exact re-encode stability for quantized payloads. For
+    /// every tensor-carrying variant, decode(encode(m)) re-encodes to the
+    /// byte-identical frame, and Q8 tensors compare bit-exactly (QTensor
+    /// equality is representation equality, so `m2 == msg` on a Q8 arm
+    /// asserts identical bytes + identical scale/zero bit patterns).
+    #[test]
+    fn prop_q8_reencode_is_byte_identical() {
+        check("codec-q8-reencode", 200, |g: &mut G<'_>| {
+            let len = g.sized_usize(0, 64);
+            let xs = g.vec_f32(len);
+            let q = QTensor::quantize(&xs);
+            let msgs = vec![
+                Message::Forward {
+                    batch: 1,
+                    version0: 2,
+                    is_eval: false,
+                    data: Payload::Q8(q.clone()),
+                },
+                Message::Backward {
+                    batch: 3,
+                    grad: WireTensor::Q8(q.clone()),
+                    loss: 0.5,
+                    ncorrect: 1.0,
+                    reports: vec![],
+                },
+                Message::Weights { blocks: vec![(4, vec![WireTensor::Q8(q.clone())])] },
+                Message::ReplicaPush {
+                    kind: ReplicaKind::Global,
+                    owner_stage: 1,
+                    owner_device: 2,
+                    version: 9,
+                    blocks: vec![(0, vec![WireTensor::Q8(q.clone()), xs.clone().into()])],
+                },
+            ];
+            for msg in msgs {
+                let frame = encode(5, &msg);
+                let (_, m2) = decode(&frame).map_err(|e| format!("{}: {e}", msg.tag()))?;
+                if m2 != msg {
+                    return Err(format!("{}: value drift after roundtrip", msg.tag()));
+                }
+                let frame2 = encode(5, &m2);
+                if frame2 != frame {
+                    return Err(format!("{}: re-encoded frame differs", msg.tag()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Satellite: lossy-path accuracy. f32 → quantize → wire → dequantize
+    /// stays within the tensor's scale-derived tolerance for every
+    /// message class that carries tensors.
+    #[test]
+    fn prop_f32_q8_f32_within_scale_tolerance() {
+        check("codec-q8-tolerance", 200, |g: &mut G<'_>| {
+            let len = g.sized_usize(1, 64);
+            let xs = g.vec_f32(len);
+            let q = QTensor::quantize(&xs);
+            let tol = q.tolerance();
+            let msg = Message::Forward {
+                batch: 0,
+                version0: 0,
+                is_eval: false,
+                data: Payload::Q8(q),
+            };
+            let (_, m2) = decode(&encode(1, &msg)).map_err(|e| e.to_string())?;
+            let Message::Forward { data: Payload::Q8(q2), .. } = m2 else {
+                return Err("payload changed class".into());
+            };
+            let back = q2.dequantize();
+            for (i, (&a, &b)) in xs.iter().zip(back.iter()).enumerate() {
+                if (a - b).abs() > tol {
+                    return Err(format!("elem {i}: {a} -> {b} exceeds tol {tol}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// A random wire tensor — f32 or quantized, so every tensor-carrying
+    /// variant is property-tested in both encodings.
+    fn random_wire_tensor(g: &mut G<'_>, len: usize) -> WireTensor {
+        let xs = g.vec_f32(len);
+        if g.bool() {
+            WireTensor::Q8(QTensor::quantize(&xs))
+        } else {
+            WireTensor::F32(xs.into())
+        }
+    }
+
+    /// Uniformly draws from EVERY `Message` variant (19 as of codec v2).
     fn random_message(g: &mut G<'_>) -> Message {
         let blocks = |g: &mut G<'_>| -> Vec<WireBlock> {
             (0..g.usize_in(0, 3))
                 .map(|i| {
-                    (
-                        i,
-                        (0..g.usize_in(1, 3))
-                            .map(|_| g.vec_f32(g.size.min(16)).into())
-                            .collect(),
-                    )
+                    let nt = g.usize_in(1, 3);
+                    let len = g.size.min(16);
+                    (i, (0..nt).map(|_| random_wire_tensor(g, len)).collect())
                 })
                 .collect()
         };
@@ -602,10 +746,10 @@ mod tests {
                 batch: g.usize_in(0, 1000) as u64,
                 version0: g.usize_in(0, 50) as u64,
                 is_eval: g.bool(),
-                data: if g.bool() {
-                    Payload::F32(g.vec_f32(g.size).into())
-                } else {
-                    Payload::I32((0..g.size).map(|i| i as i32 - 3).collect())
+                data: match g.usize_in(0, 2) {
+                    0 => Payload::F32(g.vec_f32(g.size).into()),
+                    1 => Payload::I32((0..g.size).map(|i| i as i32 - 3).collect()),
+                    _ => Payload::Q8(QTensor::quantize(&g.vec_f32(g.size))),
                 },
             },
             1 => Message::Labels {
@@ -615,7 +759,10 @@ mod tests {
             },
             2 => Message::Backward {
                 batch: g.usize_in(0, 99) as u64,
-                grad: g.vec_f32(g.size).into(),
+                grad: {
+                    let len = g.size;
+                    random_wire_tensor(g, len)
+                },
                 loss: g.f64_in(0.0, 10.0) as f32,
                 ncorrect: g.usize_in(0, 32) as f32,
                 reports: reports(g),
@@ -641,6 +788,11 @@ mod tests {
                 chain_every: g.usize_in(0, 100) as u64,
                 global_every: g.usize_in(0, 200) as u64,
                 status: u8::from(g.bool()),
+                compression: *g.pick(&[
+                    Compression::Off,
+                    Compression::Activations,
+                    Compression::Full,
+                ]),
             }),
             7 => Message::Repartition {
                 ranges: (0..g.usize_in(1, 4)).map(|i| (i * 2, i * 2 + 1)).collect(),

@@ -7,18 +7,23 @@
 //! re-partition, replication, and fault-tolerance protocols need (§III-B/E/F).
 
 use super::buf::TensorBuf;
+use super::quant::{Compression, QTensor};
 
 /// Physical device id (stable across re-partitions; stage indices map to
 /// device ids through the worker list).
 pub type DeviceId = usize;
 
-/// Activation payload entering a stage (shared f32 acts or i32 tokens).
-/// The f32 arm is [`TensorBuf`]-backed: cloning the payload (or the whole
-/// message) shares the buffer instead of copying it.
+/// Activation payload entering a stage (shared f32 acts, i32 tokens, or
+/// an INT8-quantized activation). The f32/q8 arms are `Arc`-backed:
+/// cloning the payload (or the whole message) shares the buffer instead
+/// of copying it.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Payload {
     F32(TensorBuf),
     I32(Vec<i32>),
+    /// Affine-quantized activation (see [`crate::net::quant`]): 1 byte
+    /// per element plus a per-tensor `(scale, zero)` pair.
+    Q8(QTensor),
 }
 
 impl Payload {
@@ -26,7 +31,89 @@ impl Payload {
         match self {
             Payload::F32(v) => v.len() * 4,
             Payload::I32(v) => v.len() * 4,
+            Payload::Q8(q) => q.byte_len(),
         }
+    }
+}
+
+/// A tensor on the wire: full-precision (shared buffer, zero-copy) or
+/// INT8-quantized. Gradients and the tensors inside [`WireBlock`]s travel
+/// as `WireTensor`s; [`WireTensor::into_f32`] is the receiver-boundary
+/// dequantization step (a move for the f32 arm).
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireTensor {
+    F32(TensorBuf),
+    Q8(QTensor),
+}
+
+impl WireTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            WireTensor::F32(t) => t.len(),
+            WireTensor::Q8(q) => q.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Payload bytes on the wire (the bandwidth model's currency).
+    pub fn byte_len(&self) -> usize {
+        match self {
+            WireTensor::F32(t) => t.len() * 4,
+            WireTensor::Q8(q) => q.byte_len(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&TensorBuf> {
+        match self {
+            WireTensor::F32(t) => Some(t),
+            WireTensor::Q8(_) => None,
+        }
+    }
+
+    pub fn as_q8(&self) -> Option<&QTensor> {
+        match self {
+            WireTensor::Q8(q) => Some(q),
+            WireTensor::F32(_) => None,
+        }
+    }
+
+    /// Materialize as f32: a move (no copy) for the f32 arm, the single
+    /// dequantization write for the q8 arm.
+    pub fn into_f32(self) -> TensorBuf {
+        match self {
+            WireTensor::F32(t) => t,
+            WireTensor::Q8(q) => q.dequantize(),
+        }
+    }
+
+    /// Wrap an f32 tensor, quantizing iff the policy compresses weights.
+    pub fn from_weights(t: &TensorBuf, compression: Compression) -> WireTensor {
+        if compression.weights() {
+            WireTensor::Q8(QTensor::quantize(t))
+        } else {
+            WireTensor::F32(t.clone())
+        }
+    }
+}
+
+impl From<TensorBuf> for WireTensor {
+    fn from(t: TensorBuf) -> WireTensor {
+        WireTensor::F32(t)
+    }
+}
+
+impl From<Vec<f32>> for WireTensor {
+    fn from(v: Vec<f32>) -> WireTensor {
+        WireTensor::F32(TensorBuf::new(v))
+    }
+}
+
+impl From<QTensor> for WireTensor {
+    fn from(q: QTensor) -> WireTensor {
+        WireTensor::Q8(q)
     }
 }
 
@@ -67,12 +154,16 @@ pub struct TrainInit {
     pub global_every: u64,
     /// 0 = normal, 1 = fault recovery in progress (paper `status`)
     pub status: u8,
+    /// Wire-compression policy, distributed cluster-wide at init so
+    /// every sender/receiver pair agrees on the tensor encoding.
+    pub compression: Compression,
 }
 
-/// A block's tensors on the wire — shared buffers, so building a
-/// `Weights`/`ReplicaPush` message from a parameter store is refcount
-/// bumps, never a deep copy of the stage's weights.
-pub type WireBlock = (usize, Vec<TensorBuf>);
+/// A block's tensors on the wire — shared buffers (or quantized bytes),
+/// so building a `Weights`/`ReplicaPush` message from a parameter store
+/// is refcount bumps (plus an optional INT8 pass), never a deep f32 copy
+/// of the stage's weights.
+pub type WireBlock = (usize, Vec<WireTensor>);
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
@@ -91,7 +182,9 @@ pub enum Message {
     },
     Backward {
         batch: u64,
-        grad: TensorBuf,
+        /// f32 or INT8-quantized per the sender's [`Compression`] policy
+        /// (quantized gradients carry error feedback on the sender side).
+        grad: WireTensor,
         /// loss/ncorrect measured at the last stage, carried to central.
         loss: f32,
         ncorrect: f32,
@@ -195,14 +288,21 @@ impl Message {
     }
 
     /// Approximate wire size (drives the bandwidth model; the codec's
-    /// exact framing differs by a few header bytes).
+    /// exact framing differs by a few header bytes). Quantized tensors
+    /// report their compressed size, so the virtual network prices the
+    /// compression win; with [`Compression::Off`] every value here is
+    /// byte-identical to the pre-quantization format.
     pub fn byte_len(&self) -> usize {
-        let blocks_len =
-            |blocks: &[WireBlock]| blocks.iter().map(|(_, ts)| 8 + ts.iter().map(|t| 4 + t.len() * 4).sum::<usize>()).sum::<usize>();
+        let blocks_len = |blocks: &[WireBlock]| {
+            blocks
+                .iter()
+                .map(|(_, ts)| 8 + ts.iter().map(|t| 4 + t.byte_len()).sum::<usize>())
+                .sum::<usize>()
+        };
         16 + match self {
             Message::Forward { data, .. } => data.byte_len(),
             Message::Labels { data, .. } => data.len() * 4,
-            Message::Backward { grad, reports, .. } => grad.len() * 4 + reports.len() * 20,
+            Message::Backward { grad, reports, .. } => grad.byte_len() + reports.len() * 20,
             Message::EvalResult { .. } => 16,
             Message::Probe | Message::ProbeAck { .. } => 8,
             Message::InitState(ti) => 64 + ti.ranges.len() * 16 + ti.worker_list.len() * 8,

@@ -9,11 +9,13 @@
 pub mod buf;
 pub mod codec;
 pub mod message;
+pub mod quant;
 pub mod sim;
 pub mod tcp;
 
 pub use buf::TensorBuf;
-pub use message::{DeviceId, Message, Payload, ReplicaKind};
+pub use message::{DeviceId, Message, Payload, ReplicaKind, WireTensor};
+pub use quant::{Compression, QTensor, Residual};
 
 use std::time::Duration;
 

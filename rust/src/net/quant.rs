@@ -1,0 +1,383 @@
+//! INT8 tensor quantization — the compressed wire currency (AccEPT-style
+//! bit-level compressed transfer, arXiv:2311.05827).
+//!
+//! A [`QTensor`] is an affine-quantized f32 tensor: one `u8` per element
+//! plus a per-tensor `(scale, zero)` pair, so a quantized activation or
+//! gradient costs ~1/4 of its f32 bytes on a link the paper prices at
+//! `latency + bytes/bandwidth`. The codec moves the `u8` payload without
+//! ever materializing intermediate f32s; dequantization happens exactly
+//! once, at the receiving stage's boundary, straight into a
+//! [`TensorBuf`].
+//!
+//! Determinism contract: `quantize` and `dequantize` are pure element-wise
+//! IEEE-754 single-precision pipelines with a fixed evaluation order, so
+//! two runs of one scenario produce bit-identical quantized bytes and
+//! bit-identical dequantized tensors (the scenario suite asserts this
+//! end to end). Which messages are quantized is selected by
+//! [`Compression`] (see `config::Compression`); `Off` keeps every
+//! tensor f32, so numerics, event order, and the bandwidth model's
+//! `Message::byte_len` accounting are exactly the pre-compression
+//! behavior. (The codec *framing* is v2 in all modes — tensors carry a
+//! dtype tag — so v2 frames are not byte-compatible with v1 peers even
+//! under `Off`; all transports in one cluster speak one version.)
+//!
+//! Gradients additionally carry an error-feedback [`Residual`] on the
+//! sender: the quantization error of step `t` is added to the gradient of
+//! step `t+1` before quantizing, so quantization noise stays bounded
+//! instead of accumulating across SGD steps (DESIGN.md §8).
+
+use std::fmt;
+use std::sync::Arc;
+
+use super::buf::TensorBuf;
+
+/// Which message classes travel quantized (policy knob; lives here so the
+/// wire layer owns it, re-exported as `config::Compression`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Compression {
+    /// Everything f32 — the wire format is byte-for-byte the v1 format.
+    #[default]
+    Off,
+    /// Data plane only: forward activations + backward gradients.
+    Activations,
+    /// Data plane + weight transfers (`ReplicaPush` / `Weights` replies).
+    Full,
+}
+
+impl Compression {
+    /// Quantize forward activations and backward gradients?
+    pub fn data_plane(self) -> bool {
+        !matches!(self, Compression::Off)
+    }
+
+    /// Quantize weight transfers (replica pushes, fetch replies)?
+    pub fn weights(self) -> bool {
+        matches!(self, Compression::Full)
+    }
+
+    pub fn to_u8(self) -> u8 {
+        match self {
+            Compression::Off => 0,
+            Compression::Activations => 1,
+            Compression::Full => 2,
+        }
+    }
+
+    pub fn from_u8(x: u8) -> Option<Compression> {
+        match x {
+            0 => Some(Compression::Off),
+            1 => Some(Compression::Activations),
+            2 => Some(Compression::Full),
+            _ => None,
+        }
+    }
+
+    /// Parse the JSON/CLI spelling ("off" / "activations" / "full").
+    pub fn parse(s: &str) -> Option<Compression> {
+        match s {
+            "off" => Some(Compression::Off),
+            "activations" => Some(Compression::Activations),
+            "full" => Some(Compression::Full),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Compression::Off => "off",
+            Compression::Activations => "activations",
+            Compression::Full => "full",
+        }
+    }
+}
+
+/// An affine-quantized tensor: `x ≈ zero + q * scale`, `q ∈ [0, 255]`.
+///
+/// The byte payload is `Arc`-backed like [`TensorBuf`], so cloning a
+/// quantized message (queueing, replica fan-out) is a refcount bump.
+#[derive(Clone)]
+pub struct QTensor {
+    data: Arc<Vec<u8>>,
+    scale: f32,
+    zero: f32,
+}
+
+impl QTensor {
+    /// Quantize with a per-tensor dynamic range (min/max over finite
+    /// elements). Deterministic: a fixed element order and fixed f32
+    /// operations, so equal inputs always produce equal bytes.
+    ///
+    /// Degenerate ranges encode exactly: a constant tensor gets
+    /// `scale = 0`, so every element dequantizes to precisely `zero`.
+    pub fn quantize(xs: &[f32]) -> QTensor {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &x in xs {
+            if x.is_finite() {
+                lo = lo.min(x);
+                hi = hi.max(x);
+            }
+        }
+        if !(lo <= hi) {
+            // empty tensor, or nothing finite to anchor a range on
+            return QTensor { data: Arc::new(vec![0u8; xs.len()]), scale: 0.0, zero: 0.0 };
+        }
+        let scale = (hi - lo) / 255.0;
+        if scale == 0.0 {
+            return QTensor { data: Arc::new(vec![0u8; xs.len()]), scale: 0.0, zero: lo };
+        }
+        let inv = 1.0f32 / scale;
+        // `as u8` saturates (and maps NaN to 0), so out-of-range values
+        // clamp deterministically without a branch
+        let data: Vec<u8> = xs.iter().map(|&x| ((x - lo) * inv).round() as u8).collect();
+        QTensor { data: Arc::new(data), scale, zero: lo }
+    }
+
+    /// Rebuild from wire parts (codec decode path — no f32 intermediate).
+    pub fn from_parts(data: Vec<u8>, scale: f32, zero: f32) -> QTensor {
+        QTensor { data: Arc::new(data), scale, zero }
+    }
+
+    /// Dequantize into a fresh shared buffer — the single materializing
+    /// f32 write a quantized tensor pays, at the receiver's boundary.
+    pub fn dequantize(&self) -> TensorBuf {
+        let zero = self.zero;
+        let scale = self.scale;
+        TensorBuf::new(self.data.iter().map(|&q| zero + q as f32 * scale).collect())
+    }
+
+    /// Dequantize one element (used by the error-feedback residual).
+    #[inline]
+    pub fn dequantize_at(&self, i: usize) -> f32 {
+        self.zero + self.data[i] as f32 * self.scale
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Wire payload bytes: one per element plus the (scale, zero) pair.
+    pub fn byte_len(&self) -> usize {
+        self.data.len() + 8
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.data
+    }
+
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    pub fn zero(&self) -> f32 {
+        self.zero
+    }
+
+    /// Same allocation? (zero-copy assertions, mirroring `TensorBuf`.)
+    pub fn ptr_eq(&self, other: &QTensor) -> bool {
+        Arc::ptr_eq(&self.data, &other.data)
+    }
+
+    /// Worst-case absolute dequantization error of any finite in-range
+    /// element: half a quantization step (plus fp rounding slack).
+    pub fn tolerance(&self) -> f32 {
+        0.5 * self.scale + 1e-6
+    }
+}
+
+/// Bit-exact equality: scale/zero compare by representation, so a
+/// re-encoded tensor is equal iff it is byte-identical on the wire.
+impl PartialEq for QTensor {
+    fn eq(&self, other: &QTensor) -> bool {
+        self.scale.to_bits() == other.scale.to_bits()
+            && self.zero.to_bits() == other.zero.to_bits()
+            && (Arc::ptr_eq(&self.data, &other.data) || self.data == other.data)
+    }
+}
+
+impl fmt::Debug for QTensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "QTensor(len={}, scale={}, zero={}, head={:?})",
+            self.len(),
+            self.scale,
+            self.zero,
+            &self.data[..self.len().min(4)]
+        )
+    }
+}
+
+/// Error-feedback state for one outgoing gradient edge (sender side).
+///
+/// `fold` quantizes `g + r` and retains the new quantization error as
+/// `r`, so the error injected at step `t` is corrected at step `t+1`
+/// instead of compounding. The residual is deliberately cleared whenever
+/// the edge's meaning changes (init, commit of a new partition, reset,
+/// crash-restart) — it is per-run deterministic state, never persisted.
+#[derive(Debug, Default)]
+pub struct Residual {
+    r: Vec<f32>,
+}
+
+impl Residual {
+    /// Quantize `g` with error feedback; updates the stored residual.
+    pub fn fold(&mut self, g: &[f32]) -> QTensor {
+        if self.r.len() != g.len() {
+            // shape changed (new partition): stale error is meaningless
+            self.r = vec![0.0; g.len()];
+        }
+        let v: Vec<f32> = g.iter().zip(self.r.iter()).map(|(&a, &b)| a + b).collect();
+        let q = QTensor::quantize(&v);
+        for i in 0..v.len() {
+            let e = v[i] - q.dequantize_at(i);
+            // a transient NaN/Inf gradient element must not poison the
+            // carried error forever (quantize itself already saturates
+            // nonfinite values); drop that element's residual instead
+            self.r[i] = if e.is_finite() { e } else { 0.0 };
+        }
+        q
+    }
+
+    pub fn clear(&mut self) {
+        self.r.clear();
+    }
+
+    /// Largest carried error magnitude (introspection/tests).
+    pub fn max_abs(&self) -> f32 {
+        self.r.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_dequantize_within_half_step() {
+        let xs: Vec<f32> = (0..1000).map(|i| (i as f32 * 0.37).sin() * 3.0).collect();
+        let q = QTensor::quantize(&xs);
+        let back = q.dequantize();
+        let tol = q.tolerance();
+        for (a, b) in xs.iter().zip(back.iter()) {
+            assert!((a - b).abs() <= tol, "{a} vs {b} (tol {tol})");
+        }
+    }
+
+    #[test]
+    fn quantize_is_deterministic() {
+        let xs: Vec<f32> = (0..257).map(|i| (i as f32).cos()).collect();
+        let a = QTensor::quantize(&xs);
+        let b = QTensor::quantize(&xs);
+        assert_eq!(a, b);
+        assert_eq!(a.bytes(), b.bytes());
+        assert_eq!(a.scale().to_bits(), b.scale().to_bits());
+        let da = a.dequantize();
+        let db = b.dequantize();
+        let bits = |t: &TensorBuf| t.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&da), bits(&db), "dequantize must be bit-reproducible");
+    }
+
+    #[test]
+    fn constant_and_empty_tensors_are_exact() {
+        let q = QTensor::quantize(&[2.5; 17]);
+        assert_eq!(q.scale(), 0.0);
+        assert_eq!(q.dequantize().as_slice(), &[2.5; 17]);
+        let q = QTensor::quantize(&[]);
+        assert!(q.is_empty());
+        assert!(q.dequantize().is_empty());
+    }
+
+    #[test]
+    fn range_endpoints_roundtrip_exactly() {
+        let q = QTensor::quantize(&[-1.0, 0.25, 1.0]);
+        let back = q.dequantize();
+        assert_eq!(back[0], -1.0, "range minimum is exact (q=0)");
+        // maximum lands on q=255: zero + 255*scale == hi up to fp rounding
+        assert!((back[2] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nonfinite_elements_do_not_poison_the_range() {
+        let q = QTensor::quantize(&[f32::NAN, -2.0, f32::INFINITY, 2.0]);
+        let back = q.dequantize();
+        assert_eq!(back[1], -2.0);
+        assert!((back[3] - 2.0).abs() < 1e-5);
+        assert!(back[0].is_finite() && back[2].is_finite());
+    }
+
+    #[test]
+    fn clone_shares_bytes() {
+        let q = QTensor::quantize(&[0.0, 1.0, 2.0]);
+        let c = q.clone();
+        assert!(q.ptr_eq(&c));
+        assert_eq!(q.byte_len(), 3 + 8);
+    }
+
+    #[test]
+    fn residual_bounds_accumulated_error() {
+        // same gradient applied repeatedly: WITH error feedback, the sum
+        // of dequantized sends tracks the true sum to within one step
+        let g = vec![0.013f32, -0.027, 0.5, -0.4999, 0.25];
+        let mut res = Residual::default();
+        let mut sent = vec![0.0f64; g.len()];
+        let steps = 200;
+        for _ in 0..steps {
+            let q = res.fold(&g);
+            let d = q.dequantize();
+            for (s, v) in sent.iter_mut().zip(d.iter()) {
+                *s += *v as f64;
+            }
+        }
+        for (i, s) in sent.iter().enumerate() {
+            let truth = g[i] as f64 * steps as f64;
+            let step = ((1.0 - -0.4999) / 255.0) as f64; // range of g+r, approx
+            assert!(
+                (s - truth).abs() <= 2.0 * step + 1e-3,
+                "element {i}: sent {s} vs true {truth}"
+            );
+        }
+        assert!(res.max_abs() <= 0.01, "residual itself stays within one step");
+    }
+
+    #[test]
+    fn residual_survives_a_transient_nonfinite_gradient() {
+        let mut res = Residual::default();
+        res.fold(&[0.1, 0.2, 0.3]);
+        // one poisoned step: the nonfinite element saturates on the wire
+        // but must not leave NaN/Inf in the carried error
+        res.fold(&[0.1, f32::NAN, f32::INFINITY]);
+        assert!(res.max_abs().is_finite(), "residual stays finite");
+        let q = res.fold(&[0.1, 0.2, 0.3]);
+        let back = q.dequantize();
+        for (a, b) in [0.1f32, 0.2, 0.3].iter().zip(back.iter()) {
+            assert!((a - b).abs() <= 2.0 * q.tolerance() + 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn residual_resets_on_shape_change() {
+        let mut res = Residual::default();
+        res.fold(&[1.0, 2.0, 3.0]);
+        let q = res.fold(&[5.0; 7]);
+        assert_eq!(q.len(), 7);
+        assert_eq!(q.dequantize().as_slice(), &[5.0; 7], "no stale residual leaked in");
+    }
+
+    #[test]
+    fn compression_policy_knobs() {
+        assert!(!Compression::Off.data_plane() && !Compression::Off.weights());
+        assert!(Compression::Activations.data_plane() && !Compression::Activations.weights());
+        assert!(Compression::Full.data_plane() && Compression::Full.weights());
+        for c in [Compression::Off, Compression::Activations, Compression::Full] {
+            assert_eq!(Compression::from_u8(c.to_u8()), Some(c));
+            assert_eq!(Compression::parse(c.name()), Some(c));
+        }
+        assert_eq!(Compression::from_u8(9), None);
+        assert_eq!(Compression::parse("gzip"), None);
+    }
+}

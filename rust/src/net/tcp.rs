@@ -184,7 +184,8 @@ impl TcpEndpoint {
                                         }
                                         Err(e) => {
                                             crate::log_warn!(
-                                                "tcp reader: undecodable frame ({e}); closing connection"
+                                                "tcp reader: undecodable frame ({e}); \
+                                                 closing connection"
                                             );
                                             break;
                                         }
@@ -375,12 +376,12 @@ mod tests {
         let eps = loopback_cluster(2, 46110).unwrap();
         let data: crate::net::TensorBuf = vec![1.5f32; 200_000].into();
         eps[1]
-            .send(0, Message::Weights { blocks: vec![(3, vec![data.clone()])] })
+            .send(0, Message::Weights { blocks: vec![(3, vec![data.clone().into()])] })
             .unwrap();
         match eps[0].recv_timeout(Duration::from_secs(5)) {
             Some((1, Message::Weights { blocks })) => {
                 assert_eq!(blocks[0].0, 3);
-                assert_eq!(blocks[0].1[0], data);
+                assert_eq!(blocks[0].1[0].as_f32().unwrap(), &data);
             }
             other => panic!("unexpected {other:?}"),
         }

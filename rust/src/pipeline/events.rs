@@ -7,7 +7,9 @@
 //! raw messages ad hoc, so the data-plane fast path and the control-plane
 //! protocol handlers are separated by type, not by convention.
 
-use crate::net::message::{DeviceId, ExecReport, Message, Payload, ReplicaKind, TrainInit, WireBlock};
+use crate::net::message::{
+    DeviceId, ExecReport, Message, Payload, ReplicaKind, TrainInit, WireBlock,
+};
 use crate::net::TensorBuf;
 
 /// What an event handler tells its caller to do next.
@@ -27,7 +29,11 @@ pub enum Event {
 
 /// Hot-path traffic: activations, labels, gradients, eval results. The
 /// tensor payloads stay `TensorBuf`-backed — classification moves them,
-/// never copies them.
+/// never copies them. A quantized gradient is the one exception by
+/// design: classification is the receiver boundary, so the INT8 wire
+/// tensor pays its single dequantization write here and compute code
+/// downstream only ever sees f32 (forward payloads dequantize at the
+/// schedule intake instead, `StageWorker::payload_to_tensor`).
 #[derive(Debug)]
 pub enum DataEvent {
     Forward {
@@ -125,7 +131,14 @@ impl Event {
                 Event::Data(DataEvent::Labels { batch, is_eval, data })
             }
             Message::Backward { batch, grad, loss, ncorrect, reports } => {
-                Event::Data(DataEvent::Backward { batch, grad, loss, ncorrect, reports })
+                // f32 arm: a move. q8 arm: the single dequantize write.
+                Event::Data(DataEvent::Backward {
+                    batch,
+                    grad: grad.into_f32(),
+                    loss,
+                    ncorrect,
+                    reports,
+                })
             }
             Message::EvalResult { batch, loss, ncorrect } => {
                 Event::Data(DataEvent::EvalResult { batch, loss, ncorrect })

@@ -84,7 +84,9 @@ impl Repart {
     pub fn record_reply(&mut self, from: DeviceId, blocks: Vec<WireBlock>) -> Vec<usize> {
         for (idx, tensors) in blocks {
             if self.needed.remove(&idx) {
-                self.staged.insert(idx, BlockParams(tensors));
+                // f32 tensors stage as shared buffers; quantized ones pay
+                // their one dequantization here, at the receiver boundary
+                self.staged.insert(idx, crate::replication::block_from_wire(tensors));
             }
         }
         let Some(o) = self.outstanding.get_mut(&from) else {
@@ -113,7 +115,7 @@ mod tests {
     }
 
     fn wire(idx: usize, v: f32) -> WireBlock {
-        (idx, bp(v).0)
+        (idx, crate::replication::block_to_wire(&bp(v)))
     }
 
     #[test]

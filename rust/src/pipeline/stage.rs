@@ -27,7 +27,10 @@ use crate::device::SimDevice;
 use crate::fault::{plan_redistribution, RedistPlan, Source};
 use crate::manifest::Manifest;
 use crate::model::{aggregate_versions, BlockParams, Sgd, SgdConfig, StageParams, VersionStash};
-use crate::net::message::{DeviceId, ExecReport, Message, Payload, ReplicaKind, TrainInit, WireBlock};
+use crate::net::message::{
+    DeviceId, ExecReport, Message, Payload, ReplicaKind, TrainInit, WireBlock, WireTensor,
+};
+use crate::net::quant::{Compression, QTensor, Residual};
 use crate::net::{TensorBuf, Transport};
 use crate::replication::{self, BackupStore};
 use crate::runtime::{BlockRuntime, HostTensor};
@@ -91,6 +94,12 @@ pub struct StageWorker {
     /// outstanding bandwidth probe to the next worker (paper §III-B):
     /// the clock time the probe was sent.
     bw_probe: Option<Duration>,
+
+    /// Wire-compression policy (cluster-wide, distributed via TrainInit).
+    pub compression: Compression,
+    /// Error-feedback state for this stage's outgoing gradient edge (to
+    /// its previous stage) — only updated when gradients are quantized.
+    grad_residual: Residual,
 }
 
 impl StageWorker {
@@ -127,6 +136,8 @@ impl StageWorker {
             backups: BackupStore::default(),
             repart: None,
             bw_probe: None,
+            compression: Compression::Off,
+            grad_residual: Residual::default(),
         }
     }
 
@@ -199,6 +210,8 @@ impl StageWorker {
         self.chain_every = t.chain_every;
         self.global_every = t.global_every;
         self.status = t.status;
+        self.compression = t.compression;
+        self.grad_residual.clear();
         if t.status == 0 {
             if let Some((lo, hi)) = self.my_range() {
                 self.params = StageParams::load_range(&self.manifest, lo, hi)?;
@@ -212,17 +225,37 @@ impl StageWorker {
     // compute: forward
     // ------------------------------------------------------------------
 
+    /// Receiver boundary: an incoming payload becomes a host tensor —
+    /// f32/i32 arms move their buffers; a quantized activation pays its
+    /// single dequantization write here, before entering the schedule.
     fn payload_to_tensor(p: Payload) -> HostTensor {
         match p {
             Payload::F32(v) => HostTensor::F32(v),
             Payload::I32(v) => HostTensor::I32(v),
+            Payload::Q8(q) => HostTensor::F32(q.dequantize()),
         }
     }
 
-    fn tensor_to_payload(t: HostTensor) -> Payload {
+    /// Sender boundary: an outgoing activation is quantized iff the
+    /// policy compresses the data plane (i32 token payloads stay raw).
+    fn tensor_to_payload(&self, t: HostTensor) -> Payload {
         match t {
+            HostTensor::F32(v) if self.compression.data_plane() => {
+                Payload::Q8(QTensor::quantize(&v))
+            }
             HostTensor::F32(v) => Payload::F32(v),
             HostTensor::I32(v) => Payload::I32(v),
+        }
+    }
+
+    /// Sender boundary for gradients: quantize with error feedback (the
+    /// residual keeps this step's quantization error and folds it into
+    /// the next step's gradient), or pass f32 through untouched.
+    fn encode_grad(&mut self, g: Vec<f32>) -> WireTensor {
+        if self.compression.data_plane() {
+            WireTensor::Q8(self.grad_residual.fold(&g))
+        } else {
+            WireTensor::F32(g.into())
         }
     }
 
@@ -275,7 +308,7 @@ impl StageWorker {
                     batch,
                     version0,
                     is_eval: false,
-                    data: Self::tensor_to_payload(out),
+                    data: self.tensor_to_payload(out),
                 },
             )?;
             return Ok(None);
@@ -354,11 +387,12 @@ impl StageWorker {
         self.maybe_replicate(t, batch)?;
 
         if let Some(prev) = self.prev_device() {
+            let grad = self.encode_grad(out.gx_out.unwrap_or_default());
             t.send(
                 prev,
                 Message::Backward {
                     batch,
-                    grad: TensorBuf::new(out.gx_out.unwrap_or_default()),
+                    grad,
                     loss: out.loss,
                     ncorrect: out.ncorrect,
                     reports: vec![report],
@@ -402,7 +436,12 @@ impl StageWorker {
             let next = self.next_device().context("no next stage")?;
             t.send(
                 next,
-                Message::Forward { batch, version0: 0, is_eval: true, data: Self::tensor_to_payload(cur) },
+                Message::Forward {
+                    batch,
+                    version0: 0,
+                    is_eval: true,
+                    data: self.tensor_to_payload(cur),
+                },
             )?;
             return Ok(None);
         }
@@ -504,16 +543,8 @@ impl StageWorker {
         }
         reports.push(self.current_report());
         let prev = self.prev_device().unwrap();
-        t.send(
-            prev,
-            Message::Backward {
-                batch,
-                grad: TensorBuf::new(out.gx_out.unwrap_or_default()),
-                loss,
-                ncorrect,
-                reports,
-            },
-        )?;
+        let grad = self.encode_grad(out.gx_out.unwrap_or_default());
+        t.send(prev, Message::Backward { batch, grad, loss, ncorrect, reports })?;
         Ok(None)
     }
 
@@ -568,7 +599,7 @@ impl StageWorker {
         if !chain_due && !global_due {
             return Ok(());
         }
-        let wire: Vec<WireBlock> = replication::to_wire(&self.params);
+        let wire: Vec<WireBlock> = replication::to_wire_with(&self.params, self.compression);
         if chain_due {
             let target_stage = replication::chain_target(stage, self.n_stages());
             let target = self.worker_list[target_stage];
@@ -821,6 +852,9 @@ impl StageWorker {
         self.committed_bwd = committed;
         self.sched.reset(committed);
         self.stash.discard_after(committed);
+        // replayed batches re-quantize from a clean slate, so a reset is
+        // reproducible independent of what was in flight before it
+        self.grad_residual.clear();
         self.status = 0;
     }
 
@@ -918,14 +952,15 @@ impl StageWorker {
     }
 
     /// Serve a FetchWeights request from current params, then backups —
-    /// both served as shared buffers (no weight copies).
+    /// shared f32 buffers (no weight copies), or INT8 payloads when the
+    /// policy compresses weight traffic.
     pub fn serve_fetch(&self, t: &dyn Transport, from: DeviceId, blocks: &[usize]) -> Result<()> {
         let mut found: Vec<WireBlock> = Vec::new();
         for &b in blocks {
             if let Some(bp) = self.params.get(b) {
-                found.push((b, bp.0.clone()));
+                found.push((b, replication::block_to_wire_with(bp, self.compression)));
             } else if let Some(bp) = self.backups.find_block(b) {
-                found.push((b, bp.0.clone()));
+                found.push((b, replication::block_to_wire_with(bp, self.compression)));
             }
         }
         t.send(from, Message::Weights { blocks: found })?;
@@ -957,7 +992,7 @@ impl StageWorker {
         let Some(mut rp) = self.repart.take() else {
             for (idx, tensors) in blocks {
                 if self.params.get(idx).is_some() {
-                    self.params.blocks.insert(idx, BlockParams(tensors));
+                    self.params.blocks.insert(idx, replication::block_from_wire(tensors));
                 }
             }
             return Ok(());
@@ -1043,6 +1078,10 @@ impl StageWorker {
         }
         self.stash = VersionStash::new(self.n_stages().max(2));
         self.sched.on_commit();
+        // the stage's input shape (and thus its gradient edge) may have
+        // changed with the new range — stale quantization error must not
+        // leak into the first gradients of the new partition
+        self.grad_residual.clear();
         self.status = 0;
         self.initialized = true;
         Ok(())
@@ -1065,6 +1104,8 @@ impl StageWorker {
         self.backups = BackupStore::default();
         self.repart = None;
         self.bw_probe = None;
+        self.compression = Compression::Off;
+        self.grad_residual.clear();
     }
 
     /// State bytes currently held (memory accounting for the device cap).

@@ -9,7 +9,8 @@
 use std::collections::BTreeMap;
 
 use crate::model::params::{BlockParams, StageParams};
-use crate::net::message::{DeviceId, ReplicaKind, WireBlock};
+use crate::net::message::{DeviceId, ReplicaKind, WireBlock, WireTensor};
+use crate::net::quant::Compression;
 
 /// Should a replication fire after completing `batch` (0-based)?
 pub fn due(batch: u64, every: Option<u64>) -> bool {
@@ -29,23 +30,48 @@ pub fn chain_target(stage: usize, n_stages: usize) -> usize {
     }
 }
 
+/// One block's tensors as f32 wire tensors — refcount bumps, zero-copy.
+pub fn block_to_wire(bp: &BlockParams) -> Vec<WireTensor> {
+    bp.0.iter().map(|t| WireTensor::F32(t.clone())).collect()
+}
+
+/// One block's tensors under the given [`Compression`] policy: INT8 when
+/// the policy compresses weight traffic, shared f32 buffers otherwise.
+pub fn block_to_wire_with(bp: &BlockParams, compression: Compression) -> Vec<WireTensor> {
+    bp.0.iter().map(|t| WireTensor::from_weights(t, compression)).collect()
+}
+
+/// Rebuild one block from wire tensors: f32 arms are moves (shared
+/// buffers), q8 arms pay their single receiver-side dequantization.
+pub fn block_from_wire(tensors: Vec<WireTensor>) -> BlockParams {
+    BlockParams(tensors.into_iter().map(WireTensor::into_f32).collect())
+}
+
 /// Serialize a stage's parameters for a replica push. Zero-copy: the
 /// wire blocks share the stage's tensor buffers (refcount bumps), so a
 /// periodic replication no longer deep-copies the stage's weights — the
 /// owner's next optimizer step forks only what the replica still holds.
 pub fn to_wire(params: &StageParams) -> Vec<WireBlock> {
+    params.blocks.iter().map(|(idx, bp)| (*idx, block_to_wire(bp))).collect()
+}
+
+/// [`to_wire`] under a [`Compression`] policy (INT8 weight payloads when
+/// the policy compresses weight traffic; identical to `to_wire` for the
+/// rest — in particular `Off` stays byte-for-byte the f32 format).
+pub fn to_wire_with(params: &StageParams, compression: Compression) -> Vec<WireBlock> {
     params
         .blocks
         .iter()
-        .map(|(idx, bp)| (*idx, bp.0.clone()))
+        .map(|(idx, bp)| (*idx, block_to_wire_with(bp, compression)))
         .collect()
 }
 
-/// Rebuild block params from wire form (shared buffers, zero-copy).
+/// Rebuild block params from wire form (f32: shared buffers, zero-copy;
+/// q8: dequantized exactly once, here at the receiver boundary).
 pub fn from_wire(blocks: &[WireBlock]) -> Vec<(usize, BlockParams)> {
     blocks
         .iter()
-        .map(|(idx, tensors)| (*idx, BlockParams(tensors.clone())))
+        .map(|(idx, tensors)| (*idx, block_from_wire(tensors.clone())))
         .collect()
 }
 
@@ -189,10 +215,32 @@ mod tests {
         sp.blocks.insert(2, bp(1.0));
         let wire = to_wire(&sp);
         assert!(
-            wire[0].1[0].ptr_eq(&sp.blocks[&2].0[0]),
+            wire[0].1[0].as_f32().unwrap().ptr_eq(&sp.blocks[&2].0[0]),
             "replica push must not deep-copy stage weights"
         );
         let back = from_wire(&wire);
         assert!(back[0].1 .0[0].ptr_eq(&sp.blocks[&2].0[0]));
+    }
+
+    #[test]
+    fn to_wire_with_policy_quantizes_only_under_full() {
+        let mut sp = StageParams::default();
+        sp.blocks.insert(1, BlockParams::from_vecs(vec![vec![0.0, 0.5, 1.0]]));
+        for c in [Compression::Off, Compression::Activations] {
+            let wire = to_wire_with(&sp, c);
+            assert!(
+                wire[0].1[0].as_f32().unwrap().ptr_eq(&sp.blocks[&1].0[0]),
+                "{c:?} must keep replica pushes zero-copy f32"
+            );
+        }
+        let wire = to_wire_with(&sp, Compression::Full);
+        let q = wire[0].1[0].as_q8().expect("Full must quantize weight traffic");
+        assert_eq!(q.len(), 3);
+        assert!(wire[0].1[0].byte_len() < 12, "3 f32s must shrink on the wire");
+        let back = from_wire(&wire);
+        let got = &back[0].1 .0[0];
+        for (a, b) in [0.0f32, 0.5, 1.0].iter().zip(got.iter()) {
+            assert!((a - b).abs() <= q.tolerance());
+        }
     }
 }

@@ -440,6 +440,7 @@ impl Runner<'_> {
             chain_every: self.sc.chain_every,
             global_every: self.sc.global_every,
             status,
+            compression: self.sc.compression,
         }
     }
 
@@ -974,6 +975,10 @@ impl Runner<'_> {
             Action::SetCapacity { device, capacity } => {
                 self.trace_line(t, format!("script: device {device} capacity -> {capacity}"));
                 self.workers[device].sim.cfg.capacity = capacity;
+            }
+            Action::SetBandwidth { bps } => {
+                self.trace_line(t, format!("script: bandwidth -> {bps} B/s"));
+                self.net.lock().unwrap().bw_bps = bps;
             }
         }
         Ok(())

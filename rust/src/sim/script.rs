@@ -14,6 +14,8 @@
 use std::time::Duration;
 
 use crate::net::message::DeviceId;
+use crate::net::quant::Compression;
+use crate::util::rng::Rng;
 
 /// When a scripted action fires.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -40,6 +42,11 @@ pub enum Action {
     /// Change a device's capacity factor (e.g. 10.0 = now 10x slower) —
     /// drives the dynamic re-partition path.
     SetCapacity { device: DeviceId, capacity: f64 },
+    /// Degrade (or restore) the virtual network's link bandwidth to
+    /// `bps` bytes/sec from this moment on — the link-degradation hook
+    /// of the `bandwidth` scenario family. In-flight transfers keep the
+    /// rate they departed with; only subsequent sends are repriced.
+    SetBandwidth { bps: f64 },
 }
 
 #[derive(Debug, Clone)]
@@ -88,6 +95,11 @@ pub struct Scenario {
     /// Modeled compute cost; per-batch stage time = flops × this × C_i.
     pub ns_per_flop: f64,
 
+    /// Wire-compression policy for the whole cluster. `Off` keeps every
+    /// tensor f32 with the pre-compression `byte_len` accounting and
+    /// numerics, so all pre-compression scenario traces are unchanged.
+    pub compression: Compression,
+
     pub events: Vec<ScriptEvent>,
 }
 
@@ -115,6 +127,7 @@ impl Scenario {
             bandwidth_bps: 1e8,
             latency: Duration::from_micros(100),
             ns_per_flop: 1.0,
+            compression: Compression::Off,
             events: vec![],
         }
     }
@@ -143,6 +156,11 @@ impl Scenario {
         self
     }
 
+    pub fn with_compression(mut self, compression: Compression) -> Scenario {
+        self.compression = compression;
+        self
+    }
+
     /// Sanity checks the runner relies on.
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.n_devices() >= 2, "scenarios need at least 2 devices");
@@ -152,6 +170,13 @@ impl Scenario {
             let dev = match &e.action {
                 Action::Kill { device, .. } => *device,
                 Action::SetCapacity { device, .. } => *device,
+                Action::SetBandwidth { bps } => {
+                    anyhow::ensure!(
+                        bps.is_finite() && *bps > 0.0,
+                        "SetBandwidth needs a positive finite rate (got {bps})"
+                    );
+                    continue;
+                }
             };
             anyhow::ensure!(
                 dev != 0 && dev < self.n_devices(),
@@ -159,5 +184,107 @@ impl Scenario {
             );
         }
         Ok(())
+    }
+}
+
+/// Seeded chaos-schedule generator (ROADMAP: randomized-but-seeded
+/// kill/slowdown coverage). Produces `n_events` scripted events at
+/// strictly increasing, well-spaced batch marks:
+///
+/// * the first event is always a kill, so every chaos run exercises the
+///   fault handler at least once;
+/// * every kill revives within 10–60 virtual ms — far inside the default
+///   200 ms gradient timeout, so the probe round finds the worker
+///   alive-but-fresh (paper case 2) and the worker list never shrinks,
+///   which keeps any generated schedule recoverable by construction;
+/// * slowdowns draw a capacity factor in [1.5, 6.5].
+///
+/// The schedule is a pure function of `(n_devices, batches, n_events,
+/// seed)`: two runs of one chaos scenario replay the identical timeline,
+/// and the scenario suite asserts their traces are byte-identical.
+pub fn chaos_events(
+    n_devices: usize,
+    batches: u64,
+    n_events: usize,
+    seed: u64,
+) -> Vec<ScriptEvent> {
+    assert!(n_devices >= 2, "chaos needs at least one worker");
+    let mut rng = Rng::new(seed ^ 0xC4A0_5EED);
+    let mut events = Vec::with_capacity(n_events);
+    // leave headroom at both ends so every fault has batches left to
+    // replay and the run can still quiesce
+    let mut batch = 4 + rng.below(4);
+    for i in 0..n_events {
+        if batch + 5 >= batches {
+            break;
+        }
+        let device = 1 + rng.below((n_devices - 1) as u64) as usize;
+        let action = if i == 0 || rng.below(3) < 2 {
+            Action::Kill {
+                device,
+                revive_after: Some(Duration::from_millis(10 + rng.below(51))),
+            }
+        } else {
+            Action::SetCapacity { device, capacity: 1.5 + rng.next_f64() * 5.0 }
+        };
+        events.push(ScriptEvent { at: Trigger::BatchDone(batch), action });
+        batch += 6 + rng.below(8);
+    }
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_schedule_is_seed_deterministic() {
+        let a = chaos_events(4, 60, 5, 7);
+        let b = chaos_events(4, 60, 5, 7);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.action, y.action);
+        }
+        let c = chaos_events(4, 60, 5, 8);
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.at != y.at || x.action != y.action),
+            "different seeds should produce different schedules"
+        );
+    }
+
+    #[test]
+    fn chaos_schedule_is_recoverable_by_construction() {
+        for seed in 0..32u64 {
+            let evs = chaos_events(4, 80, 6, seed);
+            assert!(!evs.is_empty());
+            assert!(
+                matches!(evs[0].action, Action::Kill { .. }),
+                "seed {seed}: first event must be a kill"
+            );
+            let mut last = 0u64;
+            for e in &evs {
+                let Trigger::BatchDone(b) = e.at else {
+                    panic!("chaos triggers are batch-based")
+                };
+                assert!(b > last || last == 0, "marks strictly increase");
+                assert!(b + 5 < 80, "headroom at the end of the run");
+                last = b;
+                match &e.action {
+                    Action::Kill { device, revive_after } => {
+                        assert!((1..4).contains(device));
+                        let r = revive_after.expect("chaos kills always revive");
+                        assert!(r <= Duration::from_millis(60), "inside the fault timeout");
+                    }
+                    Action::SetCapacity { device, capacity } => {
+                        assert!((1..4).contains(device));
+                        assert!((1.5..=6.5).contains(capacity));
+                    }
+                    Action::SetBandwidth { .. } => panic!("chaos does not touch links"),
+                }
+            }
+            // every generated schedule passes scenario validation
+            Scenario::exact_recovery("chaos-gen", 4, 80).with_events(evs).validate().unwrap();
+        }
     }
 }

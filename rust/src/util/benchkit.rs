@@ -112,6 +112,19 @@ impl Table {
 /// Serialize a table as JSON (for the CI bench artifact).
 impl Table {
     pub fn to_json(&self, bench: &str) -> crate::util::json::Value {
+        self.to_json_with_metrics(bench, &[])
+    }
+
+    /// Like [`Table::to_json`], with a flat `metrics` list of named
+    /// machine-comparable numbers (byte ratios, relative timings) — the
+    /// values the CI bench-regression gate diffs against
+    /// `BENCH_BASELINE.json` (absolute wall times vary too much across
+    /// runners to gate on; ratios measured within one process do not).
+    pub fn to_json_with_metrics(
+        &self,
+        bench: &str,
+        metrics: &[(String, f64)],
+    ) -> crate::util::json::Value {
         use crate::util::json::Value;
         Value::obj(vec![
             ("bench", Value::Str(bench.to_string())),
@@ -131,8 +144,129 @@ impl Table {
                         .collect(),
                 ),
             ),
+            (
+                "metrics",
+                Value::Arr(
+                    metrics
+                        .iter()
+                        .map(|(name, value)| {
+                            Value::obj(vec![
+                                ("name", Value::Str(name.clone())),
+                                ("value", Value::Num(*value)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
+}
+
+/// One baseline-vs-current comparison produced by [`compare_metrics`].
+#[derive(Debug, Clone)]
+pub struct MetricDelta {
+    pub name: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// true when lower values are better for this metric.
+    pub lower_is_better: bool,
+    /// current/baseline (so 1.0 = unchanged).
+    pub ratio: f64,
+    /// Regressed past the tolerance in the metric's bad direction.
+    pub regressed: bool,
+}
+
+impl MetricDelta {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<34} baseline {:>9.4}  current {:>9.4}  ({:+.1}%){}",
+            self.name,
+            self.baseline,
+            self.current,
+            (self.ratio - 1.0) * 100.0,
+            if self.regressed { "  REGRESSION" } else { "" }
+        )
+    }
+}
+
+/// Diff a bench JSON (as emitted by [`emit_json`] /
+/// [`Table::to_json_with_metrics`]) against a committed baseline.
+///
+/// Baseline shape:
+/// ```json
+/// { "bench": "micro_runtime", "tolerance": 0.25,
+///   "metrics": [ {"name": "...", "value": 3.99, "better": "higher"} ] }
+/// ```
+///
+/// Every baseline metric must exist in the current run (a silently
+/// dropped metric would otherwise un-gate itself); a metric regresses
+/// when it moves past the tolerance in its bad direction. The tolerance
+/// is `tolerance_override` when given (an explicit operator choice),
+/// else the baseline's `tolerance` field, else 25%.
+pub fn compare_metrics(
+    baseline: &crate::util::json::Value,
+    current: &crate::util::json::Value,
+    tolerance_override: Option<f64>,
+) -> anyhow::Result<Vec<MetricDelta>> {
+    use anyhow::{anyhow, ensure};
+    ensure!(
+        current.get("skipped").and_then(|v| v.as_bool()) != Some(true),
+        "current bench run is marked skipped — no metrics to gate on"
+    );
+    let tolerance = tolerance_override
+        .or_else(|| baseline.get("tolerance").and_then(|v| v.as_f64()))
+        .unwrap_or(0.25);
+    let cur: std::collections::BTreeMap<String, f64> = current
+        .get("metrics")
+        .and_then(|v| v.as_arr())
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|m| {
+            Some((
+                m.get("name")?.as_str()?.to_string(),
+                m.get("value")?.as_f64()?,
+            ))
+        })
+        .collect();
+    let specs = baseline
+        .get("metrics")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("baseline has no metrics array"))?;
+    let mut out = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let name = spec
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("baseline metric without a name"))?;
+        let value = spec
+            .get("value")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("baseline metric {name:?} without a value"))?;
+        ensure!(value > 0.0, "baseline metric {name:?} must be positive");
+        let lower_is_better = match spec.get("better").and_then(|v| v.as_str()) {
+            Some("lower") => true,
+            Some("higher") | None => false,
+            Some(other) => return Err(anyhow!("metric {name:?}: bad direction {other:?}")),
+        };
+        let current_v = *cur
+            .get(name)
+            .ok_or_else(|| anyhow!("current bench output is missing metric {name:?}"))?;
+        let ratio = current_v / value;
+        let regressed = if lower_is_better {
+            ratio > 1.0 + tolerance
+        } else {
+            ratio < 1.0 / (1.0 + tolerance)
+        };
+        out.push(MetricDelta {
+            name: name.to_string(),
+            baseline: value,
+            current: current_v,
+            lower_is_better,
+            ratio,
+            regressed,
+        });
+    }
+    Ok(out)
 }
 
 /// When `FTPIPEHD_BENCH_JSON` names a file, write the bench results
@@ -140,12 +274,18 @@ impl Table {
 /// None records a skipped bench (e.g. artifacts absent) so the artifact
 /// always exists.
 pub fn emit_json(bench: &str, table: Option<&Table>) {
+    emit_json_with_metrics(bench, table, &[]);
+}
+
+/// [`emit_json`] with gate metrics attached (see
+/// [`Table::to_json_with_metrics`] and [`compare_metrics`]).
+pub fn emit_json_with_metrics(bench: &str, table: Option<&Table>, metrics: &[(String, f64)]) {
     use crate::util::json::Value;
     let Ok(path) = std::env::var("FTPIPEHD_BENCH_JSON") else {
         return;
     };
     let v = match table {
-        Some(t) => t.to_json(bench),
+        Some(t) => t.to_json_with_metrics(bench, metrics),
         None => Value::obj(vec![
             ("bench", Value::Str(bench.to_string())),
             ("skipped", Value::Bool(true)),
@@ -186,5 +326,66 @@ mod tests {
         let s = bench(2, 10, || count += 1);
         assert_eq!(count, 12);
         assert_eq!(s.n, 10);
+    }
+
+    fn gate_fixture(current_ratio: f64, current_rel: f64) -> crate::util::json::Value {
+        let mut t = Table::new(&["case", "mean"]);
+        t.row(&["x".into(), "1 ms".into()]);
+        t.to_json_with_metrics(
+            "micro_runtime",
+            &[
+                ("bytes_ratio".to_string(), current_ratio),
+                ("rel_time".to_string(), current_rel),
+            ],
+        )
+    }
+
+    fn gate_baseline() -> crate::util::json::Value {
+        crate::util::json::parse(
+            r#"{ "bench": "micro_runtime", "tolerance": 0.25, "metrics": [
+                 {"name": "bytes_ratio", "value": 4.0, "better": "higher"},
+                 {"name": "rel_time", "value": 1.0, "better": "lower"} ] }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn compare_metrics_passes_within_tolerance() {
+        let deltas = compare_metrics(&gate_baseline(), &gate_fixture(3.5, 1.2), None).unwrap();
+        assert_eq!(deltas.len(), 2);
+        assert!(deltas.iter().all(|d| !d.regressed), "{deltas:?}");
+    }
+
+    #[test]
+    fn compare_metrics_flags_regressions_in_the_bad_direction() {
+        // higher-is-better ratio collapses by >25%
+        let deltas = compare_metrics(&gate_baseline(), &gate_fixture(3.0, 1.0), None).unwrap();
+        assert!(deltas[0].regressed && !deltas[1].regressed);
+        // lower-is-better relative time blows past +25%
+        let deltas = compare_metrics(&gate_baseline(), &gate_fixture(4.0, 1.3), None).unwrap();
+        assert!(!deltas[0].regressed && deltas[1].regressed);
+        // improvements in the good direction never flag
+        let deltas = compare_metrics(&gate_baseline(), &gate_fixture(8.0, 0.1), None).unwrap();
+        assert!(deltas.iter().all(|d| !d.regressed));
+    }
+
+    #[test]
+    fn compare_metrics_cli_override_beats_the_baseline_tolerance() {
+        // the baseline pins 25%; an explicit 60% override must loosen it
+        let loose = compare_metrics(&gate_baseline(), &gate_fixture(3.0, 1.5), Some(0.6)).unwrap();
+        assert!(loose.iter().all(|d| !d.regressed), "{loose:?}");
+        let strict = compare_metrics(&gate_baseline(), &gate_fixture(3.0, 1.5), None).unwrap();
+        assert!(strict.iter().all(|d| d.regressed));
+    }
+
+    #[test]
+    fn compare_metrics_rejects_missing_metrics_and_skipped_runs() {
+        let current = Table::new(&["case"]).to_json_with_metrics("micro_runtime", &[]);
+        assert!(compare_metrics(&gate_baseline(), &current, None).is_err());
+        let skipped = crate::util::json::parse(
+            r#"{"bench": "micro_runtime", "skipped": true}"#,
+        )
+        .unwrap();
+        assert!(compare_metrics(&gate_baseline(), &skipped, None).is_err());
     }
 }

@@ -55,15 +55,55 @@ pub fn log(l: Level, target: &str, msg: std::fmt::Arguments<'_>) {
 }
 
 #[macro_export]
-macro_rules! log_error { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, module_path!(), format_args!($($a)*)) } }
+macro_rules! log_error {
+    ($($a:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Error,
+            module_path!(),
+            format_args!($($a)*),
+        )
+    };
+}
 #[macro_export]
-macro_rules! log_warn { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($a)*)) } }
+macro_rules! log_warn {
+    ($($a:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Warn,
+            module_path!(),
+            format_args!($($a)*),
+        )
+    };
+}
 #[macro_export]
-macro_rules! log_info { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($a)*)) } }
+macro_rules! log_info {
+    ($($a:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info,
+            module_path!(),
+            format_args!($($a)*),
+        )
+    };
+}
 #[macro_export]
-macro_rules! log_debug { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($a)*)) } }
+macro_rules! log_debug {
+    ($($a:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug,
+            module_path!(),
+            format_args!($($a)*),
+        )
+    };
+}
 #[macro_export]
-macro_rules! log_trace { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Trace, module_path!(), format_args!($($a)*)) } }
+macro_rules! log_trace {
+    ($($a:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Trace,
+            module_path!(),
+            format_args!($($a)*),
+        )
+    };
+}
 
 #[cfg(test)]
 mod tests {

@@ -191,7 +191,8 @@ fn continuous_training_warm_start_resumes_better() {
         / 5.0;
     assert!(
         early_acc > 0.5,
-        "warm start should begin near the pretrained accuracy, got {early_acc} (pretrain {pretrain_acc})"
+        "warm start should begin near the pretrained accuracy, \
+         got {early_acc} (pretrain {pretrain_acc})"
     );
 }
 

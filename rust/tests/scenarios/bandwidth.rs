@@ -1,0 +1,157 @@
+//! Family: bandwidth — scripted link degradation (`SetBandwidth`) and the
+//! INT8 wire-compression payoff. The virtual network prices every message
+//! as `latency + bytes/bandwidth`, so the compressed pipeline's speedup
+//! is a deterministic, asserted number rather than a benchmark anecdote:
+//! on a 1 MB/s link the `Compression::Full` run must finish the same
+//! script in <= 0.6x the f32 run's virtual wall-clock while converging to
+//! a final loss within 2%, and on a degraded 100 KB/s link the per-script
+//! speedup must reach >= 1.8x.
+//!
+//! A larger fixture (dim 64, batch 16 -> 4 KiB f32 activations) keeps the
+//! data plane dominant over the fixed-size init traffic (64 KiB bandwidth
+//! probes), as in the paper's setting where activation transfer rivals
+//! compute on the critical path.
+
+use std::time::Duration;
+
+use ftpipehd::net::Compression;
+use ftpipehd::sim::fixture::FixtureSpec;
+use ftpipehd::sim::script::{Action, Scenario, ScriptEvent, Trigger};
+
+use crate::common;
+
+const TOTAL: u64 = 60;
+
+fn spec() -> FixtureSpec {
+    FixtureSpec { dim: 64, batch: 16, ..FixtureSpec::default() }
+}
+
+/// Pipelined 3-stage base on a slow edge link.
+fn slow_link(name: &str, bps: f64, compression: Compression) -> Scenario {
+    let mut sc = Scenario::pipelined(name, 3, TOTAL);
+    sc.bandwidth_bps = bps;
+    // modeled compute fast relative to the link: communication-bound,
+    // the regime AccEPT targets
+    sc.ns_per_flop = 0.01;
+    // no faults are scripted here, and on a ~100 KB/s link an f32 batch
+    // round-trip alone can exceed the default 200 ms gradient timeout —
+    // keep the detector out of the way so slowness is never "a fault"
+    sc.fault_timeout = Duration::from_secs(30);
+    sc.compression = compression;
+    sc
+}
+
+/// Acceptance criterion: on a 1 MB/s link, Compression::Full completes
+/// the same script in <= 0.6x the f32 virtual wall-clock, bit-identically
+/// across two invocations, with a final loss within 2% of the f32 run.
+#[test]
+fn bandwidth_full_compression_hits_0_6x_on_1mbps_and_converges() {
+    let off =
+        common::run_once_spec("bw-1m-off", &slow_link("bw-1m-off", 1e6, Compression::Off), &spec());
+    let full = common::run_twice_deterministic_spec(
+        "bw-1m-full",
+        &slow_link("bw-1m-full", 1e6, Compression::Full),
+        &spec(),
+    );
+    common::assert_loss_continuity("bw-1m-off", &off, TOTAL);
+    common::assert_loss_continuity("bw-1m-full", &full, TOTAL);
+    assert_eq!((off.recoveries, full.recoveries), (0, 0), "slow links are not faults");
+    assert!(
+        full.virtual_ms <= 0.6 * off.virtual_ms,
+        "compressed run must finish in <=0.6x of f32: {:.1}ms vs {:.1}ms (ratio {:.2})",
+        full.virtual_ms,
+        off.virtual_ms,
+        full.virtual_ms / off.virtual_ms
+    );
+    let last = TOTAL - 1;
+    let loss_off = off.losses[&last];
+    let loss_full = full.losses[&last];
+    assert!(
+        (loss_full - loss_off).abs() <= 0.02 * loss_off.abs(),
+        "quantized training must converge within 2% of f32: {loss_full} vs {loss_off}"
+    );
+    // byte accounting reflects the compressed wire (activations dominate)
+    assert!(
+        full.net_bytes < off.net_bytes / 2,
+        "compressed bytes {} vs f32 bytes {}",
+        full.net_bytes,
+        off.net_bytes
+    );
+}
+
+/// Scripted link degradation: the link drops from 8 MB/s to 100 KB/s at
+/// batch 9. On the degraded link the compressed pipeline's virtual-time
+/// batch latency must beat f32 by >= 1.8x over the whole script.
+#[test]
+fn bandwidth_degraded_link_speedup_is_at_least_1_8x() {
+    let degrade = |name: &str, compression| {
+        slow_link(name, 8e6, compression).with_events(vec![ScriptEvent {
+            at: Trigger::BatchDone(9),
+            action: Action::SetBandwidth { bps: 1e5 },
+        }])
+    };
+    let off =
+        common::run_once_spec("bw-deg-off", &degrade("bw-deg-off", Compression::Off), &spec());
+    let full = common::run_twice_deterministic_spec(
+        "bw-deg-full",
+        &degrade("bw-deg-full", Compression::Full),
+        &spec(),
+    );
+    common::assert_trace_contains("bw-deg-off", &off, "bandwidth -> 100000");
+    common::assert_loss_continuity("bw-deg-full", &full, TOTAL);
+    assert_eq!((off.recoveries, full.recoveries), (0, 0), "degradation is not a fault");
+    let speedup = off.virtual_ms / full.virtual_ms;
+    assert!(
+        speedup >= 1.8,
+        "degraded-link speedup {speedup:.2}x < 1.8x ({:.1}ms vs {:.1}ms)",
+        off.virtual_ms,
+        full.virtual_ms
+    );
+}
+
+/// Activations-only compresses the data plane but leaves weight traffic
+/// f32; Full compresses replica pushes too, so its replica bytes shrink
+/// while both beat Off. (Also pins the policy granularity: the knob is
+/// per message class, not all-or-nothing.)
+#[test]
+fn bandwidth_policy_granularity_orders_total_bytes() {
+    let off = common::run_once_spec(
+        "bw-pol-off",
+        &slow_link("bw-pol-off", 1e6, Compression::Off),
+        &spec(),
+    );
+    let acts = common::run_once_spec(
+        "bw-pol-acts",
+        &slow_link("bw-pol-acts", 1e6, Compression::Activations),
+        &spec(),
+    );
+    let full = common::run_once_spec(
+        "bw-pol-full",
+        &slow_link("bw-pol-full", 1e6, Compression::Full),
+        &spec(),
+    );
+    assert!(
+        full.net_bytes < acts.net_bytes && acts.net_bytes < off.net_bytes,
+        "byte ordering must follow the policy: full {} < activations {} < off {}",
+        full.net_bytes,
+        acts.net_bytes,
+        off.net_bytes
+    );
+}
+
+/// Compression::Off is the identity: the same script without compression
+/// twice produces byte-identical traces (the existing families all run
+/// Off, so their goldens are untouched — this pins the invariant inside
+/// the bandwidth family too).
+#[test]
+fn bandwidth_off_is_deterministic_identity() {
+    let mut sc = slow_link("bw-off-id", 1e6, Compression::Off);
+    sc.events = vec![ScriptEvent {
+        at: Trigger::BatchDone(20),
+        action: Action::SetBandwidth { bps: 5e5 },
+    }];
+    // kill/slowdown-free run: only the link changes mid-flight
+    let out = common::run_twice_deterministic_spec("bw-off-id", &sc, &spec());
+    common::assert_loss_continuity("bw-off-id", &out, TOTAL);
+    assert_eq!(out.recoveries, 0, "a slow link is not a fault");
+}

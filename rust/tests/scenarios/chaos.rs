@@ -1,0 +1,72 @@
+//! Family: chaos — randomized-but-seeded kill/slowdown schedules
+//! (ROADMAP open item). The schedule generator (`sim::script::chaos_events`)
+//! derives the whole timeline from a seed: kills always revive inside the
+//! gradient timeout (paper case 2) and slowdowns stay within the modeled
+//! capacity range, so every generated schedule is recoverable by
+//! construction. The point of the family is breadth + determinism: a
+//! randomized failure storm must still produce byte-identical traces and
+//! bit-identical weights across two runs of the same seed.
+
+use ftpipehd::sim::script::{chaos_events, Action, Scenario};
+
+use crate::common;
+
+const TOTAL: u64 = 60;
+const DEVICES: usize = 4;
+
+fn chaos_scenario(seed: u64) -> Scenario {
+    let mut sc = Scenario::exact_recovery(&format!("chaos-{seed}"), DEVICES, TOTAL);
+    sc.events = chaos_events(DEVICES, TOTAL, 5, seed);
+    sc
+}
+
+fn kills(sc: &Scenario) -> usize {
+    sc.events.iter().filter(|e| matches!(e.action, Action::Kill { .. })).count()
+}
+
+#[test]
+fn chaos_seed_7_storm_is_deterministic_and_survivable() {
+    let sc = chaos_scenario(7);
+    assert!(kills(&sc) >= 1, "generator must schedule at least one kill");
+    // run twice: byte-identical traces + bit-identical weights
+    let out = common::run_twice_deterministic("chaos-7", &sc);
+    common::assert_loss_continuity("chaos-7", &out, TOTAL);
+    assert!(out.recoveries >= 1, "a chaos kill must trip the fault handler");
+    common::assert_trace_contains("chaos-7", &out, "fault case 2");
+}
+
+#[test]
+fn chaos_seed_21_storm_is_deterministic_and_survivable() {
+    let sc = chaos_scenario(21);
+    assert!(kills(&sc) >= 1);
+    let out = common::run_twice_deterministic("chaos-21", &sc);
+    common::assert_loss_continuity("chaos-21", &out, TOTAL);
+    assert!(out.recoveries >= 1);
+}
+
+#[test]
+fn chaos_different_seeds_take_different_paths() {
+    // the storms must actually differ (otherwise the generator is not
+    // exploring the failure space), while each remains self-consistent
+    let a = common::run_once("chaos-path-7", &chaos_scenario(7));
+    let b = common::run_once("chaos-path-21", &chaos_scenario(21));
+    assert_ne!(a.trace, b.trace, "two seeds replayed the identical storm");
+    common::assert_loss_continuity("chaos-path-7", &a, TOTAL);
+    common::assert_loss_continuity("chaos-path-21", &b, TOTAL);
+}
+
+#[test]
+fn chaos_fast_revives_keep_the_full_worker_list() {
+    // every chaos kill revives within the fault timeout, so recovery is
+    // always case 2: the pipeline never shrinks below all 4 devices
+    let out = common::run_once("chaos-list", &chaos_scenario(7));
+    for r in &out.redists {
+        assert_eq!(
+            r.new_list.len(),
+            DEVICES,
+            "case-2 recovery must keep all devices: {:?}",
+            r.new_list
+        );
+        assert!(r.failed.is_empty(), "case 2 has no failed stages");
+    }
+}

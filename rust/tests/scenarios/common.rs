@@ -14,20 +14,30 @@ fn fixture_dir(tag: &str) -> PathBuf {
     std::env::temp_dir().join(format!("ftpipehd-scn-{tag}-{}", std::process::id()))
 }
 
-/// Run `sc` once against a fresh default fixture.
-pub fn run_once(tag: &str, sc: &Scenario) -> ScenarioOutcome {
+/// Run `sc` once against a fresh fixture built from `spec`.
+pub fn run_once_spec(tag: &str, sc: &Scenario, spec: &FixtureSpec) -> ScenarioOutcome {
     let dir = fixture_dir(tag);
-    materialize(&dir, &FixtureSpec::default()).expect("fixture");
+    materialize(&dir, spec).expect("fixture");
     let out = run_scenario(sc, &dir).expect("scenario run");
     let _ = std::fs::remove_dir_all(&dir);
     out
 }
 
-/// Run `sc` twice against one fixture and assert byte-identical traces
-/// and bit-identical weights — the acceptance criterion of the harness.
-pub fn run_twice_deterministic(tag: &str, sc: &Scenario) -> ScenarioOutcome {
+/// Run `sc` once against a fresh default fixture.
+pub fn run_once(tag: &str, sc: &Scenario) -> ScenarioOutcome {
+    run_once_spec(tag, sc, &FixtureSpec::default())
+}
+
+/// Run `sc` twice against one fixture built from `spec` and assert
+/// byte-identical traces and bit-identical weights — the acceptance
+/// criterion of the harness.
+pub fn run_twice_deterministic_spec(
+    tag: &str,
+    sc: &Scenario,
+    spec: &FixtureSpec,
+) -> ScenarioOutcome {
     let dir = fixture_dir(tag);
-    materialize(&dir, &FixtureSpec::default()).expect("fixture");
+    materialize(&dir, spec).expect("fixture");
     let a = run_scenario(sc, &dir).expect("first run");
     let b = run_scenario(sc, &dir).expect("second run");
     let _ = std::fs::remove_dir_all(&dir);
@@ -39,6 +49,11 @@ pub fn run_twice_deterministic(tag: &str, sc: &Scenario) -> ScenarioOutcome {
     );
     assert_eq!(a.net_bytes, b.net_bytes, "{tag}: byte accounting differs");
     a
+}
+
+/// [`run_twice_deterministic_spec`] with the default fixture.
+pub fn run_twice_deterministic(tag: &str, sc: &Scenario) -> ScenarioOutcome {
+    run_twice_deterministic_spec(tag, sc, &FixtureSpec::default())
 }
 
 /// Every batch of the run completed with a finite loss (recovered-loss

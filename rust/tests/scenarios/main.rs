@@ -15,9 +15,13 @@
 //! * `mid_redistribution` — a second failure lands during redistribution
 //! * `repartition`        — a worker slows down; dynamic re-partition
 //! * `churn`              — kill + fast restart (case 2), late rejoin
+//! * `chaos`              — seeded randomized kill/slowdown storms
+//! * `bandwidth`          — link degradation + INT8 wire compression
 
 mod common;
 
+mod bandwidth;
+mod chaos;
 mod churn;
 mod mid_redistribution;
 mod multi_fault;

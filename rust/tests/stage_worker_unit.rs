@@ -12,7 +12,8 @@ use ftpipehd::config::DeviceConfig;
 use ftpipehd::device::SimDevice;
 use ftpipehd::manifest::Manifest;
 use ftpipehd::net::message::{Message, ReplicaKind, TrainInit};
-use ftpipehd::net::{TensorBuf, Transport};
+use ftpipehd::net::Compression;
+use ftpipehd::net::{Transport, WireTensor};
 use ftpipehd::pipeline::{Flow, StageWorker};
 use ftpipehd::runtime::load_all_blocks;
 
@@ -73,6 +74,7 @@ fn init(ranges: Vec<(usize, usize)>, list: Vec<usize>) -> TrainInit {
         chain_every: 0,
         global_every: 0,
         status: 0,
+        compression: Compression::Off,
     }
 }
 
@@ -157,7 +159,7 @@ fn replica_push_stored_and_served() {
             assert!(!idxs.contains(&0), "block 0 unknown here");
             // replica content served verbatim
             let b2 = blocks.iter().find(|(i, _)| *i == 2).unwrap();
-            assert_eq!(b2.1[0][0], 9.0);
+            assert_eq!(b2.1[0].as_f32().unwrap()[0], 9.0);
         }
         other => panic!("unexpected {other:?}"),
     }
@@ -245,11 +247,10 @@ fn peer_missing_block_escalates_to_central() {
     // stage 2 replies WITHOUT block 4 -> worker must escalate to central
     w.handle_message(&net, 2, Message::Weights { blocks: vec![] }).unwrap();
     let sent = net.take();
-    assert!(
-        sent.iter()
-            .any(|(to, m)| *to == 0 && matches!(m, Message::FetchWeights { blocks } if blocks == &vec![4])),
-        "escalation missing: {sent:?}"
-    );
+    let escalated = sent.iter().any(|(to, m)| {
+        *to == 0 && matches!(m, Message::FetchWeights { blocks } if blocks == &vec![4])
+    });
+    assert!(escalated, "escalation missing: {sent:?}");
 }
 
 #[test]
@@ -294,7 +295,7 @@ fn direct_weight_push_overwrites_owned_blocks_only() {
         .unwrap();
     net.take();
     let sizes: Vec<usize> = w.params.get(3).unwrap().0.iter().map(|t| t.len()).collect();
-    let push: Vec<TensorBuf> = sizes.iter().map(|&n| vec![3.25; n].into()).collect();
+    let push: Vec<WireTensor> = sizes.iter().map(|&n| vec![3.25; n].into()).collect();
     w.handle_message(
         &net,
         0,

@@ -82,6 +82,7 @@ fn two_process_style_pipeline_over_tcp() {
         chain_every: 0,
         global_every: 0,
         status: 0,
+        compression: ftpipehd::net::Compression::Off,
     };
     ep.send(1, Message::InitState(ti.clone())).unwrap();
     central.apply_init(&ti).unwrap();
@@ -96,9 +97,11 @@ fn two_process_style_pipeline_over_tcp() {
     let deadline = Instant::now() + Duration::from_secs(120);
     while completed < 8 && Instant::now() < deadline {
         while injected < 8 && injected - completed < 2 {
-            let x: Vec<f32> =
-                (0..in_elems).map(|i| ((i as u64 + injected * 13) % 17) as f32 * 0.1 - 0.8).collect();
-            let labels: Vec<i32> = (0..lab_elems).map(|i| ((i as u64 + injected) % 4) as i32).collect();
+            let x: Vec<f32> = (0..in_elems)
+                .map(|i| ((i as u64 + injected * 13) % 17) as f32 * 0.1 - 0.8)
+                .collect();
+            let labels: Vec<i32> =
+                (0..lab_elems).map(|i| ((i as u64 + injected) % 4) as i32).collect();
             ep.send(1, Message::Labels { batch: injected, is_eval: false, data: labels })
                 .unwrap();
             central
@@ -109,7 +112,7 @@ fn two_process_style_pipeline_over_tcp() {
         if let Some((_, msg)) = ep.recv_timeout(Duration::from_millis(20)) {
             if let Message::Backward { batch, grad, loss, ncorrect, reports } = msg {
                 let done = central
-                    .backward(&ep, batch, grad, loss, ncorrect, reports)
+                    .backward(&ep, batch, grad.into_f32(), loss, ncorrect, reports)
                     .unwrap();
                 let cb = done.expect("stage 0 completes batches");
                 losses.push(cb.loss);

@@ -8,10 +8,10 @@
 
 use std::time::Duration;
 
-use ftpipehd::net::message::{ExecReport, Message, Payload, ReplicaKind, TrainInit};
+use ftpipehd::net::message::{ExecReport, Message, Payload, ReplicaKind, TrainInit, WireTensor};
 use ftpipehd::net::sim::SimNet;
 use ftpipehd::net::tcp::TcpEndpoint;
-use ftpipehd::net::{TensorBuf, Transport};
+use ftpipehd::net::{Compression, QTensor, Transport};
 
 /// Messages spanning every wire family: small control, tensor payloads,
 /// nested wire blocks, state structs.
@@ -34,10 +34,25 @@ fn probe_messages() -> Vec<Message> {
         Message::Labels { batch: 11, is_eval: false, data: vec![1, 2, 3, 4] },
         Message::Backward {
             batch: 11,
-            grad: TensorBuf::from(vec![-0.25; 127]),
+            grad: vec![-0.25; 127].into(),
             loss: 1.5,
             ncorrect: 7.0,
             reports: vec![ExecReport { device: 1, avg_ms: 12.5, batches: 8 }],
+        },
+        // quantized data plane: the INT8 arms must survive both
+        // transports bit-exactly, like their f32 siblings
+        Message::Forward {
+            batch: 13,
+            version0: 3,
+            is_eval: false,
+            data: Payload::Q8(QTensor::quantize(&[0.0, -1.5, 2.25, 0.125])),
+        },
+        Message::Backward {
+            batch: 13,
+            grad: WireTensor::Q8(QTensor::quantize(&[-0.5, 0.5, 0.0625])),
+            loss: 0.25,
+            ncorrect: 3.0,
+            reports: vec![],
         },
         Message::EvalResult { batch: 4, loss: 0.75, ncorrect: 30.0 },
         Message::InitState(TrainInit {
@@ -54,6 +69,7 @@ fn probe_messages() -> Vec<Message> {
             chain_every: 50,
             global_every: 100,
             status: 0,
+            compression: Compression::Activations,
         }),
         Message::Repartition {
             ranges: vec![(0, 3), (4, 5)],
@@ -69,7 +85,10 @@ fn probe_messages() -> Vec<Message> {
             owner_stage: 1,
             owner_device: 1,
             version: 9,
-            blocks: vec![(4, vec![vec![-1.0; 33].into()])],
+            blocks: vec![(
+                4,
+                vec![vec![-1.0; 33].into(), WireTensor::Q8(QTensor::quantize(&[1.0, 2.0]))],
+            )],
         },
         Message::FetchDone { id: 1 },
         Message::Commit,

@@ -27,7 +27,12 @@ fn simnet_forward_delivery_shares_the_activation_buffer() {
     eps[0]
         .send(
             1,
-            Message::Forward { batch: 3, version0: 1, is_eval: false, data: Payload::F32(act.clone()) },
+            Message::Forward {
+                batch: 3,
+                version0: 1,
+                is_eval: false,
+                data: Payload::F32(act.clone()),
+            },
         )
         .unwrap();
     match eps[1].recv_timeout(Duration::from_secs(1)) {
@@ -48,7 +53,7 @@ fn replica_push_through_simnet_shares_stage_weights_end_to_end() {
 
     // owner side: to_wire is refcount bumps
     let wire = to_wire(&sp);
-    assert!(wire[0].1[0].ptr_eq(&before));
+    assert!(wire[0].1[0].as_f32().unwrap().ptr_eq(&before));
 
     eps[0]
         .send(
@@ -67,7 +72,10 @@ fn replica_push_through_simnet_shares_stage_weights_end_to_end() {
     let mut store = BackupStore::default();
     match eps[1].recv_timeout(Duration::from_secs(1)) {
         Some((0, Message::ReplicaPush { kind, owner_stage, owner_device, version, blocks })) => {
-            assert!(blocks[0].1[0].ptr_eq(&before), "wire blocks must share the owner's buffer");
+            assert!(
+                blocks[0].1[0].as_f32().unwrap().ptr_eq(&before),
+                "wire blocks must share the owner's buffer"
+            );
             store.store(owner_device, kind, owner_stage, version, from_wire(&blocks));
         }
         other => panic!("unexpected {other:?}"),
@@ -80,7 +88,7 @@ fn optimizer_step_forks_shared_weights_instead_of_corrupting_replicas() {
     let mut sp = stage_params(&[1.0; 8]);
     // replicate: the backup shares the weight buffer
     let wire = to_wire(&sp);
-    let replica = wire[0].1[0].clone();
+    let replica = wire[0].1[0].as_f32().unwrap().clone();
     assert!(replica.ptr_eq(&sp.blocks[&0].0[0]));
 
     // the owner's next update must fork, not mutate the replica
