@@ -12,15 +12,36 @@
 //!
 //! The npy format makes checkpoints directly loadable from Python
 //! (`np.load`) — verified by `python/tests/test_interchange.py`.
+//!
+//! Persistence goes through the [`CheckpointSink`] seam (DESIGN.md §9):
+//! [`DiskSink`] keeps numbered directories under one root and loads the
+//! newest *complete* one; [`MemorySink`] is the deterministic in-memory
+//! store the virtual-clock scenario runner uses to script central-node
+//! crash/restart without touching the filesystem.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::log_warn;
 use crate::model::BlockParams;
 use crate::util::json::{self, Value};
 use crate::util::npy;
+
+/// fsync a directory's entry table. A hard requirement on unix, where
+/// the write-tmp/rename commit protocol depends on it; a no-op on
+/// platforms whose `File::open` cannot open directories (Windows),
+/// where crash-durability of directory entries is best-effort anyway.
+fn fsync_dir(path: &Path) -> Result<()> {
+    #[cfg(unix)]
+    std::fs::File::open(path)
+        .and_then(|d| d.sync_all())
+        .with_context(|| format!("fsync {}", path.display()))?;
+    #[cfg(not(unix))]
+    let _ = path;
+    Ok(())
+}
 
 /// Training state captured alongside the weights (paper Table I subset).
 #[derive(Debug, Clone, PartialEq)]
@@ -42,7 +63,13 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
-    /// Persist atomically: write to `<dir>.tmp`, then rename.
+    /// Persist atomically: write to `<dir>.tmp`, fsync every file, then
+    /// rename. The rename is the commit point — a crash at any earlier
+    /// moment leaves only a `<dir>.tmp` leftover (which loaders ignore),
+    /// never a committed directory with half-durable contents. Without
+    /// the fsyncs the rename could land on disk before the data it
+    /// "commits", which is exactly the partial-latest-pointer state the
+    /// loader must never observe.
     pub fn save(&self, dir: impl AsRef<Path>) -> Result<()> {
         let dir = dir.as_ref();
         let tmp = PathBuf::from(format!("{}.tmp", dir.display()));
@@ -62,11 +89,30 @@ impl Checkpoint {
             }
         }
         std::fs::write(tmp.join("state.json"), self.state_json().to_pretty())?;
+        for entry in std::fs::read_dir(&tmp)? {
+            let path = entry?.path();
+            std::fs::File::open(&path)
+                .and_then(|f| f.sync_all())
+                .with_context(|| format!("fsync {}", path.display()))?;
+        }
+        // the directory's own entries must be durable BEFORE the rename
+        // commits them, or a committed ckpt-N could surface with files
+        // missing — the exact half-durable state the loader must never see
+        fsync_dir(&tmp)?;
 
         if dir.exists() {
             std::fs::remove_dir_all(dir)?;
         }
         std::fs::rename(&tmp, dir).context("committing checkpoint rename")?;
+        // make the rename itself durable (directory-entry update in the
+        // parent). Best-effort with a warning: a failure here can only
+        // lose the *newest* entry across a power cut, never corrupt it —
+        // the loader falls back to the previous complete checkpoint.
+        if let Some(parent) = dir.parent() {
+            if let Err(e) = fsync_dir(parent) {
+                log_warn!("fsync of checkpoint parent {} failed: {e:#}", parent.display());
+            }
+        }
         Ok(())
     }
 
@@ -114,10 +160,10 @@ impl Checkpoint {
         let v = json::parse(&raw).map_err(|e| anyhow!("{e}"))?;
         let usize_pair = |x: &Value| -> Result<(usize, usize)> {
             let a = x.as_arr().ok_or_else(|| anyhow!("range not array"))?;
-            Ok((
-                a[0].as_usize().ok_or_else(|| anyhow!("bad range"))?,
-                a[1].as_usize().ok_or_else(|| anyhow!("bad range"))?,
-            ))
+            // a truncated/corrupt state.json must error, never index-panic
+            let lo = a.first().and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("bad range"))?;
+            let hi = a.get(1).and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("bad range"))?;
+            Ok((lo, hi))
         };
         let mut shapes: BTreeMap<usize, Vec<Vec<usize>>> = BTreeMap::new();
         for (k, tensors) in v.req("shapes").map_err(|e| anyhow!("{e}"))?.as_obj().unwrap_or(&[]) {
@@ -174,6 +220,134 @@ impl Checkpoint {
             weights.insert(b, BlockParams(bp));
         }
         Ok(Checkpoint { state, weights })
+    }
+}
+
+// ---------------------------------------------------------------------
+// the checkpoint sink seam (DESIGN.md §9)
+// ---------------------------------------------------------------------
+
+/// Where periodic central-node checkpoints go and where a restarted
+/// central node boots from. Two implementations: [`DiskSink`] (real
+/// deployments, numbered directories, crash-safe) and [`MemorySink`]
+/// (the deterministic scenario harness — no filesystem, no wall clock).
+pub trait CheckpointSink: Send {
+    /// Persist `ck`. Returns the committed batch the entry is filed
+    /// under.
+    fn save(&mut self, ck: &Checkpoint) -> Result<i64>;
+
+    /// The newest *complete* checkpoint, or `None` if nothing usable was
+    /// ever persisted. Incomplete entries (a crash mid-save) must be
+    /// skipped in favor of the newest complete one, never returned as
+    /// errors.
+    fn load_latest(&self) -> Result<Option<Checkpoint>>;
+}
+
+/// Disk-backed sink: every save lands in `<root>/ckpt-<committed:08>`
+/// via [`Checkpoint::save`]'s fsync-then-rename protocol. The loader
+/// scans numbered directories newest-first and returns the first one
+/// that loads completely — a leftover `ckpt-*.tmp` (crash between write
+/// and rename) or a committed-but-corrupt directory falls through to the
+/// previous good checkpoint. After each save, entries beyond the newest
+/// `keep` are pruned — a multi-day run must not grow one full model copy
+/// per period until the disk fills and checkpointing silently dies.
+pub struct DiskSink {
+    root: PathBuf,
+    /// Numbered entries retained after a successful save (min 1).
+    keep: usize,
+}
+
+impl DiskSink {
+    pub fn new(root: impl Into<PathBuf>) -> DiskSink {
+        DiskSink { root: root.into(), keep: 4 }
+    }
+
+    /// Override the retention count (clamped to at least 1).
+    pub fn with_keep(mut self, keep: usize) -> DiskSink {
+        self.keep = keep.max(1);
+        self
+    }
+
+    /// Numbered entries under the root, newest first. `.tmp` leftovers
+    /// and foreign names parse-fail and are skipped here.
+    fn entries_desc(&self) -> Vec<(i64, PathBuf)> {
+        let Ok(rd) = std::fs::read_dir(&self.root) else {
+            return vec![];
+        };
+        let mut out: Vec<(i64, PathBuf)> = rd
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                let name = e.file_name().into_string().ok()?;
+                let n: i64 = name.strip_prefix("ckpt-")?.parse().ok()?;
+                Some((n, e.path()))
+            })
+            .collect();
+        out.sort_by(|a, b| b.cmp(a));
+        out
+    }
+}
+
+impl CheckpointSink for DiskSink {
+    fn save(&mut self, ck: &Checkpoint) -> Result<i64> {
+        let n = ck.state.committed_batch.max(0);
+        std::fs::create_dir_all(&self.root)
+            .with_context(|| format!("creating {}", self.root.display()))?;
+        ck.save(self.root.join(format!("ckpt-{n:08}")))?;
+        // prune beyond the newest `keep` entries — only after the new one
+        // committed, so retention can never reduce what is recoverable
+        for (old, path) in self.entries_desc().into_iter().skip(self.keep) {
+            if let Err(e) = std::fs::remove_dir_all(&path) {
+                log_warn!("pruning checkpoint ckpt-{old:08} failed: {e}");
+            }
+        }
+        Ok(n)
+    }
+
+    fn load_latest(&self) -> Result<Option<Checkpoint>> {
+        for (n, path) in self.entries_desc() {
+            match Checkpoint::load(&path) {
+                Ok(ck) => return Ok(Some(ck)),
+                Err(e) => {
+                    log_warn!("skipping incomplete checkpoint ckpt-{n:08}: {e:#}");
+                }
+            }
+        }
+        Ok(None)
+    }
+}
+
+/// In-memory sink for the deterministic harness: saves clone the
+/// checkpoint (cheap — `BlockParams` share `TensorBuf`s) and loads
+/// return the newest entry. Purely deterministic: no filesystem, no
+/// clock, no iteration-order dependence.
+#[derive(Default)]
+pub struct MemorySink {
+    saved: Vec<Checkpoint>,
+}
+
+impl MemorySink {
+    pub fn len(&self) -> usize {
+        self.saved.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.saved.is_empty()
+    }
+
+    /// Borrowing peek at the newest entry (the trait method clones).
+    pub fn latest(&self) -> Option<&Checkpoint> {
+        self.saved.last()
+    }
+}
+
+impl CheckpointSink for MemorySink {
+    fn save(&mut self, ck: &Checkpoint) -> Result<i64> {
+        self.saved.push(ck.clone());
+        Ok(ck.state.committed_batch)
+    }
+
+    fn load_latest(&self) -> Result<Option<Checkpoint>> {
+        Ok(self.saved.last().cloned())
     }
 }
 
@@ -244,5 +418,93 @@ mod tests {
         // corrupt one tensor file with the wrong shape
         crate::util::npy::write_f32(dir.join("block2_p0.npy"), &[5], &[0.0; 5]).unwrap();
         assert!(Checkpoint::load(&dir).is_err());
+    }
+
+    #[test]
+    fn disk_sink_numbers_entries_and_loads_the_newest() {
+        let root = tmpdir("sink-newest");
+        let mut sink = DiskSink::new(&root);
+        let mut ck = sample();
+        ck.state.committed_batch = 19;
+        assert_eq!(sink.save(&ck).unwrap(), 19);
+        ck.state.committed_batch = 39;
+        ck.weights.get_mut(&0).unwrap().0[0] = vec![7.0; 6].into();
+        assert_eq!(sink.save(&ck).unwrap(), 39);
+        assert!(root.join("ckpt-00000019").is_dir());
+        assert!(root.join("ckpt-00000039").is_dir());
+        let back = sink.load_latest().unwrap().expect("latest");
+        assert_eq!(back.state.committed_batch, 39);
+        assert_eq!(back.weights[&0].0[0][0], 7.0);
+    }
+
+    #[test]
+    fn disk_sink_skips_incomplete_newer_entries() {
+        let root = tmpdir("sink-incomplete");
+        let mut sink = DiskSink::new(&root);
+        let mut ck = sample();
+        ck.state.committed_batch = 19;
+        sink.save(&ck).unwrap();
+        // a crash between tmp-write and rename leaves only a .tmp dir
+        std::fs::create_dir_all(root.join("ckpt-00000059.tmp")).unwrap();
+        std::fs::write(root.join("ckpt-00000059.tmp/state.json"), "{").unwrap();
+        // and a committed-looking newer dir may still be incomplete
+        // (truncated state, or a tensor file that never made it)
+        std::fs::create_dir_all(root.join("ckpt-00000039")).unwrap();
+        std::fs::write(root.join("ckpt-00000039/state.json"), "{\"committed").unwrap();
+        let back = sink.load_latest().unwrap().expect("fell back to the good entry");
+        assert_eq!(back.state.committed_batch, 19);
+    }
+
+    #[test]
+    fn disk_sink_missing_tensor_file_falls_back() {
+        let root = tmpdir("sink-missing-npy");
+        let mut sink = DiskSink::new(&root);
+        let mut ck = sample();
+        ck.state.committed_batch = 9;
+        sink.save(&ck).unwrap();
+        ck.state.committed_batch = 29;
+        sink.save(&ck).unwrap();
+        std::fs::remove_file(root.join("ckpt-00000029/block0_p1.npy")).unwrap();
+        let back = sink.load_latest().unwrap().expect("older entry still loads");
+        assert_eq!(back.state.committed_batch, 9);
+    }
+
+    #[test]
+    fn disk_sink_empty_or_absent_root_is_none() {
+        let sink = DiskSink::new(tmpdir("sink-absent"));
+        assert!(sink.load_latest().unwrap().is_none());
+        let root = tmpdir("sink-empty");
+        std::fs::create_dir_all(&root).unwrap();
+        assert!(DiskSink::new(&root).load_latest().unwrap().is_none());
+    }
+
+    #[test]
+    fn disk_sink_prunes_beyond_keep() {
+        let root = tmpdir("sink-prune");
+        let mut sink = DiskSink::new(&root).with_keep(2);
+        let mut ck = sample();
+        for committed in [9i64, 19, 29, 39] {
+            ck.state.committed_batch = committed;
+            sink.save(&ck).unwrap();
+        }
+        assert!(!root.join("ckpt-00000009").exists(), "oldest pruned");
+        assert!(!root.join("ckpt-00000019").exists(), "second-oldest pruned");
+        assert!(root.join("ckpt-00000029").is_dir());
+        assert!(root.join("ckpt-00000039").is_dir());
+        assert_eq!(sink.load_latest().unwrap().unwrap().state.committed_batch, 39);
+    }
+
+    #[test]
+    fn memory_sink_returns_newest_clone() {
+        let mut sink = MemorySink::default();
+        assert!(sink.load_latest().unwrap().is_none());
+        let mut ck = sample();
+        ck.state.committed_batch = 4;
+        sink.save(&ck).unwrap();
+        ck.state.committed_batch = 9;
+        sink.save(&ck).unwrap();
+        assert_eq!(sink.len(), 2);
+        assert_eq!(sink.latest().unwrap().state.committed_batch, 9);
+        assert_eq!(sink.load_latest().unwrap().unwrap().state.committed_batch, 9);
     }
 }

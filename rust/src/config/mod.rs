@@ -131,8 +131,16 @@ pub struct RunConfig {
     /// value (paper §IV-C changes lr at epoch 130).
     pub lr_drops: Vec<(usize, f32)>,
     /// Central-node checkpointing (paper §III-E: periodic save-to-disk
-    /// tolerates central failure): (directory, every N batches).
+    /// tolerates central failure): (directory, every N batches). The
+    /// directory holds numbered `ckpt-*` entries (see
+    /// [`crate::checkpoint::DiskSink`]).
     pub checkpoint: Option<(String, u64)>,
+    /// Boot from the newest complete checkpoint under this directory
+    /// (paper §III-E: "recovering from them every time it fails"):
+    /// committed frontier, partition, learning rate, and weights come
+    /// from the checkpoint; profiling is skipped in favor of the
+    /// manifest's flop counts. An empty/absent directory starts fresh.
+    pub resume_from: Option<String>,
 
     pub engine: Engine,
     pub seed: u64,
@@ -164,6 +172,7 @@ impl Default for RunConfig {
             fault: None,
             lr_drops: vec![],
             checkpoint: None,
+            resume_from: None,
             engine: Engine::FtPipeHd,
             seed: 0,
             verbose: false,
@@ -302,6 +311,20 @@ impl RunConfig {
                 });
             }
         }
+        if let Some(ckpt) = v.get("checkpoint") {
+            if *ckpt != Value::Null {
+                let dir = ckpt
+                    .get("dir")
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| anyhow!("checkpoint.dir required"))?;
+                let every =
+                    getu(ckpt, "every").ok_or_else(|| anyhow!("checkpoint.every required"))?;
+                c.checkpoint = Some((dir.to_string(), every as u64));
+            }
+        }
+        if let Some(s) = v.get("resume_from").and_then(|x| x.as_str()) {
+            c.resume_from = Some(s.to_string());
+        }
         if let Some(s) = v.get("engine").and_then(|x| x.as_str()) {
             c.engine = match s {
                 "ftpipehd" => Engine::FtPipeHd,
@@ -369,6 +392,23 @@ mod tests {
         assert_eq!(RunConfig::from_json(&v).unwrap().compression, Compression::Activations);
         let v = json::parse(r#"{"compression": "zstd"}"#).unwrap();
         assert!(RunConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn parse_checkpoint_and_resume() {
+        let v = json::parse(
+            r#"{"checkpoint": {"dir": "/tmp/ck", "every": 25}, "resume_from": "/tmp/ck"}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&v).unwrap();
+        assert_eq!(c.checkpoint, Some(("/tmp/ck".to_string(), 25)));
+        assert_eq!(c.resume_from.as_deref(), Some("/tmp/ck"));
+        // an incomplete checkpoint object is an error, not a silent skip
+        let v = json::parse(r#"{"checkpoint": {"dir": "/tmp/ck"}}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
+        // explicit null disables cleanly
+        let v = json::parse(r#"{"checkpoint": null}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&v).unwrap().checkpoint, None);
     }
 
     #[test]

@@ -14,6 +14,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
+use crate::checkpoint::CheckpointSink;
 use crate::config::{Engine, RunConfig};
 use crate::data::DataSource;
 use crate::fault::FaultDetector;
@@ -55,6 +56,10 @@ pub(crate) struct Central {
     // fault plan
     pub(crate) fault_armed: bool,
     pub(crate) last_checkpoint: u64,
+    /// Central-node checkpoint destination (paper §III-E) — the disk
+    /// sink in real runs, None when checkpointing is off. The same seam
+    /// the deterministic harness fills with its in-memory sink.
+    pub(crate) sink: Option<Box<dyn CheckpointSink>>,
     pub(crate) data: Box<dyn DataSource>,
 }
 
@@ -312,42 +317,18 @@ impl Central {
     // ------------------------------------------------------------------
 
     /// Save everything the central node can see (its own stage + the
-    /// newest global/chain replicas) to disk. Completeness of the worker
-    /// stages depends on the replication period — exactly the paper's
-    /// §III-E tradeoff.
-    fn save_checkpoint(&mut self, dir: &str, epoch: u64) -> Result<()> {
-        use crate::checkpoint::{Checkpoint, CheckpointState};
-        let mut weights: BTreeMap<usize, BlockParams> = BTreeMap::new();
-        for (&b, bp) in &self.worker.params.blocks {
-            weights.insert(b, bp.clone());
-        }
-        for b in 0..self.manifest.n_blocks() {
-            if weights.contains_key(&b) {
-                continue;
-            }
-            if let Some(bp) = self.worker.backups.find_block(b) {
-                weights.insert(b, bp.clone());
-            }
-        }
-        let mut shapes: BTreeMap<usize, Vec<Vec<usize>>> = BTreeMap::new();
-        for (&b, _) in &weights {
-            shapes.insert(
-                b,
-                self.manifest.blocks[b].params.iter().map(|p| p.shape.clone()).collect(),
-            );
-        }
-        let ck = Checkpoint {
-            state: CheckpointState {
-                committed_batch: self.completed,
-                epoch,
-                lr: self.worker.sgd.cfg.lr,
-                ranges: self.worker.ranges.clone(),
-                worker_list: self.worker.worker_list.clone(),
-                shapes,
-            },
-            weights,
+    /// newest global/chain replicas) through the [`CheckpointSink`].
+    /// Completeness of the worker stages depends on the replication
+    /// period — exactly the paper's §III-E tradeoff. The snapshot itself
+    /// is [`StageWorker::snapshot_checkpoint`], shared with the
+    /// deterministic harness.
+    fn save_checkpoint(&mut self, epoch: u64) -> Result<()> {
+        // single gate, before any snapshot work is done
+        let Some(sink) = self.sink.as_mut() else {
+            return Ok(());
         };
-        ck.save(dir)?;
+        let ck = self.worker.snapshot_checkpoint(self.completed, epoch);
+        sink.save(&ck)?;
         self.record.event(
             &self.clock,
             format!("checkpoint at batch {} ({} blocks)", self.completed, ck.weights.len()),
@@ -410,9 +391,11 @@ impl Central {
             _ => None,
         };
         let mut next_repart: Option<u64> = repart_first;
-        let mut epoch = 0u64;
         let batches_per_epoch = self.cfg.batches_per_epoch as u64;
-        let checkpoint_cfg = self.cfg.checkpoint.clone();
+        // a resumed run (paper §III-E restart) starts mid-schedule: pick
+        // up in the epoch the committed frontier belongs to
+        let mut epoch = (self.completed + 1).max(0) as u64 / batches_per_epoch.max(1);
+        let checkpoint_every = self.cfg.checkpoint.as_ref().map(|(_, e)| *e).unwrap_or(0);
 
         while self.completed + 1 < self.total_batches as i64 {
             // inject up to the in-flight limit
@@ -487,11 +470,11 @@ impl Central {
             }
 
             // central-node checkpoint (paper §III-E: periodic save-to-disk)
-            if let Some((dir, every)) = &checkpoint_cfg {
+            if checkpoint_every > 0 {
                 let done = (self.completed + 1) as u64;
-                if *every > 0 && done > 0 && done % every == 0 && self.last_checkpoint != done {
+                if done > 0 && done % checkpoint_every == 0 && self.last_checkpoint != done {
                     self.last_checkpoint = done;
-                    self.save_checkpoint(dir, epoch)?;
+                    self.save_checkpoint(epoch)?;
                 }
             }
         }

@@ -12,6 +12,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
+use crate::checkpoint::{Checkpoint, CheckpointSink, DiskSink};
 use crate::config::RunConfig;
 use crate::data::{DataSource, SynthLm, SynthVision};
 use crate::device::SimDevice;
@@ -23,7 +24,7 @@ use crate::net::sim::SimNet;
 use crate::net::Transport;
 use crate::partition::{homogeneous_partition, CostModel};
 use crate::pipeline::{run_worker, StageWorker};
-use crate::profile::{profile_model, CapacityEstimator};
+use crate::profile::{profile_model, CapacityEstimator, ModelProfile};
 use crate::runtime::{load_all_blocks, Engine as XlaEngine};
 use crate::log_info;
 
@@ -61,6 +62,60 @@ pub(crate) enum BootResult {
     Oom(RunRecord),
 }
 
+/// Load the newest complete checkpoint for a resume (paper §III-E:
+/// "recovering from them every time it fails"), validating it against
+/// the cluster being stood up AND the model it will warm-start: stage
+/// count, block-id range, and tensor shapes must all match the manifest,
+/// or the operator pointed `resume_from` at the wrong run — refuse
+/// cleanly here instead of index-panicking or diverging mid-training.
+/// `None` when nothing usable exists — the run then starts fresh instead
+/// of failing, so a crash-looped central node that never managed a first
+/// checkpoint still comes up.
+fn load_resume(cfg: &RunConfig, n: usize, manifest: &Manifest) -> Result<Option<Checkpoint>> {
+    let Some(dir) = &cfg.resume_from else {
+        return Ok(None);
+    };
+    let Some(ck) = DiskSink::new(dir).load_latest()? else {
+        log_info!("resume_from {dir}: no complete checkpoint; starting fresh");
+        return Ok(None);
+    };
+    if ck.state.worker_list.len() != n || ck.state.ranges.len() != n {
+        bail!(
+            "checkpoint topology ({} stages) does not match the configured cluster \
+             ({n} devices); refusing to resume",
+            ck.state.worker_list.len()
+        );
+    }
+    let n_blocks = manifest.n_blocks();
+    if ck.state.ranges.iter().any(|&(lo, hi)| lo > hi || hi >= n_blocks) {
+        bail!(
+            "checkpoint partition {:?} does not fit this model ({n_blocks} blocks); \
+             is resume_from pointing at a different model's checkpoints?",
+            ck.state.ranges
+        );
+    }
+    for (&b, bp) in &ck.weights {
+        if b >= n_blocks {
+            bail!("checkpoint holds block {b} but the model has {n_blocks}; wrong model?");
+        }
+        let want: Vec<usize> = manifest.blocks[b].params.iter().map(|p| p.size).collect();
+        let got: Vec<usize> = bp.0.iter().map(|t| t.len()).collect();
+        if want != got {
+            bail!(
+                "checkpoint block {b} tensor sizes {got:?} do not match the model's \
+                 {want:?}; is resume_from pointing at a different model's checkpoints?"
+            );
+        }
+    }
+    log_info!(
+        "resuming from checkpoint: committed batch {}, {} blocks, lr {}",
+        ck.state.committed_batch,
+        ck.weights.len(),
+        ck.state.lr
+    );
+    Ok(Some(ck))
+}
+
 /// Run the whole offline phase for `cfg`.
 pub(crate) fn bootstrap(cfg: &RunConfig, mut opts: RunOpts) -> Result<BootResult> {
     cfg.validate()?;
@@ -70,6 +125,13 @@ pub(crate) fn bootstrap(cfg: &RunConfig, mut opts: RunOpts) -> Result<BootResult
     if manifest.n_blocks() < n {
         bail!("{} blocks < {} devices", manifest.n_blocks(), n);
     }
+    let resume = load_resume(cfg, n, &manifest)?;
+    // the checkpoint's lr (possibly past lr-drops) overrides the config's
+    let mut cfg_eff = cfg.clone();
+    if let Some(ck) = &resume {
+        cfg_eff.lr = ck.state.lr;
+    }
+    let cfg = &cfg_eff;
 
     let (net, mut endpoints) = SimNet::new(
         n,
@@ -107,26 +169,38 @@ pub(crate) fn bootstrap(cfg: &RunConfig, mut opts: RunOpts) -> Result<BootResult
     let sim = SimDevice::new(cfg.devices[0].clone(), cfg.seed ^ 0xC0FFEE);
     let worker = StageWorker::new(0, manifest.clone(), blocks, sim, opts.trace.clone());
 
-    // ---- offline stage: profiling + initial partition (paper §III-B) ----
-    let reps = if opts.profile_reps == 0 { 5 } else { opts.profile_reps };
-    let profile = profile_model(&manifest, &worker.blocks_rt, reps)?;
-    log_info!(
-        "profiled {} blocks: t0={:?}ms",
-        profile.t0_ms.len(),
-        profile.t0_ms.iter().map(|t| (t * 10.0).round() / 10.0).collect::<Vec<_>>()
-    );
-
-    let worker_list: Vec<DeviceId> = (0..n).collect();
-    let init_cm = CostModel {
-        t0_ms: profile.t0_ms.clone(),
-        out_bytes: profile.out_bytes.clone(),
-        capacities: vec![1.0; n],
-        bandwidth_bps: (0..n.saturating_sub(1))
-            .map(|l| cfg.bandwidth(l.min(cfg.bandwidth_bps.len().saturating_sub(1))))
-            .collect(),
+    // ---- offline stage: profiling + initial partition (paper §III-B).
+    // A resumed run warm-starts from the checkpoint instead: partition
+    // and worker list come from the saved state, and the profile is
+    // derived from the manifest's flop counts — no re-profiling pass
+    // (relative block costs are what the cost model needs; the capacity
+    // estimator re-converges from live exec reports anyway).
+    let (profile, init_ranges, worker_list) = if let Some(ck) = &resume {
+        (
+            ModelProfile::from_flops(&manifest, 1.0),
+            ck.state.ranges.clone(),
+            ck.state.worker_list.clone(),
+        )
+    } else {
+        let reps = if opts.profile_reps == 0 { 5 } else { opts.profile_reps };
+        let profile = profile_model(&manifest, &worker.blocks_rt, reps)?;
+        log_info!(
+            "profiled {} blocks: t0={:?}ms",
+            profile.t0_ms.len(),
+            profile.t0_ms.iter().map(|t| (t * 10.0).round() / 10.0).collect::<Vec<_>>()
+        );
+        let init_cm = CostModel {
+            t0_ms: profile.t0_ms.clone(),
+            out_bytes: profile.out_bytes.clone(),
+            capacities: vec![1.0; n],
+            bandwidth_bps: (0..n.saturating_sub(1))
+                .map(|l| cfg.bandwidth(l.min(cfg.bandwidth_bps.len().saturating_sub(1))))
+                .collect(),
+        };
+        let (init_ranges, _) = homogeneous_partition(&init_cm);
+        log_info!("initial (capacity-blind) partition: {init_ranges:?}");
+        (profile, init_ranges, (0..n).collect::<Vec<DeviceId>>())
     };
-    let (init_ranges, _) = homogeneous_partition(&init_cm);
-    log_info!("initial (capacity-blind) partition: {init_ranges:?}");
 
     // memory-cap check (single-device OOM emulation, §IV-F)
     {
@@ -147,6 +221,7 @@ pub(crate) fn bootstrap(cfg: &RunConfig, mut opts: RunOpts) -> Result<BootResult
         }
     }
 
+    let committed = resume.as_ref().map(|ck| ck.state.committed_batch).unwrap_or(-1);
     let mut central = Central {
         total_batches: (cfg.epochs * cfg.batches_per_epoch) as u64,
         cfg: cfg.clone(),
@@ -160,14 +235,18 @@ pub(crate) fn bootstrap(cfg: &RunConfig, mut opts: RunOpts) -> Result<BootResult
         measured_bw: vec![0.0; n.saturating_sub(1)],
         record: RunRecord::default(),
         clock: RunClock::start(),
-        next_inject: 0,
+        next_inject: (committed + 1).max(0) as u64,
         inflight: 0,
-        completed: -1,
+        completed: committed,
         last_completion_s: 0.0,
         epoch_correct: 0.0,
         epoch_batches: 0,
         fault_armed: false,
-        last_checkpoint: 0,
+        last_checkpoint: (committed + 1).max(0) as u64,
+        sink: cfg
+            .checkpoint
+            .as_ref()
+            .map(|(dir, _)| Box::new(DiskSink::new(dir)) as Box<dyn CheckpointSink>),
         data: opts
             .data
             .take()
@@ -199,6 +278,26 @@ pub(crate) fn bootstrap(cfg: &RunConfig, mut opts: RunOpts) -> Result<BootResult
             }
         }
         log_info!("all {} workers ready", n - 1);
+    }
+
+    // ---- restart handshake (paper §III-E): a resumed coordinator
+    // re-announces itself and reconciles every worker's uncommitted
+    // progress against the checkpoint's committed batch before pushing
+    // the new training state. Freshly spawned workers all report
+    // `fresh`; a surviving worker (TCP deployments) would report the
+    // progress it must roll back.
+    if let Some(ck) = &resume {
+        let peers: Vec<DeviceId> = (1..n).collect();
+        central.restart_handshake(&peers, ck.state.committed_batch)?;
+    }
+    if let Some(ck) = resume {
+        central.record.event(
+            &central.clock,
+            format!("resumed from checkpoint at batch {}", ck.state.committed_batch),
+        );
+        // checkpoint weights take the warm-start path below — always
+        // f32 (restore fidelity is a correctness requirement)
+        opts.initial_weights = Some(ck.weights);
     }
 
     // ---- training initialization (paper Table I) ----

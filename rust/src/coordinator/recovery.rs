@@ -157,6 +157,76 @@ impl Central {
     }
 
     // ------------------------------------------------------------------
+    // central-node restart reconciliation (paper §III-E)
+    // ------------------------------------------------------------------
+
+    /// Re-announce a rebooted coordinator to `peers` and collect each
+    /// worker's progress report for reconciliation against the
+    /// checkpoint's `committed` batch. Workers pause (status 1), abort
+    /// protocol state the dead coordinator can no longer complete, and
+    /// drop uncommitted work on receipt — see
+    /// `StageWorker`'s `CentralRestart` handler. Returns
+    /// id -> (committed backward batch, fresh); a missing id is a worker
+    /// that is dead *now* and should be treated as a §III-F case-3
+    /// failure of the checkpoint topology.
+    pub(crate) fn restart_handshake(
+        &mut self,
+        peers: &[DeviceId],
+        committed: i64,
+    ) -> Result<BTreeMap<DeviceId, (i64, bool)>> {
+        for &d in peers {
+            self.endpoint.send(d, Message::CentralRestart { committed })?;
+        }
+        let mut reports: BTreeMap<DeviceId, (i64, bool)> = BTreeMap::new();
+        let deadline = self.clock.raw_now() + Duration::from_millis(1500);
+        while reports.len() < peers.len() && self.clock.raw_now() < deadline {
+            match self.endpoint.recv_timeout(Duration::from_millis(10)) {
+                Some((from, msg)) => match Event::from_message(from, msg) {
+                    Event::Control(ControlEvent::WorkerState {
+                        id,
+                        committed_bwd,
+                        fresh,
+                        ..
+                    }) => {
+                        reports.insert(id, (committed_bwd, fresh));
+                    }
+                    // stale pre-reboot data traffic: discard
+                    Event::Data(DataEvent::Backward { .. })
+                    | Event::Data(DataEvent::Forward { .. }) => {}
+                    ev => self.on_event(ev)?,
+                },
+                None => {}
+            }
+        }
+        for (&d, &(bwd, fresh)) in &reports {
+            log_info!(
+                "restart reconcile: worker {d} committed_bwd={bwd} fresh={fresh} \
+                 (checkpoint committed={committed})"
+            );
+            self.record.event(
+                &self.clock,
+                format!("restart reconcile: worker {d} committed_bwd={bwd} fresh={fresh}"),
+            );
+        }
+        let silent: Vec<DeviceId> =
+            peers.iter().copied().filter(|d| !reports.contains_key(d)).collect();
+        if !silent.is_empty() {
+            // A silent worker is a dead worker. The threaded bootstrap
+            // cannot reach here with one (the readiness barrier just
+            // required every worker to ack), so until resume learns to
+            // replan a case-3 redistribution against the checkpoint
+            // topology (ROADMAP: TCP central re-attach), failing fast
+            // beats warm-starting a pipeline with a dead stage and
+            // waiting for the fault detector to rediscover it.
+            bail!(
+                "restart handshake: workers {silent:?} did not answer; cannot resume \
+                 onto a pipeline with dead stages (replan-on-resume is a known follow-up)"
+            );
+        }
+        Ok(reports)
+    }
+
+    // ------------------------------------------------------------------
     // fault tolerance (paper §III-F)
     // ------------------------------------------------------------------
 

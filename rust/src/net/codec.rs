@@ -26,7 +26,12 @@ use super::quant::{Compression, QTensor};
 /// v2: tensors inside `Backward`/`Weights`/`ReplicaPush` carry a dtype
 /// tag (f32 | q8), `Forward` payloads gained a q8 arm, and `InitState`
 /// carries the cluster's [`Compression`] policy.
-pub const CODEC_VERSION: u8 = 2;
+///
+/// v3: the central checkpoint-restart handshake — `CentralRestart`
+/// (tag 19) and `WorkerState` (tag 20). Existing tags are byte-identical
+/// to v2; the version bump exists so a rebooted v3 coordinator never
+/// talks past a v2 worker that would reject the new tags mid-protocol.
+pub const CODEC_VERSION: u8 = 3;
 
 // ---------- primitive writers ----------
 
@@ -368,6 +373,17 @@ pub fn encode_into(buf: &mut Vec<u8>, from: DeviceId, msg: &Message) {
             w.u8(18);
             w.f32(*lr);
         }
+        Message::CentralRestart { committed } => {
+            w.u8(19);
+            w.i64(*committed);
+        }
+        Message::WorkerState { id, committed_fwd, committed_bwd, fresh } => {
+            w.u8(20);
+            w.usize(*id);
+            w.i64(*committed_fwd);
+            w.i64(*committed_bwd);
+            w.bool(*fresh);
+        }
         Message::Shutdown => w.u8(16),
     }
 }
@@ -507,6 +523,13 @@ pub fn decode(frame: &[u8]) -> Result<(DeviceId, Message)> {
         16 => Message::Shutdown,
         17 => Message::BwReport { stage: r.usize()?, bps: r.f64()? },
         18 => Message::SetLr { lr: r.f32()? },
+        19 => Message::CentralRestart { committed: r.i64()? },
+        20 => Message::WorkerState {
+            id: r.usize()?,
+            committed_fwd: r.i64()?,
+            committed_bwd: r.i64()?,
+            fresh: r.bool()?,
+        },
         t => return Err(anyhow!("unknown message tag {t}")),
     };
     if r.i != frame.len() {
@@ -539,6 +562,20 @@ mod tests {
         roundtrip(0, &Message::BwAck { payload_bytes: 1024 });
         roundtrip(2, &Message::BwReport { stage: 1, bps: 12.5e6 });
         roundtrip(0, &Message::SetLr { lr: 0.00625 });
+        roundtrip(0, &Message::CentralRestart { committed: -1 });
+        roundtrip(0, &Message::CentralRestart { committed: 1999 });
+        roundtrip(2, &Message::WorkerState {
+            id: 2,
+            committed_fwd: 41,
+            committed_bwd: 40,
+            fresh: false,
+        });
+        roundtrip(3, &Message::WorkerState {
+            id: 3,
+            committed_fwd: -1,
+            committed_bwd: -1,
+            fresh: true,
+        });
     }
 
     #[test]
@@ -721,7 +758,7 @@ mod tests {
         }
     }
 
-    /// Uniformly draws from EVERY `Message` variant (19 as of codec v2).
+    /// Uniformly draws from EVERY `Message` variant (21 as of codec v3).
     fn random_message(g: &mut G<'_>) -> Message {
         let blocks = |g: &mut G<'_>| -> Vec<WireBlock> {
             (0..g.usize_in(0, 3))
@@ -741,7 +778,7 @@ mod tests {
                 })
                 .collect()
         };
-        match g.usize_in(0, 18) {
+        match g.usize_in(0, 20) {
             0 => Message::Forward {
                 batch: g.usize_in(0, 1000) as u64,
                 version0: g.usize_in(0, 50) as u64,
@@ -818,6 +855,13 @@ mod tests {
             15 => Message::BwAck { payload_bytes: g.usize_in(0, 1 << 20) as u32 },
             16 => Message::BwReport { stage: g.usize_in(0, 5), bps: g.f64_in(1e3, 1e9) },
             17 => Message::SetLr { lr: g.f64_in(1e-5, 0.5) as f32 },
+            18 => Message::CentralRestart { committed: g.usize_in(0, 500) as i64 - 1 },
+            19 => Message::WorkerState {
+                id: g.usize_in(0, 9),
+                committed_fwd: g.usize_in(0, 500) as i64 - 1,
+                committed_bwd: g.usize_in(0, 500) as i64 - 1,
+                fresh: g.bool(),
+            },
             _ => Message::Shutdown,
         }
     }

@@ -258,6 +258,24 @@ pub enum Message {
         stage: usize,
         bps: f64,
     },
+    /// Central -> workers after a coordinator reboot (paper §III-E): the
+    /// central node recovered from its periodic checkpoint, whose newest
+    /// committed batch is `committed`. Receivers pause, drop protocol
+    /// state the dead coordinator can no longer complete (an in-flight
+    /// redistribution, replica version numbering) plus any work beyond
+    /// `committed`, and answer with [`Message::WorkerState`].
+    CentralRestart {
+        committed: i64,
+    },
+    /// Worker -> central: progress report for restart reconciliation —
+    /// what this worker had committed when the coordinator came back,
+    /// and whether it lost its own state too (`fresh`, like ProbeAck).
+    WorkerState {
+        id: DeviceId,
+        committed_fwd: i64,
+        committed_bwd: i64,
+        fresh: bool,
+    },
     Shutdown,
 }
 
@@ -283,6 +301,8 @@ impl Message {
             Message::BwAck { .. } => "BwAck",
             Message::BwReport { .. } => "BwReport",
             Message::SetLr { .. } => "SetLr",
+            Message::CentralRestart { .. } => "CentralRestart",
+            Message::WorkerState { .. } => "WorkerState",
             Message::Shutdown => "Shutdown",
         }
     }
@@ -319,6 +339,8 @@ impl Message {
             Message::BwAck { .. } => 4,
             Message::BwReport { .. } => 16,
             Message::SetLr { .. } => 4,
+            Message::CentralRestart { .. } => 8,
+            Message::WorkerState { .. } => 25,
         }
     }
 }

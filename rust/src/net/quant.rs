@@ -17,9 +17,10 @@
 //! [`Compression`] (see `config::Compression`); `Off` keeps every
 //! tensor f32, so numerics, event order, and the bandwidth model's
 //! `Message::byte_len` accounting are exactly the pre-compression
-//! behavior. (The codec *framing* is v2 in all modes — tensors carry a
-//! dtype tag — so v2 frames are not byte-compatible with v1 peers even
-//! under `Off`; all transports in one cluster speak one version.)
+//! behavior. (The codec *framing* carries a version byte — tensors carry
+//! a dtype tag since v2, the restart handshake joined in v3 — so frames
+//! are not byte-compatible with older peers even under `Off`; all
+//! transports in one cluster speak one version.)
 //!
 //! Gradients additionally carry an error-feedback [`Residual`] on the
 //! sender: the quantization error of step `t` is added to the gradient of

@@ -116,6 +116,19 @@ pub enum ControlEvent {
     SetLr {
         lr: f32,
     },
+    /// The central node rebooted from its checkpoint (paper §III-E);
+    /// `committed` is the checkpoint's newest committed batch.
+    CentralRestart {
+        from: DeviceId,
+        committed: i64,
+    },
+    /// A worker's progress report answering [`ControlEvent::CentralRestart`].
+    WorkerState {
+        id: DeviceId,
+        committed_fwd: i64,
+        committed_bwd: i64,
+        fresh: bool,
+    },
 }
 
 impl Event {
@@ -175,6 +188,17 @@ impl Event {
                 Event::Control(ControlEvent::BwReport { stage, bps })
             }
             Message::SetLr { lr } => Event::Control(ControlEvent::SetLr { lr }),
+            Message::CentralRestart { committed } => {
+                Event::Control(ControlEvent::CentralRestart { from, committed })
+            }
+            Message::WorkerState { id, committed_fwd, committed_bwd, fresh } => {
+                Event::Control(ControlEvent::WorkerState {
+                    id,
+                    committed_fwd,
+                    committed_bwd,
+                    fresh,
+                })
+            }
             Message::Shutdown => Event::Shutdown,
         }
     }

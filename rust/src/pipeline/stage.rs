@@ -837,10 +837,34 @@ impl StageWorker {
             ControlEvent::SetLr { lr } => {
                 self.sgd.set_lr(lr);
             }
+            ControlEvent::CentralRestart { from, committed } => {
+                // The coordinator rebooted from its checkpoint. Anything
+                // only the old coordinator could complete is dead weight:
+                // an in-flight redistribution will never see its Commit,
+                // and stored replica versions are no longer comparable
+                // with the version numbering the restarted cluster will
+                // use. Work past the checkpoint's committed batch is
+                // uncommitted by definition — drop it now so the
+                // coordinator reconciles against a quiesced stage.
+                self.repart = None;
+                self.backups = BackupStore::default();
+                if self.initialized {
+                    self.status = 1;
+                    self.sched.reset(committed);
+                    self.stash.discard_after(committed);
+                }
+                t.send(from, Message::WorkerState {
+                    id: self.device_id,
+                    committed_fwd: self.committed_fwd,
+                    committed_bwd: self.committed_bwd,
+                    fresh: !self.initialized,
+                })?;
+            }
             // coordinator-only events a worker may legitimately see late:
             ControlEvent::ProbeAck { .. }
             | ControlEvent::FetchDone { .. }
-            | ControlEvent::BwReport { .. } => {}
+            | ControlEvent::BwReport { .. }
+            | ControlEvent::WorkerState { .. } => {}
         }
         Ok(())
     }
@@ -990,8 +1014,15 @@ impl StageWorker {
         blocks: Vec<WireBlock>,
     ) -> Result<()> {
         let Some(mut rp) = self.repart.take() else {
+            // Accept a pushed block if it is inside my current range —
+            // overwriting a held block (continuous training) or filling
+            // a missing one (a checkpoint warm-start after the pushing
+            // coordinator rebooted reaches a stage that lost its state).
+            // Blocks outside my range are someone else's; ignore them.
+            let range = self.my_range();
             for (idx, tensors) in blocks {
-                if self.params.get(idx).is_some() {
+                let mine = range.is_some_and(|(lo, hi)| idx >= lo && idx <= hi);
+                if mine || self.params.get(idx).is_some() {
                     self.params.blocks.insert(idx, replication::block_from_wire(tensors));
                 }
             }
@@ -1085,6 +1116,47 @@ impl StageWorker {
         self.status = 0;
         self.initialized = true;
         Ok(())
+    }
+
+    /// Snapshot everything this (central) stage can see into a §III-E
+    /// checkpoint: its own parameters plus the newest replicas in its
+    /// backup store, with manifest-derived shapes. Completeness of the
+    /// other stages depends on the replication period — exactly the
+    /// paper's checkpoint tradeoff. Shared by the threaded coordinator
+    /// and the deterministic scenario runner so the harness provably
+    /// checkpoints the same bytes the real driver would.
+    pub fn snapshot_checkpoint(&self, committed: i64, epoch: u64) -> crate::checkpoint::Checkpoint {
+        use crate::checkpoint::{Checkpoint, CheckpointState};
+        let mut weights: BTreeMap<usize, BlockParams> = BTreeMap::new();
+        for (&b, bp) in &self.params.blocks {
+            weights.insert(b, bp.clone());
+        }
+        for b in 0..self.manifest.n_blocks() {
+            if weights.contains_key(&b) {
+                continue;
+            }
+            if let Some(bp) = self.backups.find_block(b) {
+                weights.insert(b, bp.clone());
+            }
+        }
+        let mut shapes: BTreeMap<usize, Vec<Vec<usize>>> = BTreeMap::new();
+        for &b in weights.keys() {
+            shapes.insert(
+                b,
+                self.manifest.blocks[b].params.iter().map(|p| p.shape.clone()).collect(),
+            );
+        }
+        Checkpoint {
+            state: CheckpointState {
+                committed_batch: committed,
+                epoch,
+                lr: self.sgd.cfg.lr,
+                ranges: self.ranges.clone(),
+                worker_list: self.worker_list.clone(),
+                shapes,
+            },
+            weights,
+        }
     }
 
     /// Simulate a crash-restart: all in-memory state is lost (the process

@@ -18,6 +18,21 @@
 //! with the enlarged failure set) instead of aborting the run — that is
 //! what makes "a worker dies during an in-flight redistribution"
 //! a *recoverable* scripted scenario.
+//!
+//! Central-node failure (paper §III-E) is a scriptable event like any
+//! worker kill: `Scenario::checkpoint_every` writes periodic checkpoints
+//! into an in-memory [`MemorySink`], [`Action::KillCentral`] wipes every
+//! piece of coordinator memory and drops device 0's traffic (including
+//! bytes in flight — the dead process's sockets are gone), and
+//! [`Action::RestartCentral`] reboots from the newest checkpoint: it
+//! re-announces with `CentralRestart`, collects `WorkerState` replies,
+//! warm-starts every surviving stage from the checkpointed weights
+//! (always f32 — restore is a correctness path, never quantized), and
+//! resumes injection from the checkpoint's committed batch + 1. Workers
+//! missing from the handshake are handled exactly like a case-3 fault
+//! against the checkpoint topology, which is what makes a combined
+//! central+worker storm — or a central death mid-redistribution —
+//! recoverable. See DESIGN.md §9.
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::path::Path;
@@ -26,17 +41,19 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use crate::checkpoint::{Checkpoint, CheckpointSink, CheckpointState, MemorySink};
 use crate::config::DeviceConfig;
 use crate::data::SynthVision;
 use crate::device::SimDevice;
 use crate::fault::{renumber_worker_list, FaultDetector};
 use crate::manifest::Manifest;
 use crate::model::BlockParams;
-use crate::net::message::{DeviceId, Message, TrainInit};
+use crate::net::message::{DeviceId, Message, ReplicaKind, TrainInit};
 use crate::net::Transport;
 use crate::partition::{homogeneous_partition, optimal_partition, CostModel, Partition};
 use crate::pipeline::{CompletedBatch, ControlEvent, DataEvent, Event, StageWorker, StepKind};
 use crate::profile::{CapacityEstimator, ModelProfile};
+use crate::replication;
 use crate::runtime::{load_all_blocks_native, HostTensor};
 use crate::sim::clock::{SharedClock, VirtualClock};
 use crate::sim::script::{Action, Scenario, Trigger};
@@ -55,6 +72,8 @@ enum QueuedEv {
     Wake { dev: DeviceId },
     Script { idx: usize },
     Revive { dev: DeviceId },
+    /// Scheduled reboot of the central node (KillCentral::restart_after).
+    RestartCentral,
 }
 
 struct NetInner {
@@ -161,6 +180,10 @@ pub struct ScenarioOutcome {
     pub redists: Vec<RedistRecord>,
     /// Fault-handler activations (probe rounds).
     pub recoveries: usize,
+    /// Checkpoints written to the in-memory sink.
+    pub checkpoints: usize,
+    /// Central-node reboots taken from the sink.
+    pub restarts: usize,
     pub virtual_ms: f64,
     pub net_bytes: u64,
 }
@@ -200,6 +223,12 @@ enum Phase {
     },
     /// Quiescing in-flight batches before a dynamic re-partition.
     Draining,
+    /// The central node is dead; only a RestartCentral event can move on.
+    Down,
+    /// Restarted central sent `CentralRestart`; collecting `WorkerState`
+    /// replies (id -> (committed backward batch, fresh)) until every
+    /// checkpoint-known peer answered or the probe window closes.
+    Rejoining { acks: BTreeMap<DeviceId, (i64, bool)>, deadline: Duration },
 }
 
 // ---------------------------------------------------------------------
@@ -275,6 +304,12 @@ pub fn run_scenario(scenario: &Scenario, model_dir: &Path) -> Result<ScenarioOut
         fired: vec![false; scenario.events.len()],
         redist_count: 0,
         events_processed: 0,
+        sink: MemorySink::default(),
+        ckpt_restore: None,
+        central_down: false,
+        checkpoints: 0,
+        restarts: 0,
+        last_checkpoint: 0,
     };
     runner.run()
 }
@@ -307,6 +342,14 @@ struct Runner<'a> {
     fired: Vec<bool>,
     redist_count: usize,
     events_processed: u64,
+    /// In-memory checkpoint store (the harness's §III-E "disk").
+    sink: MemorySink,
+    /// Checkpoint being restored, carried from restart to finish_rejoin.
+    ckpt_restore: Option<Checkpoint>,
+    central_down: bool,
+    checkpoints: usize,
+    restarts: usize,
+    last_checkpoint: u64,
 }
 
 impl Runner<'_> {
@@ -373,6 +416,7 @@ impl Runner<'_> {
                 }
                 QueuedEv::Wake { dev } => self.drive(dev, at)?,
                 QueuedEv::Script { idx } => self.fire_action(idx, at)?,
+                QueuedEv::RestartCentral => self.restart_central(at)?,
                 QueuedEv::Revive { dev } => {
                     self.dead[dev] = false;
                     self.net.lock().unwrap().dead[dev] = false;
@@ -418,6 +462,8 @@ impl Runner<'_> {
             final_weights,
             redists,
             recoveries: self.recoveries,
+            checkpoints: self.checkpoints,
+            restarts: self.restarts,
             virtual_ms: end.as_secs_f64() * 1e3,
             net_bytes,
         })
@@ -444,15 +490,22 @@ impl Runner<'_> {
         }
     }
 
-    fn bootstrap(&mut self) -> Result<()> {
+    /// The capacity-blind cost model behind the very first partition —
+    /// shared by [`Self::bootstrap`] and the empty-sink restart fallback
+    /// ([`Self::initial_checkpoint`]).
+    fn init_cost_model(&self) -> CostModel {
         let n = self.sc.n_devices();
-        let init_cm = CostModel {
+        CostModel {
             t0_ms: self.profile.t0_ms.clone(),
             out_bytes: self.profile.out_bytes.clone(),
             capacities: vec![1.0; n],
             bandwidth_bps: vec![self.sc.bandwidth_bps; n - 1],
-        };
-        let (init_ranges, _) = homogeneous_partition(&init_cm);
+        }
+    }
+
+    fn bootstrap(&mut self) -> Result<()> {
+        let n = self.sc.n_devices();
+        let (init_ranges, _) = homogeneous_partition(&self.init_cost_model());
         let worker_list: Vec<DeviceId> = (0..n).collect();
         let ti = self.train_init(init_ranges.clone(), worker_list, 0);
         let h = self.handles[0].clone();
@@ -580,6 +633,10 @@ impl Runner<'_> {
             format!("complete batch={} loss_bits={:08x}", cb.batch, cb.loss.to_bits()),
         );
         self.losses.insert(cb.batch, cb.loss);
+        // checkpoint BEFORE script triggers: a KillCentral scripted at
+        // the same batch mark observes the freshly committed checkpoint
+        // (script a non-multiple mark to exercise the stale-replay path)
+        self.maybe_checkpoint(at)?;
         self.check_batch_triggers(at)?;
         let repart_due = matches!(self.phase, Phase::Idle)
             && self.next_repart.is_some_and(|next| self.completed >= next as i64);
@@ -604,6 +661,11 @@ impl Runner<'_> {
             Event::Control(ControlEvent::FetchDone { id }) => {
                 if let Phase::Redistributing { done, .. } = &mut self.phase {
                     done.insert(id);
+                }
+            }
+            Event::Control(ControlEvent::WorkerState { id, committed_bwd, fresh, .. }) => {
+                if let Phase::Rejoining { acks, .. } = &mut self.phase {
+                    acks.insert(id, (committed_bwd, fresh));
                 }
             }
             Event::Control(ControlEvent::BwReport { stage, bps }) => {
@@ -634,8 +696,12 @@ impl Runner<'_> {
             Commit,
             RedistTimeout,
             DynamicRepart,
+            FinishRejoin,
         }
         let todo = match &self.phase {
+            // a dead central runs no checks; drive() never gets here, but
+            // the state is real while queued wakes drain
+            Phase::Down => Todo::Nothing,
             Phase::Idle | Phase::Draining => match self.detector.overdue() {
                 Some(b) => Todo::StartRecovery(b),
                 None if matches!(self.phase, Phase::Draining) && self.inflight == 0 => {
@@ -647,6 +713,14 @@ impl Runner<'_> {
                 let all = acks.len() >= self.peers_of_central().len();
                 if all || t >= *deadline {
                     Todo::FinishProbe
+                } else {
+                    Todo::Nothing
+                }
+            }
+            Phase::Rejoining { acks, deadline } => {
+                let all = acks.len() >= self.peers_of_central().len();
+                if all || t >= *deadline {
+                    Todo::FinishRejoin
                 } else {
                     Todo::Nothing
                 }
@@ -671,6 +745,14 @@ impl Runner<'_> {
                     unreachable!()
                 };
                 self.finish_probe(acks, t)
+            }
+            Todo::FinishRejoin => {
+                let Phase::Rejoining { acks, .. } =
+                    std::mem::replace(&mut self.phase, Phase::Idle)
+                else {
+                    unreachable!()
+                };
+                self.finish_rejoin(acks, t)
             }
             Todo::Commit => self.commit_redistribution(t),
             Todo::RedistTimeout => {
@@ -813,12 +895,14 @@ impl Runner<'_> {
         }
         self.workers[0].begin_repartition(&h, ranges, list, failed)?;
         let deadline = t + self.sc.redist_window;
-        self.phase = Phase::Redistributing {
-            expect: peers.into_iter().collect(),
-            done: BTreeSet::new(),
-            deadline,
-            reason,
-        };
+        let expect: BTreeSet<DeviceId> = peers.into_iter().collect();
+        // a central-only pipeline (every worker dead at restart) has no
+        // FetchDone to wait for — without a wake it would idle to the
+        // deadline before committing
+        if expect.is_empty() {
+            self.wake(0, t + Duration::from_nanos(1));
+        }
+        self.phase = Phase::Redistributing { expect, done: BTreeSet::new(), deadline, reason };
         self.wake(0, deadline + Duration::from_nanos(1));
         self.redist_count += 1;
         self.check_redist_triggers(t)?;
@@ -895,6 +979,262 @@ impl Runner<'_> {
             return Ok(());
         }
         self.begin_redistribution(new_ranges, list, vec![], Reason::Dynamic, "dynamic", t)
+    }
+
+    // -------------------------------------------------- central failure
+    // (paper §III-E: periodic checkpoint to "disk", recover on restart)
+
+    fn maybe_checkpoint(&mut self, at: Duration) -> Result<()> {
+        let every = self.sc.checkpoint_every;
+        if every == 0 {
+            return Ok(());
+        }
+        let done = (self.completed + 1) as u64;
+        if done == 0 || done % every != 0 || self.last_checkpoint == done {
+            return Ok(());
+        }
+        self.last_checkpoint = done;
+        // the snapshot logic is StageWorker::snapshot_checkpoint, shared
+        // with the threaded coordinator: in the replicate-every-batch
+        // exact regime it is the full committed model
+        let ck = self.workers[0].snapshot_checkpoint(self.completed, 0);
+        let blocks = ck.weights.len();
+        self.sink.save(&ck)?;
+        self.checkpoints += 1;
+        self.trace_line(
+            at,
+            format!(
+                "checkpoint #{} at batch {} ({blocks} blocks)",
+                self.checkpoints, self.completed
+            ),
+        );
+        Ok(())
+    }
+
+    /// What a reboot with an empty sink restores: the initial weights and
+    /// the bootstrap partition, committed = -1 — i.e. the whole run
+    /// replays from scratch, which still loses zero committed batches.
+    /// Shares [`Self::init_cost_model`] with bootstrap so the replay
+    /// provably reboots onto the boot partition.
+    fn initial_checkpoint(&self) -> Result<Checkpoint> {
+        let n = self.sc.n_devices();
+        let (ranges, _) = homogeneous_partition(&self.init_cost_model());
+        let mut weights = BTreeMap::new();
+        let mut shapes = BTreeMap::new();
+        for b in 0..self.manifest.n_blocks() {
+            weights.insert(b, BlockParams::from_vecs(self.manifest.load_init_params(b)?));
+            shapes.insert(
+                b,
+                self.manifest.blocks[b].params.iter().map(|p| p.shape.clone()).collect(),
+            );
+        }
+        Ok(Checkpoint {
+            state: CheckpointState {
+                committed_batch: -1,
+                epoch: 0,
+                lr: self.sc.lr,
+                ranges,
+                worker_list: (0..n).collect(),
+                shapes,
+            },
+            weights,
+        })
+    }
+
+    fn kill_central(&mut self, t: Duration) {
+        if self.central_down {
+            self.trace_line(t, "script: kill central ignored (already down)");
+            return;
+        }
+        self.central_down = true;
+        self.dead[0] = true;
+        {
+            let mut net = self.net.lock().unwrap();
+            net.dead[0] = true;
+            net.recording = None;
+            // the process died: bytes in flight to/from its sockets are
+            // gone with it (worker kills keep the delivery-time check —
+            // their revive semantics predate central restart and existing
+            // family traces must not move)
+            net.queue.retain(|_, ev| {
+                !matches!(ev, QueuedEv::Deliver { from, to, .. } if *from == 0 || *to == 0)
+            });
+        }
+        // all coordinator memory is lost with the process
+        self.workers[0].wipe_state();
+        self.inbox[0].clear();
+        self.detector.clear();
+        self.estimator = CapacityEstimator::default();
+        for bw in self.measured_bw.iter_mut() {
+            *bw = 0.0;
+        }
+        self.inflight = 0;
+        self.phase = Phase::Down;
+        self.trace_line(t, "script: kill central node");
+    }
+
+    fn restart_central(&mut self, t: Duration) -> Result<()> {
+        if !self.central_down {
+            self.trace_line(t, "script: restart central ignored (not down)");
+            return Ok(());
+        }
+        self.central_down = false;
+        self.dead[0] = false;
+        self.net.lock().unwrap().dead[0] = false;
+        self.busy_until[0] = t;
+        self.restarts += 1;
+        let ck = match self.sink.load_latest()? {
+            Some(ck) => ck,
+            None => self.initial_checkpoint()?,
+        };
+        self.trace_line(
+            t,
+            format!(
+                "central restart #{}: checkpoint committed={} ({} blocks); probing workers",
+                self.restarts,
+                ck.state.committed_batch,
+                ck.weights.len()
+            ),
+        );
+        // rebuild the central stage from the checkpoint: topology +
+        // hyper-parameters via the normal init path (status 1 keeps the
+        // manifest's initial weights out), then the stage-0 weights
+        let ti = self.train_init(ck.state.ranges.clone(), ck.state.worker_list.clone(), 1);
+        self.workers[0].apply_init(&ti)?;
+        let (lo0, hi0) = ck.state.ranges[0];
+        for (&b, bp) in &ck.weights {
+            if b >= lo0 && b <= hi0 {
+                self.workers[0].params.blocks.insert(b, bp.clone());
+            }
+        }
+        self.completed = ck.state.committed_batch;
+        self.next_inject = (self.completed + 1).max(0) as u64;
+        self.inflight = 0;
+        self.detector.clear();
+        // re-announce to every worker the checkpoint knows about; the
+        // replies double as the §III-F probe round (a silent worker is a
+        // dead worker, reconciled in finish_rejoin)
+        let h = self.handles[0].clone();
+        self.set_local(0, t);
+        for d in self.peers_of_central() {
+            h.send(d, Message::CentralRestart { committed: self.completed })?;
+        }
+        // re-measure the central's own outgoing link, like bootstrap does
+        // (workers re-measure theirs when the rejoin InitState lands)
+        self.workers[0].measure_bandwidth(&h)?;
+        let deadline = t + self.sc.probe_window;
+        self.phase = Phase::Rejoining { acks: BTreeMap::new(), deadline };
+        self.ckpt_restore = Some(ck);
+        self.wake(0, deadline + Duration::from_nanos(1));
+        Ok(())
+    }
+
+    /// Reconcile the handshake replies against the checkpoint: roll every
+    /// survivor back to the checkpointed weights (uncommitted progress is
+    /// discarded — bit-exact replay needs the exact committed state), and
+    /// treat silent workers as a case-3 failure of the checkpoint
+    /// topology.
+    fn finish_rejoin(&mut self, acks: BTreeMap<DeviceId, (i64, bool)>, t: Duration) -> Result<()> {
+        let ck = self.ckpt_restore.take().context("finish_rejoin without a restore")?;
+        let list = self.workers[0].worker_list.clone();
+        let ranges = self.workers[0].ranges.clone();
+        let committed = self.completed;
+        for (d, (bwd, fresh)) in &acks {
+            self.trace_line(
+                t,
+                format!(
+                    "rejoin: worker {d} committed_bwd={bwd} fresh={fresh} \
+                     (checkpoint committed={committed})"
+                ),
+            );
+        }
+        let dead: Vec<DeviceId> = self
+            .peers_of_central()
+            .into_iter()
+            .filter(|d| !acks.contains_key(d))
+            .collect();
+        let h = self.handles[0].clone();
+        self.set_local(0, t);
+        // re-seed the central replica store so CentralBackup sources
+        // survive the crash (forcibly: a push that raced the handshake
+        // carries pre-reset uncommitted state and must not win)
+        for (s, &dev) in list.iter().enumerate().skip(1) {
+            let (lo, hi) = ranges[s];
+            let blocks: Vec<(usize, BlockParams)> =
+                (lo..=hi).filter_map(|b| ck.weights.get(&b).map(|bp| (b, bp.clone()))).collect();
+            if !blocks.is_empty() {
+                self.workers[0].backups.remove_owner(dev);
+                self.workers[0].backups.store(dev, ReplicaKind::Global, s, 0, blocks);
+            }
+        }
+        // every rejoined worker is forced onto the checkpoint topology
+        // (status 1: weights arrive by push, not from the manifest)...
+        let ti = self.train_init(ranges.clone(), list.clone(), 1);
+        for &d in acks.keys() {
+            h.send(d, Message::InitState(ti.clone()))?;
+        }
+        // ...then warm-started from the checkpointed weights. Always f32:
+        // restore is a correctness path, so it is never quantized even
+        // under Compression::Full (DESIGN.md §9).
+        for (s, &dev) in list.iter().enumerate().skip(1) {
+            if !acks.contains_key(&dev) {
+                continue;
+            }
+            let (lo, hi) = ranges[s];
+            let blocks: Vec<crate::net::message::WireBlock> = (lo..=hi)
+                .filter_map(|b| ck.weights.get(&b).map(|bp| (b, replication::block_to_wire(bp))))
+                .collect();
+            if blocks.len() < hi - lo + 1 {
+                self.trace_line(
+                    t,
+                    format!("warning: checkpoint misses blocks of stage {s} (partial replicas)"),
+                );
+            }
+            if !blocks.is_empty() {
+                h.send(dev, Message::Weights { blocks })?;
+            }
+        }
+        if dead.is_empty() {
+            self.trace_line(
+                t,
+                format!("central restart: all workers rejoined; resuming from batch {}",
+                    committed + 1),
+            );
+            self.phase = Phase::Idle;
+            self.reset_all(committed, t)?;
+        } else {
+            // case 3 against the checkpoint topology: renumber, re-plan,
+            // redistribute (survivors serve their rolled-back ranges, the
+            // re-seeded central backups cover the dead stages)
+            let failed: Vec<usize> = list
+                .iter()
+                .enumerate()
+                .filter(|(_, d)| dead.contains(d))
+                .map(|(s, _)| s)
+                .collect();
+            self.trace_line(t, format!("central restart: dead stages {failed:?}"));
+            let new_list = renumber_worker_list(&list, &failed);
+            let alive_old: Vec<(usize, usize)> = ranges
+                .iter()
+                .enumerate()
+                .filter(|(s, _)| !failed.contains(s))
+                .map(|(_, &r)| r)
+                .collect();
+            let cm = self.cost_model(&new_list, &alive_old);
+            let (new_ranges, _) = optimal_partition(&cm);
+            for &d in &dead {
+                self.estimator.clear_device(d);
+            }
+            self.begin_redistribution(
+                new_ranges,
+                new_list,
+                failed,
+                Reason::Fault,
+                "central restart",
+                t,
+            )?;
+        }
+        Ok(())
     }
 
     fn cost_model(&self, list: &[DeviceId], old_ranges: &[(usize, usize)]) -> CostModel {
@@ -980,6 +1320,13 @@ impl Runner<'_> {
                 self.trace_line(t, format!("script: bandwidth -> {bps} B/s"));
                 self.net.lock().unwrap().bw_bps = bps;
             }
+            Action::KillCentral { restart_after } => {
+                self.kill_central(t);
+                if let Some(delay) = restart_after {
+                    self.schedule(t + delay, QueuedEv::RestartCentral);
+                }
+            }
+            Action::RestartCentral => self.restart_central(t)?,
         }
         Ok(())
     }

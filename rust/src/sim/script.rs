@@ -47,6 +47,22 @@ pub enum Action {
     /// of the `bandwidth` scenario family. In-flight transfers keep the
     /// rate they departed with; only subsequent sends are repriced.
     SetBandwidth { bps: f64 },
+    /// Kill the central node (paper §III-E): all coordinator memory is
+    /// lost — stage-0 weights, replica store, capacity estimates, batch
+    /// pointers — and traffic to/from device 0 (including bytes already
+    /// in flight on its links) is dropped. With `restart_after`, a
+    /// [`Action::RestartCentral`] fires that much later; without it the
+    /// script must contain an explicit `RestartCentral` event or the run
+    /// can never finish (enforced by [`Scenario::validate`]).
+    KillCentral { restart_after: Option<Duration> },
+    /// Reboot the central node from the newest checkpoint in the
+    /// harness's in-memory [`crate::checkpoint::MemorySink`] (or from
+    /// the model's initial weights if nothing was ever checkpointed) and
+    /// run the restart handshake against the surviving workers. Only
+    /// meaningful on an [`Trigger::At`] trigger or via
+    /// `KillCentral::restart_after` — batch/redistribution triggers
+    /// cannot fire while the central node is down.
+    RestartCentral,
 }
 
 #[derive(Debug, Clone)]
@@ -100,6 +116,12 @@ pub struct Scenario {
     /// numerics, so all pre-compression scenario traces are unchanged.
     pub compression: Compression,
 
+    /// Central-node checkpoint period in committed batches (paper
+    /// §III-E), written to the harness's in-memory sink. 0 disables
+    /// checkpointing entirely — the default, so every scenario that
+    /// predates central-restart runs byte-identically.
+    pub checkpoint_every: u64,
+
     pub events: Vec<ScriptEvent>,
 }
 
@@ -128,6 +150,7 @@ impl Scenario {
             latency: Duration::from_micros(100),
             ns_per_flop: 1.0,
             compression: Compression::Off,
+            checkpoint_every: 0,
             events: vec![],
         }
     }
@@ -161,11 +184,19 @@ impl Scenario {
         self
     }
 
+    /// Checkpoint every `every` committed batches (0 = off).
+    pub fn with_checkpoint(mut self, every: u64) -> Scenario {
+        self.checkpoint_every = every;
+        self
+    }
+
     /// Sanity checks the runner relies on.
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.n_devices() >= 2, "scenarios need at least 2 devices");
         anyhow::ensure!(self.capacities[0] == 1.0, "central capacity must be 1.0");
         anyhow::ensure!(self.batches > 0 && self.inflight > 0, "empty training run");
+        let mut unrescued_central_kill = false;
+        let mut has_at_restart = false;
         for e in &self.events {
             let dev = match &e.action {
                 Action::Kill { device, .. } => *device,
@@ -177,12 +208,38 @@ impl Scenario {
                     );
                     continue;
                 }
+                Action::KillCentral { restart_after } => {
+                    if restart_after.is_none() {
+                        unrescued_central_kill = true;
+                    }
+                    continue;
+                }
+                Action::RestartCentral => {
+                    // only an At trigger can fire while the central node
+                    // is down: batches don't complete and redistributions
+                    // don't start without a coordinator, so a batch- or
+                    // redist-triggered restart can never rescue a kill
+                    anyhow::ensure!(
+                        matches!(e.at, Trigger::At(_)),
+                        "RestartCentral must use an At(..) trigger (got {:?}): batch and \
+                         redistribution triggers cannot fire while the central node is down",
+                        e.at
+                    );
+                    has_at_restart = true;
+                    continue;
+                }
             };
             anyhow::ensure!(
                 dev != 0 && dev < self.n_devices(),
                 "script actions must target a worker (got device {dev})"
             );
         }
+        anyhow::ensure!(
+            !unrescued_central_kill || has_at_restart,
+            "KillCentral without restart_after needs an At(..)-triggered RestartCentral \
+             event (a dead coordinator can never finish the run); note an At time before \
+             the kill still deadlocks — prefer KillCentral{{restart_after}}"
+        );
         Ok(())
     }
 }
@@ -280,11 +337,127 @@ mod tests {
                         assert!((1..4).contains(device));
                         assert!((1.5..=6.5).contains(capacity));
                     }
-                    Action::SetBandwidth { .. } => panic!("chaos does not touch links"),
+                    other => panic!("chaos only kills and slows workers, got {other:?}"),
                 }
             }
             // every generated schedule passes scenario validation
             Scenario::exact_recovery("chaos-gen", 4, 80).with_events(evs).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn validate_enforces_central_restart_rescue_rules() {
+        let base = Scenario::exact_recovery("v", 3, 20);
+        // an unrescued central kill can never finish the run
+        let sc = base.clone().with_events(vec![ScriptEvent {
+            at: Trigger::BatchDone(5),
+            action: Action::KillCentral { restart_after: None },
+        }]);
+        assert!(sc.validate().is_err());
+        // inline restart_after rescues
+        let sc = base.clone().with_events(vec![ScriptEvent {
+            at: Trigger::BatchDone(5),
+            action: Action::KillCentral { restart_after: Some(Duration::from_millis(10)) },
+        }]);
+        sc.validate().unwrap();
+        // an At-triggered RestartCentral rescues
+        let sc = base.clone().with_events(vec![
+            ScriptEvent {
+                at: Trigger::BatchDone(5),
+                action: Action::KillCentral { restart_after: None },
+            },
+            ScriptEvent {
+                at: Trigger::At(Duration::from_secs(2)),
+                action: Action::RestartCentral,
+            },
+        ]);
+        sc.validate().unwrap();
+        // a batch-triggered RestartCentral can never fire while the
+        // central is down — reject it outright
+        let sc = base.with_events(vec![
+            ScriptEvent {
+                at: Trigger::BatchDone(5),
+                action: Action::KillCentral { restart_after: None },
+            },
+            ScriptEvent { at: Trigger::BatchDone(9), action: Action::RestartCentral },
+        ]);
+        assert!(sc.validate().is_err());
+    }
+
+    #[test]
+    fn chaos_first_event_is_always_a_kill() {
+        for n_devices in 2..=6usize {
+            for seed in 0..16u64 {
+                let evs = chaos_events(n_devices, 100, 5, seed);
+                assert!(!evs.is_empty(), "n={n_devices} seed={seed}: empty schedule");
+                match &evs[0].action {
+                    Action::Kill { device, revive_after } => {
+                        assert!(
+                            (1..n_devices).contains(device),
+                            "n={n_devices} seed={seed}: kill targets a worker"
+                        );
+                        assert!(revive_after.is_some());
+                    }
+                    other => panic!("n={n_devices} seed={seed}: first event {other:?} not a kill"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chaos_revives_land_inside_the_fault_timeout() {
+        // the documented band is 10–60 ms — far inside the 200 ms
+        // gradient timeout of the exact-recovery base, so a chaos kill is
+        // always observed as a case-2 restart, never a lost worker
+        let timeout = Scenario::exact_recovery("probe", 4, 10).fault_timeout;
+        for seed in 0..64u64 {
+            for e in chaos_events(4, 120, 8, seed) {
+                if let Action::Kill { revive_after, .. } = &e.action {
+                    let r = revive_after.expect("chaos kills always revive");
+                    assert!(
+                        r >= Duration::from_millis(10) && r <= Duration::from_millis(60),
+                        "seed {seed}: revive {r:?} outside the documented 10-60ms band"
+                    );
+                    assert!(r < timeout, "seed {seed}: revive {r:?} past the {timeout:?} timeout");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chaos_capacities_stay_inside_the_documented_band() {
+        let mut seen_slowdown = false;
+        for seed in 0..64u64 {
+            for e in chaos_events(5, 120, 8, seed) {
+                if let Action::SetCapacity { capacity, .. } = &e.action {
+                    seen_slowdown = true;
+                    assert!(
+                        (1.5..=6.5).contains(capacity),
+                        "seed {seed}: capacity {capacity} outside [1.5, 6.5]"
+                    );
+                }
+            }
+        }
+        assert!(seen_slowdown, "64 seeds x 8 events never drew a slowdown");
+    }
+
+    #[test]
+    fn chaos_marks_strictly_increase_with_headroom() {
+        for seed in 0..64u64 {
+            let batches = 90u64;
+            let mut prev: Option<u64> = None;
+            for e in chaos_events(4, batches, 10, seed) {
+                let Trigger::BatchDone(b) = e.at else {
+                    panic!("seed {seed}: chaos triggers are batch-based")
+                };
+                assert!(b >= 4, "seed {seed}: mark {b} leaves no warm-up headroom");
+                assert!(b + 5 < batches, "seed {seed}: mark {b} leaves no quiesce headroom");
+                if let Some(p) = prev {
+                    assert!(b > p, "seed {seed}: marks must strictly increase ({p} -> {b})");
+                    assert!(b - p >= 6, "seed {seed}: marks too close ({p} -> {b})");
+                }
+                prev = Some(b);
+            }
         }
     }
 }

@@ -1,14 +1,223 @@
-//! Integration: central-node checkpointing (paper §III-E) — periodic
-//! save-to-disk during training, then resume a new run from the
-//! checkpoint weights; plus the lr-drop schedule.
+//! Central-node checkpoint durability (paper §III-E).
+//!
+//! Property tests (artifact-free, run everywhere): arbitrary
+//! shapes/values round-trip bit-identically through save/load; truncated
+//! or garbage `state.json` and missing tensor files are clean errors,
+//! never panics; a crash between tmp-write and rename (a leftover
+//! `<dir>.tmp`) is invisible to the loader, which picks the newest
+//! *complete* numbered checkpoint. Integration tests (artifact-gated):
+//! periodic checkpointing during a real run, resuming via
+//! `RunConfig::resume_from` (the restart handshake + warm-start path),
+//! and the lr-drop schedule.
 
-use ftpipehd::checkpoint::Checkpoint;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use ftpipehd::checkpoint::{Checkpoint, CheckpointSink, CheckpointState, DiskSink};
 use ftpipehd::config::{DeviceConfig, RunConfig};
-use ftpipehd::coordinator::{run_sim, run_sim_full, RunOpts};
+use ftpipehd::coordinator::run_sim;
+use ftpipehd::model::BlockParams;
+use ftpipehd::util::prop::{check, G};
 
 fn artifacts_available() -> bool {
     std::path::Path::new("artifacts/edgenet-tiny/manifest.json").exists()
 }
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join("ftpipehd-ckpt-it")
+        .join(format!("{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+// ---------------------------------------------------------------------
+// durability properties
+// ---------------------------------------------------------------------
+
+/// A checkpoint with random block ids, tensor counts, shapes, and values
+/// (including non-finite ones — durability is about bits, not numerics).
+fn random_checkpoint(g: &mut G<'_>) -> Checkpoint {
+    let n_blocks = g.usize_in(1, 4);
+    let mut shapes: BTreeMap<usize, Vec<Vec<usize>>> = BTreeMap::new();
+    let mut weights: BTreeMap<usize, BlockParams> = BTreeMap::new();
+    let mut id = 0usize;
+    for _ in 0..n_blocks {
+        id += g.usize_in(0, 3); // sparse, strictly ordered block ids
+        let n_tensors = g.usize_in(1, 3);
+        let mut ts: Vec<Vec<usize>> = Vec::new();
+        let mut bps: Vec<Vec<f32>> = Vec::new();
+        for _ in 0..n_tensors {
+            let ndim = g.usize_in(0, 3);
+            let shape: Vec<usize> = (0..ndim).map(|_| g.usize_in(1, 4)).collect();
+            let n: usize = shape.iter().product();
+            let mut data = g.vec_f32(n);
+            if !data.is_empty() && g.bool() {
+                // plant a hostile value: bit-exactness must survive it
+                let i = g.usize_in(0, data.len() - 1);
+                data[i] = *g.pick(&[f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0]);
+            }
+            ts.push(shape);
+            bps.push(data);
+        }
+        shapes.insert(id, ts);
+        weights.insert(id, BlockParams::from_vecs(bps));
+        id += 1;
+    }
+    let stages = g.usize_in(1, 3);
+    Checkpoint {
+        state: CheckpointState {
+            committed_batch: g.usize_in(0, 1000) as i64 - 1,
+            epoch: g.usize_in(0, 30) as u64,
+            lr: *g.pick(&[0.1f32, 0.05, 0.01, 0.00625]),
+            ranges: (0..stages).map(|s| (s * 2, s * 2 + 1)).collect(),
+            worker_list: (0..stages).collect(),
+            shapes,
+        },
+        weights,
+    }
+}
+
+fn weight_bits(ck: &Checkpoint) -> Vec<(usize, Vec<Vec<u32>>)> {
+    ck.weights
+        .iter()
+        .map(|(&b, bp)| {
+            (b, bp.0.iter().map(|t| t.iter().map(|x| x.to_bits()).collect()).collect())
+        })
+        .collect()
+}
+
+#[test]
+fn prop_random_checkpoints_roundtrip_bit_identically() {
+    let root = tmpdir("prop-roundtrip");
+    std::fs::create_dir_all(&root).unwrap();
+    let mut n = 0usize;
+    check("checkpoint-roundtrip", 60, |g| {
+        n += 1;
+        let dir = root.join(format!("case-{n}"));
+        let ck = random_checkpoint(g);
+        ck.save(&dir).map_err(|e| format!("save: {e:#}"))?;
+        let back = Checkpoint::load(&dir).map_err(|e| format!("load: {e:#}"))?;
+        if back.state.committed_batch != ck.state.committed_batch
+            || back.state.epoch != ck.state.epoch
+            || back.state.ranges != ck.state.ranges
+            || back.state.worker_list != ck.state.worker_list
+            || back.state.shapes != ck.state.shapes
+        {
+            return Err("state drifted through save/load".into());
+        }
+        if weight_bits(&back) != weight_bits(&ck) {
+            return Err("weights not bit-identical through save/load".into());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn prop_truncated_state_json_is_a_clean_error() {
+    let root = tmpdir("prop-truncated");
+    std::fs::create_dir_all(&root).unwrap();
+    let mut n = 0usize;
+    check("checkpoint-truncated-state", 40, |g| {
+        n += 1;
+        let dir = root.join(format!("case-{n}"));
+        let ck = random_checkpoint(g);
+        ck.save(&dir).map_err(|e| format!("save: {e:#}"))?;
+        let state = dir.join("state.json");
+        let full = std::fs::read(&state).map_err(|e| e.to_string())?;
+        // a strict prefix that at least loses the closing brace (a last
+        // trailing newline alone could still parse) — a torn write must
+        // never load and must never panic
+        let cut = g.usize_in(0, full.len().saturating_sub(2));
+        std::fs::write(&state, &full[..cut]).map_err(|e| e.to_string())?;
+        match Checkpoint::load(&dir) {
+            Err(_) => {
+                let _ = std::fs::remove_dir_all(&dir);
+                Ok(())
+            }
+            Ok(_) => Err(format!("truncated state.json ({cut}/{} bytes) loaded", full.len())),
+        }
+    });
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn prop_missing_tensor_file_is_a_clean_error() {
+    let root = tmpdir("prop-missing-npy");
+    std::fs::create_dir_all(&root).unwrap();
+    let mut n = 0usize;
+    check("checkpoint-missing-npy", 40, |g| {
+        n += 1;
+        let dir = root.join(format!("case-{n}"));
+        let ck = random_checkpoint(g);
+        ck.save(&dir).map_err(|e| format!("save: {e:#}"))?;
+        // delete one random tensor file
+        let npys: Vec<PathBuf> = std::fs::read_dir(&dir)
+            .map_err(|e| e.to_string())?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().is_some_and(|x| x == "npy"))
+            .collect();
+        let victim = &npys[g.usize_in(0, npys.len() - 1)];
+        std::fs::remove_file(victim).map_err(|e| e.to_string())?;
+        match Checkpoint::load(&dir) {
+            Err(_) => {
+                let _ = std::fs::remove_dir_all(&dir);
+                Ok(())
+            }
+            Ok(_) => Err(format!("load succeeded without {victim:?}")),
+        }
+    });
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn leftover_tmp_from_a_crash_is_ignored_and_the_previous_checkpoint_loads() {
+    let root = tmpdir("tmp-leftover");
+    let mut sink = DiskSink::new(&root);
+    let mut rng = ftpipehd::util::rng::Rng::new(7);
+    let mut g = G { rng: &mut rng, size: 8 };
+    let mut ck = random_checkpoint(&mut g);
+    ck.state.committed_batch = 24;
+    sink.save(&ck).unwrap();
+    // simulate a crash between tmp-write and rename of a NEWER save:
+    // fully-written contents under the staging name, but the commit
+    // rename to `ckpt-00000049` never happened
+    ck.state.committed_batch = 49;
+    ck.save(root.join("ckpt-00000049.tmp")).unwrap();
+    let back = sink.load_latest().unwrap().expect("previous good checkpoint");
+    assert_eq!(back.state.committed_batch, 24, ".tmp leftover must be invisible");
+    // and a later successful save supersedes both
+    ck.state.committed_batch = 74;
+    sink.save(&ck).unwrap();
+    assert_eq!(sink.load_latest().unwrap().unwrap().state.committed_batch, 74);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn loader_picks_highest_numbered_complete_checkpoint() {
+    let root = tmpdir("highest-complete");
+    let mut sink = DiskSink::new(&root);
+    let mut rng = ftpipehd::util::rng::Rng::new(11);
+    let mut g = G { rng: &mut rng, size: 8 };
+    let mut ck = random_checkpoint(&mut g);
+    ck.state.committed_batch = 19;
+    sink.save(&ck).unwrap();
+    ck.state.committed_batch = 39;
+    sink.save(&ck).unwrap();
+    // plant an incomplete NEWER one: committed directory name, torn state
+    std::fs::create_dir_all(root.join("ckpt-00000059")).unwrap();
+    std::fs::write(root.join("ckpt-00000059/state.json"), "{\"committed_ba").unwrap();
+    let back = sink.load_latest().unwrap().expect("complete entry exists");
+    assert_eq!(back.state.committed_batch, 39, "newest COMPLETE wins, not newest numbered");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---------------------------------------------------------------------
+// integration (artifact-gated): periodic save during a run + resume
+// ---------------------------------------------------------------------
 
 fn cfg(batches: usize) -> RunConfig {
     let mut cfg = RunConfig::default();
@@ -28,8 +237,7 @@ fn checkpoint_written_and_resumable() {
         eprintln!("skipping: run `make artifacts` first");
         return;
     }
-    let dir = std::env::temp_dir().join("ftpipehd-ckpt-integration");
-    let _ = std::fs::remove_dir_all(&dir);
+    let dir = tmpdir("integration");
 
     let mut c = cfg(40);
     // frequent global replication so the checkpoint can cover all stages
@@ -43,21 +251,31 @@ fn checkpoint_written_and_resumable() {
         record.events
     );
 
-    let ck = Checkpoint::load(&dir).expect("load checkpoint");
+    let ck = DiskSink::new(&dir).load_latest().expect("sink").expect("checkpoint");
     assert!(ck.state.committed_batch >= 19);
     // all 6 blocks present: central's own + global replicas
     assert_eq!(ck.weights.len(), 6, "checkpoint covers all blocks");
 
-    // resume a fresh run from the checkpoint weights: early accuracy must
-    // be far above chance (the model had already learned)
-    let c2 = cfg(10);
-    let out = run_sim_full(
-        &c2,
-        RunOpts { initial_weights: Some(ck.weights), ..Default::default() },
-    )
-    .expect("resume");
+    // resume through the §III-E restart path: handshake + warm start
+    // from the newest complete checkpoint, replaying only what the
+    // checkpoint had not committed
+    let mut c2 = cfg(60);
+    c2.resume_from = Some(dir.to_string_lossy().to_string());
+    let record2 = run_sim(&c2).expect("resume");
+    assert!(
+        record2.events.iter().any(|e| e.kind.contains("resumed from checkpoint")),
+        "no resume event: {:?}",
+        record2.events
+    );
+    let replayed = (ck.state.committed_batch + 1).max(0) as usize;
+    assert_eq!(
+        record2.batches.len(),
+        60 - replayed,
+        "resume must train exactly the batches past the checkpoint frontier"
+    );
+    // the model had already learned: resumed accuracy far above chance
     let early: f32 =
-        out.record.batches.iter().take(5).map(|b| b.train_acc).sum::<f32>() / 5.0;
+        record2.batches.iter().take(5).map(|b| b.train_acc).sum::<f32>() / 5.0;
     assert!(early > 0.5, "resumed accuracy {early} too low — weights not restored?");
 
     let _ = std::fs::remove_dir_all(&dir);

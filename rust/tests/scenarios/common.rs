@@ -14,12 +14,31 @@ fn fixture_dir(tag: &str) -> PathBuf {
     std::env::temp_dir().join(format!("ftpipehd-scn-{tag}-{}", std::process::id()))
 }
 
+/// When `FTPIPEHD_TRACE_DIR` is set, persist a run's event trace as
+/// `<tag>-run<n>.trace` there — written BEFORE any byte-identity
+/// assertion, so a red CI job can upload both runs' traces and the diff
+/// is debuggable from the artifacts tab.
+pub fn dump_trace(tag: &str, run: usize, out: &ScenarioOutcome) {
+    let Ok(dir) = std::env::var("FTPIPEHD_TRACE_DIR") else {
+        return;
+    };
+    if dir.is_empty() {
+        return;
+    }
+    let dir = std::path::Path::new(&dir);
+    let _ = std::fs::create_dir_all(dir);
+    let mut body = out.trace.join("\n");
+    body.push('\n');
+    let _ = std::fs::write(dir.join(format!("{tag}-run{run}.trace")), body);
+}
+
 /// Run `sc` once against a fresh fixture built from `spec`.
 pub fn run_once_spec(tag: &str, sc: &Scenario, spec: &FixtureSpec) -> ScenarioOutcome {
     let dir = fixture_dir(tag);
     materialize(&dir, spec).expect("fixture");
     let out = run_scenario(sc, &dir).expect("scenario run");
     let _ = std::fs::remove_dir_all(&dir);
+    dump_trace(tag, 1, &out);
     out
 }
 
@@ -39,8 +58,12 @@ pub fn run_twice_deterministic_spec(
     let dir = fixture_dir(tag);
     materialize(&dir, spec).expect("fixture");
     let a = run_scenario(sc, &dir).expect("first run");
+    // dump run 1 BEFORE attempting run 2: if the second run panics
+    // instead of diverging, CI still ships the first run's trace
+    dump_trace(tag, 1, &a);
     let b = run_scenario(sc, &dir).expect("second run");
     let _ = std::fs::remove_dir_all(&dir);
+    dump_trace(tag, 2, &b);
     assert_eq!(a.trace, b.trace, "{tag}: event traces differ between identical runs");
     assert_eq!(
         a.weights_bits(),

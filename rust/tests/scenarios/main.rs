@@ -17,11 +17,17 @@
 //! * `churn`              — kill + fast restart (case 2), late rejoin
 //! * `chaos`              — seeded randomized kill/slowdown storms
 //! * `bandwidth`          — link degradation + INT8 wire compression
+//! * `checkpoint_restart` — central-node death + reboot from checkpoint
+//!
+//! Set `FTPIPEHD_TRACE_DIR` to dump every run's event trace to disk —
+//! CI uploads those files on failure so byte-identity diffs are
+//! debuggable from the job page.
 
 mod common;
 
 mod bandwidth;
 mod chaos;
+mod checkpoint_restart;
 mod churn;
 mod mid_redistribution;
 mod multi_fault;

@@ -328,6 +328,69 @@ fn wipe_state_simulates_restart() {
 }
 
 #[test]
+fn central_restart_pauses_aborts_repart_and_reports_progress() {
+    if !artifacts_available() {
+        return;
+    }
+    let net = MockNet::new();
+    let mut w = make_worker(1);
+    // an uninitialized (freshly crashed) worker reports fresh and must
+    // NOT pause — it has nothing to pause
+    w.handle_message(&net, 0, Message::CentralRestart { committed: 12 }).unwrap();
+    match &net.take()[..] {
+        [(
+            0,
+            Message::WorkerState { id: 1, committed_fwd: -1, committed_bwd: -1, fresh: true },
+        )] => {}
+        other => panic!("unexpected {other:?}"),
+    }
+    assert_eq!(w.status, 0);
+
+    // initialized worker mid-redistribution: the restart aborts the
+    // repart (its Commit can never arrive), drops stored replicas, and
+    // pauses until the coordinator's reset
+    w.handle_message(&net, 0, Message::InitState(init(vec![(0, 1), (2, 3), (4, 5)], vec![0, 1, 2])))
+        .unwrap();
+    w.handle_message(
+        &net,
+        1,
+        Message::ReplicaPush {
+            kind: ReplicaKind::Chain,
+            owner_stage: 1,
+            owner_device: 1,
+            version: 7,
+            blocks: vec![(2, vec![vec![9.0; 4].into()])],
+        },
+    )
+    .unwrap();
+    w.handle_message(
+        &net,
+        0,
+        Message::Repartition {
+            ranges: vec![(0, 0), (1, 4), (5, 5)],
+            worker_list: vec![0, 1, 2],
+            failed: vec![],
+        },
+    )
+    .unwrap();
+    assert!(!w.fetch_done(), "repart in flight");
+    assert_eq!(w.backups.len(), 1);
+    net.take();
+    w.handle_message(&net, 0, Message::CentralRestart { committed: 12 }).unwrap();
+    match &net.take()[..] {
+        [(0, Message::WorkerState { id: 1, fresh: false, .. })] => {}
+        other => panic!("unexpected {other:?}"),
+    }
+    assert_eq!(w.status, 1, "paused until the coordinator's Reset");
+    assert!(w.fetch_done(), "aborted repart must not report an open fetch window");
+    assert!(w.backups.is_empty(), "replica versions are not comparable across a reboot");
+    // the coordinator's reset resumes the stage
+    w.handle_message(&net, 0, Message::Reset { committed: 12 }).unwrap();
+    assert_eq!(w.status, 0);
+    assert_eq!(w.committed_bwd, 12);
+}
+
+#[test]
 fn shutdown_returns_flow_shutdown() {
     if !artifacts_available() {
         return;

@@ -97,6 +97,8 @@ fn probe_messages() -> Vec<Message> {
         Message::BwAck { payload_bytes: 64 },
         Message::BwReport { stage: 1, bps: 12.5e6 },
         Message::SetLr { lr: 0.005 },
+        Message::CentralRestart { committed: 29 },
+        Message::WorkerState { id: 1, committed_fwd: 34, committed_bwd: 33, fresh: false },
         Message::Shutdown,
     ]
 }
