@@ -16,6 +16,7 @@ mod common;
 use ftpipehd::manifest::{Dtype, Manifest};
 use ftpipehd::net::codec;
 use ftpipehd::net::message::{Message, Payload, WireTensor};
+use ftpipehd::net::quant::{Bits, ChannelHint};
 use ftpipehd::net::{QTensor, TensorBuf};
 use ftpipehd::runtime::{load_all_blocks, Engine, HostTensor};
 use ftpipehd::util::benchkit::{bench, emit_json_with_metrics, Table};
@@ -39,7 +40,7 @@ fn quant_codec_section(table: &mut Table, metrics: &mut Vec<(String, f64)>) {
 
     let fwd = |data: Payload| Message::Forward { batch: 1, version0: 1, is_eval: false, data };
     let msg_f32 = fwd(Payload::F32(act.clone()));
-    let msg_q8 = fwd(Payload::Q8(q.clone()));
+    let msg_q8 = fwd(Payload::Quant(q.clone()));
     let frame_f32 = codec::encode(0, &msg_f32);
     let frame_q8 = codec::encode(0, &msg_q8);
 
@@ -84,16 +85,42 @@ fn quant_codec_section(table: &mut Table, metrics: &mut Vec<(String, f64)>) {
     });
     table.row(&["codec decode q8".into(), us(dec_q8.p50), us(dec_q8.p95)]);
 
-    // --- weight blocks: the ReplicaPush/Weights path ---
+    // --- weight blocks: the ReplicaPush/Weights path (per-tensor q8,
+    // per-channel q8, and the packed q4 replica arm on a 128x128 block) ---
+    let q8pc = QTensor::quantize_weights(&xs, ChannelHint::Rows(128), Bits::B8);
+    let q4pc = QTensor::quantize_weights(&xs, ChannelHint::Rows(128), Bits::B4);
     let wmsg_f32 = Message::Weights { blocks: vec![(3, vec![WireTensor::F32(act.clone())])] };
-    let wmsg_q8 = Message::Weights { blocks: vec![(3, vec![WireTensor::Q8(q.clone())])] };
+    let wmsg_q8 = Message::Weights { blocks: vec![(3, vec![WireTensor::Quant(q.clone())])] };
+    let wmsg_q4 = Message::Weights { blocks: vec![(3, vec![WireTensor::Quant(q4pc.clone())])] };
     let wframe_f32 = codec::encode(0, &wmsg_f32);
     let wframe_q8 = codec::encode(0, &wmsg_q8);
+    let wframe_q4 = codec::encode(0, &wmsg_q4);
     table.row(&[
         "weights frame f32 vs q8".into(),
         format!("{} B vs {} B", wframe_f32.len(), wframe_q8.len()),
         format!("{:.2}x", wframe_f32.len() as f64 / wframe_q8.len() as f64),
     ]);
+    table.row(&[
+        "replica frame f32 vs q4 (per-channel)".into(),
+        format!("{} B vs {} B", wframe_f32.len(), wframe_q4.len()),
+        format!("{:.2}x", wframe_f32.len() as f64 / wframe_q4.len() as f64),
+    ]);
+    let s = bench(5, 200, || {
+        let _ = QTensor::quantize_weights(
+            std::hint::black_box(&xs),
+            ChannelHint::Rows(128),
+            Bits::B4,
+        );
+    });
+    table.row(&[format!("quantize f32->q4 per-channel ({QN} elems)"), us(s.p50), us(s.p95)]);
+    let s = bench(5, 200, || {
+        let _ = std::hint::black_box(&q4pc).dequantize();
+    });
+    table.row(&["dequantize q4->f32".into(), us(s.p50), us(s.p95)]);
+    let s = bench(5, 200, || {
+        let _ = std::hint::black_box(&q8pc).dequantize();
+    });
+    table.row(&["dequantize q8 per-channel->f32".into(), us(s.p50), us(s.p95)]);
 
     // --- payload handling: the old deep copy vs the TensorBuf share ---
     let raw: Vec<f32> = act.to_vec();
@@ -116,6 +143,14 @@ fn quant_codec_section(table: &mut Table, metrics: &mut Vec<(String, f64)>) {
     metrics.push((
         "weights_f32_over_q8_bytes".to_string(),
         wframe_f32.len() as f64 / wframe_q8.len() as f64,
+    ));
+    metrics.push((
+        "replica_f32_over_q4_bytes".to_string(),
+        wframe_f32.len() as f64 / wframe_q4.len() as f64,
+    ));
+    metrics.push((
+        "replica_q8_over_q4_bytes".to_string(),
+        wframe_q8.len() as f64 / wframe_q4.len() as f64,
     ));
     metrics.push(("q8_encode_over_f32_encode".to_string(), enc_q8.p50 / enc_f32.p50));
     metrics.push(("q8_decode_over_f32_decode".to_string(), dec_q8.p50 / dec_f32.p50));

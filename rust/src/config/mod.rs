@@ -10,10 +10,14 @@ use anyhow::{anyhow, Result};
 
 use crate::util::json::Value;
 
-/// Wire-compression policy (off / activations-only / full). Defined next
-/// to the quantizer in `net::quant`; re-exported here because it is a
-/// run-level policy knob selected per message class in [`RunConfig`].
+/// Wire-compression policy (off / activations-only / full / full+q4 /
+/// adaptive). Defined next to the quantizer in `net::quant`; re-exported
+/// here because it is a run-level policy knob selected per message class
+/// in [`RunConfig`].
 pub use crate::net::quant::Compression;
+/// Bandwidth thresholds of the adaptive tier ladder (see
+/// `net::quant::AdaptivePolicy`); re-exported for [`RunConfig`] parsing.
+pub use crate::net::quant::AdaptiveThresholds;
 
 /// One participating device. `capacity` follows the paper's eq (1): the
 /// ratio of this device's per-layer execution time to the central node's
@@ -91,10 +95,22 @@ pub struct RunConfig {
     pub bandwidth_bps: Vec<f64>,
     /// One-way link latency in seconds (per message).
     pub link_latency_s: f64,
-    /// INT8 wire compression: `Off` (f32 everywhere), `Activations`
-    /// (forward activations + backward gradients with error feedback),
-    /// or `Full` (also replica pushes and weight-fetch replies).
+    /// Wire compression: `Off` (f32 everywhere), `Activations` (forward
+    /// activations + backward gradients with error feedback), `Full`
+    /// (also replica pushes and weight-fetch replies, per-channel scales
+    /// on 2-D blocks), `FullQ4` (`Full` with 4-bit replica pushes), or
+    /// `Adaptive` (the coordinator walks that ladder per measured link
+    /// bandwidth — see [`RunConfig::adaptive`], DESIGN.md §10).
     pub compression: Compression,
+    /// Tier thresholds for `Compression::Adaptive` (ignored otherwise).
+    pub adaptive: AdaptiveThresholds,
+    /// Re-measure link bandwidth every N batches (0 = only at init).
+    /// Required for `Adaptive` to see mid-run degradation.
+    pub bw_probe_every: u64,
+    /// Fixed payload of those periodic probes; 0 (default) auto-sizes
+    /// from the last measurement — a fixed small echo is latency-capped
+    /// at `payload / rtt` and would mis-rank fast links.
+    pub bw_probe_bytes: u64,
 
     // --- training hyper-parameters (paper §IV-B) ---
     pub lr: f32,
@@ -156,6 +172,9 @@ impl Default for RunConfig {
             bandwidth_bps: vec![12.5e6], // ~100 Mbps WiFi
             link_latency_s: 0.002,
             compression: Compression::Off,
+            adaptive: AdaptiveThresholds::default(),
+            bw_probe_every: 0,
+            bw_probe_bytes: 0,
             lr: 0.01,
             momentum: 0.9,
             weight_decay: 4e-5,
@@ -214,6 +233,9 @@ impl RunConfig {
                 return Err(anyhow!("fault.kill_device must be a worker index"));
             }
         }
+        if self.compression == Compression::Adaptive {
+            self.adaptive.validate()?;
+        }
         Ok(())
     }
 
@@ -256,8 +278,31 @@ impl RunConfig {
             c.link_latency_s = x;
         }
         if let Some(s) = v.get("compression").and_then(|x| x.as_str()) {
-            c.compression = Compression::parse(s)
-                .ok_or_else(|| anyhow!("unknown compression {s:?} (off|activations|full)"))?;
+            c.compression = Compression::parse(s).ok_or_else(|| {
+                anyhow!("unknown compression {s:?} (off|activations|full|full+q4|adaptive)")
+            })?;
+        }
+        if let Some(a) = v.get("adaptive") {
+            if *a != Value::Null {
+                if let Some(x) = getf(a, "activations_below") {
+                    c.adaptive.activations_below = x;
+                }
+                if let Some(x) = getf(a, "full_below") {
+                    c.adaptive.full_below = x;
+                }
+                if let Some(x) = getf(a, "q4_below") {
+                    c.adaptive.q4_below = x;
+                }
+                if let Some(x) = getf(a, "relax_factor") {
+                    c.adaptive.relax_factor = x;
+                }
+            }
+        }
+        if let Some(x) = getu(v, "bw_probe_every") {
+            c.bw_probe_every = x as u64;
+        }
+        if let Some(x) = getu(v, "bw_probe_bytes") {
+            c.bw_probe_bytes = x as u64;
         }
         if let Some(x) = getf(v, "lr") {
             c.lr = x as f32;
@@ -391,6 +436,35 @@ mod tests {
         let v = json::parse(r#"{"compression": "activations"}"#).unwrap();
         assert_eq!(RunConfig::from_json(&v).unwrap().compression, Compression::Activations);
         let v = json::parse(r#"{"compression": "zstd"}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn parse_adaptive_compression_with_thresholds() {
+        let v = json::parse(
+            r#"{
+              "compression": "adaptive",
+              "bw_probe_every": 5,
+              "bw_probe_bytes": 2048,
+              "adaptive": {"activations_below": 3e6, "full_below": 4e5,
+                           "q4_below": 1.5e5, "relax_factor": 2.0}
+            }"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&v).unwrap();
+        assert_eq!(c.compression, Compression::Adaptive);
+        assert_eq!(c.bw_probe_every, 5);
+        assert_eq!(c.bw_probe_bytes, 2048);
+        assert_eq!(c.adaptive.full_below, 4e5);
+        assert_eq!(c.adaptive.relax_factor, 2.0);
+        // full+q4 is a legal static policy too
+        let v = json::parse(r#"{"compression": "full+q4"}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&v).unwrap().compression, Compression::FullQ4);
+        // unordered thresholds are rejected at validate time
+        let v = json::parse(
+            r#"{"compression": "adaptive", "adaptive": {"q4_below": 9e9}}"#,
+        )
+        .unwrap();
         assert!(RunConfig::from_json(&v).is_err());
     }
 

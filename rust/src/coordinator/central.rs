@@ -22,6 +22,7 @@ use crate::manifest::{Dtype, Manifest};
 use crate::metrics::{BatchRecord, EpochRecord, RunClock, RunRecord};
 use crate::model::BlockParams;
 use crate::net::message::{DeviceId, Message, TrainInit};
+use crate::net::quant::AdaptivePolicy;
 use crate::net::sim::{SimEndpoint, SimNet};
 use crate::net::Transport;
 use crate::partition::Partition;
@@ -42,6 +43,10 @@ pub(crate) struct Central {
     pub(crate) estimator: CapacityEstimator,
     pub(crate) detector: FaultDetector,
     pub(crate) measured_bw: Vec<f64>, // per link, from BwReports
+    /// Tier controller for `Compression::Adaptive` (None otherwise):
+    /// every BwReport feeds it the slowest measured link, and a tier
+    /// change broadcasts `SetCompression` (DESIGN.md §10).
+    pub(crate) adaptive: Option<AdaptivePolicy>,
     pub(crate) record: RunRecord,
     pub(crate) clock: RunClock,
     // training pointers
@@ -203,6 +208,7 @@ impl Central {
                 if stage < self.measured_bw.len() {
                     self.measured_bw[stage] = bps;
                 }
+                self.maybe_adapt()?;
             }
             Event::Control(ControlEvent::Weights { from, blocks }) => {
                 self.worker.handle_weights(&self.endpoint, from, blocks)?;
@@ -212,6 +218,61 @@ impl Central {
                 // the global store, fetch serving, probes, bw tests, ...)
                 self.worker.on_event(&self.endpoint, other)?;
             }
+        }
+        Ok(())
+    }
+
+    /// Re-evaluate the adaptive compression tier against the slowest
+    /// measured link of the current pipeline; on a change, install the
+    /// tier on the local stage and broadcast `SetCompression`. A no-op
+    /// for static policies.
+    pub(crate) fn maybe_adapt(&mut self) -> Result<()> {
+        let Some(policy) = self.adaptive.as_mut() else {
+            return Ok(());
+        };
+        let links = self.worker.worker_list.len().saturating_sub(1);
+        let min_bw = self.measured_bw[..links.min(self.measured_bw.len())]
+            .iter()
+            .copied()
+            .filter(|b| *b > 0.0) // 0 = not measured yet
+            .fold(f64::INFINITY, f64::min);
+        if !min_bw.is_finite() {
+            return Ok(());
+        }
+        let old = policy.tier();
+        if let Some(tier) = policy.observe(min_bw) {
+            log_info!(
+                "adaptive compression: min link {min_bw:.0} B/s, tier {} -> {}",
+                old.name(),
+                tier.name()
+            );
+            self.record.event(
+                &self.clock,
+                format!("adaptive: tier {} -> {} ({min_bw:.0} B/s)", old.name(), tier.name()),
+            );
+            self.worker.set_tier(tier);
+            for &d in self.worker.worker_list.clone().iter().filter(|&&d| d != 0) {
+                self.endpoint.send(d, Message::SetCompression { tier })?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Re-send the adaptive controller's current tier to `peers` and the
+    /// local stage (no-op for static policies or at tier off). Recovery
+    /// calls this after its Resets: a re-inited worker starts back at
+    /// the policy's initial tier, and the controller won't repeat an
+    /// unchanged tier on its own.
+    pub(crate) fn rebroadcast_tier(&mut self, peers: &[DeviceId]) -> Result<()> {
+        let Some(tier) = self.adaptive.as_ref().map(|p| p.tier()) else {
+            return Ok(());
+        };
+        if tier == crate::net::quant::Tier::Off {
+            return Ok(());
+        }
+        self.worker.set_tier(tier);
+        for &d in peers {
+            self.endpoint.send(d, Message::SetCompression { tier })?;
         }
         Ok(())
     }
@@ -369,6 +430,8 @@ impl Central {
             global_every: global,
             status,
             compression: self.cfg.compression,
+            bw_probe_every: self.cfg.bw_probe_every,
+            bw_probe_bytes: self.cfg.bw_probe_bytes,
         }
     }
 

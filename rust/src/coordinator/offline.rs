@@ -233,6 +233,8 @@ pub(crate) fn bootstrap(cfg: &RunConfig, mut opts: RunOpts) -> Result<BootResult
         estimator: CapacityEstimator::default(),
         detector: FaultDetector::new(Duration::from_millis(cfg.fault_timeout_ms)),
         measured_bw: vec![0.0; n.saturating_sub(1)],
+        adaptive: (cfg.compression == crate::config::Compression::Adaptive)
+            .then(|| crate::net::quant::AdaptivePolicy::new(cfg.adaptive.clone())),
         record: RunRecord::default(),
         clock: RunClock::start(),
         next_inject: (committed + 1).max(0) as u64,

@@ -340,6 +340,12 @@ impl Central {
         for &d in &peers_now {
             self.endpoint.send(d, Message::Reset { committed })?;
         }
+        // a worker re-inited during this recovery fell back to the
+        // policy's initial tier — re-align everyone with the adaptive
+        // controller's current rung (mirrors the scenario runner's
+        // reset_all; `observe` only fires on a *change*, so without this
+        // a restored worker would send f32 over the degraded link forever)
+        self.rebroadcast_tier(&peers_now)?;
         self.worker.apply_reset(committed);
         self.detector.clear();
         self.inflight = 0;

@@ -15,23 +15,30 @@
 //!
 //! Round-trip safety is property-tested below over every variant.
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, bail, Result};
 
 use super::buf::TensorBuf;
 use super::message::{
     DeviceId, ExecReport, Message, Payload, ReplicaKind, TrainInit, WireBlock, WireTensor,
 };
-use super::quant::{Compression, QTensor};
+use super::quant::{Bits, Compression, QTensor, Scheme, Tier};
 
 /// v2: tensors inside `Backward`/`Weights`/`ReplicaPush` carry a dtype
 /// tag (f32 | q8), `Forward` payloads gained a q8 arm, and `InitState`
 /// carries the cluster's [`Compression`] policy.
 ///
 /// v3: the central checkpoint-restart handshake — `CentralRestart`
-/// (tag 19) and `WorkerState` (tag 20). Existing tags are byte-identical
-/// to v2; the version bump exists so a rebooted v3 coordinator never
-/// talks past a v2 worker that would reject the new tags mid-protocol.
-pub const CODEC_VERSION: u8 = 3;
+/// (tag 19) and `WorkerState` (tag 20).
+///
+/// v4: the adaptive-compression wire — quantized tensors carry a scheme
+/// subtag (per-tensor q8 keeps its v2 layout under subtag 1; per-channel
+/// q8 and packed q4 arms are subtags 2–4), `Forward` quant payloads use
+/// the same subtag space, `InitState` gained `bw_probe_every`, and
+/// `SetCompression` is message tag 21. The bump exists so a v4 peer
+/// never talks past a v3 one that would reject the new arms mid-stream.
+pub const CODEC_VERSION: u8 = 4;
 
 // ---------- primitive writers ----------
 
@@ -80,24 +87,46 @@ impl W<'_> {
         self.u32(xs.len() as u32);
         self.0.extend_from_slice(xs);
     }
-    /// Quantized tensor: the u8 payload is written as-is — no f32
+    /// Quantized tensor, scheme-subtagged (1 = q8 per-tensor in the v2
+    /// layout; 2 = q8 per-channel; 3 = q4 per-tensor; 4 = q4
+    /// per-channel). The packed payload is written as-is — no f32
     /// materialization anywhere on the encode path.
     fn qtensor(&mut self, q: &QTensor) {
-        self.bytes(q.bytes());
-        self.f32(q.scale());
-        self.f32(q.zero());
+        match (q.bits(), q.scheme()) {
+            (Bits::B8, Scheme::PerTensor { scale, zero }) => {
+                self.u8(1);
+                self.bytes(q.bytes());
+                self.f32(*scale);
+                self.f32(*zero);
+            }
+            (Bits::B4, Scheme::PerTensor { scale, zero }) => {
+                self.u8(3);
+                self.u32(q.len() as u32);
+                self.f32(*scale);
+                self.f32(*zero);
+                self.bytes(q.bytes());
+            }
+            (bits, Scheme::PerChannel { pairs, interleaved }) => {
+                self.u8(if matches!(bits, Bits::B8) { 2 } else { 4 });
+                self.u32(q.len() as u32);
+                self.bool(*interleaved);
+                self.u32(pairs.len() as u32);
+                for &(s, z) in pairs.iter() {
+                    self.f32(s);
+                    self.f32(z);
+                }
+                self.bytes(q.bytes());
+            }
+        }
     }
-    /// Dtype-tagged tensor (0 = f32, 1 = q8).
+    /// Dtype-tagged tensor (0 = f32; 1–4 = the quantized subtags).
     fn wire_tensor(&mut self, t: &WireTensor) {
         match t {
             WireTensor::F32(v) => {
                 self.u8(0);
                 self.f32s(v);
             }
-            WireTensor::Q8(q) => {
-                self.u8(1);
-                self.qtensor(q);
-            }
+            WireTensor::Quant(q) => self.qtensor(q),
         }
     }
     fn blocks(&mut self, blocks: &[WireBlock]) {
@@ -189,18 +218,52 @@ impl<'a> R<'a> {
         self.i += n;
         Ok(v)
     }
-    /// The u8 payload lands directly in the `QTensor`'s shared buffer —
-    /// decode never expands a quantized tensor to f32.
+    /// The packed payload lands directly in the `QTensor`'s shared
+    /// buffer — decode never expands a quantized tensor to f32. `tag` is
+    /// the scheme subtag already consumed by the caller.
+    fn qtensor_body(&mut self, tag: u8) -> Result<QTensor> {
+        match tag {
+            1 => {
+                let data = self.bytes()?;
+                let scale = self.f32()?;
+                let zero = self.f32()?;
+                Ok(QTensor::from_parts(data, scale, zero))
+            }
+            3 => {
+                let len = self.u32()? as usize;
+                let scale = self.f32()?;
+                let zero = self.f32()?;
+                let data = self.bytes()?;
+                QTensor::from_wire(data, len, Bits::B4, Scheme::PerTensor { scale, zero })
+            }
+            2 | 4 => {
+                let len = self.u32()? as usize;
+                let interleaved = self.bool()?;
+                let n = self.u32()? as usize;
+                self.need(n * 8)?;
+                let mut pairs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    pairs.push((self.f32()?, self.f32()?));
+                }
+                let data = self.bytes()?;
+                let bits = if tag == 2 { Bits::B8 } else { Bits::B4 };
+                QTensor::from_wire(data, len, bits, Scheme::PerChannel {
+                    pairs: Arc::new(pairs),
+                    interleaved,
+                })
+            }
+            t => bail!("bad quantized-tensor subtag {t}"),
+        }
+    }
+    /// A quantized tensor with its leading subtag (Forward payloads).
     fn qtensor(&mut self) -> Result<QTensor> {
-        let data = self.bytes()?;
-        let scale = self.f32()?;
-        let zero = self.f32()?;
-        Ok(QTensor::from_parts(data, scale, zero))
+        let tag = self.u8()?;
+        self.qtensor_body(tag)
     }
     fn wire_tensor(&mut self) -> Result<WireTensor> {
         match self.u8()? {
             0 => Ok(WireTensor::F32(self.tensor()?)),
-            1 => Ok(WireTensor::Q8(self.qtensor()?)),
+            t @ 1..=4 => Ok(WireTensor::Quant(self.qtensor_body(t)?)),
             t => bail!("bad tensor dtype tag {t}"),
         }
     }
@@ -247,7 +310,7 @@ pub fn encode_into(buf: &mut Vec<u8>, from: DeviceId, msg: &Message) {
                     w.u8(1);
                     w.i32s(v);
                 }
-                Payload::Q8(q) => {
+                Payload::Quant(q) => {
                     w.u8(2);
                     w.qtensor(q);
                 }
@@ -307,6 +370,8 @@ pub fn encode_into(buf: &mut Vec<u8>, from: DeviceId, msg: &Message) {
             w.u64(t.global_every);
             w.u8(t.status);
             w.u8(t.compression.to_u8());
+            w.u64(t.bw_probe_every);
+            w.u64(t.bw_probe_bytes);
         }
         Message::Repartition { ranges, worker_list, failed } => {
             w.u8(7);
@@ -384,6 +449,10 @@ pub fn encode_into(buf: &mut Vec<u8>, from: DeviceId, msg: &Message) {
             w.i64(*committed_bwd);
             w.bool(*fresh);
         }
+        Message::SetCompression { tier } => {
+            w.u8(21);
+            w.u8(tier.to_u8());
+        }
         Message::Shutdown => w.u8(16),
     }
 }
@@ -413,7 +482,7 @@ pub fn decode(frame: &[u8]) -> Result<(DeviceId, Message)> {
             let data = match r.u8()? {
                 0 => Payload::F32(r.tensor()?),
                 1 => Payload::I32(r.i32s()?),
-                2 => Payload::Q8(r.qtensor()?),
+                2 => Payload::Quant(r.qtensor()?),
                 t => bail!("bad payload tag {t}"),
             };
             Message::Forward { batch, version0, is_eval, data }
@@ -475,6 +544,8 @@ pub fn decode(frame: &[u8]) -> Result<(DeviceId, Message)> {
                     Compression::from_u8(c)
                         .ok_or_else(|| anyhow!("bad compression policy {c}"))?
                 },
+                bw_probe_every: r.u64()?,
+                bw_probe_bytes: r.u64()?,
             })
         }
         7 => {
@@ -530,6 +601,12 @@ pub fn decode(frame: &[u8]) -> Result<(DeviceId, Message)> {
             committed_bwd: r.i64()?,
             fresh: r.bool()?,
         },
+        21 => Message::SetCompression {
+            tier: {
+                let t = r.u8()?;
+                Tier::from_u8(t).ok_or_else(|| anyhow!("bad compression tier {t}"))?
+            },
+        },
         t => return Err(anyhow!("unknown message tag {t}")),
     };
     if r.i != frame.len() {
@@ -541,6 +618,7 @@ pub fn decode(frame: &[u8]) -> Result<(DeviceId, Message)> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::net::quant::ChannelHint;
     use crate::util::prop::{check, G};
 
     fn roundtrip(from: DeviceId, msg: &Message) {
@@ -576,6 +654,9 @@ mod tests {
             committed_bwd: -1,
             fresh: true,
         });
+        for tier in [Tier::Off, Tier::Activations, Tier::Full, Tier::FullQ4] {
+            roundtrip(0, &Message::SetCompression { tier });
+        }
     }
 
     #[test]
@@ -619,6 +700,8 @@ mod tests {
                 global_every: 100,
                 status: 0,
                 compression: Compression::Activations,
+                bw_probe_every: 5,
+                bw_probe_bytes: 2048,
             }),
         );
     }
@@ -668,49 +751,60 @@ mod tests {
         });
     }
 
-    /// Satellite: exact re-encode stability for quantized payloads. For
-    /// every tensor-carrying variant, decode(encode(m)) re-encodes to the
-    /// byte-identical frame, and Q8 tensors compare bit-exactly (QTensor
-    /// equality is representation equality, so `m2 == msg` on a Q8 arm
-    /// asserts identical bytes + identical scale/zero bit patterns).
+    /// Satellite: exact re-encode stability for quantized payloads
+    /// across EVERY quant arm (per-tensor/per-channel × q8/q4, odd
+    /// lengths included). For every tensor-carrying variant,
+    /// decode(encode(m)) re-encodes to the byte-identical frame, and
+    /// quantized tensors compare bit-exactly (QTensor equality is
+    /// representation equality, so `m2 == msg` on a quant arm asserts
+    /// identical packed bytes + identical scale/zero bit patterns).
     #[test]
-    fn prop_q8_reencode_is_byte_identical() {
-        check("codec-q8-reencode", 200, |g: &mut G<'_>| {
+    fn prop_quant_reencode_is_byte_identical() {
+        check("codec-quant-reencode", 200, |g: &mut G<'_>| {
             let len = g.sized_usize(0, 64);
             let xs = g.vec_f32(len);
-            let q = QTensor::quantize(&xs);
-            let msgs = vec![
-                Message::Forward {
-                    batch: 1,
-                    version0: 2,
-                    is_eval: false,
-                    data: Payload::Q8(q.clone()),
-                },
-                Message::Backward {
-                    batch: 3,
-                    grad: WireTensor::Q8(q.clone()),
-                    loss: 0.5,
-                    ncorrect: 1.0,
-                    reports: vec![],
-                },
-                Message::Weights { blocks: vec![(4, vec![WireTensor::Q8(q.clone())])] },
-                Message::ReplicaPush {
-                    kind: ReplicaKind::Global,
-                    owner_stage: 1,
-                    owner_device: 2,
-                    version: 9,
-                    blocks: vec![(0, vec![WireTensor::Q8(q.clone()), xs.clone().into()])],
-                },
+            // a second tensor with per-channel-friendly geometry
+            let wide: Vec<f32> = g.vec_f32(64);
+            let arms: Vec<QTensor> = vec![
+                QTensor::quantize(&xs),
+                QTensor::quantize_bits(&xs, Bits::B4), // odd lens pack here
+                QTensor::quantize_weights(&wide, ChannelHint::Rows(2), Bits::B8),
+                QTensor::quantize_weights(&wide, ChannelHint::Cols(4), Bits::B4),
             ];
-            for msg in msgs {
-                let frame = encode(5, &msg);
-                let (_, m2) = decode(&frame).map_err(|e| format!("{}: {e}", msg.tag()))?;
-                if m2 != msg {
-                    return Err(format!("{}: value drift after roundtrip", msg.tag()));
-                }
-                let frame2 = encode(5, &m2);
-                if frame2 != frame {
-                    return Err(format!("{}: re-encoded frame differs", msg.tag()));
+            for q in arms {
+                let msgs = vec![
+                    Message::Forward {
+                        batch: 1,
+                        version0: 2,
+                        is_eval: false,
+                        data: Payload::Quant(q.clone()),
+                    },
+                    Message::Backward {
+                        batch: 3,
+                        grad: WireTensor::Quant(q.clone()),
+                        loss: 0.5,
+                        ncorrect: 1.0,
+                        reports: vec![],
+                    },
+                    Message::Weights { blocks: vec![(4, vec![WireTensor::Quant(q.clone())])] },
+                    Message::ReplicaPush {
+                        kind: ReplicaKind::Global,
+                        owner_stage: 1,
+                        owner_device: 2,
+                        version: 9,
+                        blocks: vec![(0, vec![WireTensor::Quant(q.clone()), xs.clone().into()])],
+                    },
+                ];
+                for msg in msgs {
+                    let frame = encode(5, &msg);
+                    let (_, m2) = decode(&frame).map_err(|e| format!("{}: {e}", msg.tag()))?;
+                    if m2 != msg {
+                        return Err(format!("{}: value drift after roundtrip", msg.tag()));
+                    }
+                    let frame2 = encode(5, &m2);
+                    if frame2 != frame {
+                        return Err(format!("{}: re-encoded frame differs", msg.tag()));
+                    }
                 }
             }
             Ok(())
@@ -718,47 +812,62 @@ mod tests {
     }
 
     /// Satellite: lossy-path accuracy. f32 → quantize → wire → dequantize
-    /// stays within the tensor's scale-derived tolerance for every
-    /// message class that carries tensors.
+    /// stays within the tensor's scale-derived tolerance for every quant
+    /// arm (per-tensor q8 and packed per-channel q4 alike).
     #[test]
-    fn prop_f32_q8_f32_within_scale_tolerance() {
-        check("codec-q8-tolerance", 200, |g: &mut G<'_>| {
+    fn prop_f32_quant_f32_within_scale_tolerance() {
+        check("codec-quant-tolerance", 200, |g: &mut G<'_>| {
             let len = g.sized_usize(1, 64);
             let xs = g.vec_f32(len);
-            let q = QTensor::quantize(&xs);
-            let tol = q.tolerance();
-            let msg = Message::Forward {
-                batch: 0,
-                version0: 0,
-                is_eval: false,
-                data: Payload::Q8(q),
-            };
-            let (_, m2) = decode(&encode(1, &msg)).map_err(|e| e.to_string())?;
-            let Message::Forward { data: Payload::Q8(q2), .. } = m2 else {
-                return Err("payload changed class".into());
-            };
-            let back = q2.dequantize();
-            for (i, (&a, &b)) in xs.iter().zip(back.iter()).enumerate() {
-                if (a - b).abs() > tol {
-                    return Err(format!("elem {i}: {a} -> {b} exceeds tol {tol}"));
+            let wide = g.vec_f32(32);
+            let arms = vec![
+                QTensor::quantize(&xs),
+                QTensor::quantize_weights(&wide, ChannelHint::Rows(2), Bits::B4),
+            ];
+            for (src, q) in [(&xs, &arms[0]), (&wide, &arms[1])] {
+                let tol = q.tolerance();
+                let msg = Message::Forward {
+                    batch: 0,
+                    version0: 0,
+                    is_eval: false,
+                    data: Payload::Quant(q.clone()),
+                };
+                let (_, m2) = decode(&encode(1, &msg)).map_err(|e| e.to_string())?;
+                let Message::Forward { data: Payload::Quant(q2), .. } = m2 else {
+                    return Err("payload changed class".into());
+                };
+                let back = q2.dequantize();
+                for (i, (&a, &b)) in src.iter().zip(back.iter()).enumerate() {
+                    if (a - b).abs() > tol {
+                        return Err(format!("elem {i}: {a} -> {b} exceeds tol {tol}"));
+                    }
                 }
             }
             Ok(())
         });
     }
 
-    /// A random wire tensor — f32 or quantized, so every tensor-carrying
-    /// variant is property-tested in both encodings.
+    /// A random wire tensor across every encoding arm, so every
+    /// tensor-carrying variant is property-tested in all of them.
     fn random_wire_tensor(g: &mut G<'_>, len: usize) -> WireTensor {
         let xs = g.vec_f32(len);
-        if g.bool() {
-            WireTensor::Q8(QTensor::quantize(&xs))
-        } else {
-            WireTensor::F32(xs.into())
+        match g.usize_in(0, 3) {
+            0 => WireTensor::F32(xs.into()),
+            1 => WireTensor::Quant(QTensor::quantize(&xs)),
+            2 => WireTensor::Quant(QTensor::quantize_bits(&xs, Bits::B4)),
+            _ => {
+                // pick a channel count that divides len (falls back to
+                // per-tensor inside quantize_weights when it can't pay)
+                let nch = if len % 4 == 0 && len >= 4 { 4 } else { 1 };
+                let hint =
+                    if g.bool() { ChannelHint::Rows(nch.max(1)) } else { ChannelHint::Cols(nch) };
+                let bits = if g.bool() { Bits::B8 } else { Bits::B4 };
+                WireTensor::Quant(QTensor::quantize_weights(&xs, hint, bits))
+            }
         }
     }
 
-    /// Uniformly draws from EVERY `Message` variant (21 as of codec v3).
+    /// Uniformly draws from EVERY `Message` variant (22 as of codec v4).
     fn random_message(g: &mut G<'_>) -> Message {
         let blocks = |g: &mut G<'_>| -> Vec<WireBlock> {
             (0..g.usize_in(0, 3))
@@ -778,15 +887,16 @@ mod tests {
                 })
                 .collect()
         };
-        match g.usize_in(0, 20) {
+        match g.usize_in(0, 21) {
             0 => Message::Forward {
                 batch: g.usize_in(0, 1000) as u64,
                 version0: g.usize_in(0, 50) as u64,
                 is_eval: g.bool(),
-                data: match g.usize_in(0, 2) {
+                data: match g.usize_in(0, 3) {
                     0 => Payload::F32(g.vec_f32(g.size).into()),
                     1 => Payload::I32((0..g.size).map(|i| i as i32 - 3).collect()),
-                    _ => Payload::Q8(QTensor::quantize(&g.vec_f32(g.size))),
+                    2 => Payload::Quant(QTensor::quantize(&g.vec_f32(g.size))),
+                    _ => Payload::Quant(QTensor::quantize_bits(&g.vec_f32(g.size), Bits::B4)),
                 },
             },
             1 => Message::Labels {
@@ -829,7 +939,11 @@ mod tests {
                     Compression::Off,
                     Compression::Activations,
                     Compression::Full,
+                    Compression::FullQ4,
+                    Compression::Adaptive,
                 ]),
+                bw_probe_every: g.usize_in(0, 16) as u64,
+                bw_probe_bytes: g.usize_in(0, 1 << 16) as u64,
             }),
             7 => Message::Repartition {
                 ranges: (0..g.usize_in(1, 4)).map(|i| (i * 2, i * 2 + 1)).collect(),
@@ -861,6 +975,9 @@ mod tests {
                 committed_fwd: g.usize_in(0, 500) as i64 - 1,
                 committed_bwd: g.usize_in(0, 500) as i64 - 1,
                 fresh: g.bool(),
+            },
+            20 => Message::SetCompression {
+                tier: *g.pick(&[Tier::Off, Tier::Activations, Tier::Full, Tier::FullQ4]),
             },
             _ => Message::Shutdown,
         }

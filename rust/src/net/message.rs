@@ -7,23 +7,24 @@
 //! re-partition, replication, and fault-tolerance protocols need (§III-B/E/F).
 
 use super::buf::TensorBuf;
-use super::quant::{Compression, QTensor};
+use super::quant::{Bits, ChannelHint, Compression, QTensor, Tier, WeightCoding};
 
 /// Physical device id (stable across re-partitions; stage indices map to
 /// device ids through the worker list).
 pub type DeviceId = usize;
 
 /// Activation payload entering a stage (shared f32 acts, i32 tokens, or
-/// an INT8-quantized activation). The f32/q8 arms are `Arc`-backed:
+/// a quantized activation). The f32/quant arms are `Arc`-backed:
 /// cloning the payload (or the whole message) shares the buffer instead
 /// of copying it.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Payload {
     F32(TensorBuf),
     I32(Vec<i32>),
-    /// Affine-quantized activation (see [`crate::net::quant`]): 1 byte
-    /// per element plus a per-tensor `(scale, zero)` pair.
-    Q8(QTensor),
+    /// Affine-quantized activation (see [`crate::net::quant`]) — in
+    /// practice always the per-tensor INT8 arm; the wire self-describes
+    /// the scheme either way.
+    Quant(QTensor),
 }
 
 impl Payload {
@@ -31,26 +32,28 @@ impl Payload {
         match self {
             Payload::F32(v) => v.len() * 4,
             Payload::I32(v) => v.len() * 4,
-            Payload::Q8(q) => q.byte_len(),
+            Payload::Quant(q) => q.byte_len(),
         }
     }
 }
 
 /// A tensor on the wire: full-precision (shared buffer, zero-copy) or
-/// INT8-quantized. Gradients and the tensors inside [`WireBlock`]s travel
-/// as `WireTensor`s; [`WireTensor::into_f32`] is the receiver-boundary
-/// dequantization step (a move for the f32 arm).
+/// quantized (INT8 or packed INT4, per-tensor or per-channel scales —
+/// the [`QTensor`] self-describes its arm). Gradients and the tensors
+/// inside [`WireBlock`]s travel as `WireTensor`s;
+/// [`WireTensor::into_f32`] is the receiver-boundary dequantization
+/// step (a move for the f32 arm).
 #[derive(Debug, Clone, PartialEq)]
 pub enum WireTensor {
     F32(TensorBuf),
-    Q8(QTensor),
+    Quant(QTensor),
 }
 
 impl WireTensor {
     pub fn len(&self) -> usize {
         match self {
             WireTensor::F32(t) => t.len(),
-            WireTensor::Q8(q) => q.len(),
+            WireTensor::Quant(q) => q.len(),
         }
     }
 
@@ -62,39 +65,41 @@ impl WireTensor {
     pub fn byte_len(&self) -> usize {
         match self {
             WireTensor::F32(t) => t.len() * 4,
-            WireTensor::Q8(q) => q.byte_len(),
+            WireTensor::Quant(q) => q.byte_len(),
         }
     }
 
     pub fn as_f32(&self) -> Option<&TensorBuf> {
         match self {
             WireTensor::F32(t) => Some(t),
-            WireTensor::Q8(_) => None,
+            WireTensor::Quant(_) => None,
         }
     }
 
-    pub fn as_q8(&self) -> Option<&QTensor> {
+    pub fn as_quant(&self) -> Option<&QTensor> {
         match self {
-            WireTensor::Q8(q) => Some(q),
+            WireTensor::Quant(q) => Some(q),
             WireTensor::F32(_) => None,
         }
     }
 
     /// Materialize as f32: a move (no copy) for the f32 arm, the single
-    /// dequantization write for the q8 arm.
+    /// dequantization write for the quantized arm.
     pub fn into_f32(self) -> TensorBuf {
         match self {
             WireTensor::F32(t) => t,
-            WireTensor::Q8(q) => q.dequantize(),
+            WireTensor::Quant(q) => q.dequantize(),
         }
     }
 
-    /// Wrap an f32 tensor, quantizing iff the policy compresses weights.
-    pub fn from_weights(t: &TensorBuf, compression: Compression) -> WireTensor {
-        if compression.weights() {
-            WireTensor::Q8(QTensor::quantize(t))
-        } else {
-            WireTensor::F32(t.clone())
+    /// Wrap one weight tensor for the wire under `coding`, applying
+    /// per-channel scales where the shape-derived `hint` says they pay
+    /// (see [`crate::net::quant::weight_channel_hint`]).
+    pub fn from_weights(t: &TensorBuf, coding: WeightCoding, hint: ChannelHint) -> WireTensor {
+        match coding {
+            WeightCoding::F32 => WireTensor::F32(t.clone()),
+            WeightCoding::Q8 => WireTensor::Quant(QTensor::quantize_weights(t, hint, Bits::B8)),
+            WeightCoding::Q4 => WireTensor::Quant(QTensor::quantize_weights(t, hint, Bits::B4)),
         }
     }
 }
@@ -113,7 +118,7 @@ impl From<Vec<f32>> for WireTensor {
 
 impl From<QTensor> for WireTensor {
     fn from(q: QTensor) -> WireTensor {
-        WireTensor::Q8(q)
+        WireTensor::Quant(q)
     }
 }
 
@@ -154,9 +159,19 @@ pub struct TrainInit {
     pub global_every: u64,
     /// 0 = normal, 1 = fault recovery in progress (paper `status`)
     pub status: u8,
-    /// Wire-compression policy, distributed cluster-wide at init so
-    /// every sender/receiver pair agrees on the tensor encoding.
+    /// Wire-compression policy, distributed cluster-wide at init. The
+    /// wire is self-describing, so a sender/receiver tier mismatch is
+    /// never a decode error — the policy only selects what each sender
+    /// *produces* (initially; `Adaptive` retunes via `SetCompression`).
     pub compression: Compression,
+    /// Re-measure the link to the next worker every this many batches
+    /// (paper §III-B's measurement, made periodic so the adaptive
+    /// policy sees degradation). 0 = only the one-shot init probe.
+    pub bw_probe_every: u64,
+    /// Fixed payload for those periodic probes. 0 = auto-size from the
+    /// last measured rate (a fixed small echo is latency-capped at
+    /// `payload / rtt` and would mis-measure fast links).
+    pub bw_probe_bytes: u64,
 }
 
 /// A block's tensors on the wire — shared buffers (or quantized bytes),
@@ -276,6 +291,15 @@ pub enum Message {
         committed_bwd: i64,
         fresh: bool,
     },
+    /// Central -> workers under [`Compression::Adaptive`]: switch the
+    /// effective wire tier (DESIGN.md §10). Receivers install the tier
+    /// for their *outgoing* tensors and clear error-feedback residuals;
+    /// decoding never depends on it (tensors self-describe their arm),
+    /// so the handshake needs no barrier and cannot corrupt in-flight
+    /// traffic.
+    SetCompression {
+        tier: Tier,
+    },
     Shutdown,
 }
 
@@ -303,6 +327,7 @@ impl Message {
             Message::SetLr { .. } => "SetLr",
             Message::CentralRestart { .. } => "CentralRestart",
             Message::WorkerState { .. } => "WorkerState",
+            Message::SetCompression { .. } => "SetCompression",
             Message::Shutdown => "Shutdown",
         }
     }
@@ -341,6 +366,7 @@ impl Message {
             Message::SetLr { .. } => 4,
             Message::CentralRestart { .. } => 8,
             Message::WorkerState { .. } => 25,
+            Message::SetCompression { .. } => 1,
         }
     }
 }

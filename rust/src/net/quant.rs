@@ -1,39 +1,131 @@
-//! INT8 tensor quantization — the compressed wire currency (AccEPT-style
+//! Quantized tensors — the compressed wire currency (AccEPT-style
 //! bit-level compressed transfer, arXiv:2311.05827).
 //!
-//! A [`QTensor`] is an affine-quantized f32 tensor: one `u8` per element
-//! plus a per-tensor `(scale, zero)` pair, so a quantized activation or
-//! gradient costs ~1/4 of its f32 bytes on a link the paper prices at
-//! `latency + bytes/bandwidth`. The codec moves the `u8` payload without
-//! ever materializing intermediate f32s; dequantization happens exactly
-//! once, at the receiving stage's boundary, straight into a
-//! [`TensorBuf`].
+//! A [`QTensor`] is an affine-quantized f32 tensor: `x ≈ zero + q·scale`
+//! with codes packed at one of two widths ([`Bits`] — one `u8` per
+//! element, or two 4-bit codes per byte) and scales at one of two
+//! granularities ([`Scheme`] — one `(scale, zero)` pair per tensor, or
+//! one pair per channel of a 2-D weight). The codec moves the packed
+//! payload without ever materializing intermediate f32s; dequantization
+//! happens exactly once, at the receiving stage's boundary, straight
+//! into a [`TensorBuf`].
 //!
-//! Determinism contract: `quantize` and `dequantize` are pure element-wise
-//! IEEE-754 single-precision pipelines with a fixed evaluation order, so
-//! two runs of one scenario produce bit-identical quantized bytes and
-//! bit-identical dequantized tensors (the scenario suite asserts this
-//! end to end). Which messages are quantized is selected by
-//! [`Compression`] (see `config::Compression`); `Off` keeps every
-//! tensor f32, so numerics, event order, and the bandwidth model's
-//! `Message::byte_len` accounting are exactly the pre-compression
-//! behavior. (The codec *framing* carries a version byte — tensors carry
-//! a dtype tag since v2, the restart handshake joined in v3 — so frames
-//! are not byte-compatible with older peers even under `Off`; all
-//! transports in one cluster speak one version.)
+//! Which encoding each message class uses is a [`Tier`], selected by the
+//! cluster [`Compression`] policy (re-exported as `config::Compression`):
+//! static tiers pin the encoding for the whole run, while
+//! [`Compression::Adaptive`] lets the coordinator walk the tier ladder
+//! ([`AdaptivePolicy`]) as the measured link bandwidth degrades,
+//! broadcasting `SetCompression` control messages (DESIGN.md §10). `Off`
+//! keeps every tensor f32, so numerics, event order, and the bandwidth
+//! model's `Message::byte_len` accounting are exactly the
+//! pre-compression behavior. (The codec *framing* carries a version byte
+//! — tensors carry a dtype tag since v2, per-channel and 4-bit arms
+//! joined in v4 — so frames are not byte-compatible with older peers
+//! even under `Off`; all transports in one cluster speak one version.)
 //!
-//! Gradients additionally carry an error-feedback [`Residual`] on the
-//! sender: the quantization error of step `t` is added to the gradient of
-//! step `t+1` before quantizing, so quantization noise stays bounded
-//! instead of accumulating across SGD steps (DESIGN.md §8).
+//! Determinism contract: `quantize*` and `dequantize` are pure
+//! element-wise IEEE-754 single-precision pipelines with a fixed
+//! evaluation order, so two runs of one scenario produce bit-identical
+//! quantized bytes and bit-identical dequantized tensors (the scenario
+//! suite asserts this end to end).
+//!
+//! Gradients (and 4-bit replica pushes) additionally carry an
+//! error-feedback [`Residual`] on the sender: the quantization error of
+//! step `t` is added to the payload of step `t+1` before quantizing, so
+//! quantization noise stays bounded instead of accumulating across
+//! sends (DESIGN.md §8, §10).
 
 use std::fmt;
 use std::sync::Arc;
 
 use super::buf::TensorBuf;
 
-/// Which message classes travel quantized (policy knob; lives here so the
-/// wire layer owns it, re-exported as `config::Compression`).
+// ---------------------------------------------------------------------
+// policy: tiers, the cluster knob, and the adaptive controller
+// ---------------------------------------------------------------------
+
+/// One rung of the compression ladder — the *effective* wire encoding a
+/// stage applies right now. Ordered: a "greater" tier compresses more.
+/// Static [`Compression`] policies pin one tier for the whole run;
+/// `Compression::Adaptive` moves along the ladder at run time via
+/// `SetCompression` messages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Tier {
+    /// Everything f32 — byte-for-byte the uncompressed wire format.
+    #[default]
+    Off,
+    /// Data plane only: forward activations + backward gradients (Q8).
+    Activations,
+    /// Data plane + weight transfers (replica pushes and fetch/warm-start
+    /// replies travel Q8, per-channel for 2-D blocks).
+    Full,
+    /// [`Tier::Full`] with replica pushes packed to 4 bits (two codes per
+    /// byte, per-channel scales, sender-side error feedback). Restore
+    /// traffic (fetch replies / warm-starts) stays Q8 — replicas are a
+    /// best-effort background stream, restores are a correctness path.
+    FullQ4,
+}
+
+impl Tier {
+    /// Quantize forward activations and backward gradients?
+    pub fn data_plane(self) -> bool {
+        !matches!(self, Tier::Off)
+    }
+
+    /// Quantize weight transfers at all?
+    pub fn weights(self) -> bool {
+        matches!(self, Tier::Full | Tier::FullQ4)
+    }
+
+    /// Coding of periodic replica pushes under this tier.
+    pub fn replica_coding(self) -> WeightCoding {
+        match self {
+            Tier::Off | Tier::Activations => WeightCoding::F32,
+            Tier::Full => WeightCoding::Q8,
+            Tier::FullQ4 => WeightCoding::Q4,
+        }
+    }
+
+    /// Coding of restore traffic (fetch replies / warm-start pushes):
+    /// never coarser than Q8 — a restored stage trains on these bytes.
+    pub fn restore_coding(self) -> WeightCoding {
+        match self {
+            Tier::Off | Tier::Activations => WeightCoding::F32,
+            Tier::Full | Tier::FullQ4 => WeightCoding::Q8,
+        }
+    }
+
+    pub fn to_u8(self) -> u8 {
+        match self {
+            Tier::Off => 0,
+            Tier::Activations => 1,
+            Tier::Full => 2,
+            Tier::FullQ4 => 3,
+        }
+    }
+
+    pub fn from_u8(x: u8) -> Option<Tier> {
+        match x {
+            0 => Some(Tier::Off),
+            1 => Some(Tier::Activations),
+            2 => Some(Tier::Full),
+            3 => Some(Tier::FullQ4),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Off => "off",
+            Tier::Activations => "activations",
+            Tier::Full => "full",
+            Tier::FullQ4 => "full+q4",
+        }
+    }
+}
+
+/// The cluster-wide policy knob (distributed via `TrainInit`; lives here
+/// so the wire layer owns it, re-exported as `config::Compression`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Compression {
     /// Everything f32 — the wire format is byte-for-byte the v1 format.
@@ -43,17 +135,34 @@ pub enum Compression {
     Activations,
     /// Data plane + weight transfers (`ReplicaPush` / `Weights` replies).
     Full,
+    /// [`Compression::Full`] with 4-bit replica pushes ([`Tier::FullQ4`]).
+    FullQ4,
+    /// Coordinator-driven: every stage starts at [`Tier::Off`] and the
+    /// central node escalates/relaxes the tier per measured link
+    /// bandwidth ([`AdaptivePolicy`]) via `SetCompression` messages.
+    Adaptive,
 }
 
 impl Compression {
-    /// Quantize forward activations and backward gradients?
-    pub fn data_plane(self) -> bool {
-        !matches!(self, Compression::Off)
+    /// The tier a stage applies at init time, before any
+    /// `SetCompression` arrives (identity for the static policies).
+    pub fn initial_tier(self) -> Tier {
+        match self {
+            Compression::Off | Compression::Adaptive => Tier::Off,
+            Compression::Activations => Tier::Activations,
+            Compression::Full => Tier::Full,
+            Compression::FullQ4 => Tier::FullQ4,
+        }
     }
 
-    /// Quantize weight transfers (replica pushes, fetch replies)?
+    /// Quantize forward activations and backward gradients (initially)?
+    pub fn data_plane(self) -> bool {
+        self.initial_tier().data_plane()
+    }
+
+    /// Quantize weight transfers (initially)?
     pub fn weights(self) -> bool {
-        matches!(self, Compression::Full)
+        self.initial_tier().weights()
     }
 
     pub fn to_u8(self) -> u8 {
@@ -61,6 +170,8 @@ impl Compression {
             Compression::Off => 0,
             Compression::Activations => 1,
             Compression::Full => 2,
+            Compression::FullQ4 => 3,
+            Compression::Adaptive => 4,
         }
     }
 
@@ -69,16 +180,20 @@ impl Compression {
             0 => Some(Compression::Off),
             1 => Some(Compression::Activations),
             2 => Some(Compression::Full),
+            3 => Some(Compression::FullQ4),
+            4 => Some(Compression::Adaptive),
             _ => None,
         }
     }
 
-    /// Parse the JSON/CLI spelling ("off" / "activations" / "full").
+    /// Parse the JSON/CLI spelling.
     pub fn parse(s: &str) -> Option<Compression> {
         match s {
             "off" => Some(Compression::Off),
             "activations" => Some(Compression::Activations),
             "full" => Some(Compression::Full),
+            "full+q4" => Some(Compression::FullQ4),
+            "adaptive" => Some(Compression::Adaptive),
             _ => None,
         }
     }
@@ -88,94 +203,450 @@ impl Compression {
             Compression::Off => "off",
             Compression::Activations => "activations",
             Compression::Full => "full",
+            Compression::FullQ4 => "full+q4",
+            Compression::Adaptive => "adaptive",
         }
     }
 }
 
-/// An affine-quantized tensor: `x ≈ zero + q * scale`, `q ∈ [0, 255]`.
-///
-/// The byte payload is `Arc`-backed like [`TensorBuf`], so cloning a
-/// quantized message (queueing, replica fan-out) is a refcount bump.
+/// How a weight tensor is coded on the wire (per [`Tier`] and traffic
+/// class — see [`Tier::replica_coding`] / [`Tier::restore_coding`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightCoding {
+    F32,
+    Q8,
+    Q4,
+}
+
+/// Bandwidth thresholds (bytes/sec) of the adaptive ladder: measured
+/// link bandwidth below `*_below` enters that tier. Relaxing back down
+/// the ladder additionally requires the bandwidth to clear the current
+/// tier's entry threshold by `relax_factor` (hysteresis), so jitter
+/// around a boundary can never flip the tier back and forth.
+#[derive(Debug, Clone)]
+pub struct AdaptiveThresholds {
+    pub activations_below: f64,
+    pub full_below: f64,
+    pub q4_below: f64,
+    pub relax_factor: f64,
+}
+
+impl Default for AdaptiveThresholds {
+    fn default() -> AdaptiveThresholds {
+        AdaptiveThresholds {
+            activations_below: 4e6,
+            full_below: 1e6,
+            q4_below: 2.5e5,
+            relax_factor: 1.5,
+        }
+    }
+}
+
+impl AdaptiveThresholds {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.q4_below > 0.0
+                && self.q4_below < self.full_below
+                && self.full_below < self.activations_below,
+            "adaptive thresholds must be ordered 0 < q4 ({}) < full ({}) < activations ({})",
+            self.q4_below,
+            self.full_below,
+            self.activations_below
+        );
+        anyhow::ensure!(
+            self.relax_factor >= 1.0 && self.relax_factor.is_finite(),
+            "relax_factor must be >= 1.0 (got {})",
+            self.relax_factor
+        );
+        Ok(())
+    }
+}
+
+/// The coordinator-side tier controller for [`Compression::Adaptive`]:
+/// a pure, deterministic function of the observed bandwidth sequence.
+/// Escalation is immediate (a link just got worse — compress now);
+/// relaxation is hysteretic (see [`AdaptiveThresholds`]).
+#[derive(Debug, Clone)]
+pub struct AdaptivePolicy {
+    th: AdaptiveThresholds,
+    tier: Tier,
+}
+
+impl AdaptivePolicy {
+    pub fn new(th: AdaptiveThresholds) -> AdaptivePolicy {
+        AdaptivePolicy { th, tier: Tier::Off }
+    }
+
+    pub fn tier(&self) -> Tier {
+        self.tier
+    }
+
+    /// The tier `bps` maps to, ignoring hysteresis.
+    pub fn target(&self, bps: f64) -> Tier {
+        if bps < self.th.q4_below {
+            Tier::FullQ4
+        } else if bps < self.th.full_below {
+            Tier::Full
+        } else if bps < self.th.activations_below {
+            Tier::Activations
+        } else {
+            Tier::Off
+        }
+    }
+
+    /// The bandwidth below which `tier` is entered (`Off` has no entry).
+    fn entry_threshold(&self, tier: Tier) -> f64 {
+        match tier {
+            Tier::Off => f64::INFINITY,
+            Tier::Activations => self.th.activations_below,
+            Tier::Full => self.th.full_below,
+            Tier::FullQ4 => self.th.q4_below,
+        }
+    }
+
+    /// Feed one bandwidth observation (the minimum over the pipeline's
+    /// measured links). Returns `Some(new_tier)` iff the tier changed.
+    pub fn observe(&mut self, bps: f64) -> Option<Tier> {
+        if !bps.is_finite() || bps <= 0.0 {
+            return None; // unmeasured / nonsense observation: hold
+        }
+        let target = self.target(bps);
+        let relax_floor = self.entry_threshold(self.tier) * self.th.relax_factor;
+        let next = match target.cmp(&self.tier) {
+            std::cmp::Ordering::Greater => target, // worse link: escalate now
+            std::cmp::Ordering::Less if bps > relax_floor => target,
+            _ => return None, // same rung, or inside the hysteresis band
+        };
+        self.tier = next;
+        Some(next)
+    }
+}
+
+// ---------------------------------------------------------------------
+// the quantized tensor
+// ---------------------------------------------------------------------
+
+/// Code width: 8-bit (`q ∈ [0, 255]`, one code per byte) or 4-bit
+/// (`q ∈ [0, 15]`, two codes per byte — even element in the low nibble).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bits {
+    B8,
+    B4,
+}
+
+impl Bits {
+    /// Packed payload bytes for `len` elements.
+    pub fn packed_len(self, len: usize) -> usize {
+        match self {
+            Bits::B8 => len,
+            Bits::B4 => len.div_ceil(2),
+        }
+    }
+
+    fn qmax(self) -> f32 {
+        match self {
+            Bits::B8 => 255.0,
+            Bits::B4 => 15.0,
+        }
+    }
+}
+
+/// Scale granularity. `PerTensor` is the original (v2) layout —
+/// wire-compatible within the dtype-tag framing. `PerChannel` carries
+/// one `(scale, zero)` pair per channel of a 2-D weight:
+/// `interleaved = false` means contiguous rows (element `i` belongs to
+/// channel `i / (len / pairs.len())` — per-row of a row-major matrix);
+/// `interleaved = true` means channel `i % pairs.len()` (per-column,
+/// the natural axis for a `[in, out]` linear weight whose column count
+/// is small). Pair lists are `Arc`-backed like the code payload.
+#[derive(Debug, Clone)]
+pub enum Scheme {
+    PerTensor { scale: f32, zero: f32 },
+    PerChannel { pairs: Arc<Vec<(f32, f32)>>, interleaved: bool },
+}
+
+/// Which per-channel axis (if any) a weight tensor of `shape` should
+/// use. Channels only pay when each one amortizes its 8-byte pair over
+/// enough elements: per-row needs wide rows, per-column (interleaved)
+/// needs tall columns; everything else stays per-tensor.
+pub fn weight_channel_hint(shape: &[usize], len: usize) -> ChannelHint {
+    if shape.len() == 2 && shape[0].saturating_mul(shape[1]) == len && len > 0 {
+        let (r, c) = (shape[0], shape[1]);
+        if r > 1 && c >= 16 {
+            return ChannelHint::Rows(r);
+        }
+        if c > 1 && r >= 16 {
+            return ChannelHint::Cols(c);
+        }
+    }
+    ChannelHint::PerTensor
+}
+
+/// Advice from [`weight_channel_hint`] consumed by
+/// [`QTensor::quantize_weights`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChannelHint {
+    PerTensor,
+    /// Contiguous per-row channels of a row-major `[rows, cols]` tensor.
+    Rows(usize),
+    /// Interleaved per-column channels (`channel = i % cols`).
+    Cols(usize),
+}
+
+/// An affine-quantized tensor (see module docs). The packed byte payload
+/// and the per-channel pair list are `Arc`-backed like [`TensorBuf`], so
+/// cloning a quantized message (queueing, replica fan-out) is a
+/// refcount bump.
 #[derive(Clone)]
 pub struct QTensor {
     data: Arc<Vec<u8>>,
-    scale: f32,
-    zero: f32,
+    len: usize,
+    bits: Bits,
+    scheme: Scheme,
+}
+
+/// Min/max over the finite elements at the yielded indices (fixed
+/// order — the range scan of one quantization channel).
+fn channel_range(xs: &[f32], idx: impl Iterator<Item = usize>) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for i in idx {
+        let x = xs[i];
+        if x.is_finite() {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+    }
+    (lo, hi)
 }
 
 impl QTensor {
     /// Quantize with a per-tensor dynamic range (min/max over finite
-    /// elements). Deterministic: a fixed element order and fixed f32
-    /// operations, so equal inputs always produce equal bytes.
+    /// elements) at 8 bits — the original wire arm, byte-identical to
+    /// the pre-`Scheme` encoder. Deterministic: a fixed element order
+    /// and fixed f32 operations, so equal inputs always produce equal
+    /// bytes.
     ///
     /// Degenerate ranges encode exactly: a constant tensor gets
     /// `scale = 0`, so every element dequantizes to precisely `zero`.
     pub fn quantize(xs: &[f32]) -> QTensor {
-        let mut lo = f32::INFINITY;
-        let mut hi = f32::NEG_INFINITY;
-        for &x in xs {
-            if x.is_finite() {
-                lo = lo.min(x);
-                hi = hi.max(x);
-            }
-        }
-        if !(lo <= hi) {
-            // empty tensor, or nothing finite to anchor a range on
-            return QTensor { data: Arc::new(vec![0u8; xs.len()]), scale: 0.0, zero: 0.0 };
-        }
-        let scale = (hi - lo) / 255.0;
-        if scale == 0.0 {
-            return QTensor { data: Arc::new(vec![0u8; xs.len()]), scale: 0.0, zero: lo };
-        }
-        let inv = 1.0f32 / scale;
-        // `as u8` saturates (and maps NaN to 0), so out-of-range values
-        // clamp deterministically without a branch
-        let data: Vec<u8> = xs.iter().map(|&x| ((x - lo) * inv).round() as u8).collect();
-        QTensor { data: Arc::new(data), scale, zero: lo }
+        Self::quantize_bits(xs, Bits::B8)
     }
 
-    /// Rebuild from wire parts (codec decode path — no f32 intermediate).
+    /// Per-tensor quantization at either code width.
+    pub fn quantize_bits(xs: &[f32], bits: Bits) -> QTensor {
+        let (lo, hi) = channel_range(xs, 0..xs.len());
+        let len = xs.len();
+        if !(lo <= hi) {
+            // empty tensor, or nothing finite to anchor a range on
+            return QTensor {
+                data: Arc::new(vec![0u8; bits.packed_len(len)]),
+                len,
+                bits,
+                scheme: Scheme::PerTensor { scale: 0.0, zero: 0.0 },
+            };
+        }
+        let scale = (hi - lo) / bits.qmax();
+        if scale == 0.0 {
+            return QTensor {
+                data: Arc::new(vec![0u8; bits.packed_len(len)]),
+                len,
+                bits,
+                scheme: Scheme::PerTensor { scale: 0.0, zero: lo },
+            };
+        }
+        let inv = 1.0f32 / scale;
+        let data = match bits {
+            // `as u8` saturates (and maps NaN to 0), so out-of-range
+            // values clamp deterministically without a branch
+            Bits::B8 => xs.iter().map(|&x| ((x - lo) * inv).round() as u8).collect(),
+            Bits::B4 => {
+                let mut packed = vec![0u8; bits.packed_len(len)];
+                for (i, &x) in xs.iter().enumerate() {
+                    let c = q4_code(x, lo, inv);
+                    packed[i / 2] |= c << ((i & 1) * 4);
+                }
+                packed
+            }
+        };
+        QTensor { data: Arc::new(data), len, bits, scheme: Scheme::PerTensor { scale, zero: lo } }
+    }
+
+    /// Quantize a weight tensor with per-channel scales where the hint
+    /// says they pay (one `(scale, zero)` pair per row or column of a
+    /// 2-D block), falling back to the per-tensor path otherwise. The
+    /// fixed per-channel evaluation order (ranges channel by channel,
+    /// codes element by element) keeps the determinism contract.
+    pub fn quantize_weights(xs: &[f32], hint: ChannelHint, bits: Bits) -> QTensor {
+        let len = xs.len();
+        let (nch, interleaved) = match hint {
+            ChannelHint::PerTensor => return Self::quantize_bits(xs, bits),
+            ChannelHint::Rows(r) => (r, false),
+            ChannelHint::Cols(c) => (c, true),
+        };
+        if nch == 0 || len == 0 || len % nch != 0 {
+            return Self::quantize_bits(xs, bits); // malformed hint: fall back
+        }
+        let cols = len / nch;
+        let mut pairs = Vec::with_capacity(nch);
+        for ch in 0..nch {
+            let (lo, hi) = if interleaved {
+                // strided visit (ch, ch+nch, ...) — same element order as
+                // a filter over 0..len, in O(len/nch) per channel
+                channel_range(xs, (ch..len).step_by(nch))
+            } else {
+                channel_range(xs, ch * cols..(ch + 1) * cols)
+            };
+            if !(lo <= hi) {
+                pairs.push((0.0f32, 0.0f32));
+            } else {
+                let scale = (hi - lo) / bits.qmax();
+                pairs.push((scale, lo));
+            }
+        }
+        let mut data = vec![0u8; bits.packed_len(len)];
+        for (i, &x) in xs.iter().enumerate() {
+            let ch = if interleaved { i % nch } else { i / cols };
+            let (scale, zero) = pairs[ch];
+            let c = if scale == 0.0 {
+                0u8
+            } else {
+                let inv = 1.0f32 / scale;
+                match bits {
+                    Bits::B8 => ((x - zero) * inv).round() as u8,
+                    Bits::B4 => q4_code(x, zero, inv),
+                }
+            };
+            match bits {
+                Bits::B8 => data[i] = c,
+                Bits::B4 => data[i / 2] |= c << ((i & 1) * 4),
+            }
+        }
+        QTensor {
+            data: Arc::new(data),
+            len,
+            bits,
+            scheme: Scheme::PerChannel { pairs: Arc::new(pairs), interleaved },
+        }
+    }
+
+    /// Rebuild the legacy 8-bit per-tensor arm from wire parts (codec
+    /// decode path — no f32 intermediate).
     pub fn from_parts(data: Vec<u8>, scale: f32, zero: f32) -> QTensor {
-        QTensor { data: Arc::new(data), scale, zero }
+        let len = data.len();
+        QTensor {
+            data: Arc::new(data),
+            len,
+            bits: Bits::B8,
+            scheme: Scheme::PerTensor { scale, zero },
+        }
+    }
+
+    /// Rebuild any arm from wire parts, validating internal consistency
+    /// (the codec calls this on untrusted bytes).
+    pub fn from_wire(
+        data: Vec<u8>,
+        len: usize,
+        bits: Bits,
+        scheme: Scheme,
+    ) -> anyhow::Result<QTensor> {
+        anyhow::ensure!(
+            data.len() == bits.packed_len(len),
+            "quantized payload {} bytes, expected {} for {len} elements",
+            data.len(),
+            bits.packed_len(len)
+        );
+        if let Scheme::PerChannel { pairs, .. } = &scheme {
+            anyhow::ensure!(
+                !pairs.is_empty() && len % pairs.len() == 0,
+                "{len} elements do not divide into {} channels",
+                pairs.len()
+            );
+        }
+        Ok(QTensor { data: Arc::new(data), len, bits, scheme })
+    }
+
+    #[inline]
+    fn code_at(&self, i: usize) -> u8 {
+        match self.bits {
+            Bits::B8 => self.data[i],
+            Bits::B4 => (self.data[i / 2] >> ((i & 1) * 4)) & 0x0F,
+        }
+    }
+
+    #[inline]
+    fn pair_at(&self, i: usize) -> (f32, f32) {
+        match &self.scheme {
+            Scheme::PerTensor { scale, zero } => (*scale, *zero),
+            Scheme::PerChannel { pairs, interleaved } => {
+                let nch = pairs.len();
+                let ch = if *interleaved { i % nch } else { i / (self.len / nch) };
+                pairs[ch]
+            }
+        }
     }
 
     /// Dequantize into a fresh shared buffer — the single materializing
     /// f32 write a quantized tensor pays, at the receiver's boundary.
     pub fn dequantize(&self) -> TensorBuf {
-        let zero = self.zero;
-        let scale = self.scale;
-        TensorBuf::new(self.data.iter().map(|&q| zero + q as f32 * scale).collect())
+        TensorBuf::new((0..self.len).map(|i| self.dequantize_at(i)).collect())
     }
 
     /// Dequantize one element (used by the error-feedback residual).
     #[inline]
     pub fn dequantize_at(&self, i: usize) -> f32 {
-        self.zero + self.data[i] as f32 * self.scale
+        let (scale, zero) = self.pair_at(i);
+        zero + self.code_at(i) as f32 * scale
     }
 
     pub fn len(&self) -> usize {
-        self.data.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
+        self.len == 0
     }
 
-    /// Wire payload bytes: one per element plus the (scale, zero) pair.
+    pub fn bits(&self) -> Bits {
+        self.bits
+    }
+
+    pub fn scheme(&self) -> &Scheme {
+        &self.scheme
+    }
+
+    /// Wire payload bytes: the packed codes plus every `(scale, zero)`
+    /// pair (the legacy 8-bit per-tensor arm keeps its original
+    /// accounting; the newer arms also count an 8-byte length/flags
+    /// header). This is the bandwidth model's currency.
     pub fn byte_len(&self) -> usize {
-        self.data.len() + 8
+        let (pairs, hdr) = match (&self.scheme, self.bits) {
+            (Scheme::PerTensor { .. }, Bits::B8) => (1, 0),
+            (Scheme::PerTensor { .. }, Bits::B4) => (1, 8),
+            (Scheme::PerChannel { pairs, .. }, _) => (pairs.len(), 8),
+        };
+        self.data.len() + 8 * pairs + hdr
     }
 
     pub fn bytes(&self) -> &[u8] {
         &self.data
     }
 
+    /// Per-tensor scale (panics on a per-channel tensor — the codec and
+    /// tests only call this on the per-tensor arm).
     pub fn scale(&self) -> f32 {
-        self.scale
+        match &self.scheme {
+            Scheme::PerTensor { scale, .. } => *scale,
+            Scheme::PerChannel { .. } => panic!("per-channel QTensor has no single scale"),
+        }
     }
 
+    /// Per-tensor zero point (see [`QTensor::scale`]).
     pub fn zero(&self) -> f32 {
-        self.zero
+        match &self.scheme {
+            Scheme::PerTensor { zero, .. } => *zero,
+            Scheme::PerChannel { .. } => panic!("per-channel QTensor has no single zero"),
+        }
     }
 
     /// Same allocation? (zero-copy assertions, mirroring `TensorBuf`.)
@@ -184,18 +655,57 @@ impl QTensor {
     }
 
     /// Worst-case absolute dequantization error of any finite in-range
-    /// element: half a quantization step (plus fp rounding slack).
+    /// element: half a quantization step of the widest channel (plus fp
+    /// rounding slack).
     pub fn tolerance(&self) -> f32 {
-        0.5 * self.scale + 1e-6
+        let max_scale = match &self.scheme {
+            Scheme::PerTensor { scale, .. } => *scale,
+            Scheme::PerChannel { pairs, .. } => {
+                pairs.iter().fold(0.0f32, |m, &(s, _)| m.max(s))
+            }
+        };
+        0.5 * max_scale + 1e-6
     }
 }
 
-/// Bit-exact equality: scale/zero compare by representation, so a
+/// 4-bit code with the same nonfinite contract as the 8-bit `as u8`
+/// cast: NaN → 0, +Inf saturates high, −Inf saturates low.
+#[inline]
+fn q4_code(x: f32, zero: f32, inv: f32) -> u8 {
+    let r = ((x - zero) * inv).round();
+    if r >= 15.0 {
+        15
+    } else if r >= 0.0 {
+        r as u8
+    } else {
+        0 // negative overflow and NaN (fails both comparisons)
+    }
+}
+
+/// Bit-exact equality: scales/zeros compare by representation, so a
 /// re-encoded tensor is equal iff it is byte-identical on the wire.
 impl PartialEq for QTensor {
     fn eq(&self, other: &QTensor) -> bool {
-        self.scale.to_bits() == other.scale.to_bits()
-            && self.zero.to_bits() == other.zero.to_bits()
+        let scheme_eq = match (&self.scheme, &other.scheme) {
+            (
+                Scheme::PerTensor { scale: s1, zero: z1 },
+                Scheme::PerTensor { scale: s2, zero: z2 },
+            ) => s1.to_bits() == s2.to_bits() && z1.to_bits() == z2.to_bits(),
+            (
+                Scheme::PerChannel { pairs: p1, interleaved: i1 },
+                Scheme::PerChannel { pairs: p2, interleaved: i2 },
+            ) => {
+                i1 == i2
+                    && p1.len() == p2.len()
+                    && p1.iter().zip(p2.iter()).all(|(a, b)| {
+                        a.0.to_bits() == b.0.to_bits() && a.1.to_bits() == b.1.to_bits()
+                    })
+            }
+            _ => false,
+        };
+        scheme_eq
+            && self.bits == other.bits
+            && self.len == other.len
             && (Arc::ptr_eq(&self.data, &other.data) || self.data == other.data)
     }
 }
@@ -204,41 +714,58 @@ impl fmt::Debug for QTensor {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "QTensor(len={}, scale={}, zero={}, head={:?})",
-            self.len(),
-            self.scale,
-            self.zero,
-            &self.data[..self.len().min(4)]
+            "QTensor(len={}, bits={:?}, scheme={:?}, head={:?})",
+            self.len,
+            self.bits,
+            self.scheme,
+            &self.data[..self.data.len().min(4)]
         )
     }
 }
 
-/// Error-feedback state for one outgoing gradient edge (sender side).
+// ---------------------------------------------------------------------
+// error feedback
+// ---------------------------------------------------------------------
+
+/// Error-feedback state for one outgoing quantized edge (sender side) —
+/// a gradient edge, or one tensor of a 4-bit replica-push stream.
 ///
 /// `fold` quantizes `g + r` and retains the new quantization error as
-/// `r`, so the error injected at step `t` is corrected at step `t+1`
+/// `r`, so the error injected at send `t` is corrected at send `t+1`
 /// instead of compounding. The residual is deliberately cleared whenever
 /// the edge's meaning changes (init, commit of a new partition, reset,
-/// crash-restart) — it is per-run deterministic state, never persisted.
+/// crash-restart, a `SetCompression` tier switch) — it is per-run
+/// deterministic state, never persisted.
 #[derive(Debug, Default)]
 pub struct Residual {
     r: Vec<f32>,
 }
 
 impl Residual {
-    /// Quantize `g` with error feedback; updates the stored residual.
+    /// Quantize `g` with error feedback through the default per-tensor
+    /// 8-bit arm; updates the stored residual.
     pub fn fold(&mut self, g: &[f32]) -> QTensor {
+        self.fold_with(g, QTensor::quantize)
+    }
+
+    /// [`Residual::fold`] with a caller-chosen quantizer (the Q4
+    /// replica path passes a per-channel 4-bit encoder).
+    pub fn fold_with(
+        &mut self,
+        g: &[f32],
+        quantize: impl FnOnce(&[f32]) -> QTensor,
+    ) -> QTensor {
         if self.r.len() != g.len() {
             // shape changed (new partition): stale error is meaningless
             self.r = vec![0.0; g.len()];
         }
         let v: Vec<f32> = g.iter().zip(self.r.iter()).map(|(&a, &b)| a + b).collect();
-        let q = QTensor::quantize(&v);
+        let q = quantize(&v);
         for i in 0..v.len() {
             let e = v[i] - q.dequantize_at(i);
-            // a transient NaN/Inf gradient element must not poison the
-            // carried error forever (quantize itself already saturates
-            // nonfinite values); drop that element's residual instead
+            // a transient NaN/Inf element must not poison the carried
+            // error forever (quantize itself already saturates nonfinite
+            // values); drop that element's residual instead
             self.r[i] = if e.is_finite() { e } else { 0.0 };
         }
         q
@@ -319,6 +846,146 @@ mod tests {
         assert_eq!(q.byte_len(), 3 + 8);
     }
 
+    // ---------------- per-channel + Q4 arms ----------------
+
+    #[test]
+    fn per_channel_rows_roundtrip_within_per_row_tolerance() {
+        // two rows with wildly different ranges: per-channel scales keep
+        // the small row precise where a per-tensor scale would flatten it
+        let rows = 2usize;
+        let cols = 32usize;
+        let mut xs = Vec::new();
+        for i in 0..cols {
+            xs.push(1000.0 + i as f32); // row 0: big range
+        }
+        for i in 0..cols {
+            xs.push(0.001 * i as f32); // row 1: tiny range
+        }
+        let q = QTensor::quantize_weights(&xs, ChannelHint::Rows(rows), Bits::B8);
+        assert!(matches!(q.scheme(), Scheme::PerChannel { interleaved: false, .. }));
+        let back = q.dequantize();
+        // row 1 must be quantized against its own ~0.031 range, so the
+        // error stays below a per-row half step (~6e-5), far below the
+        // per-tensor step (~4) that a shared scale would impose
+        for i in 0..cols {
+            let a = xs[cols + i];
+            let b = back[cols + i];
+            assert!((a - b).abs() <= 1e-4, "row-1 elem {i}: {a} vs {b}");
+        }
+        let pt = QTensor::quantize(&xs);
+        assert!(pt.tolerance() > 1.0, "sanity: per-tensor step is huge here");
+    }
+
+    #[test]
+    fn per_channel_cols_interleave_correctly() {
+        // [16, 4] row-major: column j holds values around j * 100
+        let (r, c) = (16usize, 4usize);
+        let xs: Vec<f32> =
+            (0..r * c).map(|i| (i % c) as f32 * 100.0 + (i / c) as f32 * 0.01).collect();
+        let hint = weight_channel_hint(&[r, c], r * c);
+        assert_eq!(hint, ChannelHint::Cols(c), "small-col 2-D weights go per-column");
+        let q = QTensor::quantize_weights(&xs, hint, Bits::B8);
+        assert!(matches!(q.scheme(), Scheme::PerChannel { interleaved: true, .. }));
+        let back = q.dequantize();
+        for (i, (&a, &b)) in xs.iter().zip(back.iter()).enumerate() {
+            assert!((a - b).abs() <= 1e-3, "elem {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn q4_roundtrip_within_tolerance_and_odd_lengths_pack() {
+        for len in [1usize, 2, 7, 16, 33] {
+            let xs: Vec<f32> = (0..len).map(|i| (i as f32 * 0.7).sin()).collect();
+            let q = QTensor::quantize_bits(&xs, Bits::B4);
+            assert_eq!(q.bytes().len(), len.div_ceil(2), "len {len}: packed size");
+            let back = q.dequantize();
+            assert_eq!(back.len(), len);
+            let tol = q.tolerance();
+            for (i, (&a, &b)) in xs.iter().zip(back.iter()).enumerate() {
+                assert!((a - b).abs() <= tol, "len {len} elem {i}: {a} vs {b} (tol {tol})");
+            }
+        }
+    }
+
+    #[test]
+    fn q4_nonfinite_contract_matches_q8() {
+        let xs = [f32::NAN, -2.0, f32::INFINITY, 2.0, f32::NEG_INFINITY];
+        let q = QTensor::quantize_bits(&xs, Bits::B4);
+        let back = q.dequantize();
+        // finite elements anchor the range and roundtrip within tolerance
+        assert!((back[1] + 2.0).abs() <= q.tolerance());
+        assert!((back[3] - 2.0).abs() <= q.tolerance());
+        // nonfinite elements saturate into the finite range, like Q8
+        // (up to fp rounding of zero + 15 * scale at the top end)
+        let tol = q.tolerance();
+        for (i, b) in back.iter().enumerate() {
+            assert!(b.is_finite(), "elem {i} must dequantize finite, got {b}");
+            assert!(
+                *b >= -2.0 - tol && *b <= 2.0 + tol,
+                "elem {i} saturates into range, got {b}"
+            );
+        }
+        // NaN maps to code 0 (the range minimum), matching `as u8`
+        assert_eq!(back[0], -2.0);
+    }
+
+    #[test]
+    fn q4_is_deterministic_and_cuts_bytes_8x() {
+        let xs: Vec<f32> = (0..4096).map(|i| ((i * 37) % 101) as f32 * 0.3 - 15.0).collect();
+        let a = QTensor::quantize_weights(&xs, ChannelHint::Rows(64), Bits::B4);
+        let b = QTensor::quantize_weights(&xs, ChannelHint::Rows(64), Bits::B4);
+        assert_eq!(a, b);
+        let bits = |t: &TensorBuf| t.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.dequantize()), bits(&b.dequantize()));
+        // per-channel Q4: 2048 code bytes + 64 pairs; >= 6x under f32
+        let f32_bytes = xs.len() * 4;
+        assert!(
+            f32_bytes >= 6 * a.byte_len(),
+            "per-channel q4 {} vs f32 {}",
+            a.byte_len(),
+            f32_bytes
+        );
+        // per-tensor Q4 on a long 1-D tensor approaches the full 8x
+        let pt = QTensor::quantize_bits(&xs, Bits::B4);
+        assert!(
+            (f32_bytes as f64) / (pt.byte_len() as f64) > 7.5,
+            "per-tensor q4 {} vs f32 {}",
+            pt.byte_len(),
+            f32_bytes
+        );
+    }
+
+    #[test]
+    fn weight_channel_hint_picks_paying_axes_only() {
+        assert_eq!(weight_channel_hint(&[64, 64], 4096), ChannelHint::Rows(64));
+        assert_eq!(weight_channel_hint(&[64, 4], 256), ChannelHint::Cols(4));
+        assert_eq!(weight_channel_hint(&[4, 4], 16), ChannelHint::PerTensor);
+        assert_eq!(weight_channel_hint(&[128], 128), ChannelHint::PerTensor);
+        assert_eq!(weight_channel_hint(&[64, 64], 999), ChannelHint::PerTensor, "shape/len lie");
+        assert_eq!(weight_channel_hint(&[], 0), ChannelHint::PerTensor);
+    }
+
+    #[test]
+    fn malformed_wire_parts_are_rejected() {
+        assert!(QTensor::from_wire(vec![0; 3], 7, Bits::B8, Scheme::PerTensor {
+            scale: 1.0,
+            zero: 0.0
+        })
+        .is_err());
+        assert!(QTensor::from_wire(vec![0; 4], 7, Bits::B4, Scheme::PerChannel {
+            pairs: Arc::new(vec![(1.0, 0.0); 3]),
+            interleaved: false,
+        })
+        .is_err());
+        assert!(QTensor::from_wire(vec![0; 4], 8, Bits::B4, Scheme::PerChannel {
+            pairs: Arc::new(vec![(1.0, 0.0); 4]),
+            interleaved: true,
+        })
+        .is_ok());
+    }
+
+    // ---------------- error feedback ----------------
+
     #[test]
     fn residual_bounds_accumulated_error() {
         // same gradient applied repeatedly: WITH error feedback, the sum
@@ -346,6 +1013,32 @@ mod tests {
     }
 
     #[test]
+    fn residual_bounds_accumulated_error_under_q4() {
+        // the Q4 replica path reuses the same feedback loop at 4 bits:
+        // the accumulated error of repeated pushes stays within a few
+        // (coarser) steps instead of growing linearly
+        let g = vec![0.4f32, -0.3, 0.11, -0.09];
+        let mut res = Residual::default();
+        let mut sent = vec![0.0f64; g.len()];
+        let steps = 100;
+        for _ in 0..steps {
+            let q = res.fold_with(&g, |v| QTensor::quantize_bits(v, Bits::B4));
+            let d = q.dequantize();
+            for (s, v) in sent.iter_mut().zip(d.iter()) {
+                *s += *v as f64;
+            }
+        }
+        let step = (0.8f64 + 0.1) / 15.0; // rough range / 15
+        for (i, s) in sent.iter().enumerate() {
+            let truth = g[i] as f64 * steps as f64;
+            assert!(
+                (s - truth).abs() <= 4.0 * step + 1e-2,
+                "element {i}: sent {s} vs true {truth}"
+            );
+        }
+    }
+
+    #[test]
     fn residual_survives_a_transient_nonfinite_gradient() {
         let mut res = Residual::default();
         res.fold(&[0.1, 0.2, 0.3]);
@@ -369,16 +1062,79 @@ mod tests {
         assert_eq!(q.dequantize().as_slice(), &[5.0; 7], "no stale residual leaked in");
     }
 
+    // ---------------- policy ----------------
+
     #[test]
     fn compression_policy_knobs() {
         assert!(!Compression::Off.data_plane() && !Compression::Off.weights());
         assert!(Compression::Activations.data_plane() && !Compression::Activations.weights());
         assert!(Compression::Full.data_plane() && Compression::Full.weights());
-        for c in [Compression::Off, Compression::Activations, Compression::Full] {
+        assert!(Compression::FullQ4.data_plane() && Compression::FullQ4.weights());
+        assert!(!Compression::Adaptive.data_plane(), "adaptive starts at Off");
+        for c in [
+            Compression::Off,
+            Compression::Activations,
+            Compression::Full,
+            Compression::FullQ4,
+            Compression::Adaptive,
+        ] {
             assert_eq!(Compression::from_u8(c.to_u8()), Some(c));
             assert_eq!(Compression::parse(c.name()), Some(c));
         }
         assert_eq!(Compression::from_u8(9), None);
         assert_eq!(Compression::parse("gzip"), None);
+    }
+
+    #[test]
+    fn tier_ladder_orders_and_codings() {
+        assert!(Tier::Off < Tier::Activations);
+        assert!(Tier::Activations < Tier::Full);
+        assert!(Tier::Full < Tier::FullQ4);
+        assert_eq!(Tier::FullQ4.replica_coding(), WeightCoding::Q4);
+        assert_eq!(Tier::FullQ4.restore_coding(), WeightCoding::Q8, "restores never Q4");
+        assert_eq!(Tier::Full.replica_coding(), WeightCoding::Q8);
+        assert_eq!(Tier::Activations.replica_coding(), WeightCoding::F32);
+        for t in [Tier::Off, Tier::Activations, Tier::Full, Tier::FullQ4] {
+            assert_eq!(Tier::from_u8(t.to_u8()), Some(t));
+        }
+        assert_eq!(Tier::from_u8(4), None);
+    }
+
+    #[test]
+    fn adaptive_policy_escalates_immediately_and_relaxes_with_hysteresis() {
+        let th = AdaptiveThresholds {
+            activations_below: 3e6,
+            full_below: 4e5,
+            q4_below: 1.5e5,
+            relax_factor: 1.5,
+        };
+        th.validate().unwrap();
+        let mut p = AdaptivePolicy::new(th);
+        assert_eq!(p.tier(), Tier::Off);
+        assert_eq!(p.observe(5e7), None, "fast link: stay Off");
+        // multi-step escalation in one observation
+        assert_eq!(p.observe(2.0e5), Some(Tier::Full));
+        // jitter just above the entry threshold must NOT relax
+        assert_eq!(p.observe(5.0e5), None, "4e5 * 1.5 = 6e5 not cleared");
+        assert_eq!(p.tier(), Tier::Full);
+        // clearing the band relaxes to the target tier directly
+        assert_eq!(p.observe(7.0e5), Some(Tier::Activations));
+        // degrade to the bottom rung
+        assert_eq!(p.observe(1.0e5), Some(Tier::FullQ4));
+        // and a fully recovered link walks straight back to Off
+        assert_eq!(p.observe(5e7), Some(Tier::Off));
+        // nonsense observations hold the tier
+        assert_eq!(p.observe(0.0), None);
+        assert_eq!(p.observe(f64::NAN), None);
+        assert_eq!(p.observe(f64::INFINITY), None);
+    }
+
+    #[test]
+    fn adaptive_thresholds_validate_ordering() {
+        assert!(AdaptiveThresholds::default().validate().is_ok());
+        let bad = AdaptiveThresholds { q4_below: 5e6, ..AdaptiveThresholds::default() };
+        assert!(bad.validate().is_err());
+        let bad = AdaptiveThresholds { relax_factor: 0.5, ..AdaptiveThresholds::default() };
+        assert!(bad.validate().is_err());
     }
 }

@@ -10,6 +10,7 @@
 use crate::net::message::{
     DeviceId, ExecReport, Message, Payload, ReplicaKind, TrainInit, WireBlock,
 };
+use crate::net::quant::Tier;
 use crate::net::TensorBuf;
 
 /// What an event handler tells its caller to do next.
@@ -129,6 +130,11 @@ pub enum ControlEvent {
         committed_bwd: i64,
         fresh: bool,
     },
+    /// Coordinator-issued wire-tier switch (`Compression::Adaptive`,
+    /// DESIGN.md §10): install `tier` for outgoing tensors.
+    SetCompression {
+        tier: Tier,
+    },
 }
 
 impl Event {
@@ -198,6 +204,9 @@ impl Event {
                     committed_bwd,
                     fresh,
                 })
+            }
+            Message::SetCompression { tier } => {
+                Event::Control(ControlEvent::SetCompression { tier })
             }
             Message::Shutdown => Event::Shutdown,
         }

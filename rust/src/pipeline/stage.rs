@@ -30,7 +30,9 @@ use crate::model::{aggregate_versions, BlockParams, Sgd, SgdConfig, StageParams,
 use crate::net::message::{
     DeviceId, ExecReport, Message, Payload, ReplicaKind, TrainInit, WireBlock, WireTensor,
 };
-use crate::net::quant::{Compression, QTensor, Residual};
+use crate::net::quant::{
+    weight_channel_hint, Bits, ChannelHint, Compression, QTensor, Residual, Tier, WeightCoding,
+};
 use crate::net::{TensorBuf, Transport};
 use crate::replication::{self, BackupStore};
 use crate::runtime::{BlockRuntime, HostTensor};
@@ -97,9 +99,51 @@ pub struct StageWorker {
 
     /// Wire-compression policy (cluster-wide, distributed via TrainInit).
     pub compression: Compression,
+    /// Effective wire tier: the policy's initial tier for static
+    /// policies, coordinator-driven via `SetCompression` under
+    /// [`Compression::Adaptive`] (DESIGN.md §10). Decoding never depends
+    /// on it — tensors self-describe their arm.
+    pub tier: Tier,
+    /// Periodic bandwidth re-measurement cadence (TrainInit; 0 = off).
+    bw_probe_every: u64,
+    /// Fixed periodic-probe payload (TrainInit; 0 = auto-size from the
+    /// last measurement — see [`StageWorker::probe_bytes`]).
+    bw_probe_bytes: u64,
+    /// Newest bandwidth this stage measured on its next-hop link
+    /// (bytes/sec; 0 = never measured). Sizes the next auto probe.
+    last_bw_bps: f64,
     /// Error-feedback state for this stage's outgoing gradient edge (to
     /// its previous stage) — only updated when gradients are quantized.
     grad_residual: Residual,
+    /// Error-feedback state per (block, tensor) of the Q4 replica-push
+    /// stream — bounds the accumulated 4-bit quantization bias across
+    /// repeated pushes of slowly-moving weights (DESIGN.md §10).
+    push_residuals: BTreeMap<(usize, usize), Residual>,
+}
+
+/// Bounds of the auto-sized periodic bandwidth probe (scheduled by
+/// `TrainInit::bw_probe_every`). A `bps = payload / rtt` echo is
+/// latency-capped at `payload / (2 * latency)`, so a probe must carry
+/// several bandwidth-delay products to measure a fast link — but a big
+/// probe would drown the degraded link it is trying to measure. The
+/// auto size targets [`BW_PROBE_TARGET_S`] of transfer at the *last*
+/// measured rate, clamped to these bounds (the one-shot init probe is
+/// always the 64 KiB maximum).
+pub const BW_PROBE_MIN_BYTES: u64 = 2048;
+pub const BW_PROBE_MAX_BYTES: u64 = 65536;
+/// Target transfer time of an auto-sized probe (seconds of payload at
+/// the last measured bandwidth).
+pub const BW_PROBE_TARGET_S: f64 = 0.05;
+
+/// Per-tensor channel hints of one block, derived from the manifest's
+/// declared shapes (2-D weights earn per-channel scales) — the single
+/// hint source for both the replica-push and restore wire paths.
+fn block_hints(manifest: &Manifest, block: usize) -> Vec<ChannelHint> {
+    manifest.blocks[block]
+        .params
+        .iter()
+        .map(|p| weight_channel_hint(&p.shape, p.size))
+        .collect()
 }
 
 impl StageWorker {
@@ -137,7 +181,12 @@ impl StageWorker {
             repart: None,
             bw_probe: None,
             compression: Compression::Off,
+            tier: Tier::Off,
+            bw_probe_every: 0,
+            bw_probe_bytes: 0,
+            last_bw_bps: 0.0,
             grad_residual: Residual::default(),
+            push_residuals: BTreeMap::new(),
         }
     }
 
@@ -211,7 +260,11 @@ impl StageWorker {
         self.global_every = t.global_every;
         self.status = t.status;
         self.compression = t.compression;
+        self.tier = t.compression.initial_tier();
+        self.bw_probe_every = t.bw_probe_every;
+        self.bw_probe_bytes = t.bw_probe_bytes;
         self.grad_residual.clear();
+        self.push_residuals.clear();
         if t.status == 0 {
             if let Some((lo, hi)) = self.my_range() {
                 self.params = StageParams::load_range(&self.manifest, lo, hi)?;
@@ -232,16 +285,17 @@ impl StageWorker {
         match p {
             Payload::F32(v) => HostTensor::F32(v),
             Payload::I32(v) => HostTensor::I32(v),
-            Payload::Q8(q) => HostTensor::F32(q.dequantize()),
+            Payload::Quant(q) => HostTensor::F32(q.dequantize()),
         }
     }
 
     /// Sender boundary: an outgoing activation is quantized iff the
-    /// policy compresses the data plane (i32 token payloads stay raw).
+    /// effective tier compresses the data plane (i32 token payloads
+    /// stay raw).
     fn tensor_to_payload(&self, t: HostTensor) -> Payload {
         match t {
-            HostTensor::F32(v) if self.compression.data_plane() => {
-                Payload::Q8(QTensor::quantize(&v))
+            HostTensor::F32(v) if self.tier.data_plane() => {
+                Payload::Quant(QTensor::quantize(&v))
             }
             HostTensor::F32(v) => Payload::F32(v),
             HostTensor::I32(v) => Payload::I32(v),
@@ -252,11 +306,60 @@ impl StageWorker {
     /// residual keeps this step's quantization error and folds it into
     /// the next step's gradient), or pass f32 through untouched.
     fn encode_grad(&mut self, g: Vec<f32>) -> WireTensor {
-        if self.compression.data_plane() {
-            WireTensor::Q8(self.grad_residual.fold(&g))
+        if self.tier.data_plane() {
+            WireTensor::Quant(self.grad_residual.fold(&g))
         } else {
             WireTensor::F32(g.into())
         }
+    }
+
+    /// Install a coordinator-issued wire tier (`Compression::Adaptive`).
+    /// Residuals carry per-encoding error, so a tier switch clears them
+    /// — stale error from another coding must not leak into the first
+    /// sends of the new tier (and clearing keeps replays reproducible).
+    pub fn set_tier(&mut self, tier: Tier) {
+        if self.tier != tier {
+            self.tier = tier;
+            self.grad_residual.clear();
+            self.push_residuals.clear();
+        }
+    }
+
+    /// One block's tensors coded for restore traffic (fetch replies /
+    /// warm-starts): never coarser than Q8 — the receiver trains on
+    /// these bytes.
+    fn block_wire(&self, block: usize, bp: &BlockParams, coding: WeightCoding) -> Vec<WireTensor> {
+        replication::block_to_wire_coded(bp, &block_hints(&self.manifest, block), coding)
+    }
+
+    /// The stage's parameters as replica-push wire blocks under the
+    /// effective tier. The Q4 arm folds a per-(block, tensor)
+    /// error-feedback residual, so the 4-bit bias of repeated pushes of
+    /// slowly-moving weights stays bounded instead of locking in
+    /// (DESIGN.md §10).
+    fn replica_wire(&mut self) -> Vec<WireBlock> {
+        let coding = self.tier.replica_coding();
+        let manifest = self.manifest.clone();
+        let mut out = Vec::with_capacity(self.params.blocks.len());
+        for (&idx, bp) in &self.params.blocks {
+            let hints = block_hints(&manifest, idx);
+            let tensors = if coding == WeightCoding::Q4 {
+                bp.0.iter()
+                    .enumerate()
+                    .map(|(k, t)| {
+                        let hint = hints.get(k).copied().unwrap_or(ChannelHint::PerTensor);
+                        let r = self.push_residuals.entry((idx, k)).or_default();
+                        WireTensor::Quant(
+                            r.fold_with(t, |v| QTensor::quantize_weights(v, hint, Bits::B4)),
+                        )
+                    })
+                    .collect()
+            } else {
+                replication::block_to_wire_coded(bp, &hints, coding)
+            };
+            out.push((idx, tensors));
+        }
+        out
     }
 
     /// Training forward for one batch through this stage's blocks.
@@ -536,6 +639,9 @@ impl StageWorker {
         self.emit(TraceKind::Backward, batch);
 
         self.maybe_aggregate();
+        // probe before the replica push so the echo times the bare link,
+        // not the push it would otherwise queue behind
+        self.maybe_measure_bw(t, batch)?;
         self.maybe_replicate(t, batch)?;
 
         if stage == 0 {
@@ -599,7 +705,7 @@ impl StageWorker {
         if !chain_due && !global_due {
             return Ok(());
         }
-        let wire: Vec<WireBlock> = replication::to_wire_with(&self.params, self.compression);
+        let wire: Vec<WireBlock> = self.replica_wire();
         if chain_due {
             let target_stage = replication::chain_target(stage, self.n_stages());
             let target = self.worker_list[target_stage];
@@ -831,11 +937,15 @@ impl StageWorker {
                 if let (Some(t0), Some(stage)) = (self.bw_probe.take(), self.my_stage()) {
                     let dt = self.clock.now().saturating_sub(t0).as_secs_f64().max(1e-6);
                     let bps = payload_bytes as f64 / dt;
+                    self.last_bw_bps = bps; // sizes the next auto probe
                     t.send(self.central_device(), Message::BwReport { stage, bps })?;
                 }
             }
             ControlEvent::SetLr { lr } => {
                 self.sgd.set_lr(lr);
+            }
+            ControlEvent::SetCompression { tier } => {
+                self.set_tier(tier);
             }
             ControlEvent::CentralRestart { from, committed } => {
                 // The coordinator rebooted from its checkpoint. Anything
@@ -879,6 +989,8 @@ impl StageWorker {
         // replayed batches re-quantize from a clean slate, so a reset is
         // reproducible independent of what was in flight before it
         self.grad_residual.clear();
+        self.push_residuals.clear();
+        self.bw_probe = None; // an in-flight probe's ack may never come
         self.status = 0;
     }
 
@@ -976,15 +1088,17 @@ impl StageWorker {
     }
 
     /// Serve a FetchWeights request from current params, then backups —
-    /// shared f32 buffers (no weight copies), or INT8 payloads when the
-    /// policy compresses weight traffic.
+    /// shared f32 buffers (no weight copies), or quantized payloads at
+    /// the tier's *restore* coding (at most Q8 — never the Q4 replica
+    /// coding: the requester trains on these bytes).
     pub fn serve_fetch(&self, t: &dyn Transport, from: DeviceId, blocks: &[usize]) -> Result<()> {
+        let coding = self.tier.restore_coding();
         let mut found: Vec<WireBlock> = Vec::new();
         for &b in blocks {
             if let Some(bp) = self.params.get(b) {
-                found.push((b, replication::block_to_wire_with(bp, self.compression)));
+                found.push((b, self.block_wire(b, bp, coding)));
             } else if let Some(bp) = self.backups.find_block(b) {
-                found.push((b, replication::block_to_wire_with(bp, self.compression)));
+                found.push((b, self.block_wire(b, bp, coding)));
             }
         }
         t.send(from, Message::Weights { blocks: found })?;
@@ -994,12 +1108,54 @@ impl StageWorker {
     /// Measure bandwidth to the next worker by timing a 64 KiB echo
     /// (paper §III-B; the analogue of its ping3 measurement).
     pub fn measure_bandwidth(&mut self, t: &dyn Transport) -> Result<()> {
+        self.measure_bandwidth_sized(t, 65536)
+    }
+
+    /// [`StageWorker::measure_bandwidth`] with a caller-chosen payload —
+    /// the periodic re-probes pick theirs via `probe_bytes` (fixed or
+    /// auto-sized) so a degraded link is not drowned by its own
+    /// measurement while a fast link still clears its latency floor.
+    pub fn measure_bandwidth_sized(&mut self, t: &dyn Transport, bytes: usize) -> Result<()> {
         if let Some(next) = self.next_device() {
-            let payload = vec![0u8; 65536];
             self.bw_probe = Some(self.clock.now());
-            t.send(next, Message::BwTest { payload_bytes: 65536, data: payload })?;
+            t.send(next, Message::BwTest {
+                payload_bytes: bytes as u32,
+                data: vec![0u8; bytes],
+            })?;
         }
         Ok(())
+    }
+
+    /// Payload of the next periodic probe: the configured fixed size,
+    /// or — when 0 — auto-sized to [`BW_PROBE_TARGET_S`] of transfer at
+    /// the last measured rate (clamped), so a fast link is measured
+    /// above its latency floor while a degraded link is not drowned by
+    /// its own measurement. Deterministic: a pure function of the last
+    /// deterministic measurement.
+    fn probe_bytes(&self) -> usize {
+        if self.bw_probe_bytes > 0 {
+            return self.bw_probe_bytes as usize;
+        }
+        if self.last_bw_bps <= 0.0 {
+            return BW_PROBE_MAX_BYTES as usize; // nothing measured yet
+        }
+        ((self.last_bw_bps * BW_PROBE_TARGET_S) as u64)
+            .clamp(BW_PROBE_MIN_BYTES, BW_PROBE_MAX_BYTES) as usize
+    }
+
+    /// The periodic re-measurement schedule (`bw_probe_every`, paper
+    /// §III-B made periodic): fires after the backward of every N-th
+    /// batch on stages that have a next link, unless a probe is still
+    /// in flight. Feeds the coordinator's adaptive compression policy.
+    fn maybe_measure_bw(&mut self, t: &dyn Transport, batch: u64) -> Result<()> {
+        if self.bw_probe_every == 0 || (batch + 1) % self.bw_probe_every != 0 {
+            return Ok(());
+        }
+        if self.bw_probe.is_some() {
+            return Ok(()); // previous probe unanswered: don't stack echoes
+        }
+        let bytes = self.probe_bytes();
+        self.measure_bandwidth_sized(t, bytes)
     }
 
     /// Integrate a Weights reply; escalate still-missing blocks to central.
@@ -1111,8 +1267,10 @@ impl StageWorker {
         self.sched.on_commit();
         // the stage's input shape (and thus its gradient edge) may have
         // changed with the new range — stale quantization error must not
-        // leak into the first gradients of the new partition
+        // leak into the first gradients (or replica pushes) of the new
+        // partition
         self.grad_residual.clear();
+        self.push_residuals.clear();
         self.status = 0;
         self.initialized = true;
         Ok(())
@@ -1177,7 +1335,12 @@ impl StageWorker {
         self.repart = None;
         self.bw_probe = None;
         self.compression = Compression::Off;
+        self.tier = Tier::Off;
+        self.bw_probe_every = 0;
+        self.bw_probe_bytes = 0;
+        self.last_bw_bps = 0.0;
         self.grad_residual.clear();
+        self.push_residuals.clear();
     }
 
     /// State bytes currently held (memory accounting for the device cap).

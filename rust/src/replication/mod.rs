@@ -10,7 +10,7 @@ use std::collections::BTreeMap;
 
 use crate::model::params::{BlockParams, StageParams};
 use crate::net::message::{DeviceId, ReplicaKind, WireBlock, WireTensor};
-use crate::net::quant::Compression;
+use crate::net::quant::{ChannelHint, WeightCoding};
 
 /// Should a replication fire after completing `batch` (0-based)?
 pub fn due(batch: u64, every: Option<u64>) -> bool {
@@ -35,10 +35,25 @@ pub fn block_to_wire(bp: &BlockParams) -> Vec<WireTensor> {
     bp.0.iter().map(|t| WireTensor::F32(t.clone())).collect()
 }
 
-/// One block's tensors under the given [`Compression`] policy: INT8 when
-/// the policy compresses weight traffic, shared f32 buffers otherwise.
-pub fn block_to_wire_with(bp: &BlockParams, compression: Compression) -> Vec<WireTensor> {
-    bp.0.iter().map(|t| WireTensor::from_weights(t, compression)).collect()
+/// One block's tensors under an explicit [`WeightCoding`], with a
+/// per-tensor channel hint (from the manifest's shapes — see
+/// `StageWorker::block_wire` for the shape-aware caller). `F32` stays
+/// zero-copy; `Q8`/`Q4` pay one quantization pass at this sender
+/// boundary. The plain-coded path with no error feedback — the Q4
+/// replica stream folds residuals in `StageWorker::replica_wire`
+/// instead.
+pub fn block_to_wire_coded(
+    bp: &BlockParams,
+    hints: &[ChannelHint],
+    coding: WeightCoding,
+) -> Vec<WireTensor> {
+    bp.0.iter()
+        .enumerate()
+        .map(|(k, t)| {
+            let hint = hints.get(k).copied().unwrap_or(ChannelHint::PerTensor);
+            WireTensor::from_weights(t, coding, hint)
+        })
+        .collect()
 }
 
 /// Rebuild one block from wire tensors: f32 arms are moves (shared
@@ -53,17 +68,6 @@ pub fn block_from_wire(tensors: Vec<WireTensor>) -> BlockParams {
 /// owner's next optimizer step forks only what the replica still holds.
 pub fn to_wire(params: &StageParams) -> Vec<WireBlock> {
     params.blocks.iter().map(|(idx, bp)| (*idx, block_to_wire(bp))).collect()
-}
-
-/// [`to_wire`] under a [`Compression`] policy (INT8 weight payloads when
-/// the policy compresses weight traffic; identical to `to_wire` for the
-/// rest — in particular `Off` stays byte-for-byte the f32 format).
-pub fn to_wire_with(params: &StageParams, compression: Compression) -> Vec<WireBlock> {
-    params
-        .blocks
-        .iter()
-        .map(|(idx, bp)| (*idx, block_to_wire_with(bp, compression)))
-        .collect()
 }
 
 /// Rebuild block params from wire form (f32: shared buffers, zero-copy;
@@ -223,24 +227,48 @@ mod tests {
     }
 
     #[test]
-    fn to_wire_with_policy_quantizes_only_under_full() {
-        let mut sp = StageParams::default();
-        sp.blocks.insert(1, BlockParams::from_vecs(vec![vec![0.0, 0.5, 1.0]]));
-        for c in [Compression::Off, Compression::Activations] {
-            let wire = to_wire_with(&sp, c);
-            assert!(
-                wire[0].1[0].as_f32().unwrap().ptr_eq(&sp.blocks[&1].0[0]),
-                "{c:?} must keep replica pushes zero-copy f32"
-            );
-        }
-        let wire = to_wire_with(&sp, Compression::Full);
-        let q = wire[0].1[0].as_q8().expect("Full must quantize weight traffic");
+    fn block_to_wire_coded_selects_the_coding() {
+        let bp = BlockParams::from_vecs(vec![vec![0.0, 0.5, 1.0]]);
+        let hints = [ChannelHint::PerTensor];
+        let wire = block_to_wire_coded(&bp, &hints, WeightCoding::F32);
+        assert!(
+            wire[0].as_f32().unwrap().ptr_eq(&bp.0[0]),
+            "F32 coding must keep replica pushes zero-copy"
+        );
+        let wire = block_to_wire_coded(&bp, &hints, WeightCoding::Q8);
+        let q = wire[0].as_quant().expect("Q8 coding must quantize weight traffic");
         assert_eq!(q.len(), 3);
-        assert!(wire[0].1[0].byte_len() < 12, "3 f32s must shrink on the wire");
-        let back = from_wire(&wire);
-        let got = &back[0].1 .0[0];
-        for (a, b) in [0.0f32, 0.5, 1.0].iter().zip(got.iter()) {
+        assert!(wire[0].byte_len() < 12, "3 f32s must shrink on the wire");
+        let back = block_from_wire(wire);
+        for (a, b) in [0.0f32, 0.5, 1.0].iter().zip(back.0[0].iter()) {
             assert!((a - b).abs() <= q.tolerance());
+        }
+    }
+
+    /// Acceptance pin: the replica-push byte ladder. For a realistic
+    /// 64x64 weight block, Q4 < Q8 < f32 on the wire, with Q4 ~>= 6x
+    /// under f32 even after paying its 64 per-channel pairs (a long 1-D
+    /// tensor approaches the full 8x — asserted in `net::quant`).
+    #[test]
+    fn replica_push_bytes_order_q4_q8_f32() {
+        use crate::net::quant::weight_channel_hint;
+        let xs: Vec<f32> = (0..4096).map(|i| ((i * 29) % 97) as f32 * 0.1 - 4.0).collect();
+        let bp = BlockParams::from_vecs(vec![xs]);
+        let hints = [weight_channel_hint(&[64, 64], 4096)];
+        let bytes = |coding| -> usize {
+            block_to_wire_coded(&bp, &hints, coding).iter().map(|t| t.byte_len()).sum()
+        };
+        let (f, q8, q4) =
+            (bytes(WeightCoding::F32), bytes(WeightCoding::Q8), bytes(WeightCoding::Q4));
+        assert!(q4 < q8 && q8 < f, "byte ladder must order q4 {q4} < q8 {q8} < f32 {f}");
+        assert!(f >= 6 * q4, "q4 replica push must be ~8x under f32 (got {f} vs {q4})");
+        assert!(f >= 3 * q8, "q8 replica push stays ~4x under f32 (got {f} vs {q8})");
+        // and the coded forms still roundtrip within their tolerance
+        let wire = block_to_wire_coded(&bp, &hints, WeightCoding::Q4);
+        let tol = wire[0].as_quant().unwrap().tolerance();
+        let back = block_from_wire(wire);
+        for (a, b) in bp.0[0].iter().zip(back.0[0].iter()) {
+            assert!((a - b).abs() <= tol, "{a} vs {b} (tol {tol})");
         }
     }
 }

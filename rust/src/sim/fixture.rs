@@ -74,8 +74,11 @@ pub fn materialize(dir: &Path, spec: &FixtureSpec) -> Result<Manifest> {
             let bias = vec![0f32; c];
             write_f32_le(&init_dir.join(format!("b{i}_w.bin")), &w)?;
             write_f32_le(&init_dir.join(format!("b{i}_b.bin")), &bias)?;
+            // the head weight is a true 2-D [dim, classes] matrix (the
+            // native head reads it row-major) — declared as such so the
+            // wire layer's per-channel quantization sees the geometry
             let params = format!(
-                r#"[{{"shape": [{dc}], "size": {dc}, "init": "init/b{i}_w.bin"}},
+                r#"[{{"shape": [{d}, {c}], "size": {dc}, "init": "init/b{i}_w.bin"}},
                     {{"shape": [{c}], "size": {c}, "init": "init/b{i}_b.bin"}}]"#,
                 dc = d * c,
             );

@@ -12,7 +12,8 @@
 //! and bit-identical final weights.
 //!
 //! The coordinator logic mirrors `coordinator::{central,recovery}` as an
-//! explicit state machine ([`Phase`]) instead of blocking loops, with one
+//! explicit state machine (the private `Phase` enum) instead of blocking
+//! loops, with one
 //! deliberate extension: a redistribution that stalls past
 //! `Scenario::redist_window` re-enters fault handling (re-probe, replan
 //! with the enlarged failure set) instead of aborting the run — that is
@@ -49,6 +50,7 @@ use crate::fault::{renumber_worker_list, FaultDetector};
 use crate::manifest::Manifest;
 use crate::model::BlockParams;
 use crate::net::message::{DeviceId, Message, ReplicaKind, TrainInit};
+use crate::net::quant::{AdaptivePolicy, Compression, Tier};
 use crate::net::Transport;
 use crate::partition::{homogeneous_partition, optimal_partition, CostModel, Partition};
 use crate::pipeline::{CompletedBatch, ControlEvent, DataEvent, Event, StageWorker, StepKind};
@@ -291,6 +293,8 @@ pub fn run_scenario(scenario: &Scenario, model_dir: &Path) -> Result<ScenarioOut
         estimator: CapacityEstimator::default(),
         detector: FaultDetector::with_clock(scenario.fault_timeout, shared),
         measured_bw: vec![0.0; n.saturating_sub(1)],
+        adaptive: (scenario.compression == Compression::Adaptive)
+            .then(|| AdaptivePolicy::new(scenario.adaptive.clone())),
         phase: Phase::Idle,
         next_inject: 0,
         inflight: 0,
@@ -329,6 +333,9 @@ struct Runner<'a> {
     estimator: CapacityEstimator,
     detector: FaultDetector,
     measured_bw: Vec<f64>,
+    /// Tier controller for `Compression::Adaptive` (None otherwise) —
+    /// coordinator memory, so a central kill resets it.
+    adaptive: Option<AdaptivePolicy>,
     phase: Phase,
     next_inject: u64,
     inflight: usize,
@@ -487,6 +494,8 @@ impl Runner<'_> {
             global_every: self.sc.global_every,
             status,
             compression: self.sc.compression,
+            bw_probe_every: self.sc.bw_probe_every,
+            bw_probe_bytes: self.sc.bw_probe_bytes,
         }
     }
 
@@ -672,6 +681,7 @@ impl Runner<'_> {
                 if stage < self.measured_bw.len() {
                     self.measured_bw[stage] = bps;
                 }
+                self.maybe_adapt()?;
             }
             ev => {
                 // "the central node received the backward gradients of
@@ -766,6 +776,41 @@ impl Runner<'_> {
             }
             Todo::DynamicRepart => self.run_dynamic_repartition(t),
         }
+    }
+
+    /// Feed the adaptive tier controller the slowest measured link of
+    /// the current pipeline; on a tier change, trace it, install it on
+    /// the central stage, and broadcast `SetCompression` to the workers
+    /// (DESIGN.md §10). A no-op for static compression policies.
+    fn maybe_adapt(&mut self) -> Result<()> {
+        let Some(policy) = self.adaptive.as_mut() else {
+            return Ok(());
+        };
+        let links = self.workers[0].worker_list.len().saturating_sub(1);
+        let min_bw = self.measured_bw[..links.min(self.measured_bw.len())]
+            .iter()
+            .copied()
+            .filter(|b| *b > 0.0) // 0 = not measured yet
+            .fold(f64::INFINITY, f64::min);
+        if !min_bw.is_finite() {
+            return Ok(());
+        }
+        let old = policy.tier();
+        let Some(tier) = policy.observe(min_bw) else {
+            return Ok(());
+        };
+        let t = self.clock.now();
+        self.trace_line(
+            t,
+            format!("adaptive: min link {min_bw:.0} B/s; tier {} -> {}", old.name(), tier.name()),
+        );
+        let h = self.handles[0].clone();
+        self.set_local(0, t);
+        for d in self.peers_of_central() {
+            h.send(d, Message::SetCompression { tier })?;
+        }
+        self.workers[0].set_tier(tier);
+        Ok(())
     }
 
     fn start_recovery(&mut self, overdue: u64, t: Duration) -> Result<()> {
@@ -943,6 +988,18 @@ impl Runner<'_> {
         for d in self.peers_of_central() {
             h.send(d, Message::Reset { committed })?;
         }
+        // a fresh worker re-inited during this recovery fell back to the
+        // policy's initial tier — re-align everyone with the adaptive
+        // controller's current rung (deterministic: same point in every
+        // replay)
+        if let Some(tier) = self.adaptive.as_ref().map(|p| p.tier()) {
+            if tier != Tier::Off {
+                for d in self.peers_of_central() {
+                    h.send(d, Message::SetCompression { tier })?;
+                }
+                self.workers[0].set_tier(tier);
+            }
+        }
         self.workers[0].apply_reset(committed);
         self.detector.clear();
         self.inflight = 0;
@@ -1067,6 +1124,13 @@ impl Runner<'_> {
         self.estimator = CapacityEstimator::default();
         for bw in self.measured_bw.iter_mut() {
             *bw = 0.0;
+        }
+        // the tier controller lives in the dead coordinator: it reboots
+        // at Off and re-escalates from fresh measurements (workers keep
+        // their last-ordered tier until the rejoin InitState resets it —
+        // harmless either way, the wire is self-describing)
+        if let Some(p) = self.adaptive.as_mut() {
+            *p = AdaptivePolicy::new(self.sc.adaptive.clone());
         }
         self.inflight = 0;
         self.phase = Phase::Down;

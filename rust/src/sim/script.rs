@@ -14,7 +14,7 @@
 use std::time::Duration;
 
 use crate::net::message::DeviceId;
-use crate::net::quant::Compression;
+use crate::net::quant::{AdaptiveThresholds, Compression};
 use crate::util::rng::Rng;
 
 /// When a scripted action fires.
@@ -114,7 +114,19 @@ pub struct Scenario {
     /// Wire-compression policy for the whole cluster. `Off` keeps every
     /// tensor f32 with the pre-compression `byte_len` accounting and
     /// numerics, so all pre-compression scenario traces are unchanged.
+    /// `Adaptive` starts at tier off and walks the ladder per measured
+    /// bandwidth ([`Scenario::adaptive`] thresholds, DESIGN.md §10).
     pub compression: Compression,
+    /// Tier thresholds for `Compression::Adaptive` (ignored otherwise).
+    pub adaptive: AdaptiveThresholds,
+    /// Periodic link re-measurement cadence in batches (0 = only the
+    /// one-shot init probe — the default, so existing traces are
+    /// byte-identical). The adaptive policy needs this to observe
+    /// scripted `SetBandwidth` degradation.
+    pub bw_probe_every: u64,
+    /// Fixed payload of those probes; 0 (default) auto-sizes from the
+    /// last measurement (see `pipeline::stage::BW_PROBE_TARGET_S`).
+    pub bw_probe_bytes: u64,
 
     /// Central-node checkpoint period in committed batches (paper
     /// §III-E), written to the harness's in-memory sink. 0 disables
@@ -150,6 +162,9 @@ impl Scenario {
             latency: Duration::from_micros(100),
             ns_per_flop: 1.0,
             compression: Compression::Off,
+            adaptive: AdaptiveThresholds::default(),
+            bw_probe_every: 0,
+            bw_probe_bytes: 0,
             checkpoint_every: 0,
             events: vec![],
         }
@@ -184,6 +199,19 @@ impl Scenario {
         self
     }
 
+    /// Set the adaptive-tier thresholds (implies nothing unless
+    /// `compression == Adaptive`).
+    pub fn with_adaptive(mut self, thresholds: AdaptiveThresholds) -> Scenario {
+        self.adaptive = thresholds;
+        self
+    }
+
+    /// Re-measure link bandwidth every `every` batches (0 = off).
+    pub fn with_bw_probe_every(mut self, every: u64) -> Scenario {
+        self.bw_probe_every = every;
+        self
+    }
+
     /// Checkpoint every `every` committed batches (0 = off).
     pub fn with_checkpoint(mut self, every: u64) -> Scenario {
         self.checkpoint_every = every;
@@ -195,6 +223,9 @@ impl Scenario {
         anyhow::ensure!(self.n_devices() >= 2, "scenarios need at least 2 devices");
         anyhow::ensure!(self.capacities[0] == 1.0, "central capacity must be 1.0");
         anyhow::ensure!(self.batches > 0 && self.inflight > 0, "empty training run");
+        if self.compression == Compression::Adaptive {
+            self.adaptive.validate()?;
+        }
         let mut unrescued_central_kill = false;
         let mut has_at_restart = false;
         for e in &self.events {

@@ -1,0 +1,262 @@
+//! Family: adaptive — the bandwidth-driven compression policy
+//! (`Compression::Adaptive`, DESIGN.md §10). The coordinator watches the
+//! measured per-link bandwidth (periodic `bw_probe_every` re-probes) and
+//! walks the tier ladder off → activations → full → full+q4 via
+//! `SetCompression`, with hysteresis so jitter cannot flip a tier back.
+//!
+//! Everything here is deterministic: scripted `SetBandwidth` drops, a
+//! virtual clock, and probe echoes priced by the same
+//! `latency + bytes/bandwidth` model as the data plane — so tier
+//! transitions land at asserted trace points and every scenario is
+//! run-twice byte-identical.
+
+use std::time::Duration;
+
+use ftpipehd::net::quant::AdaptiveThresholds;
+use ftpipehd::net::Compression;
+use ftpipehd::sim::fixture::FixtureSpec;
+use ftpipehd::sim::script::{Action, Scenario, ScriptEvent, Trigger};
+
+use crate::common;
+
+/// Thresholds sized for the scripted rates below, with wide (>2x) gaps
+/// so queueing skew in a measured echo can never land in the wrong band.
+fn thresholds() -> AdaptiveThresholds {
+    AdaptiveThresholds {
+        activations_below: 3e6,
+        full_below: 4e5,
+        q4_below: 1.5e5,
+        relax_factor: 1.5,
+    }
+}
+
+/// Serialized (inflight 1) 3-stage base on a fast link: the pipeline
+/// quiesces between batches, so a 2 KiB probe echo times the bare link
+/// and the measured bandwidth sits predictably inside its band.
+fn esc_base(name: &str, batches: u64) -> Scenario {
+    let mut sc = Scenario::exact_recovery(name, 3, batches);
+    sc.bandwidth_bps = 5e7;
+    sc.ns_per_flop = 0.01;
+    // no faults are scripted; on the degraded rungs an f32 round trip
+    // can exceed the default 200 ms gradient timeout — slowness is not
+    // a fault (same reasoning as the bandwidth family)
+    sc.fault_timeout = Duration::from_secs(30);
+    sc.compression = Compression::Adaptive;
+    sc.adaptive = thresholds();
+    sc.bw_probe_every = 2;
+    // fixed probe size: at this family's 100 us link latency a 2 KiB
+    // echo measures every scripted rate accurately, and a fixed size
+    // keeps the per-band margin analysis simple (auto-sizing is for
+    // high-latency deployments)
+    sc.bw_probe_bytes = 2048;
+    sc
+}
+
+fn esc_spec() -> FixtureSpec {
+    FixtureSpec { dim: 64, batch: 16, ..FixtureSpec::default() }
+}
+
+fn drop_at(batch: u64, bps: f64) -> ScriptEvent {
+    ScriptEvent { at: Trigger::BatchDone(batch), action: Action::SetBandwidth { bps } }
+}
+
+/// Acceptance criterion: scripted bandwidth drops trigger the expected
+/// tier escalations — off → activations → full → full+q4 — at the
+/// scripted points, and the whole run is byte-identical across two
+/// invocations.
+#[test]
+fn adaptive_escalates_at_scripted_bandwidth_drops() {
+    let sc = esc_base("adaptive-esc", 40).with_events(vec![
+        drop_at(9, 1e6),    // below activations_below (3e6)
+        drop_at(19, 2.5e5), // below full_below (4e5)
+        drop_at(29, 8e4),   // below q4_below (1.5e5)
+    ]);
+    let out = common::run_twice_deterministic_spec("adaptive-esc", &sc, &esc_spec());
+    common::assert_loss_continuity("adaptive-esc", &out, 40);
+    assert_eq!(out.recoveries, 0, "bandwidth drops are not faults");
+    common::assert_trace_contains("adaptive-esc", &out, "tier off -> activations");
+    common::assert_trace_contains("adaptive-esc", &out, "tier activations -> full");
+    common::assert_trace_contains("adaptive-esc", &out, "tier full -> full+q4");
+    // escalation only — the link never recovers in this script
+    assert!(
+        !out.trace.iter().any(|l| l.contains("-> off")),
+        "no relaxation events expected:\n{}",
+        out.trace.join("\n")
+    );
+}
+
+/// Hysteresis: a drop straight into Full (skipping a rung), then a
+/// partial recovery that clears the threshold but NOT the relax band
+/// (4e5 * 1.5 = 6e5) — the tier must hold — then a full recovery that
+/// relaxes directly to off. Exactly two transitions, deterministic.
+#[test]
+fn adaptive_hysteresis_holds_tier_through_jitter() {
+    let sc = esc_base("adaptive-hys", 40).with_events(vec![
+        drop_at(9, 2.5e5), // off -> full in one observation
+        drop_at(19, 5e5),  // inside the hysteresis band: hold full
+        drop_at(29, 5e7),  // clears it: relax straight to off
+    ]);
+    let out = common::run_twice_deterministic_spec("adaptive-hys", &sc, &esc_spec());
+    common::assert_loss_continuity("adaptive-hys", &out, 40);
+    common::assert_trace_contains("adaptive-hys", &out, "tier off -> full");
+    common::assert_trace_contains("adaptive-hys", &out, "tier full -> off");
+    let transitions = out.trace.iter().filter(|l| l.contains("adaptive:")).count();
+    assert_eq!(
+        transitions,
+        2,
+        "hysteresis must allow exactly the two scripted transitions:\n{}",
+        out.trace.join("\n")
+    );
+    assert!(
+        !out.trace.iter().any(|l| l.contains("-> activations")),
+        "the 5e5 B/s jitter must not relax full -> activations"
+    );
+}
+
+/// Replica-heavy pipelined base for the byte/wall-clock comparisons:
+/// small batches keep weight replication a first-class share of the
+/// traffic (replication is the paper's dominant background cost).
+fn cmp_base(name: &str, compression: Compression) -> Scenario {
+    let mut sc = Scenario::pipelined(name, 3, 60);
+    sc.bandwidth_bps = 8e6;
+    sc.ns_per_flop = 0.01;
+    sc.fault_timeout = Duration::from_secs(30);
+    sc.chain_every = 1;
+    sc.global_every = 2;
+    sc.compression = compression;
+    sc.adaptive = thresholds();
+    sc.bw_probe_every = 4; // identical probe load in every compared run
+    sc.bw_probe_bytes = 2048;
+    sc
+}
+
+fn cmp_spec() -> FixtureSpec {
+    FixtureSpec { dim: 64, batch: 4, ..FixtureSpec::default() }
+}
+
+/// Mean loss over the last `n` batches — small-batch per-step losses are
+/// noisy, so convergence is compared on a trailing window.
+fn tail_loss(out: &ftpipehd::sim::runner::ScenarioOutcome, total: u64, n: u64) -> f32 {
+    let sum: f32 = (total - n..total).map(|b| out.losses[&b]).sum();
+    sum / n as f32
+}
+
+/// Acceptance criterion: on a link degraded to 100 KB/s, Adaptive
+/// escalates to full+q4 and beats *static Full* on virtual wall-clock
+/// (the Q4 replica stream is the margin), while the final loss stays
+/// within 2% of the f32 run.
+#[test]
+fn adaptive_beats_static_full_on_a_degraded_link() {
+    let degrade = |name: &str, c| cmp_base(name, c).with_events(vec![drop_at(7, 1e5)]);
+    let off = common::run_once_spec(
+        "adaptive-deg-off",
+        &degrade("adaptive-deg-off", Compression::Off),
+        &cmp_spec(),
+    );
+    let full = common::run_once_spec(
+        "adaptive-deg-full",
+        &degrade("adaptive-deg-full", Compression::Full),
+        &cmp_spec(),
+    );
+    let adaptive = common::run_twice_deterministic_spec(
+        "adaptive-deg-adaptive",
+        &degrade("adaptive-deg-adaptive", Compression::Adaptive),
+        &cmp_spec(),
+    );
+    for (tag, out) in [("off", &off), ("full", &full), ("adaptive", &adaptive)] {
+        common::assert_loss_continuity(tag, out, 60);
+        assert_eq!(out.recoveries, 0, "{tag}: degradation is not a fault");
+    }
+    common::assert_trace_contains("adaptive-deg", &adaptive, "-> full+q4");
+    assert!(
+        adaptive.net_bytes < full.net_bytes,
+        "q4 replicas must shave bytes off static full: {} vs {}",
+        adaptive.net_bytes,
+        full.net_bytes
+    );
+    let ratio = full.virtual_ms / adaptive.virtual_ms;
+    assert!(
+        ratio >= 1.05,
+        "adaptive must beat static full on the degraded link: {:.1}ms vs {:.1}ms ({ratio:.3}x)",
+        full.virtual_ms,
+        adaptive.virtual_ms
+    );
+    let (loss_a, loss_f32) = (tail_loss(&adaptive, 60, 8), tail_loss(&off, 60, 8));
+    assert!(
+        (loss_a - loss_f32).abs() <= 0.02 * loss_f32.abs(),
+        "adaptive training must converge within 2% of f32: {loss_a} vs {loss_f32}"
+    );
+}
+
+/// Static-policy byte ladder at scenario scale: on one fixed slow link,
+/// total wire bytes order full+q4 < full < off (the message-level ~8x
+/// ladder is pinned in `replication` unit tests), and the q4 run is
+/// deterministic with f32-comparable convergence.
+#[test]
+fn adaptive_static_q4_orders_bytes_and_converges() {
+    let run = |name: &str, c| {
+        let mut sc = cmp_base(name, c);
+        sc.bandwidth_bps = 2.5e5;
+        sc.bw_probe_every = 0; // static tiers: no probes needed
+        sc
+    };
+    let off = common::run_once_spec(
+        "adaptive-q4-off",
+        &run("adaptive-q4-off", Compression::Off),
+        &cmp_spec(),
+    );
+    let full = common::run_once_spec(
+        "adaptive-q4-full",
+        &run("adaptive-q4-full", Compression::Full),
+        &cmp_spec(),
+    );
+    let q4 = common::run_twice_deterministic_spec(
+        "adaptive-q4-fullq4",
+        &run("adaptive-q4-fullq4", Compression::FullQ4),
+        &cmp_spec(),
+    );
+    assert!(
+        q4.net_bytes < full.net_bytes && full.net_bytes < off.net_bytes,
+        "byte ladder: full+q4 {} < full {} < off {}",
+        q4.net_bytes,
+        full.net_bytes,
+        off.net_bytes
+    );
+    common::assert_loss_continuity("adaptive-q4-fullq4", &q4, 60);
+    let (loss_q4, loss_f32) = (tail_loss(&q4, 60, 8), tail_loss(&off, 60, 8));
+    assert!(
+        (loss_q4 - loss_f32).abs() <= 0.02 * loss_f32.abs(),
+        "full+q4 must converge within 2% of f32 (replica coding never touches the \
+         data plane): {loss_q4} vs {loss_f32}"
+    );
+}
+
+/// On a healthy link the adaptive policy never leaves tier off, and an
+/// Adaptive run is *byte-identical* to a plain Off run — trace, per-batch
+/// losses, and byte accounting. (The no-regression identity: turning the
+/// feature on costs nothing until a link actually degrades.)
+#[test]
+fn adaptive_on_a_healthy_link_is_byte_identical_to_off() {
+    let mk = |name: &str, c| {
+        let mut sc = esc_base(name, 30);
+        sc.compression = c;
+        sc.bw_probe_every = 0; // only the init measurement feeds the policy
+        sc
+    };
+    let off = common::run_once_spec(
+        "adaptive-id-off",
+        &mk("adaptive-id", Compression::Off),
+        &esc_spec(),
+    );
+    let ada = common::run_once_spec(
+        "adaptive-id-ada",
+        &mk("adaptive-id", Compression::Adaptive),
+        &esc_spec(),
+    );
+    assert_eq!(ada.trace, off.trace, "healthy-link adaptive must be the Off trace, byte for byte");
+    assert_eq!(ada.net_bytes, off.net_bytes);
+    let bits = |o: &ftpipehd::sim::runner::ScenarioOutcome| -> Vec<(u64, u32)> {
+        o.losses.iter().map(|(&k, v)| (k, v.to_bits())).collect()
+    };
+    assert_eq!(bits(&ada), bits(&off), "losses bit-equal: tier off is the f32 math");
+}

@@ -18,6 +18,7 @@
 //! * `chaos`              — seeded randomized kill/slowdown storms
 //! * `bandwidth`          — link degradation + INT8 wire compression
 //! * `checkpoint_restart` — central-node death + reboot from checkpoint
+//! * `adaptive`           — bandwidth-driven tier ladder (off → q4)
 //!
 //! Set `FTPIPEHD_TRACE_DIR` to dump every run's event trace to disk —
 //! CI uploads those files on failure so byte-identity diffs are
@@ -25,6 +26,7 @@
 
 mod common;
 
+mod adaptive;
 mod bandwidth;
 mod chaos;
 mod checkpoint_restart;

@@ -75,6 +75,8 @@ fn init(ranges: Vec<(usize, usize)>, list: Vec<usize>) -> TrainInit {
         global_every: 0,
         status: 0,
         compression: Compression::Off,
+        bw_probe_every: 0,
+        bw_probe_bytes: 0,
     }
 }
 

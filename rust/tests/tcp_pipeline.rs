@@ -83,6 +83,8 @@ fn two_process_style_pipeline_over_tcp() {
         global_every: 0,
         status: 0,
         compression: ftpipehd::net::Compression::Off,
+        bw_probe_every: 0,
+        bw_probe_bytes: 0,
     };
     ep.send(1, Message::InitState(ti.clone())).unwrap();
     central.apply_init(&ti).unwrap();

@@ -11,6 +11,7 @@ use std::time::Duration;
 use ftpipehd::net::message::{ExecReport, Message, Payload, ReplicaKind, TrainInit, WireTensor};
 use ftpipehd::net::sim::SimNet;
 use ftpipehd::net::tcp::TcpEndpoint;
+use ftpipehd::net::quant::{Bits, ChannelHint, Tier};
 use ftpipehd::net::{Compression, QTensor, Transport};
 
 /// Messages spanning every wire family: small control, tensor payloads,
@@ -45,11 +46,11 @@ fn probe_messages() -> Vec<Message> {
             batch: 13,
             version0: 3,
             is_eval: false,
-            data: Payload::Q8(QTensor::quantize(&[0.0, -1.5, 2.25, 0.125])),
+            data: Payload::Quant(QTensor::quantize(&[0.0, -1.5, 2.25, 0.125])),
         },
         Message::Backward {
             batch: 13,
-            grad: WireTensor::Q8(QTensor::quantize(&[-0.5, 0.5, 0.0625])),
+            grad: WireTensor::Quant(QTensor::quantize(&[-0.5, 0.5, 0.0625])),
             loss: 0.25,
             ncorrect: 3.0,
             reports: vec![],
@@ -70,6 +71,8 @@ fn probe_messages() -> Vec<Message> {
             global_every: 100,
             status: 0,
             compression: Compression::Activations,
+            bw_probe_every: 4,
+            bw_probe_bytes: 0,
         }),
         Message::Repartition {
             ranges: vec![(0, 3), (4, 5)],
@@ -87,7 +90,7 @@ fn probe_messages() -> Vec<Message> {
             version: 9,
             blocks: vec![(
                 4,
-                vec![vec![-1.0; 33].into(), WireTensor::Q8(QTensor::quantize(&[1.0, 2.0]))],
+                vec![vec![-1.0; 33].into(), WireTensor::Quant(QTensor::quantize(&[1.0, 2.0]))],
             )],
         },
         Message::FetchDone { id: 1 },
@@ -99,6 +102,30 @@ fn probe_messages() -> Vec<Message> {
         Message::SetLr { lr: 0.005 },
         Message::CentralRestart { committed: 29 },
         Message::WorkerState { id: 1, committed_fwd: 34, committed_bwd: 33, fresh: false },
+        Message::SetCompression { tier: Tier::FullQ4 },
+        // v4 quant arms: per-channel scales and packed 4-bit codes must
+        // survive both transports bit-exactly, odd lengths included
+        Message::Weights {
+            blocks: vec![(7, vec![WireTensor::Quant(QTensor::quantize_weights(
+                &(0..64).map(|i| i as f32 * 0.3 - 9.0).collect::<Vec<_>>(),
+                ChannelHint::Rows(2),
+                Bits::B8,
+            ))])],
+        },
+        Message::ReplicaPush {
+            kind: ReplicaKind::Global,
+            owner_stage: 2,
+            owner_device: 2,
+            version: 11,
+            blocks: vec![(5, vec![
+                WireTensor::Quant(QTensor::quantize_weights(
+                    &(0..48).map(|i| (i as f32).cos()).collect::<Vec<_>>(),
+                    ChannelHint::Cols(4),
+                    Bits::B4,
+                )),
+                WireTensor::Quant(QTensor::quantize_bits(&[0.1, -0.2, 0.3], Bits::B4)),
+            ])],
+        },
         Message::Shutdown,
     ]
 }
