@@ -1,8 +1,9 @@
 //! Microbench: the data-plane hot path — the message codec (f32 vs the
-//! INT8-quantized wire format), the quantizer itself, and block execution
-//! through PJRT (with the literal conversions the pipeline pays per hop).
-//! These bound the per-batch overhead the coordinator adds on top of raw
-//! XLA compute; see EXPERIMENTS.md §Perf.
+//! INT8-quantized wire format), the quantizer itself, block execution
+//! through PJRT (with the literal conversions the pipeline pays per hop),
+//! and the discrete-event scenario engine driven flat out by big-cluster
+//! storms. These bound the per-batch overhead the coordinator adds on top
+//! of raw XLA compute; see EXPERIMENTS.md §Perf.
 //!
 //! The codec/quantization section is synthetic and always runs — it needs
 //! no model artifacts — so CI always gets a real table plus the named
@@ -156,6 +157,50 @@ fn quant_codec_section(table: &mut Table, metrics: &mut Vec<(String, f64)>) {
     metrics.push(("q8_decode_over_f32_decode".to_string(), dec_q8.p50 / dec_f32.p50));
 }
 
+/// The scenario engine under storm load: a 48-device rolling-churn storm
+/// measures event throughput (`sim_events_per_sec`), and the tentpole
+/// 500-device storm records end-to-end wall time
+/// (`storm_500dev_wall_s`). Both are gated as complexity tripwires with
+/// deliberately loose baselines (see BENCH_BASELINE.json's note): an
+/// accidental O(n) in the event queue or an allocation storm in the hot
+/// path moves these by integer factors, far past any runner noise.
+fn sim_section(table: &mut Table, metrics: &mut Vec<(String, f64)>) {
+    use ftpipehd::sim::big_cluster_storm;
+    use ftpipehd::sim::fixture::{materialize, FixtureSpec};
+    use ftpipehd::sim::runner::run_scenario;
+    use std::time::Instant;
+
+    let storm = |n: usize, batches: u64| -> (f64, u64) {
+        let dir = std::env::temp_dir()
+            .join(format!("ftpipehd-bench-sim-{n}-{}", std::process::id()));
+        let sc = big_cluster_storm(n, batches, 7);
+        let spec = FixtureSpec { n_blocks: n + 12, dim: 8, classes: 4, batch: 4, seed: 11 };
+        materialize(&dir, &spec).expect("sim fixture");
+        let t0 = Instant::now();
+        let out = run_scenario(&sc, &dir).expect("storm scenario");
+        let secs = t0.elapsed().as_secs_f64();
+        let _ = std::fs::remove_dir_all(&dir);
+        (secs, out.events)
+    };
+
+    let (secs, events) = storm(48, 10);
+    let eps = events as f64 / secs.max(1e-9);
+    table.row(&[
+        "sim storm 48 devices".into(),
+        format!("{:.0} events/s", eps),
+        format!("{events} events in {:.2} s", secs),
+    ]);
+    metrics.push(("sim_events_per_sec".to_string(), eps));
+
+    let (secs, events) = storm(500, 10);
+    table.row(&[
+        "sim storm 500 devices (tentpole)".into(),
+        format!("{:.2} s wall", secs),
+        format!("{events} events"),
+    ]);
+    metrics.push(("storm_500dev_wall_s".to_string(), secs));
+}
+
 fn pjrt_section(model: &str, table: &mut Table) {
     let manifest = Manifest::load(model).expect("manifest");
     let engine = Engine::cpu().expect("engine");
@@ -196,6 +241,7 @@ fn main() {
     let mut metrics: Vec<(String, f64)> = Vec::new();
 
     quant_codec_section(&mut table, &mut metrics);
+    sim_section(&mut table, &mut metrics);
 
     let model = common::model_dir("artifacts/edgenet");
     if common::require_artifacts(&model) {

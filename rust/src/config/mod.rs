@@ -296,6 +296,16 @@ impl RunConfig {
                 if let Some(x) = getf(a, "relax_factor") {
                     c.adaptive.relax_factor = x;
                 }
+                if let Some(s) = a.get("tier_floor").and_then(|x| x.as_str()) {
+                    c.adaptive.tier_floor = crate::net::quant::Tier::parse(s).ok_or_else(|| {
+                        anyhow!("unknown tier_floor {s:?} (off|activations|full|full+q4)")
+                    })?;
+                }
+                if let Some(s) = a.get("tier_ceiling").and_then(|x| x.as_str()) {
+                    c.adaptive.tier_ceiling = crate::net::quant::Tier::parse(s).ok_or_else(|| {
+                        anyhow!("unknown tier_ceiling {s:?} (off|activations|full|full+q4)")
+                    })?;
+                }
             }
         }
         if let Some(x) = getu(v, "bw_probe_every") {
@@ -457,12 +467,40 @@ mod tests {
         assert_eq!(c.bw_probe_bytes, 2048);
         assert_eq!(c.adaptive.full_below, 4e5);
         assert_eq!(c.adaptive.relax_factor, 2.0);
+        // the band defaults to the whole ladder when unspecified
+        assert_eq!(c.adaptive.tier_floor, crate::net::quant::Tier::Off);
+        assert_eq!(c.adaptive.tier_ceiling, crate::net::quant::Tier::FullQ4);
         // full+q4 is a legal static policy too
         let v = json::parse(r#"{"compression": "full+q4"}"#).unwrap();
         assert_eq!(RunConfig::from_json(&v).unwrap().compression, Compression::FullQ4);
         // unordered thresholds are rejected at validate time
         let v = json::parse(
             r#"{"compression": "adaptive", "adaptive": {"q4_below": 9e9}}"#,
+        )
+        .unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn parse_adaptive_tier_band() {
+        let v = json::parse(
+            r#"{"compression": "adaptive",
+                "adaptive": {"tier_floor": "activations", "tier_ceiling": "full"}}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&v).unwrap();
+        assert_eq!(c.adaptive.tier_floor, crate::net::quant::Tier::Activations);
+        assert_eq!(c.adaptive.tier_ceiling, crate::net::quant::Tier::Full);
+        // unknown tier name is a parse error, not a silent default
+        let v = json::parse(
+            r#"{"compression": "adaptive", "adaptive": {"tier_floor": "fastest"}}"#,
+        )
+        .unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
+        // an inverted band dies at validate time
+        let v = json::parse(
+            r#"{"compression": "adaptive",
+                "adaptive": {"tier_floor": "full", "tier_ceiling": "activations"}}"#,
         )
         .unwrap();
         assert!(RunConfig::from_json(&v).is_err());

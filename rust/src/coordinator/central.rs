@@ -432,6 +432,8 @@ impl Central {
             compression: self.cfg.compression,
             bw_probe_every: self.cfg.bw_probe_every,
             bw_probe_bytes: self.cfg.bw_probe_bytes,
+            tier_floor: self.cfg.adaptive.tier_floor,
+            tier_ceiling: self.cfg.adaptive.tier_ceiling,
         }
     }
 

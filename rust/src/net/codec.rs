@@ -38,7 +38,10 @@ use super::quant::{Bits, Compression, QTensor, Scheme, Tier};
 /// the same subtag space, `InitState` gained `bw_probe_every`, and
 /// `SetCompression` is message tag 21. The bump exists so a v4 peer
 /// never talks past a v3 one that would reject the new arms mid-stream.
-pub const CODEC_VERSION: u8 = 4;
+///
+/// v5: `InitState` carries the adaptive tier band — `tier_floor` and
+/// `tier_ceiling`, one byte each after `bw_probe_bytes`.
+pub const CODEC_VERSION: u8 = 5;
 
 // ---------- primitive writers ----------
 
@@ -372,6 +375,8 @@ pub fn encode_into(buf: &mut Vec<u8>, from: DeviceId, msg: &Message) {
             w.u8(t.compression.to_u8());
             w.u64(t.bw_probe_every);
             w.u64(t.bw_probe_bytes);
+            w.u8(t.tier_floor.to_u8());
+            w.u8(t.tier_ceiling.to_u8());
         }
         Message::Repartition { ranges, worker_list, failed } => {
             w.u8(7);
@@ -546,6 +551,14 @@ pub fn decode(frame: &[u8]) -> Result<(DeviceId, Message)> {
                 },
                 bw_probe_every: r.u64()?,
                 bw_probe_bytes: r.u64()?,
+                tier_floor: {
+                    let t = r.u8()?;
+                    Tier::from_u8(t).ok_or_else(|| anyhow!("bad tier_floor {t}"))?
+                },
+                tier_ceiling: {
+                    let t = r.u8()?;
+                    Tier::from_u8(t).ok_or_else(|| anyhow!("bad tier_ceiling {t}"))?
+                },
             })
         }
         7 => {
@@ -702,6 +715,8 @@ mod tests {
                 compression: Compression::Activations,
                 bw_probe_every: 5,
                 bw_probe_bytes: 2048,
+                tier_floor: Tier::Activations,
+                tier_ceiling: Tier::Full,
             }),
         );
     }
@@ -944,6 +959,8 @@ mod tests {
                 ]),
                 bw_probe_every: g.usize_in(0, 16) as u64,
                 bw_probe_bytes: g.usize_in(0, 1 << 16) as u64,
+                tier_floor: Tier::Off,
+                tier_ceiling: *g.pick(&[Tier::Activations, Tier::Full, Tier::FullQ4]),
             }),
             7 => Message::Repartition {
                 ranges: (0..g.usize_in(1, 4)).map(|i| (i * 2, i * 2 + 1)).collect(),

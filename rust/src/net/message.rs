@@ -172,6 +172,15 @@ pub struct TrainInit {
     /// last measured rate (a fixed small echo is latency-capped at
     /// `payload / rtt` and would mis-measure fast links).
     pub bw_probe_bytes: u64,
+    /// Band the effective tier may move in (`tier_floor` ..=
+    /// `tier_ceiling`): every stage clamps its tier into it at init and
+    /// on every `SetCompression`, so a floor takes effect without any
+    /// broadcast and one bad link can never down-tier the fleet past
+    /// the ceiling. The full-ladder defaults (`Off`/`FullQ4`) are
+    /// byte-for-byte the pre-band behavior.
+    pub tier_floor: Tier,
+    /// See [`TrainInit::tier_floor`].
+    pub tier_ceiling: Tier,
 }
 
 /// A block's tensors on the wire — shared buffers (or quantized bytes),

@@ -122,6 +122,18 @@ impl Tier {
             Tier::FullQ4 => "full+q4",
         }
     }
+
+    /// Parse the JSON/CLI spelling (the `tier_floor` / `tier_ceiling`
+    /// knobs of `RunConfig`).
+    pub fn parse(s: &str) -> Option<Tier> {
+        match s {
+            "off" => Some(Tier::Off),
+            "activations" => Some(Tier::Activations),
+            "full" => Some(Tier::Full),
+            "full+q4" => Some(Tier::FullQ4),
+            _ => None,
+        }
+    }
 }
 
 /// The cluster-wide policy knob (distributed via `TrainInit`; lives here
@@ -229,6 +241,16 @@ pub struct AdaptiveThresholds {
     pub full_below: f64,
     pub q4_below: f64,
     pub relax_factor: f64,
+    /// The ladder band the controller may move in: the tier never drops
+    /// below `tier_floor` or rises above `tier_ceiling`, no matter what
+    /// the links measure. In a wide fleet one bad link would otherwise
+    /// down-tier *every* stage to [`Tier::FullQ4`]; a ceiling caps that
+    /// blast radius, and a floor pins a known-constrained deployment at
+    /// its tier without waiting for measurements. Defaults (`Off` /
+    /// `FullQ4`) leave the full ladder open — the pre-band behavior.
+    pub tier_floor: Tier,
+    /// See [`AdaptiveThresholds::tier_floor`].
+    pub tier_ceiling: Tier,
 }
 
 impl Default for AdaptiveThresholds {
@@ -238,6 +260,8 @@ impl Default for AdaptiveThresholds {
             full_below: 1e6,
             q4_below: 2.5e5,
             relax_factor: 1.5,
+            tier_floor: Tier::Off,
+            tier_ceiling: Tier::FullQ4,
         }
     }
 }
@@ -258,6 +282,12 @@ impl AdaptiveThresholds {
             "relax_factor must be >= 1.0 (got {})",
             self.relax_factor
         );
+        anyhow::ensure!(
+            self.tier_floor <= self.tier_ceiling,
+            "tier_floor ({}) must not exceed tier_ceiling ({})",
+            self.tier_floor.name(),
+            self.tier_ceiling.name()
+        );
         Ok(())
     }
 }
@@ -274,7 +304,8 @@ pub struct AdaptivePolicy {
 
 impl AdaptivePolicy {
     pub fn new(th: AdaptiveThresholds) -> AdaptivePolicy {
-        AdaptivePolicy { th, tier: Tier::Off }
+        let tier = th.tier_floor;
+        AdaptivePolicy { th, tier }
     }
 
     pub fn tier(&self) -> Tier {
@@ -310,7 +341,10 @@ impl AdaptivePolicy {
         if !bps.is_finite() || bps <= 0.0 {
             return None; // unmeasured / nonsense observation: hold
         }
-        let target = self.target(bps);
+        // the band clamp comes before the change test: a target outside
+        // [floor, ceiling] that clamps back onto the current rung is a
+        // hold, not a change
+        let target = self.target(bps).clamp(self.th.tier_floor, self.th.tier_ceiling);
         let relax_floor = self.entry_threshold(self.tier) * self.th.relax_factor;
         let next = match target.cmp(&self.tier) {
             std::cmp::Ordering::Greater => target, // worse link: escalate now
@@ -1107,6 +1141,7 @@ mod tests {
             full_below: 4e5,
             q4_below: 1.5e5,
             relax_factor: 1.5,
+            ..AdaptiveThresholds::default()
         };
         th.validate().unwrap();
         let mut p = AdaptivePolicy::new(th);
@@ -1136,5 +1171,41 @@ mod tests {
         assert!(bad.validate().is_err());
         let bad = AdaptiveThresholds { relax_factor: 0.5, ..AdaptiveThresholds::default() };
         assert!(bad.validate().is_err());
+        let bad = AdaptiveThresholds {
+            tier_floor: Tier::Full,
+            tier_ceiling: Tier::Activations,
+            ..AdaptiveThresholds::default()
+        };
+        assert!(bad.validate().is_err(), "inverted band must not validate");
+    }
+
+    #[test]
+    fn adaptive_policy_respects_the_tier_band() {
+        // ceiling: a catastrophic link cannot push past Full
+        let th = AdaptiveThresholds {
+            tier_ceiling: Tier::Full,
+            ..AdaptiveThresholds::default()
+        };
+        th.validate().unwrap();
+        let mut p = AdaptivePolicy::new(th);
+        assert_eq!(p.tier(), Tier::Off);
+        assert_eq!(p.observe(1e3), Some(Tier::Full), "capped at the ceiling, not FullQ4");
+        assert_eq!(p.observe(1e2), None, "already at the ceiling: hold, not re-announce");
+        // floor: the controller starts there and a perfect link cannot
+        // relax below it
+        let th = AdaptiveThresholds {
+            tier_floor: Tier::Activations,
+            ..AdaptiveThresholds::default()
+        };
+        let mut p = AdaptivePolicy::new(th);
+        assert_eq!(p.tier(), Tier::Activations, "controller boots at the floor");
+        assert_eq!(p.observe(1e12), None, "a fast link clamps back onto the floor: hold");
+        assert_eq!(p.observe(1e5), Some(Tier::FullQ4), "escalation above the floor still works");
+        assert_eq!(p.observe(1e12), Some(Tier::Activations), "relaxation stops at the floor");
+        // parse round-trip for the config spelling
+        for t in [Tier::Off, Tier::Activations, Tier::Full, Tier::FullQ4] {
+            assert_eq!(Tier::parse(t.name()), Some(t));
+        }
+        assert_eq!(Tier::parse("bogus"), None);
     }
 }

@@ -104,6 +104,11 @@ pub struct StageWorker {
     /// [`Compression::Adaptive`] (DESIGN.md §10). Decoding never depends
     /// on it — tensors self-describe their arm.
     pub tier: Tier,
+    /// Band the effective tier is clamped into, from `TrainInit`: a
+    /// stale or misdirected `SetCompression` can never push a stage
+    /// outside the operator's floor/ceiling (DESIGN.md §10).
+    tier_floor: Tier,
+    tier_ceiling: Tier,
     /// Periodic bandwidth re-measurement cadence (TrainInit; 0 = off).
     bw_probe_every: u64,
     /// Fixed periodic-probe payload (TrainInit; 0 = auto-size from the
@@ -182,6 +187,8 @@ impl StageWorker {
             bw_probe: None,
             compression: Compression::Off,
             tier: Tier::Off,
+            tier_floor: Tier::Off,
+            tier_ceiling: Tier::FullQ4,
             bw_probe_every: 0,
             bw_probe_bytes: 0,
             last_bw_bps: 0.0,
@@ -260,7 +267,12 @@ impl StageWorker {
         self.global_every = t.global_every;
         self.status = t.status;
         self.compression = t.compression;
-        self.tier = t.compression.initial_tier();
+        self.tier_floor = t.tier_floor;
+        self.tier_ceiling = t.tier_ceiling;
+        // the clamp makes a floor effective at init, with no broadcast:
+        // every stage (including one re-inited mid-recovery) boots
+        // inside the band
+        self.tier = t.compression.initial_tier().clamp(t.tier_floor, t.tier_ceiling);
         self.bw_probe_every = t.bw_probe_every;
         self.bw_probe_bytes = t.bw_probe_bytes;
         self.grad_residual.clear();
@@ -318,6 +330,7 @@ impl StageWorker {
     /// — stale error from another coding must not leak into the first
     /// sends of the new tier (and clearing keeps replays reproducible).
     pub fn set_tier(&mut self, tier: Tier) {
+        let tier = tier.clamp(self.tier_floor, self.tier_ceiling);
         if self.tier != tier {
             self.tier = tier;
             self.grad_residual.clear();
@@ -1336,6 +1349,8 @@ impl StageWorker {
         self.bw_probe = None;
         self.compression = Compression::Off;
         self.tier = Tier::Off;
+        self.tier_floor = Tier::Off;
+        self.tier_ceiling = Tier::FullQ4;
         self.bw_probe_every = 0;
         self.bw_probe_bytes = 0;
         self.last_bw_bps = 0.0;

@@ -13,14 +13,53 @@
 //!
 //! Two invocations of the same scenario produce **byte-identical event
 //! traces and bit-identical final weights**: everything runs on one
-//! thread, every queue is ordered, and all time comes from the virtual
+//! thread, every queue is ordered ([`queue`] — the `(time, seq)`-keyed
+//! min-heap engine, DESIGN.md §11), and all time comes from the virtual
 //! clock. The scenario suite lives in `rust/tests/scenarios/`.
+
+use std::time::Duration;
 
 pub mod clock;
 pub mod fixture;
+pub mod queue;
 pub mod runner;
 pub mod script;
 
 pub use clock::{real_clock, Clock, RealClock, SharedClock, VirtualClock};
 pub use runner::{run_scenario, RedistRecord, ScenarioOutcome};
-pub use script::{Action, Scenario, ScriptEvent, Trigger};
+pub use script::{
+    chaos_events, hetero_capacities, hetero_link_topology, rolling_churn_events,
+    straggler_events, Action, Scenario, ScriptEvent, Trigger,
+};
+
+/// The big-cluster chaos storm: `n` devices with 10x-heterogeneous
+/// capacities over an asymmetric per-link bandwidth topology
+/// (20–200 MB/s), shaken by rolling churn waves whose kills all revive
+/// far inside the fault timeout (case-2 by construction, so the fleet
+/// never shrinks and the schedule is recoverable at any width). The
+/// canonical instance is `big_cluster_storm(500, 10, 7)` — the scenario
+/// the `scale` family and the `storm_500dev_wall_s` bench row both run.
+///
+/// Tuning notes, load-bearing for "simulates in seconds":
+/// * `ns_per_flop` 0.05 + 20 µs latency keep virtual stage times small
+///   so a batch crosses `n` stages in bounded virtual time;
+/// * `fault_timeout` 30 s ≫ the 10–60 ms revives, so churn stays in the
+///   cheap case-2 lane instead of the `O(B·S²)` partition DP;
+/// * `probe_window` 1 s bounds each probe round at `n` acks.
+///
+/// Pair with [`fixture::FixtureSpec`] `{ n_blocks: n + 12, dim: 8,
+/// classes: 4, batch: 4, seed: 11 }` so every device owns at least one
+/// block (the scale tests and the bench share that fixture).
+pub fn big_cluster_storm(n: usize, batches: u64, seed: u64) -> Scenario {
+    let mut sc = Scenario::exact_recovery("big-cluster-storm", n, batches);
+    sc.capacities = hetero_capacities(n, 10.0, seed);
+    sc.seed = seed;
+    sc.ns_per_flop = 0.05;
+    sc.latency = Duration::from_micros(20);
+    sc.bandwidth_bps = 1e8;
+    sc.fault_timeout = Duration::from_secs(30);
+    sc.probe_window = Duration::from_secs(1);
+    sc.redist_window = Duration::from_secs(60);
+    sc.with_link_bw(hetero_link_topology(n, 2e7, 2e8, seed))
+        .with_events(rolling_churn_events(n, batches, 3, 4, seed))
+}

@@ -1,0 +1,225 @@
+//! The O(log n) event engine behind the scenario runner (DESIGN.md §11).
+//!
+//! A binary min-heap keyed on `(virtual time, insertion seq)` — the exact
+//! total order the old `BTreeMap<(Duration, u64), _>` queue popped in,
+//! but with `O(log n)` push/pop and no node rebalancing — plus
+//! *generation-counter tombstones*: purging every in-flight delivery
+//! that touches a device (what `kill_central` needs) is one integer
+//! bump instead of an `O(n)` queue rebuild. Tombstoned entries are
+//! skipped silently on pop, so to every consumer the queue behaves as
+//! if the purge had rebuilt it.
+//!
+//! The ordering contract is load-bearing: two scenario runs are
+//! byte-identical **because** events at equal virtual times pop in
+//! insertion order. `rust/tests/event_queue.rs` drives this engine and
+//! a reference model of the old `BTreeMap` + `retain` queue through
+//! random push/pop/purge schedules and asserts identical delivery
+//! order.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::time::Duration;
+
+/// Monotonic insertion sequence — the tiebreaker that makes the event
+/// order total (and therefore replayable) at equal virtual times.
+pub type Seq = u64;
+
+/// Link scope of a scoped entry, captured at push time: the endpoints
+/// and the generation each endpoint had. A later `purge_device` bump
+/// makes the stamp stale and the entry a tombstone.
+#[derive(Debug, Clone, Copy)]
+struct Stamp {
+    from: u32,
+    to: u32,
+    from_gen: u32,
+    to_gen: u32,
+}
+
+struct Entry<T> {
+    at: Duration,
+    seq: Seq,
+    stamp: Option<Stamp>,
+    ev: T,
+}
+
+// Ordered by (at, seq) only — seq is unique, so the order is total and
+// the payload never needs to be comparable.
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+
+impl<T> Eq for Entry<T> {}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.at.cmp(&other.at).then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
+/// Min-heap event queue with per-device generation tombstones.
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Reverse<Entry<T>>>,
+    next_seq: Seq,
+    /// Per-device purge generation; bumping one invalidates every
+    /// scoped entry stamped with the old value.
+    gen: Vec<u32>,
+}
+
+impl<T> EventQueue<T> {
+    pub fn new(n_devices: usize) -> EventQueue<T> {
+        EventQueue::with_capacity(n_devices, 0)
+    }
+
+    pub fn with_capacity(n_devices: usize, cap: usize) -> EventQueue<T> {
+        EventQueue { heap: BinaryHeap::with_capacity(cap), next_seq: 0, gen: vec![0; n_devices] }
+    }
+
+    /// Entries in the heap, tombstones included (cheap; for budgeting).
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    fn push_entry(&mut self, at: Duration, stamp: Option<Stamp>, ev: T) -> Seq {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Reverse(Entry { at, seq, stamp, ev }));
+        seq
+    }
+
+    /// Schedule an unscoped event — never tombstoned by any purge.
+    pub fn push(&mut self, at: Duration, ev: T) -> Seq {
+        self.push_entry(at, None, ev)
+    }
+
+    /// Schedule a delivery scoped to the directed link `from -> to`:
+    /// a later [`EventQueue::purge_device`] of either endpoint drops it
+    /// unpopped.
+    pub fn push_scoped(&mut self, at: Duration, from: usize, to: usize, ev: T) -> Seq {
+        let stamp = Stamp {
+            from: from as u32,
+            to: to as u32,
+            from_gen: self.gen[from],
+            to_gen: self.gen[to],
+        };
+        self.push_entry(at, Some(stamp), ev)
+    }
+
+    /// Drop every in-flight scoped entry touching device `d` (as sender
+    /// or receiver) without scanning the queue: bump the device's
+    /// generation so their stamps go stale. Unscoped entries and scoped
+    /// entries pushed *after* the purge are untouched.
+    pub fn purge_device(&mut self, d: usize) {
+        self.gen[d] = self.gen[d].wrapping_add(1);
+    }
+
+    fn live(&self, stamp: &Option<Stamp>) -> bool {
+        match stamp {
+            None => true,
+            Some(s) => {
+                self.gen[s.from as usize] == s.from_gen && self.gen[s.to as usize] == s.to_gen
+            }
+        }
+    }
+
+    /// Pop the earliest live entry in `(time, seq)` order. Tombstones
+    /// are discarded silently — they neither advance the caller's clock
+    /// nor count as processed events, exactly like entries removed by
+    /// the old purge-by-rebuild.
+    pub fn pop(&mut self) -> Option<(Duration, T)> {
+        while let Some(Reverse(e)) = self.heap.pop() {
+            if self.live(&e.stamp) {
+                return Some((e.at, e.ev));
+            }
+        }
+        None
+    }
+
+    /// Live in-flight scoped deliveries counted by destination device —
+    /// the overflow diagnostic's "per-device queue depth". `O(n)`, so
+    /// only for error paths.
+    pub fn depth_by_device(&self) -> Vec<usize> {
+        let mut depth = vec![0usize; self.gen.len()];
+        for Reverse(e) in self.heap.iter() {
+            if let Some(s) = &e.stamp {
+                if self.live(&e.stamp) {
+                    depth[s.to as usize] += 1;
+                }
+            }
+        }
+        depth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(x: u64) -> Duration {
+        Duration::from_millis(x)
+    }
+
+    #[test]
+    fn pops_in_time_then_insertion_order() {
+        let mut q: EventQueue<&str> = EventQueue::new(2);
+        q.push(ms(5), "b");
+        q.push(ms(1), "a");
+        q.push(ms(5), "c"); // same time as "b": insertion order wins
+        q.push(ms(3), "d");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a", "d", "b", "c"]);
+    }
+
+    #[test]
+    fn purge_device_zero_drops_exactly_central_deliveries() {
+        // the kill_central contract: every in-flight delivery to or
+        // from device 0 dies with the process — nothing else moves
+        let mut q: EventQueue<&str> = EventQueue::new(4);
+        q.push_scoped(ms(1), 0, 2, "central->2");
+        q.push_scoped(ms(2), 2, 0, "2->central");
+        q.push_scoped(ms(3), 1, 2, "1->2");
+        q.push(ms(4), "wake-3");
+        q.push_scoped(ms(5), 3, 1, "3->1");
+        q.purge_device(0);
+        // a send made after the restart must survive the old purge
+        q.push_scoped(ms(6), 0, 1, "central->1 post-restart");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["1->2", "wake-3", "3->1", "central->1 post-restart"]);
+    }
+
+    #[test]
+    fn purge_is_per_device_and_repeatable() {
+        let mut q: EventQueue<u32> = EventQueue::new(3);
+        q.push_scoped(ms(1), 1, 2, 10);
+        q.purge_device(1);
+        q.push_scoped(ms(2), 1, 2, 11);
+        q.purge_device(1);
+        q.push_scoped(ms(3), 1, 2, 12);
+        assert_eq!(q.pop(), Some((ms(3), 12)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn depth_counts_only_live_scoped_entries() {
+        let mut q: EventQueue<u8> = EventQueue::new(3);
+        q.push_scoped(ms(1), 0, 1, 0);
+        q.push_scoped(ms(2), 0, 1, 0);
+        q.push_scoped(ms(3), 1, 2, 0);
+        q.push(ms(4), 0); // unscoped: not a delivery, not counted
+        assert_eq!(q.depth_by_device(), vec![0, 2, 1]);
+        q.purge_device(0);
+        assert_eq!(q.depth_by_device(), vec![0, 0, 1]);
+        assert_eq!(q.len(), 4, "tombstones stay in the heap until popped over");
+    }
+}

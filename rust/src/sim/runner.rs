@@ -11,6 +11,17 @@
 //! two invocations of one scenario produce byte-identical event traces
 //! and bit-identical final weights.
 //!
+//! The event engine (DESIGN.md §11) is sized for fleets in the hundreds
+//! of devices: a binary min-heap keyed on `(virtual time, seq)`
+//! ([`crate::sim::queue::EventQueue`]) instead of a `BTreeMap`, all
+//! scheduling and pricing state owned directly by the single-threaded
+//! runner, and a thin [`Outbox`] as the only shared surface worker code
+//! sends through — drained back into the priced queue before any state
+//! the sends were made under can change, which is what keeps traces
+//! byte-identical to the old locked design. Killing the central node
+//! purges its in-flight traffic with a per-device generation bump
+//! (tombstoned deliveries skip on pop) instead of rebuilding the queue.
+//!
 //! The coordinator logic mirrors `coordinator::{central,recovery}` as an
 //! explicit state machine (the private `Phase` enum) instead of blocking
 //! loops, with one
@@ -35,7 +46,7 @@
 //! central+worker storm — or a central death mid-redistribution —
 //! recoverable. See DESIGN.md §9.
 
-use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -58,12 +69,27 @@ use crate::profile::{CapacityEstimator, ModelProfile};
 use crate::replication;
 use crate::runtime::{load_all_blocks_native, HostTensor};
 use crate::sim::clock::{SharedClock, VirtualClock};
+use crate::sim::queue::EventQueue;
 use crate::sim::script::{Action, Scenario, Trigger};
 
-/// Safety valve against scripted livelocks: a scenario is a few hundred
-/// batches over a handful of devices (~tens of thousands of events).
-const MAX_EVENTS: u64 = 5_000_000;
 const MAX_RECOVERIES: usize = 50;
+
+/// Safety valve against scripted livelocks, derived from the scenario's
+/// actual size (a fixed constant was either uselessly huge for a
+/// 3-device family or a false deadlock for a 500-device storm). Budget:
+/// a batch costs O(n) deliver/wake/compute events per pipeline pass
+/// plus replication to neighbors and the central node; every recovery
+/// round (bounded by `MAX_RECOVERIES`) and scripted event adds probe,
+/// redistribution and fetch traffic that also grows with fleet width.
+/// The constants are deliberate overshoot — the ceiling exists to name
+/// a livelock, not to meter healthy runs.
+fn event_ceiling(sc: &Scenario) -> u64 {
+    let n = sc.n_devices() as u64;
+    let per_batch = 96 * (n + 8);
+    let rounds = sc.events.len() as u64 + MAX_RECOVERIES as u64 + 1;
+    let fault_budget = 4096 * rounds * (n / 16 + 1);
+    1_000_000 + sc.batches.saturating_mul(per_batch).saturating_add(fault_budget)
+}
 
 // ---------------------------------------------------------------------
 // virtual network
@@ -78,29 +104,35 @@ enum QueuedEv {
     RestartCentral,
 }
 
-struct NetInner {
-    n: usize,
+/// Runner-owned scheduling and pricing state of the virtual fabric.
+/// Nothing here is behind a lock: the runner is single-threaded, and
+/// worker code only ever reaches the fabric through [`Outbox`].
+struct VirtualNet {
     latency: Duration,
+    /// Cluster-default link bandwidth ([`Action::SetBandwidth`]
+    /// retargets it; per-link overrides are untouched).
     bw_bps: f64,
+    /// Per-directed-link bandwidth overrides (`Scenario::link_bw` plus
+    /// [`Action::SetLinkBandwidth`]). Lookup-only by exact key — never
+    /// iterated — so the unordered map cannot leak nondeterminism.
+    link_bw: HashMap<(DeviceId, DeviceId), f64>,
     /// Per-device virtual time used to timestamp its sends (the runner
     /// sets it to the device's compute-completion time before a step).
     local_now: Vec<Duration>,
     /// Directed link -> time it finishes its current transfer.
-    link_free: BTreeMap<(DeviceId, DeviceId), Duration>,
+    /// Lookup-only, like `link_bw`.
+    link_free: HashMap<(DeviceId, DeviceId), Duration>,
     dead: Vec<bool>,
-    queue: BTreeMap<(Duration, u64), QueuedEv>,
-    seq: u64,
+    queue: EventQueue<QueuedEv>,
     bytes_total: u64,
     /// When Some(i), FetchWeights sends are recorded for redistribution i.
     recording: Option<usize>,
     fetch_log: Vec<(usize, DeviceId, DeviceId, Vec<usize>)>,
 }
 
-impl NetInner {
-    fn push(&mut self, at: Duration, ev: QueuedEv) {
-        let s = self.seq;
-        self.seq += 1;
-        self.queue.insert((at, s), ev);
+impl VirtualNet {
+    fn bw(&self, from: DeviceId, to: DeviceId) -> f64 {
+        self.link_bw.get(&(from, to)).copied().unwrap_or(self.bw_bps)
     }
 
     fn send_from(&mut self, from: DeviceId, to: DeviceId, msg: Message) {
@@ -114,11 +146,22 @@ impl NetInner {
         }
         let depart = self.local_now[from];
         let free = self.link_free.get(&(from, to)).copied().unwrap_or(Duration::ZERO);
-        let transfer = Duration::from_secs_f64(bytes as f64 / self.bw_bps);
+        let transfer = Duration::from_secs_f64(bytes as f64 / self.bw(from, to));
         let arrive = depart.max(free) + self.latency + transfer;
         self.link_free.insert((from, to), arrive);
-        self.push(arrive, QueuedEv::Deliver { from, to, msg });
+        self.queue.push_scoped(arrive, from, to, QueuedEv::Deliver { from, to, msg });
     }
+}
+
+/// The thin shared send surface: worker sends append here and the
+/// runner drains them into the priced queue ([`Runner::drain_sends`])
+/// before any scheduling state they were made under can change. The
+/// `Mutex` exists only because [`Transport`] is `Send`; it is
+/// uncontended and touched once per send plus once per drain — not
+/// once per event like the old whole-network lock.
+struct Outbox {
+    n: usize,
+    pending: Mutex<Vec<(DeviceId, DeviceId, Message)>>,
 }
 
 /// One device's `Transport` into the virtual fabric. `recv_timeout`
@@ -127,7 +170,7 @@ impl NetInner {
 #[derive(Clone)]
 struct NetHandle {
     id: DeviceId,
-    inner: Arc<Mutex<NetInner>>,
+    out: Arc<Outbox>,
 }
 
 impl Transport for NetHandle {
@@ -136,7 +179,7 @@ impl Transport for NetHandle {
     }
 
     fn send(&self, to: DeviceId, msg: Message) -> Result<()> {
-        self.inner.lock().unwrap().send_from(self.id, to, msg);
+        self.out.pending.lock().unwrap().push((self.id, to, msg));
         Ok(())
     }
 
@@ -145,7 +188,7 @@ impl Transport for NetHandle {
     }
 
     fn n_devices(&self) -> usize {
-        self.inner.lock().unwrap().n
+        self.out.n
     }
 }
 
@@ -188,6 +231,9 @@ pub struct ScenarioOutcome {
     pub restarts: usize,
     pub virtual_ms: f64,
     pub net_bytes: u64,
+    /// Events the engine processed (tombstones excluded) — the
+    /// numerator of the `sim_events_per_sec` bench metric.
+    pub events: u64,
 }
 
 impl ScenarioOutcome {
@@ -247,21 +293,20 @@ pub fn run_scenario(scenario: &Scenario, model_dir: &Path) -> Result<ScenarioOut
     }
     let clock = VirtualClock::shared();
     let shared: SharedClock = clock.clone();
-    let net = Arc::new(Mutex::new(NetInner {
-        n,
+    let vnet = VirtualNet {
         latency: scenario.latency,
         bw_bps: scenario.bandwidth_bps,
+        link_bw: scenario.link_bw.iter().map(|&(f, t, b)| ((f, t), b)).collect(),
         local_now: vec![Duration::ZERO; n],
-        link_free: BTreeMap::new(),
+        link_free: HashMap::new(),
         dead: vec![false; n],
-        queue: BTreeMap::new(),
-        seq: 0,
+        queue: EventQueue::with_capacity(n, 4 * n + 64),
         bytes_total: 0,
         recording: None,
         fetch_log: Vec::new(),
-    }));
-    let handles: Vec<NetHandle> =
-        (0..n).map(|id| NetHandle { id, inner: net.clone() }).collect();
+    };
+    let out = Arc::new(Outbox { n, pending: Mutex::new(Vec::with_capacity(32)) });
+    let handles: Vec<NetHandle> = (0..n).map(|id| NetHandle { id, out: out.clone() }).collect();
     let mut workers = Vec::with_capacity(n);
     for d in 0..n {
         let blocks = load_all_blocks_native(&manifest)?;
@@ -278,14 +323,17 @@ pub fn run_scenario(scenario: &Scenario, model_dir: &Path) -> Result<ScenarioOut
     }
     let dim: usize = manifest.input_shape.iter().skip(1).product();
     let classes = manifest.n_classes.context("fixture manifest missing n_classes")?;
+    let trace_cap = (scenario.batches as usize).saturating_mul(3) + scenario.events.len() * 2 + 64;
     let runner = Runner {
         sc: scenario,
         manifest: manifest.clone(),
         clock,
-        net,
+        vnet,
+        out,
+        drain_buf: Vec::with_capacity(32),
         handles,
         busy_until: vec![Duration::ZERO; n],
-        inbox: (0..n).map(|_| VecDeque::new()).collect(),
+        inbox: (0..n).map(|_| VecDeque::with_capacity(8)).collect(),
         dead: vec![false; n],
         workers,
         data: SynthVision::new(dim, classes, 0.5, scenario.seed, 0),
@@ -302,12 +350,13 @@ pub fn run_scenario(scenario: &Scenario, model_dir: &Path) -> Result<ScenarioOut
         total: scenario.batches,
         next_repart: scenario.repartition.map(|(first, _)| first),
         losses: BTreeMap::new(),
-        trace: Vec::new(),
+        trace: Vec::with_capacity(trace_cap),
         redists: Vec::new(),
         recoveries: 0,
         fired: vec![false; scenario.events.len()],
         redist_count: 0,
         events_processed: 0,
+        event_ceiling: event_ceiling(scenario),
         sink: MemorySink::default(),
         ckpt_restore: None,
         central_down: false,
@@ -322,7 +371,11 @@ struct Runner<'a> {
     sc: &'a Scenario,
     manifest: Arc<Manifest>,
     clock: Arc<VirtualClock>,
-    net: Arc<Mutex<NetInner>>,
+    vnet: VirtualNet,
+    out: Arc<Outbox>,
+    /// Reused drain buffer — swapped with the outbox so the hot path
+    /// never allocates.
+    drain_buf: Vec<(DeviceId, DeviceId, Message)>,
     handles: Vec<NetHandle>,
     busy_until: Vec<Duration>,
     inbox: Vec<VecDeque<(DeviceId, Message)>>,
@@ -349,6 +402,7 @@ struct Runner<'a> {
     fired: Vec<bool>,
     redist_count: usize,
     events_processed: u64,
+    event_ceiling: u64,
     /// In-memory checkpoint store (the harness's §III-E "disk").
     sink: MemorySink,
     /// Checkpoint being restored, carried from restart to finish_rejoin.
@@ -362,28 +416,67 @@ struct Runner<'a> {
 impl Runner<'_> {
     // -------------------------------------------------- infrastructure
 
-    fn trace_line(&mut self, at: Duration, msg: impl Into<String>) {
-        self.trace.push(format!("[{:>13}ns] {}", at.as_nanos(), msg.into()));
+    fn trace_line(&mut self, at: Duration, args: std::fmt::Arguments<'_>) {
+        use std::fmt::Write as _;
+        let mut line = String::with_capacity(64);
+        let _ = write!(line, "[{:>13}ns] {}", at.as_nanos(), args);
+        self.trace.push(line);
     }
 
-    fn set_local(&self, d: DeviceId, t: Duration) {
-        self.net.lock().unwrap().local_now[d] = t;
+    /// Price every message worker code pushed through the send surface
+    /// and move it into the event queue, in push order.
+    ///
+    /// INVARIANT (the byte-identity argument, DESIGN.md §11): a send is
+    /// priced with the `local_now`/`link_free`/`dead`/`recording` state
+    /// it was made under, and its queue `seq` must precede any event the
+    /// runner pushes afterwards. Both hold because every mutation point
+    /// of that state — and every queue push — drains first: `set_local`,
+    /// `wake`, `schedule`, `pop_event`, dead-bit flips (kill / revive /
+    /// kill_central / restart_central), bandwidth retargets, and
+    /// `recording` clears all begin with a drain, and nothing between a
+    /// worker call and the next such point touches pricing state.
+    fn drain_sends(&mut self) {
+        let mut buf = std::mem::take(&mut self.drain_buf);
+        std::mem::swap(&mut buf, &mut *self.out.pending.lock().unwrap());
+        for (from, to, msg) in buf.drain(..) {
+            self.vnet.send_from(from, to, msg);
+        }
+        self.drain_buf = buf;
     }
 
-    fn wake(&self, d: DeviceId, at: Duration) {
-        self.net.lock().unwrap().push(at, QueuedEv::Wake { dev: d });
+    fn set_local(&mut self, d: DeviceId, t: Duration) {
+        self.drain_sends(); // pending sends were priced under the old local_now
+        self.vnet.local_now[d] = t;
     }
 
-    fn schedule(&self, at: Duration, ev: QueuedEv) {
-        self.net.lock().unwrap().push(at, ev);
+    fn wake(&mut self, d: DeviceId, at: Duration) {
+        self.drain_sends(); // pending sends precede this push in seq order
+        self.vnet.queue.push(at, QueuedEv::Wake { dev: d });
     }
 
-    fn pop_event(&self) -> Option<(Duration, QueuedEv)> {
-        self.net.lock().unwrap().queue.pop_first().map(|((at, _), ev)| (at, ev))
+    fn schedule(&mut self, at: Duration, ev: QueuedEv) {
+        self.drain_sends();
+        self.vnet.queue.push(at, ev);
+    }
+
+    fn pop_event(&mut self) -> Option<(Duration, QueuedEv)> {
+        self.drain_sends();
+        self.vnet.queue.pop()
     }
 
     fn peers_of_central(&self) -> Vec<DeviceId> {
         self.workers[0].worker_list.iter().copied().filter(|&d| d != 0).collect()
+    }
+
+    fn phase_name(&self) -> &'static str {
+        match self.phase {
+            Phase::Idle => "idle",
+            Phase::Probing { .. } => "probing",
+            Phase::Redistributing { .. } => "redistributing",
+            Phase::Draining => "draining",
+            Phase::Down => "central-down",
+            Phase::Rejoining { .. } => "rejoining",
+        }
     }
 
     // -------------------------------------------------- top level
@@ -406,17 +499,39 @@ impl Runner<'_> {
                 );
             };
             self.events_processed += 1;
-            if self.events_processed > MAX_EVENTS {
-                bail!("scenario {:?} exceeded {MAX_EVENTS} events", self.sc.name);
+            if self.events_processed > self.event_ceiling {
+                let mut busiest: Vec<(DeviceId, usize)> = self
+                    .vnet
+                    .queue
+                    .depth_by_device()
+                    .into_iter()
+                    .enumerate()
+                    .filter(|&(_, depth)| depth > 0)
+                    .collect();
+                busiest.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+                busiest.truncate(4);
+                bail!(
+                    "scenario {:?} exceeded its derived event ceiling {} \
+                     (n_devices={}, batches={}, scripted events={}): phase {}, \
+                     batch {}/{}, inflight {}, busiest in-flight links by \
+                     destination (device, depth): {busiest:?}",
+                    self.sc.name,
+                    self.event_ceiling,
+                    self.sc.n_devices(),
+                    self.total,
+                    self.sc.events.len(),
+                    self.phase_name(),
+                    self.completed + 1,
+                    self.total,
+                    self.inflight,
+                );
             }
             self.clock.set(at);
             match ev {
                 QueuedEv::Deliver { from, to, msg } => {
-                    let dead = {
-                        let net = self.net.lock().unwrap();
-                        net.dead[from] || net.dead[to]
-                    };
-                    if !dead {
+                    // re-check at delivery: either endpoint may have died
+                    // while the message was in flight
+                    if !self.vnet.dead[from] && !self.vnet.dead[to] {
                         self.inbox[to].push_back((from, msg));
                         self.wake(to, at);
                     }
@@ -425,10 +540,11 @@ impl Runner<'_> {
                 QueuedEv::Script { idx } => self.fire_action(idx, at)?,
                 QueuedEv::RestartCentral => self.restart_central(at)?,
                 QueuedEv::Revive { dev } => {
+                    self.drain_sends(); // sends to a dead device must still drop
                     self.dead[dev] = false;
-                    self.net.lock().unwrap().dead[dev] = false;
+                    self.vnet.dead[dev] = false;
                     self.busy_until[dev] = at;
-                    self.trace_line(at, format!("script: revive device {dev}"));
+                    self.trace_line(at, format_args!("script: revive device {dev}"));
                 }
             }
         }
@@ -436,8 +552,11 @@ impl Runner<'_> {
     }
 
     fn finish(mut self) -> Result<ScenarioOutcome> {
+        // price any sends still pending from the final event so the
+        // byte accounting matches the old send-time-priced design
+        self.drain_sends();
         let end = self.clock.now();
-        self.trace_line(end, "run complete");
+        self.trace_line(end, format_args!("run complete"));
         // gather final weights straight from the surviving devices
         let mut final_weights: BTreeMap<usize, BlockParams> = BTreeMap::new();
         for &dev in &self.workers[0].worker_list.clone() {
@@ -453,12 +572,8 @@ impl Runner<'_> {
             );
         }
         // attach the recorded fetches to their redistributions
-        let (net_bytes, fetch_log) = {
-            let net = self.net.lock().unwrap();
-            (net.bytes_total, net.fetch_log.clone())
-        };
         let mut redists = self.redists;
-        for (idx, from, to, blocks) in fetch_log {
+        for (idx, from, to, blocks) in std::mem::take(&mut self.vnet.fetch_log) {
             if let Some(r) = redists.get_mut(idx) {
                 r.fetches.push((from, to, blocks));
             }
@@ -472,7 +587,8 @@ impl Runner<'_> {
             checkpoints: self.checkpoints,
             restarts: self.restarts,
             virtual_ms: end.as_secs_f64() * 1e3,
-            net_bytes,
+            net_bytes: self.vnet.bytes_total,
+            events: self.events_processed,
         })
     }
 
@@ -496,6 +612,8 @@ impl Runner<'_> {
             compression: self.sc.compression,
             bw_probe_every: self.sc.bw_probe_every,
             bw_probe_bytes: self.sc.bw_probe_bytes,
+            tier_floor: self.sc.adaptive.tier_floor,
+            tier_ceiling: self.sc.adaptive.tier_ceiling,
         }
     }
 
@@ -508,7 +626,7 @@ impl Runner<'_> {
             t0_ms: self.profile.t0_ms.clone(),
             out_bytes: self.profile.out_bytes.clone(),
             capacities: vec![1.0; n],
-            bandwidth_bps: vec![self.sc.bandwidth_bps; n - 1],
+            bandwidth_bps: (0..n - 1).map(|l| self.sc.link_bw_for(l, l + 1)).collect(),
         }
     }
 
@@ -524,7 +642,7 @@ impl Runner<'_> {
         }
         self.workers[0].apply_init(&ti)?;
         self.workers[0].measure_bandwidth(&h)?;
-        self.trace_line(Duration::ZERO, format!("init partition {init_ranges:?}"));
+        self.trace_line(Duration::ZERO, format_args!("init partition {init_ranges:?}"));
         for (idx, ev) in self.sc.events.iter().enumerate() {
             if let Trigger::At(t) = ev.at {
                 self.schedule(t, QueuedEv::Script { idx });
@@ -618,7 +736,7 @@ impl Runner<'_> {
         let x = HostTensor::F32(data.x_f32.into());
         self.detector.arm(batch);
         let cb = self.workers[0].forward_train(&h, batch, version, x)?;
-        self.trace_line(t, format!("inject batch={batch}"));
+        self.trace_line(t, format_args!("inject batch={batch}"));
         self.inflight += 1;
         self.next_inject += 1;
         if let Some(cb) = cb {
@@ -639,7 +757,7 @@ impl Runner<'_> {
         }
         self.trace_line(
             at,
-            format!("complete batch={} loss_bits={:08x}", cb.batch, cb.loss.to_bits()),
+            format_args!("complete batch={} loss_bits={:08x}", cb.batch, cb.loss.to_bits()),
         );
         self.losses.insert(cb.batch, cb.loss);
         // checkpoint BEFORE script triggers: a KillCentral scripted at
@@ -651,7 +769,7 @@ impl Runner<'_> {
             && self.next_repart.is_some_and(|next| self.completed >= next as i64);
         if repart_due {
             let next = self.next_repart.unwrap();
-            self.trace_line(at, format!("drain for scheduled repartition @{next}"));
+            self.trace_line(at, format_args!("drain for scheduled repartition @{next}"));
             self.phase = Phase::Draining;
         }
         Ok(())
@@ -766,8 +884,11 @@ impl Runner<'_> {
             }
             Todo::Commit => self.commit_redistribution(t),
             Todo::RedistTimeout => {
-                self.trace_line(t, "redistribution stalled; re-probing");
-                self.net.lock().unwrap().recording = None;
+                self.trace_line(t, format_args!("redistribution stalled; re-probing"));
+                // in-flight fetches of the aborted round were logged at
+                // their (drained) send time, like the old design
+                self.drain_sends();
+                self.vnet.recording = None;
                 self.phase = Phase::Idle;
                 // the overdue batch (if any) restarts the fault handler;
                 // otherwise re-probe on the committed frontier
@@ -802,7 +923,11 @@ impl Runner<'_> {
         let t = self.clock.now();
         self.trace_line(
             t,
-            format!("adaptive: min link {min_bw:.0} B/s; tier {} -> {}", old.name(), tier.name()),
+            format_args!(
+                "adaptive: min link {min_bw:.0} B/s; tier {} -> {}",
+                old.name(),
+                tier.name()
+            ),
         );
         let h = self.handles[0].clone();
         self.set_local(0, t);
@@ -818,7 +943,7 @@ impl Runner<'_> {
         if self.recoveries > MAX_RECOVERIES {
             bail!("scenario {:?}: more than {MAX_RECOVERIES} recoveries", self.sc.name);
         }
-        self.trace_line(t, format!("fault detected: batch {overdue} overdue; probing"));
+        self.trace_line(t, format_args!("fault detected: batch {overdue} overdue; probing"));
         self.workers[0].status = 1;
         let h = self.handles[0].clone();
         self.set_local(0, t);
@@ -843,12 +968,15 @@ impl Runner<'_> {
         self.set_local(0, t);
         if dead.is_empty() && fresh.is_empty() {
             // CASE 1: everyone healthy — restart from the failed batch
-            self.trace_line(t, format!("fault case 1: restart from batch {}", committed + 1));
+            self.trace_line(
+                t,
+                format_args!("fault case 1: restart from batch {}", committed + 1),
+            );
             self.reset_all(committed, t)?;
             self.phase = Phase::Idle;
         } else if dead.is_empty() {
             // CASE 2: restarted worker(s) — restore from replicas
-            self.trace_line(t, format!("fault case 2: restore {fresh:?}"));
+            self.trace_line(t, format_args!("fault case 2: restore {fresh:?}"));
             let ranges = self.workers[0].ranges.clone();
             let ti = self.train_init(ranges.clone(), worker_list.clone(), 1);
             for &d in &fresh {
@@ -870,7 +998,7 @@ impl Runner<'_> {
                 .filter(|(_, d)| dead.contains(d))
                 .map(|(s, _)| s)
                 .collect();
-            self.trace_line(t, format!("fault case 3: dead stages {failed:?}"));
+            self.trace_line(t, format_args!("fault case 3: dead stages {failed:?}"));
             let new_list = renumber_worker_list(&worker_list, &failed);
             let old_ranges = self.workers[0].ranges.clone();
             let alive_old: Vec<(usize, usize)> = old_ranges
@@ -918,13 +1046,13 @@ impl Runner<'_> {
         });
         self.trace_line(
             t,
-            format!(
+            format_args!(
                 "redistribution #{} ({label}): {:?} -> {ranges:?}",
                 idx + 1,
                 self.redists[idx].old_ranges
             ),
         );
-        self.net.lock().unwrap().recording = Some(idx);
+        self.vnet.recording = Some(idx);
         let h = self.handles[0].clone();
         self.set_local(0, t);
         let peers: Vec<DeviceId> = list.iter().copied().filter(|&d| d != 0).collect();
@@ -960,7 +1088,9 @@ impl Runner<'_> {
         else {
             unreachable!()
         };
-        self.net.lock().unwrap().recording = None;
+        // flush handler replies made while the fetch log was recording
+        self.drain_sends();
+        self.vnet.recording = None;
         let h = self.handles[0].clone();
         self.set_local(0, t);
         for &d in &expect {
@@ -969,7 +1099,7 @@ impl Runner<'_> {
         self.workers[0].apply_commit()?;
         self.trace_line(
             t,
-            format!(
+            format_args!(
                 "commit: list {:?} ranges {:?}",
                 self.workers[0].worker_list, self.workers[0].ranges
             ),
@@ -1004,7 +1134,7 @@ impl Runner<'_> {
         self.detector.clear();
         self.inflight = 0;
         self.next_inject = (committed + 1) as u64;
-        self.trace_line(t, format!("reset: resume from batch {}", committed + 1));
+        self.trace_line(t, format_args!("reset: resume from batch {}", committed + 1));
         self.wake(0, t + Duration::from_nanos(1));
         Ok(())
     }
@@ -1024,7 +1154,10 @@ impl Runner<'_> {
         let old_cost = cm.cost(&old_ranges);
         self.trace_line(
             t,
-            format!("repartition check: caps {:?} -> {new_ranges:?} ({cost:.3}ms)", cm.capacities),
+            format_args!(
+                "repartition check: caps {:?} -> {new_ranges:?} ({cost:.3}ms)",
+                cm.capacities
+            ),
         );
         // hysteresis: moving weights has a real cost, so only rebalance
         // for a material (>1%) bottleneck improvement — this also keeps
@@ -1060,7 +1193,7 @@ impl Runner<'_> {
         self.checkpoints += 1;
         self.trace_line(
             at,
-            format!(
+            format_args!(
                 "checkpoint #{} at batch {} ({blocks} blocks)",
                 self.checkpoints, self.completed
             ),
@@ -1100,23 +1233,22 @@ impl Runner<'_> {
 
     fn kill_central(&mut self, t: Duration) {
         if self.central_down {
-            self.trace_line(t, "script: kill central ignored (already down)");
+            self.trace_line(t, format_args!("script: kill central ignored (already down)"));
             return;
         }
+        // sends made while the central was alive price (and, for
+        // FetchWeights, log) under the live fabric — then die with it
+        self.drain_sends();
         self.central_down = true;
         self.dead[0] = true;
-        {
-            let mut net = self.net.lock().unwrap();
-            net.dead[0] = true;
-            net.recording = None;
-            // the process died: bytes in flight to/from its sockets are
-            // gone with it (worker kills keep the delivery-time check —
-            // their revive semantics predate central restart and existing
-            // family traces must not move)
-            net.queue.retain(|_, ev| {
-                !matches!(ev, QueuedEv::Deliver { from, to, .. } if *from == 0 || *to == 0)
-            });
-        }
+        self.vnet.dead[0] = true;
+        self.vnet.recording = None;
+        // the process died: bytes in flight to/from its sockets are gone
+        // with it — one generation bump tombstones exactly the deliveries
+        // touching device 0 (worker kills keep the delivery-time check:
+        // their revive semantics predate central restart and existing
+        // family traces must not move)
+        self.vnet.queue.purge_device(0);
         // all coordinator memory is lost with the process
         self.workers[0].wipe_state();
         self.inbox[0].clear();
@@ -1126,25 +1258,27 @@ impl Runner<'_> {
             *bw = 0.0;
         }
         // the tier controller lives in the dead coordinator: it reboots
-        // at Off and re-escalates from fresh measurements (workers keep
-        // their last-ordered tier until the rejoin InitState resets it —
-        // harmless either way, the wire is self-describing)
+        // at the policy floor and re-escalates from fresh measurements
+        // (workers keep their last-ordered tier until the rejoin
+        // InitState resets it — harmless either way, the wire is
+        // self-describing)
         if let Some(p) = self.adaptive.as_mut() {
             *p = AdaptivePolicy::new(self.sc.adaptive.clone());
         }
         self.inflight = 0;
         self.phase = Phase::Down;
-        self.trace_line(t, "script: kill central node");
+        self.trace_line(t, format_args!("script: kill central node"));
     }
 
     fn restart_central(&mut self, t: Duration) -> Result<()> {
         if !self.central_down {
-            self.trace_line(t, "script: restart central ignored (not down)");
+            self.trace_line(t, format_args!("script: restart central ignored (not down)"));
             return Ok(());
         }
+        self.drain_sends(); // nothing may slip past the dead-bit flip
         self.central_down = false;
         self.dead[0] = false;
-        self.net.lock().unwrap().dead[0] = false;
+        self.vnet.dead[0] = false;
         self.busy_until[0] = t;
         self.restarts += 1;
         let ck = match self.sink.load_latest()? {
@@ -1153,7 +1287,7 @@ impl Runner<'_> {
         };
         self.trace_line(
             t,
-            format!(
+            format_args!(
                 "central restart #{}: checkpoint committed={} ({} blocks); probing workers",
                 self.restarts,
                 ck.state.committed_batch,
@@ -1206,7 +1340,7 @@ impl Runner<'_> {
         for (d, (bwd, fresh)) in &acks {
             self.trace_line(
                 t,
-                format!(
+                format_args!(
                     "rejoin: worker {d} committed_bwd={bwd} fresh={fresh} \
                      (checkpoint committed={committed})"
                 ),
@@ -1251,7 +1385,9 @@ impl Runner<'_> {
             if blocks.len() < hi - lo + 1 {
                 self.trace_line(
                     t,
-                    format!("warning: checkpoint misses blocks of stage {s} (partial replicas)"),
+                    format_args!(
+                        "warning: checkpoint misses blocks of stage {s} (partial replicas)"
+                    ),
                 );
             }
             if !blocks.is_empty() {
@@ -1261,8 +1397,10 @@ impl Runner<'_> {
         if dead.is_empty() {
             self.trace_line(
                 t,
-                format!("central restart: all workers rejoined; resuming from batch {}",
-                    committed + 1),
+                format_args!(
+                    "central restart: all workers rejoined; resuming from batch {}",
+                    committed + 1
+                ),
             );
             self.phase = Phase::Idle;
             self.reset_all(committed, t)?;
@@ -1276,7 +1414,7 @@ impl Runner<'_> {
                 .filter(|(_, d)| dead.contains(d))
                 .map(|(s, _)| s)
                 .collect();
-            self.trace_line(t, format!("central restart: dead stages {failed:?}"));
+            self.trace_line(t, format_args!("central restart: dead stages {failed:?}"));
             let new_list = renumber_worker_list(&list, &failed);
             let alive_old: Vec<(usize, usize)> = ranges
                 .iter()
@@ -1313,13 +1451,17 @@ impl Runner<'_> {
             }
             _ => 1.0,
         };
+        // unmeasured links fall back to the scripted topology: the
+        // per-link override if one exists, else the scenario's scalar
+        // default (NOT the current SetBandwidth value — that keeps the
+        // pre-override families byte-identical)
         let bw: Vec<f64> = (0..list.len().saturating_sub(1))
             .map(|l| {
                 let m = self.measured_bw.get(l).copied().unwrap_or(0.0);
                 if m > 0.0 {
                     m
                 } else {
-                    self.sc.bandwidth_bps
+                    self.sc.link_bw_for(list[l], list[l + 1])
                 }
             })
             .collect();
@@ -1370,19 +1512,42 @@ impl Runner<'_> {
         self.fired[idx] = true;
         match self.sc.events[idx].action.clone() {
             Action::Kill { device, revive_after } => {
-                self.trace_line(t, format!("script: kill device {device}"));
+                self.trace_line(t, format_args!("script: kill device {device}"));
                 self.kill(device, t);
                 if let Some(delay) = revive_after {
                     self.schedule(t + delay, QueuedEv::Revive { dev: device });
                 }
             }
+            Action::KillSlice { first, last, revive_after } => {
+                self.trace_line(t, format_args!("script: kill slice {first}..={last}"));
+                for dev in first..=last {
+                    self.kill(dev, t);
+                }
+                if let Some(delay) = revive_after {
+                    for dev in first..=last {
+                        self.schedule(t + delay, QueuedEv::Revive { dev });
+                    }
+                }
+            }
             Action::SetCapacity { device, capacity } => {
-                self.trace_line(t, format!("script: device {device} capacity -> {capacity}"));
+                self.trace_line(
+                    t,
+                    format_args!("script: device {device} capacity -> {capacity}"),
+                );
                 self.workers[device].sim.cfg.capacity = capacity;
             }
             Action::SetBandwidth { bps } => {
-                self.trace_line(t, format!("script: bandwidth -> {bps} B/s"));
-                self.net.lock().unwrap().bw_bps = bps;
+                self.trace_line(t, format_args!("script: bandwidth -> {bps} B/s"));
+                self.drain_sends(); // pending sends priced at the old rate
+                self.vnet.bw_bps = bps;
+            }
+            Action::SetLinkBandwidth { from, to, bps } => {
+                self.trace_line(
+                    t,
+                    format_args!("script: link {from}->{to} bandwidth -> {bps} B/s"),
+                );
+                self.drain_sends();
+                self.vnet.link_bw.insert((from, to), bps);
             }
             Action::KillCentral { restart_after } => {
                 self.kill_central(t);
@@ -1396,8 +1561,11 @@ impl Runner<'_> {
     }
 
     fn kill(&mut self, device: DeviceId, t: Duration) {
+        // sends made while the device was alive were priced under the
+        // live fabric — flush them before the dead bit flips
+        self.drain_sends();
         self.dead[device] = true;
-        self.net.lock().unwrap().dead[device] = true;
+        self.vnet.dead[device] = true;
         self.workers[device].wipe_state();
         self.inbox[device].clear();
         self.busy_until[device] = t;

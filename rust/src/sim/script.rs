@@ -39,6 +39,12 @@ pub enum Action {
     /// `revive_after`, the device comes back that much later with empty
     /// state — the paper's case-2 "restarts as soon as it failed".
     Kill { device: DeviceId, revive_after: Option<Duration> },
+    /// Kill a contiguous slice of workers `first..=last` in one trigger —
+    /// the correlated-failure form (a rack or region dying together).
+    /// With `revive_after`, every device of the slice revives that much
+    /// later with empty state; without it the slice is gone for good and
+    /// recovery is a single case-3 re-partition over the survivors.
+    KillSlice { first: DeviceId, last: DeviceId, revive_after: Option<Duration> },
     /// Change a device's capacity factor (e.g. 10.0 = now 10x slower) —
     /// drives the dynamic re-partition path.
     SetCapacity { device: DeviceId, capacity: f64 },
@@ -47,6 +53,11 @@ pub enum Action {
     /// of the `bandwidth` scenario family. In-flight transfers keep the
     /// rate they departed with; only subsequent sends are repriced.
     SetBandwidth { bps: f64 },
+    /// Retarget one directed link `from -> to` to `bps` bytes/sec,
+    /// overriding both the scalar default and any [`Scenario::link_bw`]
+    /// entry for that link. In-flight transfers keep the rate they
+    /// departed with, like [`Action::SetBandwidth`].
+    SetLinkBandwidth { from: DeviceId, to: DeviceId, bps: f64 },
     /// Kill the central node (paper §III-E): all coordinator memory is
     /// lost — stage-0 weights, replica store, capacity estimates, batch
     /// pointers — and traffic to/from device 0 (including bytes already
@@ -107,6 +118,11 @@ pub struct Scenario {
 
     // --- virtual network + compute model ---
     pub bandwidth_bps: f64,
+    /// Per-directed-link bandwidth overrides `(from, to, bps)` — the
+    /// asymmetric wide-fleet topology form (see [`hetero_link_topology`]).
+    /// Links without an entry fall back to the scalar `bandwidth_bps`;
+    /// the empty default is exactly the old single-scalar fabric.
+    pub link_bw: Vec<(DeviceId, DeviceId, f64)>,
     pub latency: Duration,
     /// Modeled compute cost; per-batch stage time = flops × this × C_i.
     pub ns_per_flop: f64,
@@ -159,6 +175,7 @@ impl Scenario {
             probe_window: Duration::from_millis(50),
             redist_window: Duration::from_secs(2),
             bandwidth_bps: 1e8,
+            link_bw: vec![],
             latency: Duration::from_micros(100),
             ns_per_flop: 1.0,
             compression: Compression::Off,
@@ -194,6 +211,27 @@ impl Scenario {
         self
     }
 
+    /// Install a per-directed-link bandwidth topology (see
+    /// [`hetero_link_topology`]).
+    pub fn with_link_bw(mut self, link_bw: Vec<(DeviceId, DeviceId, f64)>) -> Scenario {
+        self.link_bw = link_bw;
+        self
+    }
+
+    /// The scripted bandwidth of the directed link `from -> to`: the
+    /// per-link override if one exists, else the scalar default. This is
+    /// the *initial* topology — runtime [`Action::SetBandwidth`] /
+    /// [`Action::SetLinkBandwidth`] retargets are visible only to the
+    /// virtual fabric, not this accessor, so cost-model fallbacks keep
+    /// their pre-override pricing (see `Runner::cost_model`).
+    pub fn link_bw_for(&self, from: DeviceId, to: DeviceId) -> f64 {
+        self.link_bw
+            .iter()
+            .find(|&&(f, t, _)| f == from && t == to)
+            .map(|&(_, _, b)| b)
+            .unwrap_or(self.bandwidth_bps)
+    }
+
     pub fn with_compression(mut self, compression: Compression) -> Scenario {
         self.compression = compression;
         self
@@ -226,12 +264,43 @@ impl Scenario {
         if self.compression == Compression::Adaptive {
             self.adaptive.validate()?;
         }
+        for &(from, to, bps) in &self.link_bw {
+            anyhow::ensure!(
+                bps.is_finite() && bps > 0.0,
+                "link_bw needs positive finite rates (got {from}->{to} @ {bps})"
+            );
+            anyhow::ensure!(
+                from != to && from < self.n_devices() && to < self.n_devices(),
+                "link_bw entries must connect distinct in-range devices (got {from}->{to})"
+            );
+        }
         let mut unrescued_central_kill = false;
         let mut has_at_restart = false;
         for e in &self.events {
             let dev = match &e.action {
                 Action::Kill { device, .. } => *device,
                 Action::SetCapacity { device, .. } => *device,
+                Action::KillSlice { first, last, .. } => {
+                    anyhow::ensure!(
+                        *first >= 1 && first <= last && *last < self.n_devices(),
+                        "KillSlice needs 1 <= first <= last < n_devices \
+                         (got {first}..={last} with {} devices)",
+                        self.n_devices()
+                    );
+                    continue;
+                }
+                Action::SetLinkBandwidth { from, to, bps } => {
+                    anyhow::ensure!(
+                        bps.is_finite() && *bps > 0.0,
+                        "SetLinkBandwidth needs a positive finite rate (got {bps})"
+                    );
+                    anyhow::ensure!(
+                        from != to && *from < self.n_devices() && *to < self.n_devices(),
+                        "SetLinkBandwidth needs a directed link between distinct in-range \
+                         devices (got {from}->{to})"
+                    );
+                    continue;
+                }
                 Action::SetBandwidth { bps } => {
                     anyhow::ensure!(
                         bps.is_finite() && *bps > 0.0,
@@ -319,6 +388,133 @@ pub fn chaos_events(
         batch += 6 + rng.below(8);
     }
     events
+}
+
+/// Rolling-wave churn generator (continuous join/leave across a wide
+/// fleet): `waves` waves, each killing `per_wave` distinct workers
+/// round-robin across the pool at one batch mark, every kill reviving
+/// within 10–60 virtual ms — inside any sane fault timeout, so each wave
+/// is observed as case-2 restarts and the worker list never shrinks,
+/// which keeps any generated schedule recoverable by construction. Wave
+/// marks are 3–5 batches apart; generation stops early if the run would
+/// lose its quiesce headroom. A pure function of the arguments, like
+/// [`chaos_events`].
+pub fn rolling_churn_events(
+    n_devices: usize,
+    batches: u64,
+    waves: usize,
+    per_wave: usize,
+    seed: u64,
+) -> Vec<ScriptEvent> {
+    assert!(n_devices >= 2, "churn needs at least one worker");
+    assert!(per_wave >= 1 && per_wave < n_devices, "per_wave must fit the worker pool");
+    let mut rng = Rng::new(seed ^ 0x0C11_B01D);
+    let mut events = Vec::with_capacity(waves * per_wave);
+    let mut mark = 4 + rng.below(3);
+    let mut cursor = 1usize; // round-robin over workers, skipping the central node
+    for _ in 0..waves {
+        if mark + 3 >= batches {
+            break;
+        }
+        for _ in 0..per_wave {
+            let device = cursor;
+            cursor += 1;
+            if cursor >= n_devices {
+                cursor = 1;
+            }
+            events.push(ScriptEvent {
+                at: Trigger::BatchDone(mark),
+                action: Action::Kill {
+                    device,
+                    revive_after: Some(Duration::from_millis(10 + rng.below(51))),
+                },
+            });
+        }
+        mark += 3 + rng.below(3);
+    }
+    events
+}
+
+/// p99.9 straggler generator: `n_spikes` spikes, each slowing one worker
+/// by a 20–60x capacity factor at a batch mark and restoring it to its
+/// scripted capacity 2–4 batches later. Models tail latency — a device
+/// pausing for GC or thermal throttling — rather than failure: nothing
+/// dies, so a scenario using this must keep `fault_timeout` above the
+/// spiked stage time or the detector will (correctly) call it a fault.
+/// A pure function of `(capacities, batches, n_spikes, seed)`.
+pub fn straggler_events(
+    capacities: &[f64],
+    batches: u64,
+    n_spikes: usize,
+    seed: u64,
+) -> Vec<ScriptEvent> {
+    let n_devices = capacities.len();
+    assert!(n_devices >= 2, "stragglers need at least one worker");
+    let mut rng = Rng::new(seed ^ 0x57A6_61E5);
+    let mut events = Vec::with_capacity(n_spikes * 2);
+    let mut mark = 4 + rng.below(3);
+    for _ in 0..n_spikes {
+        if mark + 6 >= batches {
+            break;
+        }
+        let device = 1 + rng.below((n_devices - 1) as u64) as usize;
+        let spike = 20.0 + rng.next_f64() * 40.0;
+        events.push(ScriptEvent {
+            at: Trigger::BatchDone(mark),
+            action: Action::SetCapacity { device, capacity: capacities[device] * spike },
+        });
+        let restore = mark + 2 + rng.below(3);
+        events.push(ScriptEvent {
+            at: Trigger::BatchDone(restore),
+            action: Action::SetCapacity { device, capacity: capacities[device] },
+        });
+        mark = restore + 2 + rng.below(3);
+    }
+    events
+}
+
+/// Directed heterogeneous link topology for a linear pipeline over
+/// devices `0..n`: both directions of every pipeline hop `(d, d+1)`,
+/// plus the replication links `(d, 0)` / `(0, d)` for `d >= 2`, each
+/// drawn uniformly from `[lo_bps, hi_bps]`. Asymmetric by construction —
+/// the two directions of a hop draw independently, like real
+/// uplink/downlink asymmetry. A pure function of the arguments; feed the
+/// result to [`Scenario::with_link_bw`].
+pub fn hetero_link_topology(
+    n_devices: usize,
+    lo_bps: f64,
+    hi_bps: f64,
+    seed: u64,
+) -> Vec<(DeviceId, DeviceId, f64)> {
+    assert!(n_devices >= 2, "a topology needs at least one link");
+    assert!(lo_bps > 0.0 && hi_bps >= lo_bps, "need 0 < lo_bps <= hi_bps");
+    let mut rng = Rng::new(seed ^ 0x7090_A011);
+    let mut links = Vec::with_capacity(4 * n_devices);
+    for d in 0..n_devices - 1 {
+        links.push((d, d + 1, lo_bps + rng.next_f64() * (hi_bps - lo_bps)));
+        links.push((d + 1, d, lo_bps + rng.next_f64() * (hi_bps - lo_bps)));
+    }
+    for d in 2..n_devices {
+        links.push((d, 0, lo_bps + rng.next_f64() * (hi_bps - lo_bps)));
+        links.push((0, d, lo_bps + rng.next_f64() * (hi_bps - lo_bps)));
+    }
+    links
+}
+
+/// Heterogeneous capacity vector: central node at 1.0 (a runner
+/// invariant), workers drawn uniformly from `[1.0, max_factor]` — the
+/// paper's "10x heterogeneity" is `max_factor = 10.0`. A pure function
+/// of the arguments.
+pub fn hetero_capacities(n_devices: usize, max_factor: f64, seed: u64) -> Vec<f64> {
+    assert!(n_devices >= 2, "a cluster needs at least one worker");
+    assert!(max_factor >= 1.0, "capacity factors are >= 1.0 (1.0 = fastest)");
+    let mut rng = Rng::new(seed ^ 0xCA9A_C171);
+    let mut caps = Vec::with_capacity(n_devices);
+    caps.push(1.0);
+    for _ in 1..n_devices {
+        caps.push(1.0 + rng.next_f64() * (max_factor - 1.0));
+    }
+    caps
 }
 
 #[cfg(test)]
@@ -470,6 +666,173 @@ mod tests {
             }
         }
         assert!(seen_slowdown, "64 seeds x 8 events never drew a slowdown");
+    }
+
+    #[test]
+    fn rolling_churn_is_deterministic_and_case2_by_construction() {
+        let a = rolling_churn_events(12, 40, 3, 3, 7);
+        let b = rolling_churn_events(12, 40, 3, 3, 7);
+        assert_eq!(a.len(), b.len());
+        assert!(!a.is_empty());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.action, y.action);
+        }
+        let mut devices_seen = std::collections::BTreeSet::new();
+        for e in &a {
+            let Action::Kill { device, revive_after } = &e.action else {
+                panic!("churn only kills, got {:?}", e.action)
+            };
+            assert!((1..12).contains(device));
+            devices_seen.insert(*device);
+            let r = revive_after.expect("churn kills always revive");
+            assert!(
+                r >= Duration::from_millis(10) && r <= Duration::from_millis(60),
+                "revive {r:?} outside the case-2 band"
+            );
+        }
+        // 3 waves x 3 kills round-robin over 11 workers: no repeats yet
+        assert_eq!(devices_seen.len(), a.len(), "round-robin must not repeat early");
+        Scenario::exact_recovery("churn-gen", 12, 40)
+            .with_events(a)
+            .validate()
+            .unwrap();
+    }
+
+    #[test]
+    fn rolling_churn_waves_share_marks_and_respect_headroom() {
+        for seed in 0..32u64 {
+            let evs = rolling_churn_events(8, 30, 5, 2, seed);
+            let mut prev: Option<u64> = None;
+            for pair in evs.chunks(2) {
+                let Trigger::BatchDone(m0) = pair[0].at else { panic!() };
+                let Trigger::BatchDone(m1) = pair[1].at else { panic!() };
+                assert_eq!(m0, m1, "seed {seed}: a wave fires at one mark");
+                assert!(m0 >= 4 && m0 + 3 < 30, "seed {seed}: mark {m0} headroom");
+                if let Some(p) = prev {
+                    assert!(m0 > p && m0 - p >= 3, "seed {seed}: waves too close ({p}->{m0})");
+                }
+                prev = Some(m0);
+            }
+        }
+    }
+
+    #[test]
+    fn straggler_spikes_pair_with_restores() {
+        for seed in 0..32u64 {
+            let caps = hetero_capacities(6, 4.0, seed);
+            let evs = straggler_events(&caps, 40, 3, seed);
+            assert!(evs.len() % 2 == 0, "seed {seed}: spikes pair with restores");
+            assert!(!evs.is_empty());
+            for pair in evs.chunks(2) {
+                let (Action::SetCapacity { device: d0, capacity: spiked },
+                     Action::SetCapacity { device: d1, capacity: restored }) =
+                    (&pair[0].action, &pair[1].action)
+                else {
+                    panic!("seed {seed}: stragglers only set capacity")
+                };
+                assert_eq!(d0, d1, "seed {seed}: restore targets the spiked device");
+                let base = caps[*d0];
+                assert_eq!(*restored, base, "seed {seed}: restore returns to scripted cap");
+                let factor = spiked / base;
+                assert!(
+                    (20.0..=60.0).contains(&factor),
+                    "seed {seed}: spike factor {factor} outside [20, 60]"
+                );
+                let (Trigger::BatchDone(m0), Trigger::BatchDone(m1)) = (&pair[0].at, &pair[1].at)
+                else {
+                    panic!()
+                };
+                assert!(*m1 > *m0 && *m1 - *m0 <= 4, "seed {seed}: restore 2-4 batches later");
+            }
+            Scenario::exact_recovery("strag-gen", 6, 40)
+                .with_events(evs)
+                .validate()
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn hetero_topology_covers_hops_and_replication_links() {
+        let n = 16;
+        let links = hetero_link_topology(n, 2e7, 2e8, 9);
+        let again = hetero_link_topology(n, 2e7, 2e8, 9);
+        assert_eq!(links, again, "topology is seed-deterministic");
+        let keys: std::collections::BTreeSet<(usize, usize)> =
+            links.iter().map(|&(f, t, _)| (f, t)).collect();
+        assert_eq!(keys.len(), links.len(), "no duplicate directed links");
+        for d in 0..n - 1 {
+            assert!(keys.contains(&(d, d + 1)) && keys.contains(&(d + 1, d)), "hop {d} both ways");
+        }
+        for d in 2..n {
+            assert!(keys.contains(&(d, 0)) && keys.contains(&(0, d)), "replication link {d}");
+        }
+        for &(_, _, bps) in &links {
+            assert!((2e7..=2e8).contains(&bps), "bandwidth {bps} outside the band");
+        }
+        // the two directions of a hop are drawn independently: at least
+        // one hop must come out asymmetric
+        assert!(
+            (0..n - 1).any(|d| {
+                let up = links.iter().find(|&&(f, t, _)| (f, t) == (d, d + 1)).unwrap().2;
+                let down = links.iter().find(|&&(f, t, _)| (f, t) == (d + 1, d)).unwrap().2;
+                up != down
+            }),
+            "every hop symmetric — the generator is not asymmetric"
+        );
+        let mut sc = Scenario::exact_recovery("topo-gen", n, 10).with_link_bw(links);
+        sc.validate().unwrap();
+        // override beats the scalar default; unlisted links fall back
+        sc.link_bw = vec![(0, 1, 5e6)];
+        assert_eq!(sc.link_bw_for(0, 1), 5e6);
+        assert_eq!(sc.link_bw_for(1, 0), sc.bandwidth_bps);
+    }
+
+    #[test]
+    fn hetero_capacities_pin_the_central_node() {
+        let caps = hetero_capacities(32, 10.0, 5);
+        assert_eq!(caps, hetero_capacities(32, 10.0, 5));
+        assert_eq!(caps[0], 1.0, "central capacity is a runner invariant");
+        assert!(caps[1..].iter().all(|c| (1.0..=10.0).contains(c)));
+        Scenario::exact_recovery("caps-gen", 32, 10)
+            .with_events(vec![])
+            .validate()
+            .unwrap();
+    }
+
+    #[test]
+    fn validate_checks_slices_and_links() {
+        let base = Scenario::exact_recovery("v2", 6, 20);
+        // KillSlice must stay inside the worker pool
+        for (first, last, ok) in
+            [(1, 3, true), (0, 2, false), (3, 2, false), (4, 6, false), (5, 5, true)]
+        {
+            let sc = base.clone().with_events(vec![ScriptEvent {
+                at: Trigger::BatchDone(5),
+                action: Action::KillSlice {
+                    first,
+                    last,
+                    revive_after: Some(Duration::from_millis(20)),
+                },
+            }]);
+            assert_eq!(sc.validate().is_ok(), ok, "KillSlice {first}..={last}");
+        }
+        // SetLinkBandwidth needs a real directed link and a sane rate
+        for (from, to, bps, ok) in
+            [(0, 1, 1e7, true), (1, 1, 1e7, false), (0, 6, 1e7, false), (0, 1, -1.0, false)]
+        {
+            let sc = base.clone().with_events(vec![ScriptEvent {
+                at: Trigger::At(Duration::from_millis(1)),
+                action: Action::SetLinkBandwidth { from, to, bps },
+            }]);
+            assert_eq!(sc.validate().is_ok(), ok, "link {from}->{to} @ {bps}");
+        }
+        // static topology entries are validated the same way
+        let mut sc = base.clone();
+        sc.link_bw = vec![(2, 2, 1e7)];
+        assert!(sc.validate().is_err(), "self-link in link_bw");
+        sc.link_bw = vec![(0, 1, f64::NAN)];
+        assert!(sc.validate().is_err(), "NaN rate in link_bw");
     }
 
     #[test]

@@ -1,0 +1,127 @@
+//! Property test for the O(log n) event engine (DESIGN.md §11).
+//!
+//! The reference model is the queue the runner used before the rewrite:
+//! a `BTreeMap<(Duration, seq), _>` popped with `pop_first`, purged with
+//! `retain`. The heap + generation-tombstone engine must be
+//! observationally identical to it under every interleaving of push,
+//! scoped push, pop, and per-device purge — same `(time, payload)`
+//! delivery sequence, pop for pop, including the final drain. Virtual
+//! times are drawn from a tiny range so equal-time collisions (where
+//! only the insertion-seq tiebreak keeps the order total) are the
+//! common case, not the rare one.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use ftpipehd::sim::queue::EventQueue;
+use ftpipehd::util::rng::Rng;
+
+/// The old runner's queue, reconstructed as an executable model.
+struct ModelQueue {
+    map: BTreeMap<(Duration, u64), (u64, Option<(usize, usize)>)>,
+    next_seq: u64,
+}
+
+impl ModelQueue {
+    fn new() -> ModelQueue {
+        ModelQueue { map: BTreeMap::new(), next_seq: 0 }
+    }
+
+    fn push(&mut self, at: Duration, id: u64, scope: Option<(usize, usize)>) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.map.insert((at, seq), (id, scope));
+    }
+
+    fn purge_device(&mut self, d: usize) {
+        // the old kill_central purge: rebuild without anything touching d
+        self.map.retain(|_, (_, scope)| match scope {
+            Some((from, to)) => *from != d && *to != d,
+            None => true,
+        });
+    }
+
+    fn pop(&mut self) -> Option<(Duration, u64)> {
+        self.map.pop_first().map(|((at, _), (id, _))| (at, id))
+    }
+}
+
+#[test]
+fn heap_engine_matches_btreemap_model_under_random_schedules() {
+    const N_DEVICES: usize = 6;
+    const SCHEDULES: u64 = 200;
+    const OPS: usize = 300;
+    for schedule in 0..SCHEDULES {
+        let mut rng = Rng::new(0xE0E7_0001 ^ schedule.wrapping_mul(0x9E37_79B9));
+        let mut model = ModelQueue::new();
+        let mut engine: EventQueue<u64> = EventQueue::new(N_DEVICES);
+        let mut next_id = 0u64;
+        for op in 0..OPS {
+            match rng.below(10) {
+                // pushes dominate so the queues stay deep enough for
+                // purge and tiebreak behaviour to matter
+                0..=3 => {
+                    let at = Duration::from_millis(rng.below(50));
+                    model.push(at, next_id, None);
+                    engine.push(at, next_id);
+                    next_id += 1;
+                }
+                4..=7 => {
+                    let at = Duration::from_millis(rng.below(50));
+                    let from = rng.below(N_DEVICES as u64) as usize;
+                    let to = rng.below(N_DEVICES as u64) as usize;
+                    model.push(at, next_id, Some((from, to)));
+                    engine.push_scoped(at, from, to, next_id);
+                    next_id += 1;
+                }
+                8 => {
+                    let d = rng.below(N_DEVICES as u64) as usize;
+                    model.purge_device(d);
+                    engine.purge_device(d);
+                }
+                _ => {
+                    assert_eq!(
+                        engine.pop(),
+                        model.pop(),
+                        "divergence at schedule {schedule} op {op}"
+                    );
+                }
+            }
+        }
+        // drain both to the bottom: every surviving entry, in order
+        let mut drained = 0usize;
+        loop {
+            let (a, b) = (engine.pop(), model.pop());
+            assert_eq!(a, b, "drain divergence at schedule {schedule} entry {drained}");
+            if a.is_none() {
+                break;
+            }
+            drained += 1;
+        }
+        assert!(engine.is_empty());
+    }
+}
+
+#[test]
+fn purge_then_repush_on_same_link_is_fresh() {
+    // the restart_central pattern: purge device 0, then immediately
+    // schedule new traffic on the same links — only pre-purge entries die
+    let mut model = ModelQueue::new();
+    let mut engine: EventQueue<u64> = EventQueue::new(3);
+    for (i, (from, to)) in [(0, 1), (1, 0), (1, 2)].into_iter().enumerate() {
+        let at = Duration::from_millis(i as u64);
+        model.push(at, i as u64, Some((from, to)));
+        engine.push_scoped(at, from, to, i as u64);
+    }
+    model.purge_device(0);
+    engine.purge_device(0);
+    model.push(Duration::from_millis(0), 100, Some((0, 1)));
+    engine.push_scoped(Duration::from_millis(0), 0, 1, 100);
+    let mut order = vec![];
+    while let Some((at, id)) = engine.pop() {
+        assert_eq!(model.pop(), Some((at, id)));
+        order.push(id);
+    }
+    assert_eq!(model.pop(), None);
+    assert_eq!(order, vec![100, 2], "post-purge push must outlive the purge");
+}

@@ -1,0 +1,105 @@
+//! Family: correlated failures — a contiguous rack/region slice dies in
+//! one trigger ([`Action::KillSlice`]).
+//!
+//! Independent-failure families kill one device per fault round; real
+//! edge fleets lose a whole switch, rack, or region at once. One
+//! `KillSlice` exercises the multi-device arm of every recovery case: a
+//! permanent slice loss is a single case-3 re-partition over the
+//! survivors (one probe round, one redistribution, fetch traffic per
+//! Algorithm 1), and a transient slice blip (power glitch) is a single
+//! case-2 round with every slice member alive-but-fresh.
+
+use std::time::Duration;
+
+use ftpipehd::sim::fixture::FixtureSpec;
+use ftpipehd::sim::script::{Action, Scenario, ScriptEvent, Trigger};
+
+use crate::common;
+
+const N: usize = 8;
+const TOTAL: u64 = 40;
+
+fn fixture() -> FixtureSpec {
+    FixtureSpec { n_blocks: 16, dim: 8, classes: 4, batch: 4, seed: 11 }
+}
+
+#[test]
+fn rack_loss_is_one_case3_repartition() {
+    let sc = Scenario::exact_recovery("correlated-loss", N, TOTAL).with_events(vec![
+        ScriptEvent {
+            at: Trigger::BatchDone(10),
+            action: Action::KillSlice { first: 2, last: 4, revive_after: None },
+        },
+    ]);
+    let out = common::run_twice_deterministic_spec("correlated-loss", &sc, &fixture());
+    common::assert_trace_contains("correlated-loss", &out, "script: kill slice 2..=4");
+    common::assert_trace_contains("correlated-loss", &out, "fault case 3");
+    // one probe round sees all three dead at once: exactly one recovery,
+    // one redistribution, and the slice is gone from the worker list
+    assert_eq!(out.recoveries, 1, "a correlated loss is ONE fault round");
+    assert_eq!(out.redists.len(), 1);
+    let r = &out.redists[0];
+    assert_eq!(r.new_list, vec![0, 1, 5, 6, 7]);
+    assert_eq!(r.failed, vec![2, 3, 4]);
+    common::assert_fetches_match_plan("correlated-loss", r);
+    common::assert_loss_continuity("correlated-loss", &out, TOTAL);
+    // exact-recovery base: lossless against a never-faulted baseline
+    let baseline = Scenario::exact_recovery("correlated-loss-base", N, TOTAL);
+    let baseline_out = common::run_once_spec("correlated-loss-base", &baseline, &fixture());
+    common::assert_losses_bit_equal("correlated-loss", &out, &baseline_out);
+    assert_eq!(out.weights_bits(), baseline_out.weights_bits());
+}
+
+#[test]
+fn rack_blip_is_one_case2_round() {
+    // the whole slice back 20ms later — inside the 200ms timeout, so the
+    // probe finds three alive-but-fresh workers in one round
+    let sc = Scenario::exact_recovery("correlated-blip", N, TOTAL).with_events(vec![
+        ScriptEvent {
+            at: Trigger::BatchDone(10),
+            action: Action::KillSlice {
+                first: 2,
+                last: 4,
+                revive_after: Some(Duration::from_millis(20)),
+            },
+        },
+    ]);
+    let out = common::run_twice_deterministic_spec("correlated-blip", &sc, &fixture());
+    common::assert_trace_contains("correlated-blip", &out, "fault case 2");
+    assert_eq!(out.recoveries, 1);
+    for r in &out.redists {
+        assert!(r.failed.is_empty());
+        assert_eq!(r.new_list.len(), N, "a blip must not shrink the fleet");
+    }
+    common::assert_loss_continuity("correlated-blip", &out, TOTAL);
+    let baseline = Scenario::exact_recovery("correlated-blip-base", N, TOTAL);
+    let baseline_out = common::run_once_spec("correlated-blip-base", &baseline, &fixture());
+    common::assert_losses_bit_equal("correlated-blip", &out, &baseline_out);
+    assert_eq!(out.weights_bits(), baseline_out.weights_bits());
+}
+
+#[test]
+fn two_sequential_rack_losses_shrink_to_a_core() {
+    let sc = Scenario::exact_recovery("correlated-twice", N, TOTAL).with_events(vec![
+        ScriptEvent {
+            at: Trigger::BatchDone(8),
+            action: Action::KillSlice { first: 5, last: 6, revive_after: None },
+        },
+        ScriptEvent {
+            at: Trigger::BatchDone(25),
+            action: Action::KillSlice { first: 2, last: 3, revive_after: None },
+        },
+    ]);
+    let out = common::run_twice_deterministic_spec("correlated-twice", &sc, &fixture());
+    assert_eq!(out.recoveries, 2);
+    assert_eq!(out.redists.len(), 2);
+    assert_eq!(out.redists[0].new_list, vec![0, 1, 2, 3, 4, 7]);
+    assert_eq!(out.redists[1].new_list, vec![0, 1, 4, 7]);
+    for r in &out.redists {
+        common::assert_fetches_match_plan("correlated-twice", r);
+    }
+    common::assert_loss_continuity("correlated-twice", &out, TOTAL);
+    let baseline = Scenario::exact_recovery("correlated-twice-base", N, TOTAL);
+    let baseline_out = common::run_once_spec("correlated-twice-base", &baseline, &fixture());
+    assert_eq!(out.weights_bits(), baseline_out.weights_bits());
+}

@@ -19,6 +19,10 @@
 //! * `bandwidth`          — link degradation + INT8 wire compression
 //! * `checkpoint_restart` — central-node death + reboot from checkpoint
 //! * `adaptive`           — bandwidth-driven tier ladder (off → q4)
+//! * `rolling_churn`      — generated waves of kill+revive across a fleet
+//! * `correlated`         — a contiguous rack/region slice dies at once
+//! * `stragglers`         — p99.9 capacity spikes; slow is not dead
+//! * `scale`              — 64- and 500-device clusters, asymmetric links
 //!
 //! Set `FTPIPEHD_TRACE_DIR` to dump every run's event trace to disk —
 //! CI uploads those files on failure so byte-identity diffs are
@@ -31,7 +35,11 @@ mod bandwidth;
 mod chaos;
 mod checkpoint_restart;
 mod churn;
+mod correlated;
 mod mid_redistribution;
 mod multi_fault;
 mod repartition;
+mod rolling_churn;
+mod scale;
 mod single_fault;
+mod stragglers;

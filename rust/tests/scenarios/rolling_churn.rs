@@ -1,0 +1,73 @@
+//! Family: rolling-wave churn — continuous join/leave across a wide
+//! fleet (the xaynet-style round-lifecycle stress the ROADMAP names).
+//!
+//! Waves of simultaneous worker kills, each reviving within 10–60
+//! virtual ms — far inside the fault timeout — so every wave is observed
+//! as one probe round full of alive-but-fresh workers (paper case 2):
+//! the worker list never shrinks, the fresh workers restore their ranges
+//! from replicas, and under the exact-recovery base the run is lossless
+//! against a never-faulted baseline.
+
+use std::time::Duration;
+
+use ftpipehd::sim::fixture::FixtureSpec;
+use ftpipehd::sim::hetero_link_topology;
+use ftpipehd::sim::script::{rolling_churn_events, Scenario};
+
+use crate::common;
+
+const N: usize = 12;
+const TOTAL: u64 = 30;
+
+fn fixture() -> FixtureSpec {
+    // every device owns at least two blocks
+    FixtureSpec { n_blocks: 24, dim: 8, classes: 4, batch: 4, seed: 11 }
+}
+
+fn base(name: &str) -> Scenario {
+    let mut sc = Scenario::exact_recovery(name, N, TOTAL);
+    // churn revives (<= 60ms) must land well inside the timeout so a
+    // wave is case 2, and the probe round must start after every member
+    // of the wave is back
+    sc.fault_timeout = Duration::from_secs(1);
+    sc.ns_per_flop = 0.2;
+    sc
+}
+
+#[test]
+fn rolling_waves_are_case2_and_lossless() {
+    let events = rolling_churn_events(N, TOTAL, 3, 3, 5);
+    assert!(!events.is_empty());
+    let sc = base("rolling-churn").with_events(events);
+    let out = common::run_twice_deterministic_spec("rolling-churn", &sc, &fixture());
+    assert!(out.recoveries >= 3, "one probe round per wave, got {}", out.recoveries);
+    common::assert_trace_contains("rolling-churn", &out, "fault case 2");
+    common::assert_loss_continuity("rolling-churn", &out, TOTAL);
+    // every wave is case 2: no redistribution ever loses a stage and the
+    // worker list never shrinks
+    for r in &out.redists {
+        assert!(r.failed.is_empty(), "wave escalated to case 3: {r:?}");
+        assert_eq!(r.new_list.len(), N, "worker list shrank: {:?}", r.new_list);
+    }
+    // lossless against a never-faulted baseline (exact-recovery base)
+    let baseline = base("rolling-churn-base");
+    let baseline_out = common::run_once_spec("rolling-churn-base", &baseline, &fixture());
+    common::assert_losses_bit_equal("rolling-churn", &out, &baseline_out);
+    assert_eq!(out.weights_bits(), baseline_out.weights_bits());
+}
+
+#[test]
+fn rolling_waves_over_asymmetric_links_are_deterministic() {
+    // same churn over a heterogeneous directed topology: link pricing
+    // changes every arrival time, determinism must not care
+    let sc = base("rolling-churn-links")
+        .with_link_bw(hetero_link_topology(N, 5e7, 2e8, 9))
+        .with_events(rolling_churn_events(N, TOTAL, 2, 4, 7));
+    let out = common::run_twice_deterministic_spec("rolling-churn-links", &sc, &fixture());
+    assert!(out.recoveries >= 2);
+    common::assert_trace_contains("rolling-churn-links", &out, "fault case 2");
+    common::assert_loss_continuity("rolling-churn-links", &out, TOTAL);
+    for r in &out.redists {
+        assert!(r.failed.is_empty(), "wave escalated to case 3: {r:?}");
+    }
+}

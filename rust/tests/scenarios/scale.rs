@@ -1,0 +1,63 @@
+//! Family: big-cluster scale — the harness at 64 and 500 virtual
+//! devices.
+//!
+//! The 500-device storm is the tentpole scenario of the O(log n) event
+//! engine: rolling churn waves over a heterogeneous directed link
+//! topology, hundreds of thousands of events, run twice byte-identical,
+//! finishing in seconds of wall time as a normal `cargo test`. CI also
+//! runs it under `timeout` in the scale-smoke job (release build) so a
+//! complexity regression in the queue or the hot path fails loudly.
+
+use std::time::Duration;
+
+use ftpipehd::sim::fixture::FixtureSpec;
+use ftpipehd::sim::script::{Action, Scenario, ScriptEvent, Trigger};
+use ftpipehd::sim::{big_cluster_storm, hetero_link_topology};
+
+use crate::common;
+
+#[test]
+fn asymmetric_links_64_devices_are_deterministic() {
+    const N: usize = 64;
+    const TOTAL: u64 = 8;
+    let mut sc = Scenario::exact_recovery("scale-64-links", N, TOTAL);
+    sc.ns_per_flop = 0.05;
+    sc.latency = Duration::from_micros(20);
+    let sc = sc
+        .with_link_bw(hetero_link_topology(N, 2e7, 2e8, 13))
+        .with_events(vec![ScriptEvent {
+            // mid-run retarget of one directed link: pricing changes from
+            // that instant on, byte-identity across runs must hold
+            at: Trigger::At(Duration::from_millis(40)),
+            action: Action::SetLinkBandwidth { from: 3, to: 4, bps: 1e6 },
+        }]);
+    let spec = FixtureSpec { n_blocks: N + 12, dim: 8, classes: 4, batch: 4, seed: 11 };
+    let out = common::run_twice_deterministic_spec("scale-64-links", &sc, &spec);
+    assert_eq!(out.recoveries, 0);
+    common::assert_trace_contains(
+        "scale-64-links",
+        &out,
+        "script: link 3->4 bandwidth -> 1000000 B/s",
+    );
+    common::assert_loss_continuity("scale-64-links", &out, TOTAL);
+}
+
+#[test]
+fn storm_500_devices_completes_and_is_deterministic() {
+    const N: usize = 500;
+    const TOTAL: u64 = 10;
+    let sc = big_cluster_storm(N, TOTAL, 7);
+    let spec = FixtureSpec { n_blocks: N + 12, dim: 8, classes: 4, batch: 4, seed: 11 };
+    let out = common::run_twice_deterministic_spec("scale-storm", &sc, &spec);
+    // the churn generator fires real waves even at this width
+    assert!(out.recoveries >= 1, "storm ran without a single probe round");
+    common::assert_trace_contains("scale-storm", &out, "fault case 2");
+    common::assert_loss_continuity("scale-storm", &out, TOTAL);
+    // forward+backward+replication alone cross ~2000 links per batch;
+    // anything below this means the storm silently degenerated
+    assert!(
+        out.events > 20_000,
+        "a 500-device storm should be event-dense, got {}",
+        out.events
+    );
+}

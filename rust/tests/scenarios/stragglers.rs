@@ -1,0 +1,71 @@
+//! Family: p99.9 stragglers — a worker goes 20–60x slower for a few
+//! batches (GC pause, thermal throttle), then recovers.
+//!
+//! Nothing dies: the contract under test is that *slow is not dead*.
+//! With a fault timeout sized above the spiked stage time the detector
+//! must never fire, and the only systemic response is the scheduled
+//! dynamic re-partitioner shifting blocks off the spiked device (reason
+//! "dynamic", fetch traffic per Algorithm 1) — and shifting them back
+//! once the spike clears.
+
+use std::time::Duration;
+
+use ftpipehd::sim::fixture::FixtureSpec;
+use ftpipehd::sim::hetero_capacities;
+use ftpipehd::sim::script::{straggler_events, Action, Scenario, ScriptEvent, Trigger};
+
+use crate::common;
+
+const TOTAL: u64 = 40;
+
+fn fixture() -> FixtureSpec {
+    FixtureSpec { n_blocks: 16, dim: 8, classes: 4, batch: 4, seed: 11 }
+}
+
+#[test]
+fn spike_triggers_dynamic_repartition_not_fault() {
+    let mut sc = Scenario::exact_recovery("straggler-repart", 4, TOTAL);
+    // slow is not dead: the timeout must outlast the 30x spike
+    sc.fault_timeout = Duration::from_secs(5);
+    sc.repartition = Some((10, 10));
+    let sc = sc.with_events(vec![
+        ScriptEvent {
+            at: Trigger::BatchDone(6),
+            action: Action::SetCapacity { device: 2, capacity: 30.0 },
+        },
+        ScriptEvent {
+            at: Trigger::BatchDone(14),
+            action: Action::SetCapacity { device: 2, capacity: 1.0 },
+        },
+    ]);
+    let out = common::run_twice_deterministic_spec("straggler-repart", &sc, &fixture());
+    assert_eq!(out.recoveries, 0, "a straggler must never trip the fault detector");
+    common::assert_trace_contains("straggler-repart", &out, "repartition check");
+    assert!(
+        !out.redists.is_empty(),
+        "a 30x spike across a repartition mark must move blocks"
+    );
+    for r in &out.redists {
+        assert_eq!(r.reason, "dynamic");
+        assert!(r.failed.is_empty());
+        common::assert_fetches_match_plan("straggler-repart", r);
+    }
+    common::assert_loss_continuity("straggler-repart", &out, TOTAL);
+}
+
+#[test]
+fn generated_tail_spikes_are_survivable_and_deterministic() {
+    // a heterogeneous fleet with generated p99.9 spikes and no scheduled
+    // re-partition: the run just rides the tail out, deterministically
+    let caps = hetero_capacities(6, 4.0, 3);
+    let events = straggler_events(&caps, TOTAL, 3, 3);
+    assert!(!events.is_empty());
+    let mut sc = Scenario::exact_recovery("straggler-tail", 6, TOTAL);
+    sc.capacities = caps;
+    sc.fault_timeout = Duration::from_secs(10);
+    let sc = sc.with_events(events);
+    let out = common::run_twice_deterministic_spec("straggler-tail", &sc, &fixture());
+    assert_eq!(out.recoveries, 0, "tail latency is not failure");
+    assert!(out.redists.is_empty(), "no schedule, no redistribution");
+    common::assert_loss_continuity("straggler-tail", &out, TOTAL);
+}

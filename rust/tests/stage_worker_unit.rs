@@ -77,6 +77,8 @@ fn init(ranges: Vec<(usize, usize)>, list: Vec<usize>) -> TrainInit {
         compression: Compression::Off,
         bw_probe_every: 0,
         bw_probe_bytes: 0,
+        tier_floor: ftpipehd::net::quant::Tier::Off,
+        tier_ceiling: ftpipehd::net::quant::Tier::FullQ4,
     }
 }
 

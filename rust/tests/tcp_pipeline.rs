@@ -85,6 +85,8 @@ fn two_process_style_pipeline_over_tcp() {
         compression: ftpipehd::net::Compression::Off,
         bw_probe_every: 0,
         bw_probe_bytes: 0,
+        tier_floor: ftpipehd::net::quant::Tier::Off,
+        tier_ceiling: ftpipehd::net::quant::Tier::FullQ4,
     };
     ep.send(1, Message::InitState(ti.clone())).unwrap();
     central.apply_init(&ti).unwrap();

@@ -73,6 +73,8 @@ fn probe_messages() -> Vec<Message> {
             compression: Compression::Activations,
             bw_probe_every: 4,
             bw_probe_bytes: 0,
+            tier_floor: Tier::Off,
+            tier_ceiling: Tier::FullQ4,
         }),
         Message::Repartition {
             ranges: vec![(0, 3), (4, 5)],
