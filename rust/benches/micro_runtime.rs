@@ -157,6 +157,92 @@ fn quant_codec_section(table: &mut Table, metrics: &mut Vec<(String, f64)>) {
     metrics.push(("q8_decode_over_f32_decode".to_string(), dec_q8.p50 / dec_f32.p50));
 }
 
+/// The shared coordinator phase machine (`coordinator::core`) driven flat
+/// out through a synthetic 64-worker fault storm: one round is a fault
+/// detection, 63 probe acks each followed by a driver poll, the probe
+/// resolution, a redistribution with 63 fetch acks + polls, and the
+/// commit — 254 `step` calls ending back in `Training`. Both drivers sit
+/// on this dispatch for every control-plane message, so
+/// `coord_step_transitions_per_sec` is gated (loosely — the pure match
+/// runs in the millions/s; only an accidental clone of the ack sets per
+/// step would move it by integer factors).
+fn coordinator_section(table: &mut Table, metrics: &mut Vec<(String, f64)>) {
+    use ftpipehd::coordinator::{PhaseConfig, PhaseInput, PhaseMachine, RedistReason};
+    use std::collections::BTreeSet;
+    use std::time::Duration;
+
+    const WORKERS: usize = 64;
+    let peers: Vec<usize> = (1..WORKERS).collect();
+    let expect: BTreeSet<usize> = peers.iter().copied().collect();
+    let t0 = Duration::from_millis(1_000);
+
+    let mut m = PhaseMachine::new(PhaseConfig {
+        probe_window: Duration::from_millis(100),
+        redist_window: Duration::from_millis(500),
+    });
+    m.step(PhaseInput::TrainingStarted).expect("idle -> training");
+
+    let mut storm_round = |m: &mut PhaseMachine| -> u64 {
+        let mut steps = 0u64;
+        let mut go = |m: &mut PhaseMachine, input: PhaseInput| {
+            m.step(input).expect("storm inputs are all legal");
+            steps += 1;
+        };
+        go(m, PhaseInput::FaultDetected { overdue: 7, now: t0 });
+        for &d in &peers {
+            go(m, PhaseInput::ProbeAck { id: d, fresh: false });
+            // the drivers poll after every control message; the last ack
+            // completes the set, so its poll resolves the probe
+            go(
+                m,
+                PhaseInput::Poll {
+                    now: t0 + Duration::from_millis(1),
+                    overdue: Some(7),
+                    inflight: 0,
+                    peers: peers.len(),
+                    local_fetch_done: true,
+                },
+            );
+        }
+        go(
+            m,
+            PhaseInput::RedistributionStarted {
+                expect: expect.clone(),
+                reason: RedistReason::Fault,
+                now: t0 + Duration::from_millis(2),
+            },
+        );
+        for &d in &peers {
+            go(m, PhaseInput::FetchDone { id: d });
+            go(
+                m,
+                PhaseInput::Poll {
+                    now: t0 + Duration::from_millis(3),
+                    overdue: None,
+                    inflight: 0,
+                    peers: peers.len(),
+                    local_fetch_done: true,
+                },
+            );
+        }
+        // keep the transition log flat across iterations
+        let _ = m.take_log();
+        steps
+    };
+
+    let steps_per_round = storm_round(&mut m);
+    let s = bench(10, 500, || {
+        storm_round(&mut m);
+    });
+    let tps = steps_per_round as f64 / s.p50;
+    table.row(&[
+        format!("phase machine fault storm ({WORKERS} workers, {steps_per_round} steps)"),
+        format!("{} ({:.2}M steps/s)", us(s.p50), tps / 1e6),
+        us(s.p95),
+    ]);
+    metrics.push(("coord_step_transitions_per_sec".to_string(), tps));
+}
+
 /// The scenario engine under storm load: a 48-device rolling-churn storm
 /// measures event throughput (`sim_events_per_sec`), and the tentpole
 /// 500-device storm records end-to-end wall time
@@ -241,6 +327,7 @@ fn main() {
     let mut metrics: Vec<(String, f64)> = Vec::new();
 
     quant_codec_section(&mut table, &mut metrics);
+    coordinator_section(&mut table, &mut metrics);
     sim_section(&mut table, &mut metrics);
 
     let model = common::model_dir("artifacts/edgenet");

@@ -18,6 +18,15 @@
 //! newest *complete* one; [`MemorySink`] is the deterministic in-memory
 //! store the virtual-clock scenario runner uses to script central-node
 //! crash/restart without touching the filesystem.
+//!
+//! [`CoordinatorStore`] generalizes the sink over *all* leadership state
+//! (DESIGN.md §12): a [`LeaderState`] bundles the checkpoint with the
+//! measured bandwidths, the adaptive compression tier, the replica
+//! version epoch, and the worker-roster snapshot, so `resume_from`
+//! restores the full coordinator instead of re-deriving roster and
+//! controller state. On disk the extras live in a `leader.json` sidecar
+//! next to the numbered checkpoint directories — old checkpoint roots
+//! without one still load, with default extras.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -26,6 +35,8 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::log_warn;
 use crate::model::BlockParams;
+use crate::net::message::DeviceId;
+use crate::net::quant::Tier;
 use crate::util::json::{self, Value};
 use crate::util::npy;
 
@@ -323,6 +334,7 @@ impl CheckpointSink for DiskSink {
 #[derive(Default)]
 pub struct MemorySink {
     saved: Vec<Checkpoint>,
+    leaders: Vec<LeaderState>,
 }
 
 impl MemorySink {
@@ -348,6 +360,164 @@ impl CheckpointSink for MemorySink {
 
     fn load_latest(&self) -> Result<Option<Checkpoint>> {
         Ok(self.saved.last().cloned())
+    }
+}
+
+// ---------------------------------------------------------------------
+// the full-leadership store (DESIGN.md §12)
+// ---------------------------------------------------------------------
+
+/// Everything a process needs to resume coordinator leadership: the
+/// checkpoint (committed frontier, partition, weights) plus the state the
+/// old `resume_from` path used to re-derive from scratch — measured link
+/// bandwidths, the adaptive compression tier in force, the replica
+/// version epoch, and the worker-roster snapshot
+/// (`crate::coordinator::core::WorkerRoster::snapshot`).
+#[derive(Debug, Clone)]
+pub struct LeaderState {
+    /// Committed training state + weights (paper §III-E).
+    pub checkpoint: Checkpoint,
+    /// Last measured link bandwidth per device (bytes/sec; index =
+    /// device id, 0.0 = never measured).
+    pub measured_bw: Vec<f64>,
+    /// Adaptive compression tier in force when the state was saved.
+    pub tier: Tier,
+    /// Replica version epoch (bumped once per coordinator restart so
+    /// pre-restart backups can never shadow post-restart pushes — see
+    /// `crate::replication::epoch_version`).
+    pub replica_epoch: u64,
+    /// Worker-roster capacity quota on the wire encoding (0 = unlimited).
+    pub worker_quota: u64,
+    /// Devices admitted to the roster when the state was saved.
+    pub admitted: Vec<DeviceId>,
+}
+
+impl LeaderState {
+    /// Wrap a bare checkpoint with default extras (no measurements, tier
+    /// `Off`, epoch 0, unlimited empty roster) — what loading a pre-§12
+    /// checkpoint root yields.
+    pub fn around(checkpoint: Checkpoint) -> LeaderState {
+        LeaderState {
+            checkpoint,
+            measured_bw: Vec::new(),
+            tier: Tier::Off,
+            replica_epoch: 0,
+            worker_quota: 0,
+            admitted: Vec::new(),
+        }
+    }
+
+    /// The sidecar JSON (tagged with the checkpoint's committed batch so
+    /// a stale sidecar is detectable).
+    fn extras_json(&self, committed: i64) -> Value {
+        Value::obj(vec![
+            ("committed_batch", Value::Num(committed as f64)),
+            ("measured_bw", Value::Arr(self.measured_bw.iter().map(|&b| Value::Num(b)).collect())),
+            ("tier", Value::Num(f64::from(self.tier.to_u8()))),
+            ("replica_epoch", Value::Num(self.replica_epoch as f64)),
+            ("worker_quota", Value::Num(self.worker_quota as f64)),
+            ("admitted", Value::arr_usize(&self.admitted)),
+        ])
+    }
+
+    /// Overlay sidecar extras onto default values (all keys optional,
+    /// matching the forward/backward-compatible checkpoint loader).
+    fn apply_extras(&mut self, v: &Value) {
+        if let Some(bw) = v.get("measured_bw").and_then(|x| x.as_arr()) {
+            self.measured_bw = bw.iter().filter_map(|x| x.as_f64()).collect();
+        }
+        if let Some(t) = v.get("tier").and_then(|x| x.as_usize()).and_then(|t| Tier::from_u8(t as u8))
+        {
+            self.tier = t;
+        }
+        if let Some(e) = v.get("replica_epoch").and_then(|x| x.as_usize()) {
+            self.replica_epoch = e as u64;
+        }
+        if let Some(q) = v.get("worker_quota").and_then(|x| x.as_usize()) {
+            self.worker_quota = q as u64;
+        }
+        if let Some(a) = v.get("admitted").and_then(|x| x.as_arr()) {
+            self.admitted = a.iter().filter_map(|x| x.as_usize()).collect();
+        }
+    }
+}
+
+/// The [`CheckpointSink`] seam generalized to *all* leadership state:
+/// any process holding a `CoordinatorStore` can resume coordination
+/// (committed counters, partition, roster, adaptive-controller state,
+/// measured bandwidths) without re-deriving anything. `save_leader`
+/// subsumes `save`; `load_latest_leader` degrades gracefully to
+/// checkpoint-only roots by filling default extras.
+pub trait CoordinatorStore: CheckpointSink {
+    /// Persist the full leadership state. Returns the committed batch the
+    /// underlying checkpoint is filed under.
+    fn save_leader(&mut self, st: &LeaderState) -> Result<i64>;
+
+    /// The newest complete leadership state, or `None` when nothing was
+    /// ever persisted. Roots written before the store existed (no
+    /// sidecar) load with default extras, never error.
+    fn load_latest_leader(&self) -> Result<Option<LeaderState>>;
+}
+
+impl CoordinatorStore for DiskSink {
+    fn save_leader(&mut self, st: &LeaderState) -> Result<i64> {
+        let n = self.save(&st.checkpoint)?;
+        // sidecar commit mirrors the checkpoint protocol in miniature:
+        // tmp write + fsync + rename, so a torn sidecar is impossible
+        // (the loader would see either the old or the new one)
+        let tmp = self.root.join("leader.json.tmp");
+        std::fs::write(&tmp, st.extras_json(n).to_pretty())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::File::open(&tmp)
+            .and_then(|f| f.sync_all())
+            .with_context(|| format!("fsync {}", tmp.display()))?;
+        std::fs::rename(&tmp, self.root.join("leader.json"))
+            .context("committing leader.json rename")?;
+        if let Err(e) = fsync_dir(&self.root) {
+            log_warn!("fsync of store root {} failed: {e:#}", self.root.display());
+        }
+        Ok(n)
+    }
+
+    fn load_latest_leader(&self) -> Result<Option<LeaderState>> {
+        let Some(ck) = self.load_latest()? else {
+            return Ok(None);
+        };
+        let mut st = LeaderState::around(ck);
+        if let Ok(raw) = std::fs::read_to_string(self.root.join("leader.json")) {
+            match json::parse(&raw) {
+                Ok(v) => {
+                    let tag = v.get("committed_batch").and_then(|x| x.as_i64());
+                    if tag == Some(st.checkpoint.state.committed_batch) {
+                        st.apply_extras(&v);
+                    } else {
+                        // the sidecar belongs to a checkpoint that was
+                        // pruned or never committed — extras stay default
+                        log_warn!(
+                            "leader.json tagged for batch {tag:?} != checkpoint {}; ignoring",
+                            st.checkpoint.state.committed_batch
+                        );
+                    }
+                }
+                Err(e) => log_warn!("unparseable leader.json ignored: {e}"),
+            }
+        }
+        Ok(Some(st))
+    }
+}
+
+impl CoordinatorStore for MemorySink {
+    fn save_leader(&mut self, st: &LeaderState) -> Result<i64> {
+        let n = self.save(&st.checkpoint)?;
+        self.leaders.push(st.clone());
+        Ok(n)
+    }
+
+    fn load_latest_leader(&self) -> Result<Option<LeaderState>> {
+        if let Some(st) = self.leaders.last() {
+            return Ok(Some(st.clone()));
+        }
+        Ok(self.saved.last().cloned().map(LeaderState::around))
     }
 }
 
@@ -492,6 +662,72 @@ mod tests {
         assert!(root.join("ckpt-00000029").is_dir());
         assert!(root.join("ckpt-00000039").is_dir());
         assert_eq!(sink.load_latest().unwrap().unwrap().state.committed_batch, 39);
+    }
+
+    #[test]
+    fn disk_store_roundtrips_leader_extras() {
+        let root = tmpdir("store-roundtrip");
+        let mut sink = DiskSink::new(&root);
+        let mut st = LeaderState::around(sample());
+        st.measured_bw = vec![0.0, 1.5e6, 2.5e6];
+        st.tier = Tier::Full;
+        st.replica_epoch = 3;
+        st.worker_quota = 8;
+        st.admitted = vec![1, 2];
+        sink.save_leader(&st).unwrap();
+        let back = sink.load_latest_leader().unwrap().expect("leader state");
+        assert_eq!(back.checkpoint.state.committed_batch, 99);
+        assert_eq!(back.measured_bw, vec![0.0, 1.5e6, 2.5e6]);
+        assert_eq!(back.tier, Tier::Full);
+        assert_eq!(back.replica_epoch, 3);
+        assert_eq!((back.worker_quota, back.admitted.clone()), (8, vec![1, 2]));
+    }
+
+    #[test]
+    fn disk_store_pre_sidecar_root_loads_with_defaults() {
+        let root = tmpdir("store-compat");
+        let mut sink = DiskSink::new(&root);
+        sink.save(&sample()).unwrap(); // checkpoint-only, no leader.json
+        let back = sink.load_latest_leader().unwrap().expect("degrades to defaults");
+        assert_eq!(back.checkpoint.state.committed_batch, 99);
+        assert_eq!(back.tier, Tier::Off);
+        assert_eq!(back.replica_epoch, 0);
+        assert!(back.measured_bw.is_empty() && back.admitted.is_empty());
+    }
+
+    #[test]
+    fn disk_store_stale_sidecar_is_ignored() {
+        let root = tmpdir("store-stale");
+        let mut sink = DiskSink::new(&root);
+        let mut st = LeaderState::around(sample());
+        st.replica_epoch = 7;
+        sink.save_leader(&st).unwrap();
+        // a NEWER checkpoint saved through the plain sink leaves the
+        // sidecar tagged for the old batch — its extras must not leak
+        let mut ck = sample();
+        ck.state.committed_batch = 150;
+        sink.save(&ck).unwrap();
+        let back = sink.load_latest_leader().unwrap().unwrap();
+        assert_eq!(back.checkpoint.state.committed_batch, 150);
+        assert_eq!(back.replica_epoch, 0, "stale sidecar extras must not apply");
+    }
+
+    #[test]
+    fn memory_store_roundtrips_leader_extras() {
+        let mut sink = MemorySink::default();
+        assert!(sink.load_latest_leader().unwrap().is_none());
+        let mut st = LeaderState::around(sample());
+        st.replica_epoch = 2;
+        st.admitted = vec![1];
+        sink.save_leader(&st).unwrap();
+        let back = sink.load_latest_leader().unwrap().unwrap();
+        assert_eq!(back.replica_epoch, 2);
+        assert_eq!(back.admitted, vec![1]);
+        // plain saves still serve checkpoint-only loads with defaults
+        let mut ck = sample();
+        ck.state.committed_batch = 200;
+        sink.save(&ck).unwrap();
+        assert_eq!(sink.load_latest().unwrap().unwrap().state.committed_batch, 200);
     }
 
     #[test]

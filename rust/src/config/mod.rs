@@ -157,6 +157,12 @@ pub struct RunConfig {
     /// from the checkpoint; profiling is skipped in favor of the
     /// manifest's flop counts. An empty/absent directory starts fresh.
     pub resume_from: Option<String>,
+    /// Admission quota: the coordinator's
+    /// [`crate::coordinator::WorkerRoster`] admits at most this many
+    /// workers (the central node is not counted); `None` = unlimited,
+    /// the historical behavior. A config whose device list already
+    /// exceeds the quota is rejected at validate time.
+    pub max_workers: Option<usize>,
 
     pub engine: Engine,
     pub seed: u64,
@@ -192,6 +198,7 @@ impl Default for RunConfig {
             lr_drops: vec![],
             checkpoint: None,
             resume_from: None,
+            max_workers: None,
             engine: Engine::FtPipeHd,
             seed: 0,
             verbose: false,
@@ -235,6 +242,14 @@ impl RunConfig {
         }
         if self.compression == Compression::Adaptive {
             self.adaptive.validate()?;
+        }
+        if let Some(q) = self.max_workers {
+            let workers = self.devices.len().saturating_sub(1);
+            if workers > q {
+                return Err(anyhow!(
+                    "max_workers {q} cannot admit the {workers} configured workers"
+                ));
+            }
         }
         Ok(())
     }
@@ -380,6 +395,9 @@ impl RunConfig {
         if let Some(s) = v.get("resume_from").and_then(|x| x.as_str()) {
             c.resume_from = Some(s.to_string());
         }
+        if let Some(x) = getu(v, "max_workers") {
+            c.max_workers = Some(x);
+        }
         if let Some(s) = v.get("engine").and_then(|x| x.as_str()) {
             c.engine = match s {
                 "ftpipehd" => Engine::FtPipeHd,
@@ -521,6 +539,20 @@ mod tests {
         // explicit null disables cleanly
         let v = json::parse(r#"{"checkpoint": null}"#).unwrap();
         assert_eq!(RunConfig::from_json(&v).unwrap().checkpoint, None);
+    }
+
+    #[test]
+    fn parse_and_validate_max_workers() {
+        let v = json::parse(r#"{"max_workers": 8}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&v).unwrap().max_workers, Some(8));
+        assert_eq!(RunConfig::default().max_workers, None);
+        // quota below the configured worker count dies at validate time
+        let v = json::parse(
+            r#"{"devices": [{"capacity":1.0},{"capacity":2.0},{"capacity":2.0}],
+                "max_workers": 1}"#,
+        )
+        .unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
     }
 
     #[test]

@@ -14,8 +14,9 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use crate::checkpoint::CheckpointSink;
+use crate::checkpoint::{CoordinatorStore, LeaderState};
 use crate::config::{Engine, RunConfig};
+use crate::coordinator::core::{PhaseMachine, WorkerRoster};
 use crate::data::DataSource;
 use crate::fault::FaultDetector;
 use crate::manifest::{Dtype, Manifest};
@@ -61,11 +62,21 @@ pub(crate) struct Central {
     // fault plan
     pub(crate) fault_armed: bool,
     pub(crate) last_checkpoint: u64,
-    /// Central-node checkpoint destination (paper §III-E) — the disk
-    /// sink in real runs, None when checkpointing is off. The same seam
-    /// the deterministic harness fills with its in-memory sink.
-    pub(crate) sink: Option<Box<dyn CheckpointSink>>,
+    /// Coordinator state store (paper §III-E plus DESIGN.md §12) — the
+    /// disk store in real runs, None when checkpointing is off. The same
+    /// seam the deterministic harness fills with its in-memory store.
+    pub(crate) store: Option<Box<dyn CoordinatorStore>>,
     pub(crate) data: Box<dyn DataSource>,
+    /// The shared phase machine ([`crate::coordinator::core`]): this
+    /// driver feeds it observations and executes the effects it returns;
+    /// `sim::runner` drives the very same transitions.
+    pub(crate) machine: PhaseMachine,
+    /// Worker admission roster, capacity-bounded by `cfg.max_workers`.
+    pub(crate) roster: WorkerRoster,
+    /// Replica version epoch (DESIGN.md §9): bumped once per coordinator
+    /// restart so a stale pre-restart backup can never outrank a
+    /// post-restart push in the replica version race.
+    pub(crate) replica_epoch: u64,
 }
 
 impl Central {
@@ -377,22 +388,37 @@ impl Central {
     // checkpointing (paper §III-E)
     // ------------------------------------------------------------------
 
-    /// Save everything the central node can see (its own stage + the
-    /// newest global/chain replicas) through the [`CheckpointSink`].
-    /// Completeness of the worker stages depends on the replication
-    /// period — exactly the paper's §III-E tradeoff. The snapshot itself
-    /// is [`StageWorker::snapshot_checkpoint`], shared with the
-    /// deterministic harness.
+    /// Save everything the coordinator holds — its own stage + the newest
+    /// global/chain replicas, measured bandwidths, the adaptive tier, the
+    /// replica epoch, and the admission roster — through the
+    /// [`CoordinatorStore`]. Completeness of the worker stages depends on
+    /// the replication period — exactly the paper's §III-E tradeoff. The
+    /// snapshot itself is [`StageWorker::snapshot_checkpoint`], shared
+    /// with the deterministic harness.
     fn save_checkpoint(&mut self, epoch: u64) -> Result<()> {
         // single gate, before any snapshot work is done
-        let Some(sink) = self.sink.as_mut() else {
+        let Some(store) = self.store.as_mut() else {
             return Ok(());
         };
-        let ck = self.worker.snapshot_checkpoint(self.completed, epoch);
-        sink.save(&ck)?;
+        let checkpoint = self.worker.snapshot_checkpoint(self.completed, epoch);
+        let n_blocks = checkpoint.weights.len();
+        let (worker_quota, admitted) = self.roster.snapshot();
+        let st = LeaderState {
+            checkpoint,
+            measured_bw: self.measured_bw.clone(),
+            tier: self
+                .adaptive
+                .as_ref()
+                .map(|p| p.tier())
+                .unwrap_or(crate::net::quant::Tier::Off),
+            replica_epoch: self.replica_epoch,
+            worker_quota,
+            admitted,
+        };
+        store.save_leader(&st)?;
         self.record.event(
             &self.clock,
-            format!("checkpoint at batch {} ({} blocks)", self.completed, ck.weights.len()),
+            format!("checkpoint at batch {} ({} blocks)", self.completed, n_blocks),
         );
         Ok(())
     }
@@ -434,6 +460,8 @@ impl Central {
             bw_probe_bytes: self.cfg.bw_probe_bytes,
             tier_floor: self.cfg.adaptive.tier_floor,
             tier_ceiling: self.cfg.adaptive.tier_ceiling,
+            replica_epoch: self.replica_epoch,
+            worker_quota: self.roster.quota_wire(),
         }
     }
 
@@ -545,6 +573,9 @@ impl Central {
         }
 
         self.record.event(&self.clock, "training done".to_string());
+        // the machine's transition log is the conformance artifact shared
+        // with the deterministic harness (ScenarioOutcome::phase_log)
+        self.record.phase_log = self.machine.take_log();
         Ok(())
     }
 

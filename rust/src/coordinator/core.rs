@@ -1,0 +1,855 @@
+//! Transport-agnostic coordinator core (DESIGN.md §12).
+//!
+//! FTPipeHD's central node walks one lifecycle regardless of transport:
+//! profile → train → (drain → repartition | probe → redistribute), with a
+//! kill/rejoin detour when the coordinator itself dies (paper §III-E/F).
+//! Before this module that lifecycle existed twice — ad hoc in the
+//! threaded coordinator loops and as a private `Phase` enum in the
+//! scenario runner — and the copies drifted (PR 5 shipped a missing tier
+//! re-broadcast that only one copy had). [`PhaseMachine`] is now the
+//! single copy: a pure transition function over [`PhaseInput`]s that
+//! returns [`PhaseEffect`]s for a driver to execute against its own
+//! transport. The threaded coordinator and the discrete-event runner are
+//! thin drivers; neither owns any phase logic.
+//!
+//! Design rules:
+//!
+//! * `step` is **pure** over machine state: no clocks, no I/O, no
+//!   randomness. Time enters only through input fields, which is what
+//!   keeps the scenario runner's byte-identical run-twice property
+//!   trivially true.
+//! * Illegal transitions are **unrepresentable as state changes**: a
+//!   [`PhaseInput::CentralRestarted`] outside [`CoordinatorPhase::Down`]
+//!   returns [`IllegalTransition`] and leaves the machine untouched
+//!   (drivers surface it as an "ignored" trace line, exactly the old
+//!   validate-time behavior).
+//! * Late or stray **recording inputs are absorbed**: a `ProbeAck`
+//!   arriving outside `Probing` is `Ok` with no effects — matching how
+//!   both drivers always treated stragglers.
+//! * Every phase change (and every non-empty effect list) appends one
+//!   deterministic line to an internal log, which the cross-driver
+//!   conformance test compares between the threaded coordinator and the
+//!   simulator.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::time::Duration;
+
+use crate::net::message::DeviceId;
+
+/// Public phase discriminant of the coordinator lifecycle.
+///
+/// `Idle → Profiling → Training` at bootstrap, then `Training` is the
+/// steady state. Faults detour through `Probing → Redistributing`;
+/// scheduled repartitions through `Draining → Redistributing`. A
+/// coordinator kill parks the machine in `Down` until a restart walks
+/// `Rejoining` back to `Training`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoordinatorPhase {
+    /// Constructed, nothing started yet.
+    Idle,
+    /// Measuring per-device block times (paper §III-B).
+    Profiling,
+    /// Steady-state pipeline training (the fault detector is armed).
+    Training,
+    /// Injection paused; waiting for in-flight batches to land before a
+    /// scheduled dynamic repartition (paper §III-D).
+    Draining,
+    /// A fault was detected; probing workers for liveness (paper §III-F).
+    Probing,
+    /// Weight redistribution in progress (paper Algorithm 1).
+    Redistributing,
+    /// The coordinator itself is dead (checkpoint-restart families).
+    Down,
+    /// Restarted coordinator collecting `WorkerState` answers before
+    /// resuming from its checkpoint (paper §III-E).
+    Rejoining,
+}
+
+impl fmt::Display for CoordinatorPhase {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // The one phase-name table (satellite: this replaces the string
+        // tables both drivers used to carry).
+        f.write_str(match self {
+            CoordinatorPhase::Idle => "idle",
+            CoordinatorPhase::Profiling => "profiling",
+            CoordinatorPhase::Training => "training",
+            CoordinatorPhase::Draining => "draining",
+            CoordinatorPhase::Probing => "probing",
+            CoordinatorPhase::Redistributing => "redistributing",
+            CoordinatorPhase::Down => "central-down",
+            CoordinatorPhase::Rejoining => "rejoining",
+        })
+    }
+}
+
+/// Why a redistribution was started — a fault (probe resolution) or a
+/// scheduled dynamic repartition. Drivers use it at commit time: fault
+/// commits reset the pipeline to the committed frontier, dynamic commits
+/// just advance the repartition schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RedistReason {
+    /// Entered from probe resolution after a detected fault.
+    Fault,
+    /// Entered from the scheduled dynamic-repartition drain.
+    Dynamic,
+}
+
+/// Timing knobs of the machine — how long to wait for probe answers and
+/// for a redistribution to finish before the escape hatches fire.
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseConfig {
+    /// Probe/rejoin answer window: a `Poll` past `entered + probe_window`
+    /// resolves with whatever answered.
+    pub probe_window: Duration,
+    /// Redistribution deadline: a `Poll` past it aborts the
+    /// redistribution (the driver decides whether to re-probe or bail).
+    pub redist_window: Duration,
+}
+
+impl PhaseConfig {
+    /// The threaded coordinator's historical windows: 1500 ms probe
+    /// collection, 60 s redistribution deadline.
+    pub fn threaded() -> PhaseConfig {
+        PhaseConfig {
+            probe_window: Duration::from_millis(1500),
+            redist_window: Duration::from_secs(60),
+        }
+    }
+}
+
+/// One event fed to [`PhaseMachine::step`]. Recording inputs (`ProbeAck`,
+/// `FetchDone`, `WorkerStateReport`) are absorbed when they arrive in the
+/// wrong phase; lifecycle inputs (`CentralRestarted`, …) error instead.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PhaseInput {
+    /// Bootstrap is about to profile the fleet (fresh start only).
+    StartProfiling,
+    /// Bootstrap finished; the pipeline is injecting batches.
+    TrainingStarted,
+    /// A worker answered a probe (`fresh` = it restarted stateless).
+    ProbeAck {
+        /// Answering device.
+        id: DeviceId,
+        /// True when the worker rebooted and lost its stage state.
+        fresh: bool,
+    },
+    /// A worker finished fetching its new range during redistribution.
+    FetchDone {
+        /// Reporting device.
+        id: DeviceId,
+    },
+    /// A worker answered the restarted coordinator's handshake.
+    WorkerStateReport {
+        /// Answering device.
+        id: DeviceId,
+        /// Its committed backward frontier.
+        committed_bwd: i64,
+        /// True when the worker holds no stage state.
+        fresh: bool,
+    },
+    /// The gradient-timeout detector fired for `overdue`.
+    FaultDetected {
+        /// First overdue batch id.
+        overdue: u64,
+        /// Current driver time.
+        now: Duration,
+    },
+    /// Stop injecting; a scheduled repartition is due.
+    DrainForRepartition,
+    /// The driver sent `Repartition` to `expect` and awaits `FetchDone`s.
+    RedistributionStarted {
+        /// Devices that must report `FetchDone` before commit.
+        expect: BTreeSet<DeviceId>,
+        /// Why this redistribution runs (decides commit behavior).
+        reason: RedistReason,
+        /// Current driver time.
+        now: Duration,
+    },
+    /// Periodic driver poll; carries everything time-based decisions
+    /// need so `step` itself never reads a clock.
+    Poll {
+        /// Current driver time.
+        now: Duration,
+        /// Fault detector verdict (first overdue batch, if any).
+        overdue: Option<u64>,
+        /// In-flight batch count (drain completion).
+        inflight: usize,
+        /// Live peer count (probe/rejoin completion).
+        peers: usize,
+        /// Whether the coordinator's own stage finished its fetches.
+        local_fetch_done: bool,
+    },
+    /// The coordinator process died (scripted kill).
+    KillCentral,
+    /// The coordinator restarted from its checkpoint.
+    CentralRestarted {
+        /// Current driver time.
+        now: Duration,
+    },
+}
+
+impl PhaseInput {
+    /// Stable kind label used in the transition log.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            PhaseInput::StartProfiling => "start-profiling",
+            PhaseInput::TrainingStarted => "training-started",
+            PhaseInput::ProbeAck { .. } => "probe-ack",
+            PhaseInput::FetchDone { .. } => "fetch-done",
+            PhaseInput::WorkerStateReport { .. } => "worker-state",
+            PhaseInput::FaultDetected { .. } => "fault-detected",
+            PhaseInput::DrainForRepartition => "drain",
+            PhaseInput::RedistributionStarted { .. } => "redistribution-started",
+            PhaseInput::Poll { .. } => "poll",
+            PhaseInput::KillCentral => "kill-central",
+            PhaseInput::CentralRestarted { .. } => "central-restarted",
+        }
+    }
+}
+
+/// What a driver must do after a transition. Effects carry the data the
+/// machine accumulated (probe answers, fetch roster) so the driver never
+/// reaches into machine internals.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PhaseEffect {
+    /// Broadcast probes for `overdue` and wake again at `deadline`.
+    SendProbes {
+        /// First overdue batch id (for the driver's fault trace).
+        overdue: u64,
+        /// Absolute time after which the probe resolves regardless.
+        deadline: Duration,
+    },
+    /// Probe window closed: classify `acks` into cases 1/2/3.
+    ResolveProbe {
+        /// Collected answers: device → fresh.
+        acks: BTreeMap<DeviceId, bool>,
+    },
+    /// Rejoin window closed: reconcile `acks` against the checkpoint.
+    ResolveRejoin {
+        /// Collected answers: device → (committed backward, fresh).
+        acks: BTreeMap<DeviceId, (i64, bool)>,
+    },
+    /// Every expected `FetchDone` arrived: send `Commit` to `expect`.
+    CommitRedistribution {
+        /// Devices that took part (and must receive `Commit`).
+        expect: BTreeSet<DeviceId>,
+        /// Why the redistribution ran (fault vs dynamic).
+        reason: RedistReason,
+    },
+    /// The redistribution deadline passed without completion.
+    AbortRedistribution,
+    /// The drain finished with no fault: compute the new partition.
+    RunDynamicRepartition,
+}
+
+impl PhaseEffect {
+    /// Stable kind label used in the transition log.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            PhaseEffect::SendProbes { .. } => "send-probes",
+            PhaseEffect::ResolveProbe { .. } => "resolve-probe",
+            PhaseEffect::ResolveRejoin { .. } => "resolve-rejoin",
+            PhaseEffect::CommitRedistribution { .. } => "commit-redistribution",
+            PhaseEffect::AbortRedistribution => "abort-redistribution",
+            PhaseEffect::RunDynamicRepartition => "run-dynamic-repartition",
+        }
+    }
+}
+
+/// A lifecycle input arrived in a phase where it is not a legal
+/// transition. The machine state is untouched when this is returned.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IllegalTransition {
+    /// Phase the machine was (and still is) in.
+    pub from: CoordinatorPhase,
+    /// Kind label of the rejected input.
+    pub input: &'static str,
+}
+
+impl fmt::Display for IllegalTransition {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "illegal coordinator transition: {} in phase {}", self.input, self.from)
+    }
+}
+
+impl std::error::Error for IllegalTransition {}
+
+/// Private per-phase state: the discriminants of [`CoordinatorPhase`]
+/// plus the data the in-between phases accumulate.
+#[derive(Debug)]
+enum State {
+    Idle,
+    Profiling,
+    Training,
+    Draining,
+    Probing { acks: BTreeMap<DeviceId, bool>, deadline: Duration },
+    Redistributing {
+        expect: BTreeSet<DeviceId>,
+        done: BTreeSet<DeviceId>,
+        deadline: Duration,
+        reason: RedistReason,
+    },
+    Down,
+    Rejoining { acks: BTreeMap<DeviceId, (i64, bool)>, deadline: Duration },
+}
+
+impl State {
+    fn phase(&self) -> CoordinatorPhase {
+        match self {
+            State::Idle => CoordinatorPhase::Idle,
+            State::Profiling => CoordinatorPhase::Profiling,
+            State::Training => CoordinatorPhase::Training,
+            State::Draining => CoordinatorPhase::Draining,
+            State::Probing { .. } => CoordinatorPhase::Probing,
+            State::Redistributing { .. } => CoordinatorPhase::Redistributing,
+            State::Down => CoordinatorPhase::Down,
+            State::Rejoining { .. } => CoordinatorPhase::Rejoining,
+        }
+    }
+}
+
+/// The shared coordinator phase state machine. See the module docs for
+/// the contract; see [`PhaseInput`]/[`PhaseEffect`] for the API surface.
+#[derive(Debug)]
+pub struct PhaseMachine {
+    cfg: PhaseConfig,
+    state: State,
+    log: Vec<String>,
+}
+
+impl PhaseMachine {
+    /// A fresh coordinator: starts in [`CoordinatorPhase::Idle`].
+    pub fn new(cfg: PhaseConfig) -> PhaseMachine {
+        PhaseMachine { cfg, state: State::Idle, log: Vec::new() }
+    }
+
+    /// A coordinator resuming leadership from a store: starts in
+    /// [`CoordinatorPhase::Down`], so the only legal way forward is
+    /// [`PhaseInput::CentralRestarted`] → `Rejoining` — the restart
+    /// handshake cannot be skipped by construction.
+    pub fn resuming(cfg: PhaseConfig) -> PhaseMachine {
+        PhaseMachine { cfg, state: State::Down, log: Vec::new() }
+    }
+
+    /// Current phase discriminant.
+    pub fn phase(&self) -> CoordinatorPhase {
+        self.state.phase()
+    }
+
+    /// Timing configuration the machine was built with.
+    pub fn config(&self) -> PhaseConfig {
+        self.cfg
+    }
+
+    /// The transition log so far: one line per phase change or non-empty
+    /// effect list (`"<input>: <from>-><to> [<effects>]"`). Recording
+    /// inputs that only accumulate data do not log, so the log stays
+    /// bounded by the number of real transitions.
+    pub fn log(&self) -> &[String] {
+        &self.log
+    }
+
+    /// Drain the transition log (drivers move it into their run record).
+    pub fn take_log(&mut self) -> Vec<String> {
+        std::mem::take(&mut self.log)
+    }
+
+    /// Feed one input; returns the phase after the transition and the
+    /// effects the driver must execute, or [`IllegalTransition`] with the
+    /// machine untouched. Deterministic: the same input sequence always
+    /// yields the same phase trace and effect sequence.
+    pub fn step(
+        &mut self,
+        input: PhaseInput,
+    ) -> Result<(CoordinatorPhase, Vec<PhaseEffect>), IllegalTransition> {
+        let before = self.phase();
+        let kind = input.kind();
+        let illegal = || IllegalTransition { from: before, input: kind };
+        let mut effects: Vec<PhaseEffect> = Vec::new();
+        match input {
+            PhaseInput::StartProfiling => match self.state {
+                State::Idle => self.state = State::Profiling,
+                _ => return Err(illegal()),
+            },
+            PhaseInput::TrainingStarted => match self.state {
+                State::Idle | State::Profiling => self.state = State::Training,
+                _ => return Err(illegal()),
+            },
+            PhaseInput::ProbeAck { id, fresh } => {
+                if let State::Probing { acks, .. } = &mut self.state {
+                    acks.insert(id, fresh);
+                } // absorbed elsewhere: late acks after resolution
+            }
+            PhaseInput::FetchDone { id } => {
+                if let State::Redistributing { done, .. } = &mut self.state {
+                    done.insert(id);
+                } // absorbed elsewhere: late FetchDone after commit/abort
+            }
+            PhaseInput::WorkerStateReport { id, committed_bwd, fresh } => {
+                if let State::Rejoining { acks, .. } = &mut self.state {
+                    acks.insert(id, (committed_bwd, fresh));
+                } // absorbed elsewhere: late answers after rejoin resolved
+            }
+            PhaseInput::FaultDetected { overdue, now } => match self.state {
+                State::Training | State::Draining => {
+                    let deadline = now + self.cfg.probe_window;
+                    self.state = State::Probing { acks: BTreeMap::new(), deadline };
+                    effects.push(PhaseEffect::SendProbes { overdue, deadline });
+                }
+                _ => return Err(illegal()),
+            },
+            PhaseInput::DrainForRepartition => match self.state {
+                State::Training => self.state = State::Draining,
+                _ => return Err(illegal()),
+            },
+            PhaseInput::RedistributionStarted { expect, reason, now } => match self.state {
+                State::Training => {
+                    self.state = State::Redistributing {
+                        expect,
+                        done: BTreeSet::new(),
+                        deadline: now + self.cfg.redist_window,
+                        reason,
+                    };
+                }
+                _ => return Err(illegal()),
+            },
+            PhaseInput::KillCentral => match self.state {
+                State::Down => return Err(illegal()),
+                _ => self.state = State::Down,
+            },
+            PhaseInput::CentralRestarted { now } => match self.state {
+                State::Down => {
+                    self.state = State::Rejoining {
+                        acks: BTreeMap::new(),
+                        deadline: now + self.cfg.probe_window,
+                    };
+                }
+                _ => return Err(illegal()),
+            },
+            PhaseInput::Poll { now, overdue, inflight, peers, local_fetch_done } => {
+                let cur = std::mem::replace(&mut self.state, State::Down);
+                let (next, eff) =
+                    Self::poll(cur, &self.cfg, now, overdue, inflight, peers, local_fetch_done);
+                self.state = next;
+                effects.extend(eff);
+            }
+        }
+        let after = self.phase();
+        if after != before || !effects.is_empty() {
+            let mut line = format!("{kind}: {before}->{after}");
+            if !effects.is_empty() {
+                line.push_str(" [");
+                line.push_str(
+                    &effects.iter().map(PhaseEffect::kind).collect::<Vec<_>>().join(" "),
+                );
+                line.push(']');
+            }
+            self.log.push(line);
+        }
+        Ok((after, effects))
+    }
+
+    /// The `Poll` decision table, pure over the owned state. Decision
+    /// order matches the historical drivers exactly: an overdue batch
+    /// outranks drain completion; completion outranks deadlines.
+    fn poll(
+        state: State,
+        cfg: &PhaseConfig,
+        now: Duration,
+        overdue: Option<u64>,
+        inflight: usize,
+        peers: usize,
+        local_fetch_done: bool,
+    ) -> (State, Vec<PhaseEffect>) {
+        let probe = |b: u64| {
+            let deadline = now + cfg.probe_window;
+            (
+                State::Probing { acks: BTreeMap::new(), deadline },
+                vec![PhaseEffect::SendProbes { overdue: b, deadline }],
+            )
+        };
+        match state {
+            State::Idle | State::Profiling | State::Down => (state, vec![]),
+            State::Training => match overdue {
+                Some(b) => probe(b),
+                None => (State::Training, vec![]),
+            },
+            State::Draining => match overdue {
+                Some(b) => probe(b),
+                None if inflight == 0 => {
+                    (State::Training, vec![PhaseEffect::RunDynamicRepartition])
+                }
+                None => (State::Draining, vec![]),
+            },
+            State::Probing { acks, deadline } => {
+                if acks.len() >= peers || now >= deadline {
+                    (State::Training, vec![PhaseEffect::ResolveProbe { acks }])
+                } else {
+                    (State::Probing { acks, deadline }, vec![])
+                }
+            }
+            State::Rejoining { acks, deadline } => {
+                if acks.len() >= peers || now >= deadline {
+                    (State::Training, vec![PhaseEffect::ResolveRejoin { acks }])
+                } else {
+                    (State::Rejoining { acks, deadline }, vec![])
+                }
+            }
+            State::Redistributing { expect, done, deadline, reason } => {
+                if done.is_superset(&expect) && local_fetch_done {
+                    (
+                        State::Training,
+                        vec![PhaseEffect::CommitRedistribution { expect, reason }],
+                    )
+                } else if now >= deadline {
+                    (State::Training, vec![PhaseEffect::AbortRedistribution])
+                } else {
+                    (State::Redistributing { expect, done, deadline, reason }, vec![])
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Worker admission
+// ---------------------------------------------------------------------
+
+/// Why an admission request was rejected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// The roster is at its capacity quota.
+    Full {
+        /// The configured quota.
+        capacity: usize,
+    },
+    /// The device was explicitly evicted; it needs
+    /// [`WorkerRoster::readmit`], not a plain admit.
+    Evicted,
+}
+
+impl fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdmissionError::Full { capacity } => {
+                write!(f, "roster full (capacity {capacity})")
+            }
+            AdmissionError::Evicted => f.write_str("device was evicted; readmit required"),
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// Explicit worker membership with a capacity quota — replacing the
+/// implicit "whoever answered the probe" membership. Admission is
+/// explicit ([`admit`](WorkerRoster::admit)), removal is explicit
+/// ([`evict`](WorkerRoster::evict)), and an evicted device can only come
+/// back through [`readmit`](WorkerRoster::readmit). The default quota is
+/// unlimited, so existing deployments see no behavior change; the quota
+/// travels in `TrainInit::worker_quota` (0 = unlimited) without touching
+/// the Off-mode wire-byte pricing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkerRoster {
+    capacity: Option<usize>,
+    admitted: BTreeSet<DeviceId>,
+    evicted: BTreeSet<DeviceId>,
+}
+
+impl Default for WorkerRoster {
+    fn default() -> Self {
+        WorkerRoster::unlimited()
+    }
+}
+
+impl WorkerRoster {
+    /// A roster with no capacity quota.
+    pub fn unlimited() -> WorkerRoster {
+        WorkerRoster { capacity: None, admitted: BTreeSet::new(), evicted: BTreeSet::new() }
+    }
+
+    /// A roster admitting at most `cap` workers at a time.
+    pub fn with_capacity(cap: usize) -> WorkerRoster {
+        WorkerRoster {
+            capacity: Some(cap),
+            admitted: BTreeSet::new(),
+            evicted: BTreeSet::new(),
+        }
+    }
+
+    /// The quota, if any.
+    pub fn capacity(&self) -> Option<usize> {
+        self.capacity
+    }
+
+    /// Wire encoding of the quota for `TrainInit` (0 = unlimited).
+    pub fn quota_wire(&self) -> u64 {
+        self.capacity.map(|c| c as u64).unwrap_or(0)
+    }
+
+    /// Admit a device. Idempotent for already-admitted devices; rejects
+    /// evicted devices and quota overflows.
+    pub fn admit(&mut self, id: DeviceId) -> Result<(), AdmissionError> {
+        if self.admitted.contains(&id) {
+            return Ok(());
+        }
+        if self.evicted.contains(&id) {
+            return Err(AdmissionError::Evicted);
+        }
+        if let Some(cap) = self.capacity {
+            if self.admitted.len() >= cap {
+                return Err(AdmissionError::Full { capacity: cap });
+            }
+        }
+        self.admitted.insert(id);
+        Ok(())
+    }
+
+    /// Remove a device from the roster (dead or misbehaving). Returns
+    /// whether it was admitted.
+    pub fn evict(&mut self, id: DeviceId) -> bool {
+        let was = self.admitted.remove(&id);
+        self.evicted.insert(id);
+        was
+    }
+
+    /// Clear an eviction and admit the device again (a restarted worker
+    /// answering a probe fresh). Subject to the same quota.
+    pub fn readmit(&mut self, id: DeviceId) -> Result<(), AdmissionError> {
+        self.evicted.remove(&id);
+        self.admit(id)
+    }
+
+    /// Whether `id` is currently admitted.
+    pub fn is_admitted(&self, id: DeviceId) -> bool {
+        self.admitted.contains(&id)
+    }
+
+    /// Currently admitted devices, ascending.
+    pub fn admitted(&self) -> impl Iterator<Item = DeviceId> + '_ {
+        self.admitted.iter().copied()
+    }
+
+    /// Number of admitted devices.
+    pub fn len(&self) -> usize {
+        self.admitted.len()
+    }
+
+    /// True when no device is admitted.
+    pub fn is_empty(&self) -> bool {
+        self.admitted.is_empty()
+    }
+
+    /// Persistence snapshot: `(quota_wire, admitted devices)`.
+    pub fn snapshot(&self) -> (u64, Vec<DeviceId>) {
+        (self.quota_wire(), self.admitted.iter().copied().collect())
+    }
+
+    /// Rebuild from a [`snapshot`](WorkerRoster::snapshot) (evictions are
+    /// not persisted: a restart is a clean slate, matching the replica
+    /// epoch bump that already invalidates pre-restart state).
+    pub fn restore(quota_wire: u64, admitted: &[DeviceId]) -> WorkerRoster {
+        WorkerRoster {
+            capacity: (quota_wire > 0).then_some(quota_wire as usize),
+            admitted: admitted.iter().copied().collect(),
+            evicted: BTreeSet::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> PhaseConfig {
+        PhaseConfig {
+            probe_window: Duration::from_millis(100),
+            redist_window: Duration::from_millis(500),
+        }
+    }
+
+    fn ms(x: u64) -> Duration {
+        Duration::from_millis(x)
+    }
+
+    fn poll(now: Duration, overdue: Option<u64>, inflight: usize, peers: usize) -> PhaseInput {
+        PhaseInput::Poll { now, overdue, inflight, peers, local_fetch_done: true }
+    }
+
+    #[test]
+    fn case3_fault_walks_probe_then_redistribution() {
+        let mut m = PhaseMachine::new(cfg());
+        m.step(PhaseInput::TrainingStarted).unwrap();
+        let (p, eff) = m.step(poll(ms(10), Some(7), 2, 2)).unwrap();
+        assert_eq!(p, CoordinatorPhase::Probing);
+        assert!(matches!(eff[0], PhaseEffect::SendProbes { overdue: 7, .. }));
+        // one of two peers answers; the probe stays open
+        m.step(PhaseInput::ProbeAck { id: 1, fresh: false }).unwrap();
+        let (p, eff) = m.step(poll(ms(20), None, 2, 2)).unwrap();
+        assert_eq!((p, eff.len()), (CoordinatorPhase::Probing, 0));
+        // the deadline closes it with the partial answer set
+        let (p, eff) = m.step(poll(ms(200), None, 2, 2)).unwrap();
+        assert_eq!(p, CoordinatorPhase::Training);
+        let PhaseEffect::ResolveProbe { acks } = &eff[0] else { panic!("{eff:?}") };
+        assert_eq!(acks.get(&1), Some(&false));
+        assert_eq!(acks.len(), 1);
+        // the driver classifies case 3 and starts a redistribution
+        let expect: BTreeSet<DeviceId> = [1].into();
+        m.step(PhaseInput::RedistributionStarted {
+            expect: expect.clone(),
+            reason: RedistReason::Fault,
+            now: ms(200),
+        })
+        .unwrap();
+        m.step(PhaseInput::FetchDone { id: 1 }).unwrap();
+        let (p, eff) = m.step(poll(ms(210), None, 0, 2)).unwrap();
+        assert_eq!(p, CoordinatorPhase::Training);
+        assert_eq!(
+            eff[0],
+            PhaseEffect::CommitRedistribution { expect, reason: RedistReason::Fault }
+        );
+    }
+
+    #[test]
+    fn drain_completes_into_dynamic_repartition() {
+        let mut m = PhaseMachine::new(cfg());
+        m.step(PhaseInput::TrainingStarted).unwrap();
+        m.step(PhaseInput::DrainForRepartition).unwrap();
+        // still draining while batches are in flight
+        let (p, eff) = m.step(poll(ms(1), None, 3, 2)).unwrap();
+        assert_eq!((p, eff.len()), (CoordinatorPhase::Draining, 0));
+        let (p, eff) = m.step(poll(ms(2), None, 0, 2)).unwrap();
+        assert_eq!(p, CoordinatorPhase::Training);
+        assert_eq!(eff, vec![PhaseEffect::RunDynamicRepartition]);
+    }
+
+    #[test]
+    fn fault_during_drain_outranks_drain_completion() {
+        let mut m = PhaseMachine::new(cfg());
+        m.step(PhaseInput::TrainingStarted).unwrap();
+        m.step(PhaseInput::DrainForRepartition).unwrap();
+        let (p, eff) = m.step(poll(ms(5), Some(3), 0, 2)).unwrap();
+        assert_eq!(p, CoordinatorPhase::Probing);
+        assert!(matches!(eff[0], PhaseEffect::SendProbes { overdue: 3, .. }));
+    }
+
+    #[test]
+    fn redistribution_deadline_aborts() {
+        let mut m = PhaseMachine::new(cfg());
+        m.step(PhaseInput::TrainingStarted).unwrap();
+        m.step(PhaseInput::RedistributionStarted {
+            expect: [1, 2].into(),
+            reason: RedistReason::Dynamic,
+            now: ms(0),
+        })
+        .unwrap();
+        m.step(PhaseInput::FetchDone { id: 1 }).unwrap();
+        // past the 500 ms window with worker 2 silent
+        let (p, eff) = m.step(poll(ms(600), None, 0, 2)).unwrap();
+        assert_eq!(p, CoordinatorPhase::Training);
+        assert_eq!(eff, vec![PhaseEffect::AbortRedistribution]);
+    }
+
+    #[test]
+    fn illegal_transitions_leave_the_machine_untouched() {
+        let mut m = PhaseMachine::new(cfg());
+        m.step(PhaseInput::TrainingStarted).unwrap();
+        let err = m.step(PhaseInput::CentralRestarted { now: ms(0) }).unwrap_err();
+        assert_eq!(err.from, CoordinatorPhase::Training);
+        assert_eq!(err.input, "central-restarted");
+        assert_eq!(m.phase(), CoordinatorPhase::Training);
+        // kill is legal from any live phase, but not twice
+        m.step(PhaseInput::KillCentral).unwrap();
+        assert_eq!(m.phase(), CoordinatorPhase::Down);
+        assert!(m.step(PhaseInput::KillCentral).is_err());
+        // and the only way out of Down is a restart
+        assert!(m.step(PhaseInput::TrainingStarted).is_err());
+        let (p, _) = m.step(PhaseInput::CentralRestarted { now: ms(0) }).unwrap();
+        assert_eq!(p, CoordinatorPhase::Rejoining);
+    }
+
+    #[test]
+    fn stray_recording_inputs_are_absorbed_silently() {
+        let mut m = PhaseMachine::new(cfg());
+        m.step(PhaseInput::TrainingStarted).unwrap();
+        let logged = m.log().len();
+        m.step(PhaseInput::ProbeAck { id: 1, fresh: true }).unwrap();
+        m.step(PhaseInput::FetchDone { id: 1 }).unwrap();
+        m.step(PhaseInput::WorkerStateReport { id: 1, committed_bwd: 3, fresh: false })
+            .unwrap();
+        assert_eq!(m.phase(), CoordinatorPhase::Training);
+        assert_eq!(m.log().len(), logged, "absorbed inputs must not log");
+    }
+
+    #[test]
+    fn rejoin_collects_worker_state_and_resolves() {
+        let mut m = PhaseMachine::resuming(cfg());
+        assert_eq!(m.phase(), CoordinatorPhase::Down);
+        m.step(PhaseInput::CentralRestarted { now: ms(0) }).unwrap();
+        m.step(PhaseInput::WorkerStateReport { id: 1, committed_bwd: 9, fresh: false })
+            .unwrap();
+        m.step(PhaseInput::WorkerStateReport { id: 2, committed_bwd: -1, fresh: true })
+            .unwrap();
+        let (p, eff) = m.step(poll(ms(10), None, 0, 2)).unwrap();
+        assert_eq!(p, CoordinatorPhase::Training);
+        let PhaseEffect::ResolveRejoin { acks } = &eff[0] else { panic!("{eff:?}") };
+        assert_eq!(acks.get(&1), Some(&(9, false)));
+        assert_eq!(acks.get(&2), Some(&(-1, true)));
+    }
+
+    #[test]
+    fn log_lines_are_deterministic_kind_only_entries() {
+        let mut m = PhaseMachine::new(cfg());
+        m.step(PhaseInput::StartProfiling).unwrap();
+        m.step(PhaseInput::TrainingStarted).unwrap();
+        m.step(poll(ms(1), Some(4), 1, 1)).unwrap();
+        m.step(PhaseInput::ProbeAck { id: 1, fresh: false }).unwrap();
+        m.step(poll(ms(2), None, 1, 1)).unwrap();
+        assert_eq!(
+            m.log(),
+            &[
+                "start-profiling: idle->profiling",
+                "training-started: profiling->training",
+                "poll: training->probing [send-probes]",
+                "poll: probing->training [resolve-probe]",
+            ]
+        );
+    }
+
+    #[test]
+    fn roster_enforces_quota_and_eviction() {
+        let mut r = WorkerRoster::with_capacity(2);
+        r.admit(1).unwrap();
+        r.admit(2).unwrap();
+        assert_eq!(r.admit(2), Ok(()), "admit is idempotent");
+        assert_eq!(r.admit(3), Err(AdmissionError::Full { capacity: 2 }));
+        assert!(r.evict(1));
+        assert_eq!(r.admit(1), Err(AdmissionError::Evicted));
+        r.readmit(1).unwrap();
+        assert!(r.is_admitted(1));
+        assert_eq!(r.len(), 2);
+        // unlimited roster never fills
+        let mut u = WorkerRoster::unlimited();
+        for d in 0..100 {
+            u.admit(d).unwrap();
+        }
+        assert_eq!(u.quota_wire(), 0);
+    }
+
+    #[test]
+    fn roster_snapshot_roundtrips() {
+        let mut r = WorkerRoster::with_capacity(8);
+        r.admit(1).unwrap();
+        r.admit(5).unwrap();
+        r.evict(5);
+        let (quota, admitted) = r.snapshot();
+        assert_eq!((quota, admitted.clone()), (8, vec![1]));
+        let back = WorkerRoster::restore(quota, &admitted);
+        assert_eq!(back.capacity(), Some(8));
+        assert!(back.is_admitted(1));
+        // evictions are not persisted: the restored roster can admit 5
+        let mut back = back;
+        back.admit(5).unwrap();
+    }
+}

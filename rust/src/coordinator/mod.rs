@@ -1,6 +1,9 @@
 //! The central-node coordinator, decomposed into phases that share one
 //! event vocabulary ([`crate::pipeline::Event`]):
 //!
+//! - [`core`] — the transport-agnostic phase state machine
+//!   ([`CoordinatorPhase`], `PhaseMachine`) plus worker admission
+//!   (`WorkerRoster`), shared with the scenario runner (DESIGN.md §12)
 //! - `offline` — §III-B bootstrap: spawn simulated devices, profile the
 //!   model, initial capacity-blind partition, readiness barrier,
 //!   training-init broadcast, warm-start weight push
@@ -11,12 +14,18 @@
 //!   handler's three cases, both funneling into the shared
 //!   `Repartition -> fetch -> FetchDone -> Commit` protocol
 //!
+//! Both the threaded driver here and `sim::runner` execute
+//! [`core::PhaseEffect`]s against their own transports; neither carries
+//! phase logic of its own.
+//!
 //! [`run_sim_full`] chains the phases in-process: one thread per
 //! simulated device (each with its own PJRT engine), the bandwidth-
 //! modeled [`crate::net::sim::SimNet`], and the central node driving
 //! training from the calling thread. Baseline engines (PipeDream /
 //! ResPipe / single-device / sync) reuse the same driver with features
 //! toggled — see [`crate::config::Engine`].
+
+pub mod core;
 
 mod central;
 mod offline;
@@ -35,12 +44,19 @@ use crate::net::Transport;
 use crate::pipeline::trace::TraceSink;
 use crate::{log_debug, log_warn};
 
+pub use self::core::{
+    AdmissionError, CoordinatorPhase, IllegalTransition, PhaseConfig, PhaseEffect, PhaseInput,
+    PhaseMachine, RedistReason, WorkerRoster,
+};
+pub use crate::checkpoint::{CoordinatorStore, LeaderState};
 pub use offline::default_datasource;
 
 /// Options beyond [`RunConfig`] (custom data, tracing, warm-start weights).
 #[derive(Default)]
 pub struct RunOpts {
+    /// Training data source (None = the config's default synthetic set).
     pub data: Option<Box<dyn DataSource>>,
+    /// Pipeline event trace sink (disabled by default).
     pub trace: TraceSink,
     /// Warm-start weights (block -> tensors): the paper's continuous-
     /// training mode, where pre-trained weights are sent to the workers.
@@ -53,7 +69,9 @@ pub struct RunOpts {
 
 /// A finished run: metrics plus (optionally) the final model.
 pub struct RunOutput {
+    /// Per-batch/per-epoch metrics, events, and the phase-transition log.
     pub record: RunRecord,
+    /// Final weights per block (empty unless requested in [`RunOpts`]).
     pub final_weights: BTreeMap<usize, BlockParams>,
 }
 

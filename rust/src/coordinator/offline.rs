@@ -12,7 +12,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use crate::checkpoint::{Checkpoint, CheckpointSink, DiskSink};
+use crate::checkpoint::{CoordinatorStore, DiskSink, LeaderState};
 use crate::config::RunConfig;
 use crate::data::{DataSource, SynthLm, SynthVision};
 use crate::device::SimDevice;
@@ -29,6 +29,7 @@ use crate::runtime::{load_all_blocks, Engine as XlaEngine};
 use crate::log_info;
 
 use super::central::Central;
+use super::core::{CoordinatorPhase, PhaseConfig, PhaseInput, PhaseMachine, WorkerRoster};
 use super::RunOpts;
 
 /// Build the default synthetic data source for a compiled model.
@@ -62,23 +63,25 @@ pub(crate) enum BootResult {
     Oom(RunRecord),
 }
 
-/// Load the newest complete checkpoint for a resume (paper §III-E:
-/// "recovering from them every time it fails"), validating it against
-/// the cluster being stood up AND the model it will warm-start: stage
-/// count, block-id range, and tensor shapes must all match the manifest,
-/// or the operator pointed `resume_from` at the wrong run — refuse
-/// cleanly here instead of index-panicking or diverging mid-training.
-/// `None` when nothing usable exists — the run then starts fresh instead
-/// of failing, so a crash-looped central node that never managed a first
-/// checkpoint still comes up.
-fn load_resume(cfg: &RunConfig, n: usize, manifest: &Manifest) -> Result<Option<Checkpoint>> {
+/// Load the newest complete leadership state for a resume (paper §III-E:
+/// "recovering from them every time it fails"), validating the embedded
+/// checkpoint against the cluster being stood up AND the model it will
+/// warm-start: stage count, block-id range, and tensor shapes must all
+/// match the manifest, or the operator pointed `resume_from` at the
+/// wrong run — refuse cleanly here instead of index-panicking or
+/// diverging mid-training. `None` when nothing usable exists — the run
+/// then starts fresh instead of failing, so a crash-looped central node
+/// that never managed a first checkpoint still comes up. Roots written
+/// before the leader sidecar existed load with default extras.
+fn load_resume(cfg: &RunConfig, n: usize, manifest: &Manifest) -> Result<Option<LeaderState>> {
     let Some(dir) = &cfg.resume_from else {
         return Ok(None);
     };
-    let Some(ck) = DiskSink::new(dir).load_latest()? else {
+    let Some(st) = DiskSink::new(dir).load_latest_leader()? else {
         log_info!("resume_from {dir}: no complete checkpoint; starting fresh");
         return Ok(None);
     };
+    let ck = &st.checkpoint;
     if ck.state.worker_list.len() != n || ck.state.ranges.len() != n {
         bail!(
             "checkpoint topology ({} stages) does not match the configured cluster \
@@ -108,12 +111,14 @@ fn load_resume(cfg: &RunConfig, n: usize, manifest: &Manifest) -> Result<Option<
         }
     }
     log_info!(
-        "resuming from checkpoint: committed batch {}, {} blocks, lr {}",
+        "resuming from checkpoint: committed batch {}, {} blocks, lr {}, \
+         replica epoch {}",
         ck.state.committed_batch,
         ck.weights.len(),
-        ck.state.lr
+        ck.state.lr,
+        st.replica_epoch
     );
-    Ok(Some(ck))
+    Ok(Some(st))
 }
 
 /// Run the whole offline phase for `cfg`.
@@ -128,8 +133,8 @@ pub(crate) fn bootstrap(cfg: &RunConfig, mut opts: RunOpts) -> Result<BootResult
     let resume = load_resume(cfg, n, &manifest)?;
     // the checkpoint's lr (possibly past lr-drops) overrides the config's
     let mut cfg_eff = cfg.clone();
-    if let Some(ck) = &resume {
-        cfg_eff.lr = ck.state.lr;
+    if let Some(st) = &resume {
+        cfg_eff.lr = st.checkpoint.state.lr;
     }
     let cfg = &cfg_eff;
 
@@ -175,11 +180,11 @@ pub(crate) fn bootstrap(cfg: &RunConfig, mut opts: RunOpts) -> Result<BootResult
     // derived from the manifest's flop counts — no re-profiling pass
     // (relative block costs are what the cost model needs; the capacity
     // estimator re-converges from live exec reports anyway).
-    let (profile, init_ranges, worker_list) = if let Some(ck) = &resume {
+    let (profile, init_ranges, worker_list) = if let Some(st) = &resume {
         (
             ModelProfile::from_flops(&manifest, 1.0),
-            ck.state.ranges.clone(),
-            ck.state.worker_list.clone(),
+            st.checkpoint.state.ranges.clone(),
+            st.checkpoint.state.worker_list.clone(),
         )
     } else {
         let reps = if opts.profile_reps == 0 { 5 } else { opts.profile_reps };
@@ -221,7 +226,8 @@ pub(crate) fn bootstrap(cfg: &RunConfig, mut opts: RunOpts) -> Result<BootResult
         }
     }
 
-    let committed = resume.as_ref().map(|ck| ck.state.committed_batch).unwrap_or(-1);
+    let committed =
+        resume.as_ref().map(|st| st.checkpoint.state.committed_batch).unwrap_or(-1);
     let mut central = Central {
         total_batches: (cfg.epochs * cfg.batches_per_epoch) as u64,
         cfg: cfg.clone(),
@@ -245,15 +251,64 @@ pub(crate) fn bootstrap(cfg: &RunConfig, mut opts: RunOpts) -> Result<BootResult
         epoch_batches: 0,
         fault_armed: false,
         last_checkpoint: (committed + 1).max(0) as u64,
-        sink: cfg
+        store: cfg
             .checkpoint
             .as_ref()
-            .map(|(dir, _)| Box::new(DiskSink::new(dir)) as Box<dyn CheckpointSink>),
+            .map(|(dir, _)| Box::new(DiskSink::new(dir)) as Box<dyn CoordinatorStore>),
         data: opts
             .data
             .take()
             .unwrap_or_else(|| default_datasource(&manifest, cfg.seed)),
+        // a resumed coordinator starts Down and rejoins through the
+        // restart handshake; a fresh one walks Idle -> Profiling ->
+        // Training below
+        machine: if resume.is_some() {
+            PhaseMachine::resuming(PhaseConfig::threaded())
+        } else {
+            PhaseMachine::new(PhaseConfig::threaded())
+        },
+        roster: match cfg.max_workers {
+            Some(q) => WorkerRoster::with_capacity(q),
+            None => WorkerRoster::unlimited(),
+        },
+        // bump the replica version epoch on every restart so a stale
+        // pre-restart backup can never outrank a post-restart push
+        // (DESIGN.md §9 case 2)
+        replica_epoch: resume.as_ref().map(|st| st.replica_epoch + 1).unwrap_or(0),
     };
+    // warm-start the link estimates from the stored leadership state so
+    // the first cost model after a resume is capacity-aware, not blind
+    if let Some(st) = &resume {
+        let n_links = central.measured_bw.len();
+        for (i, &b) in st.measured_bw.iter().take(n_links).enumerate() {
+            central.measured_bw[i] = b;
+        }
+    }
+    // admission: a resume restores the persisted quota and roster, then
+    // (re)admits every device the readiness barrier is about to prove
+    // alive; a fresh run admits the configured cluster outright
+    if let Some(st) = &resume {
+        // the config's quota (freshly validated) outranks the stored one
+        // when both exist — the operator may have re-sized the cluster
+        let quota = cfg.max_workers.map(|q| q as u64).unwrap_or(st.worker_quota);
+        central.roster = WorkerRoster::restore(quota, &st.admitted);
+        for d in 1..n {
+            central.roster.readmit(d)?;
+        }
+        // the tier ladder resumes where it left off (clamped into the
+        // possibly re-narrowed band), not at the floor
+        if let Some(policy) = &mut central.adaptive {
+            *policy =
+                crate::net::quant::AdaptivePolicy::resume_at(cfg.adaptive.clone(), st.tier);
+        }
+    } else {
+        // the offline phase (profiling above) is already behind us; the
+        // machine records it so both drivers share one transition log
+        central.machine.step(PhaseInput::StartProfiling)?;
+        for d in 1..n {
+            central.roster.admit(d)?;
+        }
+    }
 
     // ---- readiness barrier: workers compile their executables at thread
     // start; probing until every worker answers prevents the fault
@@ -288,18 +343,29 @@ pub(crate) fn bootstrap(cfg: &RunConfig, mut opts: RunOpts) -> Result<BootResult
     // the new training state. Freshly spawned workers all report
     // `fresh`; a surviving worker (TCP deployments) would report the
     // progress it must roll back.
-    if let Some(ck) = &resume {
+    if let Some(st) = &resume {
+        // Down -> Rejoining: opens the machine's ack window that
+        // restart_handshake's poll loop resolves
+        central
+            .machine
+            .step(PhaseInput::CentralRestarted { now: central.clock.raw_now() })?;
         let peers: Vec<DeviceId> = (1..n).collect();
-        central.restart_handshake(&peers, ck.state.committed_batch)?;
+        central.restart_handshake(&peers, st.checkpoint.state.committed_batch)?;
     }
-    if let Some(ck) = resume {
+    let resumed = resume.is_some();
+    if let Some(st) = resume {
         central.record.event(
             &central.clock,
-            format!("resumed from checkpoint at batch {}", ck.state.committed_batch),
+            format!(
+                "resumed from checkpoint at batch {} (replica epoch {}, tier {})",
+                st.checkpoint.state.committed_batch,
+                central.replica_epoch,
+                st.tier.name()
+            ),
         );
         // checkpoint weights take the warm-start path below — always
         // f32 (restore fidelity is a correctness requirement)
-        opts.initial_weights = Some(ck.weights);
+        opts.initial_weights = Some(st.checkpoint.weights);
     }
 
     // ---- training initialization (paper Table I) ----
@@ -309,6 +375,17 @@ pub(crate) fn bootstrap(cfg: &RunConfig, mut opts: RunOpts) -> Result<BootResult
     }
     central.worker.apply_init(&ti)?;
     central.worker.measure_bandwidth(&central.endpoint)?;
+    // steady state: a fresh run steps out of Profiling here; a resumed
+    // one already polled Rejoining -> Training through the handshake
+    if central.machine.phase() != CoordinatorPhase::Training {
+        central.machine.step(PhaseInput::TrainingStarted)?;
+    }
+    // init just reset every stage to the policy's floor tier; a resume
+    // re-announces the restored rung so wire encodings agree again
+    if resumed {
+        let peers: Vec<DeviceId> = (1..n).collect();
+        central.rebroadcast_tier(&peers)?;
+    }
 
     // warm start (continuous training): push pre-trained weights out —
     // shared buffers, so this stages no copies at the central node

@@ -21,6 +21,7 @@ use crate::pipeline::{ControlEvent, DataEvent, Event};
 use crate::{log_info, log_warn};
 
 use super::central::Central;
+use super::core::{PhaseEffect, PhaseInput, RedistReason};
 
 impl Central {
     // ------------------------------------------------------------------
@@ -73,7 +74,22 @@ impl Central {
     /// Drain, recompute the optimal cuts from live capacity estimates, and
     /// run the redistribution protocol if the partition changed.
     pub(crate) fn dynamic_repartition(&mut self) -> Result<()> {
+        // the shared machine gates the drain window (Training -> Draining)
+        self.machine.step(PhaseInput::DrainForRepartition)?;
         self.drain()?;
+        // a clean drain polls into RunDynamicRepartition; if a fault fired
+        // mid-drain the machine already went Probing -> Training and this
+        // poll is a no-op — skip the replan, the next schedule tick retries
+        let (_, effects) = self.machine.step(PhaseInput::Poll {
+            now: self.clock.raw_now(),
+            overdue: self.detector.overdue(),
+            inflight: self.inflight,
+            peers: self.worker.worker_list.len().saturating_sub(1),
+            local_fetch_done: self.worker.fetch_done(),
+        })?;
+        if !effects.iter().any(|e| matches!(e, PhaseEffect::RunDynamicRepartition)) {
+            return Ok(());
+        }
         let worker_list = self.worker.worker_list.clone();
         let old_ranges = self.worker.ranges.clone();
         let cm = self.current_cost_model(&worker_list, &old_ranges);
@@ -91,7 +107,7 @@ impl Central {
             cost
         );
         self.record.event(&self.clock, format!("repartition {new_ranges:?}"));
-        self.run_redistribution(new_ranges.clone(), worker_list, vec![])?;
+        self.run_redistribution(new_ranges.clone(), worker_list, vec![], RedistReason::Dynamic)?;
         self.record.partitions.push((self.completed.max(0) as u64, new_ranges));
         Ok(())
     }
@@ -101,11 +117,15 @@ impl Central {
     // ------------------------------------------------------------------
 
     /// The shared Repartition -> fetch -> FetchDone -> Commit protocol.
+    /// The [`crate::coordinator::core::PhaseMachine`] owns the FetchDone
+    /// tally and the deadline; this driver only moves bytes and executes
+    /// the commit/abort effect the poll resolves to.
     pub(crate) fn run_redistribution(
         &mut self,
         ranges: Partition,
         worker_list: Vec<DeviceId>,
         failed: Vec<usize>,
+        reason: RedistReason,
     ) -> Result<()> {
         let workers: Vec<DeviceId> =
             worker_list.iter().copied().filter(|&d| d != self.worker.device_id).collect();
@@ -126,34 +146,55 @@ impl Central {
             failed,
         )?;
 
+        let expect: BTreeSet<DeviceId> = workers.iter().copied().collect();
+        self.machine.step(PhaseInput::RedistributionStarted {
+            expect,
+            reason,
+            now: self.clock.raw_now(),
+        })?;
+
         // await FetchDone from every worker + our own completion
-        let mut done: BTreeSet<DeviceId> = BTreeSet::new();
-        let deadline = self.clock.raw_now() + Duration::from_secs(60);
-        while done.len() < workers.len() || !self.worker.fetch_done() {
+        loop {
             match self.endpoint.recv_timeout(Duration::from_millis(5)) {
                 Some((from, msg)) => match Event::from_message(from, msg) {
                     Event::Control(ControlEvent::FetchDone { id }) => {
-                        done.insert(id);
+                        self.machine.step(PhaseInput::FetchDone { id })?;
                     }
                     ev => self.on_event(ev)?,
                 },
                 None => {}
             }
-            if self.clock.raw_now() > deadline {
-                bail!(
-                    "redistribution timed out ({} of {} workers done)",
-                    done.len(),
-                    workers.len()
-                );
+            let (_, effects) = self.machine.step(PhaseInput::Poll {
+                now: self.clock.raw_now(),
+                overdue: None,
+                inflight: self.inflight,
+                peers: workers.len(),
+                local_fetch_done: self.worker.fetch_done(),
+            })?;
+            for eff in effects {
+                match eff {
+                    PhaseEffect::CommitRedistribution { .. } => {
+                        // commit everywhere (paper's commit message)
+                        for &d in &workers {
+                            self.endpoint.send(d, Message::Commit)?;
+                        }
+                        self.worker.apply_commit()?;
+                        return Ok(());
+                    }
+                    PhaseEffect::AbortRedistribution => {
+                        // driver policy: the threaded coordinator treats a
+                        // stalled redistribution as fatal — there is no
+                        // virtual fabric to rewind, so failing the run
+                        // beats the sim's re-probe (DESIGN.md §12)
+                        bail!(
+                            "redistribution timed out ({} workers expected)",
+                            workers.len()
+                        );
+                    }
+                    _ => {}
+                }
             }
         }
-
-        // commit everywhere (paper's commit message)
-        for &d in &workers {
-            self.endpoint.send(d, Message::Commit)?;
-        }
-        self.worker.apply_commit()?;
-        Ok(())
     }
 
     // ------------------------------------------------------------------
@@ -177,9 +218,9 @@ impl Central {
         for &d in peers {
             self.endpoint.send(d, Message::CentralRestart { committed })?;
         }
-        let mut reports: BTreeMap<DeviceId, (i64, bool)> = BTreeMap::new();
-        let deadline = self.clock.raw_now() + Duration::from_millis(1500);
-        while reports.len() < peers.len() && self.clock.raw_now() < deadline {
+        // the machine (stepped into Rejoining by the resume path) owns
+        // the ack set and the window; loop until its poll resolves
+        let reports: BTreeMap<DeviceId, (i64, bool)> = loop {
             match self.endpoint.recv_timeout(Duration::from_millis(10)) {
                 Some((from, msg)) => match Event::from_message(from, msg) {
                     Event::Control(ControlEvent::WorkerState {
@@ -188,7 +229,11 @@ impl Central {
                         fresh,
                         ..
                     }) => {
-                        reports.insert(id, (committed_bwd, fresh));
+                        self.machine.step(PhaseInput::WorkerStateReport {
+                            id,
+                            committed_bwd,
+                            fresh,
+                        })?;
                     }
                     // stale pre-reboot data traffic: discard
                     Event::Data(DataEvent::Backward { .. })
@@ -197,7 +242,20 @@ impl Central {
                 },
                 None => {}
             }
-        }
+            let (_, effects) = self.machine.step(PhaseInput::Poll {
+                now: self.clock.raw_now(),
+                overdue: None,
+                inflight: 0,
+                peers: peers.len(),
+                local_fetch_done: true,
+            })?;
+            if let Some(PhaseEffect::ResolveRejoin { acks }) = effects
+                .into_iter()
+                .find(|e| matches!(e, PhaseEffect::ResolveRejoin { .. }))
+            {
+                break acks;
+            }
+        };
         for (&d, &(bwd, fresh)) in &reports {
             log_info!(
                 "restart reconcile: worker {d} committed_bwd={bwd} fresh={fresh} \
@@ -238,23 +296,28 @@ impl Central {
         self.record.event(&self.clock, format!("fault detected at batch {overdue_batch}"));
         self.worker.status = 1;
 
-        // probe all current workers
+        // probe all current workers; the machine opens the probe window
+        // (FaultDetected -> Probing + SendProbes) and owns the ack tally
         let worker_list = self.worker.worker_list.clone();
         let peers: Vec<DeviceId> = worker_list
             .iter()
             .copied()
             .filter(|&d| d != self.worker.device_id)
             .collect();
-        for &d in &peers {
-            self.endpoint.send(d, Message::Probe)?;
+        let (_, open) = self.machine.step(PhaseInput::FaultDetected {
+            overdue: overdue_batch,
+            now: t_start,
+        })?;
+        if open.iter().any(|e| matches!(e, PhaseEffect::SendProbes { .. })) {
+            for &d in &peers {
+                self.endpoint.send(d, Message::Probe)?;
+            }
         }
-        let mut acks: BTreeMap<DeviceId, bool> = BTreeMap::new(); // id -> fresh
-        let probe_deadline = self.clock.raw_now() + Duration::from_millis(1500);
-        while acks.len() < peers.len() && self.clock.raw_now() < probe_deadline {
+        let acks: BTreeMap<DeviceId, bool> = loop {
             match self.endpoint.recv_timeout(Duration::from_millis(10)) {
                 Some((from, msg)) => match Event::from_message(from, msg) {
                     Event::Control(ControlEvent::ProbeAck { id, fresh }) => {
-                        acks.insert(id, fresh);
+                        self.machine.step(PhaseInput::ProbeAck { id, fresh })?;
                     }
                     // stale data traffic during recovery: discard
                     Event::Data(DataEvent::Backward { .. })
@@ -263,7 +326,20 @@ impl Central {
                 },
                 None => {}
             }
-        }
+            let (_, effects) = self.machine.step(PhaseInput::Poll {
+                now: self.clock.raw_now(),
+                overdue: None,
+                inflight: self.inflight,
+                peers: peers.len(),
+                local_fetch_done: true,
+            })?;
+            if let Some(PhaseEffect::ResolveProbe { acks }) = effects
+                .into_iter()
+                .find(|e| matches!(e, PhaseEffect::ResolveProbe { .. }))
+            {
+                break acks;
+            }
+        };
         let dead: Vec<DeviceId> =
             peers.iter().copied().filter(|d| !acks.contains_key(d)).collect();
         let fresh: Vec<DeviceId> =
@@ -286,13 +362,22 @@ impl Central {
             // replica holder, same partition.
             log_info!("fault case 2: restarted worker(s) {fresh:?}; restoring from replicas");
             self.record.event(&self.clock, format!("fault case 2: restore {fresh:?}"));
+            // a restarted worker re-enters the roster before re-init
+            for &d in &fresh {
+                self.roster.readmit(d)?;
+            }
             let ti = self.train_init(self.worker.ranges.clone(), worker_list.clone(), 1);
             for &d in &fresh {
                 self.endpoint.send(d, Message::InitState(ti.clone()))?;
             }
             // tiny pause so InitState lands before Repartition
             self.clock.sleep(Duration::from_millis(50));
-            self.run_redistribution(self.worker.ranges.clone(), worker_list, vec![])?;
+            self.run_redistribution(
+                self.worker.ranges.clone(),
+                worker_list,
+                vec![],
+                RedistReason::Fault,
+            )?;
         } else {
             // CASE 3: dead worker(s) — renumber, re-partition, redistribute
             let failed_stages: Vec<usize> = worker_list
@@ -323,8 +408,11 @@ impl Central {
             };
             for &d in &dead {
                 self.estimator.clear_device(d);
+                // an evicted worker must explicitly re-admit (case 2)
+                // before the coordinator accepts it again
+                self.roster.evict(d);
             }
-            self.run_redistribution(new_ranges.clone(), new_list, failed_stages)?;
+            self.run_redistribution(new_ranges.clone(), new_list, failed_stages, RedistReason::Fault)?;
             self.record.partitions.push((committed.max(0) as u64, new_ranges));
         }
 

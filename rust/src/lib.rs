@@ -22,8 +22,12 @@
 //!   1F1B schedule, per-stage compute (stashing, vertical sync, aggregation)
 //! - [`replication`] — chain + global weight replication (zero-copy pushes)
 //! - [`fault`] — failure detection, Algorithm 1 redistribution, recovery
-//! - [`coordinator`] — central-node phases: offline bootstrap,
-//!   steady-state training, repartition/recovery
+//! - [`checkpoint`] — checkpoint persistence + the [`checkpoint::CoordinatorStore`]
+//!   seam (full leadership state behind `DiskSink`/`MemorySink`, DESIGN.md §9/§12)
+//! - [`coordinator`] — central-node leadership: the shared pure phase
+//!   machine ([`coordinator::PhaseMachine`], DESIGN.md §12) plus its
+//!   threaded driver — offline bootstrap, steady-state training,
+//!   repartition/recovery, worker admission
 //! - [`sim`] — deterministic scenario simulation: the virtual/real
 //!   [`sim::Clock`] seam, synthetic native models, and the
 //!   discrete-event scenario runner behind `rust/tests/scenarios/`

@@ -43,6 +43,12 @@ pub struct RunRecord {
     pub net_bytes: u64,
     /// recovery overhead in seconds, when a fault was handled (Table III)
     pub recovery_overhead_s: Option<f64>,
+    /// The coordinator phase machine's transition log (one line per
+    /// observable transition, `coordinator::core` format) — the same
+    /// artifact the deterministic harness exposes as
+    /// `ScenarioOutcome::phase_log`, so conformance tests can compare
+    /// the two drivers. Not serialized by `to_json`.
+    pub phase_log: Vec<String>,
 }
 
 impl RunRecord {

@@ -41,7 +41,12 @@ use super::quant::{Bits, Compression, QTensor, Scheme, Tier};
 ///
 /// v5: `InitState` carries the adaptive tier band — `tier_floor` and
 /// `tier_ceiling`, one byte each after `bw_probe_bytes`.
-pub const CODEC_VERSION: u8 = 5;
+///
+/// v6: `InitState` carries the coordinator's `replica_epoch` and the
+/// admission `worker_quota`, two u64s after `tier_ceiling` (DESIGN.md
+/// §12). Neither changes `Message::byte_len`'s pricing formula, so v5
+/// traffic traces stay byte-identical.
+pub const CODEC_VERSION: u8 = 6;
 
 // ---------- primitive writers ----------
 
@@ -377,6 +382,8 @@ pub fn encode_into(buf: &mut Vec<u8>, from: DeviceId, msg: &Message) {
             w.u64(t.bw_probe_bytes);
             w.u8(t.tier_floor.to_u8());
             w.u8(t.tier_ceiling.to_u8());
+            w.u64(t.replica_epoch);
+            w.u64(t.worker_quota);
         }
         Message::Repartition { ranges, worker_list, failed } => {
             w.u8(7);
@@ -559,6 +566,8 @@ pub fn decode(frame: &[u8]) -> Result<(DeviceId, Message)> {
                     let t = r.u8()?;
                     Tier::from_u8(t).ok_or_else(|| anyhow!("bad tier_ceiling {t}"))?
                 },
+                replica_epoch: r.u64()?,
+                worker_quota: r.u64()?,
             })
         }
         7 => {
@@ -717,6 +726,8 @@ mod tests {
                 bw_probe_bytes: 2048,
                 tier_floor: Tier::Activations,
                 tier_ceiling: Tier::Full,
+                replica_epoch: 3,
+                worker_quota: 8,
             }),
         );
     }
@@ -961,6 +972,8 @@ mod tests {
                 bw_probe_bytes: g.usize_in(0, 1 << 16) as u64,
                 tier_floor: Tier::Off,
                 tier_ceiling: *g.pick(&[Tier::Activations, Tier::Full, Tier::FullQ4]),
+                replica_epoch: g.usize_in(0, 4) as u64,
+                worker_quota: g.usize_in(0, 64) as u64,
             }),
             7 => Message::Repartition {
                 ranges: (0..g.usize_in(1, 4)).map(|i| (i * 2, i * 2 + 1)).collect(),

@@ -181,6 +181,16 @@ pub struct TrainInit {
     pub tier_floor: Tier,
     /// See [`TrainInit::tier_floor`].
     pub tier_ceiling: Tier,
+    /// Coordinator restart epoch folded into every replica version
+    /// (high bits — see [`crate::replication::epoch_version`]). Bumped
+    /// once per coordinator restart so pre-restart backups can never
+    /// shadow post-restart pushes (DESIGN.md §9's case-2 wart). 0 until
+    /// the first restart, which keeps historical runs byte-identical.
+    pub replica_epoch: u64,
+    /// Admission quota the coordinator is enforcing (0 = unlimited) —
+    /// informational for workers; the roster itself lives coordinator-
+    /// side ([`crate::coordinator::WorkerRoster`], DESIGN.md §12).
+    pub worker_quota: u64,
 }
 
 /// A block's tensors on the wire — shared buffers (or quantized bytes),
@@ -359,6 +369,11 @@ impl Message {
             Message::Backward { grad, reports, .. } => grad.byte_len() + reports.len() * 20,
             Message::EvalResult { .. } => 16,
             Message::Probe | Message::ProbeAck { .. } => 8,
+            // Pricing formula, not serialization: deliberately does NOT
+            // grow with newer TrainInit fields (replica_epoch,
+            // worker_quota, the tier band...) so the bandwidth model —
+            // and every recorded Off-mode scenario trace — stays
+            // byte-identical as the init handshake evolves.
             Message::InitState(ti) => 64 + ti.ranges.len() * 16 + ti.worker_list.len() * 8,
             Message::Repartition { ranges, worker_list, failed } => {
                 ranges.len() * 16 + worker_list.len() * 8 + failed.len() * 8

@@ -308,6 +308,14 @@ impl AdaptivePolicy {
         AdaptivePolicy { th, tier }
     }
 
+    /// Rebuild a controller at a persisted tier (coordinator resume,
+    /// DESIGN.md §12): the stored tier is clamped into the configured
+    /// band in case the operator re-narrowed it across the restart.
+    pub fn resume_at(th: AdaptiveThresholds, tier: Tier) -> AdaptivePolicy {
+        let tier = tier.clamp(th.tier_floor, th.tier_ceiling);
+        AdaptivePolicy { th, tier }
+    }
+
     pub fn tier(&self) -> Tier {
         self.tier
     }

@@ -71,6 +71,11 @@ pub struct StageWorker {
     pub sgd: Sgd,
     pub stash: VersionStash,
     pub version: u64,
+    /// Coordinator restart epoch from `TrainInit`, folded into the high
+    /// bits of every outgoing replica version
+    /// ([`replication::epoch_version`]) so a backup taken before a
+    /// coordinator restart can never shadow a post-restart push.
+    pub replica_epoch: u64,
     pub initialized: bool,
     pub status: u8,
 
@@ -172,6 +177,7 @@ impl StageWorker {
             sgd: Sgd::new(SgdConfig::default()),
             stash: VersionStash::new(4),
             version: 0,
+            replica_epoch: 0,
             initialized: false,
             status: 0,
             sched: Schedule::new(),
@@ -260,6 +266,7 @@ impl StageWorker {
         });
         self.stash = VersionStash::new(self.n_stages().max(2));
         self.version = 0;
+        self.replica_epoch = t.replica_epoch;
         self.committed_fwd = t.committed_forward;
         self.committed_bwd = t.committed_backward;
         self.agg_k = t.agg_k;
@@ -728,7 +735,7 @@ impl StageWorker {
                     kind: ReplicaKind::Chain,
                     owner_stage: stage,
                     owner_device: self.device_id,
-                    version: self.version,
+                    version: replication::epoch_version(self.replica_epoch, self.version),
                     blocks: wire.clone(),
                 },
             )?;
@@ -740,7 +747,7 @@ impl StageWorker {
                     kind: ReplicaKind::Global,
                     owner_stage: stage,
                     owner_device: self.device_id,
-                    version: self.version,
+                    version: replication::epoch_version(self.replica_epoch, self.version),
                     blocks: wire,
                 },
             )?;
@@ -1337,6 +1344,7 @@ impl StageWorker {
         self.sgd = Sgd::new(self.sgd.cfg);
         self.stash = VersionStash::new(2);
         self.version = 0;
+        self.replica_epoch = 0;
         self.initialized = false;
         self.status = 0;
         self.sched.clear();

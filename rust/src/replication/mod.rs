@@ -12,6 +12,34 @@ use crate::model::params::{BlockParams, StageParams};
 use crate::net::message::{DeviceId, ReplicaKind, WireBlock, WireTensor};
 use crate::net::quant::{ChannelHint, WeightCoding};
 
+/// How many low bits of a replica version hold the per-epoch sequence
+/// number; the high bits hold the coordinator's restart epoch. 48 bits
+/// of sequence (~2.8e14 batches) cannot realistically wrap, and 16 bits
+/// of epoch survive 65k coordinator restarts.
+pub const VERSION_SEQ_BITS: u32 = 48;
+
+/// Compose a wire replica version from the coordinator restart `epoch`
+/// and the per-epoch sequence number `seq` (DESIGN.md §9, case-2 wart):
+/// because the epoch occupies the high bits, *any* post-restart push
+/// outranks *every* pre-restart backup in [`BackupStore`]'s
+/// newest-version-wins ordering, no matter how far the old epoch's
+/// sequence had advanced. Epoch 0 is the identity (`epoch_version(0, v)
+/// == v`), so runs that never restart the coordinator keep their
+/// historical version numbers — and their traces — byte-identical.
+pub fn epoch_version(epoch: u64, seq: u64) -> u64 {
+    (epoch << VERSION_SEQ_BITS) | (seq & ((1u64 << VERSION_SEQ_BITS) - 1))
+}
+
+/// The coordinator restart epoch encoded in a wire replica version.
+pub fn version_epoch(version: u64) -> u64 {
+    version >> VERSION_SEQ_BITS
+}
+
+/// The per-epoch sequence number encoded in a wire replica version.
+pub fn version_seq(version: u64) -> u64 {
+    version & ((1u64 << VERSION_SEQ_BITS) - 1)
+}
+
 /// Should a replication fire after completing `batch` (0-based)?
 pub fn due(batch: u64, every: Option<u64>) -> bool {
     match every {
@@ -190,6 +218,29 @@ mod tests {
         assert_eq!(s.find_block(3).unwrap().0[0][0], 5.0);
         s.store(1, ReplicaKind::Global, 1, 9, vec![(3, bp(9.0))]);
         assert_eq!(s.find_block(3).unwrap().0[0][0], 9.0);
+    }
+
+    /// DESIGN.md §9 case-2 wart, closed: a worker's *pre-restart* backup
+    /// (epoch 0, arbitrarily high sequence) must never shadow the first
+    /// *post-restart* push (epoch 1, sequence 0). Before the epoch bits
+    /// existed, the stale backup's raw version 1_000_000 would have won
+    /// the `version >= b.version` race and resurrected dead weights.
+    #[test]
+    fn post_restart_push_outranks_stale_pre_restart_backup() {
+        assert_eq!(epoch_version(0, 7), 7, "epoch 0 must be the identity");
+        assert_eq!(version_epoch(epoch_version(3, 9)), 3);
+        assert_eq!(version_seq(epoch_version(3, 9)), 9);
+        assert!(epoch_version(1, 0) > epoch_version(0, 1_000_000));
+
+        let mut s = BackupStore::default();
+        // stale pre-restart backup: epoch 0, far-advanced sequence
+        s.store(1, ReplicaKind::Chain, 1, epoch_version(0, 1_000_000), vec![(3, bp(1.0))]);
+        // first push after a coordinator restart: epoch 1, sequence 0
+        s.store(1, ReplicaKind::Chain, 1, epoch_version(1, 0), vec![(3, bp(2.0))]);
+        assert_eq!(s.find_block(3).unwrap().0[0][0], 2.0, "post-restart push must win");
+        // and the stale epoch can never sneak back in
+        s.store(1, ReplicaKind::Global, 1, epoch_version(0, 2_000_000), vec![(3, bp(3.0))]);
+        assert_eq!(s.find_block(3).unwrap().0[0][0], 2.0);
     }
 
     #[test]

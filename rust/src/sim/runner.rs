@@ -22,9 +22,10 @@
 //! purges its in-flight traffic with a per-device generation bump
 //! (tombstoned deliveries skip on pop) instead of rebuilding the queue.
 //!
-//! The coordinator logic mirrors `coordinator::{central,recovery}` as an
-//! explicit state machine (the private `Phase` enum) instead of blocking
-//! loops, with one
+//! The coordinator phase logic IS `coordinator::core` — the runner holds
+//! a [`PhaseMachine`] and executes the [`PhaseEffect`]s it returns
+//! against the virtual fabric, instead of blocking loops (or a private
+//! phase enum of its own — DESIGN.md §12), with one
 //! deliberate extension: a redistribution that stalls past
 //! `Scenario::redist_window` re-enters fault handling (re-probe, replan
 //! with the enlarged failure set) instead of aborting the run — that is
@@ -55,6 +56,10 @@ use anyhow::{bail, Context, Result};
 
 use crate::checkpoint::{Checkpoint, CheckpointSink, CheckpointState, MemorySink};
 use crate::config::DeviceConfig;
+use crate::coordinator::core::{
+    CoordinatorPhase, PhaseConfig, PhaseEffect, PhaseInput, PhaseMachine, RedistReason,
+    WorkerRoster,
+};
 use crate::data::SynthVision;
 use crate::device::SimDevice;
 use crate::fault::{renumber_worker_list, FaultDetector};
@@ -234,6 +239,10 @@ pub struct ScenarioOutcome {
     /// Events the engine processed (tombstones excluded) — the
     /// numerator of the `sim_events_per_sec` bench metric.
     pub events: u64,
+    /// [`PhaseMachine`] transition log (kind-only, deterministic): the
+    /// cross-driver conformance test compares its recovery suffix with
+    /// the threaded coordinator's.
+    pub phase_log: Vec<String>,
 }
 
 impl ScenarioOutcome {
@@ -246,37 +255,6 @@ impl ScenarioOutcome {
             })
             .collect()
     }
-}
-
-// ---------------------------------------------------------------------
-// coordinator state machine
-// ---------------------------------------------------------------------
-
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Reason {
-    Fault,
-    Dynamic,
-}
-
-enum Phase {
-    Idle,
-    /// Probe round after a gradient timeout.
-    Probing { acks: BTreeMap<DeviceId, bool>, deadline: Duration },
-    /// Repartition broadcast out; waiting for FetchDone from `expect`.
-    Redistributing {
-        expect: BTreeSet<DeviceId>,
-        done: BTreeSet<DeviceId>,
-        deadline: Duration,
-        reason: Reason,
-    },
-    /// Quiescing in-flight batches before a dynamic re-partition.
-    Draining,
-    /// The central node is dead; only a RestartCentral event can move on.
-    Down,
-    /// Restarted central sent `CentralRestart`; collecting `WorkerState`
-    /// replies (id -> (committed backward batch, fresh)) until every
-    /// checkpoint-known peer answered or the probe window closes.
-    Rejoining { acks: BTreeMap<DeviceId, (i64, bool)>, deadline: Duration },
 }
 
 // ---------------------------------------------------------------------
@@ -343,7 +321,11 @@ pub fn run_scenario(scenario: &Scenario, model_dir: &Path) -> Result<ScenarioOut
         measured_bw: vec![0.0; n.saturating_sub(1)],
         adaptive: (scenario.compression == Compression::Adaptive)
             .then(|| AdaptivePolicy::new(scenario.adaptive.clone())),
-        phase: Phase::Idle,
+        machine: PhaseMachine::new(PhaseConfig {
+            probe_window: scenario.probe_window,
+            redist_window: scenario.redist_window,
+        }),
+        roster: WorkerRoster::unlimited(),
         next_inject: 0,
         inflight: 0,
         completed: -1,
@@ -359,7 +341,6 @@ pub fn run_scenario(scenario: &Scenario, model_dir: &Path) -> Result<ScenarioOut
         event_ceiling: event_ceiling(scenario),
         sink: MemorySink::default(),
         ckpt_restore: None,
-        central_down: false,
         checkpoints: 0,
         restarts: 0,
         last_checkpoint: 0,
@@ -389,7 +370,12 @@ struct Runner<'a> {
     /// Tier controller for `Compression::Adaptive` (None otherwise) —
     /// coordinator memory, so a central kill resets it.
     adaptive: Option<AdaptivePolicy>,
-    phase: Phase,
+    /// The shared coordinator phase machine (`coordinator::core`): all
+    /// phase decisions happen in its `step`; the runner only executes
+    /// the effects against the virtual fabric.
+    machine: PhaseMachine,
+    /// Worker admission (coordinator memory — a central kill resets it).
+    roster: WorkerRoster,
     next_inject: u64,
     inflight: usize,
     completed: i64,
@@ -407,7 +393,6 @@ struct Runner<'a> {
     sink: MemorySink,
     /// Checkpoint being restored, carried from restart to finish_rejoin.
     ckpt_restore: Option<Checkpoint>,
-    central_down: bool,
     checkpoints: usize,
     restarts: usize,
     last_checkpoint: u64,
@@ -468,17 +453,6 @@ impl Runner<'_> {
         self.workers[0].worker_list.iter().copied().filter(|&d| d != 0).collect()
     }
 
-    fn phase_name(&self) -> &'static str {
-        match self.phase {
-            Phase::Idle => "idle",
-            Phase::Probing { .. } => "probing",
-            Phase::Redistributing { .. } => "redistributing",
-            Phase::Draining => "draining",
-            Phase::Down => "central-down",
-            Phase::Rejoining { .. } => "rejoining",
-        }
-    }
-
     // -------------------------------------------------- top level
 
     fn run(mut self) -> Result<ScenarioOutcome> {
@@ -486,7 +460,7 @@ impl Runner<'_> {
         loop {
             if self.completed + 1 >= self.total as i64
                 && self.inflight == 0
-                && matches!(self.phase, Phase::Idle)
+                && self.machine.phase() == CoordinatorPhase::Training
             {
                 break;
             }
@@ -520,7 +494,7 @@ impl Runner<'_> {
                     self.sc.n_devices(),
                     self.total,
                     self.sc.events.len(),
-                    self.phase_name(),
+                    self.machine.phase(),
                     self.completed + 1,
                     self.total,
                     self.inflight,
@@ -589,6 +563,7 @@ impl Runner<'_> {
             virtual_ms: end.as_secs_f64() * 1e3,
             net_bytes: self.vnet.bytes_total,
             events: self.events_processed,
+            phase_log: self.machine.take_log(),
         })
     }
 
@@ -614,6 +589,8 @@ impl Runner<'_> {
             bw_probe_bytes: self.sc.bw_probe_bytes,
             tier_floor: self.sc.adaptive.tier_floor,
             tier_ceiling: self.sc.adaptive.tier_ceiling,
+            replica_epoch: self.restarts as u64,
+            worker_quota: self.roster.quota_wire(),
         }
     }
 
@@ -642,6 +619,12 @@ impl Runner<'_> {
         }
         self.workers[0].apply_init(&ti)?;
         self.workers[0].measure_bandwidth(&h)?;
+        for d in 1..n {
+            self.roster.admit(d)?;
+        }
+        // the sim skips profiling (compute is priced from flop counts),
+        // so the machine goes straight Idle -> Training
+        self.machine.step(PhaseInput::TrainingStarted)?;
         self.trace_line(Duration::ZERO, format_args!("init partition {init_ranges:?}"));
         for (idx, ev) in self.sc.events.iter().enumerate() {
             if let Trigger::At(t) = ev.at {
@@ -703,7 +686,7 @@ impl Runner<'_> {
     }
 
     fn can_inject(&self) -> bool {
-        matches!(self.phase, Phase::Idle)
+        self.machine.phase() == CoordinatorPhase::Training
             && self.workers[0].initialized
             && self.workers[0].status == 0
             && self.inflight < self.sc.inflight
@@ -765,12 +748,12 @@ impl Runner<'_> {
         // (script a non-multiple mark to exercise the stale-replay path)
         self.maybe_checkpoint(at)?;
         self.check_batch_triggers(at)?;
-        let repart_due = matches!(self.phase, Phase::Idle)
+        let repart_due = self.machine.phase() == CoordinatorPhase::Training
             && self.next_repart.is_some_and(|next| self.completed >= next as i64);
         if repart_due {
             let next = self.next_repart.unwrap();
             self.trace_line(at, format_args!("drain for scheduled repartition @{next}"));
-            self.phase = Phase::Draining;
+            self.machine.step(PhaseInput::DrainForRepartition)?;
         }
         Ok(())
     }
@@ -780,20 +763,16 @@ impl Runner<'_> {
     fn central_message(&mut self, from: DeviceId, msg: Message) -> Result<()> {
         let h = self.handles[0].clone();
         match Event::from_message(from, msg) {
+            // recording inputs: the machine absorbs them when they
+            // arrive outside their phase (same as the old if-let guards)
             Event::Control(ControlEvent::ProbeAck { id, fresh }) => {
-                if let Phase::Probing { acks, .. } = &mut self.phase {
-                    acks.insert(id, fresh);
-                }
+                self.machine.step(PhaseInput::ProbeAck { id, fresh })?;
             }
             Event::Control(ControlEvent::FetchDone { id }) => {
-                if let Phase::Redistributing { done, .. } = &mut self.phase {
-                    done.insert(id);
-                }
+                self.machine.step(PhaseInput::FetchDone { id })?;
             }
             Event::Control(ControlEvent::WorkerState { id, committed_bwd, fresh, .. }) => {
-                if let Phase::Rejoining { acks, .. } = &mut self.phase {
-                    acks.insert(id, (committed_bwd, fresh));
-                }
+                self.machine.step(PhaseInput::WorkerStateReport { id, committed_bwd, fresh })?;
             }
             Event::Control(ControlEvent::BwReport { stage, bps }) => {
                 if stage < self.measured_bw.len() {
@@ -816,87 +795,55 @@ impl Runner<'_> {
         Ok(())
     }
 
+    /// Poll the phase machine with the driver's current observations and
+    /// execute whatever effects fall out. All phase *decisions* live in
+    /// [`PhaseMachine::poll`]; this driver only gathers the inputs.
     fn central_checks(&mut self, t: Duration) -> Result<()> {
-        enum Todo {
-            Nothing,
-            StartRecovery(u64),
-            FinishProbe,
-            Commit,
-            RedistTimeout,
-            DynamicRepart,
-            FinishRejoin,
-        }
-        let todo = match &self.phase {
-            // a dead central runs no checks; drive() never gets here, but
-            // the state is real while queued wakes drain
-            Phase::Down => Todo::Nothing,
-            Phase::Idle | Phase::Draining => match self.detector.overdue() {
-                Some(b) => Todo::StartRecovery(b),
-                None if matches!(self.phase, Phase::Draining) && self.inflight == 0 => {
-                    Todo::DynamicRepart
-                }
-                None => Todo::Nothing,
-            },
-            Phase::Probing { acks, deadline } => {
-                let all = acks.len() >= self.peers_of_central().len();
-                if all || t >= *deadline {
-                    Todo::FinishProbe
-                } else {
-                    Todo::Nothing
-                }
-            }
-            Phase::Rejoining { acks, deadline } => {
-                let all = acks.len() >= self.peers_of_central().len();
-                if all || t >= *deadline {
-                    Todo::FinishRejoin
-                } else {
-                    Todo::Nothing
-                }
-            }
-            Phase::Redistributing { expect, done, deadline, .. } => {
-                if done.is_superset(expect) && self.workers[0].fetch_done() {
-                    Todo::Commit
-                } else if t >= *deadline {
-                    Todo::RedistTimeout
-                } else {
-                    Todo::Nothing
-                }
-            }
+        let input = PhaseInput::Poll {
+            now: t,
+            overdue: self.detector.overdue(),
+            inflight: self.inflight,
+            peers: self.peers_of_central().len(),
+            local_fetch_done: self.workers[0].fetch_done(),
         };
-        match todo {
-            Todo::Nothing => Ok(()),
-            Todo::StartRecovery(b) => self.start_recovery(b, t),
-            Todo::FinishProbe => {
-                let Phase::Probing { acks, .. } =
-                    std::mem::replace(&mut self.phase, Phase::Idle)
-                else {
-                    unreachable!()
-                };
-                self.finish_probe(acks, t)
+        let (_, effects) = self.machine.step(input)?;
+        self.dispatch_effects(effects, t)
+    }
+
+    /// Execute [`PhaseEffect`]s against the virtual fabric. The effect
+    /// order is the machine's decision order, which matches the old
+    /// inline decision table — that is what keeps traces byte-identical.
+    fn dispatch_effects(&mut self, effects: Vec<PhaseEffect>, t: Duration) -> Result<()> {
+        for eff in effects {
+            match eff {
+                PhaseEffect::SendProbes { overdue, deadline } => {
+                    self.send_probes(overdue, deadline, t)?;
+                }
+                PhaseEffect::ResolveProbe { acks } => self.finish_probe(acks, t)?,
+                PhaseEffect::ResolveRejoin { acks } => self.finish_rejoin(acks, t)?,
+                PhaseEffect::CommitRedistribution { expect, reason } => {
+                    self.commit_redistribution(expect, reason, t)?;
+                }
+                PhaseEffect::AbortRedistribution => {
+                    self.trace_line(t, format_args!("redistribution stalled; re-probing"));
+                    // in-flight fetches of the aborted round were logged
+                    // at their (drained) send time, like the old design
+                    self.drain_sends();
+                    self.vnet.recording = None;
+                    // the overdue batch (if any) restarts the fault
+                    // handler; otherwise re-probe the committed frontier
+                    let b = self
+                        .detector
+                        .overdue()
+                        .unwrap_or((self.completed + 1).max(0) as u64);
+                    let (_, eff) =
+                        self.machine.step(PhaseInput::FaultDetected { overdue: b, now: t })?;
+                    self.dispatch_effects(eff, t)?;
+                }
+                PhaseEffect::RunDynamicRepartition => self.run_dynamic_repartition(t)?,
             }
-            Todo::FinishRejoin => {
-                let Phase::Rejoining { acks, .. } =
-                    std::mem::replace(&mut self.phase, Phase::Idle)
-                else {
-                    unreachable!()
-                };
-                self.finish_rejoin(acks, t)
-            }
-            Todo::Commit => self.commit_redistribution(t),
-            Todo::RedistTimeout => {
-                self.trace_line(t, format_args!("redistribution stalled; re-probing"));
-                // in-flight fetches of the aborted round were logged at
-                // their (drained) send time, like the old design
-                self.drain_sends();
-                self.vnet.recording = None;
-                self.phase = Phase::Idle;
-                // the overdue batch (if any) restarts the fault handler;
-                // otherwise re-probe on the committed frontier
-                let b = self.detector.overdue().unwrap_or((self.completed + 1).max(0) as u64);
-                self.start_recovery(b, t)
-            }
-            Todo::DynamicRepart => self.run_dynamic_repartition(t),
         }
+        Ok(())
     }
 
     /// Feed the adaptive tier controller the slowest measured link of
@@ -938,7 +885,9 @@ impl Runner<'_> {
         Ok(())
     }
 
-    fn start_recovery(&mut self, overdue: u64, t: Duration) -> Result<()> {
+    /// Execute [`PhaseEffect::SendProbes`]: the machine already moved to
+    /// `Probing`; broadcast the probes and schedule the deadline wake.
+    fn send_probes(&mut self, overdue: u64, deadline: Duration, t: Duration) -> Result<()> {
         self.recoveries += 1;
         if self.recoveries > MAX_RECOVERIES {
             bail!("scenario {:?}: more than {MAX_RECOVERIES} recoveries", self.sc.name);
@@ -950,8 +899,6 @@ impl Runner<'_> {
         for d in self.peers_of_central() {
             h.send(d, Message::Probe)?;
         }
-        let deadline = t + self.sc.probe_window;
-        self.phase = Phase::Probing { acks: BTreeMap::new(), deadline };
         self.wake(0, deadline + Duration::from_nanos(1));
         Ok(())
     }
@@ -973,20 +920,21 @@ impl Runner<'_> {
                 format_args!("fault case 1: restart from batch {}", committed + 1),
             );
             self.reset_all(committed, t)?;
-            self.phase = Phase::Idle;
         } else if dead.is_empty() {
-            // CASE 2: restarted worker(s) — restore from replicas
+            // CASE 2: restarted worker(s) — restore from replicas. The
+            // fresh workers were never evicted; readmit is idempotent.
             self.trace_line(t, format_args!("fault case 2: restore {fresh:?}"));
             let ranges = self.workers[0].ranges.clone();
             let ti = self.train_init(ranges.clone(), worker_list.clone(), 1);
             for &d in &fresh {
+                self.roster.readmit(d)?;
                 h.send(d, Message::InitState(ti.clone()))?;
             }
             self.begin_redistribution(
                 ranges,
                 worker_list,
                 vec![],
-                Reason::Fault,
+                RedistReason::Fault,
                 "fault case 2",
                 t,
             )?;
@@ -1010,13 +958,14 @@ impl Runner<'_> {
             let cm = self.cost_model(&new_list, &alive_old);
             let (new_ranges, _) = optimal_partition(&cm);
             for &d in &dead {
+                self.roster.evict(d);
                 self.estimator.clear_device(d);
             }
             self.begin_redistribution(
                 new_ranges,
                 new_list,
                 failed,
-                Reason::Fault,
+                RedistReason::Fault,
                 "fault case 3",
                 t,
             )?;
@@ -1029,7 +978,7 @@ impl Runner<'_> {
         ranges: Partition,
         list: Vec<DeviceId>,
         failed: Vec<usize>,
-        reason: Reason,
+        reason: RedistReason,
         label: &str,
         t: Duration,
     ) -> Result<()> {
@@ -1075,19 +1024,21 @@ impl Runner<'_> {
         if expect.is_empty() {
             self.wake(0, t + Duration::from_nanos(1));
         }
-        self.phase = Phase::Redistributing { expect, done: BTreeSet::new(), deadline, reason };
+        self.machine.step(PhaseInput::RedistributionStarted { expect, reason, now: t })?;
         self.wake(0, deadline + Duration::from_nanos(1));
         self.redist_count += 1;
         self.check_redist_triggers(t)?;
         Ok(())
     }
 
-    fn commit_redistribution(&mut self, t: Duration) -> Result<()> {
-        let Phase::Redistributing { expect, reason, .. } =
-            std::mem::replace(&mut self.phase, Phase::Idle)
-        else {
-            unreachable!()
-        };
+    /// Execute [`PhaseEffect::CommitRedistribution`]: the machine is
+    /// already back in `Training` and hands over the participant set.
+    fn commit_redistribution(
+        &mut self,
+        expect: BTreeSet<DeviceId>,
+        reason: RedistReason,
+        t: Duration,
+    ) -> Result<()> {
         // flush handler replies made while the fetch log was recording
         self.drain_sends();
         self.vnet.recording = None;
@@ -1105,8 +1056,8 @@ impl Runner<'_> {
             ),
         );
         match reason {
-            Reason::Fault => self.reset_all(self.completed, t)?,
-            Reason::Dynamic => self.advance_repart_schedule(),
+            RedistReason::Fault => self.reset_all(self.completed, t)?,
+            RedistReason::Dynamic => self.advance_repart_schedule(),
         }
         self.wake(0, t + Duration::from_nanos(1));
         Ok(())
@@ -1162,13 +1113,14 @@ impl Runner<'_> {
         // hysteresis: moving weights has a real cost, so only rebalance
         // for a material (>1%) bottleneck improvement — this also keeps
         // float-epsilon capacity jitter from flipping DP tie-breaks
+        // (the machine already landed back in Training, so the no-op arm
+        // just advances the schedule)
         if new_ranges == old_ranges || cost > old_cost * 0.99 {
-            self.phase = Phase::Idle;
             self.advance_repart_schedule();
             self.wake(0, t + Duration::from_nanos(1));
             return Ok(());
         }
-        self.begin_redistribution(new_ranges, list, vec![], Reason::Dynamic, "dynamic", t)
+        self.begin_redistribution(new_ranges, list, vec![], RedistReason::Dynamic, "dynamic", t)
     }
 
     // -------------------------------------------------- central failure
@@ -1232,14 +1184,15 @@ impl Runner<'_> {
     }
 
     fn kill_central(&mut self, t: Duration) {
-        if self.central_down {
+        // KillCentral from Down is the one transition the machine rejects
+        // outright — that is exactly the double-kill script guard
+        if self.machine.step(PhaseInput::KillCentral).is_err() {
             self.trace_line(t, format_args!("script: kill central ignored (already down)"));
             return;
         }
         // sends made while the central was alive price (and, for
         // FetchWeights, log) under the live fabric — then die with it
         self.drain_sends();
-        self.central_down = true;
         self.dead[0] = true;
         self.vnet.dead[0] = true;
         self.vnet.recording = None;
@@ -1265,18 +1218,21 @@ impl Runner<'_> {
         if let Some(p) = self.adaptive.as_mut() {
             *p = AdaptivePolicy::new(self.sc.adaptive.clone());
         }
+        // the admission roster is coordinator memory too: the restarted
+        // process re-admits from the CentralRestart replies
+        self.roster = WorkerRoster::unlimited();
         self.inflight = 0;
-        self.phase = Phase::Down;
         self.trace_line(t, format_args!("script: kill central node"));
     }
 
     fn restart_central(&mut self, t: Duration) -> Result<()> {
-        if !self.central_down {
+        // CentralRestarted only applies in Down: a restart while alive is a
+        // script no-op, same as a double kill
+        if self.machine.step(PhaseInput::CentralRestarted { now: t }).is_err() {
             self.trace_line(t, format_args!("script: restart central ignored (not down)"));
             return Ok(());
         }
         self.drain_sends(); // nothing may slip past the dead-bit flip
-        self.central_down = false;
         self.dead[0] = false;
         self.vnet.dead[0] = false;
         self.busy_until[0] = t;
@@ -1299,6 +1255,11 @@ impl Runner<'_> {
         // manifest's initial weights out), then the stage-0 weights
         let ti = self.train_init(ck.state.ranges.clone(), ck.state.worker_list.clone(), 1);
         self.workers[0].apply_init(&ti)?;
+        // re-admit the checkpoint's roster: the kill wiped coordinator
+        // memory, so admission restarts from what durable state names
+        for d in self.peers_of_central() {
+            self.roster.admit(d)?;
+        }
         let (lo0, hi0) = ck.state.ranges[0];
         for (&b, bp) in &ck.weights {
             if b >= lo0 && b <= hi0 {
@@ -1320,8 +1281,9 @@ impl Runner<'_> {
         // re-measure the central's own outgoing link, like bootstrap does
         // (workers re-measure theirs when the rejoin InitState lands)
         self.workers[0].measure_bandwidth(&h)?;
+        // the machine owns the rejoin ack set; the runner only schedules
+        // the deadline wake that will deliver the Poll past it
         let deadline = t + self.sc.probe_window;
-        self.phase = Phase::Rejoining { acks: BTreeMap::new(), deadline };
         self.ckpt_restore = Some(ck);
         self.wake(0, deadline + Duration::from_nanos(1));
         Ok(())
@@ -1362,7 +1324,11 @@ impl Runner<'_> {
                 (lo..=hi).filter_map(|b| ck.weights.get(&b).map(|bp| (b, bp.clone()))).collect();
             if !blocks.is_empty() {
                 self.workers[0].backups.remove_owner(dev);
-                self.workers[0].backups.store(dev, ReplicaKind::Global, s, 0, blocks);
+                // seed at the post-restart epoch so any straggling
+                // pre-restart push (a lower epoch) loses the version race
+                // (DESIGN.md §9 case 2)
+                let v = replication::epoch_version(self.restarts as u64, 0);
+                self.workers[0].backups.store(dev, ReplicaKind::Global, s, v, blocks);
             }
         }
         // every rejoined worker is forced onto the checkpoint topology
@@ -1402,7 +1368,6 @@ impl Runner<'_> {
                     committed + 1
                 ),
             );
-            self.phase = Phase::Idle;
             self.reset_all(committed, t)?;
         } else {
             // case 3 against the checkpoint topology: renumber, re-plan,
@@ -1426,12 +1391,13 @@ impl Runner<'_> {
             let (new_ranges, _) = optimal_partition(&cm);
             for &d in &dead {
                 self.estimator.clear_device(d);
+                self.roster.evict(d);
             }
             self.begin_redistribution(
                 new_ranges,
                 new_list,
                 failed,
-                Reason::Fault,
+                RedistReason::Fault,
                 "central restart",
                 t,
             )?;

@@ -1,0 +1,268 @@
+//! Family: the shared coordinator phase machine (`coordinator::core`,
+//! DESIGN.md §12). Two kinds of guarantees:
+//!
+//! * **Property tests** over random `PhaseInput` sequences — `step` is
+//!   deterministic (same inputs, same phases, same log), and an illegal
+//!   input leaves the machine completely untouched (phase, accumulated
+//!   acks, and transition log).
+//! * **Cross-driver conformance** — the discrete-event sim driver's
+//!   `ScenarioOutcome::phase_log` must be exactly the log a hand-driven
+//!   `PhaseMachine` produces when fed the same fault story, proving the
+//!   driver executes the machine's effect sequence rather than its own
+//!   phase logic (the threaded coordinator records the same log into
+//!   `RunRecord::phase_log`).
+
+use std::collections::BTreeSet;
+use std::time::Duration;
+
+use ftpipehd::coordinator::{
+    CoordinatorPhase, PhaseConfig, PhaseEffect, PhaseInput, PhaseMachine, RedistReason,
+};
+use ftpipehd::sim::script::{Action, Scenario, ScriptEvent, Trigger};
+use ftpipehd::util::prop::{check, G};
+
+use crate::common;
+
+fn ms(x: usize) -> Duration {
+    Duration::from_millis(x as u64)
+}
+
+/// One random lifecycle input. Ids, batch numbers, and timestamps are
+/// arbitrary — the machine must hold its invariants for all of them.
+fn arbitrary_input(g: &mut G<'_>) -> PhaseInput {
+    match g.usize_in(0, 10) {
+        0 => PhaseInput::StartProfiling,
+        1 => PhaseInput::TrainingStarted,
+        2 => PhaseInput::ProbeAck { id: g.usize_in(1, 4), fresh: g.bool() },
+        3 => PhaseInput::FetchDone { id: g.usize_in(1, 4) },
+        4 => PhaseInput::WorkerStateReport {
+            id: g.usize_in(1, 4),
+            committed_bwd: g.usize_in(0, 50) as i64 - 1,
+            fresh: g.bool(),
+        },
+        5 => PhaseInput::FaultDetected {
+            overdue: g.usize_in(0, 100) as u64,
+            now: ms(g.usize_in(0, 5_000)),
+        },
+        6 => PhaseInput::DrainForRepartition,
+        7 => {
+            let expect: BTreeSet<usize> = (1..=g.usize_in(0, 3)).collect();
+            PhaseInput::RedistributionStarted {
+                expect,
+                reason: if g.bool() { RedistReason::Fault } else { RedistReason::Dynamic },
+                now: ms(g.usize_in(0, 5_000)),
+            }
+        }
+        8 => PhaseInput::KillCentral,
+        9 => PhaseInput::CentralRestarted { now: ms(g.usize_in(0, 5_000)) },
+        _ => {
+            let overdue = if g.bool() { Some(g.usize_in(0, 100) as u64) } else { None };
+            PhaseInput::Poll {
+                now: ms(g.usize_in(0, 10_000)),
+                overdue,
+                inflight: g.usize_in(0, 4),
+                peers: g.usize_in(0, 4),
+                local_fetch_done: g.bool(),
+            }
+        }
+    }
+}
+
+#[test]
+fn coordinator_core_step_is_deterministic_and_errors_are_side_effect_free() {
+    check("phase-machine-step", 300, |g| {
+        let cfg = PhaseConfig {
+            probe_window: ms(g.usize_in(1, 2_000)),
+            redist_window: ms(g.usize_in(1, 10_000)),
+        };
+        // a: the machine under test; b: fed the identical sequence
+        // (determinism); c: fed only the inputs a accepted (an Err step
+        // must therefore be indistinguishable from no step at all)
+        let mut a = PhaseMachine::new(cfg);
+        let mut b = PhaseMachine::new(cfg);
+        let mut c = PhaseMachine::new(cfg);
+        let n = g.sized_usize(1, 80);
+        for i in 0..n {
+            let input = arbitrary_input(g);
+            let before = a.phase();
+            let log_before = a.log().len();
+            let ra = a.step(input.clone());
+            let rb = b.step(input.clone());
+            if ra != rb {
+                return Err(format!("step {i}: divergent results {ra:?} vs {rb:?}"));
+            }
+            match ra {
+                Ok((after, _)) => {
+                    if after != a.phase() {
+                        return Err(format!("step {i}: returned phase != machine phase"));
+                    }
+                    c.step(input).map_err(|e| {
+                        format!("step {i}: replay of an accepted input rejected: {e}")
+                    })?;
+                }
+                Err(e) => {
+                    if e.from != before {
+                        return Err(format!("step {i}: error names phase {} != {before}", e.from));
+                    }
+                    if a.phase() != before {
+                        return Err(format!(
+                            "step {i}: illegal input moved the machine {before}->{}",
+                            a.phase()
+                        ));
+                    }
+                    if a.log().len() != log_before {
+                        return Err(format!("step {i}: illegal input appended to the log"));
+                    }
+                }
+            }
+        }
+        if a.phase() != c.phase() {
+            return Err(format!(
+                "skipping rejected inputs changed the outcome: {} vs {}",
+                a.phase(),
+                c.phase()
+            ));
+        }
+        if a.log() != c.log() {
+            return Err("skipping rejected inputs changed the transition log".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn coordinator_core_down_rejects_everything_but_restart() {
+    // from Down, the only way forward is CentralRestarted — by
+    // construction a resumed coordinator cannot skip the handshake
+    let cfg = PhaseConfig { probe_window: ms(100), redist_window: ms(500) };
+    let mut m = PhaseMachine::resuming(cfg);
+    assert_eq!(m.phase(), CoordinatorPhase::Down);
+    assert!(m.step(PhaseInput::StartProfiling).is_err());
+    assert!(m.step(PhaseInput::TrainingStarted).is_err());
+    assert!(m.step(PhaseInput::DrainForRepartition).is_err());
+    assert!(m.step(PhaseInput::KillCentral).is_err());
+    assert!(m
+        .step(PhaseInput::FaultDetected { overdue: 0, now: ms(0) })
+        .is_err());
+    let (phase, _) = m.step(PhaseInput::CentralRestarted { now: ms(0) }).unwrap();
+    assert_eq!(phase, CoordinatorPhase::Rejoining);
+}
+
+/// The canonical §III-F case-3 story, hand-driven through the pure
+/// machine: this test *is* a second driver, and its log must match the
+/// sim driver's byte for byte.
+fn hand_driven_case3_log(sc: &Scenario) -> Vec<String> {
+    let mut m = PhaseMachine::new(PhaseConfig {
+        probe_window: sc.probe_window,
+        redist_window: sc.redist_window,
+    });
+    let t0 = ms(1_000);
+    // the sim skips profiling (the fixture ships a profile)
+    m.step(PhaseInput::TrainingStarted).unwrap();
+    // fault: the detector reports an overdue batch on a driver poll and
+    // the machine opens the probe window (this is how the sim driver
+    // enters Probing — `FaultDetected` is its abort-re-probe path)
+    let poll = |now: Duration| PhaseInput::Poll {
+        now,
+        overdue: Some(21),
+        inflight: 1,
+        peers: 2,
+        local_fetch_done: true,
+    };
+    let (_, eff) = m.step(poll(t0)).unwrap();
+    assert!(matches!(eff[..], [PhaseEffect::SendProbes { .. }]));
+    // worker 1 is dead; worker 2 answers the probe
+    m.step(PhaseInput::ProbeAck { id: 2, fresh: false }).unwrap();
+    // inside the window with one of two acks: the poll stays put
+    let (_, eff) = m.step(poll(t0 + ms(1))).unwrap();
+    assert!(eff.is_empty(), "premature probe resolution: {eff:?}");
+    // the deadline poll resolves with the partial ack set (case 3)
+    let (_, eff) = m.step(poll(t0 + sc.probe_window)).unwrap();
+    let acks = match &eff[..] {
+        [PhaseEffect::ResolveProbe { acks }] => acks.clone(),
+        other => panic!("expected ResolveProbe, got {other:?}"),
+    };
+    assert_eq!(acks.into_iter().collect::<Vec<_>>(), vec![(2, false)]);
+    // the driver renumbers and starts the redistribution with the
+    // survivor, whose FetchDone completes it
+    let t1 = t0 + sc.probe_window + ms(1);
+    let expect: BTreeSet<usize> = [2].into_iter().collect();
+    m.step(PhaseInput::RedistributionStarted {
+        expect,
+        reason: RedistReason::Fault,
+        now: t1,
+    })
+    .unwrap();
+    m.step(PhaseInput::FetchDone { id: 2 }).unwrap();
+    let (phase, eff) = m
+        .step(PhaseInput::Poll {
+            now: t1 + ms(1),
+            overdue: None,
+            inflight: 0,
+            peers: 1,
+            local_fetch_done: true,
+        })
+        .unwrap();
+    assert_eq!(phase, CoordinatorPhase::Training);
+    assert!(matches!(eff[..], [PhaseEffect::CommitRedistribution { .. }]));
+    m.take_log()
+}
+
+#[test]
+fn coordinator_core_sim_driver_conforms_to_hand_driven_machine() {
+    // worker 1 dies for good at batch 20 of a 3-device exact-recovery
+    // run: one case-3 fault round, one redistribution, nothing else
+    let sc = Scenario::exact_recovery("core-conf", 3, 40).with_events(vec![ScriptEvent {
+        at: Trigger::BatchDone(20),
+        action: Action::Kill { device: 1, revive_after: None },
+    }]);
+    let out = common::run_twice_deterministic("core-conf", &sc);
+    assert_eq!(out.recoveries, 1);
+    let expected = hand_driven_case3_log(&sc);
+    assert_eq!(
+        out.phase_log, expected,
+        "sim driver's transition log diverges from the pure machine"
+    );
+}
+
+#[test]
+fn coordinator_core_phase_log_is_deterministic_across_runs() {
+    let sc = Scenario::exact_recovery("core-det", 3, 30).with_events(vec![ScriptEvent {
+        at: Trigger::BatchDone(12),
+        action: Action::Kill { device: 2, revive_after: None },
+    }]);
+    let a = common::run_once("core-det-a", &sc);
+    let b = common::run_once("core-det-b", &sc);
+    assert_eq!(a.phase_log, b.phase_log, "phase log must replay identically");
+    assert!(!a.phase_log.is_empty());
+}
+
+#[test]
+fn coordinator_core_central_restart_walks_down_rejoining_training() {
+    // the central-kill family seen through the machine's eyes: the
+    // lifecycle lines must appear in order in the phase log
+    let sc = Scenario::exact_recovery("core-restart", 3, 40)
+        .with_checkpoint(10)
+        .with_events(vec![ScriptEvent {
+            at: Trigger::BatchDone(15),
+            action: Action::KillCentral { restart_after: Some(ms(50)) },
+        }]);
+    let out = common::run_twice_deterministic("core-restart", &sc);
+    assert_eq!(out.restarts, 1);
+    let order = [
+        "training-started: idle->training",
+        "kill-central: training->central-down",
+        "central-restarted: central-down->rejoining",
+        "poll: rejoining->training [resolve-rejoin]",
+    ];
+    let mut at = 0usize;
+    for needle in order {
+        match out.phase_log[at..].iter().position(|l| l == needle) {
+            Some(i) => at += i + 1,
+            None => panic!(
+                "phase log missing {needle:?} (in order) — log:\n{}",
+                out.phase_log.join("\n")
+            ),
+        }
+    }
+}

@@ -18,6 +18,7 @@
 //! * `chaos`              — seeded randomized kill/slowdown storms
 //! * `bandwidth`          — link degradation + INT8 wire compression
 //! * `checkpoint_restart` — central-node death + reboot from checkpoint
+//! * `coordinator_core`   — shared phase-machine properties + cross-driver conformance
 //! * `adaptive`           — bandwidth-driven tier ladder (off → q4)
 //! * `rolling_churn`      — generated waves of kill+revive across a fleet
 //! * `correlated`         — a contiguous rack/region slice dies at once
@@ -35,6 +36,7 @@ mod bandwidth;
 mod chaos;
 mod checkpoint_restart;
 mod churn;
+mod coordinator_core;
 mod correlated;
 mod mid_redistribution;
 mod multi_fault;

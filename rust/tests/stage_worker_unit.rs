@@ -79,6 +79,8 @@ fn init(ranges: Vec<(usize, usize)>, list: Vec<usize>) -> TrainInit {
         bw_probe_bytes: 0,
         tier_floor: ftpipehd::net::quant::Tier::Off,
         tier_ceiling: ftpipehd::net::quant::Tier::FullQ4,
+        replica_epoch: 0,
+        worker_quota: 0,
     }
 }
 

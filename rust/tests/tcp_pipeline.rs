@@ -87,6 +87,8 @@ fn two_process_style_pipeline_over_tcp() {
         bw_probe_bytes: 0,
         tier_floor: ftpipehd::net::quant::Tier::Off,
         tier_ceiling: ftpipehd::net::quant::Tier::FullQ4,
+        replica_epoch: 0,
+        worker_quota: 0,
     };
     ep.send(1, Message::InitState(ti.clone())).unwrap();
     central.apply_init(&ti).unwrap();

@@ -75,6 +75,8 @@ fn probe_messages() -> Vec<Message> {
             bw_probe_bytes: 0,
             tier_floor: Tier::Off,
             tier_ceiling: Tier::FullQ4,
+            replica_epoch: 1,
+            worker_quota: 4,
         }),
         Message::Repartition {
             ranges: vec![(0, 3), (4, 5)],
