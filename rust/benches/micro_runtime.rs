@@ -1,9 +1,10 @@
 //! Microbench: the data-plane hot path — the message codec (f32 vs the
 //! INT8-quantized wire format), the quantizer itself, block execution
 //! through PJRT (with the literal conversions the pipeline pays per hop),
-//! and the discrete-event scenario engine driven flat out by big-cluster
-//! storms. These bound the per-batch overhead the coordinator adds on top
-//! of raw XLA compute; see EXPERIMENTS.md §Perf.
+//! the event-driven TCP transport over loopback, and the discrete-event
+//! scenario engine driven flat out by big-cluster storms. These bound the
+//! per-batch overhead the coordinator adds on top of raw XLA compute; see
+//! EXPERIMENTS.md §Perf.
 //!
 //! The codec/quantization section is synthetic and always runs — it needs
 //! no model artifacts — so CI always gets a real table plus the named
@@ -287,6 +288,75 @@ fn sim_section(table: &mut Table, metrics: &mut Vec<(String, f64)>) {
     metrics.push(("storm_500dev_wall_s".to_string(), secs));
 }
 
+/// The event-driven TCP transport over loopback: small-message rate
+/// (driver wakeups + write coalescing dominate) and bulk byte rate
+/// (vectored writes + the frame assembler dominate). Loopback removes
+/// the physical network, so these are transport-overhead tripwires:
+/// `tcp_msgs_per_sec` and `tcp_bytes_per_sec` are gated an order of
+/// magnitude below measured release-build values, and only a syscall
+/// storm (losing coalescing, a wakeup per frame) or an accidental copy
+/// per frame moves them by integer factors.
+fn tcp_section(table: &mut Table, metrics: &mut Vec<(String, f64)>) {
+    use ftpipehd::net::{loopback_cluster, Transport};
+    use std::time::{Duration, Instant};
+
+    let mut eps = loopback_cluster(2, 47310).expect("loopback TCP pair");
+    let e1 = eps.pop().unwrap();
+    let e0 = eps.pop().unwrap();
+    std::thread::sleep(Duration::from_millis(100)); // listeners up
+
+    // --- small-message rate: send-then-drain over one link ---
+    const SMALL: u64 = 5000;
+    let t0 = Instant::now();
+    for b in 0..SMALL {
+        e0.send(1, Message::Labels { batch: b, is_eval: false, data: vec![1] })
+            .expect("loopback send");
+    }
+    for _ in 0..SMALL {
+        e1.recv_timeout(Duration::from_secs(30)).expect("loopback small burst");
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let msgs_per_sec = SMALL as f64 / secs;
+    table.row(&[
+        format!("tcp loopback small msgs ({SMALL} x Labels)"),
+        format!("{:.0} msgs/s", msgs_per_sec),
+        format!("{:.2} ms total", secs * 1e3),
+    ]);
+    metrics.push(("tcp_msgs_per_sec".to_string(), msgs_per_sec));
+
+    // --- bulk byte rate: 48 x 256 KiB activation frames ---
+    const BULK: usize = 48;
+    const ELEMS: usize = 65_536; // 256 KiB of f32 per frame
+    let payload: Vec<f32> = vec![0.25; ELEMS];
+    let t0 = Instant::now();
+    for b in 0..BULK {
+        e0.send(
+            1,
+            Message::Forward {
+                batch: b as u64,
+                version0: 0,
+                is_eval: false,
+                data: Payload::F32(payload.clone().into()),
+            },
+        )
+        .expect("loopback send");
+    }
+    for _ in 0..BULK {
+        e1.recv_timeout(Duration::from_secs(60)).expect("loopback bulk burst");
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let bytes_per_sec = (BULK * ELEMS * 4) as f64 / secs;
+    table.row(&[
+        format!("tcp loopback bulk ({BULK} x {} KiB)", ELEMS * 4 / 1024),
+        format!("{:.2} MB/s", bytes_per_sec / 1e6),
+        format!("{:.2} ms total", secs * 1e3),
+    ]);
+    metrics.push(("tcp_bytes_per_sec".to_string(), bytes_per_sec));
+
+    e0.shutdown();
+    e1.shutdown();
+}
+
 fn pjrt_section(model: &str, table: &mut Table) {
     let manifest = Manifest::load(model).expect("manifest");
     let engine = Engine::cpu().expect("engine");
@@ -328,6 +398,7 @@ fn main() {
 
     quant_codec_section(&mut table, &mut metrics);
     coordinator_section(&mut table, &mut metrics);
+    tcp_section(&mut table, &mut metrics);
     sim_section(&mut table, &mut metrics);
 
     let model = common::model_dir("artifacts/edgenet");

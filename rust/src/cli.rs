@@ -3,6 +3,7 @@
 //! Flags are `--key value` (or `--flag` for booleans). Unknown keys error.
 
 use std::collections::BTreeMap;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -65,6 +66,17 @@ impl Args {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// Millisecond duration flag, e.g. `--net-down-ttl-ms 250`.
+    pub fn get_duration_ms(&self, key: &str, default: Duration) -> Result<Duration> {
+        match self.get(key) {
+            Some(v) => v
+                .parse::<u64>()
+                .map(Duration::from_millis)
+                .map_err(|_| anyhow!("--{key} expects milliseconds, got {v:?}")),
+            None => Ok(default),
+        }
+    }
+
     /// Comma-separated f64 list, e.g. `--capacities 1,2.5,10`.
     pub fn get_f64_list(&self, key: &str) -> Result<Option<Vec<f64>>> {
         match self.get(key) {
@@ -109,5 +121,21 @@ mod tests {
     #[test]
     fn rejects_bad_numbers() {
         assert!(args(&["--epochs", "x"]).get_usize("epochs", 1).is_err());
+    }
+
+    #[test]
+    fn parses_durations_in_ms() {
+        let a = args(&["--net-down-ttl-ms", "250"]);
+        assert_eq!(
+            a.get_duration_ms("net-down-ttl-ms", Duration::ZERO).unwrap(),
+            Duration::from_millis(250)
+        );
+        assert_eq!(
+            a.get_duration_ms("missing", Duration::from_secs(1)).unwrap(),
+            Duration::from_secs(1)
+        );
+        assert!(args(&["--net-down-ttl-ms", "fast"])
+            .get_duration_ms("net-down-ttl-ms", Duration::ZERO)
+            .is_err());
     }
 }

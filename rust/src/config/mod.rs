@@ -6,8 +6,11 @@
 //! 4e-5, chain replication every 50 batches, global every 100, dynamic
 //! re-partition after 10 batches of epoch 0 and then every 100.
 
+use std::time::Duration;
+
 use anyhow::{anyhow, Result};
 
+use crate::net::TcpConfig;
 use crate::util::json::Value;
 
 /// Wire-compression policy (off / activations-only / full / full+q4 /
@@ -168,6 +171,13 @@ pub struct RunConfig {
     pub seed: u64,
     /// Print per-batch progress.
     pub verbose: bool,
+
+    /// TCP transport tuning for multi-process deployments (ignored by
+    /// the in-process sim transport). JSON section `"net"`: \
+    /// `{"connect_attempts", "connect_backoff_ms", "connect_timeout_ms",
+    /// "down_ttl_ms", "coalesce_frames", "flush_on_drop_ms"}` — so
+    /// deployments tune dial backoff and queueing without recompiling.
+    pub net: TcpConfig,
 }
 
 impl Default for RunConfig {
@@ -202,6 +212,7 @@ impl Default for RunConfig {
             engine: Engine::FtPipeHd,
             seed: 0,
             verbose: false,
+            net: TcpConfig::default(),
         }
     }
 }
@@ -414,6 +425,31 @@ impl RunConfig {
         if let Some(x) = v.get("verbose").and_then(|x| x.as_bool()) {
             c.verbose = x;
         }
+        if let Some(n) = v.get("net") {
+            if *n != Value::Null {
+                let ms = |x: usize| Duration::from_millis(x as u64);
+                let mut b = c.net.to_builder();
+                if let Some(x) = getu(n, "connect_attempts") {
+                    b = b.connect_attempts(x as u32);
+                }
+                if let Some(x) = getu(n, "connect_backoff_ms") {
+                    b = b.connect_backoff(ms(x));
+                }
+                if let Some(x) = getu(n, "connect_timeout_ms") {
+                    b = b.connect_timeout(ms(x));
+                }
+                if let Some(x) = getu(n, "down_ttl_ms") {
+                    b = b.down_ttl(ms(x));
+                }
+                if let Some(x) = getu(n, "coalesce_frames") {
+                    b = b.coalesce_frames(x);
+                }
+                if let Some(x) = getu(n, "flush_on_drop_ms") {
+                    b = b.flush_on_drop(ms(x));
+                }
+                c.net = b.build();
+            }
+        }
         c.validate()?;
         Ok(c)
     }
@@ -456,6 +492,33 @@ mod tests {
         assert_eq!(c.compression, Compression::Full);
         assert_eq!(c.fault.as_ref().unwrap().at_batch, 205);
         assert_eq!(c.bandwidth(1), 2_000_000.0);
+    }
+
+    #[test]
+    fn parse_net_section() {
+        let v = json::parse(
+            r#"{
+              "net": {"connect_attempts": 9, "connect_backoff_ms": 25,
+                      "connect_timeout_ms": 800, "down_ttl_ms": 250,
+                      "coalesce_frames": 4, "flush_on_drop_ms": 500}
+            }"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&v).unwrap();
+        assert_eq!(c.net.connect_attempts(), 9);
+        assert_eq!(c.net.connect_backoff(), Duration::from_millis(25));
+        assert_eq!(c.net.connect_timeout(), Duration::from_millis(800));
+        assert_eq!(c.net.down_ttl(), Duration::from_millis(250));
+        assert_eq!(c.net.coalesce_frames(), 4);
+        assert_eq!(c.net.flush_on_drop(), Duration::from_millis(500));
+        // partial sections override only what they name; absent/null
+        // sections keep the defaults
+        let v = json::parse(r#"{"net": {"down_ttl_ms": 10}}"#).unwrap();
+        let c = RunConfig::from_json(&v).unwrap();
+        assert_eq!(c.net.down_ttl(), Duration::from_millis(10));
+        assert_eq!(c.net.connect_attempts(), TcpConfig::default().connect_attempts());
+        let v = json::parse(r#"{"net": null}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&v).unwrap().net, TcpConfig::default());
     }
 
     #[test]

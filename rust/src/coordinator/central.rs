@@ -24,8 +24,7 @@ use crate::metrics::{BatchRecord, EpochRecord, RunClock, RunRecord};
 use crate::model::BlockParams;
 use crate::net::message::{DeviceId, Message, TrainInit};
 use crate::net::quant::AdaptivePolicy;
-use crate::net::sim::{SimEndpoint, SimNet};
-use crate::net::Transport;
+use crate::net::{SimEndpoint, SimNet, Transport};
 use crate::partition::Partition;
 use crate::pipeline::{CompletedBatch, ControlEvent, DataEvent, Event, StageWorker};
 use crate::profile::{CapacityEstimator, ModelProfile};

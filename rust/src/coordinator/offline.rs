@@ -20,8 +20,7 @@ use crate::fault::FaultDetector;
 use crate::manifest::{Dtype, Manifest};
 use crate::metrics::{RunClock, RunRecord};
 use crate::net::message::{DeviceId, Message};
-use crate::net::sim::SimNet;
-use crate::net::Transport;
+use crate::net::{SimNet, Transport};
 use crate::partition::{homogeneous_partition, CostModel};
 use crate::pipeline::{run_worker, StageWorker};
 use crate::profile::{profile_model, CapacityEstimator, ModelProfile};

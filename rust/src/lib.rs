@@ -13,8 +13,8 @@
 //!   SGD+momentum, weight versioning/aggregation
 //! - [`data`] — synthetic datasets (vision mixture, Zipf-Markov LM)
 //! - [`net`] — shared `TensorBuf`, messages, codec, `Transport` (SimNet +
-//!   TCP), and the quantized wire formats + adaptive compression policy
-//!   (`net::quant`, DESIGN.md §8/§10)
+//!   the event-driven TCP reactor, DESIGN.md §13), and the quantized wire
+//!   formats + adaptive compression policy (`net::quant`, DESIGN.md §8/§10)
 //! - [`device`] — simulated heterogeneous devices (capacity, memory, faults)
 //! - [`profile`] — block profiler + capacity estimation (paper eqs 1–3)
 //! - [`partition`] — heterogeneity-aware DP partitioner (paper eqs 4–7)

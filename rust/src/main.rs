@@ -57,6 +57,10 @@ fn print_help() {
          \x20 ftpipehd central --model <dir> --addrs 127.0.0.1:7000,127.0.0.1:7001 [...]\n\
          \x20 ftpipehd worker  --addrs ... --rank N --model <dir>\n\
          \n\
+         TCP tuning (central/worker): [--config run.json] [--patient]\n\
+         \x20          [--net-connect-attempts N] [--net-connect-backoff-ms N]\n\
+         \x20          [--net-connect-timeout-ms N] [--net-down-ttl-ms N]\n\
+         \n\
          env: FTPIPEHD_LOG=error|warn|info|debug|trace"
     );
 }
@@ -241,9 +245,33 @@ fn cmd_check(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// TCP transport tuning: start from `--config <json>`'s `"net"` section
+/// (or the `--patient` preset, or the defaults), then apply per-flag
+/// millisecond overrides on top via the builder.
+fn net_config_from_args(args: &Args) -> Result<ftpipehd::net::TcpConfig> {
+    use ftpipehd::net::TcpConfig;
+    let base = match args.get("config") {
+        Some(path) => RunConfig::load(path)?.net,
+        None if args.get_bool("patient") => TcpConfig::patient(),
+        None => TcpConfig::default(),
+    };
+    let mut b = base.to_builder();
+    if let Some(n) = args.get("net-connect-attempts") {
+        b = b.connect_attempts(n.parse().context("--net-connect-attempts")?);
+    }
+    b = b.connect_backoff(
+        args.get_duration_ms("net-connect-backoff-ms", base.connect_backoff())?,
+    );
+    b = b.connect_timeout(
+        args.get_duration_ms("net-connect-timeout-ms", base.connect_timeout())?,
+    );
+    b = b.down_ttl(args.get_duration_ms("net-down-ttl-ms", base.down_ttl())?);
+    Ok(b.build())
+}
+
 /// Multi-process TCP deployment (real distributed mode).
 fn cmd_tcp(args: &Args, is_central: bool) -> Result<()> {
-    use ftpipehd::net::tcp::TcpEndpoint;
+    use ftpipehd::net::TcpEndpoint;
 
     let addrs: Vec<String> = args
         .get("addrs")
@@ -254,7 +282,8 @@ fn cmd_tcp(args: &Args, is_central: bool) -> Result<()> {
     let rank = if is_central { 0 } else { args.get_usize("rank", 1)? };
     let model_dir = args.get("model").unwrap_or("artifacts/edgenet-tiny");
     let manifest = std::sync::Arc::new(Manifest::load(model_dir)?);
-    let ep = TcpEndpoint::bind(rank, addrs.clone())?;
+    let net_cfg = net_config_from_args(args)?;
+    let ep = TcpEndpoint::bind_with(rank, addrs.clone(), net_cfg, ftpipehd::sim::real_clock())?;
 
     if is_central {
         bail!(
@@ -268,27 +297,6 @@ fn cmd_tcp(args: &Args, is_central: bool) -> Result<()> {
     let blocks = runtime::load_all_blocks(&engine, &manifest)?;
     let sim = ftpipehd::device::SimDevice::new(DeviceConfig::default(), rank as u64);
     let w = ftpipehd::pipeline::StageWorker::new(rank, manifest, blocks, sim, None);
-    ftpipehd::pipeline::run_worker(w, Box::new(TcpWrap(ep)), None)?;
+    ftpipehd::pipeline::run_worker(w, Box::new(ep), None)?;
     Ok(())
-}
-
-/// Adapter: TcpEndpoint is used behind the same trait object as SimEndpoint.
-struct TcpWrap(ftpipehd::net::tcp::TcpEndpoint);
-
-impl ftpipehd::net::Transport for TcpWrap {
-    fn my_id(&self) -> usize {
-        self.0.my_id()
-    }
-    fn send(&self, to: usize, msg: ftpipehd::net::Message) -> Result<()> {
-        self.0.send(to, msg)
-    }
-    fn recv_timeout(
-        &self,
-        timeout: std::time::Duration,
-    ) -> Option<(usize, ftpipehd::net::Message)> {
-        self.0.recv_timeout(timeout)
-    }
-    fn n_devices(&self) -> usize {
-        self.0.n_devices()
-    }
 }

@@ -476,6 +476,29 @@ pub fn encode(from: DeviceId, msg: &Message) -> Vec<u8> {
     buf
 }
 
+// ---------- wire framing ----------
+
+/// Hard cap on one framed message. A length prefix at or above this is a
+/// corrupt/hostile stream, not a legitimate payload — the transport drops
+/// the connection instead of allocating gigabytes.
+pub const MAX_FRAME: usize = 1 << 30;
+
+/// The outer length prefix the TCP transport puts in front of a codec
+/// frame: `[u32 LE payload_len][codec frame]`.
+pub fn frame_header(payload_len: usize) -> [u8; 4] {
+    debug_assert!(payload_len < MAX_FRAME);
+    (payload_len as u32).to_le_bytes()
+}
+
+/// Parse a [`frame_header`], rejecting oversized (corrupt) lengths.
+pub fn frame_payload_len(header: [u8; 4]) -> Result<usize> {
+    let len = u32::from_le_bytes(header) as usize;
+    if len >= MAX_FRAME {
+        bail!("framed message of {len} bytes exceeds the {MAX_FRAME}-byte cap — corrupt stream?");
+    }
+    Ok(len)
+}
+
 /// Decode a frame produced by [`encode`]/[`encode_into`]. Returns
 /// `(from, message)`.
 pub fn decode(frame: &[u8]) -> Result<(DeviceId, Message)> {
@@ -648,6 +671,15 @@ mod tests {
         let (f2, m2) = decode(&frame).expect("decode");
         assert_eq!(f2, from);
         assert_eq!(&m2, msg);
+    }
+
+    #[test]
+    fn frame_header_roundtrips_and_rejects_oversize() {
+        for len in [0usize, 1, 255, 65_536, MAX_FRAME - 1] {
+            assert_eq!(frame_payload_len(frame_header(len)).unwrap(), len);
+        }
+        assert!(frame_payload_len((MAX_FRAME as u32).to_le_bytes()).is_err());
+        assert!(frame_payload_len([0xFF; 4]).is_err());
     }
 
     #[test]

@@ -1,25 +1,51 @@
 //! Networking: shared tensor buffers, message types, binary codec, and
-//! the [`Transport`] abstraction with two implementations — [`sim::SimNet`]
+//! the [`Transport`] abstraction with two implementations — [`SimNet`]
 //! (bandwidth/latency-modeled in-process links with fault injection; the
-//! default testbed, DESIGN.md §3) and [`tcp`] (real sockets for
-//! multi-process deployment, the analogue of the paper's Flask HTTP
-//! transport). Hot-path payloads are [`TensorBuf`]-backed: cloning and
-//! queueing a message never copies tensor data (see `net/buf.rs`).
+//! default testbed, DESIGN.md §3) and [`TcpEndpoint`] (real nonblocking
+//! sockets behind the [`reactor`] event loop for multi-process
+//! deployment, the analogue of the paper's Flask HTTP transport;
+//! DESIGN.md §13). Hot-path payloads are [`TensorBuf`]-backed: cloning
+//! and queueing a message never copies tensor data (see `net/buf.rs`).
+//!
+//! This module is the consolidated public surface: callers use
+//! `net::{Transport, TcpEndpoint, TcpConfig, SimNet, encode, decode}`
+//! rather than reaching through submodule paths.
 
 pub mod buf;
 pub mod codec;
 pub mod message;
 pub mod quant;
+pub mod reactor;
 pub mod sim;
 pub mod tcp;
 
 pub use buf::TensorBuf;
+pub use codec::{decode, encode, encode_into, CODEC_VERSION, MAX_FRAME};
 pub use message::{DeviceId, Message, Payload, ReplicaKind, WireTensor};
 pub use quant::{Compression, QTensor, Residual};
+pub use sim::{SimEndpoint, SimNet};
+pub use tcp::{loopback_cluster, TcpConfig, TcpConfigBuilder, TcpEndpoint};
 
 use std::time::Duration;
 
 use anyhow::Result;
+
+/// A peer-health snapshot, as observed by one endpoint about another
+/// (see [`Transport::peer_health`]). Every field is "unknown" until the
+/// transport has evidence — [`PeerHealth::default`] is the honest answer
+/// for a peer never heard from.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PeerHealth {
+    /// When this endpoint last received anything from the peer, on the
+    /// transport's clock.
+    pub last_seen: Option<Duration>,
+    /// Round-trip estimate, fed by the existing `Probe`/`BwTest` ack
+    /// traffic (EWMA on TCP; the modeled 2×latency on the sim net).
+    pub rtt: Option<Duration>,
+    /// Consecutive failed delivery/connect attempts since the peer was
+    /// last heard from. `0` for a healthy (or never-contacted) peer.
+    pub consecutive_failures: u32,
+}
 
 /// A device's endpoint into the network.
 pub trait Transport: Send {
@@ -30,4 +56,103 @@ pub trait Transport: Send {
     fn recv_timeout(&self, timeout: Duration) -> Option<(DeviceId, Message)>;
     /// Number of devices in the network.
     fn n_devices(&self) -> usize;
+
+    /// Health bookkeeping for `peer`. Transports that keep no books
+    /// return [`PeerHealth::default`] (everything unknown).
+    fn peer_health(&self, _peer: DeviceId) -> PeerHealth {
+        PeerHealth::default()
+    }
+
+    /// Block until every send already accepted by this endpoint has left
+    /// it — handed to the OS or dropped as undeliverable — or `timeout`
+    /// passes (then `Err` with the outstanding count). This is a local
+    /// barrier, not a delivery guarantee. Queue-less transports return
+    /// `Ok` immediately.
+    fn flush(&self, _timeout: Duration) -> Result<()> {
+        Ok(())
+    }
+
+    /// Graceful teardown: stop I/O and release transport resources.
+    /// Subsequent sends are silently dropped, pending receives drain.
+    /// Idempotent; also invoked by endpoint `Drop` impls.
+    fn shutdown(&self) {}
+}
+
+/// Order fan-out peers by observed health: fewest consecutive failures
+/// first, then lowest RTT estimate (unknown RTT sorts last), then id for
+/// determinism. Purely advisory — the deterministic sim-driven
+/// coordinator paths do *not* use it (reordering sends would perturb the
+/// byte-identical scenario traces); it serves latency-sensitive
+/// replication fan-out over real sockets.
+pub fn latency_ordered(t: &dyn Transport, peers: &[DeviceId]) -> Vec<DeviceId> {
+    let mut out = peers.to_vec();
+    out.sort_by_key(|&d| {
+        let h = t.peer_health(d);
+        (h.consecutive_failures, h.rtt.unwrap_or(Duration::MAX), d)
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A transport that only answers health questions.
+    struct Healths(Vec<PeerHealth>);
+
+    impl Transport for Healths {
+        fn my_id(&self) -> DeviceId {
+            0
+        }
+        fn send(&self, _to: DeviceId, _msg: Message) -> Result<()> {
+            Ok(())
+        }
+        fn recv_timeout(&self, _timeout: Duration) -> Option<(DeviceId, Message)> {
+            None
+        }
+        fn n_devices(&self) -> usize {
+            self.0.len()
+        }
+        fn peer_health(&self, peer: DeviceId) -> PeerHealth {
+            self.0[peer]
+        }
+    }
+
+    #[test]
+    fn default_surface_is_inert() {
+        struct Bare;
+        impl Transport for Bare {
+            fn my_id(&self) -> DeviceId {
+                0
+            }
+            fn send(&self, _to: DeviceId, _msg: Message) -> Result<()> {
+                Ok(())
+            }
+            fn recv_timeout(&self, _timeout: Duration) -> Option<(DeviceId, Message)> {
+                None
+            }
+            fn n_devices(&self) -> usize {
+                1
+            }
+        }
+        let b = Bare;
+        assert_eq!(b.peer_health(0), PeerHealth::default());
+        assert!(b.flush(Duration::from_secs(1)).is_ok());
+        b.shutdown();
+    }
+
+    #[test]
+    fn latency_ordered_prefers_healthy_then_fast_then_id() {
+        let ms = Duration::from_millis;
+        let t = Healths(vec![
+            PeerHealth { rtt: Some(ms(9)), ..Default::default() },      // 0: healthy, slow
+            PeerHealth { rtt: None, ..Default::default() },             // 1: healthy, unknown rtt
+            PeerHealth { rtt: Some(ms(2)), ..Default::default() },      // 2: healthy, fast
+            PeerHealth { consecutive_failures: 3, ..Default::default() }, // 3: failing
+            PeerHealth { rtt: None, ..Default::default() },             // 4: ties with 1 → id order
+        ]);
+        assert_eq!(latency_ordered(&t, &[0, 1, 2, 3, 4]), vec![2, 0, 1, 4, 3]);
+        // input subset + order independence
+        assert_eq!(latency_ordered(&t, &[4, 3, 2]), vec![2, 4, 3]);
+    }
 }

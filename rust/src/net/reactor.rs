@@ -1,0 +1,785 @@
+//! The minimal event reactor under the TCP transport (DESIGN.md §13).
+//!
+//! Three pieces, none of which is a runtime:
+//!
+//! * a hand-rolled, Linux-gated [`poll(2)`] shim ([`PollSet`]) — no libc
+//!   crate is available offline, so the one syscall the event loop needs
+//!   is declared by hand. Platforms without the shim fall back to a
+//!   short-sleep polling loop that reports every socket ready (correct
+//!   but degraded: every registered socket is nonblocking, so a spurious
+//!   "ready" costs one `WouldBlock`).
+//! * a self-pipe wakeup ([`WakePipe`]) so `Transport::send` — a pure
+//!   enqueue on the caller thread — can nudge the I/O driver out of
+//!   `poll`. An atomic `pending` flag coalesces wakes: on a busy
+//!   endpoint only the first enqueue between two driver iterations pays
+//!   a syscall, the rest are a single uncontended atomic swap.
+//! * the socket-free framing state machines: [`WriteQueue`] (per-peer
+//!   outbound frames, scatter-gather coalescing via `write_vectored`,
+//!   partial-write resume) and [`FrameAssembler`] (bulk reads into a
+//!   cursor buffer, in-place `[u32 length][codec frame]` parsing,
+//!   oversized-frame rejection). Both are pure over `Write`/`Read`, so
+//!   the readiness edge cases are unit-tested here without sockets.
+//!
+//! [`poll(2)`]: https://man7.org/linux/man-pages/man2/poll.2.html
+
+use std::collections::VecDeque;
+use std::io::{self, IoSlice, Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::codec::{frame_header, frame_payload_len};
+
+/// Raw file descriptor (our own alias so the non-Linux fallback compiles
+/// without `std::os::unix`).
+pub type Fd = i32;
+
+/// Reusable buffers shrink back to this capacity after an oversized
+/// frame, so one multi-MB weight push doesn't pin that much memory per
+/// connection forever (these are memory-capped edge devices).
+pub const MAX_RETAINED_BUF: usize = 1 << 20;
+
+// ---------- the poll(2) shim ----------
+
+#[cfg(target_os = "linux")]
+mod sys {
+    /// `struct pollfd` from `<poll.h>` (identical layout on every Linux
+    /// target rustc supports).
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+    pub const POLLNVAL: i16 = 0x020;
+
+    pub const F_GETFL: i32 = 3;
+    pub const F_SETFL: i32 = 4;
+    pub const O_NONBLOCK: i32 = 0o4000;
+
+    extern "C" {
+        pub fn poll(fds: *mut PollFd, nfds: u64, timeout_ms: i32) -> i32;
+        pub fn pipe(fds: *mut i32) -> i32;
+        pub fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        pub fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+        pub fn close(fd: i32) -> i32;
+        pub fn fcntl(fd: i32, cmd: i32, arg: i32) -> i32;
+    }
+}
+
+/// What a polled descriptor reported.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Readiness {
+    pub readable: bool,
+    pub writable: bool,
+    /// POLLERR / POLLHUP / POLLNVAL — the connection needs attention
+    /// regardless of the interest it was registered with.
+    pub error: bool,
+}
+
+/// A rebuild-per-iteration poll set: `register` descriptors with their
+/// interests, `wait`, then ask each slot (the index `register` returned)
+/// for its [`Readiness`].
+pub struct PollSet {
+    #[cfg(target_os = "linux")]
+    fds: Vec<sys::PollFd>,
+    #[cfg(not(target_os = "linux"))]
+    n: usize,
+}
+
+impl PollSet {
+    pub fn new() -> PollSet {
+        #[cfg(target_os = "linux")]
+        {
+            PollSet { fds: Vec::new() }
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            PollSet { n: 0 }
+        }
+    }
+
+    /// Drop every registration (capacity is kept).
+    pub fn clear(&mut self) {
+        #[cfg(target_os = "linux")]
+        self.fds.clear();
+        #[cfg(not(target_os = "linux"))]
+        {
+            self.n = 0;
+        }
+    }
+
+    /// Register `fd` with read/write interest; returns the slot index.
+    pub fn register(&mut self, fd: Fd, read: bool, write: bool) -> usize {
+        #[cfg(target_os = "linux")]
+        {
+            let mut events = 0i16;
+            if read {
+                events |= sys::POLLIN;
+            }
+            if write {
+                events |= sys::POLLOUT;
+            }
+            self.fds.push(sys::PollFd { fd, events, revents: 0 });
+            self.fds.len() - 1
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            let _ = (fd, read, write);
+            self.n += 1;
+            self.n - 1
+        }
+    }
+
+    /// Block until something is ready or `timeout` passes. Returns the
+    /// number of ready descriptors (0 on timeout / EINTR). The fallback
+    /// sleeps a short slice and reports everything ready — every socket
+    /// behind this set is nonblocking, so spurious readiness is safe.
+    pub fn wait(&mut self, timeout: Duration) -> usize {
+        #[cfg(target_os = "linux")]
+        {
+            let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+            let rc = unsafe { sys::poll(self.fds.as_mut_ptr(), self.fds.len() as u64, ms) };
+            if rc < 0 {
+                // EINTR (or any other failure): report nothing ready and
+                // let the driver rebuild + retry on the next iteration
+                for f in &mut self.fds {
+                    f.revents = 0;
+                }
+                return 0;
+            }
+            rc as usize
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            std::thread::sleep(timeout.min(Duration::from_millis(2)));
+            self.n
+        }
+    }
+
+    /// Readiness of the descriptor `register` put at `slot`.
+    pub fn readiness(&self, slot: usize) -> Readiness {
+        #[cfg(target_os = "linux")]
+        {
+            let r = self.fds[slot].revents;
+            Readiness {
+                readable: r & sys::POLLIN != 0,
+                writable: r & sys::POLLOUT != 0,
+                error: r & (sys::POLLERR | sys::POLLHUP | sys::POLLNVAL) != 0,
+            }
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            debug_assert!(slot < self.n);
+            Readiness { readable: true, writable: true, error: false }
+        }
+    }
+}
+
+impl Default for PollSet {
+    fn default() -> PollSet {
+        PollSet::new()
+    }
+}
+
+/// The descriptor of a pollable socket-like object, for [`PollSet::register`].
+#[cfg(target_os = "linux")]
+pub fn socket_fd<T: std::os::unix::io::AsRawFd>(s: &T) -> Fd {
+    s.as_raw_fd()
+}
+
+/// Fallback: no real descriptors — the degraded [`PollSet`] ignores them.
+#[cfg(not(target_os = "linux"))]
+pub fn socket_fd<T>(_s: &T) -> Fd {
+    -1
+}
+
+// ---------- self-pipe wakeup ----------
+
+/// Wakes a [`PollSet::wait`] from another thread. `wake` is called on
+/// every `Transport::send`, so it is built to be almost free on a busy
+/// endpoint: a relaxed-path atomic swap skips the pipe write whenever a
+/// wake is already pending (the driver clears the flag *before* it
+/// drains, so a send landing mid-drain still produces a fresh wake).
+pub struct WakePipe {
+    #[cfg(target_os = "linux")]
+    read_fd: Fd,
+    #[cfg(target_os = "linux")]
+    write_fd: Fd,
+    pending: AtomicBool,
+}
+
+impl WakePipe {
+    pub fn new() -> io::Result<WakePipe> {
+        #[cfg(target_os = "linux")]
+        {
+            let mut fds = [0i32; 2];
+            if unsafe { sys::pipe(fds.as_mut_ptr()) } != 0 {
+                return Err(io::Error::last_os_error());
+            }
+            for fd in fds {
+                unsafe {
+                    let fl = sys::fcntl(fd, sys::F_GETFL, 0);
+                    sys::fcntl(fd, sys::F_SETFL, fl | sys::O_NONBLOCK);
+                }
+            }
+            Ok(WakePipe { read_fd: fds[0], write_fd: fds[1], pending: AtomicBool::new(false) })
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            Ok(WakePipe { pending: AtomicBool::new(false) })
+        }
+    }
+
+    /// The end to register (read interest) in the driver's [`PollSet`].
+    pub fn read_fd(&self) -> Fd {
+        #[cfg(target_os = "linux")]
+        {
+            self.read_fd
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            -1
+        }
+    }
+
+    /// Nudge the driver. Coalesced: only the first call after a `drain`
+    /// writes to the pipe.
+    pub fn wake(&self) {
+        if self.pending.swap(true, Ordering::SeqCst) {
+            return; // a wake is already in flight
+        }
+        #[cfg(target_os = "linux")]
+        {
+            // a full pipe means wakes are pending anyway — EAGAIN is fine
+            let byte = 1u8;
+            unsafe { sys::write(self.write_fd, &byte, 1) };
+        }
+    }
+
+    /// Driver side: clear the flag, then empty the pipe. Clearing first
+    /// means a concurrent `wake` after this point writes a fresh byte
+    /// and the driver cannot sleep through it.
+    pub fn drain(&self) {
+        self.pending.store(false, Ordering::SeqCst);
+        #[cfg(target_os = "linux")]
+        {
+            let mut buf = [0u8; 64];
+            loop {
+                let n = unsafe { sys::read(self.read_fd, buf.as_mut_ptr(), buf.len()) };
+                if n <= 0 {
+                    break; // EAGAIN / EOF / error: pipe is empty enough
+                }
+            }
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for WakePipe {
+    fn drop(&mut self) {
+        unsafe {
+            sys::close(self.read_fd);
+            sys::close(self.write_fd);
+        }
+    }
+}
+
+// ---------- outbound: per-peer frame queue with write coalescing ----------
+
+/// One length-framed message awaiting the wire. `off` is the write
+/// cursor over the virtual `[header][payload]` concatenation.
+struct Frame {
+    header: [u8; 4],
+    payload: Vec<u8>,
+    off: usize,
+}
+
+impl Frame {
+    fn remaining(&self) -> usize {
+        4 + self.payload.len() - self.off
+    }
+}
+
+/// What one [`WriteQueue::write_to`] pass achieved.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WriteProgress {
+    /// Frames fully handed to the OS in this pass.
+    pub completed: usize,
+    /// The sink said `WouldBlock`: re-arm write interest and come back.
+    pub blocked: bool,
+}
+
+/// A peer's outbound queue. `Transport::send` pushes encoded frames; the
+/// I/O driver drains it with vectored writes that gather many
+/// `[header][payload]` pairs into one syscall and survive partial writes
+/// at any byte boundary (including mid-header).
+#[derive(Default)]
+pub struct WriteQueue {
+    frames: VecDeque<Frame>,
+    queued_bytes: usize,
+}
+
+impl WriteQueue {
+    pub fn new() -> WriteQueue {
+        WriteQueue::default()
+    }
+
+    /// Enqueue one encoded codec frame (the 4-byte length header is
+    /// derived here — callers hand over payload bytes only).
+    pub fn push(&mut self, payload: Vec<u8>) {
+        self.queued_bytes += 4 + payload.len();
+        self.frames.push_back(Frame { header: frame_header(payload.len()), payload, off: 0 });
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.frames.is_empty()
+    }
+
+    /// Frames waiting (a partially written head frame still counts).
+    pub fn len(&self) -> usize {
+        self.frames.len()
+    }
+
+    /// Unwritten bytes across all queued frames.
+    pub fn queued_bytes(&self) -> usize {
+        self.queued_bytes
+    }
+
+    /// Forget partial-write progress on the head frame. Called when a
+    /// connection is replaced: the new peer socket must see the frame
+    /// from byte 0, not from wherever the dead one stalled.
+    pub fn rewind(&mut self) {
+        if let Some(f) = self.frames.front_mut() {
+            self.queued_bytes += f.off;
+            f.off = 0;
+        }
+    }
+
+    /// Drop everything (peer is unreachable), recycling payload buffers
+    /// into `pool`. Returns the number of frames dropped.
+    pub fn clear_into(&mut self, pool: &mut Vec<Vec<u8>>) -> usize {
+        let n = self.frames.len();
+        for f in self.frames.drain(..) {
+            pool.push(f.payload);
+        }
+        self.queued_bytes = 0;
+        n
+    }
+
+    /// Write as much as the sink accepts, coalescing up to `coalesce`
+    /// frames per vectored write. Completed payload buffers are recycled
+    /// into `pool`. `Err` means the connection is dead (including a
+    /// zero-byte write); the queue keeps its frames so the caller can
+    /// [`Self::rewind`] and retry on a fresh connection.
+    pub fn write_to<W: Write>(
+        &mut self,
+        w: &mut W,
+        coalesce: usize,
+        pool: &mut Vec<Vec<u8>>,
+    ) -> io::Result<WriteProgress> {
+        let mut progress = WriteProgress::default();
+        let coalesce = coalesce.max(1);
+        while !self.frames.is_empty() {
+            let mut slices: Vec<IoSlice<'_>> = Vec::with_capacity(coalesce * 2);
+            for (i, f) in self.frames.iter().take(coalesce).enumerate() {
+                if i == 0 && f.off > 0 {
+                    if f.off < 4 {
+                        slices.push(IoSlice::new(&f.header[f.off..]));
+                        slices.push(IoSlice::new(&f.payload));
+                    } else {
+                        slices.push(IoSlice::new(&f.payload[f.off - 4..]));
+                    }
+                } else {
+                    slices.push(IoSlice::new(&f.header));
+                    slices.push(IoSlice::new(&f.payload));
+                }
+            }
+            match w.write_vectored(&slices) {
+                Ok(0) => {
+                    return Err(io::Error::new(io::ErrorKind::WriteZero, "peer accepted 0 bytes"))
+                }
+                Ok(n) => self.advance(n, pool, &mut progress.completed),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    progress.blocked = true;
+                    return Ok(progress);
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(progress)
+    }
+
+    /// Consume `n` written bytes off the front of the queue.
+    fn advance(&mut self, mut n: usize, pool: &mut Vec<Vec<u8>>, completed: &mut usize) {
+        self.queued_bytes -= n;
+        while n > 0 {
+            let rem = self.frames.front().expect("wrote more than was queued").remaining();
+            if n >= rem {
+                n -= rem;
+                let f = self.frames.pop_front().unwrap();
+                pool.push(f.payload);
+                *completed += 1;
+            } else {
+                self.frames.front_mut().unwrap().off += n;
+                n = 0;
+            }
+        }
+    }
+}
+
+// ---------- inbound: bulk reads + in-place frame parsing ----------
+
+/// What one [`FrameAssembler::read_from`] pass observed.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReadProgress {
+    pub bytes: usize,
+    /// Clean end-of-stream (peer closed). Parse what is buffered, then
+    /// drop the connection.
+    pub eof: bool,
+}
+
+/// Reassembles `[u32 length][codec frame]` out of a nonblocking byte
+/// stream: bulk reads land in one growable buffer with start/end
+/// cursors, frames are parsed in place (the returned slice borrows the
+/// buffer — zero copies before `codec::decode`), and `compact` reclaims
+/// consumed space between read bursts.
+pub struct FrameAssembler {
+    buf: Vec<u8>,
+    start: usize,
+    end: usize,
+}
+
+/// Read chunk size — one syscall ingests many small frames.
+const READ_CHUNK: usize = 64 * 1024;
+
+/// Per-pass ingest cap so one firehose connection cannot starve the rest
+/// of the poll loop.
+const MAX_READ_PER_PASS: usize = 1 << 20;
+
+impl FrameAssembler {
+    pub fn new() -> FrameAssembler {
+        FrameAssembler { buf: Vec::new(), start: 0, end: 0 }
+    }
+
+    /// Bytes buffered but not yet returned as frames.
+    pub fn buffered(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// Current buffer footprint (tests assert the post-burst shrink).
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Pull whatever the stream has (until `WouldBlock`, EOF, or the
+    /// per-pass cap). `Err` means the connection died mid-read.
+    pub fn read_from<R: Read>(&mut self, r: &mut R) -> io::Result<ReadProgress> {
+        let mut progress = ReadProgress::default();
+        loop {
+            if self.buf.len() - self.end < READ_CHUNK {
+                self.buf.resize(self.end + READ_CHUNK, 0);
+            }
+            match r.read(&mut self.buf[self.end..]) {
+                Ok(0) => {
+                    progress.eof = true;
+                    return Ok(progress);
+                }
+                Ok(n) => {
+                    self.end += n;
+                    progress.bytes += n;
+                    if progress.bytes >= MAX_READ_PER_PASS {
+                        return Ok(progress);
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(progress),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Parse the next complete frame, if any. The slice borrows this
+    /// assembler's buffer and is valid until the next mutating call.
+    /// `Err` = oversized (corrupt) length prefix: kill the connection.
+    pub fn next_frame(&mut self) -> Result<Option<&[u8]>> {
+        if self.buffered() < 4 {
+            return Ok(None);
+        }
+        let header: [u8; 4] = self.buf[self.start..self.start + 4].try_into().unwrap();
+        let len = frame_payload_len(header)?;
+        if self.buffered() < 4 + len {
+            return Ok(None);
+        }
+        let a = self.start + 4;
+        let b = a + len;
+        self.start = b;
+        Ok(Some(&self.buf[a..b]))
+    }
+
+    /// Reclaim consumed space (called between read bursts, when no
+    /// parsed slice is outstanding) and shed oversized capacity.
+    pub fn compact(&mut self) {
+        if self.start > 0 {
+            self.buf.copy_within(self.start..self.end, 0);
+            self.end -= self.start;
+            self.start = 0;
+        }
+        if self.end < MAX_RETAINED_BUF && self.buf.len() > MAX_RETAINED_BUF {
+            self.buf.truncate(MAX_RETAINED_BUF);
+            self.buf.shrink_to(MAX_RETAINED_BUF);
+        }
+    }
+}
+
+impl Default for FrameAssembler {
+    fn default() -> FrameAssembler {
+        FrameAssembler::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A sink that accepts at most `per_call` bytes per write and starts
+    /// answering `WouldBlock` once `accept_total` bytes have landed.
+    struct Throttle {
+        out: Vec<u8>,
+        per_call: usize,
+        accept_total: usize,
+    }
+
+    impl Write for Throttle {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            if self.out.len() >= self.accept_total {
+                return Err(io::Error::new(io::ErrorKind::WouldBlock, "full"));
+            }
+            let n = buf.len().min(self.per_call).min(self.accept_total - self.out.len());
+            self.out.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn framed(payload: &[u8]) -> Vec<u8> {
+        let mut v = (payload.len() as u32).to_le_bytes().to_vec();
+        v.extend_from_slice(payload);
+        v
+    }
+
+    #[test]
+    fn write_queue_coalesces_and_completes() {
+        let mut q = WriteQueue::new();
+        q.push(vec![1, 2, 3, 4, 5]);
+        q.push(vec![9, 9]);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.queued_bytes(), 4 + 5 + 4 + 2);
+        let mut pool = Vec::new();
+        let mut w = Throttle { out: Vec::new(), per_call: usize::MAX, accept_total: usize::MAX };
+        let p = q.write_to(&mut w, 16, &mut pool).unwrap();
+        assert_eq!(p, WriteProgress { completed: 2, blocked: false });
+        assert!(q.is_empty());
+        assert_eq!(q.queued_bytes(), 0);
+        assert_eq!(pool.len(), 2, "payload buffers recycled");
+        let mut expect = framed(&[1, 2, 3, 4, 5]);
+        expect.extend(framed(&[9, 9]));
+        assert_eq!(w.out, expect);
+    }
+
+    #[test]
+    fn write_queue_survives_partial_writes_at_any_boundary() {
+        // 3 bytes per call splits the 4-byte header across writes; the
+        // queue must resume exactly where the socket stalled
+        for per_call in 1..=7 {
+            let mut q = WriteQueue::new();
+            q.push(vec![10, 20, 30]);
+            q.push((0..40u8).collect());
+            let mut pool = Vec::new();
+            let mut w = Throttle { out: Vec::new(), per_call, accept_total: usize::MAX };
+            let p = q.write_to(&mut w, 4, &mut pool).unwrap();
+            assert_eq!(p.completed, 2, "per_call={per_call}");
+            let mut expect = framed(&[10, 20, 30]);
+            expect.extend(framed(&(0..40u8).collect::<Vec<_>>()));
+            assert_eq!(w.out, expect, "per_call={per_call}");
+        }
+    }
+
+    #[test]
+    fn write_queue_blocks_and_resumes() {
+        let mut q = WriteQueue::new();
+        q.push(vec![7; 32]);
+        let mut pool = Vec::new();
+        // socket takes 10 bytes (header + 6 payload) then blocks
+        let mut w = Throttle { out: Vec::new(), per_call: 64, accept_total: 10 };
+        let p = q.write_to(&mut w, 4, &mut pool).unwrap();
+        assert!(p.blocked);
+        assert_eq!(p.completed, 0);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.queued_bytes(), 36 - 10);
+        // readiness returns: the rest goes out and the frame completes
+        w.accept_total = usize::MAX;
+        let p = q.write_to(&mut w, 4, &mut pool).unwrap();
+        assert_eq!(p, WriteProgress { completed: 1, blocked: false });
+        assert_eq!(w.out, framed(&[7; 32]));
+    }
+
+    #[test]
+    fn write_queue_rewind_restarts_the_head_frame() {
+        let mut q = WriteQueue::new();
+        q.push(vec![1, 2, 3, 4]);
+        let mut pool = Vec::new();
+        let mut w = Throttle { out: Vec::new(), per_call: 64, accept_total: 6 };
+        assert!(q.write_to(&mut w, 4, &mut pool).unwrap().blocked);
+        // connection died mid-frame; a fresh one must see byte 0 again
+        q.rewind();
+        assert_eq!(q.queued_bytes(), 8);
+        let mut w2 = Throttle { out: Vec::new(), per_call: 64, accept_total: usize::MAX };
+        assert_eq!(q.write_to(&mut w2, 4, &mut pool).unwrap().completed, 1);
+        assert_eq!(w2.out, framed(&[1, 2, 3, 4]));
+    }
+
+    #[test]
+    fn write_queue_zero_byte_write_is_an_error() {
+        struct Dead;
+        impl Write for Dead {
+            fn write(&mut self, _buf: &[u8]) -> io::Result<usize> {
+                Ok(0)
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut q = WriteQueue::new();
+        q.push(vec![1]);
+        assert!(q.write_to(&mut Dead, 4, &mut Vec::new()).is_err());
+        assert_eq!(q.len(), 1, "the frame is kept for a retry on a fresh connection");
+    }
+
+    /// A stream that serves scripted chunks, then `WouldBlock`.
+    struct Chunks {
+        data: Vec<u8>,
+        pos: usize,
+        per_call: usize,
+    }
+
+    impl Read for Chunks {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            if self.pos >= self.data.len() {
+                return Err(io::Error::new(io::ErrorKind::WouldBlock, "drained"));
+            }
+            let n = (self.data.len() - self.pos).min(self.per_call).min(buf.len());
+            buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn assembler_reassembles_across_arbitrary_chunking() {
+        let mut wire = framed(b"hello");
+        wire.extend(framed(&[]));
+        wire.extend(framed(&[0xAB; 300]));
+        for per_call in [1, 2, 3, 5, 64, 1024] {
+            let mut r = Chunks { data: wire.clone(), pos: 0, per_call };
+            let mut asm = FrameAssembler::new();
+            let mut got: Vec<Vec<u8>> = Vec::new();
+            loop {
+                let p = asm.read_from(&mut r).unwrap();
+                while let Some(f) = asm.next_frame().unwrap() {
+                    got.push(f.to_vec());
+                }
+                asm.compact();
+                if p.bytes == 0 {
+                    break;
+                }
+            }
+            assert_eq!(got.len(), 3, "per_call={per_call}");
+            assert_eq!(got[0], b"hello");
+            assert_eq!(got[1], Vec::<u8>::new());
+            assert_eq!(got[2], vec![0xAB; 300]);
+            assert_eq!(asm.buffered(), 0);
+        }
+    }
+
+    #[test]
+    fn assembler_rejects_oversized_frames() {
+        let mut r = Chunks { data: vec![0xFF, 0xFF, 0xFF, 0xFF, 1, 2, 3], pos: 0, per_call: 64 };
+        let mut asm = FrameAssembler::new();
+        asm.read_from(&mut r).unwrap();
+        assert!(asm.next_frame().is_err(), "a ~4GiB length prefix is a corrupt stream");
+    }
+
+    #[test]
+    fn assembler_reports_eof() {
+        struct Eof;
+        impl Read for Eof {
+            fn read(&mut self, _buf: &mut [u8]) -> io::Result<usize> {
+                Ok(0)
+            }
+        }
+        let p = FrameAssembler::new().read_from(&mut Eof).unwrap();
+        assert!(p.eof);
+    }
+
+    #[test]
+    fn assembler_sheds_capacity_after_a_burst() {
+        let big = vec![7u8; 3 * MAX_RETAINED_BUF];
+        let mut r = Chunks { data: framed(&big), pos: 0, per_call: usize::MAX };
+        let mut asm = FrameAssembler::new();
+        loop {
+            let p = asm.read_from(&mut r).unwrap();
+            if p.bytes == 0 {
+                break;
+            }
+        }
+        assert_eq!(asm.next_frame().unwrap().unwrap().len(), big.len());
+        assert!(asm.capacity() > MAX_RETAINED_BUF);
+        asm.compact();
+        assert!(asm.capacity() <= MAX_RETAINED_BUF, "multi-MB burst must not pin memory");
+    }
+
+    #[test]
+    fn wake_pipe_is_poll_visible_and_coalesced() {
+        let wp = WakePipe::new().unwrap();
+        for _ in 0..100 {
+            wp.wake(); // coalesced: at most one byte in the pipe
+        }
+        let mut ps = PollSet::new();
+        let slot = ps.register(wp.read_fd(), true, false);
+        ps.wait(Duration::from_millis(200));
+        assert!(ps.readiness(slot).readable);
+        wp.drain();
+        // wake-after-drain is visible again (the flag was cleared)
+        wp.wake();
+        ps.clear();
+        let slot = ps.register(wp.read_fd(), true, false);
+        ps.wait(Duration::from_millis(200));
+        assert!(ps.readiness(slot).readable);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn drained_wake_pipe_times_out() {
+        let wp = WakePipe::new().unwrap();
+        wp.wake();
+        wp.drain();
+        let mut ps = PollSet::new();
+        let slot = ps.register(wp.read_fd(), true, false);
+        let t0 = std::time::Instant::now();
+        let n = ps.wait(Duration::from_millis(30));
+        assert_eq!(n, 0);
+        assert!(!ps.readiness(slot).readable);
+        assert!(t0.elapsed() >= Duration::from_millis(20), "poll must actually block");
+    }
+}

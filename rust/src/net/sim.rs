@@ -18,12 +18,13 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::message::{DeviceId, Message};
-use super::Transport;
+use super::{PeerHealth, Transport};
+use crate::sim::clock::{real_clock, SharedClock};
 
 struct WireItem {
     to: DeviceId,
@@ -44,6 +45,9 @@ struct Inner {
     pub bytes_out: Vec<AtomicU64>,
     /// messages delivered (for tests)
     pub delivered: AtomicU64,
+    /// messages accepted but not yet through their wire thread — what
+    /// `Transport::flush` waits on (net-wide: the wire is shared)
+    in_flight: AtomicU64,
 }
 
 impl Inner {
@@ -72,6 +76,10 @@ pub struct SimEndpoint {
     id: DeviceId,
     inner: Arc<Inner>,
     inbox_rx: Receiver<(DeviceId, Message)>,
+    /// peer -> when this endpoint last received from it (real clock;
+    /// feeds `Transport::peer_health`, does not touch the cost model)
+    last_seen: Mutex<HashMap<DeviceId, Duration>>,
+    clock: SharedClock,
 }
 
 impl SimNet {
@@ -97,11 +105,18 @@ impl SimNet {
             total_bytes: AtomicU64::new(0),
             bytes_out: (0..n).map(|_| AtomicU64::new(0)).collect(),
             delivered: AtomicU64::new(0),
+            in_flight: AtomicU64::new(0),
         });
         let endpoints = inbox_rx
             .into_iter()
             .enumerate()
-            .map(|(id, rx)| SimEndpoint { id, inner: inner.clone(), inbox_rx: rx })
+            .map(|(id, rx)| SimEndpoint {
+                id,
+                inner: inner.clone(),
+                inbox_rx: rx,
+                last_seen: Mutex::new(HashMap::new()),
+                clock: real_clock(),
+            })
             .collect();
         (SimNet { inner }, endpoints)
     }
@@ -174,6 +189,9 @@ fn send_impl(inner: &Arc<Inner>, from: DeviceId, to: DeviceId, msg: Message) -> 
                                     inner2.delivered.fetch_add(1, Ordering::Relaxed);
                                 }
                             }
+                            // off the wire (delivered or dropped): flush
+                            // barriers stop waiting on this message
+                            inner2.in_flight.fetch_sub(1, Ordering::SeqCst);
                         }
                     })
                     .expect("spawn wire thread");
@@ -181,7 +199,10 @@ fn send_impl(inner: &Arc<Inner>, from: DeviceId, to: DeviceId, msg: Message) -> 
             })
             .clone()
     };
-    let _ = tx.send(WireItem { to, from, msg, transfer });
+    inner.in_flight.fetch_add(1, Ordering::SeqCst);
+    if tx.send(WireItem { to, from, msg, transfer }).is_err() {
+        inner.in_flight.fetch_sub(1, Ordering::SeqCst);
+    }
     Ok(())
 }
 
@@ -200,11 +221,27 @@ impl Transport for SimEndpoint {
             std::thread::sleep(timeout.min(Duration::from_millis(20)));
             return None;
         }
-        self.inbox_rx.recv_timeout(timeout).ok()
+        let got = self.inbox_rx.recv_timeout(timeout).ok();
+        if let Some((from, _)) = &got {
+            self.last_seen.lock().unwrap().insert(*from, self.clock.now());
+        }
+        got
     }
 
     fn n_devices(&self) -> usize {
         self.inner.n
+    }
+
+    fn peer_health(&self, peer: DeviceId) -> PeerHealth {
+        SimEndpoint::peer_health(self, peer)
+    }
+
+    fn flush(&self, timeout: Duration) -> Result<()> {
+        SimEndpoint::flush(self, timeout)
+    }
+
+    fn shutdown(&self) {
+        SimEndpoint::shutdown(self)
     }
 }
 
@@ -215,7 +252,45 @@ impl SimEndpoint {
         while let Ok(m) = self.inbox_rx.try_recv() {
             out.push(m);
         }
+        for (from, _) in &out {
+            self.last_seen.lock().unwrap().insert(*from, self.clock.now());
+        }
         out
+    }
+
+    /// Health books about `peer`. The sim has perfect knowledge: RTT is
+    /// the modeled round trip (2× link latency), failures report whether
+    /// the peer is currently dead, last-seen tracks real receipts.
+    pub fn peer_health(&self, peer: DeviceId) -> PeerHealth {
+        PeerHealth {
+            last_seen: self.last_seen.lock().unwrap().get(&peer).copied(),
+            rtt: Some(self.inner.latency * 2),
+            consecutive_failures: u32::from(self.inner.dead[peer].load(Ordering::SeqCst)),
+        }
+    }
+
+    /// Wait for the modeled wire to quiesce (net-wide: the wire threads
+    /// are shared, so this is a superset of "this endpoint's sends").
+    /// Messages to/from dead devices are dropped at accept time and
+    /// never occupy the wire.
+    pub fn flush(&self, timeout: Duration) -> Result<()> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let n = self.inner.in_flight.load(Ordering::SeqCst);
+            if n == 0 {
+                return Ok(());
+            }
+            if Instant::now() >= deadline {
+                bail!("flush timed out with {n} message(s) on the wire");
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// Teardown = this device leaves the net: subsequent sends and
+    /// receives drop, exactly like [`SimNet::kill`] on itself.
+    pub fn shutdown(&self) {
+        self.inner.dead[self.id].store(true, Ordering::SeqCst);
     }
 }
 
@@ -330,6 +405,41 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
+    }
+
+    #[test]
+    fn flush_waits_for_the_modeled_wire() {
+        // 400 KB at 4 MB/s => ~100 ms on the wire; flush must block
+        // until the transfer clears, then the receipt is immediate
+        let (_net, eps) = SimNet::new(2, vec![4e6], Duration::ZERO);
+        let data = vec![0f32; 100_000];
+        let t0 = Instant::now();
+        eps[0].send(1, Message::Weights { blocks: vec![(0, vec![data.into()])] }).unwrap();
+        eps[0].flush(Duration::from_secs(5)).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(80), "flush returned mid-transfer");
+        assert!(eps[1].recv_timeout(Duration::from_millis(50)).is_some());
+    }
+
+    #[test]
+    fn peer_health_reflects_the_model() {
+        let (net, eps) = SimNet::new(2, vec![1e9], Duration::from_millis(15));
+        assert_eq!(eps[0].peer_health(1).rtt, Some(Duration::from_millis(30)));
+        assert_eq!(eps[0].peer_health(1).consecutive_failures, 0);
+        assert_eq!(eps[0].peer_health(1).last_seen, None);
+        eps[1].send(0, probe()).unwrap();
+        assert!(eps[0].recv_timeout(Duration::from_secs(1)).is_some());
+        assert!(eps[0].peer_health(1).last_seen.is_some());
+        net.kill(1);
+        assert_eq!(eps[0].peer_health(1).consecutive_failures, 1);
+    }
+
+    #[test]
+    fn shutdown_removes_the_device_from_the_net() {
+        let (net, eps) = SimNet::new(2, vec![1e9], Duration::ZERO);
+        eps[0].shutdown();
+        assert!(net.is_dead(0));
+        eps[0].send(1, probe()).unwrap(); // silently dropped
+        assert!(eps[1].recv_timeout(Duration::from_millis(50)).is_none());
     }
 
     #[test]

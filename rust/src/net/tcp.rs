@@ -1,59 +1,66 @@
 //! Real TCP transport for multi-process deployment (the analogue of the
-//! paper's Flask/HTTP stack, with the binary codec instead of JSON).
+//! paper's Flask/HTTP stack, with the binary codec instead of JSON),
+//! rebuilt around the [`reactor`](super::reactor) event loop
+//! (DESIGN.md §13).
 //!
-//! Frames are `[u32 little-endian length][codec frame]`. Each device runs
-//! one listener; outgoing connections are opened lazily, cached, and
-//! re-established with a bounded exponential backoff — a worker that
-//! binds slightly later than its peers (normal at cluster start) no
-//! longer kills the run. A reader thread per accepted connection pushes
-//! decoded messages into the endpoint's inbox, so `recv_timeout` has
-//! identical semantics to the sim transport and the whole pipeline runs
-//! unchanged over real sockets.
+//! Frames are `[u32 little-endian length][codec frame]`. Each endpoint
+//! runs ONE I/O driver thread: a nonblocking listener, every accepted
+//! and dialed socket, and a self-pipe wakeup all sit in a single
+//! [`PollSet`]. [`Transport::send`] is a pure enqueue — encode into a
+//! pooled buffer, push onto the peer's [`WriteQueue`], nudge the driver
+//! — zero syscalls on the caller thread (at most one coalesced wake
+//! write). The driver drains queues with vectored writes that gather
+//! many header+payload pairs per syscall.
 //!
-//! Buffer discipline: each sender thread serializes outgoing messages
-//! into one thread-local reusable frame buffer (outside the connection
-//! lock, so concurrent senders encode in parallel) and each reader
-//! thread reads frames into one reusable buffer — steady-state traffic
-//! performs no per-message allocations beyond the decoded tensors
-//! themselves.
+//! Dialing stays on short-lived helper threads (blocking
+//! `connect_timeout` with the historical bounded exponential backoff on
+//! the [`crate::sim::Clock`] seam) — a worker that binds slightly later
+//! than its peers is still bridged, and the driver never blocks in
+//! `connect`. Known-down peers fail fast: sends inside the `down_ttl`
+//! window are silently dropped (except `Probe`, the fault handler's
+//! "is it back up?" signal), exactly the old semantics.
+//!
+//! The driver also keeps per-peer health books — last-seen time,
+//! consecutive failures, an RTT EWMA fed by the existing `Probe`/
+//! `BwTest` ack traffic — surfaced through
+//! [`Transport::peer_health`](super::Transport::peer_health) and the
+//! [`super::latency_ordered`] fan-out helper.
+//!
+//! Delivery semantics vs. the old blocking transport: `send` no longer
+//! implies "written before return", so [`TcpEndpoint::flush`] is the
+//! explicit local barrier ("handed to the OS or dropped"), and `Drop`
+//! performs a bounded best-effort flush so a worker's final messages
+//! still reach the wire before the endpoint dies.
 
-use std::cell::RefCell;
-use std::collections::{HashMap, HashSet};
-use std::io::{Read, Write};
+use std::collections::HashMap;
+use std::io::{self, Read};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::codec;
 use super::message::{DeviceId, Message};
-use super::Transport;
+use super::reactor::{socket_fd, FrameAssembler, PollSet, WakePipe, WriteQueue, MAX_RETAINED_BUF};
+use super::{PeerHealth, Transport};
 use crate::sim::clock::{real_clock, SharedClock};
 
-/// Retry/backoff tuning of a [`TcpEndpoint`]. The defaults reproduce the
-/// historical hardcoded constants; tests on slow runners (and deployments
-/// with slower cluster start) widen them instead of racing fixed sleeps.
-/// All waiting runs on the [`crate::sim::Clock`] seam.
-#[derive(Debug, Clone)]
+/// Retry/backoff/queue tuning of a [`TcpEndpoint`]. Construct via
+/// [`TcpConfig::builder`] (fields are private so knobs can grow without
+/// breaking callers); the defaults reproduce the historical hardcoded
+/// constants. All backoff waiting runs on the [`crate::sim::Clock`] seam.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TcpConfig {
-    /// First-contact reconnect schedule: up to `connect_attempts` tries
-    /// with doubling sleeps starting at `connect_backoff` (defaults:
-    /// 5 tries sleeping 10+20+40+80 ms ≈ 150 ms of backoff, bridging
-    /// workers that bind a beat late at cluster start). Once a peer has
-    /// been reached, later reconnects use a single attempt (fast fail,
-    /// like a dead sim device).
-    pub connect_attempts: u32,
-    pub connect_backoff: Duration,
-    /// Per-attempt bound on TCP connect (a SYN-blackholed host must not
-    /// stall the sender for the OS default of minutes).
-    pub connect_timeout: Duration,
-    /// After a connect failure the peer is considered down for this
-    /// long: sends fail fast (silent drop) instead of re-dialing per
-    /// message while the fault handler converges. `Probe` messages
-    /// bypass this — they are exactly the "is it back up?" signal.
-    pub down_ttl: Duration,
+    connect_attempts: u32,
+    connect_backoff: Duration,
+    connect_timeout: Duration,
+    down_ttl: Duration,
+    coalesce_frames: usize,
+    flush_on_drop: Duration,
 }
 
 impl Default for TcpConfig {
@@ -63,291 +70,735 @@ impl Default for TcpConfig {
             connect_backoff: Duration::from_millis(10),
             connect_timeout: Duration::from_millis(500),
             down_ttl: Duration::from_secs(1),
+            coalesce_frames: 16,
+            flush_on_drop: Duration::from_secs(2),
         }
     }
 }
 
 impl TcpConfig {
+    pub fn builder() -> TcpConfigBuilder {
+        TcpConfigBuilder { cfg: TcpConfig::default() }
+    }
+
+    /// A builder seeded with this config, for per-flag overrides on top
+    /// of a loaded/preset base.
+    pub fn to_builder(&self) -> TcpConfigBuilder {
+        TcpConfigBuilder { cfg: self.clone() }
+    }
+
     /// A patient schedule for CI/loopback tests: the same doubling
     /// backoff but with more attempts (~2.5 s total), so a worker thread
     /// descheduled on an oversubscribed runner still gets bridged.
     pub fn patient() -> TcpConfig {
-        TcpConfig { connect_attempts: 9, ..TcpConfig::default() }
+        TcpConfig::builder().connect_attempts(9).build()
+    }
+
+    /// First-contact dial schedule: up to this many tries with doubling
+    /// sleeps starting at [`Self::connect_backoff`] (defaults: 5 tries
+    /// sleeping 10+20+40+80 ms ≈ 150 ms, bridging workers that bind a
+    /// beat late at cluster start). Once a peer has been reached, later
+    /// redials use a single attempt (fast fail, like a dead sim device).
+    pub fn connect_attempts(&self) -> u32 {
+        self.connect_attempts
+    }
+
+    pub fn connect_backoff(&self) -> Duration {
+        self.connect_backoff
+    }
+
+    /// Per-attempt bound on TCP connect (a SYN-blackholed host must not
+    /// stall the dialer for the OS default of minutes).
+    pub fn connect_timeout(&self) -> Duration {
+        self.connect_timeout
+    }
+
+    /// After a failed dial the peer is considered down for this long:
+    /// sends fail fast (silent drop) instead of re-dialing per message
+    /// while the fault handler converges. `Probe` messages bypass this.
+    pub fn down_ttl(&self) -> Duration {
+        self.down_ttl
+    }
+
+    /// Max frames gathered into one vectored write.
+    pub fn coalesce_frames(&self) -> usize {
+        self.coalesce_frames
+    }
+
+    /// Bound on the best-effort [`TcpEndpoint::flush`] that `Drop`
+    /// performs so queued final messages reach the wire.
+    pub fn flush_on_drop(&self) -> Duration {
+        self.flush_on_drop
     }
 }
 
-/// Hard cap on a frame's size; larger reads indicate a corrupt stream.
-const MAX_FRAME: usize = 1 << 30;
+/// Builder for [`TcpConfig`] — `TcpConfig::builder().connect_attempts(9).build()`.
+/// Out-of-range values are clamped to the nearest sane one (at least one
+/// connect attempt, at least one frame per write).
+#[derive(Debug, Clone)]
+pub struct TcpConfigBuilder {
+    cfg: TcpConfig,
+}
 
-/// Reusable frame buffers shrink back to this capacity after an
-/// oversized frame, so one multi-MB weight push doesn't pin that much
-/// memory per thread forever (these are memory-capped edge devices).
-const MAX_RETAINED_BUF: usize = 1 << 20;
+impl TcpConfigBuilder {
+    pub fn connect_attempts(mut self, n: u32) -> Self {
+        self.cfg.connect_attempts = n.max(1);
+        self
+    }
 
-/// TCP endpoint: `addrs[i]` is the listen address of device `i`.
-pub struct TcpEndpoint {
+    pub fn connect_backoff(mut self, d: Duration) -> Self {
+        self.cfg.connect_backoff = d;
+        self
+    }
+
+    pub fn connect_timeout(mut self, d: Duration) -> Self {
+        self.cfg.connect_timeout = d;
+        self
+    }
+
+    pub fn down_ttl(mut self, d: Duration) -> Self {
+        self.cfg.down_ttl = d;
+        self
+    }
+
+    pub fn coalesce_frames(mut self, n: usize) -> Self {
+        self.cfg.coalesce_frames = n.max(1);
+        self
+    }
+
+    pub fn flush_on_drop(mut self, d: Duration) -> Self {
+        self.cfg.flush_on_drop = d;
+        self
+    }
+
+    pub fn build(self) -> TcpConfig {
+        self.cfg
+    }
+}
+
+/// Encoded-frame buffers recycled between senders and the driver.
+const POOL_CAP: usize = 32;
+
+/// Driver tick when nothing is ready (sends interrupt it via the wake
+/// pipe, so this only bounds shutdown/redial latency, not send latency).
+const POLL_TICK: Duration = Duration::from_millis(200);
+
+/// One peer's outbound connection, queue, and health books.
+#[derive(Default)]
+struct Peer {
+    conn: Option<TcpStream>,
+    queue: WriteQueue,
+    /// a dial thread for this peer is in flight
+    dialing: bool,
+    /// reached at least once (first contact gets the full backoff)
+    ever_connected: bool,
+    /// the last write error already triggered a one-shot redial; a
+    /// second consecutive failure drops the queue (the old transport's
+    /// two-attempt rewrite semantics)
+    redialed: bool,
+    /// don't redial before this clock time (fast-fail window)
+    down_until: Option<Duration>,
+    last_seen: Option<Duration>,
+    rtt: Option<Duration>,
+    failures: u32,
+    /// enqueue time of the newest unanswered `Probe`/`BwTest`, matched
+    /// with its ack to feed the RTT estimate
+    probe_sent: Option<Duration>,
+}
+
+struct State {
+    peers: HashMap<DeviceId, Peer>,
+    /// frames accepted by `send` but not yet written-to-OS or dropped —
+    /// the quantity `flush` waits on
+    pending: usize,
+}
+
+/// Everything shared between caller threads, dial threads, and the driver.
+struct Shared {
     id: DeviceId,
     addrs: Vec<String>,
     cfg: TcpConfig,
     clock: SharedClock,
-    io: Mutex<IoState>,
+    state: Mutex<State>,
+    /// signaled whenever `pending` drops to zero
+    flushed: Condvar,
+    wake: WakePipe,
+    stop: AtomicBool,
+    /// recycled encode buffers (send pops, driver/dial push back)
+    pool: Mutex<Vec<Vec<u8>>>,
+}
+
+impl Shared {
+    fn recycle_all(&self, scratch: &mut Vec<Vec<u8>>) {
+        let mut pool = self.pool.lock().unwrap();
+        for mut b in scratch.drain(..) {
+            if pool.len() < POOL_CAP && b.capacity() <= MAX_RETAINED_BUF {
+                b.clear();
+                pool.push(b);
+            }
+        }
+    }
+}
+
+/// TCP endpoint: `addrs[i]` is the listen address of device `i`.
+pub struct TcpEndpoint {
+    sh: Arc<Shared>,
     inbox_rx: Receiver<(DeviceId, Message)>,
-    _inbox_tx: Sender<(DeviceId, Message)>, // keeps channel alive
-}
-
-/// Outgoing side: cached connections + peer liveness bookkeeping.
-struct IoState {
-    conns: HashMap<DeviceId, TcpStream>,
-    /// peers reached at least once (first contact gets the full backoff)
-    ever_connected: HashSet<DeviceId>,
-    /// peer -> don't redial before this clock time
-    down_until: HashMap<DeviceId, Duration>,
-}
-
-fn peer_of(stream: &TcpStream) -> String {
-    stream
-        .peer_addr()
-        .map(|a| a.to_string())
-        .unwrap_or_else(|_| "<unknown>".into())
-}
-
-/// Read one frame into `buf` (reused across frames). Returns Ok(false) on
-/// a clean peer close before a frame starts.
-fn read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<bool> {
-    let mut len4 = [0u8; 4];
-    match stream.read_exact(&mut len4) {
-        Ok(()) => {}
-        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(false),
-        Err(e) => return Err(e.into()),
-    }
-    let len = u32::from_le_bytes(len4) as usize;
-    anyhow::ensure!(
-        len < MAX_FRAME,
-        "frame too large from peer {}: {len} bytes (cap {MAX_FRAME}) — corrupt stream?",
-        peer_of(stream)
-    );
-    buf.clear();
-    if buf.capacity() > MAX_RETAINED_BUF && len < MAX_RETAINED_BUF {
-        buf.shrink_to(MAX_RETAINED_BUF);
-    }
-    // append via Take: reuses capacity without zero-filling first
-    let n = (&mut *stream)
-        .take(len as u64)
-        .read_to_end(buf)
-        .with_context(|| format!("reading a {len}-byte frame"))?;
-    anyhow::ensure!(n == len, "peer {} closed mid-frame ({n}/{len} bytes)", peer_of(stream));
-    Ok(true)
-}
-
-fn write_frame(stream: &mut TcpStream, frame: &[u8]) -> Result<()> {
-    stream.write_all(&(frame.len() as u32).to_le_bytes())?;
-    stream.write_all(frame)?;
-    stream.flush()?;
-    Ok(())
+    driver: Mutex<Option<JoinHandle<()>>>,
 }
 
 impl TcpEndpoint {
-    /// Bind `addrs[id]` and start the acceptor. All devices must use the
-    /// same `addrs` vector (the worker list of the deployment).
+    /// Bind `addrs[id]` and start the I/O driver. All devices must use
+    /// the same `addrs` vector (the worker list of the deployment).
     pub fn bind(id: DeviceId, addrs: Vec<String>) -> Result<TcpEndpoint> {
         TcpEndpoint::bind_with(id, addrs, TcpConfig::default(), real_clock())
     }
 
-    /// [`Self::bind`] with explicit retry tuning and time source.
+    /// [`Self::bind`] with explicit tuning and time source.
     pub fn bind_with(
         id: DeviceId,
         addrs: Vec<String>,
         cfg: TcpConfig,
         clock: SharedClock,
     ) -> Result<TcpEndpoint> {
-        let listener = TcpListener::bind(&addrs[id])
-            .with_context(|| format!("binding {}", addrs[id]))?;
-        let (tx, rx) = channel();
-        let tx_acceptor = tx.clone();
-        std::thread::Builder::new()
-            .name(format!("tcp-accept-{id}"))
-            .spawn(move || {
-                for stream in listener.incoming() {
-                    let Ok(mut stream) = stream else { continue };
-                    let tx = tx_acceptor.clone();
-                    std::thread::Builder::new()
-                        .name("tcp-read".into())
-                        .spawn(move || {
-                            let mut buf: Vec<u8> = Vec::new();
-                            loop {
-                                match read_frame(&mut stream, &mut buf) {
-                                    Ok(true) => match codec::decode(&buf) {
-                                        Ok((from, msg)) => {
-                                            if tx.send((from, msg)).is_err() {
-                                                break; // endpoint dropped
-                                            }
-                                        }
-                                        Err(e) => {
-                                            crate::log_warn!(
-                                                "tcp reader: undecodable frame ({e}); \
-                                                 closing connection"
-                                            );
-                                            break;
-                                        }
-                                    },
-                                    Ok(false) => break, // peer closed cleanly
-                                    Err(e) => {
-                                        crate::log_warn!("tcp reader: {e:#}; closing connection");
-                                        break;
-                                    }
-                                }
-                            }
-                        })
-                        .ok();
-                }
-            })?;
-        Ok(TcpEndpoint {
-            id,
-            addrs,
-            cfg,
-            clock,
-            io: Mutex::new(IoState {
-                conns: HashMap::new(),
-                ever_connected: HashSet::new(),
-                down_until: HashMap::new(),
-            }),
-            inbox_rx: rx,
-            _inbox_tx: tx,
-        })
+        let listener =
+            TcpListener::bind(&addrs[id]).with_context(|| format!("binding {}", addrs[id]))?;
+        TcpEndpoint::with_listener(id, addrs, cfg, clock, listener)
     }
 
-    /// One bounded connect attempt.
-    fn connect_once(&self, to: DeviceId) -> Result<TcpStream> {
-        let addr = self.addrs[to]
-            .to_socket_addrs()
-            .with_context(|| format!("resolving {}", self.addrs[to]))?
-            .next()
-            .with_context(|| format!("no address for {}", self.addrs[to]))?;
-        let stream = TcpStream::connect_timeout(&addr, self.cfg.connect_timeout)?;
-        stream.set_nodelay(true).ok();
-        Ok(stream)
-    }
-
-    /// Connect with bounded exponential backoff. A peer that binds a beat
-    /// late (worker startup order is unordered) is retried; a peer that
-    /// stays unreachable returns Err after the schedule is exhausted.
-    fn connect_with_backoff(&self, to: DeviceId, attempts: u32) -> Result<TcpStream> {
-        let mut delay = self.cfg.connect_backoff;
+    /// Re-attach a restarted central (or any restarted device) to its
+    /// old address: retry the bind over the backoff schedule, riding on
+    /// SO_REUSEADDR (which std sets on Unix listeners) so the dead
+    /// process's lingering socket doesn't block the restart. Workers'
+    /// existing `CentralRestart`/`WorkerState` handshake then completes
+    /// over the fresh listener.
+    pub fn rebind(
+        id: DeviceId,
+        addrs: Vec<String>,
+        cfg: TcpConfig,
+        clock: SharedClock,
+    ) -> Result<TcpEndpoint> {
+        let attempts = cfg.connect_attempts().max(3);
+        let mut delay = cfg.connect_backoff();
         let mut last_err = None;
         for attempt in 0..attempts {
-            match self.connect_once(to) {
-                Ok(stream) => return Ok(stream),
+            match TcpListener::bind(&addrs[id]) {
+                Ok(l) => return TcpEndpoint::with_listener(id, addrs, cfg, clock, l),
                 Err(e) => {
                     last_err = Some(e);
                     if attempt + 1 < attempts {
-                        self.clock.sleep(delay);
+                        clock.sleep(delay);
                         delay *= 2;
                     }
                 }
             }
         }
-        Err(last_err.unwrap()).with_context(|| {
-            format!("connecting to device {to} at {} ({attempts} attempts)", self.addrs[to])
-        })
+        Err(last_err.unwrap())
+            .with_context(|| format!("rebinding {} ({attempts} attempts)", addrs[id]))
     }
 
-    /// Ship one encoded frame: lazily (re)connect, write, one rewrite
-    /// attempt on a stale cached connection (the peer may have restarted
-    /// between sends). Unreachable peers are dropped silently — same
-    /// semantics as the sim transport / a dead Flask worker; the failure
-    /// surfaces as a timeout at the coordinator.
-    fn send_frame(&self, to: DeviceId, frame: &[u8], msg: &Message) -> Result<()> {
-        let mut io = self.io.lock().unwrap();
-        let io = &mut *io;
-        // fail fast to a known-down peer — except probes, which are the
-        // fault handler's one-shot "is it back up?" signal and must
-        // always attempt a real dial
-        if !matches!(msg, Message::Probe) {
-            if let Some(until) = io.down_until.get(&to) {
-                if self.clock.now() < *until {
-                    return Ok(());
-                }
-                io.down_until.remove(&to);
-            }
+    fn with_listener(
+        id: DeviceId,
+        addrs: Vec<String>,
+        cfg: TcpConfig,
+        clock: SharedClock,
+        listener: TcpListener,
+    ) -> Result<TcpEndpoint> {
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        let sh = Arc::new(Shared {
+            id,
+            addrs,
+            cfg,
+            clock,
+            state: Mutex::new(State { peers: HashMap::new(), pending: 0 }),
+            flushed: Condvar::new(),
+            wake: WakePipe::new().context("wake pipe")?,
+            stop: AtomicBool::new(false),
+            pool: Mutex::new(Vec::new()),
+        });
+        let (tx, rx) = channel();
+        let sh2 = Arc::clone(&sh);
+        let driver = std::thread::Builder::new()
+            .name(format!("tcp-driver-{id}"))
+            .spawn(move || driver_loop(&sh2, &listener, &tx))?;
+        Ok(TcpEndpoint { sh, inbox_rx: rx, driver: Mutex::new(Some(driver)) })
+    }
+
+    /// The enqueue behind [`Transport::send`]: encode into a pooled
+    /// buffer (outside any lock), push onto the peer's queue, wake the
+    /// driver. Known-down peers drop silently (except `Probe`) — same
+    /// timeout-at-the-coordinator semantics as a dead sim device.
+    fn enqueue(&self, to: DeviceId, msg: Message) -> Result<()> {
+        let sh = &self.sh;
+        if sh.stop.load(Ordering::SeqCst) {
+            return Ok(()); // after shutdown sends are silently dropped
         }
-        for attempt in 0..2 {
-            if !io.conns.contains_key(&to) {
-                let attempts = if io.ever_connected.contains(&to) {
-                    1
-                } else {
-                    self.cfg.connect_attempts
-                };
-                match self.connect_with_backoff(to, attempts) {
-                    Ok(s) => {
-                        io.ever_connected.insert(to);
-                        io.down_until.remove(&to);
-                        io.conns.insert(to, s);
-                    }
-                    Err(e) => {
-                        io.down_until.insert(to, self.clock.now() + self.cfg.down_ttl);
-                        crate::log_warn!("tcp send: dropping {} to device {to}: {e:#}", msg.tag());
+        let mut buf = sh.pool.lock().unwrap().pop().unwrap_or_default();
+        codec::encode_into(&mut buf, sh.id, &msg);
+        let now = sh.clock.now();
+        let mut dial = None;
+        {
+            let mut st = sh.state.lock().unwrap();
+            let p = st.peers.entry(to).or_default();
+            if !matches!(msg, Message::Probe) {
+                if let Some(until) = p.down_until {
+                    if now < until {
+                        drop(st);
+                        buf.clear();
+                        let mut scratch = vec![buf];
+                        sh.recycle_all(&mut scratch);
                         return Ok(());
                     }
+                    p.down_until = None;
                 }
             }
-            let stream = io.conns.get_mut(&to).unwrap();
-            match write_frame(stream, frame) {
-                Ok(()) => return Ok(()),
-                Err(e) => {
-                    io.conns.remove(&to); // stale; retry once with a new conn
-                    if attempt == 1 {
-                        crate::log_warn!(
-                            "tcp send: dropping {} to device {to} after rewrite failed: {e:#}",
-                            msg.tag()
-                        );
-                    }
-                }
+            if matches!(msg, Message::Probe | Message::BwTest { .. }) {
+                p.probe_sent = Some(now);
+            }
+            p.queue.push(buf);
+            st.pending += 1;
+            if p.conn.is_none() && !p.dialing {
+                p.dialing = true;
+                let attempts = if p.ever_connected { 1 } else { sh.cfg.connect_attempts };
+                dial = Some((to, attempts));
             }
         }
+        if let Some((to, attempts)) = dial {
+            spawn_dial(sh, to, attempts);
+        }
+        sh.wake.wake();
         Ok(())
+    }
+
+    /// Block until every accepted send has left this endpoint — written
+    /// to the OS or dropped as undeliverable — or `timeout` passes
+    /// (then `Err` with the outstanding count). A local barrier, not a
+    /// delivery guarantee. The deadline is wall-clock: flushing waits on
+    /// real kernel I/O regardless of the configured [`crate::sim::Clock`].
+    pub fn flush(&self, timeout: Duration) -> Result<()> {
+        self.sh.wake.wake();
+        let deadline = Instant::now() + timeout;
+        let mut st = self.sh.state.lock().unwrap();
+        while st.pending > 0 {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                bail!("flush timed out with {} frame(s) still queued", st.pending);
+            }
+            let (g, _) = self.sh.flushed.wait_timeout(st, left).unwrap();
+            st = g;
+        }
+        Ok(())
+    }
+
+    /// Stop the driver and drop all queues. Idempotent; subsequent
+    /// sends are silently dropped, buffered receives still drain.
+    pub fn shutdown(&self) {
+        self.sh.stop.store(true, Ordering::SeqCst);
+        self.sh.wake.wake();
+        if let Some(h) = self.driver.lock().unwrap().take() {
+            h.join().ok();
+        }
+    }
+
+    /// This endpoint's health books about `peer`
+    /// ([`PeerHealth::default`] for a peer never contacted).
+    pub fn peer_health(&self, peer: DeviceId) -> PeerHealth {
+        let st = self.sh.state.lock().unwrap();
+        match st.peers.get(&peer) {
+            Some(p) => PeerHealth {
+                last_seen: p.last_seen,
+                rtt: p.rtt,
+                consecutive_failures: p.failures,
+            },
+            None => PeerHealth::default(),
+        }
+    }
+}
+
+impl Drop for TcpEndpoint {
+    fn drop(&mut self) {
+        // preserve the old blocking-send guarantee at the boundary: a
+        // worker's final messages (last Backward, Shutdown acks) get a
+        // bounded window to reach the wire before the driver dies
+        let _ = self.flush(self.sh.cfg.flush_on_drop);
+        self.shutdown();
     }
 }
 
 impl Transport for TcpEndpoint {
     fn my_id(&self) -> DeviceId {
-        self.id
+        self.sh.id
     }
 
     fn send(&self, to: DeviceId, msg: Message) -> Result<()> {
-        thread_local! {
-            /// Per-sender-thread reusable frame buffer; encoding happens
-            /// OUTSIDE the connection lock so concurrent senders (worker
-            /// loop + replication pushes) serialize frames in parallel.
-            static WBUF: RefCell<Vec<u8>> = RefCell::new(Vec::new());
-        }
-        WBUF.with(|wbuf| {
-            let mut wbuf = wbuf.borrow_mut();
-            codec::encode_into(&mut wbuf, self.id, &msg);
-            let result = self.send_frame(to, &wbuf, &msg);
-            if wbuf.capacity() > MAX_RETAINED_BUF && wbuf.len() < MAX_RETAINED_BUF {
-                wbuf.shrink_to(MAX_RETAINED_BUF);
-            }
-            result
-        })
+        self.enqueue(to, msg)
     }
 
     fn recv_timeout(&self, timeout: Duration) -> Option<(DeviceId, Message)> {
+        // Disconnected (driver exited after `shutdown`) reads as None
+        // once buffered messages drain — same surface as a quiet net
         self.inbox_rx.recv_timeout(timeout).ok()
     }
 
     fn n_devices(&self) -> usize {
-        self.addrs.len()
+        self.sh.addrs.len()
+    }
+
+    fn peer_health(&self, peer: DeviceId) -> PeerHealth {
+        TcpEndpoint::peer_health(self, peer)
+    }
+
+    fn flush(&self, timeout: Duration) -> Result<()> {
+        TcpEndpoint::flush(self, timeout)
+    }
+
+    fn shutdown(&self) {
+        TcpEndpoint::shutdown(self)
     }
 }
 
-/// Helper for tests/examples: build `n` endpoints on loopback ports.
-pub fn loopback_cluster(n: usize, base_port: u16) -> Result<Vec<Arc<TcpEndpoint>>> {
-    let addrs: Vec<String> = (0..n)
-        .map(|i| format!("127.0.0.1:{}", base_port + i as u16))
-        .collect();
-    (0..n)
-        .map(|i| Ok(Arc::new(TcpEndpoint::bind(i, addrs.clone())?)))
-        .collect()
+// ---------- dialing (blocking, on short-lived helper threads) ----------
+
+fn connect_once(sh: &Shared, to: DeviceId) -> Result<TcpStream> {
+    let addr = sh.addrs[to]
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {}", sh.addrs[to]))?
+        .next()
+        .with_context(|| format!("no address for {}", sh.addrs[to]))?;
+    let stream = TcpStream::connect_timeout(&addr, sh.cfg.connect_timeout)?;
+    stream.set_nodelay(true).ok();
+    stream.set_nonblocking(true).context("nonblocking peer socket")?;
+    Ok(stream)
+}
+
+/// Connect with bounded exponential backoff. A peer that binds a beat
+/// late (worker startup order is unordered) is retried; a peer that
+/// stays unreachable returns Err after the schedule is exhausted.
+fn connect_with_backoff(sh: &Shared, to: DeviceId, attempts: u32) -> Result<TcpStream> {
+    let mut delay = sh.cfg.connect_backoff;
+    let mut last_err = None;
+    for attempt in 0..attempts {
+        match connect_once(sh, to) {
+            Ok(stream) => return Ok(stream),
+            Err(e) => {
+                last_err = Some(e);
+                if attempt + 1 < attempts {
+                    sh.clock.sleep(delay);
+                    delay *= 2;
+                }
+            }
+        }
+    }
+    Err(last_err.unwrap()).with_context(|| {
+        format!("connecting to device {to} at {} ({attempts} attempts)", sh.addrs[to])
+    })
+}
+
+/// Dial `to` off-thread; on success hand the nonblocking stream to the
+/// driver, on failure drop the peer's queue and open its fast-fail
+/// window. Either way the driver is woken to react.
+fn spawn_dial(sh: &Arc<Shared>, to: DeviceId, attempts: u32) {
+    let sh = Arc::clone(sh);
+    std::thread::Builder::new()
+        .name(format!("tcp-dial-{}-{to}", sh.id))
+        .spawn(move || {
+            let result = connect_with_backoff(&sh, to, attempts);
+            let mut scratch: Vec<Vec<u8>> = Vec::new();
+            {
+                let mut st = sh.state.lock().unwrap();
+                let p = st.peers.entry(to).or_default();
+                p.dialing = false;
+                match result {
+                    Ok(stream) => {
+                        p.conn = Some(stream);
+                        p.ever_connected = true;
+                        p.redialed = false;
+                        p.down_until = None;
+                        p.failures = 0;
+                    }
+                    Err(e) => {
+                        p.failures += 1;
+                        p.down_until = Some(sh.clock.now() + sh.cfg.down_ttl);
+                        let dropped = p.queue.clear_into(&mut scratch);
+                        if dropped > 0 {
+                            st.pending -= dropped;
+                            crate::log_warn!(
+                                "tcp dial: dropping {dropped} frame(s) to device {to}: {e:#}"
+                            );
+                            if st.pending == 0 {
+                                sh.flushed.notify_all();
+                            }
+                        }
+                    }
+                }
+            }
+            sh.recycle_all(&mut scratch);
+            sh.wake.wake();
+        })
+        .ok();
+}
+
+// ---------- the I/O driver ----------
+
+/// One accepted (inbound) connection and its frame reassembly state.
+struct InConn {
+    stream: TcpStream,
+    asm: FrameAssembler,
+}
+
+fn accept_all(listener: &TcpListener, inbound: &mut Vec<InConn>) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nodelay(true).ok();
+                if stream.set_nonblocking(true).is_ok() {
+                    inbound.push(InConn { stream, asm: FrameAssembler::new() });
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return,
+        }
+    }
+}
+
+/// Drain one inbound connection: bulk-read, parse frames, decode, push
+/// to the inbox, and record `(from, was_probe_ack)` health events for
+/// batched application. Returns false when the connection should close.
+fn service_inbound(
+    c: &mut InConn,
+    inbox: &Sender<(DeviceId, Message)>,
+    events: &mut Vec<(DeviceId, bool)>,
+) -> bool {
+    let progress = match c.asm.read_from(&mut c.stream) {
+        Ok(p) => p,
+        Err(e) => {
+            crate::log_warn!("tcp reader: {e:#}; closing connection");
+            return false;
+        }
+    };
+    loop {
+        match c.asm.next_frame() {
+            Ok(Some(frame)) => match codec::decode(frame) {
+                Ok((from, msg)) => {
+                    let is_ack = matches!(msg, Message::ProbeAck { .. } | Message::BwAck { .. });
+                    events.push((from, is_ack));
+                    if inbox.send((from, msg)).is_err() {
+                        return false; // endpoint receiver dropped
+                    }
+                }
+                Err(e) => {
+                    crate::log_warn!("tcp reader: undecodable frame ({e}); closing connection");
+                    return false;
+                }
+            },
+            Ok(None) => break,
+            Err(e) => {
+                crate::log_warn!("tcp reader: {e:#}; closing connection");
+                return false;
+            }
+        }
+    }
+    c.asm.compact();
+    // EOF after parsing: the peer closed; a partial trailing frame can
+    // never complete, so the connection goes either way
+    !progress.eof
+}
+
+/// The per-endpoint event loop: one poll set over the wake pipe, the
+/// listener, every inbound connection, and every outbound connection
+/// (read interest for stale detection, write interest while its queue
+/// is nonempty).
+fn driver_loop(sh: &Arc<Shared>, listener: &TcpListener, inbox: &Sender<(DeviceId, Message)>) {
+    let mut poll = PollSet::new();
+    let mut inbound: Vec<InConn> = Vec::new();
+    let mut events: Vec<(DeviceId, bool)> = Vec::new();
+    let mut scratch: Vec<Vec<u8>> = Vec::new();
+    while !sh.stop.load(Ordering::SeqCst) {
+        poll.clear();
+        let wake_slot = poll.register(sh.wake.read_fd(), true, false);
+        let listen_slot = poll.register(socket_fd(listener), true, false);
+        let in_slots: Vec<usize> =
+            inbound.iter().map(|c| poll.register(socket_fd(&c.stream), true, false)).collect();
+        let out_slots: Vec<(DeviceId, usize)> = {
+            let st = sh.state.lock().unwrap();
+            st.peers
+                .iter()
+                .filter_map(|(&d, p)| {
+                    let c = p.conn.as_ref()?;
+                    Some((d, poll.register(socket_fd(c), true, !p.queue.is_empty())))
+                })
+                .collect()
+        };
+        poll.wait(POLL_TICK);
+        if sh.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        if poll.readiness(wake_slot).readable {
+            sh.wake.drain();
+        }
+        if poll.readiness(listen_slot).readable {
+            accept_all(listener, &mut inbound);
+        }
+
+        // inbound traffic → inbox + health events
+        let mut keep = vec![true; inbound.len()];
+        for (i, c) in inbound.iter_mut().enumerate() {
+            let r = poll.readiness(in_slots[i]);
+            if r.readable || r.error {
+                keep[i] = service_inbound(c, inbox, &mut events);
+            }
+        }
+        if keep.contains(&false) {
+            let mut it = keep.into_iter();
+            inbound.retain(|_| it.next().unwrap());
+        }
+        if !events.is_empty() {
+            apply_health_events(sh, &mut events);
+        }
+
+        // outbound: stale detection, then optimistic coalesced writes
+        service_outbound(sh, &poll, &out_slots, &mut scratch);
+        sh.recycle_all(&mut scratch);
+    }
+
+    // drain on exit: everything still queued is dropped, flush waiters
+    // are released, and dropping `inbox` disconnects `recv_timeout`
+    let mut st = sh.state.lock().unwrap();
+    for p in st.peers.values_mut() {
+        p.queue.clear_into(&mut scratch);
+        p.conn = None;
+    }
+    st.pending = 0;
+    sh.flushed.notify_all();
+}
+
+/// Batched inbound health bookkeeping: any frame from a peer proves it
+/// alive (refresh last-seen, zero failures, clear the down window); a
+/// `ProbeAck`/`BwAck` additionally closes the RTT measurement opened
+/// when the probe was enqueued (EWMA, 3:1 old:new).
+fn apply_health_events(sh: &Shared, events: &mut Vec<(DeviceId, bool)>) {
+    let now = sh.clock.now();
+    let mut st = sh.state.lock().unwrap();
+    for (from, is_ack) in events.drain(..) {
+        let p = st.peers.entry(from).or_default();
+        p.last_seen = Some(now);
+        p.failures = 0;
+        p.down_until = None;
+        if is_ack {
+            if let Some(t0) = p.probe_sent.take() {
+                let sample = now.saturating_sub(t0);
+                p.rtt = Some(match p.rtt {
+                    Some(old) => (old * 3 + sample) / 4,
+                    None => sample,
+                });
+            }
+        }
+    }
+}
+
+/// One outbound pass under the state lock: drop connections the peer
+/// closed (our links are strictly one-way, so readable/EOF on an
+/// outbound socket means FIN or RST), then drain every nonempty queue
+/// with vectored writes. A write error redials once; a second
+/// consecutive failure drops the queue and opens the fast-fail window
+/// (the old transport's two-attempt semantics).
+fn service_outbound(
+    sh: &Arc<Shared>,
+    poll: &PollSet,
+    out_slots: &[(DeviceId, usize)],
+    scratch: &mut Vec<Vec<u8>>,
+) {
+    let now = sh.clock.now();
+    let mut dials: Vec<(DeviceId, u32)> = Vec::new();
+    let mut done = 0usize;
+    let mut st = sh.state.lock().unwrap();
+
+    for &(d, slot) in out_slots {
+        let r = poll.readiness(slot);
+        if !(r.readable || r.error) {
+            continue;
+        }
+        let Some(p) = st.peers.get_mut(&d) else { continue };
+        let stale = match &mut p.conn {
+            Some(_) if r.error => true, // POLLERR/POLLHUP: no read needed
+            Some(c) => {
+                let mut probe = [0u8; 256];
+                match c.read(&mut probe) {
+                    // EOF, unexpected data, or a real error all mean the
+                    // peer is gone (it restarted or reset); WouldBlock is
+                    // the only healthy answer on a one-way link
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => false,
+                    _ => true,
+                }
+            }
+            None => false,
+        };
+        if stale {
+            p.conn = None;
+            p.queue.rewind();
+        }
+    }
+
+    for (&d, p) in st.peers.iter_mut() {
+        if p.queue.is_empty() {
+            continue;
+        }
+        match &mut p.conn {
+            Some(c) => match p.queue.write_to(c, sh.cfg.coalesce_frames, scratch) {
+                Ok(pr) => {
+                    done += pr.completed;
+                    if pr.completed > 0 {
+                        p.redialed = false;
+                    }
+                }
+                Err(e) => {
+                    p.conn = None;
+                    p.queue.rewind();
+                    if p.redialed {
+                        p.failures += 1;
+                        p.down_until = Some(now + sh.cfg.down_ttl);
+                        let n = p.queue.clear_into(scratch);
+                        done += n;
+                        p.redialed = false;
+                        crate::log_warn!(
+                            "tcp send: dropping {n} frame(s) to device {d} after rewrite failed: {e:#}"
+                        );
+                    } else if !p.dialing {
+                        p.redialed = true;
+                        p.dialing = true;
+                        dials.push((d, 1));
+                    }
+                }
+            },
+            None => {
+                let held_down = matches!(p.down_until, Some(u) if now < u);
+                if !p.dialing && !held_down {
+                    p.dialing = true;
+                    let attempts = if p.ever_connected { 1 } else { sh.cfg.connect_attempts };
+                    dials.push((d, attempts));
+                }
+            }
+        }
+    }
+
+    if done > 0 {
+        st.pending -= done;
+        if st.pending == 0 {
+            sh.flushed.notify_all();
+        }
+    }
+    drop(st);
+    for (d, attempts) in dials {
+        spawn_dial(sh, d, attempts);
+    }
+}
+
+/// Helper for tests/benches/examples: build `n` endpoints on loopback ports.
+pub fn loopback_cluster(n: usize, base_port: u16) -> Result<Vec<TcpEndpoint>> {
+    let addrs: Vec<String> =
+        (0..n).map(|i| format!("127.0.0.1:{}", base_port + i as u16)).collect();
+    (0..n).map(|i| TcpEndpoint::bind(i, addrs.clone())).collect()
 }
 
 #[cfg(test)]
@@ -358,26 +809,18 @@ mod tests {
     fn tcp_roundtrip_two_devices() {
         let eps = loopback_cluster(2, 46100).unwrap();
         eps[0]
-            .send(
-                1,
-                Message::Labels { batch: 7, is_eval: true, data: vec![1, 2, 3] },
-            )
+            .send(1, Message::Labels { batch: 7, is_eval: true, data: vec![1, 2, 3] })
             .unwrap();
         let (from, msg) = eps[1].recv_timeout(Duration::from_secs(2)).unwrap();
         assert_eq!(from, 0);
-        assert_eq!(
-            msg,
-            Message::Labels { batch: 7, is_eval: true, data: vec![1, 2, 3] }
-        );
+        assert_eq!(msg, Message::Labels { batch: 7, is_eval: true, data: vec![1, 2, 3] });
     }
 
     #[test]
     fn tcp_large_payload() {
         let eps = loopback_cluster(2, 46110).unwrap();
         let data: crate::net::TensorBuf = vec![1.5f32; 200_000].into();
-        eps[1]
-            .send(0, Message::Weights { blocks: vec![(3, vec![data.clone().into()])] })
-            .unwrap();
+        eps[1].send(0, Message::Weights { blocks: vec![(3, vec![data.clone().into()])] }).unwrap();
         match eps[0].recv_timeout(Duration::from_secs(5)) {
             Some((1, Message::Weights { blocks })) => {
                 assert_eq!(blocks[0].0, 3);
@@ -390,23 +833,23 @@ mod tests {
     #[test]
     fn send_to_unreachable_peer_is_silent() {
         // device 1 never binds; send must not error (timeout semantics),
-        // even after the full reconnect/backoff schedule runs out
+        // and flush must complete once the dial schedule gives up
         let addrs = vec!["127.0.0.1:46120".into(), "127.0.0.1:46121".into()];
         let ep = TcpEndpoint::bind(0, addrs).unwrap();
         ep.send(1, Message::Probe).unwrap();
+        ep.flush(Duration::from_secs(10)).unwrap();
+        assert!(ep.peer_health(1).consecutive_failures >= 1);
     }
 
     #[test]
     fn late_binding_peer_is_reached_by_backoff() {
         // device 1 binds ~40ms after device 0 starts sending: the
         // reconnect loop must bridge the gap instead of dropping. The
-        // patient schedule keeps this stable on slow CI runners (the
-        // default ~150ms window used to race the spawned thread).
+        // patient schedule keeps this stable on slow CI runners.
         let addrs = vec!["127.0.0.1:46130".to_string(), "127.0.0.1:46131".to_string()];
         let a0 = addrs.clone();
         let ep0 =
-            TcpEndpoint::bind_with(0, a0, TcpConfig::patient(), crate::sim::real_clock())
-                .unwrap();
+            TcpEndpoint::bind_with(0, a0, TcpConfig::patient(), crate::sim::real_clock()).unwrap();
         let addrs1 = addrs.clone();
         let h = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(40));
@@ -423,26 +866,47 @@ mod tests {
     #[test]
     fn config_defaults_match_historical_constants() {
         let c = TcpConfig::default();
-        assert_eq!(c.connect_attempts, 5);
-        assert_eq!(c.connect_backoff, Duration::from_millis(10));
-        assert_eq!(c.connect_timeout, Duration::from_millis(500));
-        assert_eq!(c.down_ttl, Duration::from_secs(1));
-        assert!(TcpConfig::patient().connect_attempts > c.connect_attempts);
+        assert_eq!(c.connect_attempts(), 5);
+        assert_eq!(c.connect_backoff(), Duration::from_millis(10));
+        assert_eq!(c.connect_timeout(), Duration::from_millis(500));
+        assert_eq!(c.down_ttl(), Duration::from_secs(1));
+        assert_eq!(c.coalesce_frames(), 16);
+        assert!(TcpConfig::patient().connect_attempts() > c.connect_attempts());
+    }
+
+    #[test]
+    fn builder_overrides_clamps_and_roundtrips() {
+        let c = TcpConfig::builder()
+            .connect_attempts(0) // clamped to 1
+            .connect_backoff(Duration::from_millis(1))
+            .connect_timeout(Duration::from_millis(99))
+            .down_ttl(Duration::from_millis(7))
+            .coalesce_frames(0) // clamped to 1
+            .flush_on_drop(Duration::from_millis(3))
+            .build();
+        assert_eq!(c.connect_attempts(), 1);
+        assert_eq!(c.coalesce_frames(), 1);
+        assert_eq!(c.connect_backoff(), Duration::from_millis(1));
+        assert_eq!(c.connect_timeout(), Duration::from_millis(99));
+        assert_eq!(c.down_ttl(), Duration::from_millis(7));
+        assert_eq!(c.flush_on_drop(), Duration::from_millis(3));
+        assert_eq!(c.to_builder().build(), c, "to_builder round-trips every knob");
+        assert_eq!(TcpConfig::patient().connect_attempts(), 9);
     }
 
     #[test]
     fn down_ttl_is_configurable_and_expires() {
         // a tiny TTL re-dials almost immediately instead of holding the
         // peer down for a second (the old hardcoded window)
-        let cfg = TcpConfig {
-            connect_attempts: 1,
-            down_ttl: Duration::from_millis(1),
-            ..TcpConfig::default()
-        };
+        let cfg = TcpConfig::builder()
+            .connect_attempts(1)
+            .down_ttl(Duration::from_millis(1))
+            .build();
         let addrs = vec!["127.0.0.1:46140".to_string(), "127.0.0.1:46141".to_string()];
-        let ep0 = TcpEndpoint::bind_with(0, addrs.clone(), cfg, crate::sim::real_clock())
-            .unwrap();
-        ep0.send(1, Message::FetchDone { id: 0 }).unwrap(); // peer down: cached
+        let ep0 = TcpEndpoint::bind_with(0, addrs.clone(), cfg, crate::sim::real_clock()).unwrap();
+        ep0.send(1, Message::FetchDone { id: 0 }).unwrap(); // peer down
+        ep0.flush(Duration::from_secs(10)).unwrap(); // dial failed, frame dropped
+        assert!(ep0.peer_health(1).consecutive_failures >= 1);
         std::thread::sleep(Duration::from_millis(5)); // TTL expired
         let ep1 = TcpEndpoint::bind(1, addrs).unwrap();
         ep0.send(1, Message::FetchDone { id: 7 }).unwrap(); // re-dials now
@@ -450,5 +914,36 @@ mod tests {
             Some((0, Message::FetchDone { id: 7 })) => {}
             other => panic!("expired down-cache still blocking sends: {other:?}"),
         }
+    }
+
+    #[test]
+    fn flush_times_out_while_a_dial_backs_off() {
+        let cfg = TcpConfig::builder()
+            .connect_attempts(4)
+            .connect_backoff(Duration::from_millis(200))
+            .flush_on_drop(Duration::ZERO) // keep Drop fast in this test
+            .build();
+        let addrs = vec!["127.0.0.1:46150".into(), "127.0.0.1:46151".into()];
+        let ep = TcpEndpoint::bind_with(0, addrs, cfg, crate::sim::real_clock()).unwrap();
+        ep.send(1, Message::FetchDone { id: 0 }).unwrap();
+        let err = ep.flush(Duration::from_millis(50));
+        assert!(err.is_err(), "the frame is still queued behind a backing-off dial");
+    }
+
+    #[test]
+    fn peer_health_is_default_for_unknown_peers() {
+        let addrs = vec!["127.0.0.1:46160".into(), "127.0.0.1:46161".into()];
+        let ep = TcpEndpoint::bind(0, addrs).unwrap();
+        assert_eq!(ep.peer_health(1), PeerHealth::default());
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_silences_sends() {
+        let addrs = vec!["127.0.0.1:46170".into(), "127.0.0.1:46171".into()];
+        let ep = TcpEndpoint::bind(0, addrs).unwrap();
+        ep.shutdown();
+        ep.shutdown();
+        ep.send(1, Message::Probe).unwrap(); // silently dropped
+        assert!(ep.recv_timeout(Duration::from_millis(10)).is_none());
     }
 }

@@ -2,6 +2,9 @@
 //! multi-process deployment path (paper's Flask analogue). A 2-stage
 //! pipeline: this thread acts as the central node/stage 0 over a
 //! `TcpEndpoint`, a spawned thread runs stage 1 through `run_worker`.
+//! Plus the central-restart drill: kill the central's endpoint, rebind
+//! its listener, and re-attach the surviving worker over the fresh
+//! socket (paper §3.5 over real TCP, not just the sim).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -9,31 +12,14 @@ use std::time::{Duration, Instant};
 use ftpipehd::config::DeviceConfig;
 use ftpipehd::device::SimDevice;
 use ftpipehd::manifest::Manifest;
-use ftpipehd::net::message::{Message, Payload, TrainInit};
-use ftpipehd::net::tcp::TcpEndpoint;
-use ftpipehd::net::Transport;
+use ftpipehd::net::message::{Message, TrainInit};
+use ftpipehd::net::{TcpConfig, TcpEndpoint, Transport};
 use ftpipehd::pipeline::{run_worker, StageWorker};
 use ftpipehd::runtime::{load_all_blocks, Engine, HostTensor};
+use ftpipehd::sim::real_clock;
 
 fn artifacts_available() -> bool {
     std::path::Path::new("artifacts/edgenet-tiny/manifest.json").exists()
-}
-
-struct Wrap(TcpEndpoint);
-
-impl Transport for Wrap {
-    fn my_id(&self) -> usize {
-        self.0.my_id()
-    }
-    fn send(&self, to: usize, msg: Message) -> anyhow::Result<()> {
-        self.0.send(to, msg)
-    }
-    fn recv_timeout(&self, timeout: Duration) -> Option<(usize, Message)> {
-        self.0.recv_timeout(timeout)
-    }
-    fn n_devices(&self) -> usize {
-        self.0.n_devices()
-    }
 }
 
 #[test]
@@ -54,11 +40,11 @@ fn two_process_style_pipeline_over_tcp() {
         let blocks = load_all_blocks(&engine, &m2).unwrap();
         let sim = SimDevice::new(DeviceConfig::default(), 1);
         let w = StageWorker::new(1, m2, blocks, sim, None);
-        run_worker(w, Box::new(Wrap(ep)), None).unwrap();
+        run_worker(w, Box::new(ep), None).unwrap();
     });
 
     // central / stage 0
-    let ep = Wrap(TcpEndpoint::bind(0, addrs).unwrap());
+    let ep = TcpEndpoint::bind(0, addrs).unwrap();
     let engine = Engine::cpu().unwrap();
     let blocks = load_all_blocks(&engine, &manifest).unwrap();
     let sim = SimDevice::new(DeviceConfig::default(), 0);
@@ -131,4 +117,99 @@ fn two_process_style_pipeline_over_tcp() {
 
     ep.send(1, Message::Shutdown).unwrap();
     h.join().unwrap();
+}
+
+/// Send `msg` and wait for a reply matching `want`, re-sending on each
+/// timeout: the peer's old connection may be mid-redial, so a single
+/// fire-and-forget send can legitimately land on the floor.
+fn send_until_reply(
+    me: &TcpEndpoint,
+    to: usize,
+    msg: Message,
+    want: impl Fn(&Message) -> bool,
+) -> (usize, Message) {
+    for _ in 0..40 {
+        me.send(to, msg.clone()).unwrap();
+        if let Some((from, got)) = me.recv_timeout(Duration::from_millis(250)) {
+            if want(&got) {
+                return (from, got);
+            }
+        }
+    }
+    panic!("no matching reply to {} from {to}", msg.tag());
+}
+
+/// The central dies and comes back on the SAME address: `rebind` retries
+/// the listener over the backoff schedule (SO_REUSEADDR rides over the
+/// dead socket's lingering state) and the worker's endpoint — which never
+/// restarted — re-attaches through its stale-connection redial path. This
+/// is transport-level only; the coordinator's CentralRestart/WorkerState
+/// protocol semantics are covered by the sim suites.
+#[test]
+fn central_kill_and_rebind_reattaches_over_tcp() {
+    let addrs = vec!["127.0.0.1:46210".to_string(), "127.0.0.1:46211".to_string()];
+    let cfg = TcpConfig::patient();
+
+    // bind both listeners up-front (same thread: no startup race), then
+    // hand the worker endpoint to a thread that answers the protocol
+    let worker = TcpEndpoint::bind_with(1, addrs.clone(), cfg.clone(), real_clock()).unwrap();
+    let worker_thread = std::thread::spawn(move || {
+        let deadline = Instant::now() + Duration::from_secs(60);
+        let mut answered_restart = false;
+        loop {
+            match worker.recv_timeout(Duration::from_millis(500)) {
+                // pre-crash traffic (and any resent duplicates)
+                Some((0, Message::Commit)) => {
+                    worker.send(0, Message::FetchDone { id: 1 }).unwrap();
+                }
+                // the restart announcement, over the FRESH listener: reply
+                // through the worker's stale outbound connection, which the
+                // driver detects as dead and redials transparently
+                Some((0, Message::CentralRestart { committed })) => {
+                    assert_eq!(committed, 29);
+                    worker
+                        .send(
+                            0,
+                            Message::WorkerState {
+                                id: 1,
+                                committed_fwd: 34,
+                                committed_bwd: 33,
+                                fresh: false,
+                            },
+                        )
+                        .unwrap();
+                    answered_restart = true;
+                }
+                // the announcements stop once central2 has our state
+                None if answered_restart => return worker,
+                _ => {}
+            }
+            assert!(Instant::now() < deadline, "worker never completed the re-attach");
+        }
+    });
+
+    {
+        let central = TcpEndpoint::bind_with(0, addrs.clone(), cfg.clone(), real_clock()).unwrap();
+        // pre-crash traffic in both directions so live connections exist
+        let (_, got) = send_until_reply(&central, 1, Message::Commit, |m| {
+            matches!(m, Message::FetchDone { id: 1 })
+        });
+        assert!(matches!(got, Message::FetchDone { id: 1 }));
+        drop(central);
+    }
+    // central's endpoint is gone: driver joined, listener closed, port free
+
+    let central2 = TcpEndpoint::rebind(0, addrs, cfg, real_clock()).unwrap();
+    let (_, got) = send_until_reply(&central2, 1, Message::CentralRestart { committed: 29 }, |m| {
+        matches!(m, Message::WorkerState { .. })
+    });
+    match got {
+        Message::WorkerState { id, committed_fwd, committed_bwd, fresh } => {
+            assert_eq!((id, committed_fwd, committed_bwd, fresh), (1, 34, 33, false));
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    let worker = worker_thread.join().unwrap();
+    worker.shutdown();
+    central2.shutdown();
 }

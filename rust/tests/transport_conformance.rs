@@ -2,17 +2,16 @@
 //! [`Transport`] implementations — the in-process [`SimNet`] and the real
 //! [`TcpEndpoint`] sockets. Any behavior the pipeline relies on
 //! (identity, FIFO per link, payload integrity across every message
-//! family, fire-and-forget to unreachable peers, bidirectional traffic)
-//! must hold identically on both, or the sim results stop predicting the
+//! family, fire-and-forget to unreachable peers, bidirectional traffic,
+//! and the lifecycle surface: `flush`, `peer_health`, `shutdown`) must
+//! hold identically on both, or the sim results stop predicting the
 //! real deployment.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use ftpipehd::net::message::{ExecReport, Message, Payload, ReplicaKind, TrainInit, WireTensor};
-use ftpipehd::net::sim::SimNet;
-use ftpipehd::net::tcp::TcpEndpoint;
 use ftpipehd::net::quant::{Bits, ChannelHint, Tier};
-use ftpipehd::net::{Compression, QTensor, Transport};
+use ftpipehd::net::{Compression, QTensor, SimNet, TcpEndpoint, Transport};
 
 /// Messages spanning every wire family: small control, tensor payloads,
 /// nested wire blocks, state structs.
@@ -181,6 +180,61 @@ fn conformance(e0: &dyn Transport, e1: &dyn Transport, dead_to: usize) {
     assert!(matches!(e1.recv_timeout(Duration::from_secs(2)), Some((0, Message::Probe))));
 }
 
+/// Poll `cond` until it holds or `secs` elapse. The health surface is
+/// updated by background machinery (the TCP driver thread, the sim wire
+/// thread), so observations need a deadline, not a single probe.
+fn eventually(secs: u64, what: &str, cond: impl Fn() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Lifecycle surface: `flush` drains a burst, probe traffic feeds
+/// `peer_health`, sends to a dead peer raise `consecutive_failures`,
+/// and `shutdown` silences an endpoint without breaking its peers.
+/// Runs after [`conformance`] on the same endpoints; kills `e1` at the
+/// end, so it must be the last thing a test does with these endpoints.
+fn lifecycle(e0: &dyn Transport, e1: &dyn Transport, dead_to: usize) {
+    // --- flush: after it returns, the burst has left this endpoint ---
+    for b in 100..108u64 {
+        e0.send(1, Message::Labels { batch: b, is_eval: false, data: vec![1, 2] }).unwrap();
+    }
+    e0.flush(Duration::from_secs(5)).expect("flush of a small burst must drain");
+    for b in 100..108u64 {
+        match e1.recv_timeout(Duration::from_secs(2)) {
+            Some((0, Message::Labels { batch, .. })) => assert_eq!(batch, b),
+            other => panic!("lost flushed message: {other:?}"),
+        }
+    }
+
+    // --- peer_health: a probe/ack round-trip yields last_seen + rtt ---
+    e0.send(1, Message::Probe).unwrap();
+    assert!(matches!(e1.recv_timeout(Duration::from_secs(2)), Some((0, Message::Probe))));
+    e1.send(0, Message::ProbeAck { id: 1, fresh: false }).unwrap();
+    assert!(matches!(e0.recv_timeout(Duration::from_secs(2)), Some((1, Message::ProbeAck { .. }))));
+    eventually(5, "probe round-trip to show up in peer_health", || {
+        let h = e0.peer_health(1);
+        h.last_seen.is_some() && h.rtt.is_some() && h.consecutive_failures == 0
+    });
+
+    // --- dead peer: failures accumulate, health reports them ---
+    e0.send(dead_to, Message::Labels { batch: 0, is_eval: false, data: vec![] }).unwrap();
+    e0.flush(Duration::from_secs(5)).unwrap();
+    eventually(5, "consecutive_failures on the dead peer", || {
+        e0.peer_health(dead_to).consecutive_failures >= 1
+    });
+
+    // --- shutdown: e1 goes quiet, e0 keeps working (fire-and-forget) ---
+    e1.shutdown();
+    e0.send(1, Message::Commit).expect("send to a shut-down peer must not error");
+    assert!(
+        e1.recv_timeout(Duration::from_millis(200)).is_none(),
+        "a shut-down endpoint must hear nothing"
+    );
+}
+
 #[test]
 fn simnet_conforms() {
     let (net, eps) = SimNet::new(3, vec![1e9], Duration::ZERO);
@@ -190,6 +244,7 @@ fn simnet_conforms() {
         eps[2].recv_timeout(Duration::from_millis(50)).is_none(),
         "killed device must hear nothing"
     );
+    lifecycle(&eps[0], &eps[1], 2);
 }
 
 #[test]
@@ -200,4 +255,5 @@ fn tcp_conforms() {
     let e1 = TcpEndpoint::bind(1, addrs).unwrap();
     std::thread::sleep(Duration::from_millis(100)); // listeners up
     conformance(&e0, &e1, 2);
+    lifecycle(&e0, &e1, 2);
 }

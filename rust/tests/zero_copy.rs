@@ -10,8 +10,7 @@ use std::time::Duration;
 
 use ftpipehd::model::{BlockParams, Sgd, SgdConfig, StageParams, VersionStash};
 use ftpipehd::net::message::{Message, Payload, ReplicaKind};
-use ftpipehd::net::sim::SimNet;
-use ftpipehd::net::{codec, TensorBuf, Transport};
+use ftpipehd::net::{codec, SimNet, TensorBuf, Transport};
 use ftpipehd::replication::{from_wire, to_wire, BackupStore};
 
 fn stage_params(vals: &[f32]) -> StageParams {
