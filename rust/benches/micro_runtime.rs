@@ -244,6 +244,42 @@ fn coordinator_section(table: &mut Table, metrics: &mut Vec<(String, f64)>) {
     metrics.push(("coord_step_transitions_per_sec".to_string(), tps));
 }
 
+/// The per-destination adaptive-compression controller driven flat out:
+/// one round feeds all 64 destination ladders an LCG rate schedule that
+/// crosses every threshold band, so escalations, hysteresis holds, and
+/// relaxations all churn the override map. Both drivers call `observe`
+/// once per `BwReport`, so `adaptive_observe_per_sec` is gated (loosely
+/// — the map ops run in the millions/s; only an accidental rebuild of
+/// the override table per observation would move it by integer factors).
+fn adaptive_section(table: &mut Table, metrics: &mut Vec<(String, f64)>) {
+    use ftpipehd::net::quant::{AdaptivePolicy, AdaptiveThresholds};
+
+    const DESTS: usize = 64;
+    let mut policy = AdaptivePolicy::new(AdaptiveThresholds::default());
+    let mut state: u64 = 0x2545_F491_4F6C_DD1D;
+    let mut round = |policy: &mut AdaptivePolicy| -> u64 {
+        for d in 1..=DESTS {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            // top bits of the LCG, offset into [1e4, ~1.7e7) B/s: spans
+            // all four bands of the default thresholds
+            let bps = 1e4 + (state >> 40) as f64;
+            let _ = std::hint::black_box(policy.observe(d, bps));
+        }
+        DESTS as u64
+    };
+    let obs_per_round = round(&mut policy);
+    let s = bench(10, 500, || {
+        round(&mut policy);
+    });
+    let ops = obs_per_round as f64 / s.p50;
+    table.row(&[
+        format!("adaptive observe sweep ({DESTS} links)"),
+        format!("{} ({:.2}M obs/s)", us(s.p50), ops / 1e6),
+        us(s.p95),
+    ]);
+    metrics.push(("adaptive_observe_per_sec".to_string(), ops));
+}
+
 /// The scenario engine under storm load: a 48-device rolling-churn storm
 /// measures event throughput (`sim_events_per_sec`), and the tentpole
 /// 500-device storm records end-to-end wall time
@@ -398,6 +434,7 @@ fn main() {
 
     quant_codec_section(&mut table, &mut metrics);
     coordinator_section(&mut table, &mut metrics);
+    adaptive_section(&mut table, &mut metrics);
     tcp_section(&mut table, &mut metrics);
     sim_section(&mut table, &mut metrics);
 

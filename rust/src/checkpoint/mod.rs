@@ -21,7 +21,7 @@
 //!
 //! [`CoordinatorStore`] generalizes the sink over *all* leadership state
 //! (DESIGN.md §12): a [`LeaderState`] bundles the checkpoint with the
-//! measured bandwidths, the adaptive compression tier, the replica
+//! per-link measured bandwidths and compression tiers, the replica
 //! version epoch, and the worker-roster snapshot, so `resume_from`
 //! restores the full coordinator instead of re-deriving roster and
 //! controller state. On disk the extras live in a `leader.json` sidecar
@@ -369,19 +369,21 @@ impl CheckpointSink for MemorySink {
 
 /// Everything a process needs to resume coordinator leadership: the
 /// checkpoint (committed frontier, partition, weights) plus the state the
-/// old `resume_from` path used to re-derive from scratch — measured link
-/// bandwidths, the adaptive compression tier in force, the replica
-/// version epoch, and the worker-roster snapshot
+/// old `resume_from` path used to re-derive from scratch — per-link
+/// measured bandwidths and compression tiers, the replica version epoch,
+/// and the worker-roster snapshot
 /// (`crate::coordinator::core::WorkerRoster::snapshot`).
 #[derive(Debug, Clone)]
 pub struct LeaderState {
     /// Committed training state + weights (paper §III-E).
     pub checkpoint: Checkpoint,
-    /// Last measured link bandwidth per device (bytes/sec; index =
-    /// device id, 0.0 = never measured).
-    pub measured_bw: Vec<f64>,
-    /// Adaptive compression tier in force when the state was saved.
-    pub tier: Tier,
+    /// Last measured bandwidth per link, keyed by destination device
+    /// (bytes/sec; absent = never measured).
+    pub link_bw: Vec<(DeviceId, f64)>,
+    /// Per-link adaptive tier overrides in force when the state was
+    /// saved (`AdaptivePolicy::overrides`; links at the floor are
+    /// absent).
+    pub link_tiers: Vec<(DeviceId, Tier)>,
     /// Replica version epoch (bumped once per coordinator restart so
     /// pre-restart backups can never shadow post-restart pushes — see
     /// `crate::replication::epoch_version`).
@@ -393,14 +395,14 @@ pub struct LeaderState {
 }
 
 impl LeaderState {
-    /// Wrap a bare checkpoint with default extras (no measurements, tier
-    /// `Off`, epoch 0, unlimited empty roster) — what loading a pre-§12
-    /// checkpoint root yields.
+    /// Wrap a bare checkpoint with default extras (no measurements, no
+    /// tier overrides, epoch 0, unlimited empty roster) — what loading a
+    /// pre-§12 checkpoint root yields.
     pub fn around(checkpoint: Checkpoint) -> LeaderState {
         LeaderState {
             checkpoint,
-            measured_bw: Vec::new(),
-            tier: Tier::Off,
+            link_bw: Vec::new(),
+            link_tiers: Vec::new(),
             replica_epoch: 0,
             worker_quota: 0,
             admitted: Vec::new(),
@@ -412,8 +414,24 @@ impl LeaderState {
     fn extras_json(&self, committed: i64) -> Value {
         Value::obj(vec![
             ("committed_batch", Value::Num(committed as f64)),
-            ("measured_bw", Value::Arr(self.measured_bw.iter().map(|&b| Value::Num(b)).collect())),
-            ("tier", Value::Num(f64::from(self.tier.to_u8()))),
+            (
+                "link_bw",
+                Value::Arr(
+                    self.link_bw
+                        .iter()
+                        .map(|&(d, b)| Value::Arr(vec![Value::Num(d as f64), Value::Num(b)]))
+                        .collect(),
+                ),
+            ),
+            (
+                "link_tiers",
+                Value::Arr(
+                    self.link_tiers
+                        .iter()
+                        .map(|&(d, t)| Value::arr_usize(&[d, t.to_u8() as usize]))
+                        .collect(),
+                ),
+            ),
             ("replica_epoch", Value::Num(self.replica_epoch as f64)),
             ("worker_quota", Value::Num(self.worker_quota as f64)),
             ("admitted", Value::arr_usize(&self.admitted)),
@@ -422,13 +440,47 @@ impl LeaderState {
 
     /// Overlay sidecar extras onto default values (all keys optional,
     /// matching the forward/backward-compatible checkpoint loader).
+    /// Sidecars written before per-link tiers carry a dense
+    /// `measured_bw` array (index = pipeline link) and one scalar
+    /// `tier`; both are translated through the checkpoint's worker list
+    /// — link `i` feeds the device at slot `i + 1`, and the fleet-wide
+    /// tier becomes one override per worker (the policy's resume clamp
+    /// drops floor-valued entries).
     fn apply_extras(&mut self, v: &Value) {
-        if let Some(bw) = v.get("measured_bw").and_then(|x| x.as_arr()) {
-            self.measured_bw = bw.iter().filter_map(|x| x.as_f64()).collect();
+        let wl = &self.checkpoint.state.worker_list;
+        if let Some(bw) = v.get("link_bw").and_then(|x| x.as_arr()) {
+            self.link_bw = bw
+                .iter()
+                .filter_map(|pair| {
+                    let p = pair.as_arr()?;
+                    Some((p.first()?.as_usize()?, p.get(1)?.as_f64()?))
+                })
+                .collect();
+        } else if let Some(bw) = v.get("measured_bw").and_then(|x| x.as_arr()) {
+            self.link_bw = bw
+                .iter()
+                .enumerate()
+                .filter_map(|(i, x)| {
+                    let b = x.as_f64()?;
+                    let dest = wl.get(i + 1)?;
+                    (b > 0.0).then_some((*dest, b))
+                })
+                .collect();
         }
-        if let Some(t) = v.get("tier").and_then(|x| x.as_usize()).and_then(|t| Tier::from_u8(t as u8))
+        if let Some(lt) = v.get("link_tiers").and_then(|x| x.as_arr()) {
+            self.link_tiers = lt
+                .iter()
+                .filter_map(|pair| {
+                    let p = pair.as_arr()?;
+                    let d = p.first()?.as_usize()?;
+                    let t = Tier::from_u8(p.get(1)?.as_usize()? as u8)?;
+                    Some((d, t))
+                })
+                .collect();
+        } else if let Some(t) =
+            v.get("tier").and_then(|x| x.as_usize()).and_then(|t| Tier::from_u8(t as u8))
         {
-            self.tier = t;
+            self.link_tiers = wl.iter().skip(1).map(|&d| (d, t)).collect();
         }
         if let Some(e) = v.get("replica_epoch").and_then(|x| x.as_usize()) {
             self.replica_epoch = e as u64;
@@ -669,16 +721,16 @@ mod tests {
         let root = tmpdir("store-roundtrip");
         let mut sink = DiskSink::new(&root);
         let mut st = LeaderState::around(sample());
-        st.measured_bw = vec![0.0, 1.5e6, 2.5e6];
-        st.tier = Tier::Full;
+        st.link_bw = vec![(2, 1.5e6), (5, 2.5e6)];
+        st.link_tiers = vec![(2, Tier::Full), (5, Tier::FullQ4)];
         st.replica_epoch = 3;
         st.worker_quota = 8;
         st.admitted = vec![1, 2];
         sink.save_leader(&st).unwrap();
         let back = sink.load_latest_leader().unwrap().expect("leader state");
         assert_eq!(back.checkpoint.state.committed_batch, 99);
-        assert_eq!(back.measured_bw, vec![0.0, 1.5e6, 2.5e6]);
-        assert_eq!(back.tier, Tier::Full);
+        assert_eq!(back.link_bw, vec![(2, 1.5e6), (5, 2.5e6)]);
+        assert_eq!(back.link_tiers, vec![(2, Tier::Full), (5, Tier::FullQ4)]);
         assert_eq!(back.replica_epoch, 3);
         assert_eq!((back.worker_quota, back.admitted.clone()), (8, vec![1, 2]));
     }
@@ -690,9 +742,29 @@ mod tests {
         sink.save(&sample()).unwrap(); // checkpoint-only, no leader.json
         let back = sink.load_latest_leader().unwrap().expect("degrades to defaults");
         assert_eq!(back.checkpoint.state.committed_batch, 99);
-        assert_eq!(back.tier, Tier::Off);
+        assert!(back.link_tiers.is_empty());
         assert_eq!(back.replica_epoch, 0);
-        assert!(back.measured_bw.is_empty() && back.admitted.is_empty());
+        assert!(back.link_bw.is_empty() && back.admitted.is_empty());
+    }
+
+    #[test]
+    fn disk_store_translates_legacy_sidecar_keys() {
+        let root = tmpdir("store-legacy");
+        let mut sink = DiskSink::new(&root);
+        sink.save(&sample()).unwrap();
+        // a sidecar written before per-link tiers: dense per-link
+        // bandwidths plus one fleet-wide tier. sample()'s worker list is
+        // [0, 2], so link 0 feeds device 2 and link 1 names no device.
+        std::fs::write(
+            root.join("leader.json"),
+            r#"{"committed_batch": 99, "measured_bw": [3e6, 9e9], "tier": 2,
+                "replica_epoch": 5}"#,
+        )
+        .unwrap();
+        let back = sink.load_latest_leader().unwrap().unwrap();
+        assert_eq!(back.link_bw, vec![(2, 3e6)], "dense index 0 -> worker slot 1");
+        assert_eq!(back.link_tiers, vec![(2, Tier::Full)], "scalar tier fans out per worker");
+        assert_eq!(back.replica_epoch, 5);
     }
 
     #[test]

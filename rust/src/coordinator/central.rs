@@ -42,10 +42,16 @@ pub(crate) struct Central {
     pub(crate) profile: ModelProfile,
     pub(crate) estimator: CapacityEstimator,
     pub(crate) detector: FaultDetector,
-    pub(crate) measured_bw: Vec<f64>, // per link, from BwReports
-    /// Tier controller for `Compression::Adaptive` (None otherwise):
-    /// every BwReport feeds it the slowest measured link, and a tier
-    /// change broadcasts `SetCompression` (DESIGN.md §10).
+    /// Per-link bandwidth from BwReports, keyed by destination device
+    /// (not boot-time stage index — the key survives renumbering, and a
+    /// worker admitted beyond the boot roster gets an entry instead of
+    /// being silently dropped by a fixed-size guard). Pruned on every
+    /// worker-list change ([`crate::coordinator::core::prune_link_state`]).
+    pub(crate) measured_bw: BTreeMap<DeviceId, f64>,
+    /// Per-link tier controller for `Compression::Adaptive` (None
+    /// otherwise): each BwReport feeds its destination's ladder, and any
+    /// ladder change broadcasts the full per-link table in
+    /// `SetCompression` (DESIGN.md §10).
     pub(crate) adaptive: Option<AdaptivePolicy>,
     pub(crate) record: RunRecord,
     pub(crate) clock: RunClock,
@@ -214,11 +220,21 @@ impl Central {
             // eval results are consumed by `pump_for` during evaluation;
             // one arriving outside an eval window is stale — drop it
             Event::Data(DataEvent::EvalResult { .. }) => {}
-            Event::Control(ControlEvent::BwReport { stage, bps }) => {
-                if stage < self.measured_bw.len() {
-                    self.measured_bw[stage] = bps;
+            Event::Control(ControlEvent::BwReport { stage, bps, to }) => {
+                // key by the probed destination device; fall back to
+                // resolving the reporter's stage against the *live*
+                // worker list for pre-v7 reports (to == 0). Reports for
+                // devices no longer in the pipeline are stale — drop
+                // them instead of resurrecting a pruned link.
+                let dest = if to != 0 {
+                    to
+                } else {
+                    self.worker.worker_list.get(stage + 1).copied().unwrap_or(0)
+                };
+                if dest != 0 && self.worker.worker_list.contains(&dest) {
+                    self.measured_bw.insert(dest, bps);
+                    self.maybe_adapt(dest, bps)?;
                 }
-                self.maybe_adapt()?;
             }
             Event::Control(ControlEvent::Weights { from, blocks }) => {
                 self.worker.handle_weights(&self.endpoint, from, blocks)?;
@@ -232,58 +248,66 @@ impl Central {
         Ok(())
     }
 
-    /// Re-evaluate the adaptive compression tier against the slowest
-    /// measured link of the current pipeline; on a change, install the
-    /// tier on the local stage and broadcast `SetCompression`. A no-op
-    /// for static policies.
-    pub(crate) fn maybe_adapt(&mut self) -> Result<()> {
+    /// Feed one link measurement to the per-link adaptive controller; on
+    /// a ladder change, install the new table on the local stage and
+    /// broadcast `SetCompression` to every worker. A no-op for static
+    /// policies. Only the reported destination's ladder can move — every
+    /// other link keeps its tier (the one-bad-link blast radius fix).
+    pub(crate) fn maybe_adapt(&mut self, dest: DeviceId, bps: f64) -> Result<()> {
         let Some(policy) = self.adaptive.as_mut() else {
             return Ok(());
         };
-        let links = self.worker.worker_list.len().saturating_sub(1);
-        let min_bw = self.measured_bw[..links.min(self.measured_bw.len())]
-            .iter()
-            .copied()
-            .filter(|b| *b > 0.0) // 0 = not measured yet
-            .fold(f64::INFINITY, f64::min);
-        if !min_bw.is_finite() {
-            return Ok(());
-        }
-        let old = policy.tier();
-        if let Some(tier) = policy.observe(min_bw) {
+        let old = policy.tier_for(dest);
+        if let Some(tier) = policy.observe(dest, bps) {
+            let floor = policy.thresholds().tier_floor;
+            let links = policy.overrides();
             log_info!(
-                "adaptive compression: min link {min_bw:.0} B/s, tier {} -> {}",
+                "adaptive compression: link ->{dest} {bps:.0} B/s, tier {} -> {}",
                 old.name(),
                 tier.name()
             );
             self.record.event(
                 &self.clock,
-                format!("adaptive: tier {} -> {} ({min_bw:.0} B/s)", old.name(), tier.name()),
+                format!(
+                    "adaptive: link ->{dest} {bps:.0} B/s; tier {} -> {}",
+                    old.name(),
+                    tier.name()
+                ),
             );
-            self.worker.set_tier(tier);
-            for &d in self.worker.worker_list.clone().iter().filter(|&&d| d != 0) {
-                self.endpoint.send(d, Message::SetCompression { tier })?;
-            }
+            self.worker.apply_compression(floor, &links);
+            self.broadcast_compression(floor, &links);
         }
         Ok(())
     }
 
-    /// Re-send the adaptive controller's current tier to `peers` and the
-    /// local stage (no-op for static policies or at tier off). Recovery
-    /// calls this after its Resets: a re-inited worker starts back at
-    /// the policy's initial tier, and the controller won't repeat an
-    /// unchanged tier on its own.
+    /// Broadcast the current per-link table to every worker,
+    /// log-and-continue per peer: under the TCP transport's down-peer
+    /// fast-fail a known-dead peer fails synchronously, and one dead
+    /// peer must not crash the coordinator mid-broadcast — the fault
+    /// detector owns death, and the post-recovery rebroadcast re-aligns
+    /// any peer that missed a table.
+    fn broadcast_compression(&mut self, tier: crate::net::quant::Tier, links: &[(DeviceId, crate::net::quant::Tier)]) {
+        let peers: Vec<DeviceId> =
+            self.worker.worker_list.iter().copied().filter(|&d| d != 0).collect();
+        broadcast_compression(&self.endpoint, &peers, tier, links);
+    }
+
+    /// Re-send the adaptive controller's current per-link table to
+    /// `peers` and the local stage (no-op for static policies, or when
+    /// every ladder sits at the floor — exactly the state a reset or
+    /// re-inited worker already boots in). Recovery calls this after its
+    /// Resets: the controller won't repeat an unchanged table on its own.
     pub(crate) fn rebroadcast_tier(&mut self, peers: &[DeviceId]) -> Result<()> {
-        let Some(tier) = self.adaptive.as_ref().map(|p| p.tier()) else {
+        let Some(policy) = self.adaptive.as_ref() else {
             return Ok(());
         };
-        if tier == crate::net::quant::Tier::Off {
+        let links = policy.overrides();
+        if links.is_empty() {
             return Ok(());
         }
-        self.worker.set_tier(tier);
-        for &d in peers {
-            self.endpoint.send(d, Message::SetCompression { tier })?;
-        }
+        let floor = policy.thresholds().tier_floor;
+        self.worker.apply_compression(floor, &links);
+        broadcast_compression(&self.endpoint, peers, floor, &links);
         Ok(())
     }
 
@@ -388,7 +412,7 @@ impl Central {
     // ------------------------------------------------------------------
 
     /// Save everything the coordinator holds — its own stage + the newest
-    /// global/chain replicas, measured bandwidths, the adaptive tier, the
+    /// global/chain replicas, per-link bandwidths and tiers, the
     /// replica epoch, and the admission roster — through the
     /// [`CoordinatorStore`]. Completeness of the worker stages depends on
     /// the replication period — exactly the paper's §III-E tradeoff. The
@@ -404,12 +428,8 @@ impl Central {
         let (worker_quota, admitted) = self.roster.snapshot();
         let st = LeaderState {
             checkpoint,
-            measured_bw: self.measured_bw.clone(),
-            tier: self
-                .adaptive
-                .as_ref()
-                .map(|p| p.tier())
-                .unwrap_or(crate::net::quant::Tier::Off),
+            link_bw: self.measured_bw.iter().map(|(&d, &b)| (d, b)).collect(),
+            link_tiers: self.adaptive.as_ref().map(|p| p.overrides()).unwrap_or_default(),
             replica_epoch: self.replica_epoch,
             worker_quota,
             admitted,
@@ -619,5 +639,99 @@ impl Central {
             }
         }
         Ok(final_weights)
+    }
+}
+
+/// Send the per-link tier table to every peer, absorbing per-peer send
+/// errors. During a dead-peer window (the TCP transport's `down_ttl`
+/// fast-fail makes sends to a known-dead peer fail synchronously) a
+/// broadcast must still reach every live worker — propagating the first
+/// `Err` with `?` would crash the coordinator over a death the fault
+/// detector already owns. Returns the number of peers that could not be
+/// reached, for callers that want to log or count.
+pub(crate) fn broadcast_compression(
+    endpoint: &dyn Transport,
+    peers: &[DeviceId],
+    tier: crate::net::quant::Tier,
+    links: &[(DeviceId, crate::net::quant::Tier)],
+) -> usize {
+    let mut failed = 0;
+    for &d in peers {
+        if let Err(e) = endpoint.send(d, Message::SetCompression {
+            tier,
+            links: links.to_vec(),
+        }) {
+            log_warn!("SetCompression to {d} failed ({e}); fault detector owns recovery");
+            failed += 1;
+        }
+    }
+    failed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::quant::Tier;
+    use std::sync::Mutex;
+
+    /// A stub transport whose sends to one designated peer fail
+    /// synchronously — the shape of the TCP endpoint's `down_ttl`
+    /// fast-fail during a dead-peer window.
+    struct FlakyEndpoint {
+        dead: DeviceId,
+        sent: Mutex<Vec<(DeviceId, Message)>>,
+    }
+
+    impl Transport for FlakyEndpoint {
+        fn my_id(&self) -> DeviceId {
+            0
+        }
+        fn send(&self, to: DeviceId, msg: Message) -> Result<()> {
+            if to == self.dead {
+                bail!("peer {to} is down");
+            }
+            self.sent.lock().unwrap().push((to, msg));
+            Ok(())
+        }
+        fn recv_timeout(&self, _timeout: Duration) -> Option<(DeviceId, Message)> {
+            None
+        }
+        fn n_devices(&self) -> usize {
+            4
+        }
+    }
+
+    /// Satellite: a broadcast during a dead-peer window must not error
+    /// out mid-fanout — every live peer still gets the full table, the
+    /// dead peer is counted, and nothing propagates as `Err`.
+    #[test]
+    fn broadcast_survives_a_dead_peer_mid_fanout() {
+        let ep = FlakyEndpoint { dead: 2, sent: Mutex::new(Vec::new()) };
+        let links = vec![(2, Tier::Full), (3, Tier::FullQ4)];
+        let failed = broadcast_compression(&ep, &[1, 2, 3], Tier::Off, &links);
+        assert_eq!(failed, 1, "exactly the dead peer fails");
+        let sent = ep.sent.lock().unwrap();
+        assert_eq!(
+            sent.iter().map(|(d, _)| *d).collect::<Vec<_>>(),
+            vec![1, 3],
+            "live peers after the dead one must still be reached"
+        );
+        for (_, msg) in sent.iter() {
+            match msg {
+                Message::SetCompression { tier, links: got } => {
+                    assert_eq!(*tier, Tier::Off);
+                    assert_eq!(got, &links, "every live peer gets the full table");
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_with_all_peers_live_reports_zero_failures() {
+        let ep = FlakyEndpoint { dead: 99, sent: Mutex::new(Vec::new()) };
+        let failed = broadcast_compression(&ep, &[1, 2, 3], Tier::Activations, &[]);
+        assert_eq!(failed, 0);
+        assert_eq!(ep.sent.lock().unwrap().len(), 3);
     }
 }

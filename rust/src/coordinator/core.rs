@@ -658,6 +658,46 @@ impl WorkerRoster {
     }
 }
 
+/// Invalidate per-link adaptive-compression state on a `worker_list`
+/// change (repartition commit, rejoin, admission — DESIGN.md §10).
+///
+/// Bandwidth measurements and tier ladders are keyed by destination
+/// device; after a topology change, entries for departed devices
+/// describe links that no longer exist, and a stale measurement would
+/// otherwise pin the fleet at an escalated tier forever. Both drivers
+/// call this at every commit point so the two stay in lockstep. Valid
+/// destinations are `worker_list[1..]` — the central device (stage 0)
+/// is never a probe destination.
+///
+/// Returns the destinations whose measurement or ladder was dropped,
+/// ascending (deterministic, for tracing). An unchanged topology returns
+/// an empty vec and mutates nothing.
+pub fn prune_link_state(
+    measured_bw: &mut BTreeMap<DeviceId, f64>,
+    policy: Option<&mut crate::net::quant::AdaptivePolicy>,
+    worker_list: &[DeviceId],
+) -> Vec<DeviceId> {
+    let live: BTreeSet<DeviceId> = worker_list.iter().skip(1).copied().collect();
+    let mut dropped: BTreeSet<DeviceId> = BTreeSet::new();
+    measured_bw.retain(|&d, _| {
+        let keep = live.contains(&d);
+        if !keep {
+            dropped.insert(d);
+        }
+        keep
+    });
+    if let Some(p) = policy {
+        p.retain(|d| {
+            let keep = live.contains(&d);
+            if !keep {
+                dropped.insert(d);
+            }
+            keep
+        });
+    }
+    dropped.into_iter().collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -851,5 +891,45 @@ mod tests {
         // evictions are not persisted: the restored roster can admit 5
         let mut back = back;
         back.admit(5).unwrap();
+    }
+
+    #[test]
+    fn prune_link_state_drops_departed_destinations() {
+        use crate::net::quant::{AdaptivePolicy, AdaptiveThresholds, Tier};
+        // regression for the stale-measurement bug: after a case-3
+        // repartition evicts device 3, its old measurement and ladder
+        // must not survive to pin the fleet at an escalated tier
+        let mut bw: BTreeMap<DeviceId, f64> =
+            [(1, 5e7), (2, 4e7), (3, 9e4)].into_iter().collect();
+        let mut p = AdaptivePolicy::new(AdaptiveThresholds::default());
+        assert_eq!(p.observe(3, 9e4), Some(Tier::FullQ4));
+        assert_eq!(p.observe(2, 3e6), Some(Tier::Activations));
+        // device 3 evicted; device 4 admitted in its place
+        let dropped = prune_link_state(&mut bw, Some(&mut p), &[0, 1, 2, 4]);
+        assert_eq!(dropped, vec![3]);
+        assert!(!bw.contains_key(&3), "stale measurement gone");
+        assert_eq!(p.tier_for(3), Tier::Off, "stale ladder gone");
+        assert_eq!(p.tier_for(2), Tier::Activations, "live ladder untouched");
+        assert_eq!(bw.get(&2), Some(&4e7));
+        // unchanged topology: a no-op, nothing reported
+        assert!(prune_link_state(&mut bw, Some(&mut p), &[0, 1, 2, 4]).is_empty());
+        // the central device's slot is never a valid destination
+        let mut bw: BTreeMap<DeviceId, f64> = [(0, 1e6), (1, 2e6)].into_iter().collect();
+        let dropped = prune_link_state(&mut bw, None, &[0, 1]);
+        assert_eq!(dropped, vec![0], "a measurement keyed to central is bogus: dropped");
+    }
+
+    #[test]
+    fn prune_link_state_reports_ladder_only_drops() {
+        use crate::net::quant::{AdaptivePolicy, AdaptiveThresholds, Tier};
+        // a ladder can outlive its measurement (e.g. the measurement map
+        // was rebuilt on coordinator restart): pruning must still report
+        // and drop it
+        let mut bw: BTreeMap<DeviceId, f64> = BTreeMap::new();
+        let mut p = AdaptivePolicy::new(AdaptiveThresholds::default());
+        assert_eq!(p.observe(5, 1e4), Some(Tier::FullQ4));
+        let dropped = prune_link_state(&mut bw, Some(&mut p), &[0, 1, 2]);
+        assert_eq!(dropped, vec![5]);
+        assert!(p.overrides().is_empty());
     }
 }

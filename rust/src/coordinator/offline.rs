@@ -237,7 +237,7 @@ pub(crate) fn bootstrap(cfg: &RunConfig, mut opts: RunOpts) -> Result<BootResult
         profile,
         estimator: CapacityEstimator::default(),
         detector: FaultDetector::new(Duration::from_millis(cfg.fault_timeout_ms)),
-        measured_bw: vec![0.0; n.saturating_sub(1)],
+        measured_bw: std::collections::BTreeMap::new(),
         adaptive: (cfg.compression == crate::config::Compression::Adaptive)
             .then(|| crate::net::quant::AdaptivePolicy::new(cfg.adaptive.clone())),
         record: RunRecord::default(),
@@ -276,11 +276,14 @@ pub(crate) fn bootstrap(cfg: &RunConfig, mut opts: RunOpts) -> Result<BootResult
         replica_epoch: resume.as_ref().map(|st| st.replica_epoch + 1).unwrap_or(0),
     };
     // warm-start the link estimates from the stored leadership state so
-    // the first cost model after a resume is capacity-aware, not blind
+    // the first cost model after a resume is capacity-aware, not blind;
+    // only destinations on the restored worker list are taken — the
+    // sidecar may predate a topology change
     if let Some(st) = &resume {
-        let n_links = central.measured_bw.len();
-        for (i, &b) in st.measured_bw.iter().take(n_links).enumerate() {
-            central.measured_bw[i] = b;
+        for &(d, b) in &st.link_bw {
+            if worker_list.contains(&d) {
+                central.measured_bw.insert(d, b);
+            }
         }
     }
     // admission: a resume restores the persisted quota and roster, then
@@ -294,11 +297,13 @@ pub(crate) fn bootstrap(cfg: &RunConfig, mut opts: RunOpts) -> Result<BootResult
         for d in 1..n {
             central.roster.readmit(d)?;
         }
-        // the tier ladder resumes where it left off (clamped into the
-        // possibly re-narrowed band), not at the floor
+        // each link's tier ladder resumes where it left off (clamped
+        // into the possibly re-narrowed band), not at the floor
         if let Some(policy) = &mut central.adaptive {
-            *policy =
-                crate::net::quant::AdaptivePolicy::resume_at(cfg.adaptive.clone(), st.tier);
+            *policy = crate::net::quant::AdaptivePolicy::resume_at(
+                cfg.adaptive.clone(),
+                &st.link_tiers,
+            );
         }
     } else {
         // the offline phase (profiling above) is already behind us; the
@@ -356,10 +361,10 @@ pub(crate) fn bootstrap(cfg: &RunConfig, mut opts: RunOpts) -> Result<BootResult
         central.record.event(
             &central.clock,
             format!(
-                "resumed from checkpoint at batch {} (replica epoch {}, tier {})",
+                "resumed from checkpoint at batch {} (replica epoch {}, {} link tiers)",
                 st.checkpoint.state.committed_batch,
                 central.replica_epoch,
-                st.tier.name()
+                st.link_tiers.len()
             ),
         );
         // checkpoint weights take the warm-start path below — always

@@ -21,7 +21,7 @@ use crate::pipeline::{ControlEvent, DataEvent, Event};
 use crate::{log_info, log_warn};
 
 use super::central::Central;
-use super::core::{PhaseEffect, PhaseInput, RedistReason};
+use super::core::{prune_link_state, PhaseEffect, PhaseInput, RedistReason};
 
 impl Central {
     // ------------------------------------------------------------------
@@ -51,7 +51,10 @@ impl Central {
         let n = worker_list.len();
         let mut bw = Vec::with_capacity(n.saturating_sub(1));
         for link in 0..n.saturating_sub(1) {
-            let measured = self.measured_bw.get(link).copied().unwrap_or(0.0);
+            // pipeline link `link` feeds the device at slot link+1 of the
+            // candidate list — look its measurement up by device id
+            let measured =
+                self.measured_bw.get(&worker_list[link + 1]).copied().unwrap_or(0.0);
             bw.push(if measured > 0.0 {
                 measured
             } else {
@@ -179,6 +182,21 @@ impl Central {
                             self.endpoint.send(d, Message::Commit)?;
                         }
                         self.worker.apply_commit()?;
+                        // the committed list is the live topology now:
+                        // measurements and tier ladders keyed to departed
+                        // devices are stale — drop them here so every
+                        // worker-list change (repartition, rejoin, case-3
+                        // eviction) funnels through one invalidation point
+                        let dropped = prune_link_state(
+                            &mut self.measured_bw,
+                            self.adaptive.as_mut(),
+                            &self.worker.worker_list,
+                        );
+                        if !dropped.is_empty() {
+                            log_info!(
+                                "adaptive: links {dropped:?} invalidated by topology change"
+                            );
+                        }
                         return Ok(());
                     }
                     PhaseEffect::AbortRedistribution => {

@@ -46,7 +46,16 @@ use super::quant::{Bits, Compression, QTensor, Scheme, Tier};
 /// admission `worker_quota`, two u64s after `tier_ceiling` (DESIGN.md
 /// §12). Neither changes `Message::byte_len`'s pricing formula, so v5
 /// traffic traces stay byte-identical.
-pub const CODEC_VERSION: u8 = 6;
+///
+/// v7: per-link adaptive compression (DESIGN.md §10) — `BwReport` gains
+/// the probed destination device (a trailing usize), and `SetCompression`
+/// gains the per-destination override list (a trailing count + `(usize
+/// device, u8 tier)` pairs, written only when non-empty). Both are
+/// optional-trailing fields: an empty override list elides even its
+/// count, and the decoder reads the extras only when bytes remain in the
+/// frame (`decode` checks exact frame consumption, which makes trailing
+/// optionals unambiguous). Pricing (`Message::byte_len`) is unchanged.
+pub const CODEC_VERSION: u8 = 7;
 
 // ---------- primitive writers ----------
 
@@ -441,10 +450,15 @@ pub fn encode_into(buf: &mut Vec<u8>, from: DeviceId, msg: &Message) {
             w.u8(15);
             w.u32(*payload_bytes);
         }
-        Message::BwReport { stage, bps } => {
+        Message::BwReport { stage, bps, to } => {
             w.u8(17);
             w.usize(*stage);
             w.f64(*bps);
+            // v7 trailing field: elided for the `to == 0` sentinel so the
+            // default frame keeps its v6 byte pattern
+            if *to != 0 {
+                w.usize(*to);
+            }
         }
         Message::SetLr { lr } => {
             w.u8(18);
@@ -461,9 +475,18 @@ pub fn encode_into(buf: &mut Vec<u8>, from: DeviceId, msg: &Message) {
             w.i64(*committed_bwd);
             w.bool(*fresh);
         }
-        Message::SetCompression { tier } => {
+        Message::SetCompression { tier, links } => {
             w.u8(21);
             w.u8(tier.to_u8());
+            // v7 trailing field: an empty override table elides even its
+            // count, keeping the single-byte v6 pattern for defaults
+            if !links.is_empty() {
+                w.usize(links.len());
+                for &(dev, t) in links {
+                    w.usize(dev);
+                    w.u8(t.to_u8());
+                }
+            }
         }
         Message::Shutdown => w.u8(16),
     }
@@ -637,7 +660,14 @@ pub fn decode(frame: &[u8]) -> Result<(DeviceId, Message)> {
         14 => Message::BwTest { payload_bytes: r.u32()?, data: r.bytes()? },
         15 => Message::BwAck { payload_bytes: r.u32()? },
         16 => Message::Shutdown,
-        17 => Message::BwReport { stage: r.usize()?, bps: r.f64()? },
+        17 => {
+            let stage = r.usize()?;
+            let bps = r.f64()?;
+            // v7 trailing destination; absent in v6-shaped frames (0 is
+            // the "unknown" sentinel — never a real probe destination)
+            let to = if r.i < frame.len() { r.usize()? } else { 0 };
+            Message::BwReport { stage, bps, to }
+        }
         18 => Message::SetLr { lr: r.f32()? },
         19 => Message::CentralRestart { committed: r.i64()? },
         20 => Message::WorkerState {
@@ -646,12 +676,24 @@ pub fn decode(frame: &[u8]) -> Result<(DeviceId, Message)> {
             committed_bwd: r.i64()?,
             fresh: r.bool()?,
         },
-        21 => Message::SetCompression {
-            tier: {
-                let t = r.u8()?;
-                Tier::from_u8(t).ok_or_else(|| anyhow!("bad compression tier {t}"))?
-            },
-        },
+        21 => {
+            let t = r.u8()?;
+            let tier = Tier::from_u8(t).ok_or_else(|| anyhow!("bad compression tier {t}"))?;
+            // v7 trailing override table; absent means "no overrides"
+            let mut links = Vec::new();
+            if r.i < frame.len() {
+                let n = r.usize()?;
+                links.reserve(n.min(1 << 16));
+                for _ in 0..n {
+                    let dev = r.usize()?;
+                    let t = r.u8()?;
+                    let tier =
+                        Tier::from_u8(t).ok_or_else(|| anyhow!("bad compression tier {t}"))?;
+                    links.push((dev, tier));
+                }
+            }
+            Message::SetCompression { tier, links }
+        }
         t => return Err(anyhow!("unknown message tag {t}")),
     };
     if r.i != frame.len() {
@@ -692,7 +734,8 @@ mod tests {
         roundtrip(0, &Message::FetchDone { id: 2 });
         roundtrip(0, &Message::EvalResult { batch: 9, loss: 1.5, ncorrect: 3.0 });
         roundtrip(0, &Message::BwAck { payload_bytes: 1024 });
-        roundtrip(2, &Message::BwReport { stage: 1, bps: 12.5e6 });
+        roundtrip(2, &Message::BwReport { stage: 1, bps: 12.5e6, to: 0 });
+        roundtrip(2, &Message::BwReport { stage: 1, bps: 12.5e6, to: 4 });
         roundtrip(0, &Message::SetLr { lr: 0.00625 });
         roundtrip(0, &Message::CentralRestart { committed: -1 });
         roundtrip(0, &Message::CentralRestart { committed: 1999 });
@@ -709,8 +752,33 @@ mod tests {
             fresh: true,
         });
         for tier in [Tier::Off, Tier::Activations, Tier::Full, Tier::FullQ4] {
-            roundtrip(0, &Message::SetCompression { tier });
+            roundtrip(0, &Message::SetCompression { tier, links: vec![] });
         }
+        roundtrip(
+            0,
+            &Message::SetCompression {
+                tier: Tier::Off,
+                links: vec![(2, Tier::Full), (5, Tier::FullQ4)],
+            },
+        );
+    }
+
+    #[test]
+    fn v6_default_byte_patterns_are_preserved() {
+        // the v7 trailing fields must be elided for default values, so a
+        // default-valued frame is byte-identical to its v6 layout
+        let frame = encode(0, &Message::SetCompression { tier: Tier::Full, links: vec![] });
+        let bare = &frame[frame.len() - 2..];
+        assert_eq!(bare, &[21, Tier::Full.to_u8()], "tag + tier byte, nothing trailing");
+        let with = encode(0, &Message::SetCompression {
+            tier: Tier::Full,
+            links: vec![(3, Tier::FullQ4)],
+        });
+        assert!(with.len() > frame.len(), "overrides extend the frame");
+        let plain = encode(2, &Message::BwReport { stage: 1, bps: 1e6, to: 0 });
+        let keyed = encode(2, &Message::BwReport { stage: 1, bps: 1e6, to: 4 });
+        assert_eq!(keyed.len(), plain.len() + 8, "destination is one trailing usize");
+        assert_eq!(&keyed[..plain.len()], &plain[..], "prefix unchanged");
     }
 
     #[test]
@@ -1029,7 +1097,12 @@ mod tests {
                 data: (0..g.usize_in(0, 64)).map(|i| i as u8).collect(),
             },
             15 => Message::BwAck { payload_bytes: g.usize_in(0, 1 << 20) as u32 },
-            16 => Message::BwReport { stage: g.usize_in(0, 5), bps: g.f64_in(1e3, 1e9) },
+            16 => Message::BwReport {
+                stage: g.usize_in(0, 5),
+                bps: g.f64_in(1e3, 1e9),
+                // 0 (the elided "unknown" sentinel) must stay in the mix
+                to: g.usize_in(0, 6),
+            },
             17 => Message::SetLr { lr: g.f64_in(1e-5, 0.5) as f32 },
             18 => Message::CentralRestart { committed: g.usize_in(0, 500) as i64 - 1 },
             19 => Message::WorkerState {
@@ -1040,6 +1113,14 @@ mod tests {
             },
             20 => Message::SetCompression {
                 tier: *g.pick(&[Tier::Off, Tier::Activations, Tier::Full, Tier::FullQ4]),
+                links: (0..g.usize_in(0, 4))
+                    .map(|i| {
+                        (
+                            i + g.usize_in(1, 3),
+                            *g.pick(&[Tier::Off, Tier::Activations, Tier::Full, Tier::FullQ4]),
+                        )
+                    })
+                    .collect(),
             },
             _ => Message::Shutdown,
         }

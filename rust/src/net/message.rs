@@ -287,10 +287,16 @@ pub enum Message {
     },
     /// Worker -> central: measured bandwidth of its link to the next
     /// worker (paper §III-B: "the i-th worker measures the bandwidth
-    /// between itself and its next worker, B_{i,i+1}").
+    /// between itself and its next worker, B_{i,i+1}"). `to` names the
+    /// probed destination *device* so the coordinator can key its
+    /// per-link ladder by something that survives renumbering; `to == 0`
+    /// means "unknown" (a pre-v7 peer — probe destinations are never the
+    /// central device), and the coordinator falls back to resolving
+    /// `stage` against the live worker list.
     BwReport {
         stage: usize,
         bps: f64,
+        to: DeviceId,
     },
     /// Central -> workers after a coordinator reboot (paper §III-E): the
     /// central node recovered from its periodic checkpoint, whose newest
@@ -310,14 +316,18 @@ pub enum Message {
         committed_bwd: i64,
         fresh: bool,
     },
-    /// Central -> workers under [`Compression::Adaptive`]: switch the
-    /// effective wire tier (DESIGN.md §10). Receivers install the tier
-    /// for their *outgoing* tensors and clear error-feedback residuals;
+    /// Central -> workers under [`Compression::Adaptive`]: install the
+    /// per-link tier table (DESIGN.md §10). `tier` is the default for
+    /// every destination not listed; `links` are the per-destination
+    /// overrides, sorted ascending by device id. Receivers *replace*
+    /// their whole outgoing tier map (so stale overrides cannot linger)
+    /// and clear error-feedback residuals on any effective change;
     /// decoding never depends on it (tensors self-describe their arm),
     /// so the handshake needs no barrier and cannot corrupt in-flight
     /// traffic.
     SetCompression {
         tier: Tier,
+        links: Vec<(DeviceId, Tier)>,
     },
     Shutdown,
 }
@@ -386,6 +396,10 @@ impl Message {
             Message::Reset { .. } => 8,
             Message::BwTest { data, .. } => 4 + data.len(),
             Message::BwAck { .. } => 4,
+            // Pricing stays fixed (same rationale as InitState above):
+            // the BwReport `to` field and the SetCompression override
+            // list are control-plane metadata a few bytes long, and
+            // pricing them would shift every adaptive-mode trace.
             Message::BwReport { .. } => 16,
             Message::SetLr { .. } => 4,
             Message::CentralRestart { .. } => 8,

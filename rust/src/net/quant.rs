@@ -13,9 +13,10 @@
 //! Which encoding each message class uses is a [`Tier`], selected by the
 //! cluster [`Compression`] policy (re-exported as `config::Compression`):
 //! static tiers pin the encoding for the whole run, while
-//! [`Compression::Adaptive`] lets the coordinator walk the tier ladder
-//! ([`AdaptivePolicy`]) as the measured link bandwidth degrades,
-//! broadcasting `SetCompression` control messages (DESIGN.md §10). `Off`
+//! [`Compression::Adaptive`] lets the coordinator walk a tier ladder
+//! *per link* ([`AdaptivePolicy`]) as each destination's measured
+//! bandwidth degrades, broadcasting the per-link tier table in
+//! `SetCompression` control messages (DESIGN.md §10). `Off`
 //! keeps every tensor f32, so numerics, event order, and the bandwidth
 //! model's `Message::byte_len` accounting are exactly the
 //! pre-compression behavior. (The codec *framing* carries a version byte
@@ -35,10 +36,12 @@
 //! quantization noise stays bounded instead of accumulating across
 //! sends (DESIGN.md §8, §10).
 
+use std::collections::BTreeMap;
 use std::fmt;
 use std::sync::Arc;
 
 use super::buf::TensorBuf;
+use super::message::DeviceId;
 
 // ---------------------------------------------------------------------
 // policy: tiers, the cluster knob, and the adaptive controller
@@ -293,31 +296,79 @@ impl AdaptiveThresholds {
 }
 
 /// The coordinator-side tier controller for [`Compression::Adaptive`]:
-/// a pure, deterministic function of the observed bandwidth sequence.
-/// Escalation is immediate (a link just got worse — compress now);
-/// relaxation is hysteretic (see [`AdaptiveThresholds`]).
+/// one independent escalate/relax ladder **per destination device**, each
+/// a pure, deterministic function of that link's observed bandwidth
+/// sequence. Escalation is immediate (the link just got worse — compress
+/// now); relaxation is hysteretic (see [`AdaptiveThresholds`]). Keying by
+/// destination device — not boot-time stage index — means one degraded
+/// link escalates only the traffic *into* that device while every other
+/// link keeps its own tier, and the key survives renumbering.
+///
+/// A destination with no entry sits at `tier_floor`; ladders that relax
+/// back to the floor are removed, so [`AdaptivePolicy::overrides`] stays
+/// the minimal set of links that differ from the floor (and an empty
+/// override list means "whole fleet at the floor").
 #[derive(Debug, Clone)]
 pub struct AdaptivePolicy {
     th: AdaptiveThresholds,
-    tier: Tier,
+    /// Per-destination tier, keyed by destination [`DeviceId`]. BTreeMap
+    /// so iteration (and thus broadcast/trace order) is deterministic.
+    links: BTreeMap<DeviceId, Tier>,
 }
 
 impl AdaptivePolicy {
+    /// A fresh controller: every link at `tier_floor`, no overrides.
     pub fn new(th: AdaptiveThresholds) -> AdaptivePolicy {
-        let tier = th.tier_floor;
-        AdaptivePolicy { th, tier }
+        AdaptivePolicy { th, links: BTreeMap::new() }
     }
 
-    /// Rebuild a controller at a persisted tier (coordinator resume,
-    /// DESIGN.md §12): the stored tier is clamped into the configured
-    /// band in case the operator re-narrowed it across the restart.
-    pub fn resume_at(th: AdaptiveThresholds, tier: Tier) -> AdaptivePolicy {
-        let tier = tier.clamp(th.tier_floor, th.tier_ceiling);
-        AdaptivePolicy { th, tier }
+    /// Rebuild a controller from persisted per-link tiers (coordinator
+    /// resume, DESIGN.md §12): each stored tier is clamped into the
+    /// configured band in case the operator re-narrowed it across the
+    /// restart; entries that clamp onto the floor are dropped.
+    pub fn resume_at(th: AdaptiveThresholds, links: &[(DeviceId, Tier)]) -> AdaptivePolicy {
+        let mut p = AdaptivePolicy::new(th);
+        for &(dest, tier) in links {
+            let tier = tier.clamp(p.th.tier_floor, p.th.tier_ceiling);
+            if tier != p.th.tier_floor {
+                p.links.insert(dest, tier);
+            }
+        }
+        p
     }
 
-    pub fn tier(&self) -> Tier {
-        self.tier
+    pub fn thresholds(&self) -> &AdaptiveThresholds {
+        &self.th
+    }
+
+    /// The tier currently applied to traffic toward `dest`.
+    pub fn tier_for(&self, dest: DeviceId) -> Tier {
+        self.links.get(&dest).copied().unwrap_or(self.th.tier_floor)
+    }
+
+    /// The most-escalated tier across all links (the floor when no link
+    /// is escalated) — for logs and the legacy single-tier summary.
+    pub fn max_tier(&self) -> Tier {
+        self.links.values().copied().max().unwrap_or(self.th.tier_floor)
+    }
+
+    /// Every link whose tier differs from `tier_floor`, in ascending
+    /// destination order (deterministic — suitable for the wire and for
+    /// persistence).
+    pub fn overrides(&self) -> Vec<(DeviceId, Tier)> {
+        self.links.iter().map(|(&d, &t)| (d, t)).collect()
+    }
+
+    /// Drop the ladder for `dest` (its measurements no longer describe a
+    /// live link). Returns true if an escalated ladder was removed.
+    pub fn forget(&mut self, dest: DeviceId) -> bool {
+        self.links.remove(&dest).is_some()
+    }
+
+    /// Keep only ladders whose destination satisfies `keep` (topology
+    /// change: the rest describe links that no longer exist).
+    pub fn retain<F: FnMut(DeviceId) -> bool>(&mut self, mut keep: F) {
+        self.links.retain(|&d, _| keep(d));
     }
 
     /// The tier `bps` maps to, ignoring hysteresis.
@@ -343,23 +394,29 @@ impl AdaptivePolicy {
         }
     }
 
-    /// Feed one bandwidth observation (the minimum over the pipeline's
-    /// measured links). Returns `Some(new_tier)` iff the tier changed.
-    pub fn observe(&mut self, bps: f64) -> Option<Tier> {
+    /// Feed one bandwidth observation for the link into `dest`. Returns
+    /// `Some(new_tier)` iff that link's tier changed; every other link's
+    /// ladder is untouched.
+    pub fn observe(&mut self, dest: DeviceId, bps: f64) -> Option<Tier> {
         if !bps.is_finite() || bps <= 0.0 {
             return None; // unmeasured / nonsense observation: hold
         }
+        let current = self.tier_for(dest);
         // the band clamp comes before the change test: a target outside
         // [floor, ceiling] that clamps back onto the current rung is a
         // hold, not a change
         let target = self.target(bps).clamp(self.th.tier_floor, self.th.tier_ceiling);
-        let relax_floor = self.entry_threshold(self.tier) * self.th.relax_factor;
-        let next = match target.cmp(&self.tier) {
+        let relax_floor = self.entry_threshold(current) * self.th.relax_factor;
+        let next = match target.cmp(&current) {
             std::cmp::Ordering::Greater => target, // worse link: escalate now
             std::cmp::Ordering::Less if bps > relax_floor => target,
             _ => return None, // same rung, or inside the hysteresis band
         };
-        self.tier = next;
+        if next == self.th.tier_floor {
+            self.links.remove(&dest); // back at the floor: no override
+        } else {
+            self.links.insert(dest, next);
+        }
         Some(next)
     }
 }
@@ -1153,23 +1210,90 @@ mod tests {
         };
         th.validate().unwrap();
         let mut p = AdaptivePolicy::new(th);
-        assert_eq!(p.tier(), Tier::Off);
-        assert_eq!(p.observe(5e7), None, "fast link: stay Off");
+        assert_eq!(p.tier_for(1), Tier::Off);
+        assert_eq!(p.observe(1, 5e7), None, "fast link: stay Off");
         // multi-step escalation in one observation
-        assert_eq!(p.observe(2.0e5), Some(Tier::Full));
+        assert_eq!(p.observe(1, 2.0e5), Some(Tier::Full));
         // jitter just above the entry threshold must NOT relax
-        assert_eq!(p.observe(5.0e5), None, "4e5 * 1.5 = 6e5 not cleared");
-        assert_eq!(p.tier(), Tier::Full);
+        assert_eq!(p.observe(1, 5.0e5), None, "4e5 * 1.5 = 6e5 not cleared");
+        assert_eq!(p.tier_for(1), Tier::Full);
         // clearing the band relaxes to the target tier directly
-        assert_eq!(p.observe(7.0e5), Some(Tier::Activations));
+        assert_eq!(p.observe(1, 7.0e5), Some(Tier::Activations));
         // degrade to the bottom rung
-        assert_eq!(p.observe(1.0e5), Some(Tier::FullQ4));
+        assert_eq!(p.observe(1, 1.0e5), Some(Tier::FullQ4));
         // and a fully recovered link walks straight back to Off
-        assert_eq!(p.observe(5e7), Some(Tier::Off));
+        assert_eq!(p.observe(1, 5e7), Some(Tier::Off));
+        assert!(p.overrides().is_empty(), "back at the floor: no override kept");
         // nonsense observations hold the tier
-        assert_eq!(p.observe(0.0), None);
-        assert_eq!(p.observe(f64::NAN), None);
-        assert_eq!(p.observe(f64::INFINITY), None);
+        assert_eq!(p.observe(1, 0.0), None);
+        assert_eq!(p.observe(1, f64::NAN), None);
+        assert_eq!(p.observe(1, f64::INFINITY), None);
+    }
+
+    #[test]
+    fn adaptive_policy_runs_each_link_ladder_independently() {
+        let th = AdaptiveThresholds {
+            activations_below: 3e6,
+            full_below: 4e5,
+            q4_below: 1.5e5,
+            relax_factor: 1.5,
+            ..AdaptiveThresholds::default()
+        };
+        let mut p = AdaptivePolicy::new(th);
+        // link ->2 collapses; link ->3 merely degrades; link ->1 is fine
+        assert_eq!(p.observe(2, 1.0e5), Some(Tier::FullQ4));
+        assert_eq!(p.observe(3, 2.0e5), Some(Tier::Full));
+        assert_eq!(p.observe(1, 5e7), None);
+        assert_eq!(p.tier_for(1), Tier::Off, "healthy link untouched by the bad ones");
+        assert_eq!(p.tier_for(2), Tier::FullQ4);
+        assert_eq!(p.tier_for(3), Tier::Full);
+        assert_eq!(p.max_tier(), Tier::FullQ4);
+        // hysteresis is evaluated against each link's own rung
+        assert_eq!(p.observe(3, 5.0e5), None, "5e5 < 4e5*1.5: inside ->3's band");
+        assert_eq!(p.observe(2, 2.0e5), None, "2e5 < 1.5e5*1.5: inside ->2's band");
+        // recovery of one link does not move the other
+        assert_eq!(p.observe(3, 5e7), Some(Tier::Off));
+        assert_eq!(p.tier_for(2), Tier::FullQ4, "->2 still escalated after ->3 relaxed");
+        assert_eq!(p.overrides(), vec![(2, Tier::FullQ4)]);
+    }
+
+    #[test]
+    fn adaptive_policy_overrides_iterate_in_destination_order() {
+        let mut p = AdaptivePolicy::new(AdaptiveThresholds::default());
+        // insert in scrambled order; overrides() must come back sorted
+        for dest in [9, 2, 7, 4] {
+            assert!(p.observe(dest, 1.0e4).is_some());
+        }
+        let devs: Vec<usize> = p.overrides().iter().map(|&(d, _)| d).collect();
+        assert_eq!(devs, vec![2, 4, 7, 9], "deterministic ascending iteration");
+        // forget/retain prune ladders without touching the others
+        assert!(p.forget(7));
+        assert!(!p.forget(7), "second forget is a no-op");
+        p.retain(|d| d != 9);
+        let devs: Vec<usize> = p.overrides().iter().map(|&(d, _)| d).collect();
+        assert_eq!(devs, vec![2, 4]);
+        assert_eq!(p.tier_for(7), Tier::Off, "forgotten link reads as the floor");
+    }
+
+    #[test]
+    fn adaptive_policy_resume_clamps_each_link_into_the_band() {
+        let th = AdaptiveThresholds {
+            tier_floor: Tier::Activations,
+            tier_ceiling: Tier::Full,
+            ..AdaptiveThresholds::default()
+        };
+        let p = AdaptivePolicy::resume_at(
+            th,
+            &[(1, Tier::Off), (2, Tier::FullQ4), (3, Tier::Full)],
+        );
+        assert_eq!(p.tier_for(1), Tier::Activations, "below-floor entry clamps to floor");
+        assert_eq!(p.tier_for(2), Tier::Full, "above-ceiling entry clamps to ceiling");
+        assert_eq!(p.tier_for(3), Tier::Full);
+        assert_eq!(
+            p.overrides(),
+            vec![(2, Tier::Full), (3, Tier::Full)],
+            "floor-clamped entries are dropped, not stored"
+        );
     }
 
     #[test]
@@ -1196,20 +1320,21 @@ mod tests {
         };
         th.validate().unwrap();
         let mut p = AdaptivePolicy::new(th);
-        assert_eq!(p.tier(), Tier::Off);
-        assert_eq!(p.observe(1e3), Some(Tier::Full), "capped at the ceiling, not FullQ4");
-        assert_eq!(p.observe(1e2), None, "already at the ceiling: hold, not re-announce");
-        // floor: the controller starts there and a perfect link cannot
+        assert_eq!(p.tier_for(1), Tier::Off);
+        assert_eq!(p.observe(1, 1e3), Some(Tier::Full), "capped at the ceiling, not FullQ4");
+        assert_eq!(p.observe(1, 1e2), None, "already at the ceiling: hold, not re-announce");
+        // floor: every link starts there and a perfect link cannot
         // relax below it
         let th = AdaptiveThresholds {
             tier_floor: Tier::Activations,
             ..AdaptiveThresholds::default()
         };
         let mut p = AdaptivePolicy::new(th);
-        assert_eq!(p.tier(), Tier::Activations, "controller boots at the floor");
-        assert_eq!(p.observe(1e12), None, "a fast link clamps back onto the floor: hold");
-        assert_eq!(p.observe(1e5), Some(Tier::FullQ4), "escalation above the floor still works");
-        assert_eq!(p.observe(1e12), Some(Tier::Activations), "relaxation stops at the floor");
+        assert_eq!(p.tier_for(1), Tier::Activations, "every link boots at the floor");
+        assert_eq!(p.observe(1, 1e12), None, "a fast link clamps back onto the floor: hold");
+        assert_eq!(p.observe(1, 1e5), Some(Tier::FullQ4), "escalation above the floor still works");
+        assert_eq!(p.observe(1, 1e12), Some(Tier::Activations), "relaxation stops at the floor");
+        assert!(p.overrides().is_empty(), "floor tier is implicit, never an override");
         // parse round-trip for the config spelling
         for t in [Tier::Off, Tier::Activations, Tier::Full, Tier::FullQ4] {
             assert_eq!(Tier::parse(t.name()), Some(t));

@@ -113,6 +113,8 @@ pub enum ControlEvent {
     BwReport {
         stage: usize,
         bps: f64,
+        /// Probed destination device (0 = unknown, pre-v7 sender).
+        to: DeviceId,
     },
     SetLr {
         lr: f32,
@@ -130,10 +132,12 @@ pub enum ControlEvent {
         committed_bwd: i64,
         fresh: bool,
     },
-    /// Coordinator-issued wire-tier switch (`Compression::Adaptive`,
-    /// DESIGN.md §10): install `tier` for outgoing tensors.
+    /// Coordinator-issued wire-tier table (`Compression::Adaptive`,
+    /// DESIGN.md §10): `tier` for every unlisted destination plus the
+    /// per-link overrides, installed for outgoing tensors.
     SetCompression {
         tier: Tier,
+        links: Vec<(DeviceId, Tier)>,
     },
 }
 
@@ -190,8 +194,8 @@ impl Event {
             Message::BwAck { payload_bytes } => {
                 Event::Control(ControlEvent::BwAck { payload_bytes })
             }
-            Message::BwReport { stage, bps } => {
-                Event::Control(ControlEvent::BwReport { stage, bps })
+            Message::BwReport { stage, bps, to } => {
+                Event::Control(ControlEvent::BwReport { stage, bps, to })
             }
             Message::SetLr { lr } => Event::Control(ControlEvent::SetLr { lr }),
             Message::CentralRestart { committed } => {
@@ -205,8 +209,8 @@ impl Event {
                     fresh,
                 })
             }
-            Message::SetCompression { tier } => {
-                Event::Control(ControlEvent::SetCompression { tier })
+            Message::SetCompression { tier, links } => {
+                Event::Control(ControlEvent::SetCompression { tier, links })
             }
             Message::Shutdown => Event::Shutdown,
         }

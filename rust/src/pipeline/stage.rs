@@ -99,16 +99,26 @@ pub struct StageWorker {
 
     repart: Option<Repart>,
     /// outstanding bandwidth probe to the next worker (paper §III-B):
-    /// the clock time the probe was sent.
-    bw_probe: Option<Duration>,
+    /// the clock time the probe was sent, plus the probed destination
+    /// (reported back to the coordinator so its per-link ladder is keyed
+    /// by device, not by boot-time stage index).
+    bw_probe: Option<(Duration, DeviceId)>,
 
     /// Wire-compression policy (cluster-wide, distributed via TrainInit).
     pub compression: Compression,
-    /// Effective wire tier: the policy's initial tier for static
-    /// policies, coordinator-driven via `SetCompression` under
-    /// [`Compression::Adaptive`] (DESIGN.md §10). Decoding never depends
-    /// on it — tensors self-describe their arm.
+    /// Default wire tier: the policy's initial tier for static policies,
+    /// coordinator-driven via `SetCompression` under
+    /// [`Compression::Adaptive`] (DESIGN.md §10) — applied to every
+    /// destination without a [`StageWorker::tier_links`] override.
+    /// Decoding never depends on it — tensors self-describe their arm.
     pub tier: Tier,
+    /// Per-destination tier overrides from the coordinator's per-link
+    /// controller: forwards, grads, and replica pushes toward device `d`
+    /// encode at `tier_links[d]` (falling back to [`StageWorker::tier`]),
+    /// so one degraded link escalates only its own traffic. Replaced
+    /// wholesale by every `SetCompression` — stale overrides cannot
+    /// linger across topology changes.
+    tier_links: BTreeMap<DeviceId, Tier>,
     /// Band the effective tier is clamped into, from `TrainInit`: a
     /// stale or misdirected `SetCompression` can never push a stage
     /// outside the operator's floor/ceiling (DESIGN.md §10).
@@ -193,6 +203,7 @@ impl StageWorker {
             bw_probe: None,
             compression: Compression::Off,
             tier: Tier::Off,
+            tier_links: BTreeMap::new(),
             tier_floor: Tier::Off,
             tier_ceiling: Tier::FullQ4,
             bw_probe_every: 0,
@@ -280,6 +291,7 @@ impl StageWorker {
         // every stage (including one re-inited mid-recovery) boots
         // inside the band
         self.tier = t.compression.initial_tier().clamp(t.tier_floor, t.tier_ceiling);
+        self.tier_links.clear(); // per-link overrides arrive via SetCompression
         self.bw_probe_every = t.bw_probe_every;
         self.bw_probe_bytes = t.bw_probe_bytes;
         self.grad_residual.clear();
@@ -308,12 +320,23 @@ impl StageWorker {
         }
     }
 
+    /// The effective tier for traffic toward `to`: the per-link override
+    /// when the coordinator issued one, the default [`StageWorker::tier`]
+    /// otherwise, always clamped into the operator's band.
+    pub fn tier_for(&self, to: DeviceId) -> Tier {
+        self.tier_links
+            .get(&to)
+            .copied()
+            .unwrap_or(self.tier)
+            .clamp(self.tier_floor, self.tier_ceiling)
+    }
+
     /// Sender boundary: an outgoing activation is quantized iff the
-    /// effective tier compresses the data plane (i32 token payloads
-    /// stay raw).
-    fn tensor_to_payload(&self, t: HostTensor) -> Payload {
+    /// destination link's tier compresses the data plane (i32 token
+    /// payloads stay raw).
+    fn tensor_to_payload(&self, to: DeviceId, t: HostTensor) -> Payload {
         match t {
-            HostTensor::F32(v) if self.tier.data_plane() => {
+            HostTensor::F32(v) if self.tier_for(to).data_plane() => {
                 Payload::Quant(QTensor::quantize(&v))
             }
             HostTensor::F32(v) => Payload::F32(v),
@@ -324,25 +347,42 @@ impl StageWorker {
     /// Sender boundary for gradients: quantize with error feedback (the
     /// residual keeps this step's quantization error and folds it into
     /// the next step's gradient), or pass f32 through untouched.
-    fn encode_grad(&mut self, g: Vec<f32>) -> WireTensor {
-        if self.tier.data_plane() {
+    fn encode_grad(&mut self, to: DeviceId, g: Vec<f32>) -> WireTensor {
+        if self.tier_for(to).data_plane() {
             WireTensor::Quant(self.grad_residual.fold(&g))
         } else {
             WireTensor::F32(g.into())
         }
     }
 
-    /// Install a coordinator-issued wire tier (`Compression::Adaptive`).
-    /// Residuals carry per-encoding error, so a tier switch clears them
-    /// — stale error from another coding must not leak into the first
-    /// sends of the new tier (and clearing keeps replays reproducible).
-    pub fn set_tier(&mut self, tier: Tier) {
+    /// Install a coordinator-issued tier table (`Compression::Adaptive`):
+    /// `tier` for every unlisted destination plus per-link overrides,
+    /// each clamped into the band. The override map is *replaced*, so a
+    /// table from after a topology change cannot leave stale per-device
+    /// entries behind. Residuals carry per-encoding error, so any
+    /// effective change clears them — stale error from another coding
+    /// must not leak into the first sends of the new table (and clearing
+    /// keeps replays reproducible).
+    pub fn apply_compression(&mut self, tier: Tier, links: &[(DeviceId, Tier)]) {
         let tier = tier.clamp(self.tier_floor, self.tier_ceiling);
-        if self.tier != tier {
-            self.tier = tier;
-            self.grad_residual.clear();
-            self.push_residuals.clear();
+        let links: BTreeMap<DeviceId, Tier> = links
+            .iter()
+            .map(|&(d, t)| (d, t.clamp(self.tier_floor, self.tier_ceiling)))
+            .filter(|&(_, t)| t != tier)
+            .collect();
+        if self.tier == tier && self.tier_links == links {
+            return; // no effective change: keep residual state
         }
+        self.tier = tier;
+        self.tier_links = links;
+        self.grad_residual.clear();
+        self.push_residuals.clear();
+    }
+
+    /// [`StageWorker::apply_compression`] with no per-link overrides —
+    /// the single-tier form static policies and tests use.
+    pub fn set_tier(&mut self, tier: Tier) {
+        self.apply_compression(tier, &[]);
     }
 
     /// One block's tensors coded for restore traffic (fetch replies /
@@ -352,13 +392,12 @@ impl StageWorker {
         replication::block_to_wire_coded(bp, &block_hints(&self.manifest, block), coding)
     }
 
-    /// The stage's parameters as replica-push wire blocks under the
-    /// effective tier. The Q4 arm folds a per-(block, tensor)
-    /// error-feedback residual, so the 4-bit bias of repeated pushes of
-    /// slowly-moving weights stays bounded instead of locking in
-    /// (DESIGN.md §10).
-    fn replica_wire(&mut self) -> Vec<WireBlock> {
-        let coding = self.tier.replica_coding();
+    /// The stage's parameters as replica-push wire blocks at `coding`
+    /// (the replica coding of the destination link's tier). The Q4 arm
+    /// folds a per-(block, tensor) error-feedback residual, so the 4-bit
+    /// bias of repeated pushes of slowly-moving weights stays bounded
+    /// instead of locking in (DESIGN.md §10).
+    fn replica_wire(&mut self, coding: WeightCoding) -> Vec<WireBlock> {
         let manifest = self.manifest.clone();
         let mut out = Vec::with_capacity(self.params.blocks.len());
         for (&idx, bp) in &self.params.blocks {
@@ -431,7 +470,7 @@ impl StageWorker {
                     batch,
                     version0,
                     is_eval: false,
-                    data: self.tensor_to_payload(out),
+                    data: self.tensor_to_payload(next, out),
                 },
             )?;
             return Ok(None);
@@ -510,7 +549,7 @@ impl StageWorker {
         self.maybe_replicate(t, batch)?;
 
         if let Some(prev) = self.prev_device() {
-            let grad = self.encode_grad(out.gx_out.unwrap_or_default());
+            let grad = self.encode_grad(prev, out.gx_out.unwrap_or_default());
             t.send(
                 prev,
                 Message::Backward {
@@ -563,7 +602,7 @@ impl StageWorker {
                     batch,
                     version0: 0,
                     is_eval: true,
-                    data: self.tensor_to_payload(cur),
+                    data: self.tensor_to_payload(next, cur),
                 },
             )?;
             return Ok(None);
@@ -669,7 +708,7 @@ impl StageWorker {
         }
         reports.push(self.current_report());
         let prev = self.prev_device().unwrap();
-        let grad = self.encode_grad(out.gx_out.unwrap_or_default());
+        let grad = self.encode_grad(prev, out.gx_out.unwrap_or_default());
         t.send(prev, Message::Backward { batch, grad, loss, ncorrect, reports })?;
         Ok(None)
     }
@@ -725,10 +764,26 @@ impl StageWorker {
         if !chain_due && !global_due {
             return Ok(());
         }
-        let wire: Vec<WireBlock> = self.replica_wire();
-        if chain_due {
-            let target_stage = replication::chain_target(stage, self.n_stages());
-            let target = self.worker_list[target_stage];
+        // each push encodes at its own destination link's tier; when both
+        // targets share a coding the blocks are encoded once and the
+        // sends share bytes (the pre-per-link behavior — and the Q4
+        // error-feedback residual must fold exactly once per round, which
+        // holds either way since distinct codings mean at most one is Q4)
+        let chain_info = chain_due.then(|| {
+            let target = self.worker_list[replication::chain_target(stage, self.n_stages())];
+            (target, self.tier_for(target).replica_coding())
+        });
+        let global_info = global_due.then(|| {
+            let central = self.central_device();
+            (central, self.tier_for(central).replica_coding())
+        });
+        let chain_wire = chain_info.map(|(_, c)| self.replica_wire(c));
+        let global_wire = match (chain_info, global_info, &chain_wire) {
+            (Some((_, cc)), Some((_, gc)), Some(w)) if cc == gc => Some(w.clone()),
+            (_, Some((_, gc)), _) => Some(self.replica_wire(gc)),
+            _ => None,
+        };
+        if let (Some((target, _)), Some(wire)) = (chain_info, chain_wire) {
             t.send(
                 target,
                 Message::ReplicaPush {
@@ -736,13 +791,13 @@ impl StageWorker {
                     owner_stage: stage,
                     owner_device: self.device_id,
                     version: replication::epoch_version(self.replica_epoch, self.version),
-                    blocks: wire.clone(),
+                    blocks: wire,
                 },
             )?;
         }
-        if global_due {
+        if let (Some((central, _)), Some(wire)) = (global_info, global_wire) {
             t.send(
-                self.central_device(),
+                central,
                 Message::ReplicaPush {
                     kind: ReplicaKind::Global,
                     owner_stage: stage,
@@ -954,18 +1009,18 @@ impl StageWorker {
                 t.send(from, Message::BwAck { payload_bytes })?;
             }
             ControlEvent::BwAck { payload_bytes } => {
-                if let (Some(t0), Some(stage)) = (self.bw_probe.take(), self.my_stage()) {
+                if let (Some((t0, to)), Some(stage)) = (self.bw_probe.take(), self.my_stage()) {
                     let dt = self.clock.now().saturating_sub(t0).as_secs_f64().max(1e-6);
                     let bps = payload_bytes as f64 / dt;
                     self.last_bw_bps = bps; // sizes the next auto probe
-                    t.send(self.central_device(), Message::BwReport { stage, bps })?;
+                    t.send(self.central_device(), Message::BwReport { stage, bps, to })?;
                 }
             }
             ControlEvent::SetLr { lr } => {
                 self.sgd.set_lr(lr);
             }
-            ControlEvent::SetCompression { tier } => {
-                self.set_tier(tier);
+            ControlEvent::SetCompression { tier, links } => {
+                self.apply_compression(tier, &links);
             }
             ControlEvent::CentralRestart { from, committed } => {
                 // The coordinator rebooted from its checkpoint. Anything
@@ -1010,6 +1065,10 @@ impl StageWorker {
         // reproducible independent of what was in flight before it
         self.grad_residual.clear();
         self.push_residuals.clear();
+        // per-link overrides may name devices the recovery just removed;
+        // drop them — the coordinator rebroadcasts its pruned table right
+        // after recovery whenever any link is still escalated
+        self.tier_links.clear();
         self.bw_probe = None; // an in-flight probe's ack may never come
         self.status = 0;
     }
@@ -1112,7 +1171,7 @@ impl StageWorker {
     /// the tier's *restore* coding (at most Q8 — never the Q4 replica
     /// coding: the requester trains on these bytes).
     pub fn serve_fetch(&self, t: &dyn Transport, from: DeviceId, blocks: &[usize]) -> Result<()> {
-        let coding = self.tier.restore_coding();
+        let coding = self.tier_for(from).restore_coding();
         let mut found: Vec<WireBlock> = Vec::new();
         for &b in blocks {
             if let Some(bp) = self.params.get(b) {
@@ -1137,7 +1196,7 @@ impl StageWorker {
     /// measurement while a fast link still clears its latency floor.
     pub fn measure_bandwidth_sized(&mut self, t: &dyn Transport, bytes: usize) -> Result<()> {
         if let Some(next) = self.next_device() {
-            self.bw_probe = Some(self.clock.now());
+            self.bw_probe = Some((self.clock.now(), next));
             t.send(next, Message::BwTest {
                 payload_bytes: bytes as u32,
                 data: vec![0u8; bytes],
@@ -1357,6 +1416,7 @@ impl StageWorker {
         self.bw_probe = None;
         self.compression = Compression::Off;
         self.tier = Tier::Off;
+        self.tier_links.clear();
         self.tier_floor = Tier::Off;
         self.tier_ceiling = Tier::FullQ4;
         self.bw_probe_every = 0;

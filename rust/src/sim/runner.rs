@@ -57,8 +57,8 @@ use anyhow::{bail, Context, Result};
 use crate::checkpoint::{Checkpoint, CheckpointSink, CheckpointState, MemorySink};
 use crate::config::DeviceConfig;
 use crate::coordinator::core::{
-    CoordinatorPhase, PhaseConfig, PhaseEffect, PhaseInput, PhaseMachine, RedistReason,
-    WorkerRoster,
+    prune_link_state, CoordinatorPhase, PhaseConfig, PhaseEffect, PhaseInput, PhaseMachine,
+    RedistReason, WorkerRoster,
 };
 use crate::data::SynthVision;
 use crate::device::SimDevice;
@@ -66,7 +66,7 @@ use crate::fault::{renumber_worker_list, FaultDetector};
 use crate::manifest::Manifest;
 use crate::model::BlockParams;
 use crate::net::message::{DeviceId, Message, ReplicaKind, TrainInit};
-use crate::net::quant::{AdaptivePolicy, Compression, Tier};
+use crate::net::quant::{AdaptivePolicy, Compression};
 use crate::net::Transport;
 use crate::partition::{homogeneous_partition, optimal_partition, CostModel, Partition};
 use crate::pipeline::{CompletedBatch, ControlEvent, DataEvent, Event, StageWorker, StepKind};
@@ -318,7 +318,7 @@ pub fn run_scenario(scenario: &Scenario, model_dir: &Path) -> Result<ScenarioOut
         profile: ModelProfile::from_flops(&manifest, scenario.ns_per_flop),
         estimator: CapacityEstimator::default(),
         detector: FaultDetector::with_clock(scenario.fault_timeout, shared),
-        measured_bw: vec![0.0; n.saturating_sub(1)],
+        measured_bw: BTreeMap::new(),
         adaptive: (scenario.compression == Compression::Adaptive)
             .then(|| AdaptivePolicy::new(scenario.adaptive.clone())),
         machine: PhaseMachine::new(PhaseConfig {
@@ -366,9 +366,12 @@ struct Runner<'a> {
     profile: ModelProfile,
     estimator: CapacityEstimator,
     detector: FaultDetector,
-    measured_bw: Vec<f64>,
-    /// Tier controller for `Compression::Adaptive` (None otherwise) —
+    /// Per-link bandwidth from BwReports, keyed by destination device.
+    /// Pruned on every worker-list change (`core::prune_link_state`);
     /// coordinator memory, so a central kill resets it.
+    measured_bw: BTreeMap<DeviceId, f64>,
+    /// Per-link tier controller for `Compression::Adaptive` (None
+    /// otherwise) — coordinator memory, so a central kill resets it.
     adaptive: Option<AdaptivePolicy>,
     /// The shared coordinator phase machine (`coordinator::core`): all
     /// phase decisions happen in its `step`; the runner only executes
@@ -774,11 +777,21 @@ impl Runner<'_> {
             Event::Control(ControlEvent::WorkerState { id, committed_bwd, fresh, .. }) => {
                 self.machine.step(PhaseInput::WorkerStateReport { id, committed_bwd, fresh })?;
             }
-            Event::Control(ControlEvent::BwReport { stage, bps }) => {
-                if stage < self.measured_bw.len() {
-                    self.measured_bw[stage] = bps;
+            Event::Control(ControlEvent::BwReport { stage, bps, to }) => {
+                // key by the probed destination device; resolve the
+                // reporter's stage against the *live* worker list for
+                // pre-v7 reports (to == 0). A report naming a device no
+                // longer in the pipeline is stale — drop it instead of
+                // resurrecting a pruned link.
+                let dest = if to != 0 {
+                    to
+                } else {
+                    self.workers[0].worker_list.get(stage + 1).copied().unwrap_or(0)
+                };
+                if dest != 0 && self.workers[0].worker_list.contains(&dest) {
+                    self.measured_bw.insert(dest, bps);
+                    self.maybe_adapt(dest, bps)?;
                 }
-                self.maybe_adapt()?;
             }
             ev => {
                 // "the central node received the backward gradients of
@@ -846,32 +859,27 @@ impl Runner<'_> {
         Ok(())
     }
 
-    /// Feed the adaptive tier controller the slowest measured link of
-    /// the current pipeline; on a tier change, trace it, install it on
-    /// the central stage, and broadcast `SetCompression` to the workers
-    /// (DESIGN.md §10). A no-op for static compression policies.
-    fn maybe_adapt(&mut self) -> Result<()> {
+    /// Feed one link measurement to the per-link adaptive controller; on
+    /// a ladder change, trace it, install the new table on the central
+    /// stage, and broadcast the full per-link table in `SetCompression`
+    /// (DESIGN.md §10). A no-op for static compression policies. Only
+    /// the reported destination's ladder can move — a bad link escalates
+    /// its own traffic, never the fleet's.
+    fn maybe_adapt(&mut self, dest: DeviceId, bps: f64) -> Result<()> {
         let Some(policy) = self.adaptive.as_mut() else {
             return Ok(());
         };
-        let links = self.workers[0].worker_list.len().saturating_sub(1);
-        let min_bw = self.measured_bw[..links.min(self.measured_bw.len())]
-            .iter()
-            .copied()
-            .filter(|b| *b > 0.0) // 0 = not measured yet
-            .fold(f64::INFINITY, f64::min);
-        if !min_bw.is_finite() {
-            return Ok(());
-        }
-        let old = policy.tier();
-        let Some(tier) = policy.observe(min_bw) else {
+        let old = policy.tier_for(dest);
+        let Some(tier) = policy.observe(dest, bps) else {
             return Ok(());
         };
+        let floor = policy.thresholds().tier_floor;
+        let links = policy.overrides();
         let t = self.clock.now();
         self.trace_line(
             t,
             format_args!(
-                "adaptive: min link {min_bw:.0} B/s; tier {} -> {}",
+                "adaptive: link ->{dest} {bps:.0} B/s; tier {} -> {}",
                 old.name(),
                 tier.name()
             ),
@@ -879,9 +887,9 @@ impl Runner<'_> {
         let h = self.handles[0].clone();
         self.set_local(0, t);
         for d in self.peers_of_central() {
-            h.send(d, Message::SetCompression { tier })?;
+            h.send(d, Message::SetCompression { tier: floor, links: links.clone() })?;
         }
-        self.workers[0].set_tier(tier);
+        self.workers[0].apply_compression(floor, &links);
         Ok(())
     }
 
@@ -1055,6 +1063,24 @@ impl Runner<'_> {
                 self.workers[0].worker_list, self.workers[0].ranges
             ),
         );
+        // the committed list is the live topology now: measurements and
+        // tier ladders keyed to departed devices are stale — every
+        // worker-list change (repartition, rejoin, eviction) funnels
+        // through this one invalidation point
+        let traced = self.adaptive.is_some();
+        let dropped = prune_link_state(
+            &mut self.measured_bw,
+            self.adaptive.as_mut(),
+            &self.workers[0].worker_list,
+        );
+        // measurements are dropped either way (the cost model must not
+        // price a dead link), but only the adaptive controller narrates —
+        // static-policy family traces must not grow new lines
+        if traced {
+            for d in dropped {
+                self.trace_line(t, format_args!("adaptive: link ->{d} invalidated"));
+            }
+        }
         match reason {
             RedistReason::Fault => self.reset_all(self.completed, t)?,
             RedistReason::Dynamic => self.advance_repart_schedule(),
@@ -1070,15 +1096,18 @@ impl Runner<'_> {
             h.send(d, Message::Reset { committed })?;
         }
         // a fresh worker re-inited during this recovery fell back to the
-        // policy's initial tier — re-align everyone with the adaptive
-        // controller's current rung (deterministic: same point in every
-        // replay)
-        if let Some(tier) = self.adaptive.as_ref().map(|p| p.tier()) {
-            if tier != Tier::Off {
+        // policy's floor tier — re-align everyone with the adaptive
+        // controller's current per-link table (deterministic: same point
+        // in every replay). Nothing to send when every ladder sits at
+        // the floor: that is exactly the state a reset worker boots in.
+        if let Some(policy) = self.adaptive.as_ref() {
+            let links = policy.overrides();
+            if !links.is_empty() {
+                let floor = policy.thresholds().tier_floor;
                 for d in self.peers_of_central() {
-                    h.send(d, Message::SetCompression { tier })?;
+                    h.send(d, Message::SetCompression { tier: floor, links: links.clone() })?;
                 }
-                self.workers[0].set_tier(tier);
+                self.workers[0].apply_compression(floor, &links);
             }
         }
         self.workers[0].apply_reset(committed);
@@ -1207,9 +1236,7 @@ impl Runner<'_> {
         self.inbox[0].clear();
         self.detector.clear();
         self.estimator = CapacityEstimator::default();
-        for bw in self.measured_bw.iter_mut() {
-            *bw = 0.0;
-        }
+        self.measured_bw.clear();
         // the tier controller lives in the dead coordinator: it reboots
         // at the policy floor and re-escalates from fresh measurements
         // (workers keep their last-ordered tier until the rejoin
@@ -1423,7 +1450,9 @@ impl Runner<'_> {
         // pre-override families byte-identical)
         let bw: Vec<f64> = (0..list.len().saturating_sub(1))
             .map(|l| {
-                let m = self.measured_bw.get(l).copied().unwrap_or(0.0);
+                // pipeline link l feeds the device at slot l+1 of the
+                // candidate list — look its measurement up by device id
+                let m = self.measured_bw.get(&list[l + 1]).copied().unwrap_or(0.0);
                 if m > 0.0 {
                     m
                 } else {

@@ -1,7 +1,8 @@
 //! Family: adaptive — the bandwidth-driven compression policy
 //! (`Compression::Adaptive`, DESIGN.md §10). The coordinator watches the
 //! measured per-link bandwidth (periodic `bw_probe_every` re-probes) and
-//! walks the tier ladder off → activations → full → full+q4 via
+//! walks a tier ladder off → activations → full → full+q4 *per
+//! destination link*, broadcasting the per-link table via
 //! `SetCompression`, with hysteresis so jitter cannot flip a tier back.
 //!
 //! Everything here is deterministic: scripted `SetBandwidth` drops, a
@@ -27,6 +28,7 @@ fn thresholds() -> AdaptiveThresholds {
         full_below: 4e5,
         q4_below: 1.5e5,
         relax_factor: 1.5,
+        ..AdaptiveThresholds::default()
     }
 }
 
@@ -88,7 +90,9 @@ fn adaptive_escalates_at_scripted_bandwidth_drops() {
 /// Hysteresis: a drop straight into Full (skipping a rung), then a
 /// partial recovery that clears the threshold but NOT the relax band
 /// (4e5 * 1.5 = 6e5) — the tier must hold — then a full recovery that
-/// relaxes directly to off. Exactly two transitions, deterministic.
+/// relaxes directly to off. `SetBandwidth` reprices both pipeline links,
+/// so each of the two per-link ladders (->1 and ->2) makes exactly the
+/// two scripted transitions: four lines total, deterministic.
 #[test]
 fn adaptive_hysteresis_holds_tier_through_jitter() {
     let sc = esc_base("adaptive-hys", 40).with_events(vec![
@@ -103,13 +107,56 @@ fn adaptive_hysteresis_holds_tier_through_jitter() {
     let transitions = out.trace.iter().filter(|l| l.contains("adaptive:")).count();
     assert_eq!(
         transitions,
-        2,
-        "hysteresis must allow exactly the two scripted transitions:\n{}",
+        4,
+        "hysteresis must allow exactly the scripted transitions on each link:\n{}",
         out.trace.join("\n")
     );
+    for link in ["->1", "->2"] {
+        assert!(
+            out.trace.iter().any(|l| l.contains("adaptive: link") && l.contains(link)),
+            "both per-link ladders must move ({link}):\n{}",
+            out.trace.join("\n")
+        );
+    }
     assert!(
         !out.trace.iter().any(|l| l.contains("-> activations")),
         "the 5e5 B/s jitter must not relax full -> activations"
+    );
+}
+
+/// Per-link independence: two scripted `SetLinkBandwidth` degradations
+/// drive the two pipeline links into *different* bands — ->1 lands in
+/// Full, ->2 in FullQ4 — and each ladder moves alone: no line ever
+/// escalates ->1 past full, and the whole run is byte-identical across
+/// two invocations.
+#[test]
+fn adaptive_walks_two_links_to_different_tiers() {
+    let link_drop = |batch, from, to, bps| ScriptEvent {
+        at: Trigger::BatchDone(batch),
+        action: Action::SetLinkBandwidth { from, to, bps },
+    };
+    let sc = esc_base("adaptive-two-links", 40).with_events(vec![
+        link_drop(9, 0, 1, 2.5e5), // ->1: Full band (4e5 > 2.5e5 > 1.5e5)
+        link_drop(9, 1, 2, 8e4),   // ->2: FullQ4 band (< 1.5e5)
+    ]);
+    let out = common::run_twice_deterministic_spec("adaptive-two-links", &sc, &esc_spec());
+    common::assert_loss_continuity("adaptive-two-links", &out, 40);
+    assert_eq!(out.recoveries, 0, "degradations are not faults");
+    assert!(
+        out.trace.iter().any(|l| l.contains("adaptive: link ->1") && l.contains("-> full")
+            && !l.contains("full+q4")),
+        "->1 must settle in full:\n{}",
+        out.trace.join("\n")
+    );
+    assert!(
+        out.trace.iter().any(|l| l.contains("adaptive: link ->2") && l.contains("-> full+q4")),
+        "->2 must settle in full+q4:\n{}",
+        out.trace.join("\n")
+    );
+    assert!(
+        !out.trace.iter().any(|l| l.contains("adaptive: link ->1") && l.contains("full+q4")),
+        "->2's degradation must never move ->1's ladder:\n{}",
+        out.trace.join("\n")
     );
 }
 

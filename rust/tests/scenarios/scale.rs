@@ -10,6 +10,8 @@
 
 use std::time::Duration;
 
+use ftpipehd::net::quant::AdaptiveThresholds;
+use ftpipehd::net::Compression;
 use ftpipehd::sim::fixture::FixtureSpec;
 use ftpipehd::sim::script::{Action, Scenario, ScriptEvent, Trigger};
 use ftpipehd::sim::{big_cluster_storm, hetero_link_topology};
@@ -40,6 +42,73 @@ fn asymmetric_links_64_devices_are_deterministic() {
         "script: link 3->4 bandwidth -> 1000000 B/s",
     );
     common::assert_loss_continuity("scale-64-links", &out, TOTAL);
+}
+
+/// The one-bad-link blast radius, at fleet width: in an 8-stage
+/// pipeline one directed link (3->4) is scripted down to 100 KB/s.
+/// Only that destination's ladder may escalate — every other link keeps
+/// tier off (the one-bad-link fleet-wide down-tier regression) — and
+/// when the degraded worker is later killed (case 3), the committed
+/// topology invalidates its measurement and ladder, after which its
+/// link never transitions again.
+#[test]
+fn one_degraded_link_escalates_only_its_own_traffic() {
+    const N: usize = 8;
+    const TOTAL: u64 = 30;
+    let mut sc = Scenario::exact_recovery("scale-one-bad-link", N, TOTAL);
+    sc.bandwidth_bps = 5e7;
+    sc.ns_per_flop = 0.01;
+    // the degraded rung moves slowly; slowness is not a fault
+    sc.fault_timeout = Duration::from_secs(5);
+    sc.compression = Compression::Adaptive;
+    sc.adaptive = AdaptiveThresholds {
+        activations_below: 3e6,
+        full_below: 4e5,
+        q4_below: 1.5e5,
+        relax_factor: 1.5,
+        ..AdaptiveThresholds::default()
+    };
+    sc.bw_probe_every = 2;
+    sc.bw_probe_bytes = 2048;
+    let sc = sc.with_events(vec![
+        ScriptEvent {
+            at: Trigger::BatchDone(5),
+            // 1e5 B/s < q4_below: ->4 escalates straight to full+q4
+            action: Action::SetLinkBandwidth { from: 3, to: 4, bps: 1e5 },
+        },
+        ScriptEvent {
+            at: Trigger::BatchDone(15),
+            action: Action::Kill { device: 4, revive_after: None },
+        },
+    ]);
+    let spec = FixtureSpec { n_blocks: 20, dim: 8, classes: 4, batch: 4, seed: 11 };
+    let out = common::run_twice_deterministic_spec("scale-one-bad-link", &sc, &spec);
+    common::assert_trace_contains("scale-one-bad-link", &out, "adaptive: link ->4");
+    common::assert_trace_contains("scale-one-bad-link", &out, "tier off -> full+q4");
+    // blast radius: the degraded destination is the ONLY ladder that moves
+    for l in out.trace.iter().filter(|l| l.contains("adaptive: link") && l.contains("tier")) {
+        assert!(
+            l.contains("link ->4"),
+            "a healthy link's ladder moved:\n{l}\n---\n{}",
+            out.trace.join("\n")
+        );
+    }
+    // killing the degraded worker runs case 3 and invalidates its link
+    common::assert_trace_contains("scale-one-bad-link", &out, "fault case 3");
+    common::assert_trace_contains("scale-one-bad-link", &out, "adaptive: link ->4 invalidated");
+    let invalidated = out
+        .trace
+        .iter()
+        .position(|l| l.contains("adaptive: link ->4 invalidated"))
+        .expect("invalidation line");
+    assert!(
+        !out.trace[invalidated + 1..]
+            .iter()
+            .any(|l| l.contains("adaptive: link ->4") && l.contains("tier")),
+        "the evicted destination's ladder must stay dead after invalidation:\n{}",
+        out.trace.join("\n")
+    );
+    common::assert_loss_continuity("scale-one-bad-link", &out, TOTAL);
 }
 
 #[test]

@@ -101,11 +101,11 @@ fn probe_messages() -> Vec<Message> {
         Message::Reset { committed: 10 },
         Message::BwTest { payload_bytes: 64, data: vec![0xAB; 64] },
         Message::BwAck { payload_bytes: 64 },
-        Message::BwReport { stage: 1, bps: 12.5e6 },
+        Message::BwReport { stage: 1, bps: 12.5e6, to: 2 },
         Message::SetLr { lr: 0.005 },
         Message::CentralRestart { committed: 29 },
         Message::WorkerState { id: 1, committed_fwd: 34, committed_bwd: 33, fresh: false },
-        Message::SetCompression { tier: Tier::FullQ4 },
+        Message::SetCompression { tier: Tier::FullQ4, links: vec![(2, Tier::Full)] },
         // v4 quant arms: per-channel scales and packed 4-bit codes must
         // survive both transports bit-exactly, odd lengths included
         Message::Weights {
