@@ -244,6 +244,63 @@ fn coordinator_section(table: &mut Table, metrics: &mut Vec<(String, f64)>) {
     metrics.push(("coord_step_transitions_per_sec".to_string(), tps));
 }
 
+/// The replica sync barrier (DESIGN.md §14) driven flat out: one round
+/// is a `SyncDue` opening the barrier for 7 chains, a partial + driver
+/// poll per chain (the last poll resolves), ending back in `Training` —
+/// 16 `step` calls per round. The replica sim driver sits on this
+/// dispatch once per `sync_every` committed batches per chain, so
+/// `replica_sync_rounds_per_sec` is gated (loosely — the pure match
+/// runs in the hundreds of thousands of rounds/s; only an accidental
+/// clone of the expect/done sets per step would move it by integer
+/// factors).
+fn replica_sync_section(table: &mut Table, metrics: &mut Vec<(String, f64)>) {
+    use ftpipehd::coordinator::{PhaseConfig, PhaseInput, PhaseMachine};
+    use std::collections::BTreeSet;
+    use std::time::Duration;
+
+    const CHAINS: usize = 8; // chain 0 is local; 1..8 ship partials
+    let expect: BTreeSet<usize> = (1..CHAINS).collect();
+    let t0 = Duration::from_millis(1_000);
+
+    let mut m = PhaseMachine::new(PhaseConfig {
+        probe_window: Duration::from_millis(100),
+        redist_window: Duration::from_millis(500),
+    });
+    m.step(PhaseInput::TrainingStarted).expect("idle -> training");
+
+    let mut round_no = 0u64;
+    let mut sync_round = |m: &mut PhaseMachine| {
+        round_no += 1;
+        m.step(PhaseInput::SyncDue { round: round_no, expect: expect.clone() })
+            .expect("training -> syncing");
+        for c in 1..CHAINS {
+            m.step(PhaseInput::SyncPartial { chain: c }).expect("partial");
+            // the driver polls after every partial; the last one resolves
+            m.step(PhaseInput::Poll {
+                now: t0 + Duration::from_millis(1),
+                overdue: None,
+                inflight: 0,
+                peers: 0,
+                local_fetch_done: true,
+            })
+            .expect("poll");
+        }
+        let _ = m.take_log();
+    };
+
+    sync_round(&mut m);
+    let s = bench(10, 500, || {
+        sync_round(&mut m);
+    });
+    let rps = 1.0 / s.p50;
+    table.row(&[
+        format!("phase machine sync barrier ({} chains)", CHAINS - 1),
+        format!("{} ({:.0}k rounds/s)", us(s.p50), rps / 1e3),
+        us(s.p95),
+    ]);
+    metrics.push(("replica_sync_rounds_per_sec".to_string(), rps));
+}
+
 /// The per-destination adaptive-compression controller driven flat out:
 /// one round feeds all 64 destination ladders an LCG rate schedule that
 /// crosses every threshold band, so escalations, hysteresis holds, and
@@ -434,6 +491,7 @@ fn main() {
 
     quant_codec_section(&mut table, &mut metrics);
     coordinator_section(&mut table, &mut metrics);
+    replica_sync_section(&mut table, &mut metrics);
     adaptive_section(&mut table, &mut metrics);
     tcp_section(&mut table, &mut metrics);
     sim_section(&mut table, &mut metrics);

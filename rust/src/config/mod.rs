@@ -166,6 +166,15 @@ pub struct RunConfig {
     /// the historical behavior. A config whose device list already
     /// exceeds the quota is rejected at validate time.
     pub max_workers: Option<usize>,
+    /// Pipeline replicas (hybrid pipeline + data parallelism, DESIGN.md
+    /// §14): the fleet is split into this many balanced chains, each fed
+    /// a disjoint round-robin data shard and synchronized by periodic
+    /// weight averaging. 1 (the default) is the historical single-chain
+    /// behavior — every trace stays byte-identical.
+    pub replicas: usize,
+    /// Cross-replica weight sync period in committed batches per chain
+    /// (0 = never; required >= 1 when `replicas > 1`).
+    pub sync_every: u64,
 
     pub engine: Engine,
     pub seed: u64,
@@ -209,6 +218,8 @@ impl Default for RunConfig {
             checkpoint: None,
             resume_from: None,
             max_workers: None,
+            replicas: 1,
+            sync_every: 0,
             engine: Engine::FtPipeHd,
             seed: 0,
             verbose: false,
@@ -260,6 +271,21 @@ impl RunConfig {
                 return Err(anyhow!(
                     "max_workers {q} cannot admit the {workers} configured workers"
                 ));
+            }
+        }
+        if self.replicas == 0 {
+            return Err(anyhow!("replicas must be >= 1"));
+        }
+        if self.replicas > 1 {
+            if self.devices.len() < self.replicas {
+                return Err(anyhow!(
+                    "{} devices cannot form {} replica chains",
+                    self.devices.len(),
+                    self.replicas
+                ));
+            }
+            if self.sync_every == 0 {
+                return Err(anyhow!("replicas > 1 requires sync_every >= 1"));
             }
         }
         Ok(())
@@ -408,6 +434,12 @@ impl RunConfig {
         }
         if let Some(x) = getu(v, "max_workers") {
             c.max_workers = Some(x);
+        }
+        if let Some(x) = getu(v, "replicas") {
+            c.replicas = x;
+        }
+        if let Some(x) = getu(v, "sync_every") {
+            c.sync_every = x as u64;
         }
         if let Some(s) = v.get("engine").and_then(|x| x.as_str()) {
             c.engine = match s {
@@ -616,6 +648,26 @@ mod tests {
         )
         .unwrap();
         assert!(RunConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn parse_and_validate_replicas() {
+        // default: single chain, no sync — the historical world
+        assert_eq!(RunConfig::default().replicas, 1);
+        assert_eq!(RunConfig::default().sync_every, 0);
+        let v = json::parse(r#"{"replicas": 2, "sync_every": 10}"#).unwrap();
+        let c = RunConfig::from_json(&v).unwrap();
+        assert_eq!((c.replicas, c.sync_every), (2, 10));
+        // replicas > 1 without a sync period dies at validate time
+        let v = json::parse(r#"{"replicas": 2}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
+        // zero replicas is nonsense
+        let mut c = RunConfig::default();
+        c.replicas = 0;
+        assert!(c.validate().is_err());
+        // more chains than devices is impossible
+        let v = json::parse(r#"{"replicas": 4, "sync_every": 5}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err(), "3 default devices < 4 replicas");
     }
 
     #[test]

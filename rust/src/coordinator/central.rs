@@ -481,6 +481,8 @@ impl Central {
             tier_ceiling: self.cfg.adaptive.tier_ceiling,
             replica_epoch: self.replica_epoch,
             worker_quota: self.roster.quota_wire(),
+            replicas: self.cfg.replicas as u64,
+            sync_every: self.cfg.sync_every,
         }
     }
 

@@ -64,6 +64,9 @@ pub enum CoordinatorPhase {
     /// Restarted coordinator collecting `WorkerState` answers before
     /// resuming from its checkpoint (paper §III-E).
     Rejoining,
+    /// Cross-replica weight sync barrier: injection is paused while
+    /// replica chains exchange averaged weights (DESIGN.md §14).
+    Syncing,
 }
 
 impl fmt::Display for CoordinatorPhase {
@@ -79,6 +82,7 @@ impl fmt::Display for CoordinatorPhase {
             CoordinatorPhase::Redistributing => "redistributing",
             CoordinatorPhase::Down => "central-down",
             CoordinatorPhase::Rejoining => "rejoining",
+            CoordinatorPhase::Syncing => "syncing",
         })
     }
 }
@@ -180,6 +184,19 @@ pub enum PhaseInput {
         /// Whether the coordinator's own stage finished its fetches.
         local_fetch_done: bool,
     },
+    /// A cross-replica sync round is due: every live chain reached its
+    /// round target (hybrid parallelism, DESIGN.md §14).
+    SyncDue {
+        /// Sync round number (1-based; monotonically increasing).
+        round: u64,
+        /// Chains whose partial weights must arrive before resolution.
+        expect: BTreeSet<usize>,
+    },
+    /// A replica chain's partial weights fully arrived at the central.
+    SyncPartial {
+        /// Reporting chain index.
+        chain: usize,
+    },
     /// The coordinator process died (scripted kill).
     KillCentral,
     /// The coordinator restarted from its checkpoint.
@@ -201,6 +218,8 @@ impl PhaseInput {
             PhaseInput::FaultDetected { .. } => "fault-detected",
             PhaseInput::DrainForRepartition => "drain",
             PhaseInput::RedistributionStarted { .. } => "redistribution-started",
+            PhaseInput::SyncDue { .. } => "sync-due",
+            PhaseInput::SyncPartial { .. } => "sync-partial",
             PhaseInput::Poll { .. } => "poll",
             PhaseInput::KillCentral => "kill-central",
             PhaseInput::CentralRestarted { .. } => "central-restarted",
@@ -241,6 +260,18 @@ pub enum PhaseEffect {
     AbortRedistribution,
     /// The drain finished with no fault: compute the new partition.
     RunDynamicRepartition,
+    /// Ask every live replica chain to ship its weights for `round`.
+    BeginSync {
+        /// Sync round number.
+        round: u64,
+    },
+    /// All expected partials arrived: average and broadcast the result.
+    ResolveSync {
+        /// Sync round number.
+        round: u64,
+        /// Chains whose partials arrived (superset of the expectation).
+        chains: BTreeSet<usize>,
+    },
 }
 
 impl PhaseEffect {
@@ -253,6 +284,8 @@ impl PhaseEffect {
             PhaseEffect::CommitRedistribution { .. } => "commit-redistribution",
             PhaseEffect::AbortRedistribution => "abort-redistribution",
             PhaseEffect::RunDynamicRepartition => "run-dynamic-repartition",
+            PhaseEffect::BeginSync { .. } => "begin-sync",
+            PhaseEffect::ResolveSync { .. } => "resolve-sync",
         }
     }
 }
@@ -292,6 +325,7 @@ enum State {
     },
     Down,
     Rejoining { acks: BTreeMap<DeviceId, (i64, bool)>, deadline: Duration },
+    Syncing { round: u64, expect: BTreeSet<usize>, done: BTreeSet<usize> },
 }
 
 impl State {
@@ -305,6 +339,7 @@ impl State {
             State::Redistributing { .. } => CoordinatorPhase::Redistributing,
             State::Down => CoordinatorPhase::Down,
             State::Rejoining { .. } => CoordinatorPhase::Rejoining,
+            State::Syncing { .. } => CoordinatorPhase::Syncing,
         }
     }
 }
@@ -414,6 +449,23 @@ impl PhaseMachine {
                 }
                 _ => return Err(illegal()),
             },
+            PhaseInput::SyncDue { round, expect } => match self.state {
+                State::Training => {
+                    self.state = State::Syncing { round, expect, done: BTreeSet::new() };
+                    effects.push(PhaseEffect::BeginSync { round });
+                }
+                _ => return Err(illegal()),
+            },
+            PhaseInput::SyncPartial { chain } => match &mut self.state {
+                State::Syncing { done, .. } => {
+                    done.insert(chain);
+                }
+                // A partial reaching a dead or rejoining coordinator is a
+                // driver bug, not a straggler: the sync barrier cannot be
+                // open while the coordinator is down.
+                State::Down | State::Rejoining { .. } => return Err(illegal()),
+                _ => {} // absorbed elsewhere: late partials after resolution
+            },
             PhaseInput::KillCentral => match self.state {
                 State::Down => return Err(illegal()),
                 _ => self.state = State::Down,
@@ -494,6 +546,17 @@ impl PhaseMachine {
                     (State::Training, vec![PhaseEffect::ResolveRejoin { acks }])
                 } else {
                     (State::Rejoining { acks, deadline }, vec![])
+                }
+            }
+            State::Syncing { round, expect, done } => {
+                // No deadline: the sync barrier is driven by the replica
+                // runner, which already bounds the round by its event
+                // ceiling. Resolution is purely "every expected chain
+                // answered".
+                if done.is_superset(&expect) {
+                    (State::Training, vec![PhaseEffect::ResolveSync { round, chains: done }])
+                } else {
+                    (State::Syncing { round, expect, done }, vec![])
                 }
             }
             State::Redistributing { expect, done, deadline, reason } => {
@@ -855,6 +918,68 @@ mod tests {
                 "poll: probing->training [resolve-probe]",
             ]
         );
+    }
+
+    #[test]
+    fn sync_round_walks_barrier_and_resolves() {
+        let mut m = PhaseMachine::new(cfg());
+        m.step(PhaseInput::TrainingStarted).unwrap();
+        let (p, eff) =
+            m.step(PhaseInput::SyncDue { round: 1, expect: [1, 2].into() }).unwrap();
+        assert_eq!(p, CoordinatorPhase::Syncing);
+        assert_eq!(eff, vec![PhaseEffect::BeginSync { round: 1 }]);
+        // one of two chains answers; the barrier stays open
+        m.step(PhaseInput::SyncPartial { chain: 1 }).unwrap();
+        let (p, eff) = m.step(poll(ms(10), None, 0, 2)).unwrap();
+        assert_eq!((p, eff.len()), (CoordinatorPhase::Syncing, 0));
+        // the second answer resolves it on the next poll
+        m.step(PhaseInput::SyncPartial { chain: 2 }).unwrap();
+        let (p, eff) = m.step(poll(ms(20), None, 0, 2)).unwrap();
+        assert_eq!(p, CoordinatorPhase::Training);
+        assert_eq!(
+            eff,
+            vec![PhaseEffect::ResolveSync { round: 1, chains: [1, 2].into() }]
+        );
+        assert_eq!(
+            m.log(),
+            &[
+                "training-started: idle->training",
+                "sync-due: training->syncing [begin-sync]",
+                "poll: syncing->training [resolve-sync]",
+            ]
+        );
+    }
+
+    #[test]
+    fn sync_due_is_illegal_outside_training() {
+        let mut m = PhaseMachine::new(cfg());
+        let err = m.step(PhaseInput::SyncDue { round: 1, expect: [1].into() }).unwrap_err();
+        assert_eq!((err.from, err.input), (CoordinatorPhase::Idle, "sync-due"));
+        assert_eq!(m.phase(), CoordinatorPhase::Idle);
+        // and a second SyncDue inside Syncing is also illegal
+        m.step(PhaseInput::TrainingStarted).unwrap();
+        m.step(PhaseInput::SyncDue { round: 1, expect: [1].into() }).unwrap();
+        assert!(m.step(PhaseInput::SyncDue { round: 2, expect: [1].into() }).is_err());
+        assert_eq!(m.phase(), CoordinatorPhase::Syncing);
+    }
+
+    #[test]
+    fn sync_partial_is_rejected_from_down_and_rejoining() {
+        // absorbed in Training (a straggler after resolution)...
+        let mut m = PhaseMachine::new(cfg());
+        m.step(PhaseInput::TrainingStarted).unwrap();
+        let logged = m.log().len();
+        m.step(PhaseInput::SyncPartial { chain: 1 }).unwrap();
+        assert_eq!(m.log().len(), logged);
+        // ...but an error from Down and Rejoining, machine untouched
+        m.step(PhaseInput::KillCentral).unwrap();
+        let err = m.step(PhaseInput::SyncPartial { chain: 1 }).unwrap_err();
+        assert_eq!((err.from, err.input), (CoordinatorPhase::Down, "sync-partial"));
+        assert_eq!(m.phase(), CoordinatorPhase::Down);
+        m.step(PhaseInput::CentralRestarted { now: ms(0) }).unwrap();
+        let err = m.step(PhaseInput::SyncPartial { chain: 1 }).unwrap_err();
+        assert_eq!((err.from, err.input), (CoordinatorPhase::Rejoining, "sync-partial"));
+        assert_eq!(m.phase(), CoordinatorPhase::Rejoining);
     }
 
     #[test]

@@ -123,6 +123,12 @@ fn load_resume(cfg: &RunConfig, n: usize, manifest: &Manifest) -> Result<Option<
 /// Run the whole offline phase for `cfg`.
 pub(crate) fn bootstrap(cfg: &RunConfig, mut opts: RunOpts) -> Result<BootResult> {
     cfg.validate()?;
+    if cfg.replicas > 1 {
+        // Replicated training is a sim-runner capability for now: the
+        // threaded coordinator drives exactly one pipeline chain
+        // (DESIGN.md §14 tracks lifting this).
+        bail!("replicas = {} is not supported by the threaded coordinator", cfg.replicas);
+    }
     crate::util::logging::init_from_env();
     let manifest = Arc::new(Manifest::load(&cfg.model_dir)?);
     let n = cfg.n_devices();

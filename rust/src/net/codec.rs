@@ -55,7 +55,15 @@ use super::quant::{Bits, Compression, QTensor, Scheme, Tier};
 /// count, and the decoder reads the extras only when bytes remain in the
 /// frame (`decode` checks exact frame consumption, which makes trailing
 /// optionals unambiguous). Pricing (`Message::byte_len`) is unchanged.
-pub const CODEC_VERSION: u8 = 7;
+///
+/// v8: the replica axis (DESIGN.md §14) — `ReplicaSync` is message
+/// tag 22 (cross-replica weight partials/averages on the quantized
+/// wire), and `InitState` gains `replicas` + `sync_every` as a trailing
+/// optional *pair* (written together only when either is non-default,
+/// i.e. `replicas != 1 || sync_every != 0`), so every default-valued
+/// frame keeps its v7 byte pattern. Pricing is unchanged for old
+/// variants; `ReplicaSync` gets its own frozen formula.
+pub const CODEC_VERSION: u8 = 8;
 
 // ---------- primitive writers ----------
 
@@ -393,6 +401,13 @@ pub fn encode_into(buf: &mut Vec<u8>, from: DeviceId, msg: &Message) {
             w.u8(t.tier_ceiling.to_u8());
             w.u64(t.replica_epoch);
             w.u64(t.worker_quota);
+            // v8 trailing pair: elided when both hold their defaults so
+            // a single-chain frame keeps its v7 byte pattern. Written
+            // together (never one alone) to keep decoding unambiguous.
+            if t.replicas != 1 || t.sync_every != 0 {
+                w.u64(t.replicas);
+                w.u64(t.sync_every);
+            }
         }
         Message::Repartition { ranges, worker_list, failed } => {
             w.u8(7);
@@ -486,6 +501,15 @@ pub fn encode_into(buf: &mut Vec<u8>, from: DeviceId, msg: &Message) {
                     w.usize(dev);
                     w.u8(t.to_u8());
                 }
+            }
+        }
+        Message::ReplicaSync { round, block_id, tensors } => {
+            w.u8(22);
+            w.u64(*round);
+            w.usize(*block_id);
+            w.u32(tensors.len() as u32);
+            for t in tensors {
+                w.wire_tensor(t);
             }
         }
         Message::Shutdown => w.u8(16),
@@ -614,6 +638,10 @@ pub fn decode(frame: &[u8]) -> Result<(DeviceId, Message)> {
                 },
                 replica_epoch: r.u64()?,
                 worker_quota: r.u64()?,
+                // v8 trailing pair; absent in v7-shaped frames means the
+                // single-chain defaults
+                replicas: if r.i < frame.len() { r.u64()? } else { 1 },
+                sync_every: if r.i < frame.len() { r.u64()? } else { 0 },
             })
         }
         7 => {
@@ -693,6 +721,16 @@ pub fn decode(frame: &[u8]) -> Result<(DeviceId, Message)> {
                 }
             }
             Message::SetCompression { tier, links }
+        }
+        22 => {
+            let round = r.u64()?;
+            let block_id = r.usize()?;
+            let nt = r.u32()? as usize;
+            let mut tensors = Vec::with_capacity(nt);
+            for _ in 0..nt {
+                tensors.push(r.wire_tensor()?);
+            }
+            Message::ReplicaSync { round, block_id, tensors }
         }
         t => return Err(anyhow!("unknown message tag {t}")),
     };
@@ -828,8 +866,61 @@ mod tests {
                 tier_ceiling: Tier::Full,
                 replica_epoch: 3,
                 worker_quota: 8,
+                replicas: 2,
+                sync_every: 10,
             }),
         );
+        roundtrip(
+            0,
+            &Message::ReplicaSync {
+                round: 4,
+                block_id: 7,
+                tensors: vec![vec![1.0f32, -2.0, 0.5].into()],
+            },
+        );
+    }
+
+    /// Satellite: the v8 trailing pair must be elided for default values,
+    /// so a single-chain `InitState` frame is byte-identical to its v7
+    /// layout — and a replica-axis frame extends it by exactly the pair.
+    #[test]
+    fn v7_default_byte_patterns_are_preserved() {
+        let ti = |replicas: u64, sync_every: u64| {
+            Message::InitState(TrainInit {
+                committed_forward: -1,
+                committed_backward: -1,
+                lr: 0.05,
+                momentum: 0.9,
+                weight_decay: 4e-5,
+                epochs: 1,
+                batches_per_epoch: 10,
+                ranges: vec![(0, 4)],
+                worker_list: vec![0, 1],
+                agg_k: 0,
+                chain_every: 0,
+                global_every: 0,
+                status: 0,
+                compression: Compression::Off,
+                bw_probe_every: 0,
+                bw_probe_bytes: 0,
+                tier_floor: Tier::Off,
+                tier_ceiling: Tier::FullQ4,
+                replica_epoch: 0,
+                worker_quota: 0,
+                replicas,
+                sync_every,
+            })
+        };
+        let plain = encode(0, &ti(1, 0));
+        let keyed = encode(0, &ti(2, 10));
+        assert_eq!(keyed.len(), plain.len() + 16, "the pair is two trailing u64s");
+        assert_eq!(&keyed[..plain.len()], &plain[..], "prefix unchanged");
+        // either field non-default forces the whole pair onto the wire
+        assert_eq!(encode(0, &ti(1, 5)).len(), plain.len() + 16);
+        // and the v7-shaped frame decodes to the single-chain defaults
+        let (_, m) = decode(&plain).unwrap();
+        let Message::InitState(t) = m else { panic!("wrong variant") };
+        assert_eq!((t.replicas, t.sync_every), (1, 0));
     }
 
     #[test]
@@ -920,6 +1011,11 @@ mod tests {
                         version: 9,
                         blocks: vec![(0, vec![WireTensor::Quant(q.clone()), xs.clone().into()])],
                     },
+                    Message::ReplicaSync {
+                        round: 2,
+                        block_id: 1,
+                        tensors: vec![WireTensor::Quant(q.clone()), xs.clone().into()],
+                    },
                 ];
                 for msg in msgs {
                     let frame = encode(5, &msg);
@@ -993,7 +1089,7 @@ mod tests {
         }
     }
 
-    /// Uniformly draws from EVERY `Message` variant (22 as of codec v4).
+    /// Uniformly draws from EVERY `Message` variant (23 as of codec v8).
     fn random_message(g: &mut G<'_>) -> Message {
         let blocks = |g: &mut G<'_>| -> Vec<WireBlock> {
             (0..g.usize_in(0, 3))
@@ -1013,7 +1109,7 @@ mod tests {
                 })
                 .collect()
         };
-        match g.usize_in(0, 21) {
+        match g.usize_in(0, 22) {
             0 => Message::Forward {
                 batch: g.usize_in(0, 1000) as u64,
                 version0: g.usize_in(0, 50) as u64,
@@ -1074,6 +1170,9 @@ mod tests {
                 tier_ceiling: *g.pick(&[Tier::Activations, Tier::Full, Tier::FullQ4]),
                 replica_epoch: g.usize_in(0, 4) as u64,
                 worker_quota: g.usize_in(0, 64) as u64,
+                // 1/0 (the elided single-chain defaults) stay in the mix
+                replicas: g.usize_in(1, 4) as u64,
+                sync_every: g.usize_in(0, 20) as u64,
             }),
             7 => Message::Repartition {
                 ranges: (0..g.usize_in(1, 4)).map(|i| (i * 2, i * 2 + 1)).collect(),
@@ -1121,6 +1220,15 @@ mod tests {
                         )
                     })
                     .collect(),
+            },
+            21 => Message::ReplicaSync {
+                round: g.usize_in(0, 50) as u64,
+                block_id: g.usize_in(0, 15),
+                tensors: {
+                    let nt = g.usize_in(0, 3);
+                    let len = g.size.min(16);
+                    (0..nt).map(|_| random_wire_tensor(g, len)).collect()
+                },
             },
             _ => Message::Shutdown,
         }

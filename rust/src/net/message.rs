@@ -191,6 +191,14 @@ pub struct TrainInit {
     /// informational for workers; the roster itself lives coordinator-
     /// side ([`crate::coordinator::WorkerRoster`], DESIGN.md §12).
     pub worker_quota: u64,
+    /// Pipeline replicas in the run (hybrid pipeline + data parallelism,
+    /// DESIGN.md §14). 1 = the historical single-chain world; encoded as
+    /// a v8 optional-trailing field so default-valued frames keep their
+    /// v7 byte pattern.
+    pub replicas: u64,
+    /// Cross-replica weight-sync period in committed batches per chain
+    /// (0 = never). Same v8 optional-trailing encoding as `replicas`.
+    pub sync_every: u64,
 }
 
 /// A block's tensors on the wire — shared buffers (or quantized bytes),
@@ -329,6 +337,18 @@ pub enum Message {
         tier: Tier,
         links: Vec<(DeviceId, Tier)>,
     },
+    /// Cross-replica weight sync (hybrid pipeline + data parallelism,
+    /// DESIGN.md §14). Chain heads send their per-replica partials for
+    /// one block to the central node every `sync_every` committed
+    /// batches; the central node averages the live chains' partials and
+    /// broadcasts the result back in the same message shape. The tensors
+    /// ride the same [`WireTensor`] arms as replica pushes, so sync
+    /// traffic inherits the per-link compression ladders.
+    ReplicaSync {
+        round: u64,
+        block_id: usize,
+        tensors: Vec<WireTensor>,
+    },
     Shutdown,
 }
 
@@ -357,6 +377,7 @@ impl Message {
             Message::CentralRestart { .. } => "CentralRestart",
             Message::WorkerState { .. } => "WorkerState",
             Message::SetCompression { .. } => "SetCompression",
+            Message::ReplicaSync { .. } => "ReplicaSync",
             Message::Shutdown => "Shutdown",
         }
     }
@@ -405,6 +426,12 @@ impl Message {
             Message::CentralRestart { .. } => 8,
             Message::WorkerState { .. } => 25,
             Message::SetCompression { .. } => 1,
+            // Frozen pricing formula (same contract as the arms above):
+            // 16 header bytes (round + block_id) plus 4 + payload per
+            // tensor, mirroring the per-tensor term of `blocks_len`.
+            Message::ReplicaSync { tensors, .. } => {
+                16 + tensors.iter().map(|t| 4 + t.byte_len()).sum::<usize>()
+            }
         }
     }
 }

@@ -186,6 +186,158 @@ pub fn bruteforce_partition(cm: &CostModel) -> (Partition, f64) {
     best.unwrap()
 }
 
+// ---------------------------------------------------------------------
+// replica axis (DESIGN.md §14): devices × replicas
+// ---------------------------------------------------------------------
+
+/// Output of the replica-aware solve: the fleet split into R pipeline
+/// chains (contiguous, in device order, chain 0 holding device 0) plus
+/// the deterministic round-robin data-shard assignment over batch
+/// indices (`shard_assignment[c]` = the global batch ids chain `c`
+/// trains — disjoint and complete over `0..batches`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplicaPlan {
+    /// Device indices per chain, contiguous in fleet order.
+    pub chains: Vec<Vec<usize>>,
+    /// Global batch ids per chain (`b` goes to chain `b % R`).
+    pub shard_assignment: Vec<Vec<u64>>,
+}
+
+/// Bottleneck cost of one chain: devices in a pipeline contribute
+/// throughput `1/C_k` each (capacities are slowdown factors, eq 3), so
+/// the chain's aggregate cost is the harmonic combination — more or
+/// faster devices always lower it, which is what the balancing DP needs.
+pub fn chain_cost(capacities: &[f64]) -> f64 {
+    let thru: f64 = capacities.iter().map(|&c| 1.0 / c).sum();
+    1.0 / thru
+}
+
+/// Split `capacities` (fleet order) into `replicas` contiguous non-empty
+/// chains minimizing the worst per-chain [`chain_cost`] — the replica
+/// analogue of eq (5): `f[i][k] = min_j max(f[j][k-1], cost(j..i))`.
+/// Contiguity keeps device 0 at the head of chain 0 (the coordinator
+/// chain) and makes the split independent of map iteration order.
+pub fn split_chains(capacities: &[f64], replicas: usize) -> Vec<Vec<usize>> {
+    let n = capacities.len();
+    assert!(replicas >= 1 && n >= replicas, "{n} devices < {replicas} replicas");
+    if replicas == 1 {
+        return vec![(0..n).collect()];
+    }
+    const INF: f64 = f64::INFINITY;
+    // f[i][k]: best worst-chain cost for devices 0..i over k+1 chains
+    let mut f = vec![vec![INF; replicas]; n + 1];
+    let mut cut = vec![vec![usize::MAX; replicas]; n + 1];
+    for i in 1..=n {
+        f[i][0] = chain_cost(&capacities[0..i]);
+    }
+    for k in 1..replicas {
+        for i in (k + 1)..=n {
+            for j in k..i {
+                let cand = f[j][k - 1].max(chain_cost(&capacities[j..i]));
+                if cand < f[i][k] {
+                    f[i][k] = cand;
+                    cut[i][k] = j;
+                }
+            }
+        }
+    }
+    let mut bounds = vec![n];
+    let mut i = n;
+    for k in (1..replicas).rev() {
+        i = cut[i][k];
+        bounds.push(i);
+    }
+    bounds.push(0);
+    bounds.reverse();
+    bounds.windows(2).map(|w| (w[0]..w[1]).collect()).collect()
+}
+
+/// The replica-aware solve: balanced contiguous chains by capacity plus
+/// the deterministic round-robin shard assignment (`b -> b % R`).
+/// `replicas == 1` reproduces today's single-chain world exactly: one
+/// chain of every device, one shard of every batch.
+pub fn replica_plan(capacities: &[f64], replicas: usize, batches: u64) -> ReplicaPlan {
+    let chains = split_chains(capacities, replicas);
+    let mut shard_assignment = vec![Vec::new(); replicas];
+    for b in 0..batches {
+        shard_assignment[(b % replicas as u64) as usize].push(b);
+    }
+    ReplicaPlan { chains, shard_assignment }
+}
+
+/// Exhaustive chain-split oracle (test-only; exponential): enumerate
+/// every composition of the fleet into `replicas` contiguous non-empty
+/// groups and return the minimal worst [`chain_cost`].
+pub fn bruteforce_replica_chains(capacities: &[f64], replicas: usize) -> (Vec<Vec<usize>>, f64) {
+    let n = capacities.len();
+    assert!(replicas >= 1 && n >= replicas);
+    let mut best: Option<(Vec<Vec<usize>>, f64)> = None;
+    // choose replicas-1 cut positions (cut after device c)
+    let mut cuts = vec![0usize; replicas - 1];
+    fn rec(
+        caps: &[f64],
+        cuts: &mut Vec<usize>,
+        idx: usize,
+        min_next: usize,
+        best: &mut Option<(Vec<Vec<usize>>, f64)>,
+    ) {
+        let n = caps.len();
+        if idx == cuts.len() {
+            let mut chains = Vec::with_capacity(cuts.len() + 1);
+            let mut lo = 0;
+            for &c in cuts.iter() {
+                chains.push((lo..=c).collect::<Vec<_>>());
+                lo = c + 1;
+            }
+            chains.push((lo..n).collect());
+            let cost = chains
+                .iter()
+                .map(|ch| chain_cost(&caps[ch[0]..=ch[ch.len() - 1]]))
+                .fold(0.0f64, f64::max);
+            if best.as_ref().map(|(_, b)| cost < *b).unwrap_or(true) {
+                *best = Some((chains, cost));
+            }
+            return;
+        }
+        let remaining = cuts.len() - idx - 1;
+        for c in min_next..(n - 1 - remaining) {
+            cuts[idx] = c;
+            rec(caps, cuts, idx + 1, c + 1, best);
+        }
+    }
+    if replicas == 1 {
+        return (vec![(0..n).collect()], chain_cost(capacities));
+    }
+    rec(capacities, &mut cuts, 0, 0, &mut best);
+    best.unwrap()
+}
+
+/// Validate a replica plan: every device in exactly one chain (fleet
+/// order, device 0 heading chain 0) and the shards a partition of
+/// `0..batches` (disjoint + complete).
+pub fn validate_replica_plan(
+    plan: &ReplicaPlan,
+    n_devices: usize,
+    batches: u64,
+) -> Result<(), String> {
+    let flat: Vec<usize> = plan.chains.iter().flatten().copied().collect();
+    if flat != (0..n_devices).collect::<Vec<_>>() {
+        return Err(format!("chains {:?} are not a fleet-order partition", plan.chains));
+    }
+    if plan.chains.iter().any(|c| c.is_empty()) {
+        return Err("empty chain".into());
+    }
+    if plan.chains.len() != plan.shard_assignment.len() {
+        return Err("chain/shard count mismatch".into());
+    }
+    let mut all: Vec<u64> = plan.shard_assignment.iter().flatten().copied().collect();
+    all.sort_unstable();
+    if all != (0..batches).collect::<Vec<_>>() {
+        return Err("shards are not a disjoint+complete cover of the batch ids".into());
+    }
+    Ok(())
+}
+
 /// Validate a partition covers blocks `0..n_blocks` contiguously.
 pub fn validate_partition(p: &Partition, n_blocks: usize) -> Result<(), String> {
     if p.is_empty() {
@@ -283,6 +435,71 @@ mod tests {
         assert!(validate_partition(&vec![(1, 2), (3, 4)], 5).is_err());
         assert!(validate_partition(&vec![(0, 2), (4, 4)], 5).is_err());
         assert!(validate_partition(&vec![(0, 2), (3, 3)], 5).is_err());
+    }
+
+    #[test]
+    fn replica_plan_r1_is_the_single_chain_world() {
+        let plan = replica_plan(&[1.0, 2.0, 0.5], 1, 7);
+        assert_eq!(plan.chains, vec![vec![0, 1, 2]]);
+        assert_eq!(plan.shard_assignment, vec![(0..7).collect::<Vec<u64>>()]);
+        validate_replica_plan(&plan, 3, 7).unwrap();
+    }
+
+    #[test]
+    fn replica_shards_round_robin() {
+        let plan = replica_plan(&[1.0, 1.0, 1.0, 1.0], 2, 5);
+        assert_eq!(plan.shard_assignment[0], vec![0, 2, 4]);
+        assert_eq!(plan.shard_assignment[1], vec![1, 3]);
+        validate_replica_plan(&plan, 4, 5).unwrap();
+    }
+
+    #[test]
+    fn split_chains_balances_by_capacity() {
+        // one fast device (0.5 = 2x speed) vs three slow: the fast device
+        // can hold a chain alone while the three slow ones pool
+        let chains = split_chains(&[0.5, 2.0, 2.0, 2.0], 2);
+        assert_eq!(chains, vec![vec![0], vec![1, 2, 3]]);
+        // homogeneous fleet splits evenly
+        let chains = split_chains(&[1.0; 6], 3);
+        assert_eq!(chains, vec![vec![0, 1], vec![2, 3], vec![4, 5]]);
+    }
+
+    #[test]
+    fn split_chains_matches_bruteforce_on_examples() {
+        for (caps, r) in [
+            (vec![1.0, 2.0, 0.5, 3.0, 1.0], 2),
+            (vec![1.0, 1.0, 4.0, 0.25, 2.0, 1.0], 3),
+            (vec![0.5, 0.5, 0.5, 8.0], 2),
+        ] {
+            let chains = split_chains(&caps, r);
+            let cost = chains
+                .iter()
+                .map(|ch| chain_cost(&caps[ch[0]..=ch[ch.len() - 1]]))
+                .fold(0.0f64, f64::max);
+            let (_, bf) = bruteforce_replica_chains(&caps, r);
+            assert!((cost - bf).abs() < 1e-12, "dp {cost} vs bf {bf} for {caps:?} R={r}");
+        }
+    }
+
+    #[test]
+    fn chain_cost_is_harmonic() {
+        assert!((chain_cost(&[1.0]) - 1.0).abs() < 1e-12);
+        // two unit-capacity devices pipeline to half the per-batch cost
+        assert!((chain_cost(&[1.0, 1.0]) - 0.5).abs() < 1e-12);
+        assert!((chain_cost(&[2.0, 2.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_replica_plan_catches_bad_plans() {
+        let good = replica_plan(&[1.0, 1.0], 2, 4);
+        validate_replica_plan(&good, 2, 4).unwrap();
+        let mut bad = good.clone();
+        bad.shard_assignment[0].push(1); // duplicate batch id
+        assert!(validate_replica_plan(&bad, 2, 4).is_err());
+        let mut bad = good.clone();
+        bad.chains[1] = vec![3]; // not a fleet-order partition
+        assert!(validate_replica_plan(&bad, 2, 4).is_err());
+        assert!(validate_replica_plan(&good, 2, 5).is_err()); // incomplete shards
     }
 
     #[test]

@@ -22,10 +22,12 @@ use std::time::Duration;
 pub mod clock;
 pub mod fixture;
 pub mod queue;
+pub mod replica;
 pub mod runner;
 pub mod script;
 
 pub use clock::{real_clock, Clock, RealClock, SharedClock, VirtualClock};
+pub use replica::{run_replica_scenario, SyncRecord};
 pub use runner::{run_scenario, RedistRecord, ScenarioOutcome};
 pub use script::{
     chaos_events, hetero_capacities, hetero_link_topology, rolling_churn_events,

@@ -1,0 +1,691 @@
+//! Hybrid pipeline + data parallelism driver: R replica chains training
+//! disjoint round-robin batch shards, periodically averaged through the
+//! central node (DESIGN.md §14).
+//!
+//! Each chain is modeled as ONE fused [`StageWorker`] owning every block
+//! — the single-stage `forward_train` path runs forward + loss +
+//! backward + SGD synchronously, so chain-internal pipelining is
+//! abstracted into the chain's aggregate capacity
+//! ([`crate::partition::chain_cost`]) while the cross-replica protocol
+//! (shards, sync barrier, whole-replica death) is simulated exactly.
+//! This trades per-hop fidelity inside a chain for bit-exact weight
+//! math across chains, which is what the replica tests pin down.
+//!
+//! Determinism contract (mirrors the single-chain runner):
+//! * every chain boots from the same manifest weights;
+//! * events pop in `(time, seq)` order from the shared [`EventQueue`];
+//! * the averaging fold visits contributors in ascending chain order
+//!   and multiplies by the reciprocal once — the scenario tests
+//!   recompute the same fold and demand bit-identity;
+//! * scripted [`Action::KillReplica`] fires when its sync round would
+//!   first open, BEFORE the barrier's `SyncDue`, so a victim never
+//!   contributes partials to the round that buries it.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::DeviceConfig;
+use crate::coordinator::core::{PhaseConfig, PhaseEffect, PhaseInput, PhaseMachine};
+use crate::data::SynthVision;
+use crate::device::SimDevice;
+use crate::manifest::Manifest;
+use crate::model::BlockParams;
+use crate::net::message::{DeviceId, Message, TrainInit, WireTensor};
+use crate::net::quant::{weight_channel_hint, ChannelHint};
+use crate::net::Transport;
+use crate::partition::{chain_cost, replica_plan, validate_replica_plan};
+use crate::pipeline::{StageWorker, StepKind};
+use crate::replication;
+use crate::runtime::{load_all_blocks_native, HostTensor};
+use crate::sim::clock::{SharedClock, VirtualClock};
+use crate::sim::queue::EventQueue;
+use crate::sim::runner::ScenarioOutcome;
+use crate::sim::script::{Action, Scenario, Trigger};
+
+// ---------------------------------------------------------------------
+// sync records
+// ---------------------------------------------------------------------
+
+/// What one resolved sync round averaged: the per-chain weights exactly
+/// as the central fold saw them (decoded partials for chains > 0, the
+/// local f32 store for chain 0) and the averaged result it installed.
+/// `post` is ALWAYS the bitwise average of `pre` — the scenario tests
+/// recompute the fold from `pre` and compare bits.
+#[derive(Debug, Clone)]
+pub struct SyncRecord {
+    pub round: u64,
+    /// chain -> block -> pre-averaging parameters.
+    pub pre: BTreeMap<usize, BTreeMap<usize, BlockParams>>,
+    /// block -> averaged parameters (what chain 0 holds afterwards).
+    pub post: BTreeMap<usize, BlockParams>,
+}
+
+// ---------------------------------------------------------------------
+// null transport
+// ---------------------------------------------------------------------
+
+/// Fused chain workers must never talk on their own: labels are fed
+/// in-process and the sync protocol is driven by this runner. Any send
+/// is a modeling bug, counted here and surfaced as a hard error.
+struct NullNet {
+    n: usize,
+    sends: Mutex<u64>,
+}
+
+#[derive(Clone)]
+struct NullHandle {
+    id: DeviceId,
+    net: Arc<NullNet>,
+}
+
+impl Transport for NullHandle {
+    fn my_id(&self) -> DeviceId {
+        self.id
+    }
+
+    fn send(&self, _to: DeviceId, _msg: Message) -> Result<()> {
+        *self.net.sends.lock().unwrap() += 1;
+        Ok(())
+    }
+
+    fn recv_timeout(&self, _timeout: Duration) -> Option<(DeviceId, Message)> {
+        None
+    }
+
+    fn n_devices(&self) -> usize {
+        self.net.n
+    }
+}
+
+// ---------------------------------------------------------------------
+// driver state
+// ---------------------------------------------------------------------
+
+enum REv {
+    /// The fused chain finished its in-flight batch.
+    ChainDone { chain: usize, batch: u64, loss: f32 },
+    /// One block of a chain's sync partial reached the central node.
+    PartialArrive { chain: usize, block_id: usize, tensors: Vec<WireTensor> },
+    /// One block of the averaged weights reached a chain head.
+    InstallArrive { chain: usize, block_id: usize, tensors: Vec<WireTensor> },
+}
+
+struct Chain {
+    head: DeviceId,
+    /// Batches still to train, in shard order (absorbed orphans append).
+    shard: VecDeque<u64>,
+    trained: u64,
+    shard_len: u64,
+    dead: bool,
+    /// A batch is in flight (its ChainDone is queued).
+    busy: bool,
+}
+
+/// Run a replicated scenario (`Scenario::replicas > 1`). Reached through
+/// [`crate::sim::run_scenario`]; R = 1 never enters this file.
+pub fn run_replica_scenario(scenario: &Scenario, model_dir: &Path) -> Result<ScenarioOutcome> {
+    scenario.validate()?;
+    let manifest = Arc::new(Manifest::load(model_dir)?);
+    let n = scenario.n_devices();
+    let plan = replica_plan(&scenario.capacities, scenario.replicas, scenario.batches);
+    validate_replica_plan(&plan, n, scenario.batches)
+        .map_err(|e| anyhow!("replica plan invalid: {e}"))?;
+
+    let clock = VirtualClock::shared();
+    let shared: SharedClock = clock.clone();
+    let net = Arc::new(NullNet { n, sends: Mutex::new(0) });
+
+    let nb = manifest.n_blocks();
+    let mut workers = Vec::with_capacity(plan.chains.len());
+    let mut handles = Vec::with_capacity(plan.chains.len());
+    let mut chains = Vec::with_capacity(plan.chains.len());
+    for (c, devs) in plan.chains.iter().enumerate() {
+        let head = devs[0];
+        let caps: Vec<f64> = devs.iter().map(|&d| scenario.capacities[d]).collect();
+        let cfg = DeviceConfig { capacity: chain_cost(&caps), ..DeviceConfig::default() };
+        let sim = SimDevice::with_clock(
+            cfg,
+            scenario.seed ^ (head as u64).wrapping_mul(0x9E3779B9),
+            shared.clone(),
+            Some(scenario.ns_per_flop),
+        );
+        let blocks = load_all_blocks_native(&manifest)?;
+        let mut w = StageWorker::new(head, manifest.clone(), blocks, sim, None);
+        w.set_clock(shared.clone());
+        w.apply_init(&TrainInit {
+            committed_forward: -1,
+            committed_backward: -1,
+            lr: scenario.lr,
+            momentum: scenario.momentum,
+            weight_decay: scenario.weight_decay,
+            epochs: 1,
+            batches_per_epoch: scenario.batches,
+            ranges: vec![(0, nb - 1)],
+            worker_list: vec![head],
+            agg_k: 0,
+            chain_every: 0,
+            global_every: 0,
+            status: 0,
+            compression: scenario.compression,
+            bw_probe_every: 0,
+            bw_probe_bytes: 0,
+            tier_floor: scenario.adaptive.tier_floor,
+            tier_ceiling: scenario.adaptive.tier_ceiling,
+            replica_epoch: 0,
+            worker_quota: 0,
+            replicas: scenario.replicas as u64,
+            sync_every: scenario.sync_every,
+        })?;
+        workers.push(w);
+        handles.push(NullHandle { id: head, net: net.clone() });
+        let shard: VecDeque<u64> = plan.shard_assignment[c].iter().copied().collect();
+        let shard_len = shard.len() as u64;
+        chains.push(Chain { head, shard, trained: 0, shard_len, dead: false, busy: false });
+    }
+
+    let dim: usize = manifest.input_shape.iter().skip(1).product();
+    let classes = manifest.n_classes.context("fixture manifest missing n_classes")?;
+    let hints: Vec<Vec<ChannelHint>> = (0..nb)
+        .map(|b| {
+            manifest.blocks[b]
+                .params
+                .iter()
+                .map(|p| weight_channel_hint(&p.shape, p.size))
+                .collect()
+        })
+        .collect();
+
+    let r = plan.chains.len() as u64;
+    let event_ceiling = 1_000_000
+        + scenario
+            .batches
+            .saturating_mul(16)
+            .saturating_add((scenario.batches / scenario.sync_every.max(1) + 2) * r * nb as u64 * 4);
+
+    let driver = RDriver {
+        sc: scenario,
+        manifest: manifest.clone(),
+        clock,
+        net,
+        queue: EventQueue::with_capacity(n, 4 * n + 64),
+        workers,
+        handles,
+        chains,
+        data: SynthVision::new(dim, classes, 0.5, scenario.seed, 0),
+        machine: PhaseMachine::new(PhaseConfig {
+            probe_window: scenario.probe_window,
+            redist_window: scenario.redist_window,
+        }),
+        hints,
+        round: 1,
+        syncing: false,
+        finished: false,
+        pre_partials: BTreeMap::new(),
+        pending_install: vec![BTreeMap::new(); plan.chains.len()],
+        link_free: HashMap::new(),
+        bytes_total: 0,
+        losses: BTreeMap::new(),
+        trace: Vec::with_capacity(scenario.batches as usize * 3 + 64),
+        sync_records: Vec::new(),
+        fired: vec![false; scenario.events.len()],
+        recoveries: 0,
+        events_processed: 0,
+        event_ceiling,
+        plan_chains: plan.chains,
+    };
+    driver.run()
+}
+
+struct RDriver<'a> {
+    sc: &'a Scenario,
+    manifest: Arc<Manifest>,
+    clock: Arc<VirtualClock>,
+    net: Arc<NullNet>,
+    queue: EventQueue<REv>,
+    /// One fused worker per chain (indexed by chain, NOT device).
+    workers: Vec<StageWorker>,
+    handles: Vec<NullHandle>,
+    chains: Vec<Chain>,
+    data: SynthVision,
+    /// The shared coordinator phase machine drives the sync barrier:
+    /// Training -> Syncing on `SyncDue`, back on a resolving `Poll`.
+    machine: PhaseMachine,
+    /// Per-block quantization hints (same derivation as the workers').
+    hints: Vec<Vec<ChannelHint>>,
+    /// Next unresolved sync round (1-based).
+    round: u64,
+    syncing: bool,
+    /// All live chains exhausted their shards and the final round
+    /// resolved — no further barriers open.
+    finished: bool,
+    /// chain -> block -> decoded uplink partial for the open round.
+    pre_partials: BTreeMap<usize, BTreeMap<usize, BlockParams>>,
+    /// Per chain: blocks of the averaged broadcast still being received.
+    pending_install: Vec<BTreeMap<usize, BlockParams>>,
+    /// Per-directed-link serialization, same pricing as `VirtualNet`.
+    link_free: HashMap<(DeviceId, DeviceId), Duration>,
+    bytes_total: u64,
+    losses: BTreeMap<u64, f32>,
+    trace: Vec<String>,
+    sync_records: Vec<SyncRecord>,
+    fired: Vec<bool>,
+    recoveries: usize,
+    events_processed: u64,
+    event_ceiling: u64,
+    plan_chains: Vec<Vec<usize>>,
+}
+
+impl RDriver<'_> {
+    fn trace_line(&mut self, at: Duration, args: std::fmt::Arguments<'_>) {
+        use std::fmt::Write;
+        let mut line = String::with_capacity(48);
+        let _ = write!(line, "[{:>13}ns] {}", at.as_nanos(), args);
+        self.trace.push(line);
+    }
+
+    /// Price one runner-driven control message on the `from -> to` link:
+    /// identical arithmetic to `VirtualNet::send` (serialization via
+    /// `link_free`, then latency + bytes/bandwidth).
+    fn price_send(&mut self, from: DeviceId, to: DeviceId, depart: Duration, msg: &Message) -> Duration {
+        let bytes = msg.byte_len() as u64;
+        self.bytes_total += bytes;
+        let free = self.link_free.get(&(from, to)).copied().unwrap_or(Duration::ZERO);
+        let start = depart.max(free);
+        let transfer = Duration::from_secs_f64(bytes as f64 / self.sc.link_bw_for(from, to));
+        self.link_free.insert((from, to), start + transfer);
+        start + self.sc.latency + transfer
+    }
+
+    /// Training quota for `chain` under the current round: shards are
+    /// cut into `sync_every`-batch slices, capped by the shard itself.
+    fn round_target(&self, chain: usize) -> u64 {
+        self.chains[chain].shard_len.min(self.round * self.sc.sync_every)
+    }
+
+    // -------------------------------------------------- run loop
+
+    fn run(mut self) -> Result<ScenarioOutcome> {
+        for (c, devs) in self.plan_chains.clone().iter().enumerate() {
+            let shard_len = self.chains[c].shard_len;
+            self.trace_line(
+                Duration::ZERO,
+                format_args!("plan: chain={c} devices={devs:?} shard_len={shard_len}"),
+            );
+        }
+        self.machine.step(PhaseInput::TrainingStarted)?;
+        for c in 0..self.chains.len() {
+            self.advance(c, Duration::ZERO)?;
+        }
+        while let Some((at, ev)) = self.queue.pop() {
+            self.events_processed += 1;
+            if self.events_processed > self.event_ceiling {
+                bail!("replica event ceiling exceeded ({}) — livelock", self.event_ceiling);
+            }
+            self.clock.set(at);
+            match ev {
+                REv::ChainDone { chain, batch, loss } => self.on_chain_done(chain, batch, loss, at)?,
+                REv::PartialArrive { chain, block_id, tensors } => {
+                    self.on_partial(chain, block_id, tensors, at)?
+                }
+                REv::InstallArrive { chain, block_id, tensors } => {
+                    self.on_install(chain, block_id, tensors, at)?
+                }
+            }
+        }
+        if !self.finished {
+            bail!("replica run drained its event queue before the final sync resolved (deadlock)");
+        }
+        for (c, ch) in self.chains.iter().enumerate() {
+            if !ch.dead && ch.trained != ch.shard_len {
+                bail!("chain {c} trained {}/{} shard batches", ch.trained, ch.shard_len);
+            }
+        }
+        let stray = *self.net.sends.lock().unwrap();
+        if stray != 0 {
+            bail!("fused chain workers sent {stray} unexpected messages");
+        }
+        let end = self.clock.now();
+        self.trace_line(end, format_args!("run complete"));
+        let final_weights: BTreeMap<usize, BlockParams> =
+            self.workers[0].params.blocks.iter().map(|(&b, bp)| (b, bp.clone())).collect();
+        if final_weights.len() != self.manifest.n_blocks() {
+            bail!(
+                "chain 0 holds {}/{} blocks",
+                final_weights.len(),
+                self.manifest.n_blocks()
+            );
+        }
+        Ok(ScenarioOutcome {
+            trace: self.trace,
+            losses: self.losses,
+            final_weights,
+            redists: Vec::new(),
+            recoveries: self.recoveries,
+            checkpoints: 0,
+            restarts: 0,
+            virtual_ms: end.as_secs_f64() * 1e3,
+            net_bytes: self.bytes_total,
+            events: self.events_processed,
+            phase_log: self.machine.take_log(),
+            sync_records: self.sync_records,
+        })
+    }
+
+    // -------------------------------------------------- training
+
+    /// Move `chain` forward: train if it still owes batches this round,
+    /// otherwise see whether the barrier can open.
+    fn advance(&mut self, chain: usize, t: Duration) -> Result<()> {
+        if self.finished || self.syncing {
+            return Ok(());
+        }
+        let ch = &self.chains[chain];
+        if ch.dead || ch.busy {
+            return Ok(());
+        }
+        if ch.trained < self.round_target(chain) {
+            self.start_batch(chain, t)
+        } else {
+            self.maybe_sync(t)
+        }
+    }
+
+    fn start_batch(&mut self, chain: usize, t: Duration) -> Result<()> {
+        let batch = self.chains[chain]
+            .shard
+            .pop_front()
+            .with_context(|| format!("chain {chain} has no shard batch to start"))?;
+        let data = self.data.batch(0, batch, self.manifest.batch_size);
+        let h = self.handles[chain].clone();
+        let head = self.chains[chain].head;
+        let labels = Message::Labels { batch, is_eval: false, data: data.labels.clone() };
+        self.workers[chain].handle_message(&h, head, labels)?;
+        let kind = StepKind::Forward { batch, is_eval: false };
+        let flops = self.workers[chain].step_flops(&kind);
+        let cost = self.workers[chain]
+            .sim
+            .modeled_cost(flops)
+            .unwrap_or(Duration::from_micros(1));
+        let version = self.workers[chain].version;
+        // run the fused step NOW (the math is interleave-independent:
+        // each chain touches only its own worker + its own shard), but
+        // surface the completion at the modeled finish time
+        let x = HostTensor::F32(data.x_f32.into());
+        let cb = self.workers[chain]
+            .forward_train(&h, batch, version, x)?
+            .context("fused chain worker did not complete its batch synchronously")?;
+        self.trace_line(t, format_args!("chain={chain} inject batch={batch}"));
+        self.chains[chain].busy = true;
+        self.queue.push(t + cost, REv::ChainDone { chain, batch, loss: cb.loss });
+        Ok(())
+    }
+
+    fn on_chain_done(&mut self, chain: usize, batch: u64, loss: f32, t: Duration) -> Result<()> {
+        self.chains[chain].busy = false;
+        self.chains[chain].trained += 1;
+        self.trace_line(
+            t,
+            format_args!("chain={chain} complete batch={batch} loss_bits={:08x}", loss.to_bits()),
+        );
+        self.losses.insert(batch, loss);
+        self.advance(chain, t)
+    }
+
+    // -------------------------------------------------- sync barrier
+
+    /// Open the barrier iff every live chain met its round target.
+    /// Scripted whole-replica kills scheduled for this round fire here,
+    /// BEFORE `SyncDue` — absorbing survivors may get new quota, which
+    /// simply postpones the barrier.
+    fn maybe_sync(&mut self, t: Duration) -> Result<()> {
+        if self.syncing || self.finished {
+            return Ok(());
+        }
+        if (0..self.chains.len())
+            .any(|c| !self.chains[c].dead && self.chains[c].trained < self.round_target(c))
+        {
+            return Ok(());
+        }
+        self.fire_round_kills(t)?;
+        let lagging: Vec<usize> = (0..self.chains.len())
+            .filter(|&c| !self.chains[c].dead && self.chains[c].trained < self.round_target(c))
+            .collect();
+        if !lagging.is_empty() {
+            for c in lagging {
+                self.advance(c, t)?;
+            }
+            return Ok(());
+        }
+        self.syncing = true;
+        let expect: BTreeSet<usize> =
+            (1..self.chains.len()).filter(|&c| !self.chains[c].dead).collect();
+        let round = self.round;
+        let (_, effects) = self.machine.step(PhaseInput::SyncDue { round, expect })?;
+        for eff in effects {
+            self.dispatch_effect(eff, t)?;
+        }
+        // resolves immediately when chain 0 is the only survivor
+        self.poll_machine(t)
+    }
+
+    fn fire_round_kills(&mut self, t: Duration) -> Result<()> {
+        let sc = self.sc;
+        let due: Vec<(usize, usize)> = sc
+            .events
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| !self.fired[i])
+            .filter_map(|(i, e)| match (&e.at, &e.action) {
+                (Trigger::SyncRound(r), Action::KillReplica { replica }) if *r == self.round => {
+                    Some((i, *replica))
+                }
+                _ => None,
+            })
+            .collect();
+        for (i, victim) in due {
+            self.fired[i] = true;
+            self.kill_replica(victim, t)?;
+        }
+        Ok(())
+    }
+
+    /// Whole-replica death (the case-3 analogue scoped to one chain):
+    /// the victim's untrained shard remainder is redistributed
+    /// round-robin over the surviving chains in ascending order. Its
+    /// trained-but-unsynced batches are LOST gradient contributions —
+    /// their losses stay in the trace, matching FTPipeHD's
+    /// commit-at-sync semantics.
+    fn kill_replica(&mut self, victim: usize, t: Duration) -> Result<()> {
+        if victim == 0 || victim >= self.chains.len() {
+            bail!("KillReplica {victim} out of range (chain 0 hosts the central node)");
+        }
+        if self.chains[victim].dead {
+            bail!("KillReplica {victim} hit an already-dead replica");
+        }
+        self.chains[victim].dead = true;
+        self.recoveries += 1;
+        let orphans: Vec<u64> = self.chains[victim].shard.drain(..).collect();
+        self.chains[victim].shard_len = self.chains[victim].trained;
+        self.trace_line(
+            t,
+            format_args!("script: kill replica {victim} orphans={}", orphans.len()),
+        );
+        let live: Vec<usize> = (0..self.chains.len()).filter(|&c| !self.chains[c].dead).collect();
+        for (k, &b) in orphans.iter().enumerate() {
+            let c = live[k % live.len()];
+            self.chains[c].shard.push_back(b);
+            self.chains[c].shard_len += 1;
+        }
+        for &c in &live {
+            self.trace_line(
+                t,
+                format_args!("absorb: chain={c} shard_len={}", self.chains[c].shard_len),
+            );
+        }
+        Ok(())
+    }
+
+    fn poll_machine(&mut self, t: Duration) -> Result<()> {
+        let (_, effects) = self.machine.step(PhaseInput::Poll {
+            now: t,
+            overdue: None,
+            inflight: 0,
+            peers: 0,
+            local_fetch_done: true,
+        })?;
+        for eff in effects {
+            self.dispatch_effect(eff, t)?;
+        }
+        Ok(())
+    }
+
+    fn dispatch_effect(&mut self, eff: PhaseEffect, t: Duration) -> Result<()> {
+        match eff {
+            PhaseEffect::BeginSync { round } => self.begin_sync(round, t),
+            PhaseEffect::ResolveSync { round, chains } => self.resolve_sync(round, chains, t),
+            other => bail!("replica runner received unexpected effect {}", other.kind()),
+        }
+    }
+
+    /// Uplink: every expected chain ships its full weight set to the
+    /// central node, one [`Message::ReplicaSync`] per block, coded at
+    /// the link tier's replica coding (lossy tiers allowed — the fold
+    /// averages whatever arrived, DESIGN.md §14).
+    fn begin_sync(&mut self, round: u64, t: Duration) -> Result<()> {
+        self.trace_line(t, format_args!("sync: round={round} begin"));
+        let up = self.sc.compression.initial_tier().replica_coding();
+        for chain in 1..self.chains.len() {
+            if self.chains[chain].dead {
+                continue;
+            }
+            let head = self.chains[chain].head;
+            for b in 0..self.manifest.n_blocks() {
+                let bp = self.workers[chain]
+                    .params
+                    .blocks
+                    .get(&b)
+                    .with_context(|| format!("chain {chain} missing block {b}"))?;
+                let tensors = replication::block_to_wire_coded(bp, &self.hints[b], up);
+                let msg = Message::ReplicaSync { round, block_id: b, tensors };
+                let arrive = self.price_send(head, 0, t, &msg);
+                let Message::ReplicaSync { tensors, .. } = msg else { unreachable!() };
+                self.queue.push(arrive, REv::PartialArrive { chain, block_id: b, tensors });
+            }
+        }
+        Ok(())
+    }
+
+    fn on_partial(
+        &mut self,
+        chain: usize,
+        block_id: usize,
+        tensors: Vec<WireTensor>,
+        t: Duration,
+    ) -> Result<()> {
+        let bp = replication::block_from_wire(tensors);
+        let entry = self.pre_partials.entry(chain).or_default();
+        entry.insert(block_id, bp);
+        if entry.len() == self.manifest.n_blocks() {
+            self.trace_line(t, format_args!("sync: partial chain={chain} complete"));
+            self.machine.step(PhaseInput::SyncPartial { chain })?;
+            self.poll_machine(t)?;
+        }
+        Ok(())
+    }
+
+    /// The barrier resolved: fold contributor weights (chain 0's local
+    /// f32 store plus every decoded partial) in ascending chain order,
+    /// multiply by the reciprocal once, install into chain 0, record,
+    /// broadcast. Momentum/SGD state is deliberately NOT averaged —
+    /// weights only (DESIGN.md §14).
+    fn resolve_sync(&mut self, round: u64, chains_done: BTreeSet<usize>, t: Duration) -> Result<()> {
+        let mut pre = std::mem::take(&mut self.pre_partials);
+        pre.insert(0, self.workers[0].params.blocks.clone());
+        for c in &chains_done {
+            if !pre.contains_key(c) {
+                bail!("sync round {round} resolved without a partial from chain {c}");
+            }
+        }
+        let inv = 1.0f32 / pre.len() as f32;
+        let nb = self.manifest.n_blocks();
+        let mut post: BTreeMap<usize, BlockParams> = BTreeMap::new();
+        for b in 0..nb {
+            let nt = self.manifest.blocks[b].params.len();
+            let mut acc: Vec<Vec<f32>> = Vec::with_capacity(nt);
+            for k in 0..nt {
+                let mut sum = vec![0.0f32; self.manifest.blocks[b].params[k].size];
+                for blocks in pre.values() {
+                    let bp = blocks
+                        .get(&b)
+                        .with_context(|| format!("sync partial missing block {b}"))?;
+                    for (s, v) in sum.iter_mut().zip(bp.0[k].iter()) {
+                        *s += *v;
+                    }
+                }
+                for s in sum.iter_mut() {
+                    *s *= inv;
+                }
+                acc.push(sum);
+            }
+            post.insert(b, BlockParams::from_vecs(acc));
+        }
+        for (&b, bp) in &post {
+            self.workers[0].params.blocks.insert(b, bp.clone());
+        }
+        let contributors: Vec<usize> = pre.keys().copied().collect();
+        self.trace_line(
+            t,
+            format_args!("sync: round={round} resolve chains={contributors:?}"),
+        );
+        self.sync_records.push(SyncRecord { round, pre, post: post.clone() });
+        // downlink: averaged weights back to every surviving chain head
+        // (restore coding — never Q4, same ceiling as fault restores)
+        let down = self.sc.compression.initial_tier().restore_coding();
+        for chain in 1..self.chains.len() {
+            if self.chains[chain].dead {
+                continue;
+            }
+            let head = self.chains[chain].head;
+            for b in 0..nb {
+                let tensors = replication::block_to_wire_coded(&post[&b], &self.hints[b], down);
+                let msg = Message::ReplicaSync { round, block_id: b, tensors };
+                let arrive = self.price_send(0, head, t, &msg);
+                let Message::ReplicaSync { tensors, .. } = msg else { unreachable!() };
+                self.queue.push(arrive, REv::InstallArrive { chain, block_id: b, tensors });
+            }
+        }
+        self.syncing = false;
+        if (0..self.chains.len())
+            .all(|c| self.chains[c].dead || self.chains[c].trained == self.chains[c].shard_len)
+        {
+            self.finished = true;
+        }
+        self.round += 1;
+        // chain 0 resumes immediately; the others resume on install
+        self.advance(0, t)
+    }
+
+    fn on_install(
+        &mut self,
+        chain: usize,
+        block_id: usize,
+        tensors: Vec<WireTensor>,
+        t: Duration,
+    ) -> Result<()> {
+        let bp = replication::block_from_wire(tensors);
+        self.pending_install[chain].insert(block_id, bp);
+        if self.pending_install[chain].len() == self.manifest.n_blocks() {
+            let blocks = std::mem::take(&mut self.pending_install[chain]);
+            for (b, bp) in blocks {
+                self.workers[chain].params.blocks.insert(b, bp);
+            }
+            self.trace_line(t, format_args!("sync: install chain={chain}"));
+            self.advance(chain, t)?;
+        }
+        Ok(())
+    }
+}

@@ -243,6 +243,10 @@ pub struct ScenarioOutcome {
     /// cross-driver conformance test compares its recovery suffix with
     /// the threaded coordinator's.
     pub phase_log: Vec<String>,
+    /// One record per resolved cross-replica sync round (empty for
+    /// R = 1): pre-averaging weights per chain and the averaged result,
+    /// exactly as the central fold saw them (DESIGN.md §14).
+    pub sync_records: Vec<crate::sim::replica::SyncRecord>,
 }
 
 impl ScenarioOutcome {
@@ -264,6 +268,12 @@ impl ScenarioOutcome {
 /// Run `scenario` against the (native) model at `model_dir`.
 pub fn run_scenario(scenario: &Scenario, model_dir: &Path) -> Result<ScenarioOutcome> {
     scenario.validate()?;
+    if scenario.replicas > 1 {
+        // The replica runner owns the hybrid-parallel world; R = 1 stays
+        // on this runner untouched, which is what keeps every
+        // pre-existing trace byte-identical (DESIGN.md §14).
+        return crate::sim::replica::run_replica_scenario(scenario, model_dir);
+    }
     let manifest = Arc::new(Manifest::load(model_dir)?);
     let n = scenario.n_devices();
     if manifest.n_blocks() < n {
@@ -567,6 +577,7 @@ impl Runner<'_> {
             net_bytes: self.vnet.bytes_total,
             events: self.events_processed,
             phase_log: self.machine.take_log(),
+            sync_records: Vec::new(),
         })
     }
 
@@ -594,6 +605,8 @@ impl Runner<'_> {
             tier_ceiling: self.sc.adaptive.tier_ceiling,
             replica_epoch: self.restarts as u64,
             worker_quota: self.roster.quota_wire(),
+            replicas: self.sc.replicas as u64,
+            sync_every: self.sc.sync_every,
         }
     }
 
@@ -854,6 +867,13 @@ impl Runner<'_> {
                     self.dispatch_effects(eff, t)?;
                 }
                 PhaseEffect::RunDynamicRepartition => self.run_dynamic_repartition(t)?,
+                PhaseEffect::BeginSync { .. } | PhaseEffect::ResolveSync { .. } => {
+                    // Sync effects exist only in the replica runner's
+                    // input vocabulary; this single-chain runner never
+                    // feeds SyncDue/SyncPartial, so the machine cannot
+                    // emit them here.
+                    bail!("single-chain runner received a replica sync effect")
+                }
             }
         }
         Ok(())
@@ -1551,6 +1571,12 @@ impl Runner<'_> {
                 }
             }
             Action::RestartCentral => self.restart_central(t)?,
+            // validate() rejects KillReplica unless replicas > 1, and
+            // run_scenario dispatches replicas > 1 to the replica runner
+            // before this runner is even built
+            Action::KillReplica { .. } => {
+                bail!("single-chain runner cannot fire KillReplica")
+            }
         }
         Ok(())
     }

@@ -30,6 +30,12 @@ pub enum Trigger {
     /// in flight. This is the "failure during an in-flight
     /// redistribution" hook.
     RedistributionStart(usize),
+    /// The moment cross-replica sync round `r` (1-based) opens — every
+    /// live chain has reached its round target and the barrier is about
+    /// to fire. Only meaningful with `replicas > 1`; the replica runner
+    /// applies these actions *before* stepping the phase machine, so a
+    /// replica killed at its own sync round never contributes partials.
+    SyncRound(u64),
 }
 
 /// What happens when a trigger fires.
@@ -74,6 +80,14 @@ pub enum Action {
     /// `KillCentral::restart_after` — batch/redistribution triggers
     /// cannot fire while the central node is down.
     RestartCentral,
+    /// Kill an entire pipeline replica chain (hybrid parallelism,
+    /// DESIGN.md §14): every device of chain `replica` dies for good and
+    /// the survivors absorb its remaining data shard round-robin at the
+    /// sync round the kill fires on. Chain 0 hosts the central node and
+    /// cannot be killed. Requires `replicas > 1` and a
+    /// [`Trigger::SyncRound`] trigger (enforced by
+    /// [`Scenario::validate`]).
+    KillReplica { replica: usize },
 }
 
 #[derive(Debug, Clone)]
@@ -150,6 +164,16 @@ pub struct Scenario {
     /// predates central-restart runs byte-identically.
     pub checkpoint_every: u64,
 
+    /// Pipeline replica chains (hybrid parallelism, DESIGN.md §14). 1 —
+    /// the default — is today's single-chain world and keeps every
+    /// pre-existing trace byte-identical; R > 1 splits the fleet into R
+    /// balanced chains fed disjoint round-robin batch shards, averaged
+    /// every [`Scenario::sync_every`] committed batches per chain.
+    pub replicas: usize,
+    /// Cross-replica weight-sync period in per-chain committed batches.
+    /// Required >= 1 when `replicas > 1`; ignored (0) otherwise.
+    pub sync_every: u64,
+
     pub events: Vec<ScriptEvent>,
 }
 
@@ -183,6 +207,8 @@ impl Scenario {
             bw_probe_every: 0,
             bw_probe_bytes: 0,
             checkpoint_every: 0,
+            replicas: 1,
+            sync_every: 0,
             events: vec![],
         }
     }
@@ -256,11 +282,69 @@ impl Scenario {
         self
     }
 
+    /// Split the fleet into `replicas` pipeline chains synchronized
+    /// every `sync_every` per-chain committed batches (DESIGN.md §14).
+    pub fn with_replicas(mut self, replicas: usize, sync_every: u64) -> Scenario {
+        self.replicas = replicas;
+        self.sync_every = sync_every;
+        self
+    }
+
     /// Sanity checks the runner relies on.
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.n_devices() >= 2, "scenarios need at least 2 devices");
         anyhow::ensure!(self.capacities[0] == 1.0, "central capacity must be 1.0");
         anyhow::ensure!(self.batches > 0 && self.inflight > 0, "empty training run");
+        anyhow::ensure!(self.replicas >= 1, "replicas must be >= 1");
+        if self.replicas > 1 {
+            // The replica runner models each chain as a fused stage and
+            // drives only the sync/kill machinery; every single-chain
+            // subsystem below is out of scope for R > 1 and must be off
+            // so a script cannot silently expect behavior that never
+            // runs (DESIGN.md §14).
+            anyhow::ensure!(
+                self.sync_every >= 1,
+                "replicas > 1 needs sync_every >= 1 (the sync barrier is the commit point)"
+            );
+            anyhow::ensure!(
+                self.n_devices() >= self.replicas,
+                "need at least one device per replica chain (got {} devices, {} replicas)",
+                self.n_devices(),
+                self.replicas
+            );
+            anyhow::ensure!(
+                self.compression != Compression::Adaptive,
+                "replicas > 1 does not support adaptive compression (fixed tiers only)"
+            );
+            anyhow::ensure!(
+                self.repartition.is_none()
+                    && self.checkpoint_every == 0
+                    && self.bw_probe_every == 0
+                    && self.agg_k == 0
+                    && self.chain_every == 0
+                    && self.global_every == 0,
+                "replicas > 1 is incompatible with dynamic repartition, checkpointing, \
+                 bandwidth probing, aggregation, and chain/global replication"
+            );
+            for e in &self.events {
+                anyhow::ensure!(
+                    matches!(e.action, Action::KillReplica { .. })
+                        && matches!(e.at, Trigger::SyncRound(_)),
+                    "replicas > 1 scripts may only use SyncRound-triggered KillReplica \
+                     events (got {:?} at {:?})",
+                    e.action,
+                    e.at
+                );
+            }
+        } else {
+            for e in &self.events {
+                anyhow::ensure!(
+                    !matches!(e.at, Trigger::SyncRound(_)),
+                    "SyncRound triggers need replicas > 1 (single-chain runs have no \
+                     sync rounds)"
+                );
+            }
+        }
         if self.compression == Compression::Adaptive {
             self.adaptive.validate()?;
         }
@@ -326,6 +410,24 @@ impl Scenario {
                         e.at
                     );
                     has_at_restart = true;
+                    continue;
+                }
+                Action::KillReplica { replica } => {
+                    anyhow::ensure!(
+                        self.replicas > 1,
+                        "KillReplica needs replicas > 1 (got replicas = {})",
+                        self.replicas
+                    );
+                    anyhow::ensure!(
+                        *replica >= 1 && *replica < self.replicas,
+                        "KillReplica must target a non-central chain 1..{} (got {replica})",
+                        self.replicas
+                    );
+                    anyhow::ensure!(
+                        matches!(e.at, Trigger::SyncRound(r) if r >= 1),
+                        "KillReplica must use a SyncRound(r >= 1) trigger (got {:?})",
+                        e.at
+                    );
                     continue;
                 }
             };
@@ -833,6 +935,63 @@ mod tests {
         assert!(sc.validate().is_err(), "self-link in link_bw");
         sc.link_bw = vec![(0, 1, f64::NAN)];
         assert!(sc.validate().is_err(), "NaN rate in link_bw");
+    }
+
+    #[test]
+    fn validate_enforces_replica_script_rules() {
+        // the default is the single-chain world
+        let base = Scenario::exact_recovery("rep", 6, 20);
+        assert_eq!((base.replicas, base.sync_every), (1, 0));
+        base.validate().unwrap();
+        // R > 1 needs a sync period and the single-chain subsystems off
+        assert!(base.clone().with_replicas(2, 0).validate().is_err(), "sync_every >= 1");
+        assert!(base.clone().with_replicas(7, 5).validate().is_err(), "chains need devices");
+        assert!(base.clone().with_replicas(0, 5).validate().is_err(), "replicas >= 1");
+        let mut sc = base.clone().with_replicas(2, 5);
+        sc.chain_every = 0;
+        sc.global_every = 0;
+        sc.validate().unwrap();
+        let mut repl = sc.clone();
+        repl.repartition = Some((5, 5));
+        assert!(repl.validate().is_err(), "repartition is single-chain only");
+        let mut ck = sc.clone();
+        ck.checkpoint_every = 4;
+        assert!(ck.validate().is_err(), "checkpointing is single-chain only");
+        // chain/global replication defaults (1/1) are rejected for R > 1
+        assert!(base.clone().with_replicas(2, 5).validate().is_err());
+        // KillReplica: needs R > 1, a live non-central chain, a SyncRound trigger
+        let kill = |at: Trigger, replica: usize| {
+            vec![ScriptEvent { at, action: Action::KillReplica { replica } }]
+        };
+        sc.clone().with_events(kill(Trigger::SyncRound(1), 1)).validate().unwrap();
+        assert!(
+            sc.clone().with_events(kill(Trigger::SyncRound(1), 0)).validate().is_err(),
+            "chain 0 hosts the central node"
+        );
+        assert!(
+            sc.clone().with_events(kill(Trigger::SyncRound(1), 2)).validate().is_err(),
+            "chain index out of range"
+        );
+        assert!(
+            sc.clone().with_events(kill(Trigger::BatchDone(5), 1)).validate().is_err(),
+            "KillReplica needs a SyncRound trigger"
+        );
+        assert!(
+            base.clone().with_events(kill(Trigger::SyncRound(1), 1)).validate().is_err(),
+            "KillReplica needs replicas > 1"
+        );
+        // non-replica actions are rejected inside an R > 1 script
+        let mixed = sc.clone().with_events(vec![ScriptEvent {
+            at: Trigger::BatchDone(5),
+            action: Action::Kill { device: 1, revive_after: None },
+        }]);
+        assert!(mixed.validate().is_err(), "R > 1 scripts are KillReplica-only");
+        // SyncRound triggers make no sense in a single-chain run
+        let stray = base.clone().with_events(vec![ScriptEvent {
+            at: Trigger::SyncRound(1),
+            action: Action::SetBandwidth { bps: 1e7 },
+        }]);
+        assert!(stray.validate().is_err(), "SyncRound trigger needs replicas > 1");
     }
 
     #[test]

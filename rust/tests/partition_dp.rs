@@ -2,7 +2,9 @@
 //! and produces valid partitions across random cost models.
 
 use ftpipehd::partition::{
-    bruteforce_partition, homogeneous_partition, optimal_partition, validate_partition, CostModel,
+    bruteforce_partition, bruteforce_replica_chains, chain_cost, homogeneous_partition,
+    optimal_partition, replica_plan, split_chains, validate_partition, validate_replica_plan,
+    CostModel,
 };
 use ftpipehd::util::prop::{check, G};
 
@@ -89,4 +91,40 @@ fn heterogeneity_speedup_grows_with_skew() {
     // at 10x skew the blind partition leaves the slow device with 1/3 of
     // the blocks -> ~>2.5x bottleneck gap
     assert!(r10 > 2.0, "r10={r10:.2}");
+}
+
+/// Satellite (ISSUE 10): the replica-axis chain DP is optimal against
+/// brute-force cut enumeration and its plans are always structurally
+/// valid — every device in exactly one chain (fleet order), shards
+/// disjoint and complete under the `b % R` round-robin rule.
+#[test]
+fn prop_replica_chain_split_is_optimal_and_valid() {
+    check("replica-chains", 300, |g| {
+        let n = g.usize_in(3, 9);
+        let replicas = g.usize_in(1, n.min(4));
+        let caps: Vec<f64> = (0..n)
+            .map(|i| if i == 0 { 1.0 } else { g.f64_in(0.25, 12.0) })
+            .collect();
+        let batches = g.usize_in(0, 40) as u64;
+        let plan = replica_plan(&caps, replicas, batches);
+        validate_replica_plan(&plan, n, batches).map_err(|e| e.to_string())?;
+        if plan.chains.len() != replicas {
+            return Err(format!("{} chains != {replicas} replicas", plan.chains.len()));
+        }
+        // DP worst-chain cost must equal the brute-force optimum
+        let dp_worst = plan
+            .chains
+            .iter()
+            .map(|devs| chain_cost(&devs.iter().map(|&d| caps[d]).collect::<Vec<_>>()))
+            .fold(0.0f64, f64::max);
+        let (_, bf_worst) = bruteforce_replica_chains(&caps, replicas);
+        if (dp_worst - bf_worst).abs() > 1e-9 * bf_worst.max(1.0) {
+            return Err(format!("dp worst {dp_worst} != brute force {bf_worst} for {caps:?}"));
+        }
+        // split_chains and replica_plan must agree (same DP underneath)
+        if split_chains(&caps, replicas) != plan.chains {
+            return Err("split_chains disagrees with replica_plan".into());
+        }
+        Ok(())
+    });
 }

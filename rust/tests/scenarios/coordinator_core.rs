@@ -30,7 +30,7 @@ fn ms(x: usize) -> Duration {
 /// One random lifecycle input. Ids, batch numbers, and timestamps are
 /// arbitrary — the machine must hold its invariants for all of them.
 fn arbitrary_input(g: &mut G<'_>) -> PhaseInput {
-    match g.usize_in(0, 10) {
+    match g.usize_in(0, 12) {
         0 => PhaseInput::StartProfiling,
         1 => PhaseInput::TrainingStarted,
         2 => PhaseInput::ProbeAck { id: g.usize_in(1, 4), fresh: g.bool() },
@@ -55,6 +55,11 @@ fn arbitrary_input(g: &mut G<'_>) -> PhaseInput {
         }
         8 => PhaseInput::KillCentral,
         9 => PhaseInput::CentralRestarted { now: ms(g.usize_in(0, 5_000)) },
+        10 => PhaseInput::SyncDue {
+            round: g.usize_in(1, 50) as u64,
+            expect: (1..=g.usize_in(0, 3)).collect(),
+        },
+        11 => PhaseInput::SyncPartial { chain: g.usize_in(0, 4) },
         _ => {
             let overdue = if g.bool() { Some(g.usize_in(0, 100) as u64) } else { None };
             PhaseInput::Poll {
@@ -222,6 +227,103 @@ fn coordinator_core_sim_driver_conforms_to_hand_driven_machine() {
     assert_eq!(
         out.phase_log, expected,
         "sim driver's transition log diverges from the pure machine"
+    );
+}
+
+/// Satellite (ISSUE 10): a machine that is Down or Rejoining must
+/// reject replica-sync inputs without any side effect — a sync round
+/// cannot open (or accumulate partials) while the coordinator itself is
+/// mid-recovery.
+#[test]
+fn coordinator_core_sync_inputs_rejected_side_effect_free_when_down_or_rejoining() {
+    check("sync-rejected-down", 200, |g| {
+        let cfg = PhaseConfig {
+            probe_window: ms(g.usize_in(1, 500)),
+            redist_window: ms(g.usize_in(1, 2_000)),
+        };
+        for rejoining in [false, true] {
+            let mut m = PhaseMachine::resuming(cfg);
+            if rejoining {
+                m.step(PhaseInput::CentralRestarted { now: ms(0) })
+                    .map_err(|e| format!("restart handshake rejected: {e}"))?;
+            }
+            let before = m.phase();
+            let log_before = m.log().len();
+            let input = if g.bool() {
+                PhaseInput::SyncDue {
+                    round: g.usize_in(1, 50) as u64,
+                    expect: (1..=g.usize_in(0, 3)).collect(),
+                }
+            } else {
+                PhaseInput::SyncPartial { chain: g.usize_in(0, 4) }
+            };
+            match m.step(input) {
+                Ok(_) => return Err(format!("sync input accepted in phase {before}")),
+                Err(e) => {
+                    if e.from != before {
+                        return Err(format!("error names phase {} != {before}", e.from));
+                    }
+                    if m.phase() != before {
+                        return Err(format!("rejection moved the machine to {}", m.phase()));
+                    }
+                    if m.log().len() != log_before {
+                        return Err("rejection appended to the transition log".into());
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Satellite (ISSUE 10): the hand-driven R=2 sync story — one chain's
+/// partial per round, premature polls staying put — whose log the
+/// replica sim driver must reproduce byte for byte.
+fn hand_driven_r2_sync_log(rounds: u64) -> Vec<String> {
+    let mut m = PhaseMachine::new(PhaseConfig { probe_window: ms(50), redist_window: ms(2_000) });
+    m.step(PhaseInput::TrainingStarted).unwrap();
+    for round in 1..=rounds {
+        let expect: BTreeSet<usize> = [1].into_iter().collect();
+        let (_, eff) = m.step(PhaseInput::SyncDue { round, expect }).unwrap();
+        assert!(matches!(eff[..], [PhaseEffect::BeginSync { .. }]), "round {round}: {eff:?}");
+        // a poll before the partial lands stays put, silently
+        let poll = |now: Duration| PhaseInput::Poll {
+            now,
+            overdue: None,
+            inflight: 0,
+            peers: 0,
+            local_fetch_done: true,
+        };
+        let (_, eff) = m.step(poll(ms(round as usize * 10))).unwrap();
+        assert!(eff.is_empty(), "premature sync resolution: {eff:?}");
+        m.step(PhaseInput::SyncPartial { chain: 1 }).unwrap();
+        let (phase, eff) = m.step(poll(ms(round as usize * 10 + 1))).unwrap();
+        assert_eq!(phase, CoordinatorPhase::Training);
+        match &eff[..] {
+            [PhaseEffect::ResolveSync { round: r, chains }] => {
+                assert_eq!(*r, round);
+                assert_eq!(chains.iter().copied().collect::<Vec<_>>(), vec![1]);
+            }
+            other => panic!("expected ResolveSync, got {other:?}"),
+        }
+    }
+    m.take_log()
+}
+
+#[test]
+fn coordinator_core_replica_sync_log_matches_sim_driver() {
+    // the healthy R=2 scenario of the replica family: 8 shard batches
+    // per chain, synced every 4 -> exactly 2 rounds
+    let mut sc = Scenario::exact_recovery("core-replica", 4, 16);
+    sc.chain_every = 0;
+    sc.global_every = 0;
+    sc.capacities = vec![1.0, 1.5, 1.0, 1.5];
+    let sc = sc.with_replicas(2, 4);
+    let out = common::run_once("core-replica", &sc);
+    assert_eq!(
+        out.phase_log,
+        hand_driven_r2_sync_log(2),
+        "replica sim driver's transition log diverges from the pure machine"
     );
 }
 

@@ -20,6 +20,7 @@
 //! * `checkpoint_restart` — central-node death + reboot from checkpoint
 //! * `coordinator_core`   — shared phase-machine properties + cross-driver conformance
 //! * `adaptive`           — bandwidth-driven tier ladder (off → q4)
+//! * `replica`            — hybrid pipeline+data parallelism: R chains, weight sync, replica death
 //! * `rolling_churn`      — generated waves of kill+revive across a fleet
 //! * `correlated`         — a contiguous rack/region slice dies at once
 //! * `stragglers`         — p99.9 capacity spikes; slow is not dead
@@ -41,6 +42,7 @@ mod correlated;
 mod mid_redistribution;
 mod multi_fault;
 mod repartition;
+mod replica;
 mod rolling_churn;
 mod scale;
 mod single_fault;

@@ -1,0 +1,160 @@
+//! Family: hybrid pipeline + data parallelism (DESIGN.md §14).
+//!
+//! R replica chains train disjoint `b % R` shards and average weights
+//! through the central node every `sync_every` per-chain batches. The
+//! family pins three contracts:
+//!
+//! * **healthy** — an R=2 run is run-twice byte-identical, and every
+//!   resolved sync round's installed weights are bit-identical to the
+//!   analytic average (ascending-chain fold, one reciprocal multiply)
+//!   of the per-chain weights the central node saw;
+//! * **replica death** — killing a whole replica mid-epoch makes the
+//!   survivors absorb its untrained shard remainder; the run stays
+//!   deterministic and every batch still gets a finite loss;
+//! * **R=1 regression** — an explicit `with_replicas(1, 0)` keeps every
+//!   trace byte-identical to the pre-replica single-chain runner.
+
+use ftpipehd::sim::script::{Action, Scenario, ScriptEvent, Trigger};
+use ftpipehd::sim::ScenarioOutcome;
+
+use crate::common;
+
+/// Replica scenarios must switch off the single-chain subsystems the
+/// fused-chain runner does not model (`Scenario::validate` enforces it).
+fn replicated(name: &str, n: usize, batches: u64, r: usize, sync_every: u64) -> Scenario {
+    let mut sc = Scenario::exact_recovery(name, n, batches);
+    sc.chain_every = 0;
+    sc.global_every = 0;
+    sc.with_replicas(r, sync_every)
+}
+
+/// Recompute every sync round's average from the recorded per-chain
+/// pre-sync weights with EXACTLY the runner's fold (ascending chain
+/// order, one reciprocal multiply at the end) and demand bit-identity
+/// with what the runner installed.
+fn assert_sync_averages_bit_exact(tag: &str, out: &ScenarioOutcome) {
+    assert!(!out.sync_records.is_empty(), "{tag}: no sync rounds resolved");
+    for rec in &out.sync_records {
+        let inv = 1.0f32 / rec.pre.len() as f32;
+        for (b, post) in &rec.post {
+            for (k, tensor) in post.0.iter().enumerate() {
+                for (j, got) in tensor.iter().enumerate() {
+                    let mut sum = 0.0f32;
+                    for blocks in rec.pre.values() {
+                        sum += blocks
+                            .get(b)
+                            .unwrap_or_else(|| panic!("{tag}: round {} pre missing block {b}", rec.round))
+                            .0[k][j];
+                    }
+                    let want = sum * inv;
+                    assert_eq!(
+                        want.to_bits(),
+                        got.to_bits(),
+                        "{tag}: round {} block {b} tensor {k}[{j}]: average {want} != installed {got}",
+                        rec.round
+                    );
+                }
+            }
+        }
+    }
+}
+
+const TOTAL: u64 = 16;
+
+fn healthy_r2() -> Scenario {
+    let mut sc = replicated("replica-healthy", 4, TOTAL, 2, 4);
+    // heterogeneous chains: the DP puts the fast pair on one chain
+    sc.capacities = vec![1.0, 1.5, 1.0, 1.5];
+    sc
+}
+
+#[test]
+fn replica_r2_healthy_is_deterministic_and_averages_bit_exact() {
+    let out = common::run_twice_deterministic("replica-healthy-det", &healthy_r2());
+    common::assert_loss_continuity("replica-healthy", &out, TOTAL);
+    assert_eq!(out.recoveries, 0);
+    // 8 shard batches per chain, synced every 4 -> exactly 2 rounds
+    assert_eq!(out.sync_records.len(), 2, "expected 2 sync rounds");
+    assert_sync_averages_bit_exact("replica-healthy", &out);
+    // the final weights ARE the last round's average: the run finishes
+    // at the resolving barrier, nothing trains afterwards
+    let last = out.sync_records.last().unwrap();
+    for (b, bp) in &out.final_weights {
+        let post = &last.post[b];
+        for (k, t) in bp.0.iter().enumerate() {
+            for (j, v) in t.iter().enumerate() {
+                assert_eq!(v.to_bits(), post.0[k][j].to_bits(), "block {b} tensor {k}[{j}]");
+            }
+        }
+    }
+    // the shared phase machine walked Training -> Syncing -> Training
+    // exactly once per round (the coordinator_core family hand-drives
+    // the same sequence and compares byte-for-byte)
+    let phase_log: Vec<&str> = out.phase_log.iter().map(String::as_str).collect();
+    assert_eq!(
+        phase_log,
+        vec![
+            "training-started: idle->training",
+            "sync-due: training->syncing [begin-sync]",
+            "poll: syncing->training [resolve-sync]",
+            "sync-due: training->syncing [begin-sync]",
+            "poll: syncing->training [resolve-sync]",
+        ],
+        "phase machine walked an unexpected sync sequence"
+    );
+}
+
+const KILL_TOTAL: u64 = 24;
+
+fn replica_kill() -> Scenario {
+    // 12 shard batches per chain, synced every 4; replica 1 dies when
+    // round 2 opens (8 trained), orphaning 4 untrained batches
+    replicated("replica-kill", 4, KILL_TOTAL, 2, 4).with_events(vec![ScriptEvent {
+        at: Trigger::SyncRound(2),
+        action: Action::KillReplica { replica: 1 },
+    }])
+}
+
+#[test]
+fn replica_kill_survivors_absorb_shard_deterministically() {
+    let out = common::run_twice_deterministic("replica-kill-det", &replica_kill());
+    assert_eq!(out.recoveries, 1, "exactly one replica death expected");
+    common::assert_trace_contains("replica-kill", &out, "script: kill replica 1 orphans=4");
+    // the survivor's shard grew from 12 to 16
+    common::assert_trace_contains("replica-kill", &out, "absorb: chain=0 shard_len=16");
+    // every batch — including the victim's orphaned remainder — still
+    // trained to a finite loss somewhere
+    common::assert_loss_continuity("replica-kill", &out, KILL_TOTAL);
+    // rounds keep resolving after the death (chain 0 alone), and every
+    // resolved round still averages bit-exactly over its contributors
+    assert_sync_averages_bit_exact("replica-kill", &out);
+    let last = out.sync_records.last().unwrap();
+    assert_eq!(last.pre.len(), 1, "post-kill rounds have a single contributor");
+    // rounds 2+ never hear from the dead chain again
+    for rec in &out.sync_records {
+        if rec.round >= 2 {
+            assert!(!rec.pre.contains_key(&1), "round {} heard from the dead replica", rec.round);
+        }
+    }
+}
+
+#[test]
+fn replica_r1_explicit_is_byte_identical_to_default_runner() {
+    // R=1 must not route into the replica runner: an explicit
+    // `with_replicas(1, 0)` is the documented default and every trace
+    // byte must match the plain single-chain scenario — including under
+    // a mid-run fault, so the whole recovery path is covered
+    let faulted = |name: &str| {
+        Scenario::exact_recovery(name, 3, 20).with_events(vec![ScriptEvent {
+            at: Trigger::BatchDone(9),
+            action: Action::Kill { device: 1, revive_after: None },
+        }])
+    };
+    let base = common::run_once("replica-r1-base", &faulted("replica-r1"));
+    let explicit =
+        common::run_once("replica-r1-explicit", &faulted("replica-r1").with_replicas(1, 0));
+    assert_eq!(base.trace, explicit.trace, "R=1 explicit config changed the trace");
+    assert_eq!(base.weights_bits(), explicit.weights_bits());
+    assert_eq!(base.net_bytes, explicit.net_bytes);
+    assert!(base.sync_records.is_empty() && explicit.sync_records.is_empty());
+}

@@ -111,6 +111,43 @@ fn one_degraded_link_escalates_only_its_own_traffic() {
     common::assert_loss_continuity("scale-one-bad-link", &out, TOTAL);
 }
 
+/// Satellite (ISSUE 10): the replica axis at fleet width — 64 devices
+/// split into 4 chains by the capacity DP, heterogeneous link topology,
+/// two whole replicas dying at successive sync rounds. Run by the CI
+/// scale-smoke job under `timeout` (release) via an `--exact` filter.
+#[test]
+fn replica_r4_64_device_storm() {
+    const N: usize = 64;
+    const TOTAL: u64 = 48;
+    let mut sc = Scenario::exact_recovery("scale-replica-storm", N, TOTAL);
+    sc.capacities = ftpipehd::sim::hetero_capacities(N, 10.0, 7);
+    sc.ns_per_flop = 0.05;
+    sc.latency = Duration::from_micros(20);
+    sc.chain_every = 0;
+    sc.global_every = 0;
+    let sc = sc
+        .with_replicas(4, 2)
+        .with_link_bw(hetero_link_topology(N, 2e7, 2e8, 13))
+        .with_events(vec![
+            ScriptEvent {
+                at: Trigger::SyncRound(2),
+                action: Action::KillReplica { replica: 2 },
+            },
+            ScriptEvent {
+                at: Trigger::SyncRound(4),
+                action: Action::KillReplica { replica: 3 },
+            },
+        ]);
+    let spec = FixtureSpec { n_blocks: 16, dim: 8, classes: 4, batch: 4, seed: 11 };
+    let out = common::run_twice_deterministic_spec("scale-replica-storm", &sc, &spec);
+    assert_eq!(out.recoveries, 2, "both scripted replica deaths must fire");
+    common::assert_trace_contains("scale-replica-storm", &out, "script: kill replica 2");
+    common::assert_trace_contains("scale-replica-storm", &out, "script: kill replica 3");
+    // every batch trains to a finite loss despite losing half the chains
+    common::assert_loss_continuity("scale-replica-storm", &out, TOTAL);
+    assert!(!out.sync_records.is_empty());
+}
+
 #[test]
 fn storm_500_devices_completes_and_is_deterministic() {
     const N: usize = 500;

@@ -76,6 +76,8 @@ fn probe_messages() -> Vec<Message> {
             tier_ceiling: Tier::FullQ4,
             replica_epoch: 1,
             worker_quota: 4,
+            replicas: 2,
+            sync_every: 10,
         }),
         Message::Repartition {
             ranges: vec![(0, 3), (4, 5)],
@@ -128,6 +130,25 @@ fn probe_messages() -> Vec<Message> {
                 )),
                 WireTensor::Quant(QTensor::quantize_bits(&[0.1, -0.2, 0.3], Bits::B4)),
             ])],
+        },
+        // v8 replica-sync arms: f32 and quantized weight partials must
+        // survive both transports bit-exactly
+        Message::ReplicaSync {
+            round: 3,
+            block_id: 2,
+            tensors: vec![vec![0.5; 17].into(), vec![-2.0; 3].into()],
+        },
+        Message::ReplicaSync {
+            round: 4,
+            block_id: 0,
+            tensors: vec![
+                WireTensor::Quant(QTensor::quantize_weights(
+                    &(0..32).map(|i| (i as f32).sin()).collect::<Vec<_>>(),
+                    ChannelHint::Rows(4),
+                    Bits::B8,
+                )),
+                WireTensor::Quant(QTensor::quantize_bits(&[0.25, -0.75], Bits::B4)),
+            ],
         },
         Message::Shutdown,
     ]
